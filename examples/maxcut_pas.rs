@@ -1,0 +1,71 @@
+//! Combinatorial optimization with PAS: the Optsicom-style MaxCut
+//! workload (Table I) solved by MH, Block Gibbs and PAS — the Fig. 5
+//! story (gradient-based samplers need fewer steps but more ops) plus
+//! the accelerator run.
+//!
+//! Run with: `cargo run --release --example maxcut_pas`
+
+use mc2a::compiler::compile;
+use mc2a::isa::HwConfig;
+use mc2a::mcmc::{build_algo, run_to_accuracy, AlgoKind, BetaSchedule, SamplerKind};
+use mc2a::sim::Simulator;
+use mc2a::workloads::wl_maxcut_optsicom;
+
+fn main() {
+    let wl = wl_maxcut_optsicom();
+    let model = wl.model.as_ref();
+    println!(
+        "MaxCut: {} nodes, {} edges (weights 1..10)\n",
+        wl.nodes(),
+        wl.edges()
+    );
+
+    let schedule = BetaSchedule::Linear {
+        from: 0.2,
+        to: 3.0,
+        steps: 500,
+    };
+
+    // Calibrate "best known" with a long PAS run.
+    let algo = build_algo(AlgoKind::Pas, SamplerKind::Gumbel, model, 8);
+    let cal = run_to_accuracy(model, algo, schedule, f64::INFINITY, 2_000, 50, 0xCA1);
+    let best = cal.points.last().unwrap().best_objective;
+    println!("calibrated best cut: {best:.0}\n");
+    println!(
+        "{:<6} {:>8} {:>14} {:>10}",
+        "algo", "steps", "ops to 94%", "cut found"
+    );
+    for algo_kind in [AlgoKind::Mh, AlgoKind::BlockGibbs, AlgoKind::Pas] {
+        let a = build_algo(algo_kind, SamplerKind::Gumbel, model, 8);
+        let tr = run_to_accuracy(model, a, schedule, f64::INFINITY, 1_000, 10, 0x5eed);
+        let goal = 0.94 * best;
+        let hit = tr.points.iter().find(|p| p.best_objective >= goal);
+        match hit {
+            Some(p) => println!(
+                "{:<6} {:>8} {:>14} {:>10.0}",
+                tr.algo, p.steps, p.ops, p.best_objective
+            ),
+            None => println!(
+                "{:<6} {:>8} {:>14} {:>10.0}",
+                tr.algo,
+                "-",
+                "-",
+                tr.points.last().unwrap().best_objective
+            ),
+        }
+    }
+
+    // Accelerator run with the spatial-mode SU (Fig. 10c schedule).
+    let hw = HwConfig::paper_default();
+    let program = compile(model, AlgoKind::Pas, &hw, 8);
+    let mut sim = Simulator::new(hw, model, 8, 0xACC);
+    sim.set_beta(2.0);
+    let rep = sim.run(&program, 500);
+    println!(
+        "\nMC2A PAS: cut {:.0} after 500 iters; {} cycles, {:.3e} flips/s, SU util {:.2}",
+        model.objective(&sim.x),
+        rep.cycles,
+        rep.updates_per_sec(&hw),
+        rep.su_utilization()
+    );
+}

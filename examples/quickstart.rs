@@ -1,0 +1,54 @@
+//! Quickstart: sample a small Ising model three ways.
+//!
+//! 1. Software Block Gibbs (the reference algorithm library),
+//! 2. the MC²A accelerator (compile → cycle-accurate simulation),
+//! 3. the 3D roofline prediction for the same workload.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use mc2a::compiler::compile;
+use mc2a::energy::PottsGrid;
+use mc2a::isa::HwConfig;
+use mc2a::mcmc::{build_algo, AlgoKind, BetaSchedule, Chain, SamplerKind};
+use mc2a::roofline::{self, WorkloadProfile};
+use mc2a::sim::Simulator;
+
+fn main() {
+    // A 16×16 ferromagnetic Ising grid at moderate temperature.
+    let model = PottsGrid::new(16, 16, 2, 1.0);
+    let beta = 0.35;
+
+    // --- 1. software chain -------------------------------------------------
+    let algo = build_algo(AlgoKind::BlockGibbs, SamplerKind::Gumbel, &model, 1);
+    let mut chain = Chain::new(&model, algo, BetaSchedule::Constant(beta), 42);
+    chain.run(2_000);
+    println!("software Block Gibbs ({} steps):", chain.step_count);
+    println!("  updates          = {}", chain.stats.updates);
+    println!("  P(spin[0] = 1)   = {:.3}", chain.marginal(0)[1]);
+    println!("  best objective   = {:.1}", chain.best_objective);
+
+    // --- 2. MC²A accelerator ----------------------------------------------
+    let hw = HwConfig::paper_default();
+    let program = compile(&model, AlgoKind::BlockGibbs, &hw, 1);
+    let mut sim = Simulator::new(hw, &model, 1, 42);
+    sim.set_beta(beta);
+    let rep = sim.run(&program, 2_000);
+    println!("\nMC2A accelerator (T={} K={} S={} B={}):", hw.t, hw.k, hw.s, hw.bw_words);
+    println!("  program          = {} instrs/iter", program.body.len());
+    println!("  cycles           = {}", rep.cycles);
+    println!("  throughput       = {:.3} GS/s", rep.gsps(&hw));
+    println!("  CU / SU util     = {:.2} / {:.2}", rep.cu_utilization(), rep.su_utilization());
+    println!("  power (modeled)  = {:.3} W", rep.watts(&hw));
+    println!("  P(spin[0] = 1)   = {:.3}  (must match software)", sim.marginal(0)[1]);
+
+    // --- 3. roofline prediction --------------------------------------------
+    let prof = WorkloadProfile::from_model(&model, AlgoKind::BlockGibbs);
+    let point = roofline::evaluate(&hw, &prof);
+    println!("\n3D roofline @ (CI={:.4}, MI={:.4}):", prof.ci, prof.mi);
+    println!("  predicted TP     = {:.3} GS/s", point.tp_gsps);
+    println!("  bottleneck       = {:?}", point.bottleneck);
+    println!(
+        "  sim/prediction   = {:.2}",
+        rep.gsps(&hw) / point.tp_gsps
+    );
+}

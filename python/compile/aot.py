@@ -1,0 +1,146 @@
+"""AOT lowering: JAX/Pallas entry points → HLO text artifacts.
+
+HLO **text** (not serialized HloModuleProto) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the Rust
+side's xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Writes one ``<name>.hlo.txt`` per entry point plus ``manifest.txt``
+describing argument shapes, one line per artifact::
+
+    name|in0_shape:dtype,in1_shape:dtype,...|out_count|static_params
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Fixed AOT shapes (recorded in the manifest; the Rust runtime asserts
+# against them before execution).
+GUMBEL_BATCH = 64
+GUMBEL_DIST = 256
+ISING_H = 64
+ISING_W = 64
+ISING_CHAIN_STEPS = 32
+MAXCUT_N = 128
+MAXCUT_FLIPS = 8
+MAXCUT_CHAIN_STEPS = 32
+
+
+def to_hlo_text(lowered):
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def entrypoints():
+    """(name, jitted fn, example args, static-param note) tuples."""
+    scalar = f32()
+    return [
+        (
+            "gumbel_sample",
+            jax.jit(model.gumbel_sample),
+            (f32(GUMBEL_BATCH, GUMBEL_DIST), f32(GUMBEL_BATCH, GUMBEL_DIST), scalar),
+            f"B={GUMBEL_BATCH},N={GUMBEL_DIST}",
+        ),
+        (
+            "ising_step",
+            jax.jit(model.ising_step),
+            (
+                f32(ISING_H, ISING_W),
+                f32(ISING_H, ISING_W),
+                f32(ISING_H, ISING_W),
+                scalar,
+                scalar,
+            ),
+            f"H={ISING_H},W={ISING_W}",
+        ),
+        (
+            "ising_chain",
+            jax.jit(
+                lambda s, u, b, c: model.ising_chain(
+                    s, u, b, c, num_steps=ISING_CHAIN_STEPS
+                )
+            ),
+            (
+                f32(ISING_H, ISING_W),
+                f32(ISING_CHAIN_STEPS, 2, ISING_H, ISING_W),
+                scalar,
+                scalar,
+            ),
+            f"H={ISING_H},W={ISING_W},steps={ISING_CHAIN_STEPS}",
+        ),
+        (
+            "maxcut_pas_step",
+            jax.jit(
+                lambda a, x, u, b: model.maxcut_pas_step(
+                    a, x, u, b, num_flips=MAXCUT_FLIPS
+                )
+            ),
+            (f32(MAXCUT_N, MAXCUT_N), f32(MAXCUT_N), f32(MAXCUT_N), scalar),
+            f"N={MAXCUT_N},L={MAXCUT_FLIPS}",
+        ),
+        (
+            "maxcut_pas_chain",
+            jax.jit(
+                lambda a, x, u, b: model.maxcut_pas_chain(
+                    a, x, u, b, num_flips=MAXCUT_FLIPS, num_steps=MAXCUT_CHAIN_STEPS
+                )
+            ),
+            (
+                f32(MAXCUT_N, MAXCUT_N),
+                f32(MAXCUT_N),
+                f32(MAXCUT_CHAIN_STEPS, MAXCUT_N),
+                scalar,
+            ),
+            f"N={MAXCUT_N},L={MAXCUT_FLIPS},steps={MAXCUT_CHAIN_STEPS}",
+        ),
+    ]
+
+
+def spec_str(spec):
+    shape = "x".join(str(d) for d in spec.shape) if spec.shape else "scalar"
+    return f"{shape}:f32"
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_lines = []
+    for name, fn, example_args, static in entrypoints():
+        lowered = fn.lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        n_out = len(lowered.out_info) if hasattr(lowered, "out_info") else 1
+        ins = ",".join(spec_str(s) for s in example_args)
+        manifest_lines.append(f"{name}|{ins}|{n_out}|{static}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote manifest with {len(manifest_lines)} entries")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""L1 Pallas kernel: batched Gumbel-max categorical sampling.
+
+This is the paper's Gumbel Sampler Unit (§V-D) expressed for a vector
+machine: each row of unnormalized energies is perturbed with Gumbel
+noise (derived from a supplied uniform stream, mirroring the hardware
+URNG→LUT path) and reduced with argmax. Rows are tiled over the grid so
+each block fits comfortably in VMEM (TPU adaptation: the SE comparator
+chain becomes a lane-parallel argmax reduction).
+
+Pallas runs in ``interpret=True`` throughout: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and interpret mode lowers to plain
+HLO that the Rust runtime loads (see DESIGN.md §Hardware-Adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(e_ref, u_ref, scal_ref, o_ref):
+    """One block: scores = -beta * E + Gumbel(u); out = argmax."""
+    beta = scal_ref[0]
+    e = e_ref[...]
+    u = u_ref[...]
+    gumbel = -jnp.log(-jnp.log(u))
+    scores = -beta * e + gumbel
+    o_ref[...] = jnp.argmax(scores, axis=-1).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def gumbel_argmax(energies, uniforms, beta, *, block_rows=16):
+    """Sample one index per row of ``energies``.
+
+    Args:
+      energies: (B, N) f32, B divisible by ``block_rows``.
+      uniforms: (B, N) f32 in (0, 1].
+      beta: scalar f32 inverse temperature.
+      block_rows: VMEM tile height (static).
+
+    Returns:
+      (B,) f32 — float-encoded sampled indices.
+    """
+    b, n = energies.shape
+    assert b % block_rows == 0, f"B={b} not divisible by block {block_rows}"
+    scal = jnp.reshape(jnp.asarray(beta, jnp.float32), (1,))
+    grid = (b // block_rows,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(energies, uniforms, scal)

@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: PAS ΔE gradient pass for MaxCut.
+
+Computes the flip gradients ``ΔE_i = -s_i · (A s)_i`` (eq. 2 of the
+paper specialized to MaxCut) as a row-tiled matrix-vector product —
+the TPU adaptation of the paper's multi-cycle CU ``Compute`` phase
+(Fig. 10c): each grid step reduces one (block_rows × N) tile, which is
+the MXU-friendly layout for the dense adjacency.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(adj_ref, s_ref, sblk_ref, o_ref):
+    adj = adj_ref[...]
+    s = s_ref[...]
+    field = adj @ s  # (block_rows,)
+    o_ref[...] = -sblk_ref[...] * field
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def maxcut_delta_e(adj, x, *, block_rows=16):
+    """ΔE of flipping each vertex of a MaxCut instance.
+
+    Args:
+      adj: (N, N) f32 symmetric weighted adjacency, zero diagonal,
+        N divisible by ``block_rows``.
+      x: (N,) f32 of {0, 1} side labels.
+      block_rows: tile height (static).
+
+    Returns:
+      (N,) f32 flip gradients.
+    """
+    n = adj.shape[0]
+    assert adj.shape == (n, n)
+    assert n % block_rows == 0, f"N={n} not divisible by block {block_rows}"
+    s = 2.0 * x - 1.0
+    grid = (n // block_rows,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(adj, s, s)

@@ -1,0 +1,120 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every L1 kernel in this package has a reference implementation here;
+pytest (``python/tests/``) sweeps shapes and dtypes with hypothesis and
+asserts allclose between the kernel (interpret mode) and these
+references. This is the core correctness signal for the compile path.
+"""
+
+import jax.lax as lax
+import jax.numpy as jnp
+
+
+def gumbel_argmax_ref(energies, uniforms, beta):
+    """Gumbel-max categorical sampling from unnormalized energies.
+
+    Args:
+      energies: (B, N) f32 — unnormalized energies (lower = likelier).
+      uniforms: (B, N) f32 in (0, 1] — the hardware URNG stream.
+      beta: scalar f32 — inverse temperature.
+
+    Returns:
+      (B,) f32 — sampled state index per row (float-encoded for the
+      AOT interchange; values are exact small integers).
+    """
+    gumbel = -jnp.log(-jnp.log(uniforms))
+    scores = -beta * energies + gumbel
+    return jnp.argmax(scores, axis=-1).astype(jnp.float32)
+
+
+def ising_local_field_ref(spins, coupling):
+    """Per-site neighbor field of a 2D Ising grid.
+
+    Zero-padded 4-neighborhood sum of the ±1 spin lattice:
+    ``field[r, c] = coupling * Σ_{nbr} spins[nbr]``; the local energies
+    of site (r, c) are then ``E(s) = -s * field`` for s ∈ {-1, +1}.
+
+    Args:
+      spins: (H, W) f32 of ±1 values.
+      coupling: scalar f32.
+
+    Returns:
+      (H, W) f32 — coupling-scaled neighbor field.
+    """
+    up = jnp.pad(spins, ((1, 0), (0, 0)))[:-1, :]
+    down = jnp.pad(spins, ((0, 1), (0, 0)))[1:, :]
+    left = jnp.pad(spins, ((0, 0), (1, 0)))[:, :-1]
+    right = jnp.pad(spins, ((0, 0), (0, 1)))[:, 1:]
+    return coupling * (up + down + left + right)
+
+
+def maxcut_delta_e_ref(adj, x):
+    """MaxCut flip gradients: ΔE_i of flipping vertex i.
+
+    With spins ``s = 2x - 1`` and energy ``E = -cut_weight``:
+    ``ΔE_i = -s_i * Σ_j adj[i, j] * s_j``.
+
+    Args:
+      adj: (N, N) f32 symmetric weighted adjacency (zero diagonal).
+      x: (N,) f32 of {0, 1} side labels.
+
+    Returns:
+      (N,) f32 — energy change of flipping each vertex.
+    """
+    s = 2.0 * x - 1.0
+    return -s * (adj @ s)
+
+
+def ising_gibbs_halfstep_ref(spins, uniforms, beta, coupling, parity):
+    """One chessboard half-sweep of Gibbs on a ±1 Ising grid.
+
+    Sites with ``(r + c) % 2 == parity`` are resampled from their full
+    conditional via the logistic (two-state Gumbel) form; other sites
+    pass through.
+
+    Args:
+      spins: (H, W) f32 ±1.
+      uniforms: (H, W) f32 in (0, 1).
+      beta, coupling: scalars.
+      parity: 0 or 1 (python int — static).
+
+    Returns:
+      (H, W) f32 — updated spins.
+    """
+    h, w = spins.shape
+    field = ising_local_field_ref(spins, coupling)
+    # P(s = +1 | field) = sigmoid(2 β field)
+    p_up = 1.0 / (1.0 + jnp.exp(-2.0 * beta * field))
+    proposed = jnp.where(uniforms < p_up, 1.0, -1.0)
+    rr = jnp.arange(h)[:, None]
+    cc = jnp.arange(w)[None, :]
+    mask = ((rr + cc) % 2) == parity
+    return jnp.where(mask, proposed, spins)
+
+
+def pas_flip_step_ref(adj, x, uniforms, beta, num_flips):
+    """Hardware-style PAS step for MaxCut: ΔE pass + Gumbel top-L flip.
+
+    The indices of the ``num_flips`` most "dynamic" vertices are drawn
+    by perturbing the proposal logits ``-β/2·ΔE`` with Gumbel noise and
+    taking the top-L (the Gumbel-top-k trick = sampling L indices
+    without replacement from the softmax), then those vertices flip.
+    This is the accelerator's schedule of Fig. 10(c); the full MH
+    correction lives on the Rust side.
+
+    Args:
+      adj: (N, N) f32 adjacency.
+      x: (N,) f32 {0,1}.
+      uniforms: (N,) f32 in (0, 1].
+      beta: scalar.
+      num_flips: static int L.
+
+    Returns:
+      (N,) f32 — updated labels.
+    """
+    delta_e = maxcut_delta_e_ref(adj, x)
+    gumbel = -jnp.log(-jnp.log(uniforms))
+    scores = -0.5 * beta * delta_e + gumbel
+    _, idx = lax.top_k(scores, num_flips)
+    flip = jnp.zeros_like(x).at[idx].set(1.0)
+    return jnp.abs(x - flip)

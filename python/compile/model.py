@@ -1,0 +1,108 @@
+"""L2 JAX model: full MCMC steps composed from the L1 Pallas kernels.
+
+These are the computations the Rust runtime executes via PJRT after
+``aot.py`` lowers them to HLO text — the *software baseline* path the
+paper profiles on CPU/GPU (Fig. 5d, Fig. 14) re-expressed for this
+testbed. Python never runs at request time; every entry point here is
+lowered once at build time with fixed shapes recorded in the artifact
+manifest.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.gumbel import gumbel_argmax
+from compile.kernels.ising import ising_halfstep
+from compile.kernels.pas import maxcut_delta_e
+
+
+def gumbel_sample(energies, uniforms, beta):
+    """Batched categorical sampling (the SU in isolation).
+
+    Args: energies (B, N) f32; uniforms (B, N) f32; beta scalar f32.
+    Returns: (B,) f32 float-encoded indices — wrapped in a 1-tuple for
+    the AOT interchange.
+    """
+    return (gumbel_argmax(energies, uniforms, beta),)
+
+
+def ising_step(spins, u_black, u_white, beta, coupling):
+    """One full Block-Gibbs sweep = black half-step + white half-step.
+
+    The chessboard decomposition is exactly the Fig. 10(b) schedule.
+
+    Args:
+      spins: (H, W) f32 ±1.
+      u_black, u_white: (H, W) f32 uniforms for the two half-steps.
+      beta, coupling: scalar f32.
+
+    Returns:
+      1-tuple of (H, W) f32 updated spins.
+    """
+    s1 = ising_halfstep(spins, u_black, beta, coupling, 0.0)
+    s2 = ising_halfstep(s1, u_white, beta, coupling, 1.0)
+    return (s2,)
+
+
+@functools.partial(jax.jit, static_argnames=("num_steps",))
+def ising_chain(spins, uniforms, beta, coupling, *, num_steps):
+    """``num_steps`` full sweeps with pre-supplied noise.
+
+    ``uniforms`` has shape (num_steps, 2, H, W). Chain iteration happens
+    *inside* the compiled module (lax.scan), so one PJRT call advances
+    the whole chain segment — this is what makes the measured-CPU
+    baseline fair (no per-step dispatch overhead).
+    """
+
+    def body(s, u):
+        (s2,) = ising_step(s, u[0], u[1], beta, coupling)
+        return s2, jnp.sum(s2)
+
+    final, mags = jax.lax.scan(body, spins, uniforms)
+    return (final, mags)
+
+
+def maxcut_pas_step(adj, x, uniforms, beta, *, num_flips):
+    """Hardware-style PAS step (Fig. 10c): ΔE pass + Gumbel top-L flip.
+
+    Args:
+      adj: (N, N) f32.
+      x: (N,) f32 {0,1}.
+      uniforms: (N,) f32 in (0, 1].
+      beta: scalar f32.
+      num_flips: static L.
+
+    Returns:
+      1-tuple of (N,) f32 updated labels.
+    """
+    delta_e = maxcut_delta_e(adj, x)
+    gumbel = -jnp.log(-jnp.log(uniforms))
+    scores = -0.5 * beta * delta_e + gumbel
+    # Top-L via an unrolled argmax + mask loop instead of lax.top_k:
+    # the interchange XLA (0.5.1) HLO parser predates the `largest`
+    # attribute that jax's TopK custom-call emits. L is small and
+    # static, so the unroll costs L reductions.
+    flip = jnp.zeros_like(x)
+    for _ in range(num_flips):
+        idx = jnp.argmax(scores)
+        flip = flip.at[idx].set(1.0)
+        scores = scores.at[idx].set(-jnp.inf)
+    return (jnp.abs(x - flip),)
+
+
+@functools.partial(jax.jit, static_argnames=("num_flips", "num_steps"))
+def maxcut_pas_chain(adj, x, uniforms, beta, *, num_flips, num_steps):
+    """``num_steps`` PAS steps inside one compiled module.
+
+    ``uniforms``: (num_steps, N). Returns the final labels and the
+    per-step cut-proxy trace (sum of ΔE magnitudes).
+    """
+
+    def body(state, u):
+        (nx,) = maxcut_pas_step(adj, state, u, beta, num_flips=num_flips)
+        return nx, jnp.sum(nx)
+
+    final, trace = jax.lax.scan(body, x, uniforms)
+    return (final, trace)

@@ -1,0 +1,111 @@
+"""L2 model tests: full-step semantics + AOT lowering round-trips."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def test_ising_step_composes_two_halfsteps():
+    h = w = 16
+    r = rng(5)
+    spins = (2.0 * r.integers(0, 2, size=(h, w)) - 1.0).astype(np.float32)
+    u0 = r.uniform(1e-6, 1.0, size=(h, w)).astype(np.float32)
+    u1 = r.uniform(1e-6, 1.0, size=(h, w)).astype(np.float32)
+    (got,) = model.ising_step(
+        jnp.asarray(spins), jnp.asarray(u0), jnp.asarray(u1), 1.0, 1.0
+    )
+    want = ref.ising_gibbs_halfstep_ref(jnp.asarray(spins), jnp.asarray(u0), 1.0, 1.0, 0)
+    want = ref.ising_gibbs_halfstep_ref(want, jnp.asarray(u1), 1.0, 1.0, 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+def test_ising_chain_equals_repeated_steps():
+    h = w = 16
+    steps = 4
+    r = rng(9)
+    spins = (2.0 * r.integers(0, 2, size=(h, w)) - 1.0).astype(np.float32)
+    u = r.uniform(1e-6, 1.0, size=(steps, 2, h, w)).astype(np.float32)
+    final, mags = model.ising_chain(
+        jnp.asarray(spins), jnp.asarray(u), 0.7, 1.0, num_steps=steps
+    )
+    s = jnp.asarray(spins)
+    for t in range(steps):
+        (s,) = model.ising_step(s, jnp.asarray(u[t, 0]), jnp.asarray(u[t, 1]), 0.7, 1.0)
+    np.testing.assert_allclose(np.asarray(final), np.asarray(s))
+    assert mags.shape == (steps,)
+    assert float(mags[-1]) == pytest.approx(float(jnp.sum(s)))
+
+
+def test_pas_step_flips_exactly_l():
+    n, l = 32, 4
+    r = rng(11)
+    a = r.uniform(0, 1, size=(n, n)).astype(np.float32)
+    adj = np.triu(a, 1)
+    adj = adj + adj.T
+    x = r.integers(0, 2, size=n).astype(np.float32)
+    u = r.uniform(1e-6, 1.0, size=n).astype(np.float32)
+    (nx,) = model.maxcut_pas_step(
+        jnp.asarray(adj), jnp.asarray(x), jnp.asarray(u), 1.0, num_flips=l
+    )
+    assert int(np.sum(np.asarray(nx) != x)) == l
+
+
+def test_pas_step_matches_ref():
+    n, l = 16, 2
+    r = rng(13)
+    a = r.uniform(0, 1, size=(n, n)).astype(np.float32)
+    adj = np.triu(a, 1)
+    adj = adj + adj.T
+    x = r.integers(0, 2, size=n).astype(np.float32)
+    u = r.uniform(1e-6, 1.0, size=n).astype(np.float32)
+    (got,) = model.maxcut_pas_step(
+        jnp.asarray(adj), jnp.asarray(x), jnp.asarray(u), 2.0, num_flips=l
+    )
+    want = ref.pas_flip_step_ref(jnp.asarray(adj), jnp.asarray(x), jnp.asarray(u), 2.0, l)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+def test_pas_chain_improves_cut():
+    n = 64
+    r = rng(17)
+    a = (r.uniform(0, 1, size=(n, n)) < 0.2).astype(np.float32)
+    adj = np.triu(a, 1)
+    adj = adj + adj.T
+    x0 = r.integers(0, 2, size=n).astype(np.float32)
+    steps = 64
+    u = r.uniform(1e-6, 1.0, size=(steps, n)).astype(np.float32)
+
+    def cut(x):
+        s = 2 * x - 1
+        return 0.25 * float(np.sum(adj)) - 0.25 * float(s @ adj @ s)
+
+    final, _ = model.maxcut_pas_chain(
+        jnp.asarray(adj), jnp.asarray(x0), jnp.asarray(u), 2.0, num_flips=4,
+        num_steps=steps,
+    )
+    assert cut(np.asarray(final)) > cut(x0)
+
+
+# ------------------------------------------------------------------- AOT
+
+
+def test_all_entrypoints_lower_to_hlo_text():
+    for name, fn, args, _static in aot.entrypoints():
+        text = aot.to_hlo_text(fn.lower(*args))
+        assert text.startswith("HloModule"), f"{name}: bad HLO header"
+        assert "ENTRY" in text, f"{name}: no entry computation"
+
+
+def test_manifest_spec_strings():
+    assert aot.spec_str(aot.f32(4, 8)) == "4x8:f32"
+    assert aot.spec_str(aot.f32()) == "scalar:f32"

@@ -1,0 +1,38 @@
+//! Bench: software MCMC sweep throughput (RV updates/s) per algorithm —
+//! the L3 hot path that the perf pass optimizes (EXPERIMENTS.md §Perf).
+
+use mc2a::bench::bench_fn;
+use mc2a::energy::PottsGrid;
+use mc2a::mcmc::{build_algo, AlgoKind, BetaSchedule, Chain, SamplerKind};
+use mc2a::workloads;
+
+fn bench_chain(name: &str, model: &dyn mc2a::energy::EnergyModel, algo: AlgoKind, sampler: SamplerKind, flips: usize, steps: usize) {
+    let stat = bench_fn(1, 5, || {
+        let a = build_algo(algo, sampler, model, flips);
+        let mut chain = Chain::new(model, a, BetaSchedule::Constant(1.0), 1);
+        chain.run(steps);
+        chain.stats.updates
+    });
+    let a = build_algo(algo, sampler, model, flips);
+    let mut chain = Chain::new(model, a, BetaSchedule::Constant(1.0), 1);
+    chain.run(steps);
+    let updates = chain.stats.updates as f64;
+    println!(
+        "{name:<28} {:>8.3} ms/run  {:>10.3e} updates/s",
+        stat.median_ms(),
+        updates / (stat.median_ms() / 1e3)
+    );
+}
+
+fn main() {
+    println!("# mcmc_sweeps — software chain throughput");
+    let ising = PottsGrid::new(64, 64, 2, 1.0);
+    bench_chain("ising64 gibbs+gumbel", &ising, AlgoKind::Gibbs, SamplerKind::Gumbel, 1, 50);
+    bench_chain("ising64 gibbs+cdf", &ising, AlgoKind::Gibbs, SamplerKind::Cdf, 1, 50);
+    bench_chain("ising64 block-gibbs", &ising, AlgoKind::BlockGibbs, SamplerKind::Gumbel, 1, 50);
+    bench_chain("ising64 mh", &ising, AlgoKind::Mh, SamplerKind::Gumbel, 1, 50);
+    let mc = workloads::wl_maxcut_optsicom();
+    bench_chain("optsicom pas L=8", mc.model.as_ref(), AlgoKind::Pas, SamplerKind::Gumbel, 8, 100);
+    let rbm = workloads::wl_rbm();
+    bench_chain("rbm784 block-gibbs", rbm.model.as_ref(), AlgoKind::BlockGibbs, SamplerKind::Gumbel, 1, 3);
+}

@@ -1,0 +1,26 @@
+//! Bench: regenerate every paper table/figure in quick mode, timing
+//! each generator. `cargo bench --bench paper_tables` is the one-shot
+//! "reproduce the evaluation section" entry point (full-scale variants
+//! via the `mc2a bench --full` CLI).
+
+use mc2a::bench;
+use std::time::Instant;
+
+fn timed(name: &str, f: impl FnOnce() -> String) {
+    let t0 = Instant::now();
+    let out = f();
+    let dt = t0.elapsed();
+    println!("=== {name} ({dt:?}) ===\n{out}");
+}
+
+fn main() {
+    timed("Table I", || bench::table1(false));
+    timed("Fig 5", || bench::fig5(true, 0.94));
+    timed("Fig 6", bench::fig6);
+    timed("Fig 11", bench::fig11);
+    timed("Fig 12", || bench::fig12(true));
+    timed("Fig 13", bench::fig13);
+    timed("Fig 14", || bench::fig14(true));
+    timed("Fig 15", || bench::fig15(true));
+    timed("Headline", || bench::headline(true));
+}

@@ -1,0 +1,42 @@
+//! Bench: software categorical samplers (CDF vs Gumbel vs Gumbel-LUT)
+//! — the software twin of Fig. 13, plus the hardware SU models.
+
+use mc2a::bench::bench_fn;
+use mc2a::isa::HwConfig;
+use mc2a::mcmc::sampler::{CategoricalSampler, CdfSampler, GumbelLutSampler, GumbelSampler};
+use mc2a::rng::Rng;
+use mc2a::sim::su::fig13_sweep;
+
+fn bench_sampler(name: &str, s: &mut dyn CategoricalSampler, n: usize) {
+    let mut rng = Rng::new(7);
+    let e: Vec<f32> = (0..n).map(|_| rng.uniform_f32() * 4.0).collect();
+    let draws = 10_000;
+    let stat = bench_fn(1, 7, || {
+        let mut acc = 0usize;
+        for _ in 0..draws {
+            acc += s.sample(&e, 1.0, &mut rng);
+        }
+        acc
+    });
+    println!(
+        "{name:<14} N={n:<4} {:>9.1} ns/sample  ({:.3} ms / {draws} draws)",
+        stat.median_ms() * 1e6 / draws as f64,
+        stat.median_ms()
+    );
+}
+
+fn main() {
+    println!("# samplers — software sampling kernels");
+    for n in [8usize, 64, 256] {
+        bench_sampler("cdf", &mut CdfSampler, n);
+        bench_sampler("gumbel", &mut GumbelSampler, n);
+        bench_sampler("gumbel-lut16", &mut GumbelLutSampler::new(16, 8), n);
+    }
+    println!("\n# hardware SU models (Fig. 13 sweep @ paper config)");
+    for row in fig13_sweep(&HwConfig::paper_default(), &[8, 64, 256]) {
+        println!(
+            "N={:<4} cdf={:.3e} sps (util {:.2})  gumbel={:.3e} sps (util {:.2})",
+            row.n, row.cdf_sps, row.cdf_util, row.gumbel_sps, row.gumbel_util
+        );
+    }
+}

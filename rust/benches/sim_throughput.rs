@@ -1,0 +1,42 @@
+//! Bench: cycle-accurate simulator throughput (simulated cycles/s and
+//! simulated samples/s) across workload classes. The simulator must be
+//! fast enough that the Fig. 14 sweeps are not bottlenecked by the
+//! host (DESIGN.md §6 target: ≥ 10 M simulated cycles/s).
+
+use mc2a::bench::bench_fn;
+use mc2a::compiler::compile;
+use mc2a::energy::PottsGrid;
+use mc2a::isa::HwConfig;
+use mc2a::mcmc::AlgoKind;
+use mc2a::sim::Simulator;
+use mc2a::workloads;
+
+fn bench_workload(name: &str, model: &dyn mc2a::energy::EnergyModel, algo: AlgoKind, flips: usize, iters: usize) {
+    let hw = HwConfig::paper_default();
+    let program = compile(model, algo, &hw, flips);
+    let mut sim = Simulator::new(hw, model, flips, 42);
+    let stat = bench_fn(1, 5, || sim.run(&program, iters));
+    // one extra run for the cycle count
+    let rep = sim.run(&program, iters);
+    let cyc_per_sec = rep.cycles as f64 / (stat.median_ms() / 1e3);
+    println!(
+        "{name:<24} {:>10} cycles/run  {:>8.3} ms/run  {:>10.2e} sim-cycles/s  {:>10.2e} sim-samples/s",
+        rep.cycles,
+        stat.median_ms(),
+        cyc_per_sec,
+        rep.samples as f64 / (stat.median_ms() / 1e3),
+    );
+}
+
+fn main() {
+    println!("# sim_throughput — cycle-accurate simulator speed");
+    let ising = PottsGrid::new(64, 64, 2, 1.0);
+    bench_workload("ising64 block-gibbs", &ising, AlgoKind::BlockGibbs, 1, 20);
+    bench_workload("ising64 seq-gibbs", &ising, AlgoKind::Gibbs, 1, 2);
+    let net = workloads::alarm();
+    bench_workload("alarm block-gibbs", &net, AlgoKind::BlockGibbs, 1, 200);
+    let mc = workloads::wl_maxcut_optsicom();
+    bench_workload("optsicom pas", mc.model.as_ref(), AlgoKind::Pas, 8, 50);
+    let mis = workloads::wl_mis_er();
+    bench_workload("er1347 pas", mis.model.as_ref(), AlgoKind::Pas, 8, 10);
+}

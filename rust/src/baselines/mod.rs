@@ -1,0 +1,420 @@
+//! Baseline platform models (§VI-D comparisons).
+//!
+//! The host-CPU baseline is **measured** (the JAX→HLO artifacts run
+//! through [`crate::runtime`]). The GPU/TPU and prior-accelerator
+//! baselines are *mechanistic analytical models*: each platform is a
+//! small set of published parameters (lanes, clock, bandwidth, launch
+//! overhead, sampler type) and the throughput comes from the same
+//! three-phase accounting the paper uses (distribution computing,
+//! sampling, memory — §II-C), so the *shape* of Fig. 14/15 (who wins,
+//! crossovers with distribution size, GPU collapse on irregular
+//! graphs) is reproduced from mechanisms rather than hard-coded.
+//! Paper-reported ratios are kept alongside in `bench/` tables for
+//! comparison. See DESIGN.md §4.
+
+use crate::energy::EnergyModel;
+use crate::mcmc::AlgoKind;
+use crate::sim::su::CdfSuModel;
+
+/// What sampler hardware a platform uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SamplerHw {
+    /// Software inverse-transform (exp + normalize + scan) on the
+    /// general-purpose cores.
+    Software,
+    /// Dedicated sequential CDF sampler unit (SPU/PGMA/CoopMC class).
+    CdfUnit {
+        /// CDT register-file capacity (max supported distribution).
+        capacity: usize,
+    },
+    /// MC²A-style pipelined Gumbel unit (for completeness).
+    GumbelUnit,
+    /// Per-RV probabilistic bit (sIM class): only 2-state RVs.
+    PBit,
+}
+
+/// An analytical baseline platform.
+#[derive(Clone, Debug)]
+pub struct BaselineModel {
+    /// Display name.
+    pub name: &'static str,
+    /// Core clock in Hz.
+    pub clock_hz: f64,
+    /// Parallel update lanes usable for RV updates.
+    pub lanes: f64,
+    /// Arithmetic ops per lane per cycle (issue width × FMA).
+    pub ops_per_lane_cycle: f64,
+    /// Memory bandwidth in bytes/s.
+    pub mem_bw: f64,
+    /// Fixed overhead per MCMC step (kernel launches, sync), seconds.
+    pub step_overhead_s: f64,
+    /// Software overhead ops per RV update (framework bookkeeping,
+    /// index arithmetic, RNG state management — large on CPUs running
+    /// interpreted/JIT frameworks, zero on fixed-function ASICs).
+    pub update_overhead_ops: f64,
+    /// Utilization multiplier on irregular (pointer-chasing) workloads.
+    pub irregular_utilization: f64,
+    /// Sampler hardware.
+    pub sampler: SamplerHw,
+    /// TDP in watts (Fig. 15 energy efficiency).
+    pub tdp_watts: f64,
+}
+
+/// A workload's shape as the baseline models consume it.
+#[derive(Clone, Copy, Debug)]
+pub struct BaselineWorkload {
+    /// RV updates per MCMC step.
+    pub updates_per_step: f64,
+    /// Conditionally-independent updates available per phase
+    /// (RV-level parallelism — Fig. 4).
+    pub parallelism: f64,
+    /// Arithmetic ops per update (distribution computing).
+    pub ops_per_update: f64,
+    /// Bytes moved per update.
+    pub bytes_per_update: f64,
+    /// Categorical distribution size per sample.
+    pub dist_size: f64,
+    /// Irregular memory-access pattern (Bayes nets, ER/social graphs).
+    pub irregular: bool,
+}
+
+impl BaselineWorkload {
+    /// Derive the shape from a model + algorithm (same accounting as
+    /// [`crate::roofline::WorkloadProfile`]).
+    pub fn from_model(model: &dyn EnergyModel, algo: AlgoKind, irregular: bool) -> Self {
+        let n = model.num_vars();
+        let mut ops = 0f64;
+        let mut bytes = 0f64;
+        let mut dist = 0f64;
+        for i in 0..n {
+            let c = model.update_cost(i);
+            ops += c.ops as f64;
+            bytes += c.bytes as f64;
+            dist += model.num_states(i) as f64;
+        }
+        let (updates, parallelism, dist_size) = match algo {
+            AlgoKind::Pas => {
+                // ΔE pass over all vars + L index samples from the full
+                // move table; parallel across vars.
+                (n as f64, n as f64, dist)
+            }
+            AlgoKind::BlockGibbs => {
+                let coloring = crate::graph::color_greedy(model.interaction());
+                let max_block = coloring
+                    .blocks()
+                    .iter()
+                    .map(|b| b.len())
+                    .max()
+                    .unwrap_or(1);
+                (n as f64, max_block as f64, dist / n as f64)
+            }
+            AlgoKind::AsyncGibbs => (n as f64, n as f64, dist / n as f64),
+            AlgoKind::Gibbs | AlgoKind::Mh => (n as f64, 1.0, dist / n as f64),
+        };
+        BaselineWorkload {
+            updates_per_step: updates,
+            parallelism,
+            ops_per_update: ops / n as f64,
+            bytes_per_update: bytes / n as f64,
+            dist_size,
+            irregular,
+        }
+    }
+}
+
+impl BaselineModel {
+    /// Seconds to draw one categorical sample on this platform.
+    fn sample_seconds(&self, dist: f64) -> Option<f64> {
+        match self.sampler {
+            SamplerHw::Software => {
+                // exp + cumsum + search ≈ 5 ops/bin on a single lane.
+                Some(5.0 * dist / (self.ops_per_lane_cycle * self.clock_hz))
+            }
+            SamplerHw::CdfUnit { capacity } => {
+                if dist > capacity as f64 {
+                    return None; // unsupported distribution size
+                }
+                let c = CdfSuModel {
+                    cdt_capacity: capacity,
+                    exp_latency: 1,
+                };
+                Some(c.sample_cost(dist as usize).cycles as f64 / self.clock_hz)
+            }
+            SamplerHw::GumbelUnit => Some(dist / self.clock_hz),
+            SamplerHw::PBit => {
+                if dist > 2.0 {
+                    None // Ising machines: binary RVs only
+                } else {
+                    Some(1.0 / self.clock_hz)
+                }
+            }
+        }
+    }
+
+    /// Predicted throughput in Giga-samples (RV updates) per second.
+    /// Returns 0 when the platform cannot run the workload at all.
+    pub fn throughput_gsps(&self, w: &BaselineWorkload) -> f64 {
+        let util = if w.irregular {
+            self.irregular_utilization
+        } else {
+            1.0
+        };
+        // Distribution computing: parallel across min(lanes, parallelism).
+        let eff_lanes = self.lanes.min(w.parallelism).max(1.0);
+        let compute_s = w.updates_per_step * (w.ops_per_update + self.update_overhead_ops)
+            / (eff_lanes * self.ops_per_lane_cycle * self.clock_hz * util);
+        // Memory phase.
+        let mem_s = w.updates_per_step * w.bytes_per_update / (self.mem_bw * util);
+        // Sampling phase: serial per lane-group (the §III observation:
+        // "bottleneck of sequential sampling operations").
+        let per_sample = match self.sample_seconds(w.dist_size) {
+            Some(s) => s,
+            None => return 0.0,
+        };
+        let sample_lanes = match self.sampler {
+            SamplerHw::Software => eff_lanes, // each core samples its own RVs
+            _ => 1.0,                         // one sampler unit
+        };
+        let sample_s = w.updates_per_step * per_sample / sample_lanes;
+        let step_s = compute_s.max(mem_s) + sample_s + self.step_overhead_s;
+        w.updates_per_step / step_s / 1e9
+    }
+
+    /// Fig. 15 metric: GS/s per watt (TDP-based, like the paper).
+    pub fn gsps_per_watt(&self, w: &BaselineWorkload) -> f64 {
+        self.throughput_gsps(w) / self.tdp_watts
+    }
+}
+
+/// Xeon-class CPU (single socket, the paper's software baseline).
+pub fn cpu_xeon() -> BaselineModel {
+    BaselineModel {
+        name: "CPU (Xeon)",
+        clock_hz: 3.0e9,
+        lanes: 16.0,
+        ops_per_lane_cycle: 4.0, // scalar+SIMD mix on irregular code
+        mem_bw: 100e9,
+        step_overhead_s: 2e-6, // loop + allocator overhead per step
+        // Calibrated against the *measured* JAX/XLA-CPU path on this
+        // host (EXPERIMENTS.md): ~16 ns per RV update on the Ising
+        // sweep — frameworks spend the overwhelming majority of
+        // per-update time outside the ~10 useful flops.
+        update_overhead_ops: 3000.0,
+        irregular_utilization: 0.5, // caches handle pointer chasing well
+        sampler: SamplerHw::Software,
+        tdp_watts: 120.0,
+    }
+}
+
+/// RTX-2080Ti-class GPU (the paper's Fig. 5d / Fig. 14 GPU).
+pub fn gpu_rtx() -> BaselineModel {
+    BaselineModel {
+        name: "GPU (RTX)",
+        clock_hz: 1.5e9,
+        lanes: 4352.0,
+        ops_per_lane_cycle: 2.0,
+        mem_bw: 616e9,
+        step_overhead_s: 50e-6, // kernel launches + host sync per step
+        update_overhead_ops: 10.0,
+        irregular_utilization: 0.02, // uncoalesced gathers collapse SIMT
+        sampler: SamplerHw::Software,
+        tdp_watts: 250.0,
+    }
+}
+
+/// V100-class GPU (the structured-graph comparison of §VI-D).
+pub fn gpu_v100() -> BaselineModel {
+    BaselineModel {
+        name: "GPU (V100)",
+        clock_hz: 1.4e9,
+        lanes: 5120.0,
+        ops_per_lane_cycle: 2.0,
+        mem_bw: 900e9,
+        step_overhead_s: 40e-6,
+        update_overhead_ops: 10.0,
+        irregular_utilization: 0.02,
+        sampler: SamplerHw::Software,
+        tdp_watts: 250.0,
+    }
+}
+
+/// TPU-v3 single core.
+pub fn tpu_v3() -> BaselineModel {
+    BaselineModel {
+        name: "TPU-v3",
+        clock_hz: 0.94e9,
+        lanes: 2048.0, // one MXU's effective parallel lanes for elementwise
+        ops_per_lane_cycle: 2.0,
+        mem_bw: 450e9,
+        step_overhead_s: 60e-6, // dispatch + infeed per step
+        update_overhead_ops: 10.0,
+        irregular_utilization: 0.01, // gather-hostile systolic datapath
+        sampler: SamplerHw::Software,
+        tdp_watts: 100.0,
+    }
+}
+
+/// SPU (ASPLOS'21): chessboard MRF accelerator with CDF samplers.
+pub fn spu() -> BaselineModel {
+    BaselineModel {
+        name: "SPU",
+        clock_hz: 1.0e9,
+        lanes: 64.0,
+        ops_per_lane_cycle: 1.0,
+        mem_bw: 128e9,
+        step_overhead_s: 0.0,
+        update_overhead_ops: 0.0,
+        irregular_utilization: 0.1, // fixed datapath: structured graphs only
+        sampler: SamplerHw::CdfUnit { capacity: 128 },
+        tdp_watts: 2.0,
+    }
+}
+
+/// PGMA (VLSI'20): 16 nm Gibbs-sampling PGM accelerator.
+pub fn pgma() -> BaselineModel {
+    BaselineModel {
+        name: "PGMA",
+        clock_hz: 0.5e9,
+        lanes: 4.0,
+        ops_per_lane_cycle: 1.0,
+        mem_bw: 16e9,
+        step_overhead_s: 0.0,
+        update_overhead_ops: 0.0,
+        irregular_utilization: 0.8,
+        sampler: SamplerHw::CdfUnit { capacity: 64 },
+        tdp_watts: 0.1,
+    }
+}
+
+/// CoopMC (HPCA'22): tree-CDF sampler co-optimized MCMC accelerator.
+pub fn coopmc() -> BaselineModel {
+    BaselineModel {
+        name: "CoopMC",
+        clock_hz: 1.0e9,
+        lanes: 16.0,
+        ops_per_lane_cycle: 1.0,
+        mem_bw: 64e9,
+        step_overhead_s: 0.0,
+        update_overhead_ops: 0.0,
+        irregular_utilization: 0.5,
+        sampler: SamplerHw::CdfUnit { capacity: 256 },
+        tdp_watts: 1.0,
+    }
+}
+
+/// sIM (Nature Electronics'22): sparse Ising machine (p-bits).
+pub fn sparse_ising_machine() -> BaselineModel {
+    BaselineModel {
+        name: "sIM",
+        clock_hz: 0.1e9,
+        lanes: 1024.0,
+        ops_per_lane_cycle: 1.0,
+        mem_bw: 32e9,
+        step_overhead_s: 0.0,
+        update_overhead_ops: 0.0,
+        irregular_utilization: 0.8,
+        sampler: SamplerHw::PBit,
+        tdp_watts: 1.0,
+    }
+}
+
+/// PROCA (HPCA'25): programmable probabilistic processing unit.
+pub fn proca() -> BaselineModel {
+    BaselineModel {
+        name: "PROCA",
+        clock_hz: 1.0e9,
+        lanes: 8.0, // one core per RV, vector RISC-V compute
+        ops_per_lane_cycle: 2.0,
+        mem_bw: 64e9,
+        step_overhead_s: 0.0,
+        update_overhead_ops: 4.0,
+        irregular_utilization: 0.6,
+        sampler: SamplerHw::GumbelUnit, // supports any distribution size
+        tdp_watts: 1.5,
+    }
+}
+
+/// All ASIC baselines.
+pub fn all_accelerators() -> Vec<BaselineModel> {
+    vec![spu(), pgma(), coopmc(), sparse_ising_machine(), proca()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::PottsGrid;
+    use crate::workloads;
+
+    fn mrf_workload() -> BaselineWorkload {
+        let m = PottsGrid::new(387, 388, 2, 1.0); // paper-scale MRF
+        BaselineWorkload::from_model(&m, AlgoKind::BlockGibbs, false)
+    }
+
+    fn bayesnet_workload() -> BaselineWorkload {
+        let wl = workloads::wl_survey();
+        BaselineWorkload::from_model(wl.model.as_ref(), AlgoKind::BlockGibbs, true)
+    }
+
+    #[test]
+    fn gpu_beats_cpu_on_structured_mrf() {
+        // §VI-D: "For structured graphs like 2D-grid MRF, the GPU and
+        // TPU show better performance than the CPU."
+        let w = mrf_workload();
+        assert!(gpu_v100().throughput_gsps(&w) > cpu_xeon().throughput_gsps(&w));
+        assert!(tpu_v3().throughput_gsps(&w) > cpu_xeon().throughput_gsps(&w));
+    }
+
+    #[test]
+    fn cpu_beats_gpu_on_irregular_bayes_nets() {
+        // §VI-D observation ①/②: GPUs collapse on tiny irregular nets.
+        let w = bayesnet_workload();
+        assert!(
+            cpu_xeon().throughput_gsps(&w) > gpu_rtx().throughput_gsps(&w) * 10.0,
+            "cpu={} gpu={}",
+            cpu_xeon().throughput_gsps(&w),
+            gpu_rtx().throughput_gsps(&w)
+        );
+    }
+
+    #[test]
+    fn cdf_accelerators_fail_large_distributions() {
+        // Fig. 13 / §VI-D: CDF-based designs cap the distribution size.
+        let mut w = mrf_workload();
+        w.dist_size = 256.0;
+        assert_eq!(pgma().throughput_gsps(&w), 0.0);
+        assert_eq!(spu().throughput_gsps(&w), 0.0);
+        assert!(coopmc().throughput_gsps(&w) > 0.0); // capacity 256
+        assert!(proca().throughput_gsps(&w) > 0.0); // any size
+    }
+
+    #[test]
+    fn ising_machine_only_handles_binary() {
+        let mut w = mrf_workload();
+        w.dist_size = 4.0; // Potts with 4 labels
+        assert_eq!(sparse_ising_machine().throughput_gsps(&w), 0.0);
+        w.dist_size = 2.0;
+        assert!(sparse_ising_machine().throughput_gsps(&w) > 0.0);
+    }
+
+    #[test]
+    fn energy_efficiency_ordering() {
+        // Fig. 15: ASIC efficiency ≫ GPU ≫ CPU on structured graphs.
+        let w = mrf_workload();
+        let cpu = cpu_xeon().gsps_per_watt(&w);
+        let gpu = gpu_v100().gsps_per_watt(&w);
+        let asic = coopmc().gsps_per_watt(&w);
+        assert!(gpu > cpu, "gpu {gpu} vs cpu {cpu}");
+        assert!(asic > gpu, "asic {asic} vs gpu {gpu}");
+    }
+
+    #[test]
+    fn workload_shapes_by_algorithm() {
+        let m = PottsGrid::new(8, 8, 2, 1.0);
+        let seq = BaselineWorkload::from_model(&m, AlgoKind::Gibbs, false);
+        let bg = BaselineWorkload::from_model(&m, AlgoKind::BlockGibbs, false);
+        assert_eq!(seq.parallelism, 1.0);
+        assert_eq!(bg.parallelism, 32.0); // chessboard half
+        let pas = BaselineWorkload::from_model(&m, AlgoKind::Pas, false);
+        assert_eq!(pas.dist_size, 128.0); // full move table
+    }
+}

@@ -1,0 +1,90 @@
+//! Minimal measured-benchmark harness (criterion is unavailable in the
+//! offline vendor set): warmup + N timed iterations, mean / median /
+//! min reporting. Used by the `cargo bench` targets and the measured
+//! CPU rows of Fig. 14.
+
+use std::time::Instant;
+
+/// Timing statistics over the measured iterations.
+#[derive(Clone, Debug)]
+pub struct BenchStat {
+    /// Per-iteration durations in nanoseconds, sorted ascending.
+    pub samples_ns: Vec<u128>,
+}
+
+impl BenchStat {
+    /// Mean milliseconds per iteration.
+    pub fn mean_ms(&self) -> f64 {
+        if self.samples_ns.is_empty() {
+            return 0.0;
+        }
+        self.samples_ns.iter().sum::<u128>() as f64 / self.samples_ns.len() as f64 / 1e6
+    }
+
+    /// Median milliseconds per iteration.
+    pub fn median_ms(&self) -> f64 {
+        if self.samples_ns.is_empty() {
+            return 0.0;
+        }
+        self.samples_ns[self.samples_ns.len() / 2] as f64 / 1e6
+    }
+
+    /// Fastest iteration in milliseconds.
+    pub fn min_ms(&self) -> f64 {
+        self.samples_ns.first().map_or(0.0, |&n| n as f64 / 1e6)
+    }
+
+    /// One-line summary.
+    pub fn summary(&self, label: &str) -> String {
+        format!(
+            "{label}: mean {:.3} ms, median {:.3} ms, min {:.3} ms ({} iters)",
+            self.mean_ms(),
+            self.median_ms(),
+            self.min_ms(),
+            self.samples_ns.len()
+        )
+    }
+}
+
+/// Run `f` `warmup` times unmeasured, then `iters` times measured.
+pub fn bench_fn<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchStat {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_nanos());
+    }
+    samples.sort_unstable();
+    BenchStat {
+        samples_ns: samples,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_ordered() {
+        let s = bench_fn(1, 9, || {
+            std::thread::sleep(std::time::Duration::from_micros(100));
+        });
+        assert_eq!(s.samples_ns.len(), 9);
+        assert!(s.min_ms() <= s.median_ms());
+        assert!(s.mean_ms() > 0.05);
+        assert!(s.summary("x").contains("mean"));
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let s = BenchStat {
+            samples_ns: Vec::new(),
+        };
+        assert_eq!(s.mean_ms(), 0.0);
+        assert_eq!(s.median_ms(), 0.0);
+        assert_eq!(s.min_ms(), 0.0);
+    }
+}

@@ -1,0 +1,728 @@
+//! The MC²A scheduling compiler.
+//!
+//! Lowers a *(workload, algorithm, hardware config)* triple to a VLIW
+//! [`Program`]: it extracts RV-level parallelism (graph coloring for
+//! Block Gibbs, chessboard on grids), maps update groups onto the
+//! `T`-lane CU / `S`-lane SU arrays, allocates operands across the
+//! multi-bank register file to avoid read/write conflicts, batches
+//! memory traffic under the `B` words/cycle budget, schedules
+//! multi-cycle `Compute`/`Sample` phases for distributions that exceed
+//! the PE tree or SU width, and inserts the NOPs that resolve the
+//! store→load hazard between dependent blocks (§V-B, §V-E).
+
+mod validate;
+
+pub use validate::{validate_program, Violation};
+
+use crate::energy::EnergyModel;
+use crate::graph::color_greedy;
+use crate::isa::{
+    CtrlType, CuCtrl, CuMode, HwConfig, Instr, LoadSlot, MemSpace, Program, Semantics, StoreSlot,
+    SuCtrl, SuMode, XbarRoute,
+};
+use crate::mcmc::AlgoKind;
+
+/// Compile `algo` over `model` for `hw`, with the VLIW load/compute
+/// fusion optimization enabled (the production path).
+///
+/// `pas_flips` is the PAS path length L (ignored for other algorithms).
+pub fn compile(
+    model: &dyn EnergyModel,
+    algo: AlgoKind,
+    hw: &HwConfig,
+    pas_flips: usize,
+) -> Program {
+    compile_opt(model, algo, hw, pas_flips, true)
+}
+
+/// [`compile`] with the optimizer switchable — `optimize = false` keeps
+/// the naive one-phase-per-instruction schedule (the EXPERIMENTS.md
+/// §Perf "before" baseline and the ablation bench).
+pub fn compile_opt(
+    model: &dyn EnergyModel,
+    algo: AlgoKind,
+    hw: &HwConfig,
+    pas_flips: usize,
+    optimize: bool,
+) -> Program {
+    hw.validate().expect("invalid hardware config");
+    let c = Compiler::new(model, hw);
+    let mut program = match algo {
+        AlgoKind::Gibbs => c.compile_gibbs_family(false, true),
+        AlgoKind::Mh => c.compile_gibbs_family(false, true),
+        AlgoKind::BlockGibbs => c.compile_gibbs_family(true, false),
+        AlgoKind::AsyncGibbs => c.compile_async_gibbs(),
+        AlgoKind::Pas => c.compile_pas(pas_flips.max(1)),
+    };
+    if optimize {
+        program.body = fuse_loads(program.body, hw);
+    }
+    program
+}
+
+/// VLIW software pipelining: fold Load-only instructions into the
+/// nearest preceding Compute/Sample bundle (Fig. 7/10 issue Load fields
+/// and CU/SU fields in the *same* VLIW word — the naive schedule
+/// serializes them).
+///
+/// Safety argument: a folded load belongs to the *next* RV group; its
+/// destination rows come from the rotating row allocator (≥ 2 rows per
+/// bank required), so it never clobbers operands the host bundle still
+/// reads, and groups inside one color block are mutually non-adjacent,
+/// so it never reads sample-memory words the host bundle's commit
+/// writes. Fusion never crosses a NOP (pipeline drain = dependence
+/// boundary).
+fn fuse_loads(body: Vec<Instr>, hw: &HwConfig) -> Vec<Instr> {
+    let rows_per_bank = hw.rf_regs_per_bank / (1 << hw.k);
+    if rows_per_bank < 2 {
+        return body; // single-buffered RF: fusion would clobber operands
+    }
+    let mut out: Vec<Instr> = Vec::with_capacity(body.len());
+    for instr in body {
+        let is_load_only = matches!(instr.ctrl, CtrlType::Load)
+            && instr.cu.is_none()
+            && instr.su.is_none()
+            && instr.stores.is_empty();
+        if is_load_only {
+            if let Some(host) = out.last_mut() {
+                let host_ok = !matches!(host.ctrl, CtrlType::Nop | CtrlType::Load)
+                    && (host.cu.is_some() || host.su.is_some());
+                if host_ok && host.loads.len() + instr.loads.len() <= hw.bw_words {
+                    // one row-wide write port per bank per cycle
+                    let row_w = (1u16) << hw.k;
+                    let mut bank_row: std::collections::HashMap<u16, u16> = host
+                        .loads
+                        .iter()
+                        .map(|l| (l.rf_bank, l.rf_reg / row_w))
+                        .collect();
+                    let compatible = instr.loads.iter().all(|l| {
+                        let row = l.rf_reg / row_w;
+                        match bank_row.get(&l.rf_bank) {
+                            Some(&r) => r == row,
+                            None => {
+                                bank_row.insert(l.rf_bank, row);
+                                true
+                            }
+                        }
+                    });
+                    if compatible {
+                        host.loads.extend(instr.loads);
+                        continue;
+                    }
+                }
+            }
+        }
+        out.push(instr);
+    }
+    out
+}
+
+struct Compiler<'m> {
+    model: &'m dyn EnergyModel,
+    hw: HwConfig,
+    body: Vec<Instr>,
+    /// rotating register row cursor per bank
+    reg_cursor: Vec<usize>,
+}
+
+impl<'m> Compiler<'m> {
+    fn new(model: &'m dyn EnergyModel, hw: &HwConfig) -> Compiler<'m> {
+        Compiler {
+            model,
+            hw: *hw,
+            body: Vec::new(),
+            reg_cursor: vec![0; hw.rf_banks],
+        }
+    }
+
+    /// Max RVs updated concurrently: bounded by the CU lanes, the SU
+    /// lanes (temporal mode: one SE per RV) and the RF banks (each lane
+    /// gets a home bank so its operand rows never conflict).
+    fn group_width(&self) -> usize {
+        self.hw.t.min(self.hw.s).min(self.hw.rf_banks)
+    }
+
+    /// Allocate the next register row in `bank` (wraps around; the
+    /// streaming schedule never keeps more rows live than the RF holds).
+    fn alloc_row(&mut self, bank: usize) -> u16 {
+        let row_w = 1 << self.hw.k;
+        let rows = (self.hw.rf_regs_per_bank / row_w).max(1);
+        let r = self.reg_cursor[bank] % rows;
+        self.reg_cursor[bank] += 1;
+        (r * row_w) as u16
+    }
+
+    /// Emit Load instructions moving `words_per_lane` words for each
+    /// lane of a group, spreading destination banks one-per-lane and
+    /// batching at the memory-bandwidth budget. Returns each lane's
+    /// (bank, reg-row) home.
+    fn emit_group_loads(
+        &mut self,
+        lanes: &[u32],
+        words_per_lane: usize,
+        space: MemSpace,
+        addr_of_lane: impl Fn(usize) -> u32,
+    ) -> Vec<(u16, u16)> {
+        let row_w = 1 << self.hw.k;
+        let mut homes = Vec::with_capacity(lanes.len());
+        let mut slots = Vec::new();
+        for (lane_idx, _rv) in lanes.iter().enumerate() {
+            let bank = lane_idx % self.hw.rf_banks;
+            // A lane may need several rows when its operands exceed 2^K.
+            let rows_needed = words_per_lane.div_ceil(row_w).max(1);
+            let first_row = self.alloc_row(bank);
+            for _ in 1..rows_needed {
+                self.alloc_row(bank);
+            }
+            homes.push((bank as u16, first_row));
+            for w in 0..words_per_lane {
+                slots.push(LoadSlot {
+                    mem: space,
+                    addr: addr_of_lane(lane_idx).wrapping_add(w as u32),
+                    rf_bank: bank as u16,
+                    rf_reg: (first_row as usize + w) as u16
+                        % self.hw.rf_regs_per_bank as u16,
+                });
+            }
+        }
+        // Greedy cycle packing: ≤ B words per Load instruction and at
+        // most one *row* write per bank per instruction ("suppresses
+        // register/memory conflicts"). RF banks have row-wide write
+        // ports (2^K words), so a lane's whole operand tuple lands in
+        // one write as long as it stays within one row.
+        let row_of = |s: &LoadSlot| (s.rf_bank, s.rf_reg as usize / row_w);
+        let mut by_cycle: Vec<Vec<LoadSlot>> = Vec::new();
+        let mut rows_used: Vec<std::collections::HashMap<u16, (u16, usize)>> = Vec::new();
+        for slot in slots {
+            let (bank, row) = row_of(&slot);
+            let mut placed = false;
+            for (cyc, used) in rows_used.iter_mut().enumerate() {
+                if by_cycle[cyc].len() >= self.hw.bw_words {
+                    continue;
+                }
+                match used.get_mut(&bank) {
+                    // same bank allowed only within the already-open row,
+                    // up to the row width
+                    Some((open_row, count)) if *open_row as usize == row && *count < row_w => {
+                        *count += 1;
+                        by_cycle[cyc].push(slot);
+                        placed = true;
+                        break;
+                    }
+                    Some(_) => continue,
+                    None => {
+                        used.insert(bank, (row as u16, 1));
+                        by_cycle[cyc].push(slot);
+                        placed = true;
+                        break;
+                    }
+                }
+            }
+            if !placed {
+                let mut map = std::collections::HashMap::new();
+                map.insert(bank, (row as u16, 1));
+                rows_used.push(map);
+                by_cycle.push(vec![slot]);
+            }
+        }
+        for loads in by_cycle {
+            self.body.push(Instr {
+                ctrl: CtrlType::Load,
+                loads,
+                routes: Vec::new(),
+                cu: None,
+                su: None,
+                stores: Vec::new(),
+                sem: Semantics::None,
+            });
+        }
+        homes
+    }
+
+    /// Crossbar routes feeding each lane's PE from its home row.
+    fn group_routes(&self, homes: &[(u16, u16)], words_per_lane: usize) -> Vec<XbarRoute> {
+        let ports = 1 << self.hw.k;
+        let mut routes = Vec::new();
+        for (lane, &(bank, row)) in homes.iter().enumerate() {
+            for p in 0..words_per_lane.min(ports) {
+                routes.push(XbarRoute {
+                    rf_bank: bank,
+                    rf_reg: row,
+                    cu: lane as u16,
+                    port: p as u16,
+                });
+            }
+        }
+        routes
+    }
+
+    /// Pipeline-drain NOPs for the store→load dependency between
+    /// successive dependent blocks.
+    fn emit_drain(&mut self) {
+        for _ in 0..self.hw.cu_latency() {
+            self.body.push(Instr::nop());
+        }
+    }
+
+    /// Schedule one conditionally-independent group of RVs: loads, the
+    /// per-state Compute(-Sample) ladder, and the final store+commit.
+    fn emit_group_update(&mut self, group: &[u32]) {
+        let ports = 1 << self.hw.k;
+        let max_card = group
+            .iter()
+            .map(|&rv| self.model.num_states(rv as usize))
+            .max()
+            .unwrap_or(2);
+        let max_nbr_words = group
+            .iter()
+            .map(|&rv| self.model.neighbor_words(rv as usize))
+            .max()
+            .unwrap_or(0);
+        let max_param_words = group
+            .iter()
+            .map(|&rv| self.model.param_words_per_state(rv as usize))
+            .max()
+            .unwrap_or(0);
+
+        // Phase 1: neighbor/weight loads (state-independent operands).
+        let homes = self.emit_group_loads(
+            group,
+            max_nbr_words.max(1),
+            MemSpace::Sample,
+            |lane| group[lane] * 4,
+        );
+
+        // Phase 2: per candidate state, optional per-state parameter
+        // load (CPT/unary), partial-compute cycles when the operand
+        // row exceeds the PE tree, then the pipelined Compute-Sample.
+        for s in 0..max_card {
+            if max_param_words > 0 {
+                self.emit_group_loads(group, max_param_words, MemSpace::Input, |lane| {
+                    group[lane] * 16 + s as u32
+                });
+            }
+            let words = max_nbr_words + max_param_words;
+            let partial_cycles = words.div_ceil(ports).max(1);
+            for pc in 0..partial_cycles {
+                let last_partial = pc + 1 == partial_cycles;
+                let last_state = s + 1 == max_card;
+                let ctrl = if !last_partial {
+                    CtrlType::Compute
+                } else if last_state {
+                    CtrlType::ComputeSampleStore
+                } else {
+                    CtrlType::ComputeSample
+                };
+                let routes = self.group_routes(&homes, words.min(ports));
+                let cu = Some(CuCtrl {
+                    mode: if last_partial {
+                        CuMode::ReducedSum
+                    } else {
+                        CuMode::Partial
+                    },
+                    lanes: group.len() as u16,
+                    scale_beta: last_partial,
+                    accumulate: pc > 0,
+                });
+                let su = last_partial.then_some(SuCtrl {
+                    mode: SuMode::Temporal,
+                    lanes: group.len() as u16,
+                    dist_size: max_card as u16,
+                    first: s == 0,
+                    last: last_state,
+                });
+                let stores = if last_partial && last_state {
+                    group
+                        .iter()
+                        .enumerate()
+                        .map(|(lane, &rv)| StoreSlot {
+                            mem: MemSpace::Sample,
+                            addr: rv,
+                            su_lane: lane as u16,
+                        })
+                        .collect()
+                } else {
+                    Vec::new()
+                };
+                let sem = if last_partial && last_state {
+                    Semantics::UpdateRvs(group.to_vec())
+                } else {
+                    Semantics::None
+                };
+                self.body.push(Instr {
+                    ctrl,
+                    loads: Vec::new(),
+                    routes,
+                    cu,
+                    su,
+                    stores,
+                    sem,
+                });
+            }
+        }
+    }
+
+    /// Gibbs-family schedule. `use_coloring` = Block Gibbs parallelism;
+    /// otherwise sequential single-RV groups (Gibbs/MH). `drain_each` =
+    /// drain after every group (sequential chains need it).
+    fn compile_gibbs_family(mut self, use_coloring: bool, drain_each: bool) -> Program {
+        let n = self.model.num_vars();
+        let blocks: Vec<Vec<u32>> = if use_coloring {
+            color_greedy(self.model.interaction()).blocks()
+        } else {
+            (0..n as u32).map(|i| vec![i]).collect()
+        };
+        let width = self.group_width();
+        let mut updates = 0u64;
+        for block in &blocks {
+            for group in block.chunks(width) {
+                self.emit_group_update(group);
+                updates += group.len() as u64;
+                if drain_each {
+                    self.emit_drain();
+                }
+            }
+            if !drain_each {
+                self.emit_drain();
+            }
+        }
+        Program {
+            prologue: Vec::new(),
+            body: self.body,
+            updates_per_iter: updates,
+            samples_per_iter: updates,
+            name: if use_coloring { "block-gibbs" } else { "gibbs" }.into(),
+        }
+    }
+
+    /// Async Gibbs: snapshot, then all RVs in maximal groups with no
+    /// inter-block drains (stale reads are the algorithm's semantics).
+    fn compile_async_gibbs(mut self) -> Program {
+        let n = self.model.num_vars();
+        let width = self.group_width();
+        let mut snap = Instr::nop();
+        snap.sem = Semantics::Snapshot;
+        self.body.push(snap);
+        let all: Vec<u32> = (0..n as u32).collect();
+        let mut updates = 0u64;
+        for group in all.chunks(width) {
+            self.emit_group_update(group);
+            updates += group.len() as u64;
+        }
+        self.emit_drain();
+        Program {
+            prologue: Vec::new(),
+            body: self.body,
+            updates_per_iter: updates,
+            samples_per_iter: updates,
+            name: "async-gibbs".into(),
+        }
+    }
+
+    /// PAS schedule (Fig. 10c): multi-cycle ΔE Compute pass over all
+    /// moves, spatial-mode Sample passes for the L indices, then L
+    /// sequential conditional updates plus the MH energy check.
+    fn compile_pas(mut self, l: usize) -> Program {
+        let n = self.model.num_vars();
+        let ports = 1 << self.hw.k;
+        let width = self.group_width();
+        // Total move-table size (the "distribution ΔE" of Fig. 10c).
+        let n_moves: usize = (0..n).map(|i| self.model.num_states(i)).sum();
+
+        // Phase 1: ΔE over all vars, chunked across the T CU lanes.
+        let all: Vec<u32> = (0..n as u32).collect();
+        for chunk in all.chunks(width) {
+            let max_words = chunk
+                .iter()
+                .map(|&rv| {
+                    self.model.neighbor_words(rv as usize)
+                        + self.model.param_words_per_state(rv as usize)
+                })
+                .max()
+                .unwrap_or(1)
+                .max(1);
+            let homes =
+                self.emit_group_loads(chunk, max_words, MemSpace::Sample, |lane| chunk[lane] * 4);
+            let max_card = chunk
+                .iter()
+                .map(|&rv| self.model.num_states(rv as usize))
+                .max()
+                .unwrap_or(2);
+            for s in 0..max_card {
+                let partial_cycles = max_words.div_ceil(ports).max(1);
+                for pc in 0..partial_cycles {
+                    let last = pc + 1 == partial_cycles;
+                    let routes = self.group_routes(&homes, max_words.min(ports));
+                    // ΔE results stream to the distribution buffer.
+                    let stores = if last {
+                        chunk
+                            .iter()
+                            .enumerate()
+                            .map(|(lane, &rv)| StoreSlot {
+                                mem: MemSpace::Input,
+                                addr: rv * 4 + s as u32,
+                                su_lane: lane as u16,
+                            })
+                            .collect()
+                    } else {
+                        Vec::new()
+                    };
+                    self.body.push(Instr {
+                        ctrl: CtrlType::Compute,
+                        loads: Vec::new(),
+                        routes,
+                        cu: Some(CuCtrl {
+                            mode: if last {
+                                CuMode::ReducedSum
+                            } else {
+                                CuMode::Partial
+                            },
+                            lanes: chunk.len() as u16,
+                            scale_beta: last,
+                            accumulate: pc > 0,
+                        }),
+                        su: None,
+                        stores,
+                        sem: Semantics::None,
+                    });
+                }
+            }
+        }
+        self.emit_drain();
+
+        // Phase 2: L index samples from the size-n_moves distribution,
+        // spatial mode: ceil(n_moves / S) passes of S bins each.
+        let s_lanes = self.hw.s;
+        let passes = n_moves.div_ceil(s_lanes);
+        for sample_idx in 0..l {
+            for p in 0..passes {
+                let remaining = (n_moves - p * s_lanes).min(s_lanes);
+                let last = p + 1 == passes;
+                let stores = if last {
+                    vec![StoreSlot {
+                        mem: MemSpace::Sample,
+                        addr: (n + sample_idx) as u32,
+                        su_lane: 0,
+                    }]
+                } else {
+                    Vec::new()
+                };
+                // Feed the SU from the distribution buffer. One load
+                // slot per distinct RF bank per cycle (when the config
+                // has fewer banks than SEs, the extra bins stream
+                // through the direct memory→SU path, which has no RF
+                // write-port constraint).
+                let loads: Vec<LoadSlot> = (0..remaining
+                    .min(self.hw.bw_words)
+                    .min(self.hw.rf_banks))
+                    .map(|w| LoadSlot {
+                        mem: MemSpace::Input,
+                        addr: (p * s_lanes + w) as u32,
+                        rf_bank: w as u16,
+                        rf_reg: 0,
+                    })
+                    .collect();
+                self.body.push(Instr {
+                    ctrl: CtrlType::Sample,
+                    loads,
+                    routes: Vec::new(),
+                    cu: None,
+                    su: Some(SuCtrl {
+                        mode: SuMode::Spatial,
+                        lanes: s_lanes as u16,
+                        dist_size: remaining as u16,
+                        first: p == 0,
+                        last,
+                    }),
+                    stores,
+                    sem: Semantics::None,
+                });
+            }
+        }
+        self.emit_drain();
+
+        // Phase 3: L sequential conditional updates (each like a
+        // single-RV Gibbs update) + the MH energy comparison.
+        for flip in 0..l {
+            let rv = (flip % n) as u32; // representative lane; timing-equivalent
+            let words = self.model.neighbor_words(rv as usize).max(1)
+                + self.model.param_words_per_state(rv as usize);
+            let homes = self.emit_group_loads(&[rv], words, MemSpace::Sample, |_| rv * 4);
+            let card = self.model.num_states(rv as usize);
+            for s in 0..card {
+                let last_state = s + 1 == card;
+                let routes = self.group_routes(&homes, words.min(ports));
+                self.body.push(Instr {
+                    ctrl: if last_state {
+                        CtrlType::ComputeSampleStore
+                    } else {
+                        CtrlType::ComputeSample
+                    },
+                    loads: Vec::new(),
+                    routes,
+                    cu: Some(CuCtrl {
+                        mode: CuMode::ReducedSum,
+                        lanes: 1,
+                        scale_beta: true,
+                        accumulate: false,
+                    }),
+                    su: Some(SuCtrl {
+                        mode: SuMode::Temporal,
+                        lanes: 1,
+                        dist_size: card as u16,
+                        first: s == 0,
+                        last: last_state,
+                    }),
+                    stores: if last_state {
+                        vec![StoreSlot {
+                            mem: MemSpace::Sample,
+                            addr: rv,
+                            su_lane: 0,
+                        }]
+                    } else {
+                        Vec::new()
+                    },
+                    sem: Semantics::None,
+                });
+            }
+            self.emit_drain();
+        }
+        // MH acceptance: two-term energy comparison + commit; the
+        // commit instruction carries the functional PasIterate.
+        self.body.push(Instr {
+            ctrl: CtrlType::ComputeSampleStore,
+            loads: Vec::new(),
+            routes: Vec::new(),
+            cu: Some(CuCtrl {
+                mode: CuMode::ReducedSum,
+                lanes: 1,
+                scale_beta: true,
+                accumulate: false,
+            }),
+            su: Some(SuCtrl {
+                mode: SuMode::Temporal,
+                lanes: 1,
+                dist_size: 2,
+                first: true,
+                last: true,
+            }),
+            stores: vec![StoreSlot {
+                mem: MemSpace::Histogram,
+                addr: 0,
+                su_lane: 0,
+            }],
+            sem: Semantics::PasIterate,
+        });
+        Program {
+            prologue: Vec::new(),
+            body: self.body,
+            updates_per_iter: l as u64,
+            samples_per_iter: l as u64,
+            name: "pas".into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::{MaxCutModel, PottsGrid};
+    use crate::graph::erdos_renyi_with_edges;
+    use crate::workloads;
+
+    #[test]
+    fn block_gibbs_ising_schedule_is_compact() {
+        let m = PottsGrid::new(8, 8, 2, 1.0);
+        let hw = HwConfig::fig10_toy();
+        let p = compile(&m, AlgoKind::BlockGibbs, &hw, 1);
+        assert_eq!(p.updates_per_iter, 64);
+        // Chessboard: 2 blocks of 32, groups of 4 ⇒ 16 groups, ≥2
+        // instructions each, plus 2 block drains.
+        assert!(p.body.len() >= 32, "body={} instrs", p.body.len());
+        let h = p.body_histogram();
+        assert!(h.get(&CtrlType::ComputeSampleStore).copied().unwrap_or(0) >= 16);
+        assert!(h.get(&CtrlType::Nop).copied().unwrap_or(0) >= 4);
+    }
+
+    #[test]
+    fn sequential_gibbs_has_more_drains_than_bg() {
+        let m = PottsGrid::new(6, 6, 2, 1.0);
+        let hw = HwConfig::fig10_toy();
+        let seq = compile(&m, AlgoKind::Gibbs, &hw, 1);
+        let bg = compile(&m, AlgoKind::BlockGibbs, &hw, 1);
+        let nseq = seq
+            .body_histogram()
+            .get(&CtrlType::Nop)
+            .copied()
+            .unwrap_or(0);
+        let nbg = bg.body_histogram().get(&CtrlType::Nop).copied().unwrap_or(0);
+        assert!(nseq > nbg, "seq NOPs {nseq} vs bg {nbg}");
+    }
+
+    #[test]
+    fn pas_schedule_has_compute_and_sample_phases() {
+        let g = erdos_renyi_with_edges(64, 200, 3);
+        let m = MaxCutModel::new(g, None);
+        let hw = HwConfig::fig10_toy();
+        let p = compile(&m, AlgoKind::Pas, &hw, 4);
+        let h = p.body_histogram();
+        assert!(h.get(&CtrlType::Compute).copied().unwrap_or(0) > 0);
+        assert!(h.get(&CtrlType::Sample).copied().unwrap_or(0) > 0);
+        assert_eq!(p.updates_per_iter, 4);
+        // Spatial sampling: L × ceil(n_moves/S) Sample instrs.
+        let n_moves = 128usize;
+        assert_eq!(h[&CtrlType::Sample], 4 * n_moves.div_ceil(hw.s));
+    }
+
+    #[test]
+    fn all_rvs_updated_once_per_iteration() {
+        let m = PottsGrid::new(5, 5, 3, 0.5);
+        let hw = HwConfig::paper_default();
+        for algo in [AlgoKind::Gibbs, AlgoKind::BlockGibbs, AlgoKind::AsyncGibbs] {
+            let p = compile(&m, algo, &hw, 1);
+            let mut seen = vec![0u32; 25];
+            for i in &p.body {
+                if let Semantics::UpdateRvs(rvs) = &i.sem {
+                    for &rv in rvs {
+                        seen[rv as usize] += 1;
+                    }
+                }
+            }
+            assert!(seen.iter().all(|&c| c == 1), "{algo:?}: {seen:?}");
+        }
+    }
+
+    #[test]
+    fn loads_respect_bandwidth() {
+        let wl = workloads::wl_survey();
+        let hw = HwConfig::fig10_toy();
+        let p = compile(wl.model.as_ref(), AlgoKind::BlockGibbs, &hw, 1);
+        for i in &p.body {
+            assert!(i.loads.len() <= hw.bw_words, "{} loads", i.loads.len());
+        }
+    }
+
+    #[test]
+    fn loads_avoid_multi_row_bank_writes() {
+        // One row-wide write per bank per instruction: several words of
+        // one row are fine, two different rows of one bank are not.
+        let m = PottsGrid::new(8, 8, 2, 1.0);
+        let hw = HwConfig::paper_default();
+        let p = compile(&m, AlgoKind::BlockGibbs, &hw, 1);
+        let row_w = 1u16 << hw.k;
+        for i in &p.body {
+            let mut bank_row = std::collections::HashMap::new();
+            for l in &i.loads {
+                let row = l.rf_reg / row_w;
+                let prev = bank_row.insert(l.rf_bank, row);
+                assert!(
+                    prev.is_none() || prev == Some(row),
+                    "bank {} writes rows {:?} and {}",
+                    l.rf_bank,
+                    prev,
+                    row
+                );
+            }
+        }
+    }
+}

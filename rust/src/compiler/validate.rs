@@ -1,0 +1,196 @@
+//! Static program validation: the invariants the compiler must uphold
+//! so the hardware executes hazard- and conflict-free. Exercised
+//! directly by the property-based test-suite (`prop_invariants`).
+
+use crate::energy::EnergyModel;
+use crate::isa::{HwConfig, Program, Semantics};
+
+/// A violated program invariant.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Violation {
+    /// Two RVs in one `UpdateRvs` commit are Markov-blanket neighbors.
+    DependentParallelUpdate {
+        /// First RV.
+        a: u32,
+        /// Second RV.
+        b: u32,
+    },
+    /// A Load instruction exceeds the memory-bandwidth budget.
+    BandwidthExceeded {
+        /// Instruction index within the body.
+        at: usize,
+        /// Words requested.
+        words: usize,
+    },
+    /// Two load slots write the same RF bank in one instruction.
+    WritePortConflict {
+        /// Instruction index.
+        at: usize,
+        /// Conflicting bank.
+        bank: u16,
+    },
+    /// A crossbar route references an out-of-range resource.
+    RouteOutOfRange {
+        /// Instruction index.
+        at: usize,
+    },
+    /// An RV is updated more than once (or never) in one iteration of a
+    /// Gibbs-family program.
+    BadUpdateCoverage {
+        /// RV id.
+        rv: u32,
+        /// Times updated.
+        count: u32,
+    },
+    /// An SU control names more lanes than exist.
+    SuLanesOutOfRange {
+        /// Instruction index.
+        at: usize,
+    },
+    /// A CU control names more lanes than exist.
+    CuLanesOutOfRange {
+        /// Instruction index.
+        at: usize,
+    },
+}
+
+/// Validate a compiled program against the hardware config and, when
+/// `expect_full_coverage`, against the model's update-coverage
+/// requirement (every free RV exactly once per iteration).
+pub fn validate_program(
+    program: &Program,
+    model: &dyn EnergyModel,
+    hw: &HwConfig,
+    expect_full_coverage: bool,
+) -> Vec<Violation> {
+    let mut violations = Vec::new();
+    let g = model.interaction();
+    let mut update_counts = vec![0u32; model.num_vars()];
+    // Async (hogwild) programs snapshot the state first; their commits
+    // read stale values, so dependent parallel updates are the
+    // *algorithm's* semantics, not a compiler hazard.
+    let is_async = program
+        .prologue
+        .iter()
+        .chain(&program.body)
+        .any(|i| matches!(i.sem, Semantics::Snapshot));
+
+    for (at, instr) in program.prologue.iter().chain(&program.body).enumerate() {
+        // Bandwidth budget.
+        if instr.loads.len() > hw.bw_words {
+            violations.push(Violation::BandwidthExceeded {
+                at,
+                words: instr.loads.len(),
+            });
+        }
+        // One row-wide write per bank per instruction (RF banks have
+        // 2^K-word row write ports).
+        let row_w = 1u16 << hw.k;
+        let mut bank_rows: std::collections::HashMap<u16, u16> = std::collections::HashMap::new();
+        for l in &instr.loads {
+            let row = l.rf_reg / row_w;
+            match bank_rows.get(&l.rf_bank) {
+                Some(&r) if r != row => {
+                    violations.push(Violation::WritePortConflict { at, bank: l.rf_bank });
+                }
+                _ => {
+                    bank_rows.insert(l.rf_bank, row);
+                }
+            }
+        }
+        // Route ranges.
+        for r in &instr.routes {
+            if r.rf_bank as usize >= hw.rf_banks
+                || r.rf_reg as usize >= hw.rf_regs_per_bank
+                || r.cu as usize >= hw.t
+                || r.port as usize >= (1 << hw.k)
+            {
+                violations.push(Violation::RouteOutOfRange { at });
+            }
+        }
+        // Lane ranges.
+        if let Some(cu) = &instr.cu {
+            if cu.lanes as usize > hw.t {
+                violations.push(Violation::CuLanesOutOfRange { at });
+            }
+        }
+        if let Some(su) = &instr.su {
+            if su.lanes as usize > hw.s {
+                violations.push(Violation::SuLanesOutOfRange { at });
+            }
+        }
+        // Parallel-update independence (skipped for async programs).
+        if let Semantics::UpdateRvs(rvs) = &instr.sem {
+            for (i, &a) in rvs.iter().enumerate() {
+                update_counts[a as usize] += 1;
+                if is_async {
+                    continue;
+                }
+                for &b in &rvs[i + 1..] {
+                    if g.has_edge(a as usize, b as usize) {
+                        violations.push(Violation::DependentParallelUpdate { a, b });
+                    }
+                }
+            }
+        }
+    }
+
+    if expect_full_coverage {
+        for (rv, &count) in update_counts.iter().enumerate() {
+            if count != 1 {
+                violations.push(Violation::BadUpdateCoverage {
+                    rv: rv as u32,
+                    count,
+                });
+            }
+        }
+    }
+    violations
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::compile;
+    use crate::energy::PottsGrid;
+    use crate::isa::Instr;
+    use crate::mcmc::AlgoKind;
+
+    #[test]
+    fn compiled_programs_are_clean() {
+        let m = PottsGrid::new(6, 6, 2, 1.0);
+        for hw in [HwConfig::fig10_toy(), HwConfig::paper_default()] {
+            for algo in [AlgoKind::Gibbs, AlgoKind::BlockGibbs, AlgoKind::AsyncGibbs] {
+                let p = compile(&m, algo, &hw, 1);
+                let v = validate_program(&p, &m, &hw, true);
+                assert!(v.is_empty(), "{algo:?} on {hw:?}: {v:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn detects_dependent_update() {
+        let m = PottsGrid::new(3, 3, 2, 1.0);
+        let hw = HwConfig::fig10_toy();
+        let mut p = Program::default();
+        let mut i = Instr::nop();
+        // RVs 0 and 1 are grid neighbors — illegal parallel update.
+        i.sem = Semantics::UpdateRvs(vec![0, 1]);
+        p.body.push(i);
+        let v = validate_program(&p, &m, &hw, false);
+        assert!(matches!(
+            v[0],
+            Violation::DependentParallelUpdate { a: 0, b: 1 }
+        ));
+    }
+
+    #[test]
+    fn detects_missing_coverage() {
+        let m = PottsGrid::new(2, 2, 2, 1.0);
+        let hw = HwConfig::fig10_toy();
+        let p = Program::default(); // updates nothing
+        let v = validate_program(&p, &m, &hw, true);
+        assert_eq!(v.len(), 4);
+        assert!(matches!(v[0], Violation::BadUpdateCoverage { count: 0, .. }));
+    }
+}

@@ -1,0 +1,333 @@
+//! Bayesian networks with conditional probability tables (CPTs).
+//!
+//! The paper's irregular-graph workloads (Table I: Earthquake, Survey;
+//! Fig. 14 additionally Cancer and Alarm) are Bayes nets sampled with
+//! (Block) Gibbs. Energies are `-log P` so the hardware's log-domain
+//! add/compare pipeline applies (Fig. 3); evidence is supported by
+//! clamping RVs.
+
+use super::{EnergyModel, OpCost};
+use crate::graph::Graph;
+
+/// A conditional probability table for one node.
+#[derive(Clone, Debug)]
+pub struct Cpt {
+    /// Parent node ids (order defines the stride layout of `table`).
+    pub parents: Vec<u32>,
+    /// Cardinality of this node.
+    pub card: u32,
+    /// `P(node = s | parents = cfg)` flattened as
+    /// `table[cfg_index * card + s]`, where `cfg_index` iterates parent
+    /// states with the **last parent fastest** (C order).
+    pub table: Vec<f64>,
+}
+
+impl Cpt {
+    /// Index of a parent configuration given the full assignment.
+    fn cfg_index(&self, x: &[u32], cards: &[u32]) -> usize {
+        let mut idx = 0usize;
+        for &p in &self.parents {
+            idx = idx * cards[p as usize] as usize + x[p as usize] as usize;
+        }
+        idx
+    }
+
+    /// `P(node = s | parents(x))`.
+    pub fn prob(&self, x: &[u32], s: u32, cards: &[u32]) -> f64 {
+        self.table[self.cfg_index(x, cards) * self.card as usize + s as usize]
+    }
+
+    /// Validate: each parent-configuration row sums to 1.
+    pub fn is_normalized(&self, tol: f64) -> bool {
+        self.table
+            .chunks(self.card as usize)
+            .all(|row| (row.iter().sum::<f64>() - 1.0).abs() < tol)
+    }
+}
+
+/// A Bayesian network: the joint factorizes as
+/// `P(x) = Π_i P(x_i | pa(x_i))`, so
+/// `E(x) = -Σ_i log P(x_i | pa(x_i))`.
+#[derive(Clone, Debug)]
+pub struct BayesNet {
+    name: String,
+    cpts: Vec<Cpt>,
+    cards: Vec<u32>,
+    /// Children lists: `children[i]` = nodes having `i` as a parent.
+    children: Vec<Vec<u32>>,
+    /// Moral graph (parents + children + co-parents) = Markov blankets.
+    moral: Graph,
+    /// Clamped evidence values; `u32::MAX` = free.
+    evidence: Vec<u32>,
+}
+
+impl BayesNet {
+    /// Build a network from named CPTs. Panics on malformed tables.
+    pub fn new(name: &str, cpts: Vec<Cpt>) -> BayesNet {
+        let n = cpts.len();
+        let cards: Vec<u32> = cpts.iter().map(|c| c.card).collect();
+        for (i, c) in cpts.iter().enumerate() {
+            let cfgs: usize = c
+                .parents
+                .iter()
+                .map(|&p| cards[p as usize] as usize)
+                .product();
+            assert_eq!(
+                c.table.len(),
+                cfgs * c.card as usize,
+                "node {i}: CPT size mismatch"
+            );
+            assert!(c.is_normalized(1e-6), "node {i}: CPT rows must sum to 1");
+        }
+        let mut children = vec![Vec::new(); n];
+        let mut moral_edges = Vec::new();
+        for (i, c) in cpts.iter().enumerate() {
+            for &p in &c.parents {
+                children[p as usize].push(i as u32);
+                moral_edges.push((p, i as u32));
+            }
+            // moralization: co-parents become neighbors
+            for (a, &pa) in c.parents.iter().enumerate() {
+                for &pb in &c.parents[a + 1..] {
+                    moral_edges.push((pa, pb));
+                }
+            }
+        }
+        let moral = Graph::from_edges(n, &moral_edges, None);
+        BayesNet {
+            name: name.to_string(),
+            cpts,
+            cards,
+            children,
+            moral,
+            evidence: vec![u32::MAX; n],
+        }
+    }
+
+    /// Network name (e.g. "earthquake").
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Clamp node `i` to value `v` (inference evidence).
+    pub fn set_evidence(&mut self, i: usize, v: u32) {
+        assert!(v < self.cards[i]);
+        self.evidence[i] = v;
+    }
+
+    /// True if node `i` is clamped.
+    pub fn is_clamped(&self, i: usize) -> bool {
+        self.evidence[i] != u32::MAX
+    }
+
+    /// Clamped value of node `i`, if any.
+    pub fn evidence(&self, i: usize) -> Option<u32> {
+        (self.evidence[i] != u32::MAX).then_some(self.evidence[i])
+    }
+
+    /// Number of directed edges (Table I's edge count).
+    pub fn num_dag_edges(&self) -> usize {
+        self.cpts.iter().map(|c| c.parents.len()).sum()
+    }
+
+    /// The CPT of node `i`.
+    pub fn cpt(&self, i: usize) -> &Cpt {
+        &self.cpts[i]
+    }
+
+    /// Exact marginal P(node = s) by brute-force enumeration — only for
+    /// small nets; used to validate Gibbs histograms in tests.
+    pub fn exact_marginal(&self, node: usize) -> Vec<f64> {
+        let n = self.cpts.len();
+        assert!(
+            self.cards.iter().map(|&c| c as usize).product::<usize>() <= 1 << 22,
+            "state space too large for enumeration"
+        );
+        let mut marg = vec![0.0f64; self.cards[node] as usize];
+        let mut x = vec![0u32; n];
+        let mut total = 0.0f64;
+        loop {
+            // respect evidence
+            let consistent = (0..n).all(|i| self.evidence[i] == u32::MAX || x[i] == self.evidence[i]);
+            if consistent {
+                let p = (-self.energy(&x)).exp();
+                marg[x[node] as usize] += p;
+                total += p;
+            }
+            // odometer increment
+            let mut i = 0;
+            loop {
+                if i == n {
+                    let z = total.max(f64::MIN_POSITIVE);
+                    for m in &mut marg {
+                        *m /= z;
+                    }
+                    return marg;
+                }
+                x[i] += 1;
+                if x[i] < self.cards[i] {
+                    break;
+                }
+                x[i] = 0;
+                i += 1;
+            }
+        }
+    }
+}
+
+impl EnergyModel for BayesNet {
+    fn num_vars(&self) -> usize {
+        self.cpts.len()
+    }
+
+    fn num_states(&self, i: usize) -> usize {
+        self.cards[i] as usize
+    }
+
+    fn interaction(&self) -> &Graph {
+        &self.moral
+    }
+
+    fn local_energies(&self, x: &[u32], i: usize, out: &mut Vec<f32>) {
+        let card = self.cards[i] as usize;
+        out.clear();
+        if let Some(v) = self.evidence(i) {
+            // Clamped: infinite energy off the evidence value.
+            out.resize(card, f32::INFINITY);
+            out[v as usize] = 0.0;
+            return;
+        }
+        out.resize(card, 0.0);
+        let mut y = x.to_vec();
+        for s in 0..card as u32 {
+            y[i] = s;
+            // -log P(x_i = s | pa_i)
+            let mut e = -self.cpts[i].prob(&y, s, &self.cards).max(1e-30).ln();
+            // -log P(child | pa(child) with x_i = s) for each child
+            for &c in &self.children[i] {
+                let p = self.cpts[c as usize].prob(&y, y[c as usize], &self.cards);
+                e -= p.max(1e-30).ln();
+            }
+            out[s as usize] = e as f32;
+        }
+    }
+
+    fn energy(&self, x: &[u32]) -> f64 {
+        let mut e = 0.0;
+        for (i, c) in self.cpts.iter().enumerate() {
+            // Same zero-probability clamp as local_energies so that
+            // energy differences agree between the two paths.
+            e -= c.prob(x, x[i], &self.cards).max(1e-30).ln();
+        }
+        e
+    }
+
+    fn update_cost(&self, i: usize) -> OpCost {
+        // Per candidate state: 1 CPT lookup for self + 1 per child, all
+        // log-domain adds; CPT entries are 4-byte log-probs in the
+        // accelerator's CDT memory (Fig. 10a's indirect access pattern).
+        let s = self.cards[i] as u64;
+        let kids = self.children[i].len() as u64;
+        OpCost {
+            ops: s * (kids + 1),
+            bytes: 4 * (s * (kids + 1) + self.moral.degree(i) as u64 + 1),
+            samples: 1,
+        }
+    }
+
+    fn param_words_per_state(&self, i: usize) -> usize {
+        // Per candidate state: this node's CPT entry + one entry per
+        // child CPT (indirectly addressed via the sample memory —
+        // Fig. 10a's CDT access pattern).
+        1 + self.children[i].len()
+    }
+}
+
+/// Helper to assemble a CPT row-major table from nested rows.
+#[allow(dead_code)]
+pub(crate) fn cpt(parents: &[u32], card: u32, rows: &[&[f64]]) -> Cpt {
+    let table: Vec<f64> = rows.iter().flat_map(|r| r.iter().copied()).collect();
+    Cpt {
+        parents: parents.to_vec(),
+        card,
+        table,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::testutil::check_local_consistency;
+
+    /// Classic sprinkler net: Cloudy -> Sprinkler, Rain -> WetGrass.
+    pub(crate) fn sprinkler() -> BayesNet {
+        let c = cpt(&[], 2, &[&[0.5, 0.5]]);
+        let s = cpt(&[0], 2, &[&[0.5, 0.5], &[0.9, 0.1]]);
+        let r = cpt(&[0], 2, &[&[0.8, 0.2], &[0.2, 0.8]]);
+        let w = cpt(
+            &[1, 2],
+            2,
+            &[&[1.0, 0.0], &[0.1, 0.9], &[0.1, 0.9], &[0.01, 0.99]],
+        );
+        BayesNet::new("sprinkler", vec![c, s, r, w])
+    }
+
+    #[test]
+    fn joint_probability_factorizes() {
+        let net = sprinkler();
+        // P(C=1,S=0,R=1,W=1) = 0.5 * 0.9 * 0.8 * 0.9
+        let x = [1, 0, 1, 1];
+        let p = (-net.energy(&x)).exp();
+        assert!((p - 0.5 * 0.9 * 0.8 * 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn moral_graph_includes_coparents() {
+        let net = sprinkler();
+        // Sprinkler(1) and Rain(2) are co-parents of WetGrass(3).
+        assert!(net.interaction().has_edge(1, 2));
+        assert!(net.interaction().has_edge(0, 1));
+        assert!(net.interaction().has_edge(2, 3));
+    }
+
+    #[test]
+    fn local_energies_consistent() {
+        let net = sprinkler();
+        for x in [[0, 0, 0, 0], [1, 0, 1, 1], [1, 1, 1, 1]] {
+            check_local_consistency(&net, &x, 1e-4);
+        }
+    }
+
+    #[test]
+    fn exact_marginal_sums_to_one() {
+        let net = sprinkler();
+        let m = net.exact_marginal(3);
+        assert!((m.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        // Wet grass is likely a priori in this parameterization.
+        assert!(m[1] > 0.5);
+    }
+
+    #[test]
+    fn evidence_clamps_local_energy() {
+        let mut net = sprinkler();
+        net.set_evidence(0, 1);
+        let mut out = Vec::new();
+        net.local_energies(&[0, 0, 0, 0], 0, &mut out);
+        assert_eq!(out[1], 0.0);
+        assert!(out[0].is_infinite());
+    }
+
+    #[test]
+    fn evidence_shifts_marginal() {
+        let mut net = sprinkler();
+        let prior = net.exact_marginal(2)[1];
+        net.set_evidence(0, 1); // cloudy ⇒ rain more likely
+        let posterior = net.exact_marginal(2)[1];
+        assert!(posterior > prior);
+    }
+
+    #[test]
+    fn dag_edge_count() {
+        assert_eq!(sprinkler().num_dag_edges(), 4);
+    }
+}

@@ -1,0 +1,382 @@
+//! Combinatorial-optimization energy models: MaxCut, Maximum
+//! Independent Set (MIS) and MaxClique.
+//!
+//! These follow the penalized binary formulations of the DISCS benchmark
+//! the paper evaluates (§VI-A): binary RVs, energy = -objective +
+//! λ·constraint-violations, sampled with PAS / MH / Block Gibbs.
+
+use super::{EnergyModel, OpCost};
+use crate::graph::Graph;
+
+/// MaxCut: partition nodes into two sets maximizing the weight of cut
+/// edges. `E(x) = -Σ_{(i,j)∈E} w_ij · [x_i ≠ x_j]`.
+#[derive(Clone, Debug)]
+pub struct MaxCutModel {
+    graph: Graph,
+    best_known: Option<f64>,
+}
+
+impl MaxCutModel {
+    /// Wrap a (possibly weighted) graph as a MaxCut instance.
+    pub fn new(graph: Graph, best_known: Option<f64>) -> MaxCutModel {
+        MaxCutModel { graph, best_known }
+    }
+
+    /// Total cut weight of assignment `x`.
+    pub fn cut_weight(&self, x: &[u32]) -> f64 {
+        let mut cut = 0.0f64;
+        for i in 0..self.graph.num_nodes() {
+            let nbrs = self.graph.neighbors(i);
+            let ws = self.graph.neighbor_weights(i);
+            for (k, &j) in nbrs.iter().enumerate() {
+                if (j as usize) > i && x[i] != x[j as usize] {
+                    cut += ws.map_or(1.0, |w| w[k]) as f64;
+                }
+            }
+        }
+        cut
+    }
+}
+
+impl EnergyModel for MaxCutModel {
+    fn num_vars(&self) -> usize {
+        self.graph.num_nodes()
+    }
+
+    fn num_states(&self, _i: usize) -> usize {
+        2
+    }
+
+    fn interaction(&self) -> &Graph {
+        &self.graph
+    }
+
+    fn local_energies(&self, x: &[u32], i: usize, out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(2, 0.0);
+        let nbrs = self.graph.neighbors(i);
+        let ws = self.graph.neighbor_weights(i);
+        // Energy contribution of node i on side b: -Σ_j w_ij [b ≠ x_j]
+        let mut e0 = 0.0f32;
+        let mut e1 = 0.0f32;
+        for (k, &j) in nbrs.iter().enumerate() {
+            let w = ws.map_or(1.0, |w| w[k]);
+            if x[j as usize] == 0 {
+                e1 -= w;
+            } else {
+                e0 -= w;
+            }
+        }
+        out[0] = e0;
+        out[1] = e1;
+    }
+
+    fn energy(&self, x: &[u32]) -> f64 {
+        -self.cut_weight(x)
+    }
+
+    fn objective(&self, x: &[u32]) -> f64 {
+        self.cut_weight(x)
+    }
+
+    fn best_known(&self) -> Option<f64> {
+        self.best_known
+    }
+
+    fn delta_energy(&self, x: &[u32], i: usize, s: u32, _scratch: &mut Vec<f32>) -> f32 {
+        if s == x[i] {
+            return 0.0;
+        }
+        // Flipping i toggles every incident edge's cut membership.
+        let nbrs = self.graph.neighbors(i);
+        let ws = self.graph.neighbor_weights(i);
+        let mut delta = 0.0f32;
+        for (k, &j) in nbrs.iter().enumerate() {
+            let w = ws.map_or(1.0, |w| w[k]);
+            if x[j as usize] == x[i] {
+                delta -= w; // becomes cut: energy down
+            } else {
+                delta += w; // leaves cut: energy up
+            }
+        }
+        delta
+    }
+
+    fn update_cost(&self, i: usize) -> OpCost {
+        let d = self.graph.degree(i) as u64;
+        OpCost {
+            ops: 2 * d + 2,
+            bytes: 4 * (2 * d + 1), // neighbor states + weights + write-back
+            samples: 1,
+        }
+    }
+
+    fn neighbor_words(&self, i: usize) -> usize {
+        // Neighbor side bits + edge weights.
+        2 * self.graph.degree(i)
+    }
+
+    fn param_words_per_state(&self, _i: usize) -> usize {
+        0
+    }
+}
+
+/// Maximum Independent Set with quadratic penalty:
+/// `E(x) = -Σ_i x_i + λ Σ_{(i,j)∈E} x_i x_j`, `x_i ∈ {0,1}`.
+#[derive(Clone, Debug)]
+pub struct MisModel {
+    graph: Graph,
+    penalty: f32,
+    best_known: Option<f64>,
+}
+
+impl MisModel {
+    /// `penalty` (λ) must exceed 1 for the optimum to be a valid
+    /// independent set; DISCS uses λ ≈ 1.0–2.0.
+    pub fn new(graph: Graph, penalty: f32, best_known: Option<f64>) -> MisModel {
+        assert!(penalty > 1.0, "penalty must exceed 1");
+        MisModel {
+            graph,
+            penalty,
+            best_known,
+        }
+    }
+
+    /// Number of selected vertices.
+    pub fn set_size(&self, x: &[u32]) -> usize {
+        x.iter().filter(|&&v| v == 1).count()
+    }
+
+    /// Number of violated edges (both endpoints selected).
+    pub fn violations(&self, x: &[u32]) -> usize {
+        let mut v = 0;
+        for i in 0..self.graph.num_nodes() {
+            if x[i] == 1 {
+                for &j in self.graph.neighbors(i) {
+                    if (j as usize) > i && x[j as usize] == 1 {
+                        v += 1;
+                    }
+                }
+            }
+        }
+        v
+    }
+}
+
+impl EnergyModel for MisModel {
+    fn num_vars(&self) -> usize {
+        self.graph.num_nodes()
+    }
+
+    fn num_states(&self, _i: usize) -> usize {
+        2
+    }
+
+    fn interaction(&self) -> &Graph {
+        &self.graph
+    }
+
+    fn local_energies(&self, x: &[u32], i: usize, out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(2, 0.0);
+        let selected_nbrs = self
+            .graph
+            .neighbors(i)
+            .iter()
+            .filter(|&&j| x[j as usize] == 1)
+            .count() as f32;
+        out[0] = 0.0;
+        out[1] = -1.0 + self.penalty * selected_nbrs;
+    }
+
+    fn param_words_per_state(&self, _i: usize) -> usize {
+        0
+    }
+
+    fn energy(&self, x: &[u32]) -> f64 {
+        -(self.set_size(x) as f64) + self.penalty as f64 * self.violations(x) as f64
+    }
+
+    /// Objective: penalized set size (matches DISCS's reported metric).
+    fn objective(&self, x: &[u32]) -> f64 {
+        self.set_size(x) as f64 - self.penalty as f64 * self.violations(x) as f64
+    }
+
+    fn best_known(&self) -> Option<f64> {
+        self.best_known
+    }
+
+    fn delta_energy(&self, x: &[u32], i: usize, s: u32, scratch: &mut Vec<f32>) -> f32 {
+        if s == x[i] {
+            return 0.0;
+        }
+        self.local_energies(x, i, scratch);
+        scratch[s as usize] - scratch[x[i] as usize]
+    }
+}
+
+/// MaxClique reduced to MIS on the complement graph: a clique in `G` is
+/// an independent set in `Ḡ`.
+#[derive(Clone, Debug)]
+pub struct MaxCliqueModel {
+    /// MIS model over the complement graph.
+    inner: MisModel,
+    /// The original graph (for clique validation / reporting).
+    original: Graph,
+}
+
+impl MaxCliqueModel {
+    /// Build from the original graph.
+    pub fn new(graph: Graph, penalty: f32, best_known: Option<f64>) -> MaxCliqueModel {
+        let complement = graph.complement();
+        MaxCliqueModel {
+            inner: MisModel::new(complement, penalty, best_known),
+            original: graph,
+        }
+    }
+
+    /// Size of the selected set.
+    pub fn clique_size(&self, x: &[u32]) -> usize {
+        self.inner.set_size(x)
+    }
+
+    /// True if the selected vertices form a clique in the original graph.
+    pub fn is_clique(&self, x: &[u32]) -> bool {
+        let sel: Vec<usize> = (0..x.len()).filter(|&i| x[i] == 1).collect();
+        sel.iter().enumerate().all(|(a, &i)| {
+            sel[a + 1..].iter().all(|&j| self.original.has_edge(i, j))
+        })
+    }
+
+    /// The original (un-complemented) graph.
+    pub fn original_graph(&self) -> &Graph {
+        &self.original
+    }
+}
+
+impl EnergyModel for MaxCliqueModel {
+    fn num_vars(&self) -> usize {
+        self.inner.num_vars()
+    }
+
+    fn num_states(&self, i: usize) -> usize {
+        self.inner.num_states(i)
+    }
+
+    fn interaction(&self) -> &Graph {
+        self.inner.interaction()
+    }
+
+    fn local_energies(&self, x: &[u32], i: usize, out: &mut Vec<f32>) {
+        self.inner.local_energies(x, i, out)
+    }
+
+    fn energy(&self, x: &[u32]) -> f64 {
+        self.inner.energy(x)
+    }
+
+    fn objective(&self, x: &[u32]) -> f64 {
+        self.inner.objective(x)
+    }
+
+    fn best_known(&self) -> Option<f64> {
+        self.inner.best_known()
+    }
+
+    fn update_cost(&self, i: usize) -> OpCost {
+        self.inner.update_cost(i)
+    }
+
+    fn delta_energy(&self, x: &[u32], i: usize, s: u32, scratch: &mut Vec<f32>) -> f32 {
+        self.inner.delta_energy(x, i, s, scratch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::testutil::check_local_consistency;
+    use crate::energy::random_state;
+    use crate::graph::{erdos_renyi_with_edges, Graph};
+    use crate::rng::Rng;
+
+    fn path4() -> Graph {
+        Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3)], None)
+    }
+
+    #[test]
+    fn maxcut_path_optimum() {
+        let m = MaxCutModel::new(path4(), Some(3.0));
+        assert_eq!(m.cut_weight(&[0, 1, 0, 1]), 3.0);
+        assert_eq!(m.energy(&[0, 1, 0, 1]), -3.0);
+        assert_eq!(m.cut_weight(&[0, 0, 0, 0]), 0.0);
+    }
+
+    #[test]
+    fn maxcut_weighted() {
+        let g = Graph::from_edges(3, &[(0, 1), (1, 2)], Some(&[2.0, 5.0]));
+        let m = MaxCutModel::new(g, None);
+        assert_eq!(m.cut_weight(&[0, 1, 0]), 7.0);
+        assert_eq!(m.cut_weight(&[0, 0, 1]), 5.0);
+    }
+
+    #[test]
+    fn maxcut_local_and_delta_consistent() {
+        let g = erdos_renyi_with_edges(30, 90, 17);
+        let m = MaxCutModel::new(g, None);
+        let mut rng = Rng::new(4);
+        let x = random_state(&m, &mut rng);
+        check_local_consistency(&m, &x, 1e-4);
+        let mut scratch = Vec::new();
+        for i in 0..m.num_vars() {
+            let d = m.delta_energy(&x, i, 1 - x[i], &mut scratch);
+            let mut y = x.clone();
+            y[i] = 1 - x[i];
+            let want = (m.energy(&y) - m.energy(&x)) as f32;
+            assert!((d - want).abs() < 1e-4, "i={i} {d} vs {want}");
+        }
+    }
+
+    #[test]
+    fn mis_penalty_beats_violation() {
+        let m = MisModel::new(path4(), 1.5, None);
+        // Selecting adjacent 1,2 is penalized below selecting {0,2}.
+        assert!(m.energy(&[1, 0, 1, 0]) < m.energy(&[0, 1, 1, 0]));
+        // Optimal independent set {0,2} (or {1,3} or {0,3}): size 2.
+        assert_eq!(m.energy(&[1, 0, 1, 0]), -2.0);
+        assert_eq!(m.violations(&[0, 1, 1, 0]), 1);
+    }
+
+    #[test]
+    fn mis_local_consistent() {
+        let g = erdos_renyi_with_edges(25, 60, 23);
+        let m = MisModel::new(g, 1.5, None);
+        let mut rng = Rng::new(6);
+        let x = random_state(&m, &mut rng);
+        check_local_consistency(&m, &x, 1e-4);
+    }
+
+    #[test]
+    fn clique_is_complement_mis() {
+        // Triangle + pendant: max clique {0,1,2}.
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (0, 2), (2, 3)], None);
+        let m = MaxCliqueModel::new(g, 1.5, Some(3.0));
+        let x = [1, 1, 1, 0];
+        assert!(m.is_clique(&x));
+        assert_eq!(m.clique_size(&x), 3);
+        assert_eq!(m.energy(&x), -3.0);
+        // {1,2,3} is not a clique (1-3 missing) and is penalized.
+        let bad = [0, 1, 1, 1];
+        assert!(!m.is_clique(&bad));
+        assert!(m.energy(&bad) > m.energy(&x));
+    }
+
+    #[test]
+    fn clique_local_consistent() {
+        let g = erdos_renyi_with_edges(20, 80, 31);
+        let m = MaxCliqueModel::new(g, 1.5, None);
+        let mut rng = Rng::new(8);
+        let x = random_state(&m, &mut rng);
+        check_local_consistency(&m, &x, 1e-4);
+    }
+}

@@ -1,0 +1,157 @@
+//! Discrete energy models.
+//!
+//! Every workload in the paper (Table I) is an energy function
+//! `E(x) = -log P(x) · 1/β` over a vector of discrete random variables.
+//! The MCMC algorithms ([`crate::mcmc`]), the op-count profiler behind
+//! Fig. 5, the roofline model, and the hardware compiler all consume the
+//! same [`EnergyModel`] trait, so a new application plugs into the whole
+//! co-design flow by implementing one trait.
+
+mod bayesnet;
+mod cop;
+mod potts;
+mod rbm;
+
+pub use bayesnet::{BayesNet, Cpt};
+pub use cop::{MaxCliqueModel, MaxCutModel, MisModel};
+pub use potts::PottsGrid;
+pub use rbm::Rbm;
+
+use crate::graph::Graph;
+
+/// Per-RV-update hardware cost of evaluating the conditional energy
+/// distribution, used by the Fig. 5 profiler and the roofline model.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct OpCost {
+    /// Arithmetic ops (adds/mults) to build the conditional distribution.
+    pub ops: u64,
+    /// Bytes moved from state/parameter memory.
+    pub bytes: u64,
+    /// Number of categorical samples drawn.
+    pub samples: u64,
+}
+
+impl OpCost {
+    /// Component-wise accumulation.
+    pub fn add(&mut self, other: OpCost) {
+        self.ops += other.ops;
+        self.bytes += other.bytes;
+        self.samples += other.samples;
+    }
+}
+
+/// A discrete energy model: the target distribution is
+/// `P(x) ∝ exp(-β E(x))` over assignment vectors `x` with
+/// `x[i] ∈ [0, num_states(i))`.
+pub trait EnergyModel: Send + Sync {
+    /// Number of random variables.
+    fn num_vars(&self) -> usize;
+
+    /// Cardinality of RV `i`.
+    fn num_states(&self, i: usize) -> usize;
+
+    /// The interaction graph: RV `i`'s Markov blanket is exactly its
+    /// neighborhood here. Block Gibbs colors this graph; the hardware
+    /// compiler uses it for crossbar routing and RF-bank placement.
+    fn interaction(&self) -> &Graph;
+
+    /// Conditional (local) energies of RV `i`: fills `out[s]` with the
+    /// energy of the assignment `x` modified so `x[i] = s`, **up to an
+    /// additive constant shared across `s`** (constants cancel in the
+    /// conditional distribution). `out` is resized to `num_states(i)`.
+    fn local_energies(&self, x: &[u32], i: usize, out: &mut Vec<f32>);
+
+    /// Total energy of assignment `x`.
+    fn energy(&self, x: &[u32]) -> f64;
+
+    /// Application-level objective (higher is better), e.g. cut weight
+    /// for MaxCut or set size for MIS. Defaults to `-E(x)`.
+    fn objective(&self, x: &[u32]) -> f64 {
+        -self.energy(x)
+    }
+
+    /// Best known objective for this instance, when available — used to
+    /// report the "accuracy" metric of Fig. 5 (objective / best-known).
+    fn best_known(&self) -> Option<f64> {
+        None
+    }
+
+    /// Hardware cost of one conditional-distribution evaluation + sample
+    /// for RV `i` (paper §II-C's three steps). The default derives it
+    /// from the Markov-blanket size: for each of the `S` candidate
+    /// states, one weighted term per neighbor plus the unary term, all
+    /// f32 (4-byte) traffic, one categorical sample per update.
+    fn update_cost(&self, i: usize) -> OpCost {
+        let s = self.num_states(i) as u64;
+        let d = self.interaction().degree(i) as u64;
+        OpCost {
+            // per state: d multiply-accumulates + 1 unary add
+            ops: s * (2 * d + 1),
+            // read d neighbor states + per-state parameters + write 1 state
+            bytes: 4 * (d + s * (d + 1) + 1),
+            samples: 1,
+        }
+    }
+
+    /// Energy delta of setting `x[i] = s` (positive = uphill). Default
+    /// computes it from [`EnergyModel::local_energies`]; models with
+    /// cheap incremental structure (Ising, MaxCut) override this.
+    fn delta_energy(&self, x: &[u32], i: usize, s: u32, scratch: &mut Vec<f32>) -> f32 {
+        self.local_energies(x, i, scratch);
+        scratch[s as usize] - scratch[x[i] as usize]
+    }
+
+    // ---- hardware-compiler hints (memory layout of one RV update) ----
+
+    /// 32-bit words that must be fetched once per update of RV `i`
+    /// regardless of the candidate state (neighbor values, and for
+    /// weighted models the edge weights). Default: one word per
+    /// Markov-blanket neighbor.
+    fn neighbor_words(&self, i: usize) -> usize {
+        self.interaction().degree(i)
+    }
+
+    /// Additional 32-bit words fetched **per candidate state** (unary
+    /// potentials, CPT entries). Default: 1 (one parameter per state).
+    fn param_words_per_state(&self, _i: usize) -> usize {
+        1
+    }
+}
+
+/// Convenience: a deterministic initial assignment (all zeros).
+pub fn zero_state(model: &dyn EnergyModel) -> Vec<u32> {
+    vec![0; model.num_vars()]
+}
+
+/// Convenience: a uniformly random assignment.
+pub fn random_state(model: &dyn EnergyModel, rng: &mut crate::rng::Rng) -> Vec<u32> {
+    (0..model.num_vars())
+        .map(|i| rng.below(model.num_states(i)) as u32)
+        .collect()
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+
+    /// Exhaustively check that `local_energies` differences agree with
+    /// full-energy differences for every var/state on small models.
+    pub fn check_local_consistency(model: &dyn EnergyModel, x: &[u32], tol: f32) {
+        let mut out = Vec::new();
+        let base = model.energy(x);
+        for i in 0..model.num_vars() {
+            model.local_energies(x, i, &mut out);
+            let cur = out[x[i] as usize];
+            for s in 0..model.num_states(i) as u32 {
+                let mut y = x.to_vec();
+                y[i] = s;
+                let want = (model.energy(&y) - base) as f32;
+                let got = out[s as usize] - cur;
+                assert!(
+                    (want - got).abs() <= tol * (1.0 + want.abs()),
+                    "var {i} state {s}: local diff {got} vs full diff {want}"
+                );
+            }
+        }
+    }
+}

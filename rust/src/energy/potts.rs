@@ -1,0 +1,243 @@
+//! Potts / Ising models on a 2D grid.
+//!
+//! The paper's MRF image-segmentation workload (Table I: 150 k nodes,
+//! 600 k edges) and the Fig. 6 Ising roofline example both live here.
+//! With `num_labels == 2` and no unary term this is the standard Ising
+//! model; with `L` labels and per-pixel unary potentials it is the
+//! image-segmentation MRF of Fig. 3.
+
+use super::{EnergyModel, OpCost};
+use crate::graph::{grid_2d_conn, Graph};
+
+/// A Potts model on an `h × w` 4-neighbor grid.
+///
+/// Energy:
+/// `E(x) = Σ_i unary[i][x_i] - coupling · Σ_{(i,j)∈E} [x_i == x_j]`
+///
+/// (`coupling > 0` is ferromagnetic / smoothing, the image-segmentation
+/// setting).
+#[derive(Clone, Debug)]
+pub struct PottsGrid {
+    h: usize,
+    w: usize,
+    num_labels: usize,
+    coupling: f32,
+    /// Row-major per-node unary potentials, `unary[i * L + s]`; empty ⇒ 0.
+    unary: Vec<f32>,
+    graph: Graph,
+}
+
+impl PottsGrid {
+    /// Pure Potts/Ising grid (4-neighborhood) without unary terms.
+    pub fn new(h: usize, w: usize, num_labels: usize, coupling: f32) -> PottsGrid {
+        Self::with_connectivity(h, w, num_labels, coupling, false)
+    }
+
+    /// Potts grid with selectable 4-/8-neighborhood (the Table I
+    /// image-segmentation MRF is 8-connected).
+    pub fn with_connectivity(
+        h: usize,
+        w: usize,
+        num_labels: usize,
+        coupling: f32,
+        eight: bool,
+    ) -> PottsGrid {
+        assert!(num_labels >= 2);
+        PottsGrid {
+            h,
+            w,
+            num_labels,
+            coupling,
+            unary: Vec::new(),
+            graph: grid_2d_conn(h, w, eight),
+        }
+    }
+
+    /// Image-segmentation MRF: unary data terms per pixel per label.
+    pub fn with_unary(
+        h: usize,
+        w: usize,
+        num_labels: usize,
+        coupling: f32,
+        unary: Vec<f32>,
+    ) -> PottsGrid {
+        assert_eq!(unary.len(), h * w * num_labels);
+        let mut g = PottsGrid::new(h, w, num_labels, coupling);
+        g.unary = unary;
+        g
+    }
+
+    /// Attach (or replace) unary data terms after construction.
+    pub fn set_unary(&mut self, unary: Vec<f32>) {
+        assert_eq!(unary.len(), self.h * self.w * self.num_labels);
+        self.unary = unary;
+    }
+
+    /// Grid height.
+    pub fn height(&self) -> usize {
+        self.h
+    }
+
+    /// Grid width.
+    pub fn width(&self) -> usize {
+        self.w
+    }
+
+    /// Pairwise coupling strength.
+    pub fn coupling(&self) -> f32 {
+        self.coupling
+    }
+
+    #[inline]
+    fn unary_at(&self, i: usize, s: usize) -> f32 {
+        if self.unary.is_empty() {
+            0.0
+        } else {
+            self.unary[i * self.num_labels + s]
+        }
+    }
+}
+
+impl EnergyModel for PottsGrid {
+    fn num_vars(&self) -> usize {
+        self.h * self.w
+    }
+
+    fn num_states(&self, _i: usize) -> usize {
+        self.num_labels
+    }
+
+    fn interaction(&self) -> &Graph {
+        &self.graph
+    }
+
+    fn local_energies(&self, x: &[u32], i: usize, out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(self.num_labels, 0.0);
+        for (s, e) in out.iter_mut().enumerate() {
+            *e = self.unary_at(i, s);
+        }
+        // -coupling for every agreeing neighbor.
+        for &nb in self.graph.neighbors(i) {
+            let lbl = x[nb as usize] as usize;
+            out[lbl] -= self.coupling;
+        }
+    }
+
+    fn energy(&self, x: &[u32]) -> f64 {
+        let mut e = 0.0f64;
+        for i in 0..self.num_vars() {
+            e += self.unary_at(i, x[i] as usize) as f64;
+            for &nb in self.graph.neighbors(i) {
+                if nb as usize > i && x[nb as usize] == x[i] {
+                    e -= self.coupling as f64;
+                }
+            }
+        }
+        e
+    }
+
+    fn update_cost(&self, i: usize) -> OpCost {
+        // Fig. 6(c)'s Ising accounting: read 4 neighbor values, ~10 ops
+        // to build the distribution, 1 sample. Generalized to L labels
+        // and boundary degrees.
+        let d = self.graph.degree(i) as u64;
+        let l = self.num_labels as u64;
+        OpCost {
+            ops: d + 2 * l, // neighbor agreement adds + per-label unary & β-scale
+            bytes: 4 * (d + 1) + if self.unary.is_empty() { 0 } else { 4 * l },
+            samples: 1,
+        }
+    }
+
+    fn param_words_per_state(&self, _i: usize) -> usize {
+        // Pure Potts couplings are a single registered constant; only
+        // the image-segmentation variant streams per-label unary terms.
+        if self.unary.is_empty() {
+            0
+        } else {
+            1
+        }
+    }
+
+    fn delta_energy(&self, x: &[u32], i: usize, s: u32, _scratch: &mut Vec<f32>) -> f32 {
+        let cur = x[i];
+        if s == cur {
+            return 0.0;
+        }
+        let mut agree_new = 0u32;
+        let mut agree_cur = 0u32;
+        for &nb in self.graph.neighbors(i) {
+            let lbl = x[nb as usize];
+            agree_new += (lbl == s) as u32;
+            agree_cur += (lbl == cur) as u32;
+        }
+        self.unary_at(i, s as usize) - self.unary_at(i, cur as usize)
+            - self.coupling * (agree_new as f32 - agree_cur as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::testutil::check_local_consistency;
+    use crate::energy::random_state;
+    use crate::rng::Rng;
+
+    #[test]
+    fn ising_ground_state_energy() {
+        // 3x3 ferromagnetic Ising: all-equal labels minimize energy.
+        let m = PottsGrid::new(3, 3, 2, 1.0);
+        let uniform = vec![0u32; 9];
+        assert_eq!(m.energy(&uniform), -12.0); // 12 grid edges all agree
+        let mut checker = vec![0u32; 9];
+        for (i, v) in checker.iter_mut().enumerate() {
+            *v = ((i / 3 + i % 3) % 2) as u32;
+        }
+        assert_eq!(m.energy(&checker), 0.0); // no agreeing edges
+    }
+
+    #[test]
+    fn local_energies_consistent_with_full() {
+        let m = PottsGrid::new(4, 3, 3, 0.7);
+        let mut rng = Rng::new(1);
+        let x = random_state(&m, &mut rng);
+        check_local_consistency(&m, &x, 1e-5);
+    }
+
+    #[test]
+    fn local_energies_with_unary_consistent() {
+        let mut rng = Rng::new(2);
+        let unary: Vec<f32> = (0..4 * 4 * 2).map(|_| rng.uniform_f32() * 3.0).collect();
+        let m = PottsGrid::with_unary(4, 4, 2, 0.5, unary);
+        let x = random_state(&m, &mut rng);
+        check_local_consistency(&m, &x, 1e-4);
+    }
+
+    #[test]
+    fn delta_energy_matches_local() {
+        let m = PottsGrid::new(5, 5, 4, 1.3);
+        let mut rng = Rng::new(3);
+        let x = random_state(&m, &mut rng);
+        let mut scratch = Vec::new();
+        for i in 0..m.num_vars() {
+            m.local_energies(&x, i, &mut scratch);
+            let cur = scratch[x[i] as usize];
+            let locals = scratch.clone();
+            for s in 0..4u32 {
+                let d = m.delta_energy(&x, i, s, &mut scratch);
+                assert!((d - (locals[s as usize] - cur)).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn update_cost_interior_matches_fig6() {
+        let m = PottsGrid::new(8, 8, 2, 1.0);
+        // interior node id: row 3, col 3
+        let c = m.update_cost(3 * 8 + 3);
+        assert_eq!(c.samples, 1);
+        assert_eq!(c.bytes, 4 * 5); // 4 neighbors + 1 state write
+        assert!(c.ops >= 8); // ~10 in the paper's accounting
+    }
+}

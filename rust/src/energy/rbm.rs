@@ -1,0 +1,244 @@
+//! Restricted Boltzmann Machine (binary units).
+//!
+//! Table I's EBM workload: a binary RBM with 784 visible and 25 hidden
+//! units (809 RVs, ~19.6 k edges — the bipartite connection graph).
+//! `E(v, h) = -a·v - b·h - vᵀ W h`. The bipartite structure 2-colors,
+//! so Block Gibbs alternates full visible / hidden sweeps; PAS treats
+//! all 809 units uniformly.
+
+use super::{EnergyModel, OpCost};
+use crate::graph::Graph;
+use crate::rng::Rng;
+
+/// Binary RBM over `nv` visible + `nh` hidden units. RV ids `0..nv` are
+/// visible, `nv..nv+nh` hidden.
+#[derive(Clone, Debug)]
+pub struct Rbm {
+    nv: usize,
+    nh: usize,
+    /// Weights, row-major `w[i * nh + j]` connecting visible i, hidden j.
+    w: Vec<f32>,
+    /// Visible biases.
+    a: Vec<f32>,
+    /// Hidden biases.
+    b: Vec<f32>,
+    graph: Graph,
+}
+
+impl Rbm {
+    /// Build from explicit parameters.
+    pub fn new(nv: usize, nh: usize, w: Vec<f32>, a: Vec<f32>, b: Vec<f32>) -> Rbm {
+        assert_eq!(w.len(), nv * nh);
+        assert_eq!(a.len(), nv);
+        assert_eq!(b.len(), nh);
+        let mut edges = Vec::with_capacity(nv * nh);
+        for i in 0..nv as u32 {
+            for j in 0..nh as u32 {
+                edges.push((i, nv as u32 + j));
+            }
+        }
+        let graph = Graph::from_edges(nv + nh, &edges, None);
+        Rbm {
+            nv,
+            nh,
+            w,
+            a,
+            b,
+            graph,
+        }
+    }
+
+    /// A deterministic "trained-like" RBM: weights are a low-rank
+    /// stripe structure plus noise, giving a multi-modal energy
+    /// landscape comparable to an MNIST-trained model (DESIGN.md §4).
+    pub fn synthetic(nv: usize, nh: usize, seed: u64) -> Rbm {
+        let mut rng = Rng::new(seed);
+        let mut w = vec![0.0f32; nv * nh];
+        for i in 0..nv {
+            for j in 0..nh {
+                // Stripe: each hidden unit prefers a contiguous band of
+                // visibles (like stroke detectors), scaled ~N(0, 0.3).
+                let band = (i * nh) / nv;
+                let structure = if band == j { 1.2 } else { -0.1 };
+                let noise = (rng.uniform_f32() - 0.5) * 0.6;
+                w[i * nh + j] = structure + noise;
+            }
+        }
+        let a: Vec<f32> = (0..nv).map(|_| (rng.uniform_f32() - 0.7) * 0.5).collect();
+        let b: Vec<f32> = (0..nh).map(|_| (rng.uniform_f32() - 0.5) * 0.2).collect();
+        Rbm::new(nv, nh, w, a, b)
+    }
+
+    /// Number of visible units.
+    pub fn num_visible(&self) -> usize {
+        self.nv
+    }
+
+    /// Number of hidden units.
+    pub fn num_hidden(&self) -> usize {
+        self.nh
+    }
+
+    /// Pre-activation of hidden j given visible assignment.
+    fn hidden_field(&self, x: &[u32], j: usize) -> f32 {
+        let mut f = self.b[j];
+        for i in 0..self.nv {
+            if x[i] == 1 {
+                f += self.w[i * self.nh + j];
+            }
+        }
+        f
+    }
+
+    /// Pre-activation of visible i given hidden assignment.
+    fn visible_field(&self, x: &[u32], i: usize) -> f32 {
+        let mut f = self.a[i];
+        let h = &x[self.nv..];
+        for (j, &hj) in h.iter().enumerate() {
+            if hj == 1 {
+                f += self.w[i * self.nh + j];
+            }
+        }
+        f
+    }
+}
+
+impl EnergyModel for Rbm {
+    fn num_vars(&self) -> usize {
+        self.nv + self.nh
+    }
+
+    fn num_states(&self, _i: usize) -> usize {
+        2
+    }
+
+    fn interaction(&self) -> &Graph {
+        &self.graph
+    }
+
+    fn local_energies(&self, x: &[u32], i: usize, out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(2, 0.0);
+        let field = if i < self.nv {
+            self.visible_field(x, i)
+        } else {
+            self.hidden_field(x, i - self.nv)
+        };
+        // E contribution of unit=1 is -field; unit=0 contributes 0.
+        out[0] = 0.0;
+        out[1] = -field;
+    }
+
+    fn energy(&self, x: &[u32]) -> f64 {
+        let (v, h) = x.split_at(self.nv);
+        let mut e = 0.0f64;
+        for (i, &vi) in v.iter().enumerate() {
+            if vi == 1 {
+                e -= self.a[i] as f64;
+                for (j, &hj) in h.iter().enumerate() {
+                    if hj == 1 {
+                        e -= self.w[i * self.nh + j] as f64;
+                    }
+                }
+            }
+        }
+        for (j, &hj) in h.iter().enumerate() {
+            if hj == 1 {
+                e -= self.b[j] as f64;
+            }
+        }
+        e
+    }
+
+    fn update_cost(&self, i: usize) -> OpCost {
+        let d = if i < self.nv { self.nh } else { self.nv } as u64;
+        OpCost {
+            ops: 2 * d + 2,
+            bytes: 4 * (2 * d + 1),
+            samples: 1,
+        }
+    }
+
+    fn neighbor_words(&self, i: usize) -> usize {
+        // Opposite-layer unit values + the connecting weight row.
+        2 * self.interaction().degree(i)
+    }
+
+    fn param_words_per_state(&self, _i: usize) -> usize {
+        0
+    }
+
+    fn delta_energy(&self, x: &[u32], i: usize, s: u32, _scratch: &mut Vec<f32>) -> f32 {
+        if s == x[i] {
+            return 0.0;
+        }
+        let field = if i < self.nv {
+            self.visible_field(x, i)
+        } else {
+            self.hidden_field(x, i - self.nv)
+        };
+        if s == 1 {
+            -field
+        } else {
+            field
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::testutil::check_local_consistency;
+    use crate::energy::random_state;
+
+    #[test]
+    fn energy_by_hand() {
+        // 2 visible, 1 hidden; only v0 & h on.
+        let rbm = Rbm::new(2, 1, vec![0.5, -0.3], vec![0.1, 0.2], vec![0.4]);
+        let x = [1, 0, 1];
+        // E = -a0 - b0 - w00 = -0.1 - 0.4 - 0.5
+        assert!((rbm.energy(&x) + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bipartite_interaction() {
+        let rbm = Rbm::synthetic(6, 3, 1);
+        let g = rbm.interaction();
+        assert_eq!(g.num_edges(), 18);
+        // no visible-visible edges
+        assert!(!g.has_edge(0, 1));
+        assert!(g.has_edge(0, 6));
+    }
+
+    #[test]
+    fn local_consistent() {
+        let rbm = Rbm::synthetic(8, 4, 3);
+        let mut rng = Rng::new(5);
+        let x = random_state(&rbm, &mut rng);
+        check_local_consistency(&rbm, &x, 1e-4);
+    }
+
+    #[test]
+    fn delta_matches_full_energy() {
+        let rbm = Rbm::synthetic(10, 5, 7);
+        let mut rng = Rng::new(9);
+        let x = random_state(&rbm, &mut rng);
+        let mut scratch = Vec::new();
+        for i in 0..rbm.num_vars() {
+            let s = 1 - x[i];
+            let d = rbm.delta_energy(&x, i, s, &mut scratch);
+            let mut y = x.clone();
+            y[i] = s;
+            let want = (rbm.energy(&y) - rbm.energy(&x)) as f32;
+            assert!((d - want).abs() < 1e-4, "i={i}");
+        }
+    }
+
+    #[test]
+    fn table1_scale() {
+        // Table I: 809 nodes, ~19k edges for RBM-784x25.
+        let rbm = Rbm::synthetic(784, 25, 42);
+        assert_eq!(rbm.num_vars(), 809);
+        assert_eq!(rbm.interaction().num_edges(), 784 * 25);
+    }
+}

@@ -1,0 +1,218 @@
+//! Deterministic graph generators for the Table I workload suite.
+//!
+//! The paper uses instances from Satlib (ER-style MIS graphs), a Twitter
+//! snapshot (MaxClique) and the Optsicom set (MaxCut). Those exact files
+//! are not redistributable here, so each generator reproduces the node /
+//! edge counts and degree statistics of Table I deterministically from a
+//! seed (see DESIGN.md §4 Substitutions).
+
+use super::Graph;
+use crate::rng::Rng;
+
+/// Erdős–Rényi graph with an *exact* edge count: sample distinct pairs
+/// uniformly until `m` edges are placed. Matches Table I rows like
+/// ER-1347 with 5978 edges.
+pub fn erdos_renyi_with_edges(n: usize, m: usize, seed: u64) -> Graph {
+    assert!(m <= n * (n - 1) / 2, "too many edges requested");
+    let mut rng = Rng::new(seed);
+    let mut chosen = std::collections::HashSet::with_capacity(m * 2);
+    let mut edges = Vec::with_capacity(m);
+    while edges.len() < m {
+        let a = rng.below(n) as u32;
+        let b = rng.below(n) as u32;
+        if a == b {
+            continue;
+        }
+        let key = if a < b { (a, b) } else { (b, a) };
+        if chosen.insert(key) {
+            edges.push(key);
+        }
+    }
+    Graph::from_edges(n, &edges, None)
+}
+
+/// Power-law-ish social graph via preferential attachment, then random
+/// extra edges to hit the exact target edge count. Used for the Twitter
+/// MaxClique workload (247 nodes / 12 174 edges — dense, heavy-tailed).
+pub fn power_law_graph(n: usize, m: usize, seed: u64) -> Graph {
+    assert!(n >= 3 && m <= n * (n - 1) / 2);
+    let mut rng = Rng::new(seed);
+    let mut chosen = std::collections::HashSet::with_capacity(m * 2);
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(m);
+    // Endpoint pool realizes preferential attachment: nodes appear once
+    // per incident edge, so the chance of attracting a new edge is
+    // proportional to the current degree.
+    let mut pool: Vec<u32> = vec![0, 1, 2, 0, 1, 2];
+    let add = |a: u32, b: u32, chosen: &mut std::collections::HashSet<(u32, u32)>,
+                   edges: &mut Vec<(u32, u32)>, pool: &mut Vec<u32>| {
+        if a == b {
+            return false;
+        }
+        let key = if a < b { (a, b) } else { (b, a) };
+        if chosen.insert(key) {
+            edges.push(key);
+            pool.push(a);
+            pool.push(b);
+            true
+        } else {
+            false
+        }
+    };
+    add(0, 1, &mut chosen, &mut edges, &mut pool);
+    add(1, 2, &mut chosen, &mut edges, &mut pool);
+    add(0, 2, &mut chosen, &mut edges, &mut pool);
+    // Attach each remaining node to ~m/n existing high-degree nodes.
+    let per_node = (m / n).max(1);
+    for v in 3..n as u32 {
+        let mut attached = 0;
+        let mut attempts = 0;
+        while attached < per_node && attempts < 50 * per_node {
+            let t = pool[rng.below(pool.len())];
+            if add(v, t, &mut chosen, &mut edges, &mut pool) {
+                attached += 1;
+            }
+            attempts += 1;
+        }
+    }
+    // Fill to the exact count with preferential pairs, falling back to
+    // uniform pairs when the pool saturates.
+    let mut stall = 0;
+    while edges.len() < m {
+        let (a, b) = if stall < 1000 {
+            (pool[rng.below(pool.len())], pool[rng.below(pool.len())])
+        } else {
+            (rng.below(n) as u32, rng.below(n) as u32)
+        };
+        if add(a, b, &mut chosen, &mut edges, &mut pool) {
+            stall = 0;
+        } else {
+            stall += 1;
+        }
+    }
+    Graph::from_edges(n, &edges, None)
+}
+
+/// 2D grid graph (4-neighborhood) of `h × w` nodes — the Ising / MRF
+/// image-segmentation substrate. Node id = `r * w + c`.
+pub fn grid_2d(h: usize, w: usize) -> Graph {
+    grid_2d_conn(h, w, false)
+}
+
+/// 2D grid with selectable 4- or 8-neighborhood. Table I's
+/// image-segmentation MRF (150 k nodes, 600 k edges) implies the
+/// 8-connected variant (~4 edges per node).
+pub fn grid_2d_conn(h: usize, w: usize, eight: bool) -> Graph {
+    let mut edges = Vec::with_capacity(if eight { 4 * h * w } else { 2 * h * w });
+    for r in 0..h {
+        for c in 0..w {
+            let id = (r * w + c) as u32;
+            if c + 1 < w {
+                edges.push((id, id + 1));
+            }
+            if r + 1 < h {
+                edges.push((id, id + w as u32));
+                if eight {
+                    if c + 1 < w {
+                        edges.push((id, id + w as u32 + 1));
+                    }
+                    if c > 0 {
+                        edges.push((id, id + w as u32 - 1));
+                    }
+                }
+            }
+        }
+    }
+    Graph::from_edges(h * w, &edges, None)
+}
+
+/// Sparse weighted graph with near-uniform degree `2m/n` and weights
+/// drawn uniformly from `weight_range` — matches the Optsicom MaxCut
+/// instances (125 nodes / 375 edges, small integer weights).
+pub fn random_regular_ish(
+    n: usize,
+    m: usize,
+    weight_range: (i32, i32),
+    seed: u64,
+) -> (Graph, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let mut chosen = std::collections::HashSet::with_capacity(m * 2);
+    let mut edges = Vec::with_capacity(m);
+    // Half the edges from a ring (guarantees connectivity + uniform base
+    // degree), the rest uniform random.
+    for i in 0..n.min(m) {
+        let a = i as u32;
+        let b = ((i + 1) % n) as u32;
+        let key = if a < b { (a, b) } else { (b, a) };
+        if chosen.insert(key) {
+            edges.push(key);
+        }
+    }
+    while edges.len() < m {
+        let a = rng.below(n) as u32;
+        let b = rng.below(n) as u32;
+        if a == b {
+            continue;
+        }
+        let key = if a < b { (a, b) } else { (b, a) };
+        if chosen.insert(key) {
+            edges.push(key);
+        }
+    }
+    let span = (weight_range.1 - weight_range.0 + 1).max(1) as usize;
+    let weights: Vec<f32> = (0..edges.len())
+        .map(|_| (weight_range.0 + rng.below(span) as i32) as f32)
+        .collect();
+    let g = Graph::from_edges(n, &edges, Some(&weights));
+    (g, weights)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn er_exact_counts() {
+        let g = erdos_renyi_with_edges(100, 300, 7);
+        assert_eq!(g.num_nodes(), 100);
+        assert_eq!(g.num_edges(), 300);
+    }
+
+    #[test]
+    fn er_deterministic() {
+        let a = erdos_renyi_with_edges(50, 100, 3);
+        let b = erdos_renyi_with_edges(50, 100, 3);
+        assert_eq!(a.neighbors, b.neighbors);
+    }
+
+    #[test]
+    fn power_law_counts_and_tail() {
+        let g = power_law_graph(247, 12_174, 11);
+        assert_eq!(g.num_nodes(), 247);
+        assert_eq!(g.num_edges(), 12_174);
+        // Heavy tail: max degree well above the mean (2m/n ≈ 98.6).
+        assert!(g.max_degree() > 130, "max_degree={}", g.max_degree());
+    }
+
+    #[test]
+    fn grid_structure() {
+        let g = grid_2d(3, 4);
+        assert_eq!(g.num_nodes(), 12);
+        assert_eq!(g.num_edges(), 3 * 3 + 2 * 4); // h*(w-1) + (h-1)*w
+        assert_eq!(g.neighbors(0), &[1, 4]);
+        assert_eq!(g.degree(5), 4); // interior node
+    }
+
+    #[test]
+    fn regular_ish_weights_in_range() {
+        let (g, _) = random_regular_ish(125, 375, (1, 10), 5);
+        assert_eq!(g.num_nodes(), 125);
+        assert_eq!(g.num_edges(), 375);
+        for i in 0..g.num_nodes() {
+            if let Some(ws) = g.neighbor_weights(i) {
+                for &w in ws {
+                    assert!((1.0..=10.0).contains(&w));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,218 @@
+//! Graph substrate: sparse undirected graphs (CSR), generators for the
+//! Table I workload suite, and the greedy coloring used by Block Gibbs
+//! to partition RVs into conditionally-independent blocks.
+
+mod coloring;
+mod generators;
+
+pub use coloring::{color_greedy, Coloring};
+pub use generators::{
+    erdos_renyi_with_edges, grid_2d, grid_2d_conn, power_law_graph, random_regular_ish,
+};
+
+/// An undirected graph in compressed-sparse-row form.
+///
+/// Node ids are `u32`; adjacency is stored sorted per node so that
+/// neighbor queries used by the energy models and the hardware compiler
+/// are cache-friendly and deterministic.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    /// CSR row offsets, length `n + 1`.
+    pub offsets: Vec<u32>,
+    /// CSR column indices (neighbor ids), length `2 * m`.
+    pub neighbors: Vec<u32>,
+    /// Optional per-edge weight aligned with `neighbors` (same weight
+    /// appears for both directions of an edge). Empty ⇒ unweighted (1.0).
+    pub weights: Vec<f32>,
+}
+
+impl Graph {
+    /// Build a graph from an edge list over `n` nodes. Duplicate edges
+    /// and self-loops are removed. Weights, when provided, must align
+    /// with `edges`.
+    pub fn from_edges(n: usize, edges: &[(u32, u32)], weights: Option<&[f32]>) -> Graph {
+        if let Some(w) = weights {
+            assert_eq!(w.len(), edges.len(), "weights must align with edges");
+        }
+        // Deduplicate (canonical low-high order), drop self loops.
+        let mut canon: Vec<(u32, u32, f32)> = edges
+            .iter()
+            .enumerate()
+            .filter(|(_, &(a, b))| a != b)
+            .map(|(i, &(a, b))| {
+                let w = weights.map_or(1.0, |w| w[i]);
+                if a < b {
+                    (a, b, w)
+                } else {
+                    (b, a, w)
+                }
+            })
+            .collect();
+        canon.sort_by_key(|&(a, b, _)| (a, b));
+        canon.dedup_by_key(|&mut (a, b, _)| (a, b));
+
+        let mut degree = vec![0u32; n];
+        for &(a, b, _) in &canon {
+            assert!((a as usize) < n && (b as usize) < n, "edge out of range");
+            degree[a as usize] += 1;
+            degree[b as usize] += 1;
+        }
+        let mut offsets = vec![0u32; n + 1];
+        for i in 0..n {
+            offsets[i + 1] = offsets[i] + degree[i];
+        }
+        let total = offsets[n] as usize;
+        let mut nbrs = vec![0u32; total];
+        let mut wts = vec![0.0f32; total];
+        let mut cursor: Vec<u32> = offsets[..n].to_vec();
+        for &(a, b, w) in &canon {
+            let ca = cursor[a as usize] as usize;
+            nbrs[ca] = b;
+            wts[ca] = w;
+            cursor[a as usize] += 1;
+            let cb = cursor[b as usize] as usize;
+            nbrs[cb] = a;
+            wts[cb] = w;
+            cursor[b as usize] += 1;
+        }
+        // Sort each adjacency run (weights follow).
+        for i in 0..n {
+            let (s, e) = (offsets[i] as usize, offsets[i + 1] as usize);
+            let mut pairs: Vec<(u32, f32)> =
+                nbrs[s..e].iter().copied().zip(wts[s..e].iter().copied()).collect();
+            pairs.sort_by_key(|&(v, _)| v);
+            for (k, (v, w)) in pairs.into_iter().enumerate() {
+                nbrs[s + k] = v;
+                wts[s + k] = w;
+            }
+        }
+        let weighted = weights.is_some();
+        Graph {
+            offsets,
+            neighbors: nbrs,
+            weights: if weighted { wts } else { Vec::new() },
+        }
+    }
+
+    /// Number of nodes.
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of undirected edges.
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.neighbors.len() / 2
+    }
+
+    /// Neighbors of node `i` (sorted).
+    #[inline]
+    pub fn neighbors(&self, i: usize) -> &[u32] {
+        &self.neighbors[self.offsets[i] as usize..self.offsets[i + 1] as usize]
+    }
+
+    /// Edge weights aligned with [`Graph::neighbors`]; `None` if unweighted.
+    #[inline]
+    pub fn neighbor_weights(&self, i: usize) -> Option<&[f32]> {
+        if self.weights.is_empty() {
+            None
+        } else {
+            Some(&self.weights[self.offsets[i] as usize..self.offsets[i + 1] as usize])
+        }
+    }
+
+    /// Degree of node `i`.
+    #[inline]
+    pub fn degree(&self, i: usize) -> usize {
+        (self.offsets[i + 1] - self.offsets[i]) as usize
+    }
+
+    /// Maximum degree over all nodes.
+    pub fn max_degree(&self) -> usize {
+        (0..self.num_nodes()).map(|i| self.degree(i)).max().unwrap_or(0)
+    }
+
+    /// True if `(a, b)` is an edge (binary search on sorted adjacency).
+    pub fn has_edge(&self, a: usize, b: usize) -> bool {
+        self.neighbors(a).binary_search(&(b as u32)).is_ok()
+    }
+
+    /// The complement graph (used to reduce MaxClique to MIS). Intended
+    /// for small/medium `n`: the Twitter workload (n = 247) complements
+    /// to ~18 k edges.
+    pub fn complement(&self) -> Graph {
+        let n = self.num_nodes();
+        let mut edges = Vec::new();
+        for a in 0..n as u32 {
+            let nbrs = self.neighbors(a as usize);
+            let mut k = 0usize;
+            for b in (a + 1)..n as u32 {
+                while k < nbrs.len() && nbrs[k] < b {
+                    k += 1;
+                }
+                if k >= nbrs.len() || nbrs[k] != b {
+                    edges.push((a, b));
+                }
+            }
+        }
+        Graph::from_edges(n, &edges, None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tri() -> Graph {
+        Graph::from_edges(4, &[(0, 1), (1, 2), (0, 2)], None)
+    }
+
+    #[test]
+    fn csr_basics() {
+        let g = tri();
+        assert_eq!(g.num_nodes(), 4);
+        assert_eq!(g.num_edges(), 3);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(3), &[] as &[u32]);
+        assert_eq!(g.degree(1), 2);
+        assert_eq!(g.max_degree(), 2);
+    }
+
+    #[test]
+    fn dedup_and_self_loops() {
+        let g = Graph::from_edges(3, &[(0, 1), (1, 0), (2, 2), (0, 1)], None);
+        assert_eq!(g.num_edges(), 1);
+        assert!(g.has_edge(0, 1));
+        assert!(!g.has_edge(2, 2));
+    }
+
+    #[test]
+    fn weights_follow_both_directions() {
+        let g = Graph::from_edges(3, &[(0, 1), (1, 2)], Some(&[2.5, -1.0]));
+        let w0 = g.neighbor_weights(0).unwrap();
+        assert_eq!(w0, &[2.5]);
+        let w1 = g.neighbor_weights(1).unwrap();
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        assert_eq!(w1, &[2.5, -1.0]);
+    }
+
+    #[test]
+    fn complement_of_triangle() {
+        let g = tri().complement();
+        // Only node 3 connects to everyone in the complement.
+        assert_eq!(g.num_edges(), 3);
+        assert_eq!(g.neighbors(3), &[0, 1, 2]);
+        assert!(!g.has_edge(0, 1));
+    }
+
+    #[test]
+    fn has_edge_symmetry() {
+        let g = tri();
+        for a in 0..4 {
+            for b in 0..4 {
+                assert_eq!(g.has_edge(a, b), g.has_edge(b, a));
+            }
+        }
+    }
+}

@@ -1,0 +1,444 @@
+//! Dense VLIW instruction encoding (Fig. 7c).
+//!
+//! "The bitwidth of each instruction field varies on hardware
+//! parameters chosen at the design time … We define a dense packing
+//! approach for this VLIW ISA to minimize the instruction memory
+//! overhead." — §V-B.
+//!
+//! [`InstrLayout`] derives every field width from a [`HwConfig`]
+//! (e.g. an RF bank id takes `ceil(log2(rf_banks))` bits) and packs
+//! instructions into a raw bit stream. Encoding and decoding round-trip
+//! exactly; the decoder validates ranges so corrupted streams fail
+//! loudly instead of mis-executing.
+
+use super::{
+    CtrlType, CuCtrl, CuMode, HwConfig, Instr, LoadSlot, MemSpace, Semantics, StoreSlot, SuCtrl,
+    SuMode, XbarRoute,
+};
+
+/// Number of bits needed to represent values in `[0, n)`.
+fn bits_for(n: usize) -> u32 {
+    if n <= 1 {
+        1
+    } else {
+        (usize::BITS - (n - 1).leading_zeros()).max(1)
+    }
+}
+
+/// Bit widths for every instruction field, derived from the hardware
+/// configuration at design time.
+#[derive(Clone, Copy, Debug)]
+pub struct InstrLayout {
+    /// Control type (3 bits — 6 values).
+    pub ctrl_bits: u32,
+    /// Memory-space selector.
+    pub mem_bits: u32,
+    /// Word address within a memory space.
+    pub addr_bits: u32,
+    /// RF bank id.
+    pub bank_bits: u32,
+    /// Register id within a bank.
+    pub reg_bits: u32,
+    /// CU lane id.
+    pub cu_lane_bits: u32,
+    /// PE input port id.
+    pub port_bits: u32,
+    /// SU lane id.
+    pub su_lane_bits: u32,
+    /// Distribution-size field.
+    pub dist_bits: u32,
+    /// Load-slot count field.
+    pub load_cnt_bits: u32,
+    /// Route count field.
+    pub route_cnt_bits: u32,
+    /// Store count field.
+    pub store_cnt_bits: u32,
+}
+
+impl InstrLayout {
+    /// Derive the layout from a hardware configuration.
+    pub fn new(hw: &HwConfig) -> InstrLayout {
+        InstrLayout {
+            ctrl_bits: 3,
+            mem_bits: 2,
+            addr_bits: 20, // 1M words per space (4 MB) — matches 4.8 MB SRAM
+            bank_bits: bits_for(hw.rf_banks),
+            reg_bits: bits_for(hw.rf_regs_per_bank),
+            cu_lane_bits: bits_for(hw.t),
+            port_bits: bits_for(1 << hw.k),
+            su_lane_bits: bits_for(hw.s),
+            dist_bits: bits_for(hw.max_dist_size + 1),
+            load_cnt_bits: bits_for(hw.bw_words + 1),
+            route_cnt_bits: bits_for(hw.t * (1 << hw.k) + 1),
+            store_cnt_bits: bits_for(hw.s + 1),
+        }
+    }
+
+    /// Bits for one load slot.
+    pub fn load_slot_bits(&self) -> u32 {
+        self.mem_bits + self.addr_bits + self.bank_bits + self.reg_bits
+    }
+
+    /// Bits for one crossbar route.
+    pub fn route_bits(&self) -> u32 {
+        self.bank_bits + self.reg_bits + self.cu_lane_bits + self.port_bits
+    }
+
+    /// Bits for one store slot.
+    pub fn store_slot_bits(&self) -> u32 {
+        self.mem_bits + self.addr_bits + self.su_lane_bits
+    }
+
+    /// Encoded size of one instruction in bits.
+    pub fn instr_bits(&self, i: &Instr) -> u64 {
+        let mut b = self.ctrl_bits as u64;
+        b += self.load_cnt_bits as u64 + i.loads.len() as u64 * self.load_slot_bits() as u64;
+        b += self.route_cnt_bits as u64 + i.routes.len() as u64 * self.route_bits() as u64;
+        b += 1; // cu present flag
+        if i.cu.is_some() {
+            b += 2 + self.cu_lane_bits as u64 + 2; // mode + lanes + scale/acc flags
+        }
+        b += 1; // su present flag
+        if i.su.is_some() {
+            b += 1 + self.su_lane_bits as u64 + self.dist_bits as u64 + 2;
+        }
+        b += self.store_cnt_bits as u64 + i.stores.len() as u64 * self.store_slot_bits() as u64;
+        b
+    }
+}
+
+/// Append-only bit writer.
+#[derive(Default)]
+struct BitWriter {
+    words: Vec<u64>,
+    bit_len: u64,
+}
+
+impl BitWriter {
+    fn push(&mut self, value: u64, bits: u32) {
+        debug_assert!(bits <= 64);
+        debug_assert!(bits == 64 || value < (1u64 << bits), "value {value} overflows {bits} bits");
+        let mut remaining = bits;
+        let mut v = value;
+        while remaining > 0 {
+            let word = (self.bit_len / 64) as usize;
+            let off = (self.bit_len % 64) as u32;
+            if word == self.words.len() {
+                self.words.push(0);
+            }
+            let take = remaining.min(64 - off);
+            let mask = if take == 64 { u64::MAX } else { (1u64 << take) - 1 };
+            self.words[word] |= (v & mask) << off;
+            v >>= take.min(63);
+            if take == 64 {
+                v = 0;
+            }
+            self.bit_len += take as u64;
+            remaining -= take;
+        }
+    }
+}
+
+/// Sequential bit reader.
+struct BitReader<'a> {
+    words: &'a [u64],
+    pos: u64,
+    bit_len: u64,
+}
+
+impl<'a> BitReader<'a> {
+    fn take(&mut self, bits: u32) -> Result<u64, String> {
+        if self.pos + bits as u64 > self.bit_len {
+            return Err("bitstream underrun".into());
+        }
+        let mut out = 0u64;
+        let mut got = 0u32;
+        while got < bits {
+            let word = (self.pos / 64) as usize;
+            let off = (self.pos % 64) as u32;
+            let take = (bits - got).min(64 - off);
+            let mask = if take == 64 { u64::MAX } else { (1u64 << take) - 1 };
+            let chunk = (self.words[word] >> off) & mask;
+            out |= chunk << got;
+            self.pos += take as u64;
+            got += take;
+        }
+        Ok(out)
+    }
+}
+
+/// An encoded instruction stream plus its exact bit length.
+#[derive(Clone, Debug)]
+pub struct EncodedProgram {
+    /// Packed little-endian bit stream.
+    pub words: Vec<u64>,
+    /// Number of valid bits.
+    pub bit_len: u64,
+    /// Number of instructions encoded.
+    pub count: usize,
+}
+
+impl InstrLayout {
+    /// Encode a sequence of instructions into a dense bit stream.
+    /// `Semantics` is compiler metadata and is *not* encoded (it would
+    /// not exist in the real instruction memory either).
+    pub fn encode(&self, instrs: &[Instr]) -> EncodedProgram {
+        let mut w = BitWriter::default();
+        for i in instrs {
+            w.push(i.ctrl.code() as u64, self.ctrl_bits);
+            w.push(i.loads.len() as u64, self.load_cnt_bits);
+            for l in &i.loads {
+                w.push(l.mem.code() as u64, self.mem_bits);
+                w.push(l.addr as u64, self.addr_bits);
+                w.push(l.rf_bank as u64, self.bank_bits);
+                w.push(l.rf_reg as u64, self.reg_bits);
+            }
+            w.push(i.routes.len() as u64, self.route_cnt_bits);
+            for r in &i.routes {
+                w.push(r.rf_bank as u64, self.bank_bits);
+                w.push(r.rf_reg as u64, self.reg_bits);
+                w.push(r.cu as u64, self.cu_lane_bits);
+                w.push(r.port as u64, self.port_bits);
+            }
+            match &i.cu {
+                Some(cu) => {
+                    w.push(1, 1);
+                    w.push(cu.mode.code() as u64, 2);
+                    w.push(cu.lanes as u64 - 1, self.cu_lane_bits);
+                    w.push(cu.scale_beta as u64, 1);
+                    w.push(cu.accumulate as u64, 1);
+                }
+                None => w.push(0, 1),
+            }
+            match &i.su {
+                Some(su) => {
+                    w.push(1, 1);
+                    w.push(matches!(su.mode, SuMode::Spatial) as u64, 1);
+                    w.push(su.lanes as u64 - 1, self.su_lane_bits);
+                    w.push(su.dist_size as u64, self.dist_bits);
+                    w.push(su.first as u64, 1);
+                    w.push(su.last as u64, 1);
+                }
+                None => w.push(0, 1),
+            }
+            w.push(i.stores.len() as u64, self.store_cnt_bits);
+            for s in &i.stores {
+                w.push(s.mem.code() as u64, self.mem_bits);
+                w.push(s.addr as u64, self.addr_bits);
+                w.push(s.su_lane as u64, self.su_lane_bits);
+            }
+        }
+        EncodedProgram {
+            words: w.words,
+            bit_len: w.bit_len,
+            count: instrs.len(),
+        }
+    }
+
+    /// Decode an encoded stream back to instructions (semantics become
+    /// [`Semantics::None`]).
+    pub fn decode(&self, enc: &EncodedProgram) -> Result<Vec<Instr>, String> {
+        let mut r = BitReader {
+            words: &enc.words,
+            pos: 0,
+            bit_len: enc.bit_len,
+        };
+        let mut out = Vec::with_capacity(enc.count);
+        for _ in 0..enc.count {
+            let ctrl = CtrlType::from_code(r.take(self.ctrl_bits)? as u8)
+                .ok_or("bad ctrl code")?;
+            let nloads = r.take(self.load_cnt_bits)? as usize;
+            let mut loads = Vec::with_capacity(nloads);
+            for _ in 0..nloads {
+                loads.push(LoadSlot {
+                    mem: MemSpace::from_code(r.take(self.mem_bits)? as u8)
+                        .ok_or("bad mem code")?,
+                    addr: r.take(self.addr_bits)? as u32,
+                    rf_bank: r.take(self.bank_bits)? as u16,
+                    rf_reg: r.take(self.reg_bits)? as u16,
+                });
+            }
+            let nroutes = r.take(self.route_cnt_bits)? as usize;
+            let mut routes = Vec::with_capacity(nroutes);
+            for _ in 0..nroutes {
+                routes.push(XbarRoute {
+                    rf_bank: r.take(self.bank_bits)? as u16,
+                    rf_reg: r.take(self.reg_bits)? as u16,
+                    cu: r.take(self.cu_lane_bits)? as u16,
+                    port: r.take(self.port_bits)? as u16,
+                });
+            }
+            let cu = if r.take(1)? == 1 {
+                Some(CuCtrl {
+                    mode: CuMode::from_code(r.take(2)? as u8).ok_or("bad cu mode")?,
+                    lanes: r.take(self.cu_lane_bits)? as u16 + 1,
+                    scale_beta: r.take(1)? == 1,
+                    accumulate: r.take(1)? == 1,
+                })
+            } else {
+                None
+            };
+            let su = if r.take(1)? == 1 {
+                Some(SuCtrl {
+                    mode: if r.take(1)? == 1 {
+                        SuMode::Spatial
+                    } else {
+                        SuMode::Temporal
+                    },
+                    lanes: r.take(self.su_lane_bits)? as u16 + 1,
+                    dist_size: r.take(self.dist_bits)? as u16,
+                    first: r.take(1)? == 1,
+                    last: r.take(1)? == 1,
+                })
+            } else {
+                None
+            };
+            let nstores = r.take(self.store_cnt_bits)? as usize;
+            let mut stores = Vec::with_capacity(nstores);
+            for _ in 0..nstores {
+                stores.push(StoreSlot {
+                    mem: MemSpace::from_code(r.take(self.mem_bits)? as u8)
+                        .ok_or("bad mem code")?,
+                    addr: r.take(self.addr_bits)? as u32,
+                    su_lane: r.take(self.su_lane_bits)? as u16,
+                });
+            }
+            out.push(Instr {
+                ctrl,
+                loads,
+                routes,
+                cu,
+                su,
+                stores,
+                sem: Semantics::None,
+            });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_instr(rng: &mut Rng, hw: &HwConfig) -> Instr {
+        let ctrl = CtrlType::from_code(rng.below(6) as u8).unwrap();
+        let nloads = rng.below(4);
+        let loads = (0..nloads)
+            .map(|_| LoadSlot {
+                mem: MemSpace::from_code(rng.below(3) as u8).unwrap(),
+                addr: rng.below(1 << 20) as u32,
+                rf_bank: rng.below(hw.rf_banks) as u16,
+                rf_reg: rng.below(hw.rf_regs_per_bank) as u16,
+            })
+            .collect();
+        let routes = (0..rng.below(5))
+            .map(|_| XbarRoute {
+                rf_bank: rng.below(hw.rf_banks) as u16,
+                rf_reg: rng.below(hw.rf_regs_per_bank) as u16,
+                cu: rng.below(hw.t) as u16,
+                port: rng.below(1 << hw.k) as u16,
+            })
+            .collect();
+        let cu = (rng.below(2) == 1).then(|| CuCtrl {
+            mode: CuMode::from_code(rng.below(4) as u8).unwrap(),
+            lanes: rng.below(hw.t) as u16 + 1,
+            scale_beta: rng.below(2) == 1,
+            accumulate: rng.below(2) == 1,
+        });
+        let su = (rng.below(2) == 1).then(|| SuCtrl {
+            mode: if rng.below(2) == 1 {
+                SuMode::Spatial
+            } else {
+                SuMode::Temporal
+            },
+            lanes: rng.below(hw.s) as u16 + 1,
+            dist_size: rng.below(hw.max_dist_size + 1) as u16,
+            first: rng.below(2) == 1,
+            last: rng.below(2) == 1,
+        });
+        let stores = (0..rng.below(3))
+            .map(|_| StoreSlot {
+                mem: MemSpace::from_code(rng.below(3) as u8).unwrap(),
+                addr: rng.below(1 << 20) as u32,
+                su_lane: rng.below(hw.s) as u16,
+            })
+            .collect();
+        Instr {
+            ctrl,
+            loads,
+            routes,
+            cu,
+            su,
+            stores,
+            sem: Semantics::None,
+        }
+    }
+
+    #[test]
+    fn roundtrip_random_instructions() {
+        let hw = HwConfig::paper_default();
+        let layout = InstrLayout::new(&hw);
+        let mut rng = Rng::new(0xC0DE);
+        for trial in 0..50 {
+            let instrs: Vec<Instr> = (0..20).map(|_| random_instr(&mut rng, &hw)).collect();
+            let enc = layout.encode(&instrs);
+            let dec = layout.decode(&enc).expect("decode");
+            assert_eq!(instrs, dec, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_toy_config() {
+        let hw = HwConfig::fig10_toy();
+        let layout = InstrLayout::new(&hw);
+        let mut rng = Rng::new(0xBEEF);
+        let instrs: Vec<Instr> = (0..40).map(|_| random_instr(&mut rng, &hw)).collect();
+        let enc = layout.encode(&instrs);
+        assert_eq!(layout.decode(&enc).unwrap(), instrs);
+    }
+
+    #[test]
+    fn dense_packing_beats_byte_alignment() {
+        // The whole point of the dense VLIW pack: a NOP must take far
+        // fewer bits than a byte-aligned struct encoding would.
+        let hw = HwConfig::paper_default();
+        let layout = InstrLayout::new(&hw);
+        let nop = Instr::nop();
+        let enc = layout.encode(&[nop.clone()]);
+        assert!(enc.bit_len <= 32, "NOP takes {} bits", enc.bit_len);
+        assert_eq!(enc.bit_len, layout.instr_bits(&nop));
+    }
+
+    #[test]
+    fn instr_bits_matches_encoding() {
+        let hw = HwConfig::paper_default();
+        let layout = InstrLayout::new(&hw);
+        let mut rng = Rng::new(7);
+        let instrs: Vec<Instr> = (0..10).map(|_| random_instr(&mut rng, &hw)).collect();
+        let total: u64 = instrs.iter().map(|i| layout.instr_bits(i)).sum();
+        let enc = layout.encode(&instrs);
+        assert_eq!(enc.bit_len, total);
+    }
+
+    #[test]
+    fn truncated_stream_errors() {
+        let hw = HwConfig::paper_default();
+        let layout = InstrLayout::new(&hw);
+        let mut rng = Rng::new(9);
+        let instrs: Vec<Instr> = (0..5).map(|_| random_instr(&mut rng, &hw)).collect();
+        let mut enc = layout.encode(&instrs);
+        enc.bit_len = enc.bit_len.saturating_sub(16);
+        assert!(layout.decode(&enc).is_err());
+    }
+
+    #[test]
+    fn bits_for_sanity() {
+        assert_eq!(bits_for(1), 1);
+        assert_eq!(bits_for(2), 1);
+        assert_eq!(bits_for(3), 2);
+        assert_eq!(bits_for(64), 6);
+        assert_eq!(bits_for(65), 7);
+    }
+}

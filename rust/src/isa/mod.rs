@@ -1,0 +1,485 @@
+//! The MC²A accelerator architecture definition: hardware parameters
+//! (Fig. 7a) and the VLIW instruction set (Fig. 7c).
+//!
+//! The ISA has six pipeline-control types (§V-B): **Load**, **Compute**,
+//! **Sample**, **Compute-Sample**, **Compute-Sample-Store** and **NOP**.
+//! Instructions are VLIW bundles naming, in one word: the load slots
+//! (memory → RF), the crossbar routing (RF → CU input ports), the CU
+//! configuration (mode/β/accumulate), the SU configuration
+//! (temporal/spatial, distribution size) and the store slots. Field
+//! widths are derived from the chosen [`HwConfig`] at design time and
+//! densely packed ([`InstrLayout`]), matching the paper's
+//! "dense packing approach … to minimize the instruction memory
+//! overhead".
+
+mod encode;
+
+pub use encode::InstrLayout;
+
+/// Design-time hardware parameters (the knobs of Fig. 7a, chosen via
+/// the 3D roofline DSE in §VI-B).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HwConfig {
+    /// CU: number of parallel processing elements `T`.
+    pub t: usize,
+    /// CU: PE tree depth `K` (each PE reduces `2^K` inputs + 1 reuse).
+    pub k: usize,
+    /// SU: number of sample elements `S` (= `2^M`).
+    pub s: usize,
+    /// SU: depth `M`.
+    pub m: usize,
+    /// Memory bandwidth `B` in 32-bit words per cycle.
+    pub bw_words: usize,
+    /// Clock frequency in GHz (paper: 0.5 GHz @ Intel 16 nm).
+    pub clock_ghz: f64,
+    /// Register file banks (multi-bank for conflict-free CU feeding).
+    pub rf_banks: usize,
+    /// 32-bit registers per RF bank.
+    pub rf_regs_per_bank: usize,
+    /// Gumbel LUT entries (Fig. 12 ablation; paper picks 16).
+    pub lut_size: usize,
+    /// Gumbel LUT fixed-point precision in bits (paper picks 8).
+    pub lut_bits: u32,
+    /// Maximum categorical distribution size supported (paper: 256).
+    pub max_dist_size: usize,
+}
+
+impl HwConfig {
+    /// The paper's chosen configuration (§VI-B): T=64, K=3, S=64, M=6,
+    /// B=320 words/cycle, 500 MHz, LUT 16×8-bit, max distribution 256.
+    pub fn paper_default() -> HwConfig {
+        HwConfig {
+            t: 64,
+            k: 3,
+            s: 64,
+            m: 6,
+            bw_words: 320,
+            clock_ghz: 0.5,
+            rf_banks: 64,
+            rf_regs_per_bank: 16,
+            lut_size: 16,
+            lut_bits: 8,
+            max_dist_size: 256,
+        }
+    }
+
+    /// The small S=T=4, K=1, B=12 configuration used by the Fig. 10
+    /// walk-through schedules.
+    pub fn fig10_toy() -> HwConfig {
+        HwConfig {
+            t: 4,
+            k: 1,
+            s: 4,
+            m: 2,
+            bw_words: 12,
+            clock_ghz: 0.5,
+            rf_banks: 8,
+            rf_regs_per_bank: 8,
+            lut_size: 16,
+            lut_bits: 8,
+            max_dist_size: 256,
+        }
+    }
+
+    /// Peak CU throughput in ops/cycle: each PE reduces `2^K` inputs
+    /// through its adder tree plus a multiply (β) and an accumulate.
+    pub fn cu_peak_ops_per_cycle(&self) -> u64 {
+        (self.t * ((1 << self.k) + 2)) as u64
+    }
+
+    /// Peak SU throughput in samples/cycle. In *temporal* mode each SE
+    /// retires one distribution **bin** per cycle, so a size-N
+    /// categorical costs N cycles; the peak (bin-level) rate is S/cycle.
+    pub fn su_peak_bins_per_cycle(&self) -> u64 {
+        self.s as u64
+    }
+
+    /// Peak memory bandwidth in bytes/cycle.
+    pub fn mem_peak_bytes_per_cycle(&self) -> u64 {
+        (self.bw_words * 4) as u64
+    }
+
+    /// CU pipeline latency in cycles (K+1 stages, §V-C).
+    pub fn cu_latency(&self) -> usize {
+        self.k + 1
+    }
+
+    /// Sanity-check internal consistency (S = 2^M, sizes nonzero).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.s != (1 << self.m) {
+            return Err(format!("S={} must equal 2^M (M={})", self.s, self.m));
+        }
+        if self.t == 0 || self.bw_words == 0 || self.rf_banks == 0 {
+            return Err("zero-sized hardware unit".into());
+        }
+        if self.lut_size < 2 {
+            return Err("LUT must have ≥ 2 entries".into());
+        }
+        Ok(())
+    }
+}
+
+/// The six pipeline-control types of the VLIW ISA (§V-B).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CtrlType {
+    /// Memory → RF data movement only.
+    Load,
+    /// CU-only mode (multi-cycle energy computation, SU bypassed).
+    Compute,
+    /// SU-only mode (re-sampling a resident distribution, CU bypassed).
+    Sample,
+    /// Pipelined energy computation + sampling.
+    ComputeSample,
+    /// Compute-Sample plus result store to sample/histogram memory.
+    ComputeSampleStore,
+    /// Pipeline-hazard filler.
+    Nop,
+}
+
+impl CtrlType {
+    /// Encoding value (3 bits).
+    pub fn code(&self) -> u8 {
+        match self {
+            CtrlType::Load => 0,
+            CtrlType::Compute => 1,
+            CtrlType::Sample => 2,
+            CtrlType::ComputeSample => 3,
+            CtrlType::ComputeSampleStore => 4,
+            CtrlType::Nop => 5,
+        }
+    }
+
+    /// Decode from a 3-bit code.
+    pub fn from_code(c: u8) -> Option<CtrlType> {
+        Some(match c {
+            0 => CtrlType::Load,
+            1 => CtrlType::Compute,
+            2 => CtrlType::Sample,
+            3 => CtrlType::ComputeSample,
+            4 => CtrlType::ComputeSampleStore,
+            5 => CtrlType::Nop,
+            _ => return None,
+        })
+    }
+
+    /// Does this type activate the CU?
+    pub fn uses_cu(&self) -> bool {
+        matches!(
+            self,
+            CtrlType::Compute | CtrlType::ComputeSample | CtrlType::ComputeSampleStore
+        )
+    }
+
+    /// Does this type activate the SU?
+    pub fn uses_su(&self) -> bool {
+        matches!(
+            self,
+            CtrlType::Sample | CtrlType::ComputeSample | CtrlType::ComputeSampleStore
+        )
+    }
+}
+
+/// On-chip memory spaces (Fig. 7a).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemSpace {
+    /// Input data / weights / CPT ("CDT") memory.
+    Input,
+    /// Current sample (state) memory.
+    Sample,
+    /// Histogram (posterior accumulation) memory.
+    Histogram,
+}
+
+impl MemSpace {
+    /// 2-bit encoding.
+    pub fn code(&self) -> u8 {
+        match self {
+            MemSpace::Input => 0,
+            MemSpace::Sample => 1,
+            MemSpace::Histogram => 2,
+        }
+    }
+
+    /// Decode from a 2-bit code.
+    pub fn from_code(c: u8) -> Option<MemSpace> {
+        Some(match c {
+            0 => MemSpace::Input,
+            1 => MemSpace::Sample,
+            2 => MemSpace::Histogram,
+            _ => return None,
+        })
+    }
+}
+
+/// One load slot: `mem[addr] → rf[bank][reg]`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LoadSlot {
+    /// Source memory space.
+    pub mem: MemSpace,
+    /// Word address within the space.
+    pub addr: u32,
+    /// Destination RF bank.
+    pub rf_bank: u16,
+    /// Destination register within the bank.
+    pub rf_reg: u16,
+}
+
+/// One crossbar route: `rf[bank][reg] → CU lane `cu`, input port `port``.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct XbarRoute {
+    /// Source RF bank.
+    pub rf_bank: u16,
+    /// Source register.
+    pub rf_reg: u16,
+    /// Destination CU lane (PE index).
+    pub cu: u16,
+    /// Destination input port within the PE (`0..2^K`).
+    pub port: u16,
+}
+
+/// CU (PE array) operating mode (§V-C).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CuMode {
+    /// Route inputs straight to the SU.
+    Bypass,
+    /// Dot-product of the routed inputs against weights.
+    DotProduct,
+    /// Reduced sum of the routed inputs.
+    ReducedSum,
+    /// Partial reduction accumulated over multiple cycles.
+    Partial,
+}
+
+impl CuMode {
+    /// 2-bit encoding.
+    pub fn code(&self) -> u8 {
+        match self {
+            CuMode::Bypass => 0,
+            CuMode::DotProduct => 1,
+            CuMode::ReducedSum => 2,
+            CuMode::Partial => 3,
+        }
+    }
+
+    /// Decode from a 2-bit code.
+    pub fn from_code(c: u8) -> Option<CuMode> {
+        Some(match c {
+            0 => CuMode::Bypass,
+            1 => CuMode::DotProduct,
+            2 => CuMode::ReducedSum,
+            3 => CuMode::Partial,
+            _ => return None,
+        })
+    }
+}
+
+/// CU control word.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CuCtrl {
+    /// Operating mode.
+    pub mode: CuMode,
+    /// Active PE lanes (`1..=T`).
+    pub lanes: u16,
+    /// Apply the β (inverse-temperature) multiplier.
+    pub scale_beta: bool,
+    /// Accumulate onto the in-place partial sum.
+    pub accumulate: bool,
+}
+
+/// SU operating mode (§V-D Reconfigurability).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SuMode {
+    /// One comparator per SE, iterating over bins (1 bin/cycle/SE).
+    Temporal,
+    /// SEs fused into a comparator tree: S bins of one distribution per cycle.
+    Spatial,
+}
+
+/// SU control word.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SuCtrl {
+    /// Operating mode.
+    pub mode: SuMode,
+    /// Active SE lanes (`1..=S`).
+    pub lanes: u16,
+    /// Total distribution size being sampled.
+    pub dist_size: u16,
+    /// First bin group of a distribution (resets the running max).
+    pub first: bool,
+    /// Last bin group (commits the argmax as the sample).
+    pub last: bool,
+}
+
+/// One store slot: SU lane result → `mem[addr]`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StoreSlot {
+    /// Destination memory space.
+    pub mem: MemSpace,
+    /// Word address.
+    pub addr: u32,
+    /// Source SU lane.
+    pub su_lane: u16,
+}
+
+/// Functional semantics attached by the compiler (metadata — not
+/// encoded in the instruction word; the timing model uses only the
+/// architectural fields, the functional model uses these).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Semantics {
+    /// Pure timing (loads, partial computes, NOPs).
+    None,
+    /// Commit Gibbs-style resampling of `rvs` (conditionally
+    /// independent within one commit — guaranteed by the compiler).
+    UpdateRvs(Vec<u32>),
+    /// Commit one full PAS iteration (ΔE build + L path flips + MH).
+    PasIterate,
+    /// Snapshot the state (Async Gibbs reads stale values).
+    Snapshot,
+}
+
+/// One VLIW instruction bundle.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Instr {
+    /// Pipeline-control type.
+    pub ctrl: CtrlType,
+    /// Load slots (≤ bandwidth/cycle; larger loads are split by the
+    /// compiler into multiple Load instructions).
+    pub loads: Vec<LoadSlot>,
+    /// Crossbar routes for this cycle's CU operands.
+    pub routes: Vec<XbarRoute>,
+    /// CU control (None = bypass/idle).
+    pub cu: Option<CuCtrl>,
+    /// SU control (None = idle).
+    pub su: Option<SuCtrl>,
+    /// Store slots.
+    pub stores: Vec<StoreSlot>,
+    /// Compiler-attached functional semantics.
+    pub sem: Semantics,
+}
+
+impl Instr {
+    /// A NOP (hazard filler).
+    pub fn nop() -> Instr {
+        Instr {
+            ctrl: CtrlType::Nop,
+            loads: Vec::new(),
+            routes: Vec::new(),
+            cu: None,
+            su: None,
+            stores: Vec::new(),
+            sem: Semantics::None,
+        }
+    }
+
+    /// Words moved from memory by this instruction.
+    pub fn load_words(&self) -> usize {
+        self.loads.len()
+    }
+
+    /// Words written back to memory.
+    pub fn store_words(&self) -> usize {
+        self.stores.len()
+    }
+}
+
+/// A compiled program: a prologue (one-time setup), a steady-state loop
+/// body executed once per MCMC iteration under HWLOOP control, and
+/// compile-time statistics.
+#[derive(Clone, Debug, Default)]
+pub struct Program {
+    /// One-time setup instructions.
+    pub prologue: Vec<Instr>,
+    /// Loop body (one MCMC step of Alg. 1).
+    pub body: Vec<Instr>,
+    /// RV updates per loop iteration (for GS/s accounting).
+    pub updates_per_iter: u64,
+    /// Categorical samples drawn per loop iteration.
+    pub samples_per_iter: u64,
+    /// Human-readable name.
+    pub name: String,
+}
+
+impl Program {
+    /// Total instruction count (prologue + body).
+    pub fn len(&self) -> usize {
+        self.prologue.len() + self.body.len()
+    }
+
+    /// True if the program has no instructions.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Count of instructions by control type in the body.
+    pub fn body_histogram(&self) -> std::collections::HashMap<CtrlType, usize> {
+        let mut h = std::collections::HashMap::new();
+        for i in &self.body {
+            *h.entry(i.ctrl).or_insert(0) += 1;
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_config_valid() {
+        let c = HwConfig::paper_default();
+        assert!(c.validate().is_ok());
+        assert_eq!(c.cu_latency(), 4);
+        assert_eq!(c.su_peak_bins_per_cycle(), 64);
+        assert_eq!(c.mem_peak_bytes_per_cycle(), 1280);
+        // T=64 PEs × (8 adds + mult + acc) = 640 ops/cycle
+        assert_eq!(c.cu_peak_ops_per_cycle(), 640);
+    }
+
+    #[test]
+    fn toy_config_valid() {
+        assert!(HwConfig::fig10_toy().validate().is_ok());
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = HwConfig::paper_default();
+        c.s = 48; // not 2^M
+        assert!(c.validate().is_err());
+        let mut c2 = HwConfig::paper_default();
+        c2.t = 0;
+        assert!(c2.validate().is_err());
+    }
+
+    #[test]
+    fn ctrl_type_codes_roundtrip() {
+        for t in [
+            CtrlType::Load,
+            CtrlType::Compute,
+            CtrlType::Sample,
+            CtrlType::ComputeSample,
+            CtrlType::ComputeSampleStore,
+            CtrlType::Nop,
+        ] {
+            assert_eq!(CtrlType::from_code(t.code()), Some(t));
+        }
+        assert_eq!(CtrlType::from_code(7), None);
+    }
+
+    #[test]
+    fn ctrl_unit_usage() {
+        assert!(CtrlType::Compute.uses_cu() && !CtrlType::Compute.uses_su());
+        assert!(!CtrlType::Sample.uses_cu() && CtrlType::Sample.uses_su());
+        assert!(CtrlType::ComputeSample.uses_cu() && CtrlType::ComputeSample.uses_su());
+        assert!(!CtrlType::Nop.uses_cu() && !CtrlType::Nop.uses_su());
+    }
+
+    #[test]
+    fn program_histogram() {
+        let mut p = Program::default();
+        p.body.push(Instr::nop());
+        p.body.push(Instr::nop());
+        let h = p.body_histogram();
+        assert_eq!(h[&CtrlType::Nop], 2);
+        assert_eq!(p.len(), 2);
+    }
+}

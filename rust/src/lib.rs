@@ -1,0 +1,49 @@
+//! # MC²A — Algorithm-Hardware Co-Design for MCMC Acceleration
+//!
+//! Reproduction of *"MC²A: Enabling Algorithm-Hardware Co-Design for
+//! Efficient Markov Chain Monte Carlo Acceleration"* (Zhao et al., 2025)
+//! as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate provides:
+//!
+//! * [`energy`] — discrete energy models (Ising/Potts grids, Bayesian
+//!   networks, combinatorial-optimization graphs, RBMs) behind the common
+//!   [`energy::EnergyModel`] trait.
+//! * [`mcmc`] — the MCMC algorithm zoo the paper evaluates: MH, Gibbs,
+//!   Block Gibbs, Asynchronous Gibbs and the gradient-based PAS sampler,
+//!   plus the CDF and Gumbel-max categorical samplers.
+//! * [`roofline`] — the paper's 3D roofline model (Compute Intensity ×
+//!   Memory Intensity × Throughput) and the design-space exploration that
+//!   selects the accelerator parameters (Fig. 6, Fig. 11).
+//! * [`isa`] / [`compiler`] / [`sim`] — the MC²A accelerator itself: the
+//!   VLIW instruction set (Fig. 7c), the scheduling compiler, and a
+//!   cycle-accurate simulator of the 4-stage pipeline with tree-CU,
+//!   reconfigurable Gumbel SU, crossbar and multi-bank register file.
+//! * [`baselines`] — calibrated models of the comparison platforms
+//!   (CPU/GPU/TPU and the SPU/PGMA/CoopMC/sIM/PROCA accelerators).
+//! * [`runtime`] — PJRT client that loads the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) and executes them from Rust; this
+//!   is the *measured* software baseline path (Python never runs at
+//!   request time).
+//! * [`coordinator`] — L3 chain orchestration: backend routing, chain
+//!   scheduling, convergence tracking, metrics.
+//! * [`workloads`] — the Table I benchmark suite generators.
+//! * [`bench`] — harnesses that regenerate every table and figure of the
+//!   paper's evaluation section.
+
+pub mod baselines;
+pub mod bench;
+pub mod compiler;
+pub mod coordinator;
+pub mod energy;
+pub mod graph;
+pub mod isa;
+pub mod mcmc;
+pub mod rng;
+pub mod roofline;
+pub mod runtime;
+pub mod sim;
+pub mod workloads;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,215 @@
+//! MC²A command-line interface.
+//!
+//! ```text
+//! mc2a table1 [--full]
+//! mc2a bench <fig5|fig6|fig11|fig12|fig13|fig14|fig15|headline|all> [--full]
+//! mc2a run --workload <name> [--algo mh|gibbs|bg|ag|pas] [--steps N]
+//!          [--chains N] [--backend sim|sw] [--beta B]
+//! mc2a roofline [--workload <name>]
+//! mc2a dse
+//! mc2a runtime-check [--artifacts DIR]
+//! ```
+//!
+//! (Hand-rolled argument parsing: the offline vendor set has no clap.)
+
+use mc2a::bench;
+use mc2a::coordinator::{run_chains, Backend, RunSpec};
+use mc2a::isa::HwConfig;
+use mc2a::mcmc::{AlgoKind, BetaSchedule, SamplerKind};
+use mc2a::roofline::{self, WorkloadProfile};
+use mc2a::runtime::Runtime;
+use mc2a::workloads::{self, Workload};
+
+fn usage() -> ! {
+    eprintln!(
+        "mc2a — MC²A algorithm-hardware co-design framework (paper reproduction)
+
+USAGE:
+  mc2a table1 [--full]
+  mc2a bench <fig5|fig6|fig11|fig12|fig13|fig14|fig15|headline|all> [--full]
+  mc2a run --workload <name> [--algo mh|gibbs|bg|ag|pas] [--steps N]
+           [--chains N] [--backend sim|sw] [--beta B] [--seed S]
+  mc2a roofline [--workload <name>]
+  mc2a dse
+  mc2a runtime-check [--artifacts DIR]
+
+Workloads: earthquake survey cancer alarm imageseg imageseg-full er700
+           twitter optsicom rbm"
+    );
+    std::process::exit(2);
+}
+
+/// Fetch the value following a `--flag`.
+fn flag_value(args: &[String], flag: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == flag)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn has_flag(args: &[String], flag: &str) -> bool {
+    args.iter().any(|a| a == flag)
+}
+
+fn find_workload(name: &str) -> Option<Workload> {
+    match name.to_ascii_lowercase().as_str() {
+        "earthquake" => Some(workloads::wl_earthquake()),
+        "survey" => Some(workloads::wl_survey()),
+        "cancer" => Some(workloads::wl_cancer()),
+        "alarm" => Some(workloads::wl_alarm()),
+        "imageseg" => Some(workloads::wl_image_seg(false)),
+        "imageseg-full" => Some(workloads::wl_image_seg(true)),
+        "er700" | "mis" => Some(workloads::wl_mis_er()),
+        "twitter" | "maxclique" => Some(workloads::wl_maxclique_twitter()),
+        "optsicom" | "maxcut" => Some(workloads::wl_maxcut_optsicom()),
+        "rbm" => Some(workloads::wl_rbm()),
+        _ => None,
+    }
+}
+
+fn cmd_bench(args: &[String]) {
+    let which = args.first().map(String::as_str).unwrap_or("all");
+    let full = has_flag(args, "--full");
+    let quick = !full;
+    let run = |name: &str| match name {
+        "fig5" => bench::fig5(quick, 0.94),
+        "fig6" => bench::fig6(),
+        "fig11" => bench::fig11(),
+        "fig12" => bench::fig12(quick),
+        "fig13" => bench::fig13(),
+        "fig14" => bench::fig14(quick),
+        "fig15" => bench::fig15(quick),
+        "headline" => bench::headline(quick),
+        other => {
+            eprintln!("unknown figure {other}");
+            std::process::exit(2);
+        }
+    };
+    if which == "all" {
+        for f in [
+            "fig5", "fig6", "fig11", "fig12", "fig13", "fig14", "fig15", "headline",
+        ] {
+            println!("{}", run(f));
+        }
+    } else {
+        println!("{}", run(which));
+    }
+}
+
+fn cmd_run(args: &[String]) {
+    let Some(wname) = flag_value(args, "--workload") else {
+        usage()
+    };
+    let Some(wl) = find_workload(&wname) else {
+        eprintln!("unknown workload {wname}");
+        std::process::exit(2);
+    };
+    let algo = flag_value(args, "--algo")
+        .map(|a| AlgoKind::parse(&a).unwrap_or_else(|| usage()))
+        .unwrap_or(wl.algorithm);
+    let steps: usize = flag_value(args, "--steps")
+        .map(|s| s.parse().unwrap_or_else(|_| usage()))
+        .unwrap_or(200);
+    let chains: usize = flag_value(args, "--chains")
+        .map(|s| s.parse().unwrap_or_else(|_| usage()))
+        .unwrap_or(1);
+    let beta: f32 = flag_value(args, "--beta")
+        .map(|s| s.parse().unwrap_or_else(|_| usage()))
+        .unwrap_or(1.0);
+    let seed: u64 = flag_value(args, "--seed")
+        .map(|s| s.parse().unwrap_or_else(|_| usage()))
+        .unwrap_or(1);
+    let backend = match flag_value(args, "--backend").as_deref() {
+        Some("sim") => Backend::Accelerator(HwConfig::paper_default()),
+        _ => Backend::Software(SamplerKind::Gumbel),
+    };
+    let spec = RunSpec {
+        algo,
+        schedule: BetaSchedule::Constant(beta),
+        steps,
+        chains,
+        seed,
+        pas_flips: wl.pas_flips,
+    };
+    println!(
+        "workload={} nodes={} edges={} algo={} steps={steps} chains={chains}",
+        wl.name,
+        wl.nodes(),
+        wl.edges(),
+        algo.name()
+    );
+    let metrics = run_chains(wl.model.as_ref(), backend, spec);
+    for c in &metrics.chains {
+        print!(
+            "chain {}: best objective {:.2}, {} updates, {:?}",
+            c.chain_id, c.best_objective, c.stats.updates, c.wall
+        );
+        if let Some(rep) = &c.sim {
+            print!(
+                ", {} cycles, {:.4} GS/s, {:.2} W (modeled)",
+                rep.cycles,
+                rep.gsps(&HwConfig::paper_default()),
+                rep.watts(&HwConfig::paper_default()),
+            );
+        }
+        println!();
+    }
+    println!(
+        "best objective overall: {:.2}; software wall throughput {:.3e} updates/s",
+        metrics.best_objective(),
+        metrics.updates_per_sec()
+    );
+}
+
+fn cmd_roofline(args: &[String]) {
+    if let Some(wname) = flag_value(args, "--workload") {
+        let Some(wl) = find_workload(&wname) else {
+            eprintln!("unknown workload {wname}");
+            std::process::exit(2);
+        };
+        let hw = HwConfig::paper_default();
+        let p = WorkloadProfile::from_model(wl.model.as_ref(), wl.algorithm);
+        let r = roofline::evaluate(&hw, &p);
+        println!(
+            "workload={} CI={:.5} MI={:.5} dist={:.0} mode={}",
+            wl.name,
+            p.ci,
+            p.mi,
+            p.dist_size,
+            if p.spatial { "spatial" } else { "temporal" }
+        );
+        println!(
+            "TP={:.4} GS/s (SU {:.4} / CU {:.4} / MEM {:.4}) bottleneck={:?}",
+            r.tp_gsps, r.su_roof, r.cu_roof, r.mem_roof, r.bottleneck
+        );
+    } else {
+        println!("{}", bench::fig6());
+    }
+}
+
+fn cmd_runtime_check(args: &[String]) {
+    let dir = flag_value(args, "--artifacts").unwrap_or_else(|| "artifacts".into());
+    match Runtime::load(&dir) {
+        Ok(rt) => {
+            println!("platform: {}", rt.platform());
+            println!("artifacts: {:?}", rt.names());
+            print!("{}", bench::measured_cpu_rows(&rt));
+        }
+        Err(e) => {
+            eprintln!("runtime check failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("table1") => println!("{}", bench::table1(has_flag(&args[1..], "--full"))),
+        Some("bench") => cmd_bench(&args[1..]),
+        Some("run") => cmd_run(&args[1..]),
+        Some("roofline") => cmd_roofline(&args[1..]),
+        Some("dse") => println!("{}", bench::fig11()),
+        Some("runtime-check") => cmd_runtime_check(&args[1..]),
+        _ => usage(),
+    }
+}

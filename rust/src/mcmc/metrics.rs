@@ -1,0 +1,162 @@
+//! Convergence metrics: accuracy-vs-steps/ops traces (Fig. 5a/5b).
+//!
+//! "Accuracy" follows the paper's COP convention: the best objective
+//! seen so far divided by the instance's best-known objective, traced
+//! against both algorithmic steps and consumed operations so that the
+//! step-efficient-but-op-hungry behavior of gradient-based samplers
+//! (observation 1 in §III) is visible.
+
+use super::{BetaSchedule, Chain, Mcmc};
+use crate::energy::EnergyModel;
+
+/// One point on a convergence trace.
+#[derive(Clone, Copy, Debug)]
+pub struct TracePoint {
+    /// Algorithmic steps so far.
+    pub steps: u64,
+    /// Consumed arithmetic ops so far (paper's Fig. 5a x-axis).
+    pub ops: u64,
+    /// Bytes moved so far.
+    pub bytes: u64,
+    /// Samples drawn so far.
+    pub samples: u64,
+    /// Best objective so far.
+    pub best_objective: f64,
+    /// best_objective / best_known (clamped to [0, 1] when known).
+    pub accuracy: f64,
+}
+
+/// A full convergence trace plus summary.
+#[derive(Clone, Debug)]
+pub struct AccuracyTrace {
+    /// Algorithm name.
+    pub algo: &'static str,
+    /// Sampled trace points.
+    pub points: Vec<TracePoint>,
+    /// First step index reaching the target accuracy, if ever.
+    pub steps_to_target: Option<u64>,
+    /// Ops consumed when the target accuracy was first reached.
+    pub ops_to_target: Option<u64>,
+    /// Target accuracy used.
+    pub target: f64,
+}
+
+/// Run `algo` on `model` until `target` accuracy or `max_steps`,
+/// recording a trace every `trace_every` steps.
+pub fn run_to_accuracy(
+    model: &dyn EnergyModel,
+    algo: Box<dyn Mcmc>,
+    schedule: BetaSchedule,
+    target: f64,
+    max_steps: usize,
+    trace_every: usize,
+    seed: u64,
+) -> AccuracyTrace {
+    let best_known = model.best_known();
+    let name = algo.name();
+    let mut chain = Chain::new(model, algo, schedule, seed);
+    let mut points = Vec::new();
+    let mut steps_to_target = None;
+    let mut ops_to_target = None;
+
+    let accuracy_of = |best: f64| -> f64 {
+        match best_known {
+            Some(bk) if bk != 0.0 => (best / bk).clamp(0.0, 1.0),
+            _ => best,
+        }
+    };
+
+    let chunk = trace_every.max(1);
+    let mut step = 0usize;
+    // initial point
+    points.push(TracePoint {
+        steps: 0,
+        ops: 0,
+        bytes: 0,
+        samples: 0,
+        best_objective: chain.best_objective,
+        accuracy: accuracy_of(chain.best_objective),
+    });
+    while step < max_steps {
+        let n = chunk.min(max_steps - step);
+        chain.run(n);
+        step += n;
+        let acc = accuracy_of(chain.best_objective);
+        points.push(TracePoint {
+            steps: step as u64,
+            ops: chain.stats.cost.ops,
+            bytes: chain.stats.cost.bytes,
+            samples: chain.stats.cost.samples,
+            best_objective: chain.best_objective,
+            accuracy: acc,
+        });
+        if acc >= target && steps_to_target.is_none() {
+            steps_to_target = Some(step as u64);
+            ops_to_target = Some(chain.stats.cost.ops);
+            break;
+        }
+    }
+    AccuracyTrace {
+        algo: name,
+        points,
+        steps_to_target,
+        ops_to_target,
+        target,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::MaxCutModel;
+    use crate::graph::Graph;
+    use crate::mcmc::{build_algo, AlgoKind, SamplerKind};
+
+    fn small_cut() -> MaxCutModel {
+        // 4-cycle: optimal cut = 4.
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3), (3, 0)], None);
+        MaxCutModel::new(g, Some(4.0))
+    }
+
+    #[test]
+    fn trace_reaches_target_on_trivial_instance() {
+        let m = small_cut();
+        let algo = build_algo(AlgoKind::Gibbs, SamplerKind::Gumbel, &m, 1);
+        let tr = run_to_accuracy(
+            &m,
+            algo,
+            BetaSchedule::Linear {
+                from: 0.5,
+                to: 4.0,
+                steps: 50,
+            },
+            0.99,
+            500,
+            5,
+            3,
+        );
+        assert!(tr.steps_to_target.is_some(), "never hit target: {tr:?}");
+        assert!(tr.ops_to_target.unwrap() > 0);
+    }
+
+    #[test]
+    fn trace_is_monotone_in_ops_and_accuracy() {
+        let m = small_cut();
+        let algo = build_algo(AlgoKind::Mh, SamplerKind::Gumbel, &m, 1);
+        let tr = run_to_accuracy(&m, algo, BetaSchedule::Constant(1.0), 1.1, 100, 10, 5);
+        for w in tr.points.windows(2) {
+            assert!(w[1].ops >= w[0].ops);
+            assert!(w[1].accuracy >= w[0].accuracy);
+        }
+    }
+
+    #[test]
+    fn unreachable_target_returns_none() {
+        let m = small_cut();
+        let algo = build_algo(AlgoKind::Gibbs, SamplerKind::Gumbel, &m, 1);
+        // Target accuracy 2.0 can never be reached (clamped at 1.0).
+        let tr = run_to_accuracy(&m, algo, BetaSchedule::Constant(1.0), 2.0, 20, 5, 7);
+        assert!(tr.steps_to_target.is_none());
+        assert_eq!(tr.points.last().unwrap().steps, 20);
+    }
+}

@@ -1,0 +1,356 @@
+//! MCMC algorithms over [`crate::energy::EnergyModel`].
+//!
+//! Implements the algorithm zoo of §II-A: Metropolis-Hastings, Gibbs,
+//! Block Gibbs, Asynchronous Gibbs and the gradient-based Path Auxiliary
+//! Sampler (PAS), all parameterized by a pluggable categorical sampler
+//! (CDF baseline vs Gumbel-max, §V-D) and an annealing schedule.
+
+mod gibbs;
+mod metrics;
+mod mh;
+mod pas;
+pub mod sampler;
+
+pub use gibbs::{AsyncGibbs, BlockGibbs, Gibbs};
+pub use metrics::{run_to_accuracy, AccuracyTrace, TracePoint};
+pub use mh::MetropolisHastings;
+pub use pas::PathAuxiliarySampler;
+
+use crate::energy::{EnergyModel, OpCost};
+use crate::rng::Rng;
+use sampler::{CategoricalSampler, CdfSampler, GumbelLutSampler, GumbelSampler};
+
+/// Which MCMC algorithm to run (CLI / workload selection).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlgoKind {
+    /// Sequential single-site Metropolis-Hastings.
+    Mh,
+    /// Sequential single-site Gibbs.
+    Gibbs,
+    /// Block Gibbs over a greedy coloring of the interaction graph.
+    BlockGibbs,
+    /// Asynchronous (hogwild) Gibbs: all RVs updated from stale state.
+    AsyncGibbs,
+    /// Path Auxiliary Sampler with `L` flips per step.
+    Pas,
+}
+
+impl AlgoKind {
+    /// Short name used in benches/CSV output.
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlgoKind::Mh => "MH",
+            AlgoKind::Gibbs => "Gibbs",
+            AlgoKind::BlockGibbs => "BG",
+            AlgoKind::AsyncGibbs => "AG",
+            AlgoKind::Pas => "PAS",
+        }
+    }
+
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> Option<AlgoKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "mh" => Some(AlgoKind::Mh),
+            "gibbs" => Some(AlgoKind::Gibbs),
+            "bg" | "blockgibbs" | "block-gibbs" => Some(AlgoKind::BlockGibbs),
+            "ag" | "asyncgibbs" | "async-gibbs" => Some(AlgoKind::AsyncGibbs),
+            "pas" => Some(AlgoKind::Pas),
+            _ => None,
+        }
+    }
+}
+
+/// Which categorical sampler backs the algorithm.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SamplerKind {
+    /// Exact inverse-transform (software baseline).
+    Cdf,
+    /// Exact Gumbel-max.
+    Gumbel,
+    /// Hardware-model Gumbel with LUT `{ size, bits }`.
+    GumbelLut {
+        /// LUT entries.
+        size: usize,
+        /// Fixed-point bits.
+        bits: u32,
+    },
+}
+
+impl SamplerKind {
+    /// Instantiate the sampler.
+    pub fn build(&self) -> Box<dyn CategoricalSampler> {
+        match *self {
+            SamplerKind::Cdf => Box::new(CdfSampler),
+            SamplerKind::Gumbel => Box::new(GumbelSampler),
+            SamplerKind::GumbelLut { size, bits } => Box::new(GumbelLutSampler::new(size, bits)),
+        }
+    }
+}
+
+/// Statistics from one MCMC step (one outer-loop iteration of Alg. 1).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepStats {
+    /// RV updates performed.
+    pub updates: u64,
+    /// Proposals accepted (MH-style algorithms; Gibbs counts all).
+    pub accepted: u64,
+    /// Hardware-cost accounting (ops / bytes / samples).
+    pub cost: OpCost,
+}
+
+impl StepStats {
+    /// Accumulate another step's stats.
+    pub fn add(&mut self, o: &StepStats) {
+        self.updates += o.updates;
+        self.accepted += o.accepted;
+        self.cost.add(o.cost);
+    }
+}
+
+/// An MCMC transition kernel.
+pub trait Mcmc: Send {
+    /// Perform one step (one iteration of the outer `t` loop in Alg. 1),
+    /// mutating `x` in place.
+    fn step(&mut self, model: &dyn EnergyModel, x: &mut [u32], beta: f32, rng: &mut Rng)
+        -> StepStats;
+
+    /// Algorithm name.
+    fn name(&self) -> &'static str;
+}
+
+/// Build an algorithm instance with sensible defaults for `model`.
+pub fn build_algo(
+    kind: AlgoKind,
+    sampler: SamplerKind,
+    model: &dyn EnergyModel,
+    pas_flips: usize,
+) -> Box<dyn Mcmc> {
+    match kind {
+        AlgoKind::Mh => Box::new(MetropolisHastings::new()),
+        AlgoKind::Gibbs => Box::new(Gibbs::new(sampler.build())),
+        AlgoKind::BlockGibbs => Box::new(BlockGibbs::new(sampler.build(), model)),
+        AlgoKind::AsyncGibbs => Box::new(AsyncGibbs::new(sampler.build())),
+        AlgoKind::Pas => Box::new(PathAuxiliarySampler::new(pas_flips.max(1))),
+    }
+}
+
+/// Inverse-temperature (β) annealing schedule for optimization
+/// workloads (§II-A's simulated-annealing factor).
+#[derive(Clone, Copy, Debug)]
+pub enum BetaSchedule {
+    /// Constant β (posterior sampling).
+    Constant(f32),
+    /// Linear ramp from `from` to `to` over `steps`.
+    Linear {
+        /// Initial β.
+        from: f32,
+        /// Final β.
+        to: f32,
+        /// Ramp length in steps.
+        steps: usize,
+    },
+    /// Geometric ramp: β(t) = from · r^t, capped at `to`.
+    Geometric {
+        /// Initial β.
+        from: f32,
+        /// Final β (cap).
+        to: f32,
+        /// Per-step growth factor (> 1).
+        rate: f32,
+    },
+}
+
+impl BetaSchedule {
+    /// β at step `t`.
+    pub fn beta(&self, t: usize) -> f32 {
+        match *self {
+            BetaSchedule::Constant(b) => b,
+            BetaSchedule::Linear { from, to, steps } => {
+                if steps == 0 {
+                    to
+                } else {
+                    let f = (t as f32 / steps as f32).min(1.0);
+                    from + (to - from) * f
+                }
+            }
+            BetaSchedule::Geometric { from, to, rate } => (from * rate.powi(t as i32)).min(to),
+        }
+    }
+}
+
+/// A single MCMC chain: state + histograms + cumulative statistics.
+///
+/// This is the software twin of the accelerator's sample/histogram
+/// memories (Fig. 7a): `histogram[i][s]` counts how often RV `i` held
+/// state `s` at step boundaries — posterior marginals for Bayes nets.
+pub struct Chain<'m> {
+    model: &'m dyn EnergyModel,
+    algo: Box<dyn Mcmc>,
+    /// Current assignment.
+    pub x: Vec<u32>,
+    /// β schedule.
+    pub schedule: BetaSchedule,
+    /// Steps taken.
+    pub step_count: usize,
+    /// Cumulative statistics.
+    pub stats: StepStats,
+    /// Per-RV state histograms (flattened, offsets in `hist_offsets`).
+    hist: Vec<u64>,
+    hist_offsets: Vec<usize>,
+    rng: Rng,
+    /// Best objective seen and the assignment that achieved it.
+    pub best_objective: f64,
+    best_x: Vec<u32>,
+}
+
+impl<'m> Chain<'m> {
+    /// Create a chain with a random initial state.
+    pub fn new(
+        model: &'m dyn EnergyModel,
+        algo: Box<dyn Mcmc>,
+        schedule: BetaSchedule,
+        seed: u64,
+    ) -> Chain<'m> {
+        let mut rng = Rng::new(seed);
+        let x = crate::energy::random_state(model, &mut rng);
+        let mut hist_offsets = Vec::with_capacity(model.num_vars() + 1);
+        let mut acc = 0usize;
+        for i in 0..model.num_vars() {
+            hist_offsets.push(acc);
+            acc += model.num_states(i);
+        }
+        hist_offsets.push(acc);
+        let best_objective = model.objective(&x);
+        let best_x = x.clone();
+        Chain {
+            model,
+            algo,
+            x,
+            schedule,
+            step_count: 0,
+            stats: StepStats::default(),
+            hist: vec![0; acc],
+            hist_offsets,
+            rng,
+            best_objective,
+            best_x,
+        }
+    }
+
+    /// Run `n` steps, updating histograms and best-so-far.
+    pub fn run(&mut self, n: usize) {
+        for _ in 0..n {
+            let beta = self.schedule.beta(self.step_count);
+            let s = self
+                .algo
+                .step(self.model, &mut self.x, beta, &mut self.rng);
+            self.stats.add(&s);
+            self.step_count += 1;
+            for i in 0..self.model.num_vars() {
+                self.hist[self.hist_offsets[i] + self.x[i] as usize] += 1;
+            }
+            let obj = self.model.objective(&self.x);
+            if obj > self.best_objective {
+                self.best_objective = obj;
+                self.best_x.clone_from(&self.x);
+            }
+        }
+    }
+
+    /// Empirical marginal distribution of RV `i`.
+    pub fn marginal(&self, i: usize) -> Vec<f64> {
+        let span = &self.hist[self.hist_offsets[i]..self.hist_offsets[i + 1]];
+        let total: u64 = span.iter().sum();
+        span.iter()
+            .map(|&c| c as f64 / total.max(1) as f64)
+            .collect()
+    }
+
+    /// Best assignment found so far.
+    pub fn best_assignment(&self) -> &[u32] {
+        &self.best_x
+    }
+
+    /// The algorithm's name.
+    pub fn algo_name(&self) -> &'static str {
+        self.algo.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::PottsGrid;
+
+    #[test]
+    fn algo_kind_roundtrip() {
+        for k in [
+            AlgoKind::Mh,
+            AlgoKind::Gibbs,
+            AlgoKind::BlockGibbs,
+            AlgoKind::AsyncGibbs,
+            AlgoKind::Pas,
+        ] {
+            assert_eq!(AlgoKind::parse(&k.name().to_ascii_lowercase()), Some(k));
+        }
+        assert_eq!(AlgoKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn beta_schedules() {
+        let c = BetaSchedule::Constant(2.0);
+        assert_eq!(c.beta(0), 2.0);
+        assert_eq!(c.beta(100), 2.0);
+        let l = BetaSchedule::Linear {
+            from: 0.0,
+            to: 1.0,
+            steps: 10,
+        };
+        assert_eq!(l.beta(0), 0.0);
+        assert_eq!(l.beta(5), 0.5);
+        assert_eq!(l.beta(20), 1.0);
+        let g = BetaSchedule::Geometric {
+            from: 0.1,
+            to: 2.0,
+            rate: 2.0,
+        };
+        assert_eq!(g.beta(0), 0.1);
+        assert!(g.beta(10) <= 2.0);
+    }
+
+    #[test]
+    fn chain_histogram_totals() {
+        let m = PottsGrid::new(3, 3, 2, 0.5);
+        let algo = build_algo(AlgoKind::Gibbs, SamplerKind::Gumbel, &m, 1);
+        let mut chain = Chain::new(&m, algo, BetaSchedule::Constant(1.0), 7);
+        chain.run(50);
+        assert_eq!(chain.step_count, 50);
+        for i in 0..m.num_vars() {
+            let marg = chain.marginal(i);
+            assert!((marg.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn chain_tracks_best_objective() {
+        let m = PottsGrid::new(4, 4, 2, 1.0);
+        let algo = build_algo(AlgoKind::Gibbs, SamplerKind::Gumbel, &m, 1);
+        let mut chain = Chain::new(
+            &m,
+            algo,
+            BetaSchedule::Linear {
+                from: 0.2,
+                to: 3.0,
+                steps: 100,
+            },
+            3,
+        );
+        chain.run(200);
+        // Ferromagnetic 4x4 grid: ground state = all-equal, E = -24.
+        assert!(chain.best_objective >= 20.0, "best={}", chain.best_objective);
+        assert_eq!(
+            chain.best_objective,
+            m.objective(chain.best_assignment())
+        );
+    }
+}

@@ -1,0 +1,278 @@
+//! Categorical samplers: the baseline CDF (inverse-transform) sampler
+//! and the paper's Gumbel-max sampler (§V-D, Fig. 9).
+//!
+//! All samplers draw from the conditional distribution implied by a
+//! vector of **unnormalized energies** `e` at inverse temperature `β`:
+//! `P(s) ∝ exp(-β e_s)`. The CDF sampler must exponentiate and
+//! normalize first; the Gumbel sampler works directly in the energy
+//! (log) domain — this is the core hardware win the paper claims
+//! (2× op-count reduction, no CDT register file, no under/overflow).
+//!
+//! [`GumbelLutSampler`] additionally models the hardware LUT that maps
+//! uniform noise to Gumbel noise with finite size and precision; the
+//! Fig. 12 ablation sweeps those two parameters.
+
+use crate::rng::Rng;
+
+/// A sampler for discrete distributions given as unnormalized energies.
+pub trait CategoricalSampler: Send {
+    /// Draw a state index from `P(s) ∝ exp(-β e[s])`.
+    fn sample(&mut self, e: &[f32], beta: f32, rng: &mut Rng) -> usize;
+
+    /// Human-readable name (used by the benches).
+    fn name(&self) -> &'static str;
+
+    /// Abstract op count to draw one sample from a size-`n`
+    /// distribution — the Fig. 9(d)/Fig. 13 accounting.
+    fn ops_per_sample(&self, n: usize) -> u64;
+}
+
+/// Baseline inverse-transform (CDF) sampler, as used by SPU / PGMA.
+///
+/// Converts energies to probabilities (`exp`), accumulates the CDT,
+/// scales a uniform by the total sum and searches the table:
+/// `O(2N + 1)` sequential operations (Fig. 9d).
+#[derive(Clone, Debug, Default)]
+pub struct CdfSampler;
+
+impl CategoricalSampler for CdfSampler {
+    fn sample(&mut self, e: &[f32], beta: f32, rng: &mut Rng) -> usize {
+        debug_assert!(!e.is_empty());
+        // Shift by the min energy for numerical stability (the hardware
+        // baseline cannot do this — one of the weaknesses §V-D lists).
+        let emin = e.iter().copied().fold(f32::INFINITY, f32::min);
+        if emin.is_infinite() {
+            // all-infinite guard: uniform fallback
+            return rng.below(e.len());
+        }
+        let mut total = 0.0f64;
+        let mut cdf = Vec::with_capacity(e.len());
+        for &ei in e {
+            total += ((-beta * (ei - emin)) as f64).exp();
+            cdf.push(total);
+        }
+        let u = rng.uniform_f64() * total;
+        match cdf.iter().position(|&c| u < c) {
+            Some(i) => i,
+            None => e.len() - 1,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "cdf"
+    }
+
+    fn ops_per_sample(&self, n: usize) -> u64 {
+        // N exp + N accumulate + 1 scale, then sequential search
+        // (counted in the N accumulate pass by the paper): 2N + 1.
+        2 * n as u64 + 1
+    }
+}
+
+/// Exact (float-precision) Gumbel-max sampler:
+/// `argmax_s (-β e_s + g_s)`, `g_s ~ Gumbel(0,1)`.
+#[derive(Clone, Debug, Default)]
+pub struct GumbelSampler;
+
+impl CategoricalSampler for GumbelSampler {
+    fn sample(&mut self, e: &[f32], beta: f32, rng: &mut Rng) -> usize {
+        let mut best = 0usize;
+        let mut best_v = f32::NEG_INFINITY;
+        for (s, &ei) in e.iter().enumerate() {
+            let v = -beta * ei + rng.gumbel_f32();
+            if v > best_v {
+                best_v = v;
+                best = s;
+            }
+        }
+        best
+    }
+
+    fn name(&self) -> &'static str {
+        "gumbel"
+    }
+
+    fn ops_per_sample(&self, n: usize) -> u64 {
+        // One LUT lookup + add + compare per element, fully pipelined:
+        // O(N) (Fig. 9d).
+        n as u64
+    }
+}
+
+/// Hardware-model Gumbel sampler: the uniform→Gumbel conversion goes
+/// through a LUT of `size` entries quantized to `bits` of fixed-point
+/// precision (Fig. 9c / Fig. 12 ablation).
+#[derive(Clone, Debug)]
+pub struct GumbelLutSampler {
+    lut: Vec<f32>,
+    size: usize,
+    bits: u32,
+}
+
+impl GumbelLutSampler {
+    /// Build the LUT: entry `k` holds the Gumbel quantile at the bin
+    /// midpoint `(k + 0.5) / size`, then values are quantized to
+    /// `bits`-bit fixed point across the table's dynamic range.
+    pub fn new(size: usize, bits: u32) -> GumbelLutSampler {
+        assert!(size >= 2 && bits >= 2 && bits <= 24);
+        let raw: Vec<f32> = (0..size)
+            .map(|k| {
+                let u = (k as f32 + 0.5) / size as f32;
+                -(-(u.ln())).ln()
+            })
+            .collect();
+        let lo = raw.iter().copied().fold(f32::INFINITY, f32::min);
+        let hi = raw.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let levels = ((1u64 << bits) - 1) as f32;
+        let lut = raw
+            .iter()
+            .map(|&v| {
+                let q = ((v - lo) / (hi - lo) * levels).round() / levels;
+                lo + q * (hi - lo)
+            })
+            .collect();
+        GumbelLutSampler { lut, size, bits }
+    }
+
+    /// LUT size (number of entries).
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Fixed-point precision in bits.
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// One LUT-noise draw (hardware URNG index → table value).
+    #[inline]
+    pub fn noise(&self, rng: &mut Rng) -> f32 {
+        self.lut[rng.below(self.size)]
+    }
+}
+
+impl CategoricalSampler for GumbelLutSampler {
+    fn sample(&mut self, e: &[f32], beta: f32, rng: &mut Rng) -> usize {
+        let mut best = 0usize;
+        let mut best_v = f32::NEG_INFINITY;
+        for (s, &ei) in e.iter().enumerate() {
+            let v = -beta * ei + self.noise(rng);
+            if v > best_v {
+                best_v = v;
+                best = s;
+            }
+        }
+        best
+    }
+
+    fn name(&self) -> &'static str {
+        "gumbel-lut"
+    }
+
+    fn ops_per_sample(&self, n: usize) -> u64 {
+        n as u64
+    }
+}
+
+/// Empirical total-variation distance between a sampler's output
+/// histogram and the exact softmax over `e` — the Fig. 12 metric.
+pub fn sampler_tv_distance(
+    sampler: &mut dyn CategoricalSampler,
+    e: &[f32],
+    beta: f32,
+    draws: usize,
+    rng: &mut Rng,
+) -> f64 {
+    let mut counts = vec![0u64; e.len()];
+    for _ in 0..draws {
+        counts[sampler.sample(e, beta, rng)] += 1;
+    }
+    let emin = e.iter().copied().fold(f32::INFINITY, f32::min);
+    let probs: Vec<f64> = e
+        .iter()
+        .map(|&ei| ((-beta * (ei - emin)) as f64).exp())
+        .collect();
+    let z: f64 = probs.iter().sum();
+    0.5 * counts
+        .iter()
+        .zip(&probs)
+        .map(|(&c, &p)| (c as f64 / draws as f64 - p / z).abs())
+        .sum::<f64>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_distribution(sampler: &mut dyn CategoricalSampler, tol: f64) {
+        let e = [0.0f32, 1.0, 2.0];
+        let beta = 1.0;
+        let mut rng = Rng::new(77);
+        let tv = sampler_tv_distance(sampler, &e, beta, 200_000, &mut rng);
+        assert!(tv < tol, "{}: tv={tv}", sampler.name());
+    }
+
+    #[test]
+    fn cdf_matches_softmax() {
+        check_distribution(&mut CdfSampler, 0.01);
+    }
+
+    #[test]
+    fn gumbel_matches_softmax() {
+        check_distribution(&mut GumbelSampler, 0.01);
+    }
+
+    #[test]
+    fn gumbel_lut16x8_close() {
+        // Paper's chosen config: size 16, 8-bit — "good enough".
+        check_distribution(&mut GumbelLutSampler::new(16, 8), 0.06);
+    }
+
+    #[test]
+    fn lut_accuracy_improves_with_size() {
+        let e = [0.0f32, 0.5, 1.0, 1.5];
+        let mut rng = Rng::new(5);
+        let tv4 = sampler_tv_distance(&mut GumbelLutSampler::new(4, 8), &e, 1.0, 100_000, &mut rng);
+        let tv64 =
+            sampler_tv_distance(&mut GumbelLutSampler::new(64, 8), &e, 1.0, 100_000, &mut rng);
+        assert!(tv64 < tv4, "tv64={tv64} tv4={tv4}");
+    }
+
+    #[test]
+    fn deterministic_energy_dominates() {
+        // With beta huge, the min-energy state must always win.
+        let e = [5.0f32, 0.0, 5.0];
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            assert_eq!(GumbelSampler.sample(&e, 50.0, &mut rng), 1);
+            assert_eq!(CdfSampler.sample(&e, 50.0, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn infinite_energies_never_selected() {
+        let e = [f32::INFINITY, 0.0, f32::INFINITY];
+        let mut rng = Rng::new(2);
+        for _ in 0..100 {
+            assert_eq!(CdfSampler.sample(&e, 1.0, &mut rng), 1);
+            assert_eq!(GumbelSampler.sample(&e, 1.0, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn op_counts_match_paper() {
+        // Fig. 9(d): CDF O(2N+1) vs Gumbel O(N).
+        assert_eq!(CdfSampler.ops_per_sample(64), 129);
+        assert_eq!(GumbelSampler.ops_per_sample(64), 64);
+    }
+
+    #[test]
+    fn lut_is_quantized() {
+        let s = GumbelLutSampler::new(16, 4);
+        // 4-bit: at most 16 distinct values (trivially true for size 16),
+        // and all values within the Gumbel quantile range of the table.
+        let lo = s.lut.iter().copied().fold(f32::INFINITY, f32::min);
+        let hi = s.lut.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        assert!(lo < 0.0 && hi > 1.0, "lo={lo} hi={hi}");
+    }
+}

@@ -1,0 +1,213 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The whole reproduction is seeded and deterministic: every workload
+//! generator, MCMC chain and hardware-simulator URNG derives from a
+//! [`Rng`] (xoshiro256**) seeded through SplitMix64, mirroring the
+//! paper's hardware URNG (a free-running LFSR) closely enough for
+//! statistical purposes while staying reproducible across runs.
+
+/// SplitMix64 step — used to expand a single `u64` seed into the four
+/// words of xoshiro256** state (and as a cheap standalone mixer).
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256** — fast, high-quality, deterministic PRNG.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Create an RNG from a 64-bit seed (expanded via SplitMix64).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Derive an independent child stream (for parallel chains).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        let mut sm = self.next_u64() ^ stream.wrapping_mul(0xA24BAED4963EE407);
+        Rng::new(splitmix64(&mut sm))
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Next raw 32-bit output.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits of mantissa.
+    #[inline]
+    pub fn uniform_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[0, 1)` with 24 bits of mantissa.
+    #[inline]
+    pub fn uniform_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform in `(0, 1]` — safe as a `log()` argument.
+    #[inline]
+    pub fn uniform_open_f32(&mut self) -> f32 {
+        ((self.next_u64() >> 40) + 1) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire's multiply-shift, unbiased
+    /// enough for MCMC use; n must be > 0).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// A standard Gumbel(0,1) variate: `-ln(-ln(u))`.
+    #[inline]
+    pub fn gumbel_f32(&mut self) -> f32 {
+        let u = self.uniform_open_f32();
+        -(-(u.ln())).ln()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample an index from unnormalized non-negative weights.
+    pub fn categorical_weights(&mut self, w: &[f64]) -> usize {
+        let total: f64 = w.iter().sum();
+        let mut u = self.uniform_f64() * total;
+        for (i, &wi) in w.iter().enumerate() {
+            u -= wi;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        w.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_bounds() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let u = r.uniform_f32();
+            assert!((0.0..1.0).contains(&u));
+            let v = r.uniform_open_f32();
+            assert!(v > 0.0 && v <= 1.0);
+        }
+    }
+
+    #[test]
+    fn uniform_mean_close_to_half() {
+        let mut r = Rng::new(3);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.uniform_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_in_range_and_covers() {
+        let mut r = Rng::new(11);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let k = r.below(10);
+            assert!(k < 10);
+            seen[k] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn gumbel_mean_is_euler_gamma() {
+        // E[Gumbel(0,1)] = γ ≈ 0.5772
+        let mut r = Rng::new(5);
+        let n = 200_000;
+        let mean: f64 = (0..n).map(|_| r.gumbel_f32() as f64).sum::<f64>() / n as f64;
+        assert!((mean - 0.5772).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn categorical_weights_proportional() {
+        let mut r = Rng::new(9);
+        let w = [1.0, 2.0, 7.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..50_000 {
+            counts[r.categorical_weights(&w)] += 1;
+        }
+        let f2 = counts[2] as f64 / 50_000.0;
+        assert!((f2 - 0.7).abs() < 0.02, "f2={f2}");
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut root = Rng::new(1234);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(21);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

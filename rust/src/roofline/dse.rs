@@ -1,0 +1,203 @@
+//! Design-space exploration over the accelerator parameters (§VI-B,
+//! Fig. 11): sweep (T, K, S, M, B), evaluate every benchmark workload
+//! on the 3D roofline, and pick the configuration that maximizes the
+//! worst-case (min-normalized) throughput under an area budget.
+//!
+//! Area is modeled the way the paper reasons about "total hardware
+//! resource budget": CU area ∝ T·2^K PE adders, SU area ∝ S
+//! comparators + LUTs, memory area ∝ B ports + the fixed 4.8 MB SRAM.
+
+use super::{evaluate, WorkloadProfile};
+use crate::isa::HwConfig;
+
+/// One candidate configuration with its DSE score.
+#[derive(Clone, Debug)]
+pub struct DseCandidate {
+    /// The hardware parameters.
+    pub hw: HwConfig,
+    /// Relative area cost (arbitrary units).
+    pub area: f64,
+    /// Per-workload predicted throughput (GS/s), same order as input.
+    pub tp: Vec<f64>,
+    /// Geometric-mean throughput across workloads.
+    pub geomean_tp: f64,
+    /// Minimum normalized throughput (vs the best config per workload).
+    pub min_norm: f64,
+}
+
+/// Result of a DSE sweep.
+#[derive(Clone, Debug)]
+pub struct DseResult {
+    /// All evaluated candidates (area-feasible ones).
+    pub candidates: Vec<DseCandidate>,
+    /// Index of the selected candidate in `candidates`.
+    pub chosen: usize,
+}
+
+/// Relative area model.
+pub fn area_units(hw: &HwConfig) -> f64 {
+    let cu = (hw.t * (1 << hw.k)) as f64; // adder tree nodes
+    let su = hw.s as f64 * 1.5; // comparator + LUT share
+    let mem = hw.bw_words as f64 * 2.0; // port + wiring cost
+    cu + su + mem
+}
+
+/// Sweep the parameter grid and choose the best configuration under
+/// `area_budget` (units of [`area_units`]).
+///
+/// Selection criterion: maximize the geometric-mean predicted
+/// throughput across `workloads`, breaking ties toward smaller area —
+/// the paper's "push the spatial-mode roof apex toward these workloads
+/// while keeping the temporal workloads at full utilization".
+pub fn dse_sweep(workloads: &[WorkloadProfile], area_budget: f64) -> DseResult {
+    let t_opts = [16usize, 32, 64, 128];
+    let k_opts = [1usize, 2, 3, 4];
+    let m_opts = [4usize, 5, 6, 7];
+    let b_opts = [80usize, 160, 320, 640];
+
+    let mut candidates = Vec::new();
+    for &t in &t_opts {
+        for &k in &k_opts {
+            for &m in &m_opts {
+                for &b in &b_opts {
+                    let hw = HwConfig {
+                        t,
+                        k,
+                        s: 1 << m,
+                        m,
+                        bw_words: b,
+                        clock_ghz: 0.5,
+                        rf_banks: t.max(16),
+                        rf_regs_per_bank: 2 * (1 << k),
+                        lut_size: 16,
+                        lut_bits: 8,
+                        max_dist_size: 256,
+                    };
+                    let area = area_units(&hw);
+                    if area > area_budget {
+                        continue;
+                    }
+                    let tp: Vec<f64> = workloads
+                        .iter()
+                        .map(|w| evaluate(&hw, w).tp_gsps)
+                        .collect();
+                    let geomean_tp = (tp.iter().map(|v| v.max(1e-12).ln()).sum::<f64>()
+                        / tp.len().max(1) as f64)
+                        .exp();
+                    candidates.push(DseCandidate {
+                        hw,
+                        area,
+                        tp,
+                        geomean_tp,
+                        min_norm: 0.0,
+                    });
+                }
+            }
+        }
+    }
+    assert!(!candidates.is_empty(), "area budget admits no config");
+
+    // Normalize per workload against the best achieved TP.
+    let nw = workloads.len();
+    for wi in 0..nw {
+        let best = candidates
+            .iter()
+            .map(|c| c.tp[wi])
+            .fold(f64::MIN_POSITIVE, f64::max);
+        for c in &mut candidates {
+            let norm = c.tp[wi] / best;
+            if wi == 0 || norm < c.min_norm {
+                c.min_norm = norm;
+            }
+        }
+    }
+
+    let chosen = candidates
+        .iter()
+        .enumerate()
+        .max_by(|(_, a), (_, b)| {
+            (a.geomean_tp, -a.area)
+                .partial_cmp(&(b.geomean_tp, -b.area))
+                .unwrap()
+        })
+        .map(|(i, _)| i)
+        .unwrap();
+    DseResult { candidates, chosen }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mcmc::AlgoKind;
+    use crate::workloads;
+
+    fn bench_profiles() -> Vec<WorkloadProfile> {
+        workloads::suite_small()
+            .iter()
+            .map(|wl| WorkloadProfile::from_model(wl.model.as_ref(), wl.algorithm))
+            .collect()
+    }
+
+    #[test]
+    fn sweep_selects_within_budget() {
+        let ws = bench_profiles();
+        let budget = area_units(&HwConfig::paper_default()) * 1.05;
+        let res = dse_sweep(&ws, budget);
+        let c = &res.candidates[res.chosen];
+        assert!(c.area <= budget);
+        assert!(c.geomean_tp > 0.0);
+    }
+
+    #[test]
+    fn paper_config_is_near_optimal_at_its_budget() {
+        // §VI-B: at the paper's budget, the swept optimum should be the
+        // paper's own configuration (or within a few % of it).
+        let ws = bench_profiles();
+        let paper = HwConfig::paper_default();
+        let budget = area_units(&paper) * 1.01;
+        let res = dse_sweep(&ws, budget);
+        let chosen = &res.candidates[res.chosen];
+        let paper_tp: Vec<f64> = ws.iter().map(|w| evaluate(&paper, w).tp_gsps).collect();
+        let paper_geo = (paper_tp.iter().map(|v| v.max(1e-12).ln()).sum::<f64>()
+            / paper_tp.len() as f64)
+            .exp();
+        assert!(
+            chosen.geomean_tp >= paper_geo * 0.99,
+            "sweep found {} vs paper {}",
+            chosen.geomean_tp,
+            paper_geo
+        );
+        // And the paper config itself must not be far off the optimum.
+        assert!(
+            paper_geo >= chosen.geomean_tp * 0.5,
+            "paper config badly suboptimal: {} vs {}",
+            paper_geo,
+            chosen.geomean_tp
+        );
+    }
+
+    #[test]
+    fn bigger_budget_never_hurts() {
+        let ws = bench_profiles();
+        let small = dse_sweep(&ws, 800.0);
+        let big = dse_sweep(&ws, 3000.0);
+        assert!(
+            big.candidates[big.chosen].geomean_tp
+                >= small.candidates[small.chosen].geomean_tp - 1e-12
+        );
+    }
+
+    #[test]
+    fn profiles_cover_both_su_modes() {
+        let ws = bench_profiles();
+        assert!(ws.iter().any(|w| w.spatial));
+        assert!(ws.iter().any(|w| !w.spatial));
+    }
+
+    #[test]
+    #[should_panic(expected = "area budget admits no config")]
+    fn empty_budget_panics() {
+        let ws = bench_profiles();
+        dse_sweep(&ws, 1.0);
+    }
+}

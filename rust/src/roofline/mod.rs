@@ -1,0 +1,248 @@
+//! The MC²A 3D roofline model (§IV, Fig. 6) and the design-space
+//! exploration built on it (§VI-B, Fig. 11).
+//!
+//! The model adds a third axis to the classic roofline: alongside
+//! **Compute Intensity** (samples per CU op) and **Memory Intensity**
+//! (samples per byte), the vertical axis is **Throughput Performance**
+//! in Giga-samples/s. Three roofs bound the achievable envelope — the
+//! SU peak sampling rate, the CU peak scaled by CI, and the memory
+//! bandwidth scaled by MI — forming the rectangular-frustum shape of
+//! Fig. 6(a). A workload pins a (CI, MI) point; the envelope height at
+//! that point is the predicted throughput, and which roof is lowest
+//! names the bottleneck.
+
+pub mod dse;
+
+pub use dse::{area_units, dse_sweep, DseCandidate, DseResult};
+
+use crate::energy::EnergyModel;
+use crate::isa::HwConfig;
+use crate::mcmc::AlgoKind;
+
+/// A workload's position in the roofline plane plus the SU shape it
+/// needs (distribution size and mode decide the effective SU roof).
+#[derive(Clone, Copy, Debug)]
+pub struct WorkloadProfile {
+    /// Samples per CU op (CI), in samples/op.
+    pub ci: f64,
+    /// Samples per byte of memory traffic (MI), in samples/byte.
+    pub mi: f64,
+    /// Mean categorical distribution size per sample.
+    pub dist_size: f64,
+    /// Whether the schedule uses the spatial-mode SU (PAS) or temporal.
+    pub spatial: bool,
+}
+
+impl WorkloadProfile {
+    /// Profile a *(model, algorithm)* pair by aggregating the per-RV
+    /// update costs (§II-C's three steps).
+    pub fn from_model(model: &dyn EnergyModel, algo: AlgoKind) -> WorkloadProfile {
+        let n = model.num_vars();
+        let mut ops = 0u64;
+        let mut bytes = 0u64;
+        let mut samples = 0u64;
+        let mut dist = 0f64;
+        for i in 0..n {
+            let c = model.update_cost(i);
+            ops += c.ops;
+            bytes += c.bytes;
+            samples += c.samples;
+            dist += model.num_states(i) as f64;
+        }
+        let spatial = matches!(algo, AlgoKind::Pas);
+        let dist_size = if spatial {
+            // PAS samples indices from the full move table.
+            dist
+        } else {
+            dist / n as f64
+        };
+        WorkloadProfile {
+            ci: samples as f64 / ops.max(1) as f64,
+            mi: samples as f64 / bytes.max(1) as f64,
+            dist_size,
+            spatial,
+        }
+    }
+
+    /// The Fig. 6(c) Ising example: 4 neighbor reads (16 B) + state
+    /// write, ~10 ops, 1 sample from a size-2 distribution.
+    pub fn fig6_ising_example() -> WorkloadProfile {
+        WorkloadProfile {
+            ci: 1.0 / 10.0,
+            mi: 1.0 / 20.0,
+            dist_size: 2.0,
+            spatial: false,
+        }
+    }
+}
+
+/// Which roof limits the workload (Fig. 6(d) verdicts).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Bottleneck {
+    /// Sample-unit bound: CU and memory can feed more than the SU eats.
+    SamplerBound,
+    /// Compute bound (the CU-performance corner zone).
+    ComputeBound,
+    /// Memory-bandwidth bound (the gray zone of Fig. 11).
+    MemoryBound,
+    /// Within 10% of the apex — the golden balanced configuration.
+    Balanced,
+}
+
+/// Roofline evaluation of one workload on one hardware config.
+#[derive(Clone, Copy, Debug)]
+pub struct RooflinePoint {
+    /// Predicted throughput in GS/s.
+    pub tp_gsps: f64,
+    /// SU roof at this workload's distribution shape, GS/s.
+    pub su_roof: f64,
+    /// CU roof (CI × peak ops/s), GS/s.
+    pub cu_roof: f64,
+    /// Memory roof (MI × peak bytes/s), GS/s.
+    pub mem_roof: f64,
+    /// The binding constraint.
+    pub bottleneck: Bottleneck,
+}
+
+/// Effective SU peak sampling rate for a distribution shape, GS/s.
+///
+/// Temporal mode: S SEs each retire one size-N sample every N cycles →
+/// `S / N` samples/cycle. Spatial mode: the SE tree retires one sample
+/// every `ceil(N/S)` cycles → `1 / ceil(N/S)` samples/cycle.
+pub fn su_roof_gsps(hw: &HwConfig, dist_size: f64, spatial: bool) -> f64 {
+    let n = dist_size.max(1.0);
+    let samples_per_cycle = if spatial {
+        1.0 / (n / hw.s as f64).ceil()
+    } else {
+        hw.s as f64 / n
+    };
+    samples_per_cycle * hw.clock_ghz
+}
+
+/// Evaluate the 3D roofline at a workload point.
+pub fn evaluate(hw: &HwConfig, w: &WorkloadProfile) -> RooflinePoint {
+    let su_roof = su_roof_gsps(hw, w.dist_size, w.spatial);
+    let cu_roof = w.ci * hw.cu_peak_ops_per_cycle() as f64 * hw.clock_ghz;
+    let mem_roof = w.mi * hw.mem_peak_bytes_per_cycle() as f64 * hw.clock_ghz;
+    let tp = su_roof.min(cu_roof).min(mem_roof);
+    let bottleneck = if (su_roof.min(cu_roof).min(mem_roof) / su_roof.max(cu_roof).max(mem_roof))
+        > 0.9
+    {
+        Bottleneck::Balanced
+    } else if tp == su_roof && su_roof < cu_roof && su_roof < mem_roof {
+        Bottleneck::SamplerBound
+    } else if tp == cu_roof && cu_roof <= mem_roof {
+        Bottleneck::ComputeBound
+    } else {
+        Bottleneck::MemoryBound
+    };
+    RooflinePoint {
+        tp_gsps: tp,
+        su_roof,
+        cu_roof,
+        mem_roof,
+        bottleneck,
+    }
+}
+
+/// The roofline apex (the purple star of Fig. 6a): the (CI*, MI*) where
+/// the three roofs intersect — the workload shape this hardware serves
+/// with every unit saturated.
+pub fn apex(hw: &HwConfig, dist_size: f64, spatial: bool) -> (f64, f64) {
+    let su = su_roof_gsps(hw, dist_size, spatial);
+    let ci_star = su / (hw.cu_peak_ops_per_cycle() as f64 * hw.clock_ghz);
+    let mi_star = su / (hw.mem_peak_bytes_per_cycle() as f64 * hw.clock_ghz);
+    (ci_star, mi_star)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::PottsGrid;
+
+    #[test]
+    fn su_roof_shapes() {
+        let hw = HwConfig::paper_default(); // S = 64, 0.5 GHz
+        // Temporal, size-2: 64/2 = 32 samples/cycle → 16 GS/s.
+        assert!((su_roof_gsps(&hw, 2.0, false) - 16.0).abs() < 1e-9);
+        // Spatial, size-256: ceil(256/64) = 4 cycles → 0.125 GS/s.
+        assert!((su_roof_gsps(&hw, 256.0, true) - 0.125).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fig6_example_on_balanced_hw() {
+        // Fig. 6(d): config CU=10 OP/cy, BW=20 B/cy, SU=1 S/cy is the
+        // golden match for the Ising example (CI=0.1, MI=0.05).
+        let hw = HwConfig {
+            t: 1,
+            k: 3,
+            s: 2,
+            m: 1,
+            bw_words: 5,
+            clock_ghz: 0.5,
+            rf_banks: 4,
+            rf_regs_per_bank: 16,
+            lut_size: 16,
+            lut_bits: 8,
+            max_dist_size: 256,
+        };
+        // CU peak = 1×(8+2) = 10 ops/cycle; mem = 20 B/cycle; SU
+        // temporal size-2 = 2/2 = 1 sample/cycle. All three roofs equal
+        // 0.5 GS/s → balanced apex.
+        let w = WorkloadProfile::fig6_ising_example();
+        let p = evaluate(&hw, &w);
+        assert!((p.su_roof - 0.5).abs() < 1e-9, "{p:?}");
+        assert!((p.cu_roof - 0.5).abs() < 1e-9);
+        assert!((p.mem_roof - 0.5).abs() < 1e-9);
+        assert_eq!(p.bottleneck, Bottleneck::Balanced);
+    }
+
+    #[test]
+    fn scaling_cu_down_makes_compute_bound() {
+        let mut hw = HwConfig::paper_default();
+        hw.t = 1;
+        hw.k = 0; // CU peak = 3 ops/cycle
+        let w = WorkloadProfile::fig6_ising_example();
+        let p = evaluate(&hw, &w);
+        assert_eq!(p.bottleneck, Bottleneck::ComputeBound);
+        assert!(p.tp_gsps < p.su_roof);
+    }
+
+    #[test]
+    fn scaling_bw_down_makes_memory_bound() {
+        let mut hw = HwConfig::paper_default();
+        hw.bw_words = 1;
+        let w = WorkloadProfile::fig6_ising_example();
+        let p = evaluate(&hw, &w);
+        assert_eq!(p.bottleneck, Bottleneck::MemoryBound);
+    }
+
+    #[test]
+    fn apex_matches_roof_intersection() {
+        let hw = HwConfig::paper_default();
+        let (ci, mi) = apex(&hw, 2.0, false);
+        let w = WorkloadProfile {
+            ci,
+            mi,
+            dist_size: 2.0,
+            spatial: false,
+        };
+        let p = evaluate(&hw, &w);
+        assert_eq!(p.bottleneck, Bottleneck::Balanced);
+        assert!((p.cu_roof - p.su_roof).abs() / p.su_roof < 1e-9);
+        assert!((p.mem_roof - p.su_roof).abs() / p.su_roof < 1e-9);
+    }
+
+    #[test]
+    fn profile_from_model_sane() {
+        let m = PottsGrid::new(8, 8, 2, 1.0);
+        let w = WorkloadProfile::from_model(&m, AlgoKind::BlockGibbs);
+        assert!(w.ci > 0.0 && w.ci < 1.0); // several ops per sample
+        assert!(w.mi > 0.0 && w.mi < 1.0); // several bytes per sample
+        assert_eq!(w.dist_size, 2.0);
+        assert!(!w.spatial);
+        let wp = WorkloadProfile::from_model(&m, AlgoKind::Pas);
+        assert!(wp.spatial);
+        assert!(wp.dist_size > 100.0); // full move table
+    }
+}

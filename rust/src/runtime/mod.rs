@@ -1,0 +1,238 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`) and executes them from Rust.
+//!
+//! This is the request-path half of the three-layer architecture:
+//! Python runs once at build time (`make artifacts`); afterwards the
+//! Rust binary is self-contained — every software-baseline measurement
+//! (Fig. 5d, Fig. 14 "CPU") goes through this module, never through a
+//! Python interpreter.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Shape+dtype of one artifact argument (dtype is always f32 in this
+/// reproduction; scalars have an empty dims list).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArgSpec {
+    /// Dimensions; empty = scalar.
+    pub dims: Vec<usize>,
+}
+
+impl ArgSpec {
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+
+    fn parse(s: &str) -> Result<ArgSpec> {
+        let (shape, dtype) = s
+            .split_once(':')
+            .ok_or_else(|| anyhow!("bad arg spec {s:?}"))?;
+        if dtype != "f32" {
+            bail!("unsupported dtype {dtype}");
+        }
+        if shape == "scalar" {
+            return Ok(ArgSpec { dims: Vec::new() });
+        }
+        let dims = shape
+            .split('x')
+            .map(|d| d.parse::<usize>().context("bad dim"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ArgSpec { dims })
+    }
+}
+
+/// One artifact's manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    /// Entry-point name (file stem).
+    pub name: String,
+    /// Argument shapes in call order.
+    pub inputs: Vec<ArgSpec>,
+    /// Number of tuple outputs.
+    pub num_outputs: usize,
+    /// Static-parameter note from the AOT step (informational).
+    pub static_params: String,
+}
+
+/// Parse `manifest.txt` (`name|in0,in1,...|out_count|static`).
+pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactSpec>> {
+    let mut specs = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = line.split('|').collect();
+        if parts.len() != 4 {
+            bail!("manifest line {}: expected 4 fields", lineno + 1);
+        }
+        let inputs = parts[1]
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(ArgSpec::parse)
+            .collect::<Result<Vec<_>>>()?;
+        specs.push(ArtifactSpec {
+            name: parts[0].to_string(),
+            inputs,
+            num_outputs: parts[2].parse().context("bad output count")?,
+            static_params: parts[3].to_string(),
+        });
+    }
+    Ok(specs)
+}
+
+/// A loaded, compiled artifact ready for execution.
+pub struct LoadedArtifact {
+    /// Manifest metadata.
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime: one CPU client + the compiled artifact set.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts: HashMap<String, LoadedArtifact>,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load every artifact listed in
+    /// `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("reading {}/manifest.txt — run `make artifacts`", dir.display()))?;
+        let mut artifacts = HashMap::new();
+        for spec in parse_manifest(&manifest)? {
+            let path = dir.join(format!("{}.hlo.txt", spec.name));
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", spec.name))?;
+            artifacts.insert(spec.name.clone(), LoadedArtifact { spec, exe });
+        }
+        Ok(Runtime {
+            client,
+            artifacts,
+            dir,
+        })
+    }
+
+    /// PJRT platform name (should be "cpu"/"Host").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Artifact directory this runtime was loaded from.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Names of all loaded artifacts.
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.artifacts.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    /// Metadata for one artifact.
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.get(name).map(|a| &a.spec)
+    }
+
+    /// Execute artifact `name` on f32 buffers (one slice per argument,
+    /// shapes validated against the manifest). Returns the flattened
+    /// f32 contents of each tuple output.
+    pub fn execute_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let art = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}; have {:?}", self.names()))?;
+        if inputs.len() != art.spec.inputs.len() {
+            bail!(
+                "{name}: got {} inputs, manifest says {}",
+                inputs.len(),
+                art.spec.inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (k, (&data, spec)) in inputs.iter().zip(&art.spec.inputs).enumerate() {
+            if data.len() != spec.elements() {
+                bail!(
+                    "{name}: input {k} has {} elements, expected {} ({:?})",
+                    data.len(),
+                    spec.elements(),
+                    spec.dims
+                );
+            }
+            let lit = if spec.dims.is_empty() {
+                xla::Literal::scalar(data[0])
+            } else {
+                let dims: Vec<i64> = spec.dims.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("{name}: reshape input {k}: {e:?}"))?
+            };
+            literals.push(lit);
+        }
+        let result = art
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("{name}: execute: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{name}: fetch: {e:?}"))?;
+        let outs = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("{name}: untuple: {e:?}"))?;
+        let mut flat = Vec::with_capacity(outs.len());
+        for (k, o) in outs.into_iter().enumerate() {
+            flat.push(
+                o.to_vec::<f32>()
+                    .map_err(|e| anyhow!("{name}: output {k} to f32: {e:?}"))?,
+            );
+        }
+        Ok(flat)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arg_spec_parsing() {
+        assert_eq!(ArgSpec::parse("4x8:f32").unwrap().dims, vec![4, 8]);
+        assert_eq!(ArgSpec::parse("scalar:f32").unwrap().dims, Vec::<usize>::new());
+        assert_eq!(ArgSpec::parse("scalar:f32").unwrap().elements(), 1);
+        assert_eq!(ArgSpec::parse("4x8:f32").unwrap().elements(), 32);
+        assert!(ArgSpec::parse("4x8:i64").is_err());
+        assert!(ArgSpec::parse("garbage").is_err());
+    }
+
+    #[test]
+    fn manifest_parsing() {
+        let text = "\
+# comment
+gumbel_sample|64x256:f32,64x256:f32,scalar:f32|1|B=64,N=256
+ising_step|64x64:f32,64x64:f32,64x64:f32,scalar:f32,scalar:f32|1|H=64,W=64
+";
+        let specs = parse_manifest(text).unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].name, "gumbel_sample");
+        assert_eq!(specs[0].inputs.len(), 3);
+        assert_eq!(specs[0].num_outputs, 1);
+        assert_eq!(specs[1].inputs[0].dims, vec![64, 64]);
+    }
+
+    #[test]
+    fn manifest_rejects_malformed() {
+        assert!(parse_manifest("name|only|three").is_err());
+    }
+}

@@ -1,0 +1,121 @@
+//! Accelerator energy model.
+//!
+//! The paper synthesizes the RTL at Intel 16 nm / 500 MHz and reports
+//! energy efficiency in GS/s/W (Fig. 15). We cannot run Genus here, so
+//! the simulator charges per-event energies from published 16 nm-class
+//! constants (FP32 ALU ≈ 1 pJ, small-SRAM access ≈ 5 pJ/word, RF access
+//! ≈ 0.06 pJ/word) plus a static-power floor. Absolute watts are
+//! therefore estimates; the *ratios* against the CPU/GPU/TPU baseline
+//! models (which use the same constants philosophy) are the reproduced
+//! quantity. See DESIGN.md §4.
+
+/// Per-event energy constants in picojoules (16 nm-class).
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyParams {
+    /// One CU arithmetic op (add/mult averaged).
+    pub pj_cu_op: f64,
+    /// One SE event (LUT lookup + add + compare).
+    pub pj_se_op: f64,
+    /// One 32-bit RF read or write.
+    pub pj_rf_word: f64,
+    /// One 32-bit on-chip SRAM access (8 KB bank).
+    pub pj_sram_word: f64,
+    /// Instruction fetch + decode per cycle.
+    pub pj_ifetch: f64,
+    /// Crossbar traversal per routed word.
+    pub pj_xbar_word: f64,
+    /// Static (leakage + clock tree) power in watts.
+    pub static_watts: f64,
+}
+
+impl Default for EnergyParams {
+    fn default() -> EnergyParams {
+        EnergyParams {
+            pj_cu_op: 1.0,
+            pj_se_op: 0.4,
+            pj_rf_word: 0.06,
+            pj_sram_word: 5.0,
+            pj_ifetch: 3.0,
+            pj_xbar_word: 0.15,
+            static_watts: 0.05,
+        }
+    }
+}
+
+/// Accumulated energy breakdown in picojoules.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EnergyBreakdown {
+    /// CU arithmetic.
+    pub cu: f64,
+    /// SU sampling.
+    pub su: f64,
+    /// Register file traffic.
+    pub rf: f64,
+    /// On-chip SRAM traffic.
+    pub sram: f64,
+    /// Instruction fetch/decode.
+    pub ifetch: f64,
+    /// Crossbar.
+    pub xbar: f64,
+    /// Static energy (leakage × time).
+    pub static_: f64,
+}
+
+impl EnergyBreakdown {
+    /// Total energy in picojoules.
+    pub fn total_pj(&self) -> f64 {
+        self.cu + self.su + self.rf + self.sram + self.ifetch + self.xbar + self.static_
+    }
+
+    /// Total energy in joules.
+    pub fn total_j(&self) -> f64 {
+        self.total_pj() * 1e-12
+    }
+
+    /// Average power in watts over `seconds`.
+    pub fn avg_watts(&self, seconds: f64) -> f64 {
+        if seconds <= 0.0 {
+            0.0
+        } else {
+            self.total_j() / seconds
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_add_up() {
+        let b = EnergyBreakdown {
+            cu: 1.0,
+            su: 2.0,
+            rf: 3.0,
+            sram: 4.0,
+            ifetch: 5.0,
+            xbar: 6.0,
+            static_: 7.0,
+        };
+        assert_eq!(b.total_pj(), 28.0);
+        assert!((b.total_j() - 28.0e-12).abs() < 1e-24);
+    }
+
+    #[test]
+    fn power_at_one_second() {
+        let b = EnergyBreakdown {
+            cu: 1e12, // 1 J
+            ..Default::default()
+        };
+        assert!((b.avg_watts(1.0) - 1.0).abs() < 1e-9);
+        assert_eq!(b.avg_watts(0.0), 0.0);
+    }
+
+    #[test]
+    fn sram_dominates_alu_per_word() {
+        // Sanity: memory access must cost more than an ALU op — the
+        // premise behind the paper's memory-intensity roofline axis.
+        let p = EnergyParams::default();
+        assert!(p.pj_sram_word > p.pj_cu_op);
+    }
+}

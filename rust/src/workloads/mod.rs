@@ -1,0 +1,271 @@
+//! The Table I benchmark suite.
+//!
+//! Each constructor returns a ready-to-run workload: the energy model,
+//! the algorithm the paper pairs it with, and metadata for the
+//! benchmark harness. Bayes-net CPTs (Earthquake, Survey, Cancer) are
+//! transcribed from the published bnlearn repository networks; the
+//! Alarm net uses the published 37-node/46-edge structure with
+//! deterministic synthetic CPTs, and the graph instances are size- and
+//! degree-matched synthetic stand-ins (DESIGN.md §4).
+
+mod alarm;
+mod bayesnets;
+
+pub use alarm::alarm;
+pub use bayesnets::{cancer, earthquake, survey};
+
+use crate::energy::{EnergyModel, MaxCliqueModel, MaxCutModel, MisModel, PottsGrid, Rbm};
+use crate::graph::{erdos_renyi_with_edges, power_law_graph, random_regular_ish};
+use crate::mcmc::AlgoKind;
+use crate::rng::Rng;
+
+/// A named benchmark workload (one Table I row).
+pub struct Workload {
+    /// Table I name.
+    pub name: &'static str,
+    /// Model family label (Table I "Model").
+    pub model_kind: &'static str,
+    /// Application description.
+    pub application: &'static str,
+    /// The MCMC algorithm Table I pairs with this workload.
+    pub algorithm: AlgoKind,
+    /// PAS path length (ignored by other algorithms).
+    pub pas_flips: usize,
+    /// The energy model.
+    pub model: Box<dyn EnergyModel>,
+}
+
+impl Workload {
+    /// Node count (Table I column).
+    pub fn nodes(&self) -> usize {
+        self.model.num_vars()
+    }
+
+    /// Edge count of the interaction graph (Table I column).
+    pub fn edges(&self) -> usize {
+        self.model.interaction().num_edges()
+    }
+}
+
+/// Earthquake Bayes net (5 nodes / 4 edges, Block Gibbs).
+pub fn wl_earthquake() -> Workload {
+    Workload {
+        name: "Earthquake",
+        model_kind: "Bayes Net",
+        application: "models the probability of an earthquake occurring",
+        algorithm: AlgoKind::BlockGibbs,
+        pas_flips: 1,
+        model: Box::new(earthquake()),
+    }
+}
+
+/// Survey Bayes net (6 nodes / 6 edges, Block Gibbs).
+pub fn wl_survey() -> Workload {
+    Workload {
+        name: "Survey",
+        model_kind: "Bayes Net",
+        application: "models student grades, intelligence, and difficulty relationships",
+        algorithm: AlgoKind::BlockGibbs,
+        pas_flips: 1,
+        model: Box::new(survey()),
+    }
+}
+
+/// Cancer Bayes net (5 nodes / 4 edges) — used in Fig. 14.
+pub fn wl_cancer() -> Workload {
+    Workload {
+        name: "Cancer",
+        model_kind: "Bayes Net",
+        application: "pollution/smoking cancer risk model",
+        algorithm: AlgoKind::BlockGibbs,
+        pas_flips: 1,
+        model: Box::new(cancer()),
+    }
+}
+
+/// Alarm Bayes net (37 nodes / 46 edges) — used in Fig. 14.
+pub fn wl_alarm() -> Workload {
+    Workload {
+        name: "Alarm",
+        model_kind: "Bayes Net",
+        application: "patient-monitoring diagnostic network",
+        algorithm: AlgoKind::BlockGibbs,
+        pas_flips: 1,
+        model: Box::new(alarm()),
+    }
+}
+
+/// Image-segmentation MRF. `full` gives the Table I scale (150 k nodes,
+/// 600 k edges via 8-connectivity); otherwise a 64×64 miniature.
+pub fn wl_image_seg(full: bool) -> Workload {
+    let (h, w) = if full { (387, 388) } else { (64, 64) };
+    let labels = 2; // Ising-labelled segmentation per Table I
+    let mut rng = Rng::new(0x5E6);
+    // Synthetic image: two smooth blobs + noise drive the unary terms.
+    let mut unary = vec![0.0f32; h * w * labels];
+    for r in 0..h {
+        for c in 0..w {
+            let fr = r as f32 / h as f32 - 0.5;
+            let fc = c as f32 / w as f32 - 0.5;
+            let signal = (fr * 6.0).sin() * (fc * 6.0).cos();
+            let noisy = signal + (rng.uniform_f32() - 0.5) * 0.8;
+            let p1 = 1.0 / (1.0 + (-4.0 * noisy).exp());
+            let i = r * w + c;
+            unary[i * labels] = -(1.0 - p1).max(1e-6).ln();
+            unary[i * labels + 1] = -p1.max(1e-6).ln();
+        }
+    }
+    let mut grid = PottsGrid::with_connectivity(h, w, labels, 0.8, true);
+    grid.set_unary(unary);
+    Workload {
+        name: "Image Seg.",
+        model_kind: "MRF/Ising",
+        application: "using MRF to perform image segmentation",
+        algorithm: AlgoKind::BlockGibbs,
+        pas_flips: 1,
+        model: Box::new(grid),
+    }
+}
+
+/// ER-1347 Maximum Independent Set (PAS), Table I "ER700" row
+/// (1347 nodes / 5978 edges).
+pub fn wl_mis_er() -> Workload {
+    let g = erdos_renyi_with_edges(1347, 5978, 0xE7);
+    Workload {
+        name: "ER700",
+        model_kind: "MIS",
+        application: "Maximum Independent Set (Satlib-style ER graph)",
+        algorithm: AlgoKind::Pas,
+        pas_flips: 8,
+        model: Box::new(MisModel::new(g, 1.5, None)),
+    }
+}
+
+/// Twitter MaxClique (PAS), 247 nodes / 12 174 edges.
+pub fn wl_maxclique_twitter() -> Workload {
+    let g = power_law_graph(247, 12_174, 0x7717);
+    Workload {
+        name: "Twitter",
+        model_kind: "Max clique",
+        application: "Maximum subset of vertices, all adjacent to each other",
+        algorithm: AlgoKind::Pas,
+        pas_flips: 8,
+        model: Box::new(MaxCliqueModel::new(g, 1.5, None)),
+    }
+}
+
+/// Optsicom MaxCut (PAS), 125 nodes / 375 edges, small integer weights.
+pub fn wl_maxcut_optsicom() -> Workload {
+    let (g, _) = random_regular_ish(125, 375, (1, 10), 0x097);
+    Workload {
+        name: "Optsicom",
+        model_kind: "MaxCut",
+        application: "Partition vertices into two sets to maximize edge cuts",
+        algorithm: AlgoKind::Pas,
+        pas_flips: 8,
+        model: Box::new(MaxCutModel::new(g, None)),
+    }
+}
+
+/// Binary RBM 784×25 (PAS), Table I EBM row (809 nodes / ~19 k edges).
+pub fn wl_rbm() -> Workload {
+    Workload {
+        name: "RBM",
+        model_kind: "EBM",
+        application: "Binary RBM with hidden dimension 25",
+        algorithm: AlgoKind::Pas,
+        pas_flips: 8,
+        model: Box::new(Rbm::synthetic(784, 25, 0xB0)),
+    }
+}
+
+/// The full Table I suite (full-scale models; slow to construct for the
+/// MRF row — prefer [`suite_small`] in tests).
+pub fn suite_full() -> Vec<Workload> {
+    vec![
+        wl_earthquake(),
+        wl_survey(),
+        wl_image_seg(true),
+        wl_mis_er(),
+        wl_maxclique_twitter(),
+        wl_maxcut_optsicom(),
+        wl_rbm(),
+    ]
+}
+
+/// Scaled-down suite with identical structure (fast tests / CI).
+pub fn suite_small() -> Vec<Workload> {
+    vec![
+        wl_earthquake(),
+        wl_survey(),
+        wl_image_seg(false),
+        Workload {
+            name: "ER-small",
+            model_kind: "MIS",
+            application: "small ER MIS",
+            algorithm: AlgoKind::Pas,
+            pas_flips: 4,
+            model: Box::new(MisModel::new(erdos_renyi_with_edges(120, 530, 0xE7), 1.5, None)),
+        },
+        Workload {
+            name: "Twitter-small",
+            model_kind: "Max clique",
+            application: "small power-law clique",
+            algorithm: AlgoKind::Pas,
+            pas_flips: 4,
+            model: Box::new(MaxCliqueModel::new(power_law_graph(60, 700, 0x7717), 1.5, None)),
+        },
+        wl_maxcut_optsicom(),
+        Workload {
+            name: "RBM-small",
+            model_kind: "EBM",
+            application: "small binary RBM",
+            algorithm: AlgoKind::Pas,
+            pas_flips: 4,
+            model: Box::new(Rbm::synthetic(64, 8, 0xB0)),
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_row_counts() {
+        let eq = wl_earthquake();
+        assert_eq!(eq.nodes(), 5);
+        let sv = wl_survey();
+        assert_eq!(sv.nodes(), 6);
+        let mis = wl_mis_er();
+        assert_eq!(mis.nodes(), 1347);
+        assert_eq!(mis.edges(), 5978);
+        let tw = wl_maxclique_twitter();
+        assert_eq!(tw.nodes(), 247);
+        let mc = wl_maxcut_optsicom();
+        assert_eq!(mc.nodes(), 125);
+        assert_eq!(mc.edges(), 375);
+        let rbm = wl_rbm();
+        assert_eq!(rbm.nodes(), 809);
+        assert_eq!(rbm.edges(), 19_600);
+    }
+
+    #[test]
+    fn image_seg_full_scale_counts() {
+        let seg = wl_image_seg(true);
+        // Table I: ~150k nodes, ~600k edges.
+        assert!((149_000..=151_000).contains(&seg.nodes()), "{}", seg.nodes());
+        assert!((595_000..=605_000).contains(&seg.edges()), "{}", seg.edges());
+    }
+
+    #[test]
+    fn small_suite_runs_one_step_each() {
+        use crate::mcmc::{build_algo, BetaSchedule, Chain, SamplerKind};
+        for wl in suite_small() {
+            let algo = build_algo(wl.algorithm, SamplerKind::Gumbel, wl.model.as_ref(), wl.pas_flips);
+            let mut chain = Chain::new(wl.model.as_ref(), algo, BetaSchedule::Constant(1.0), 9);
+            chain.run(1);
+            assert!(chain.stats.updates > 0, "{} made no updates", wl.name);
+        }
+    }
+}

@@ -1,0 +1,177 @@
+//! Cross-module integration tests for the MCMC software stack:
+//! algorithm agreement on posterior marginals, COP convergence, and
+//! the Fig. 5 profiler behaviors.
+
+use mc2a::energy::{EnergyModel, MaxCutModel, PottsGrid};
+use mc2a::graph::erdos_renyi_with_edges;
+use mc2a::mcmc::{build_algo, run_to_accuracy, AlgoKind, BetaSchedule, Chain, SamplerKind};
+use mc2a::workloads;
+
+/// All exact-kernel algorithms must agree on Bayes-net marginals.
+#[test]
+fn algorithms_agree_on_earthquake_marginals() {
+    let net = workloads::earthquake();
+    let exact = net.exact_marginal(2); // P(Alarm)
+    for algo in [AlgoKind::Gibbs, AlgoKind::BlockGibbs, AlgoKind::Pas] {
+        let a = build_algo(algo, SamplerKind::Gumbel, &net, 2);
+        let mut chain = Chain::new(&net, a, BetaSchedule::Constant(1.0), 0x7e57);
+        chain.run(120_000);
+        let emp = chain.marginal(2);
+        assert!(
+            (emp[1] - exact[1]).abs() < 0.01,
+            "{algo:?}: {} vs exact {}",
+            emp[1],
+            exact[1]
+        );
+    }
+}
+
+/// MH with Metropolis acceptance must match Gibbs statistically.
+#[test]
+fn mh_matches_gibbs_on_ising() {
+    let m = PottsGrid::new(4, 4, 2, 0.4);
+    let run = |algo| {
+        let a = build_algo(algo, SamplerKind::Gumbel, &m, 1);
+        let mut chain = Chain::new(&m, a, BetaSchedule::Constant(1.0), 0xA);
+        chain.run(60_000);
+        let mut up = 0.0;
+        for i in 0..m.num_vars() {
+            up += chain.marginal(i)[1];
+        }
+        up / m.num_vars() as f64
+    };
+    let gibbs = run(AlgoKind::Gibbs);
+    let mh = run(AlgoKind::Mh);
+    assert!((gibbs - mh).abs() < 0.02, "gibbs={gibbs} mh={mh}");
+}
+
+/// The survey network's travel-mode marginal against enumeration.
+#[test]
+fn survey_travel_marginal() {
+    let net = workloads::survey();
+    let exact = net.exact_marginal(5);
+    let a = build_algo(AlgoKind::BlockGibbs, SamplerKind::Gumbel, &net, 1);
+    let mut chain = Chain::new(&net, a, BetaSchedule::Constant(1.0), 3);
+    chain.run(150_000);
+    let emp = chain.marginal(5);
+    for s in 0..3 {
+        assert!(
+            (emp[s] - exact[s]).abs() < 0.012,
+            "state {s}: {} vs {}",
+            emp[s],
+            exact[s]
+        );
+    }
+}
+
+/// PAS must converge in no more steps than MH on a frustrated COP —
+/// the paper's observation 1 (Fig. 5a/b).
+#[test]
+fn pas_needs_fewer_steps_than_mh_on_maxcut() {
+    let g = erdos_renyi_with_edges(80, 320, 0x5eed);
+    let m = MaxCutModel::new(g, None);
+    let schedule = BetaSchedule::Linear {
+        from: 0.3,
+        to: 3.0,
+        steps: 300,
+    };
+    // Calibrate the reachable optimum.
+    let cal = build_algo(AlgoKind::Pas, SamplerKind::Gumbel, &m, 8);
+    let tr = run_to_accuracy(&m, cal, schedule, f64::INFINITY, 1500, 25, 1);
+    let best = tr.points.last().unwrap().best_objective;
+
+    let goal_steps = |algo: AlgoKind, flips: usize| -> u64 {
+        let a = build_algo(algo, SamplerKind::Gumbel, &m, flips);
+        let tr = run_to_accuracy(&m, a, schedule, f64::INFINITY, 1500, 10, 2);
+        tr.points
+            .iter()
+            .find(|p| p.best_objective >= 0.92 * best)
+            .map(|p| p.steps)
+            .unwrap_or(u64::MAX)
+    };
+    let pas = goal_steps(AlgoKind::Pas, 8);
+    let mh = goal_steps(AlgoKind::Mh, 8);
+    assert!(
+        pas <= mh,
+        "PAS needed {pas} steps, MH needed {mh} — expected PAS ≤ MH"
+    );
+}
+
+/// And PAS consumes more ops per update than Gibbs (the trade-off the
+/// paper highlights: gradient info costs compute).
+#[test]
+fn pas_consumes_more_ops_per_update() {
+    let g = erdos_renyi_with_edges(80, 320, 0x5eed);
+    let m = MaxCutModel::new(g, None);
+    let ops_per_update = |algo: AlgoKind| {
+        let a = build_algo(algo, SamplerKind::Gumbel, &m, 8);
+        let mut chain = Chain::new(&m, a, BetaSchedule::Constant(1.0), 5);
+        chain.run(20);
+        chain.stats.cost.ops as f64 / chain.stats.updates.max(1) as f64
+    };
+    assert!(ops_per_update(AlgoKind::Pas) > ops_per_update(AlgoKind::Gibbs));
+}
+
+/// Hardware-LUT sampler quality: chain marginals close to exact kernel
+/// (Fig. 12's "16×8-bit is good enough" conclusion).
+#[test]
+fn lut_sampler_chain_quality() {
+    let net = workloads::earthquake();
+    let exact = net.exact_marginal(2);
+    let a = build_algo(
+        AlgoKind::Gibbs,
+        SamplerKind::GumbelLut { size: 16, bits: 8 },
+        &net,
+        1,
+    );
+    let mut chain = Chain::new(&net, a, BetaSchedule::Constant(1.0), 0xb0);
+    chain.run(120_000);
+    let emp = chain.marginal(2);
+    assert!(
+        (emp[1] - exact[1]).abs() < 0.02,
+        "{} vs {}",
+        emp[1],
+        exact[1]
+    );
+}
+
+/// Full small-suite smoke: every Table I workload runs every compatible
+/// algorithm for a few steps without panicking and makes progress.
+#[test]
+fn suite_smoke_all_algorithms() {
+    for wl in workloads::suite_small() {
+        for algo in [
+            AlgoKind::Gibbs,
+            AlgoKind::BlockGibbs,
+            AlgoKind::AsyncGibbs,
+            AlgoKind::Pas,
+        ] {
+            let a = build_algo(algo, SamplerKind::Gumbel, wl.model.as_ref(), 2);
+            let mut chain = Chain::new(wl.model.as_ref(), a, BetaSchedule::Constant(0.8), 1);
+            chain.run(3);
+            assert!(chain.stats.updates > 0, "{} {:?}", wl.name, algo);
+        }
+    }
+}
+
+/// Annealed optimization beats constant-temperature sampling on MaxCut.
+#[test]
+fn annealing_beats_constant_beta() {
+    let wl = workloads::wl_maxcut_optsicom();
+    let run = |schedule| {
+        let a = build_algo(AlgoKind::Pas, SamplerKind::Gumbel, wl.model.as_ref(), 8);
+        let mut chain = Chain::new(wl.model.as_ref(), a, schedule, 0xAA);
+        chain.run(400);
+        chain.best_objective
+    };
+    let annealed = run(BetaSchedule::Linear {
+        from: 0.2,
+        to: 4.0,
+        steps: 300,
+    });
+    let hot = run(BetaSchedule::Constant(0.2));
+    assert!(
+        annealed > hot,
+        "annealed {annealed} should beat hot-only {hot}"
+    );
+}

@@ -1,0 +1,172 @@
+//! Integration tests over the PJRT runtime: the AOT-compiled JAX/
+//! Pallas artifacts must load, execute, and produce *numerically
+//! correct* MCMC behavior from Rust (Python is gone at this point).
+//!
+//! These tests need `make artifacts` to have run; they are skipped
+//! (with a message) when the artifact directory is missing so that
+//! `cargo test` stays green on a fresh checkout.
+
+use mc2a::energy::MaxCutModel;
+use mc2a::graph::erdos_renyi_with_edges;
+use mc2a::rng::Rng;
+use mc2a::runtime::Runtime;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::load("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP runtime tests: {e:#} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_covers_all_entrypoints() {
+    let Some(rt) = runtime() else { return };
+    for name in [
+        "gumbel_sample",
+        "ising_step",
+        "ising_chain",
+        "maxcut_pas_step",
+        "maxcut_pas_chain",
+    ] {
+        assert!(rt.spec(name).is_some(), "missing artifact {name}");
+    }
+}
+
+#[test]
+fn input_validation_errors_are_clear() {
+    let Some(rt) = runtime() else { return };
+    // Wrong arity.
+    assert!(rt.execute_f32("ising_step", &[&[0.0]]).is_err());
+    // Wrong element count.
+    let bad = vec![0.0f32; 16];
+    let spec = rt.spec("gumbel_sample").unwrap().clone();
+    assert_eq!(spec.inputs[0].dims, vec![64, 256]);
+    let u = vec![0.5f32; 64 * 256];
+    assert!(rt.execute_f32("gumbel_sample", &[&bad, &u, &[1.0]]).is_err());
+    // Unknown artifact.
+    assert!(rt.execute_f32("nope", &[]).is_err());
+}
+
+/// The Pallas Gumbel kernel through the whole AOT+PJRT path samples
+/// the right distribution.
+#[test]
+fn gumbel_artifact_statistics() {
+    let Some(rt) = runtime() else { return };
+    let (b, n) = (64usize, 256usize);
+    // Concentrate mass on 4 states with energies 0, 0.5, 1, 1.5;
+    // everything else prohibitive.
+    let mut e = vec![50.0f32; b * n];
+    for row in 0..b {
+        for s in 0..4 {
+            e[row * n + s] = 0.5 * s as f32;
+        }
+    }
+    let mut rng = Rng::new(0x6B);
+    let mut counts = [0u64; 4];
+    let draws = 40;
+    for _ in 0..draws {
+        let u: Vec<f32> = (0..b * n).map(|_| rng.uniform_open_f32()).collect();
+        let out = rt.execute_f32("gumbel_sample", &[&e, &u, &[1.0]]).unwrap();
+        for &idx in &out[0] {
+            let k = idx as usize;
+            assert!(k < 4, "sampled prohibited state {k}");
+            counts[k] += 1;
+        }
+    }
+    let total: u64 = counts.iter().sum();
+    let z: f32 = (0..4).map(|s| (-0.5 * s as f32).exp()).sum();
+    for s in 0..4 {
+        let want = ((-0.5 * s as f32).exp() / z) as f64;
+        let got = counts[s] as f64 / total as f64;
+        assert!(
+            (got - want).abs() < 0.03,
+            "state {s}: got {got:.3} want {want:.3}"
+        );
+    }
+}
+
+/// Ising chain artifact: ordered phase stays ordered, hot phase mixes.
+#[test]
+fn ising_chain_artifact_phases() {
+    let Some(rt) = runtime() else { return };
+    let n = 64 * 64;
+    let steps = 32;
+    let mut rng = Rng::new(0x151);
+    let run = |beta: f32, rng: &mut Rng| -> f32 {
+        let spins = vec![1.0f32; n];
+        let u: Vec<f32> = (0..steps * 2 * n).map(|_| rng.uniform_open_f32()).collect();
+        let out = rt
+            .execute_f32("ising_chain", &[&spins, &u, &[beta], &[1.0]])
+            .unwrap();
+        // last magnetization from the per-sweep trace
+        out[1].last().copied().unwrap() / n as f32
+    };
+    let cold = run(1.5, &mut rng);
+    let hot = run(0.0, &mut rng);
+    assert!(cold > 0.8, "cold chain melted: m={cold}");
+    assert!(hot.abs() < 0.2, "hot chain stayed ordered: m={hot}");
+}
+
+/// MaxCut PAS chain artifact improves the cut, and the ΔE semantics
+/// agree with the Rust-side energy model.
+#[test]
+fn maxcut_chain_artifact_improves_cut() {
+    let Some(rt) = runtime() else { return };
+    let nn = 128;
+    let g = erdos_renyi_with_edges(nn, 640, 0x14c);
+    let mc = MaxCutModel::new(g.clone(), None);
+    let mut adj = vec![0.0f32; nn * nn];
+    for i in 0..nn {
+        for &j in g.neighbors(i) {
+            adj[i * nn + j as usize] = 1.0;
+        }
+    }
+    let mut rng = Rng::new(0xCC);
+    let x0: Vec<f32> = (0..nn).map(|_| rng.below(2) as f32).collect();
+    let as_u32 = |x: &[f32]| x.iter().map(|&v| v as u32).collect::<Vec<_>>();
+    let cut0 = mc.cut_weight(&as_u32(&x0));
+    let mut x = x0;
+    for _ in 0..4 {
+        let u: Vec<f32> = (0..32 * nn).map(|_| rng.uniform_open_f32()).collect();
+        let out = rt
+            .execute_f32("maxcut_pas_chain", &[&adj, &x, &u, &[2.0]])
+            .unwrap();
+        x = out[0].clone();
+        // labels must stay binary
+        assert!(x.iter().all(|&v| v == 0.0 || v == 1.0));
+    }
+    let cut1 = mc.cut_weight(&as_u32(&x));
+    assert!(cut1 > cut0, "cut did not improve: {cut0} → {cut1}");
+}
+
+/// Single ising_step and the 32-step chain must agree when fed the
+/// same noise (the scan is just a fused loop).
+#[test]
+fn ising_step_composes_to_chain() {
+    let Some(rt) = runtime() else { return };
+    let n = 64 * 64;
+    let steps = 32;
+    let mut rng = Rng::new(0x5c);
+    let spins0: Vec<f32> = (0..n).map(|_| if rng.below(2) == 1 { 1.0 } else { -1.0 }).collect();
+    let u: Vec<f32> = (0..steps * 2 * n).map(|_| rng.uniform_open_f32()).collect();
+    let beta = [0.6f32];
+    let coupling = [1.0f32];
+
+    let chain_out = rt
+        .execute_f32("ising_chain", &[&spins0, &u, &beta, &coupling])
+        .unwrap();
+
+    let mut s = spins0;
+    for t in 0..steps {
+        let u0 = &u[t * 2 * n..t * 2 * n + n];
+        let u1 = &u[t * 2 * n + n..(t + 1) * 2 * n];
+        let out = rt
+            .execute_f32("ising_step", &[&s, u0, u1, &beta, &coupling])
+            .unwrap();
+        s = out[0].clone();
+    }
+    assert_eq!(chain_out[0], s, "scan and unrolled steps disagree");
+}

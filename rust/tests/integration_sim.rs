@@ -1,0 +1,195 @@
+//! Integration tests across compiler → simulator: the cycle-accurate
+//! accelerator must (a) produce statistically correct samples, (b)
+//! satisfy the compiler's hazard/conflict invariants on every Table I
+//! workload, and (c) reproduce the paper's architectural behaviors
+//! (BG ≫ sequential Gibbs, spatial-mode PAS cycle counts, ISA
+//! encode/decode round-trips of real programs).
+
+use mc2a::compiler::{compile, validate_program};
+use mc2a::energy::{EnergyModel, PottsGrid};
+use mc2a::isa::{CtrlType, HwConfig, InstrLayout, Semantics};
+use mc2a::mcmc::{build_algo, AlgoKind, BetaSchedule, Chain, SamplerKind};
+use mc2a::sim::Simulator;
+use mc2a::workloads;
+
+/// THE hardware-correctness test: accelerator marginals must match the
+/// software chain (same LUT sampler) on the earthquake posterior.
+#[test]
+fn sim_marginals_match_software() {
+    let net = workloads::earthquake();
+    let exact = net.exact_marginal(2);
+    let hw = HwConfig::paper_default();
+    let program = compile(&net, AlgoKind::BlockGibbs, &hw, 1);
+    let mut sim = Simulator::new(hw, &net, 1, 0x51B);
+    let _ = sim.run(&program, 120_000);
+    let hw_marg = sim.marginal(2);
+    assert!(
+        (hw_marg[1] - exact[1]).abs() < 0.02,
+        "accelerator {} vs exact {}",
+        hw_marg[1],
+        exact[1]
+    );
+
+    let a = build_algo(
+        AlgoKind::BlockGibbs,
+        SamplerKind::GumbelLut { size: 16, bits: 8 },
+        &net,
+        1,
+    );
+    let mut chain = Chain::new(&net, a, BetaSchedule::Constant(1.0), 0x51B);
+    chain.run(120_000);
+    let sw_marg = chain.marginal(2);
+    assert!(
+        (hw_marg[1] - sw_marg[1]).abs() < 0.02,
+        "accelerator {} vs software {}",
+        hw_marg[1],
+        sw_marg[1]
+    );
+}
+
+/// Ising phase behavior on the accelerator: cold chain magnetizes.
+#[test]
+fn sim_ising_orders_when_cold() {
+    let m = PottsGrid::new(16, 16, 2, 1.0);
+    let hw = HwConfig::paper_default();
+    let program = compile(&m, AlgoKind::BlockGibbs, &hw, 1);
+    let mut sim = Simulator::new(hw, &m, 1, 0xC01D);
+    sim.set_beta(2.0);
+    // start all-up
+    for v in sim.x.iter_mut() {
+        *v = 1;
+    }
+    let _ = sim.run(&program, 300);
+    let ones = sim.x.iter().filter(|&&v| v == 1).count();
+    assert!(ones > 230, "magnetization lost: {ones}/256");
+}
+
+/// Compiler invariants hold for every workload × algorithm × config.
+#[test]
+fn compiled_suite_passes_validation() {
+    for hw in [HwConfig::fig10_toy(), HwConfig::paper_default()] {
+        for wl in workloads::suite_small() {
+            let algos = [AlgoKind::Gibbs, AlgoKind::BlockGibbs, AlgoKind::Pas];
+            for algo in algos {
+                let p = compile(wl.model.as_ref(), algo, &hw, wl.pas_flips);
+                let coverage = !matches!(algo, AlgoKind::Pas);
+                let v = validate_program(&p, wl.model.as_ref(), &hw, coverage);
+                assert!(v.is_empty(), "{} {:?}: {:?}", wl.name, algo, &v[..v.len().min(3)]);
+            }
+        }
+    }
+}
+
+/// Block Gibbs must be far faster than sequential Gibbs in cycles on a
+/// parallel-friendly grid (the Fig. 4 / Fig. 10b story).
+#[test]
+fn block_gibbs_beats_sequential_in_cycles() {
+    let m = PottsGrid::new(16, 16, 2, 1.0);
+    let hw = HwConfig::paper_default();
+    let cycles = |algo| {
+        let p = compile(&m, algo, &hw, 1);
+        let mut sim = Simulator::new(hw, &m, 1, 1);
+        sim.run(&p, 10).cycles
+    };
+    let bg = cycles(AlgoKind::BlockGibbs);
+    let seq = cycles(AlgoKind::Gibbs);
+    assert!(
+        seq as f64 / bg as f64 > 10.0,
+        "sequential {seq} vs block {bg} cycles"
+    );
+}
+
+/// Spatial-mode PAS sampling cycles follow the Fig. 10(c) formula:
+/// L × ceil(n_moves / S) Sample instructions.
+#[test]
+fn pas_sample_phase_matches_fig10c() {
+    let wl = workloads::wl_maxcut_optsicom(); // 125 nodes → 250 moves
+    let hw = HwConfig::paper_default(); // S = 64
+    let l = 8;
+    let p = compile(wl.model.as_ref(), AlgoKind::Pas, &hw, l);
+    let h = p.body_histogram();
+    let n_moves = 250usize;
+    assert_eq!(
+        h[&CtrlType::Sample],
+        l * n_moves.div_ceil(hw.s),
+        "Sample instruction count"
+    );
+}
+
+/// Real compiled programs round-trip through the dense ISA encoding.
+#[test]
+fn compiled_programs_encode_decode() {
+    let hw = HwConfig::paper_default();
+    let layout = InstrLayout::new(&hw);
+    for wl in workloads::suite_small().iter().take(4) {
+        let p = compile(wl.model.as_ref(), wl.algorithm, &hw, wl.pas_flips);
+        let enc = layout.encode(&p.body);
+        let dec = layout.decode(&enc).expect("decode");
+        assert_eq!(dec.len(), p.body.len());
+        for (a, b) in p.body.iter().zip(&dec) {
+            assert_eq!(a.ctrl, b.ctrl);
+            assert_eq!(a.loads, b.loads);
+            assert_eq!(a.routes, b.routes);
+            assert_eq!(a.cu, b.cu);
+            assert_eq!(a.su, b.su);
+            assert_eq!(a.stores, b.stores);
+        }
+        // Instruction memory footprint sanity: a B=320-slot Load bundle
+        // is inherently ~1.8 kB (320 slots × 45 bits); the dense pack
+        // must stay under the naive byte-aligned encoding (~2.5 kB).
+        let bytes_per_instr = enc.bit_len as f64 / 8.0 / p.body.len() as f64;
+        assert!(bytes_per_instr < 2048.0, "{}: {bytes_per_instr} B/instr", wl.name);
+    }
+}
+
+/// Utilization ordering: the MRF (massive parallelism) must use the CU
+/// better than the tiny Bayes net (§V-E: "higher hardware utilization
+/// because of more parallelizable RVs").
+#[test]
+fn utilization_scales_with_parallelism() {
+    let hw = HwConfig::paper_default();
+    let grid = PottsGrid::new(32, 32, 2, 1.0);
+    let p1 = compile(&grid, AlgoKind::BlockGibbs, &hw, 1);
+    let mut s1 = Simulator::new(hw, &grid, 1, 1);
+    let u_grid = s1.run(&p1, 5).cu_utilization();
+
+    let net = workloads::earthquake();
+    let p2 = compile(&net, AlgoKind::BlockGibbs, &hw, 1);
+    let mut s2 = Simulator::new(hw, &net, 1, 1);
+    let u_net = s2.run(&p2, 5).cu_utilization();
+    assert!(
+        u_grid > u_net,
+        "grid util {u_grid} should exceed bayes-net util {u_net}"
+    );
+}
+
+/// Every functional commit in a compiled program has hardware work
+/// attached (no "ghost" updates the timing model doesn't account for).
+#[test]
+fn commits_carry_hardware_work() {
+    let hw = HwConfig::paper_default();
+    for wl in workloads::suite_small() {
+        let p = compile(wl.model.as_ref(), wl.algorithm, &hw, wl.pas_flips);
+        for i in &p.body {
+            if matches!(i.sem, Semantics::UpdateRvs(_)) {
+                assert!(i.cu.is_some() && i.su.is_some(), "{}: bare commit", wl.name);
+                assert!(!i.stores.is_empty(), "{}: commit without store", wl.name);
+            }
+        }
+    }
+}
+
+/// Scaling sanity: more SU/CU lanes (up to the parallelism limit) must
+/// not slow any workload down.
+#[test]
+fn bigger_hardware_is_never_slower() {
+    let m = PottsGrid::new(16, 16, 2, 1.0);
+    let small = HwConfig::fig10_toy();
+    let big = HwConfig::paper_default();
+    let cycles = |hw: HwConfig| {
+        let p = compile(&m, AlgoKind::BlockGibbs, &hw, 1);
+        let mut sim = Simulator::new(hw, &m, 1, 1);
+        sim.run(&p, 10).cycles
+    };
+    assert!(cycles(big) < cycles(small));
+}

@@ -1,0 +1,245 @@
+//! Property-based tests over randomized inputs.
+//!
+//! The offline vendor set has no `proptest`, so this file uses the
+//! crate's own deterministic RNG as a generator: each property runs
+//! against many random cases, and failures print the seed so the case
+//! can be replayed. The invariants covered are the coordinator-level
+//! ones the architecture depends on: routing (crossbar ranges, bank
+//! conflicts), batching (parallel updates are independent sets; every
+//! RV covered exactly once), and state management (histogram
+//! conservation, sample-memory validity, ISA round-trip).
+
+use mc2a::compiler::{compile, validate_program};
+use mc2a::energy::{EnergyModel, MaxCutModel, MisModel, PottsGrid};
+use mc2a::graph::{color_greedy, erdos_renyi_with_edges, Graph};
+use mc2a::isa::{HwConfig, InstrLayout, Semantics};
+use mc2a::mcmc::{build_algo, AlgoKind, BetaSchedule, Chain, SamplerKind};
+use mc2a::rng::Rng;
+use mc2a::sim::Simulator;
+
+const CASES: usize = 25;
+
+fn random_hw(rng: &mut Rng) -> HwConfig {
+    let m = 2 + rng.below(5); // S ∈ {4..64}
+    HwConfig {
+        t: [4, 8, 16, 32, 64][rng.below(5)],
+        k: 1 + rng.below(3),
+        s: 1 << m,
+        m,
+        bw_words: [8, 32, 64, 320][rng.below(4)],
+        clock_ghz: 0.5,
+        rf_banks: [8, 16, 64][rng.below(3)],
+        rf_regs_per_bank: 16,
+        lut_size: 16,
+        lut_bits: 8,
+        max_dist_size: 256,
+    }
+}
+
+fn random_model(rng: &mut Rng) -> Box<dyn EnergyModel> {
+    match rng.below(3) {
+        0 => {
+            let h = 2 + rng.below(6);
+            let w = 2 + rng.below(6);
+            let labels = 2 + rng.below(3);
+            Box::new(PottsGrid::new(h, w, labels, 0.5 + rng.uniform_f32()))
+        }
+        1 => {
+            let n = 10 + rng.below(60);
+            let max_m = n * (n - 1) / 2;
+            let m = (n + rng.below(3 * n)).min(max_m);
+            Box::new(MaxCutModel::new(
+                erdos_renyi_with_edges(n, m, rng.next_u64()),
+                None,
+            ))
+        }
+        _ => {
+            let n = 10 + rng.below(40);
+            let max_m = n * (n - 1) / 2;
+            let m = (n + rng.below(2 * n)).min(max_m);
+            Box::new(MisModel::new(
+                erdos_renyi_with_edges(n, m, rng.next_u64()),
+                1.5,
+                None,
+            ))
+        }
+    }
+}
+
+/// Greedy coloring is always proper and within the degree bound.
+#[test]
+fn prop_coloring_proper() {
+    let mut rng = Rng::new(0xC010);
+    for case in 0..CASES {
+        let n = 5 + rng.below(100);
+        let max_m = n * (n - 1) / 2;
+        let m = rng.below(max_m + 1);
+        let g = erdos_renyi_with_edges(n, m, rng.next_u64());
+        let c = color_greedy(&g);
+        assert!(c.is_proper(&g), "case {case}: improper coloring");
+        assert!(
+            (c.num_colors as usize) <= g.max_degree() + 1,
+            "case {case}: too many colors"
+        );
+        let total: usize = c.blocks().iter().map(|b| b.len()).sum();
+        assert_eq!(total, n, "case {case}: blocks lose nodes");
+    }
+}
+
+/// Every compiled program passes the full static validator, for random
+/// models × random hardware × every algorithm.
+#[test]
+fn prop_compiled_programs_validate() {
+    let mut rng = Rng::new(0xF00D);
+    for case in 0..CASES {
+        let hw = random_hw(&mut rng);
+        let model = random_model(&mut rng);
+        for algo in [
+            AlgoKind::Gibbs,
+            AlgoKind::BlockGibbs,
+            AlgoKind::AsyncGibbs,
+            AlgoKind::Pas,
+        ] {
+            let p = compile(model.as_ref(), algo, &hw, 1 + rng.below(8));
+            let coverage = !matches!(algo, AlgoKind::Pas);
+            let v = validate_program(&p, model.as_ref(), &hw, coverage);
+            assert!(
+                v.is_empty(),
+                "case {case} {algo:?} hw={hw:?}: {:?}",
+                &v[..v.len().min(3)]
+            );
+        }
+    }
+}
+
+/// ISA round-trip on real compiled programs for random configs.
+#[test]
+fn prop_isa_roundtrip() {
+    let mut rng = Rng::new(0x150);
+    for case in 0..CASES {
+        let hw = random_hw(&mut rng);
+        let layout = InstrLayout::new(&hw);
+        let model = random_model(&mut rng);
+        let algo = [AlgoKind::Gibbs, AlgoKind::BlockGibbs, AlgoKind::Pas][rng.below(3)];
+        let p = compile(model.as_ref(), algo, &hw, 4);
+        let enc = layout.encode(&p.body);
+        let dec = layout.decode(&enc).unwrap_or_else(|e| panic!("case {case}: {e}"));
+        for (a, b) in p.body.iter().zip(&dec) {
+            assert_eq!(a.loads, b.loads, "case {case}");
+            assert_eq!(a.routes, b.routes, "case {case}");
+        }
+    }
+}
+
+/// Simulator state management: sample memory stays within each RV's
+/// cardinality and histogram totals equal the iteration count.
+#[test]
+fn prop_sim_state_conserved() {
+    let mut rng = Rng::new(0x57a7e);
+    for case in 0..12 {
+        let hw = random_hw(&mut rng);
+        let model = random_model(&mut rng);
+        let p = compile(model.as_ref(), AlgoKind::BlockGibbs, &hw, 1);
+        let mut sim = Simulator::new(hw, model.as_ref(), 1, rng.next_u64());
+        let iters = 5 + rng.below(20);
+        let rep = sim.run(&p, iters);
+        assert_eq!(rep.iterations, iters as u64, "case {case}");
+        assert_eq!(rep.updates, iters as u64 * model.num_vars() as u64);
+        for i in 0..model.num_vars() {
+            assert!(
+                (sim.x[i] as usize) < model.num_states(i),
+                "case {case}: rv {i} out of range"
+            );
+            let marg = sim.marginal(i);
+            let total: f64 = marg.iter().sum();
+            assert!((total - 1.0).abs() < 1e-9, "case {case}: marginal sum {total}");
+        }
+    }
+}
+
+/// Chain bookkeeping: best_objective is the max over the trajectory
+/// and always achievable by the stored assignment.
+#[test]
+fn prop_chain_best_tracking() {
+    let mut rng = Rng::new(0xBE57);
+    for case in 0..CASES {
+        let model = random_model(&mut rng);
+        let algo_kind = [AlgoKind::Gibbs, AlgoKind::Mh, AlgoKind::Pas][rng.below(3)];
+        let a = build_algo(algo_kind, SamplerKind::Gumbel, model.as_ref(), 2);
+        let mut chain = Chain::new(model.as_ref(), a, BetaSchedule::Constant(1.0), rng.next_u64());
+        chain.run(30);
+        let recomputed = model.objective(chain.best_assignment());
+        assert!(
+            (chain.best_objective - recomputed).abs() < 1e-6,
+            "case {case} {algo_kind:?}: stored {} vs recomputed {}",
+            chain.best_objective,
+            recomputed
+        );
+        assert!(
+            chain.best_objective >= model.objective(&chain.x) - 1e-9,
+            "case {case}: current beats best"
+        );
+    }
+}
+
+/// Energy-model consistency on random states: local_energies diffs ==
+/// full-energy diffs (the contract every layer depends on).
+#[test]
+fn prop_local_energy_consistency() {
+    let mut rng = Rng::new(0x10ca1);
+    for case in 0..CASES {
+        let model = random_model(&mut rng);
+        let x: Vec<u32> = (0..model.num_vars())
+            .map(|i| rng.below(model.num_states(i)) as u32)
+            .collect();
+        let base = model.energy(&x);
+        let mut out = Vec::new();
+        // spot-check 5 random vars
+        for _ in 0..5 {
+            let i = rng.below(model.num_vars());
+            model.local_energies(&x, i, &mut out);
+            let cur = out[x[i] as usize];
+            let s = rng.below(model.num_states(i)) as u32;
+            let mut y = x.clone();
+            y[i] = s;
+            let want = (model.energy(&y) - base) as f32;
+            let got = out[s as usize] - cur;
+            assert!(
+                (want - got).abs() <= 1e-3 * (1.0 + want.abs()),
+                "case {case} var {i} state {s}: {got} vs {want}"
+            );
+        }
+    }
+}
+
+/// Crossbar routing ranges hold even on adversarial dense graphs.
+#[test]
+fn prop_routes_in_range_dense_graph() {
+    let mut rng = Rng::new(0xDE4);
+    for _ in 0..10 {
+        let n = 20 + rng.below(20);
+        // near-complete graph: stress the neighbor-words path
+        let mut edges = Vec::new();
+        for a in 0..n as u32 {
+            for b in (a + 1)..n as u32 {
+                if rng.below(10) < 8 {
+                    edges.push((a, b));
+                }
+            }
+        }
+        let g = Graph::from_edges(n, &edges, None);
+        let m = MaxCutModel::new(g, None);
+        let hw = random_hw(&mut rng);
+        let p = compile(&m, AlgoKind::BlockGibbs, &hw, 1);
+        for i in p.prologue.iter().chain(&p.body) {
+            for r in &i.routes {
+                assert!((r.cu as usize) < hw.t);
+                assert!((r.port as usize) < (1 << hw.k));
+                assert!((r.rf_bank as usize) < hw.rf_banks);
+            }
+            if let Semantics::UpdateRvs(rvs) = &i.sem {
+                assert!(rvs.len() <= hw.t.min(hw.s));
+            }
+        }
+    }
+}
