@@ -1,17 +1,16 @@
 //! Posterior inference on the Earthquake Bayes net (Fig. 10a workload):
 //! clamp JohnCalls = MaryCalls = true, estimate P(Burglary | calls)
 //! with Gibbs sampling — software chain, MC²A accelerator, and exact
-//! enumeration side by side.
+//! enumeration side by side, all through the [`Engine`] API.
 //!
 //! Run with: `cargo run --release --example bayesnet_inference`
 
-use mc2a::compiler::compile;
+use mc2a::engine::Engine;
 use mc2a::isa::HwConfig;
-use mc2a::mcmc::{build_algo, AlgoKind, BetaSchedule, Chain, SamplerKind};
-use mc2a::sim::Simulator;
+use mc2a::mcmc::AlgoKind;
 use mc2a::workloads::earthquake;
 
-fn main() {
+fn main() -> mc2a::Result<()> {
     let mut net = earthquake();
     // Evidence: both neighbors called.
     net.set_evidence(3, 1);
@@ -20,34 +19,48 @@ fn main() {
     let exact = net.exact_marginal(0);
     println!("exact          P(B=1 | john, mary) = {:.4}", exact[1]);
 
-    // Software Block Gibbs.
-    let algo = build_algo(AlgoKind::BlockGibbs, SamplerKind::Gumbel, &net, 1);
-    let mut chain = Chain::new(&net, algo, BetaSchedule::Constant(1.0), 99);
     // Start consistent with the evidence.
-    chain.x[3] = 1;
-    chain.x[4] = 1;
-    chain.run(200_000);
-    let emp = chain.marginal(0);
-    println!("software Gibbs P(B=1 | john, mary) = {:.4}  ({} sweeps)", emp[1], chain.step_count);
+    let mut x0 = vec![0u32; 5];
+    x0[3] = 1;
+    x0[4] = 1;
+
+    // Software Block Gibbs.
+    let metrics = Engine::for_model(&net)
+        .algo(AlgoKind::BlockGibbs)
+        .steps(200_000)
+        .seed(99)
+        .init_state(x0.clone())
+        .build()?
+        .run()?;
+    let sw = &metrics.chains[0];
+    println!(
+        "software Gibbs P(B=1 | john, mary) = {:.4}  ({} sweeps)",
+        sw.marginal0[1], sw.steps
+    );
 
     // MC²A accelerator (hardware Gumbel-LUT sampler, 16×8-bit).
     let hw = HwConfig::paper_default();
-    let program = compile(&net, AlgoKind::BlockGibbs, &hw, 1);
-    let mut sim = Simulator::new(hw, &net, 1, 99);
-    sim.x[3] = 1;
-    sim.x[4] = 1;
-    let rep = sim.run(&program, 200_000);
-    let emp_hw = sim.marginal(0);
+    let metrics = Engine::for_model(&net)
+        .algo(AlgoKind::BlockGibbs)
+        .steps(200_000)
+        .seed(99)
+        .init_state(x0)
+        .accelerator(hw)
+        .build()?
+        .run()?;
+    let acc = &metrics.chains[0];
+    let rep = acc.sim.as_ref().expect("accelerator report");
     println!(
         "MC2A (LUT16x8) P(B=1 | john, mary) = {:.4}  ({} cycles, {:.1} Msamples/s)",
-        emp_hw[1],
+        acc.marginal0[1],
         rep.cycles,
         rep.gsps(&hw) * 1e3
     );
 
-    let err_sw = (emp[1] - exact[1]).abs();
-    let err_hw = (emp_hw[1] - exact[1]).abs();
+    let err_sw = (sw.marginal0[1] - exact[1]).abs();
+    let err_hw = (acc.marginal0[1] - exact[1]).abs();
     println!("\nabs error: software {err_sw:.4}, accelerator {err_hw:.4}");
     assert!(err_sw < 0.02 && err_hw < 0.03, "posterior estimates diverged");
     println!("both estimators agree with exact inference ✓");
+    Ok(())
 }

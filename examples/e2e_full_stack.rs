@@ -8,30 +8,32 @@
 //!   runtime: Rust loads the artifacts via PJRT and *measures* the
 //!     software-CPU baseline on a 64×64 Ising Block-Gibbs chain and a
 //!     128-node MaxCut PAS chain,
-//!   L3: the same workloads are compiled by the MC²A compiler and run
-//!     on the cycle-accurate accelerator simulator,
+//!   L3: the same workloads run on the cycle-accurate accelerator
+//!     simulator through the [`Engine`] accelerator backend,
 //!   validation: the two paths must agree statistically (mean |magnet-
 //!     ization| trajectory, cut improvement), and the speedup is
 //!     compared against the paper's §VI-D claims.
 //!
+//! Requires a build with `--features xla-runtime`; without it the
+//! example reports why and exits cleanly.
+//!
 //! Run with: `make artifacts && cargo run --release --example e2e_full_stack`
 
 use mc2a::bench::bench_fn;
-use mc2a::compiler::compile;
 use mc2a::energy::{MaxCutModel, PottsGrid};
+use mc2a::engine::Engine;
 use mc2a::graph::erdos_renyi_with_edges;
 use mc2a::isa::HwConfig;
+use mc2a::mcmc::{AlgoKind, BetaSchedule};
 use mc2a::rng::Rng;
 use mc2a::runtime::Runtime;
-use mc2a::sim::Simulator;
-use mc2a::mcmc::AlgoKind;
 
-fn main() {
+fn main() -> mc2a::Result<()> {
     let rt = match Runtime::load("artifacts") {
         Ok(rt) => rt,
         Err(e) => {
             eprintln!("cannot load artifacts ({e:#}); run `make artifacts` first");
-            std::process::exit(1);
+            return Ok(());
         }
     };
     println!("PJRT platform: {} | artifacts: {:?}\n", rt.platform(), rt.names());
@@ -53,9 +55,7 @@ fn main() {
     for _ in 0..calls {
         let uniforms: Vec<f32> =
             (0..steps_per_call * 2 * n).map(|_| rng.uniform_open_f32()).collect();
-        let out = rt
-            .execute_f32("ising_chain", &[&spins, &uniforms, &beta, &coupling])
-            .expect("ising_chain");
+        let out = rt.execute_f32("ising_chain", &[&spins, &uniforms, &beta, &coupling])?;
         spins = out[0].clone();
         mags.push(out[1].last().copied().unwrap_or(0.0) / n as f32);
     }
@@ -69,18 +69,23 @@ fn main() {
     // --- MC²A accelerator path (L3 compiler + cycle-accurate sim) ---
     let model = PottsGrid::new(h, h, 2, 1.0);
     let hw = HwConfig::paper_default();
-    let program = compile(&model, AlgoKind::BlockGibbs, &hw, 1);
-    let mut sim = Simulator::new(hw, &model, 1, 0xE2E);
-    sim.set_beta(0.6);
-    let rep = sim.run(&program, calls * steps_per_call);
+    let metrics = Engine::for_model(&model)
+        .algo(AlgoKind::BlockGibbs)
+        .schedule(BetaSchedule::Constant(0.6))
+        .steps(calls * steps_per_call)
+        .seed(0xE2E)
+        .accelerator(hw)
+        .build()?
+        .run()?;
+    let acc = &metrics.chains[0];
+    let rep = acc.sim.as_ref().expect("accelerator report");
     let sim_gsps = rep.gsps(&hw);
     // magnetization from the sim's final state (±1 encoding ↔ 0/1 labels)
-    let m_sim: f64 = sim.x.iter().map(|&v| if v == 1 { 1.0 } else { -1.0 }).sum::<f64>()
+    let m_sim: f64 = acc.best_x.iter().map(|&v| if v == 1 { 1.0 } else { -1.0 }).sum::<f64>()
         / n as f64;
     println!(
-        "MC2A sim: {} cycles ({} instrs/iter) → {:.4} GS/s @ {:.2} W, |m|={:.3}",
+        "MC2A sim: {} cycles → {:.4} GS/s @ {:.2} W, |m|={:.3}",
         rep.cycles,
-        program.body.len(),
         sim_gsps,
         rep.watts(&hw),
         m_sim.abs()
@@ -106,7 +111,7 @@ fn main() {
     let cut0 = mc.cut_weight(&x0.iter().map(|&v| v as u32).collect::<Vec<_>>());
 
     // measured CPU path
-    let mut x = x0.clone();
+    let x = x0.clone();
     let stat = bench_fn(2, 8, || {
         let u: Vec<f32> = {
             let mut r = Rng::new(7);
@@ -119,11 +124,9 @@ fn main() {
     });
     // one more call, keeping the state, to report the cut improvement
     let u: Vec<f32> = (0..32 * nn).map(|_| rng.uniform_open_f32()).collect();
-    let out = rt
-        .execute_f32("maxcut_pas_chain", &[&adj, &x, &u, &[2.0f32]])
-        .expect("maxcut_pas_chain");
-    x = out[0].clone();
-    let cut1 = mc.cut_weight(&x.iter().map(|&v| v as u32).collect::<Vec<_>>());
+    let out = rt.execute_f32("maxcut_pas_chain", &[&adj, &x, &u, &[2.0f32]])?;
+    let x1 = out[0].clone();
+    let cut1 = mc.cut_weight(&x1.iter().map(|&v| v as u32).collect::<Vec<_>>());
     let flips_per_call = 32.0 * 8.0;
     let cpu_pas_sps = flips_per_call / (stat.mean_ms() / 1e3);
     println!(
@@ -134,12 +137,19 @@ fn main() {
         cut1
     );
 
-    // MC²A path
-    let program = compile(&mc, AlgoKind::Pas, &hw, 8);
-    let mut sim = Simulator::new(hw, &mc, 8, 0xE2E);
-    sim.set_beta(2.0);
-    let rep = sim.run(&program, 64);
-    let cut_sim = mc.cut_weight(&sim.x);
+    // MC²A path through the engine.
+    let metrics = Engine::for_model(&mc)
+        .algo(AlgoKind::Pas)
+        .pas_flips(8)
+        .schedule(BetaSchedule::Constant(2.0))
+        .steps(64)
+        .seed(0xE2E)
+        .accelerator(hw)
+        .build()?
+        .run()?;
+    let acc = &metrics.chains[0];
+    let rep = acc.sim.as_ref().expect("accelerator report");
+    let cut_sim = mc.cut_weight(&acc.best_x);
     let sim_pas_sps = rep.updates_per_sec(&hw);
     println!(
         "MC2A sim: {} cycles for 64 iters → {:.3e} flips/s; final cut {}",
@@ -153,4 +163,5 @@ fn main() {
     println!("both paths improve the cut: {}", if improved { "OK" } else { "MISMATCH" });
 
     println!("\nE2E complete: L1/L2 artifacts executed from Rust, L3 compiled & simulated, outputs consistent.");
+    Ok(())
 }

@@ -3,17 +3,17 @@
 //! Generates a synthetic two-class image (smooth shape + heavy pixel
 //! noise), builds the 8-connected Potts MRF with unary data terms, and
 //! denoises it with Block Gibbs — once in software and once on the
-//! MC²A accelerator simulator — reporting pixel accuracy against the
-//! clean ground truth and the accelerator's throughput.
+//! MC²A accelerator simulator, both through the [`Engine`] API —
+//! reporting pixel accuracy against the clean ground truth and the
+//! accelerator's throughput.
 //!
 //! Run with: `cargo run --release --example image_segmentation`
 
-use mc2a::compiler::compile;
 use mc2a::energy::PottsGrid;
+use mc2a::engine::Engine;
 use mc2a::isa::HwConfig;
-use mc2a::mcmc::{build_algo, AlgoKind, BetaSchedule, Chain, SamplerKind};
+use mc2a::mcmc::{AlgoKind, BetaSchedule};
 use mc2a::rng::Rng;
-use mc2a::sim::Simulator;
 
 /// Ground truth: a disc on background.
 fn ground_truth(h: usize, w: usize) -> Vec<u32> {
@@ -30,7 +30,7 @@ fn accuracy(a: &[u32], b: &[u32]) -> f64 {
     a.iter().zip(b).filter(|(x, y)| x == y).count() as f64 / a.len() as f64
 }
 
-fn main() {
+fn main() -> mc2a::Result<()> {
     let (h, w) = (64usize, 64usize);
     let truth = ground_truth(h, w);
     let mut rng = Rng::new(0x5E6);
@@ -57,24 +57,38 @@ fn main() {
     println!("noisy accuracy (before MRF): {:.3}", accuracy(&noisy, &truth));
 
     // Software Block Gibbs with annealing.
-    let algo = build_algo(AlgoKind::BlockGibbs, SamplerKind::Gumbel, &model, 1);
-    let schedule = BetaSchedule::Linear { from: 0.5, to: 3.0, steps: 60 };
-    let mut chain = Chain::new(&model, algo, schedule, 7);
-    chain.run(80);
-    let seg_sw = chain.best_assignment();
-    println!("software BG segmentation accuracy: {:.3}", accuracy(seg_sw, &truth));
+    let metrics = Engine::for_model(&model)
+        .algo(AlgoKind::BlockGibbs)
+        .schedule(BetaSchedule::Linear { from: 0.5, to: 3.0, steps: 60 })
+        .steps(80)
+        .seed(7)
+        .build()?
+        .run()?;
+    let sw = &metrics.chains[0];
+    println!(
+        "software BG segmentation accuracy: {:.3}",
+        accuracy(&sw.best_x, &truth)
+    );
 
-    // MC²A accelerator.
+    // MC²A accelerator — the same annealing schedule, stepped per
+    // HWLOOP iteration by the accelerator backend.
     let hw = HwConfig::paper_default();
-    let program = compile(&model, AlgoKind::BlockGibbs, &hw, 1);
-    let mut sim = Simulator::new(hw, &model, 1, 7);
-    sim.set_beta(2.0);
-    let rep = sim.run(&program, 80);
+    let metrics = Engine::for_model(&model)
+        .algo(AlgoKind::BlockGibbs)
+        .schedule(BetaSchedule::Linear { from: 0.5, to: 3.0, steps: 60 })
+        .steps(80)
+        .seed(7)
+        .accelerator(hw)
+        .build()?
+        .run()?;
+    let acc = &metrics.chains[0];
+    let rep = acc.sim.as_ref().expect("accelerator report");
     println!(
         "MC2A segmentation accuracy: {:.3} ({} cycles, {:.3} GS/s, CU util {:.2})",
-        accuracy(&sim.x, &truth),
+        accuracy(&acc.best_x, &truth),
         rep.cycles,
         rep.gsps(&hw),
         rep.cu_utilization()
     );
+    Ok(())
 }

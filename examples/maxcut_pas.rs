@@ -1,32 +1,33 @@
 //! Combinatorial optimization with PAS: the Optsicom-style MaxCut
 //! workload (Table I) solved by MH, Block Gibbs and PAS — the Fig. 5
 //! story (gradient-based samplers need fewer steps but more ops) plus
-//! the accelerator run.
+//! the accelerator run through the [`Engine`] API, with streaming
+//! convergence diagnostics from a multi-chain software run.
 //!
 //! Run with: `cargo run --release --example maxcut_pas`
 
-use mc2a::compiler::compile;
+use mc2a::engine::Engine;
 use mc2a::isa::HwConfig;
 use mc2a::mcmc::{build_algo, run_to_accuracy, AlgoKind, BetaSchedule, SamplerKind};
-use mc2a::sim::Simulator;
-use mc2a::workloads::wl_maxcut_optsicom;
 
-fn main() {
-    let wl = wl_maxcut_optsicom();
-    let model = wl.model.as_ref();
-    println!(
-        "MaxCut: {} nodes, {} edges (weights 1..10)\n",
-        wl.nodes(),
-        wl.edges()
-    );
-
+fn main() -> mc2a::Result<()> {
     let schedule = BetaSchedule::Linear {
         from: 0.2,
         to: 3.0,
         steps: 500,
     };
+    let mut engine = Engine::for_workload("optsicom")?
+        .schedule(schedule)
+        .steps(1_000)
+        .chains(4)
+        .seed(0x5eed)
+        .build()?;
+    let model_nodes = engine.model().num_vars();
+    let model_edges = engine.model().interaction().num_edges();
+    println!("MaxCut: {model_nodes} nodes, {model_edges} edges (weights 1..10)\n");
 
     // Calibrate "best known" with a long PAS run.
+    let model = engine.model();
     let algo = build_algo(AlgoKind::Pas, SamplerKind::Gumbel, model, 8);
     let cal = run_to_accuracy(model, algo, schedule, f64::INFINITY, 2_000, 50, 0xCA1);
     let best = cal.points.last().unwrap().best_objective;
@@ -55,17 +56,35 @@ fn main() {
         }
     }
 
+    // Multi-chain PAS run with cross-chain diagnostics.
+    let metrics = engine.run()?;
+    println!(
+        "\n4-chain PAS: best cut {:.0}, split R-hat {}, min ESS {:.1}",
+        metrics.best_objective(),
+        metrics
+            .split_r_hat()
+            .map_or("n/a".to_string(), |r| format!("{r:.3}")),
+        metrics.min_ess()
+    );
+
     // Accelerator run with the spatial-mode SU (Fig. 10c schedule).
     let hw = HwConfig::paper_default();
-    let program = compile(model, AlgoKind::Pas, &hw, 8);
-    let mut sim = Simulator::new(hw, model, 8, 0xACC);
-    sim.set_beta(2.0);
-    let rep = sim.run(&program, 500);
+    let metrics = Engine::for_workload("optsicom")?
+        .schedule(BetaSchedule::Constant(2.0))
+        .steps(500)
+        .seed(0xACC)
+        .accelerator(hw)
+        .build()?
+        .run()?;
+    let acc = &metrics.chains[0];
+    let rep = acc.sim.as_ref().expect("accelerator report");
     println!(
-        "\nMC2A PAS: cut {:.0} after 500 iters; {} cycles, {:.3e} flips/s, SU util {:.2}",
-        model.objective(&sim.x),
+        "\nMC2A PAS: cut {:.0} after {} iters; {} cycles, {:.3e} flips/s, SU util {:.2}",
+        acc.best_objective,
+        acc.steps,
         rep.cycles,
         rep.updates_per_sec(&hw),
         rep.su_utilization()
     );
+    Ok(())
 }

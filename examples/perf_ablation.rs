@@ -1,18 +1,20 @@
-//! §Perf ablation driver (EXPERIMENTS.md §Perf): compiles each
-//! workload twice — naive one-phase-per-instruction schedule vs the
+//! §Perf ablation driver (EXPERIMENTS.md §Perf): runs each workload
+//! twice through the [`Engine`] — once on a naive
+//! one-phase-per-instruction accelerator backend, once on the
 //! optimized VLIW schedule (load/compute fusion; the row-wide RF port
 //! modeling applies to both) — and reports cycles / throughput /
-//! utilization side by side.
+//! utilization side by side. This is the custom-backend path:
+//! [`AcceleratorBackend::with_optimization`] plugs in through
+//! `EngineBuilder::backend` like any third-party backend would.
 //!
 //! Run with: `cargo run --release --example perf_ablation`
-use mc2a::compiler::compile_opt;
 use mc2a::energy::PottsGrid;
+use mc2a::engine::{AcceleratorBackend, Engine};
 use mc2a::isa::HwConfig;
 use mc2a::mcmc::AlgoKind;
-use mc2a::sim::Simulator;
 use mc2a::workloads;
 
-fn main() {
+fn main() -> mc2a::Result<()> {
     let hw = HwConfig::paper_default();
     let cases: Vec<(&str, Box<dyn mc2a::energy::EnergyModel>, AlgoKind, usize, usize)> = vec![
         ("ising64-BG", Box::new(PottsGrid::new(64, 64, 2, 1.0)), AlgoKind::BlockGibbs, 1, 50),
@@ -24,16 +26,24 @@ fn main() {
     for (name, model, algo, flips, iters) in cases {
         let mut res = Vec::new();
         for opt in [false, true] {
-            let p = compile_opt(model.as_ref(), algo, &hw, flips, opt);
-            let mut sim = Simulator::new(hw, model.as_ref(), flips, 1);
-            let rep = sim.run(&p, iters);
-            res.push((p.body.len(), rep.cycles, rep.gsps(&hw), rep.cu_utilization()));
+            let backend = AcceleratorBackend::new(hw).with_optimization(opt);
+            let metrics = Engine::for_model(model.as_ref())
+                .algo(algo)
+                .pas_flips(flips)
+                .steps(iters)
+                .seed(1)
+                .backend(Box::new(backend))
+                .build()?
+                .run()?;
+            let rep = metrics.chains[0].sim.as_ref().expect("accelerator report");
+            res.push((rep.cycles, rep.gsps(&hw), rep.cu_utilization()));
         }
         println!(
-            "{name:<14} naive: {:>6} instr {:>9} cyc {:>7.3} GS/s util {:.2} | fused: {:>6} instr {:>9} cyc {:>7.3} GS/s util {:.2} | speedup {:.2}x",
-            res[0].0, res[0].1, res[0].2, res[0].3,
-            res[1].0, res[1].1, res[1].2, res[1].3,
-            res[0].1 as f64 / res[1].1 as f64
+            "{name:<14} naive: {:>9} cyc {:>7.3} GS/s util {:.2} | fused: {:>9} cyc {:>7.3} GS/s util {:.2} | speedup {:.2}x",
+            res[0].0, res[0].1, res[0].2,
+            res[1].0, res[1].1, res[1].2,
+            res[0].0 as f64 / res[1].0 as f64
         );
     }
+    Ok(())
 }

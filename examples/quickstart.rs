@@ -1,4 +1,5 @@
-//! Quickstart: sample a small Ising model three ways.
+//! Quickstart: sample a small Ising model three ways through the
+//! unified [`Engine`] API.
 //!
 //! 1. Software Block Gibbs (the reference algorithm library),
 //! 2. the MC²A accelerator (compile → cycle-accurate simulation),
@@ -6,40 +7,49 @@
 //!
 //! Run with: `cargo run --release --example quickstart`
 
-use mc2a::compiler::compile;
 use mc2a::energy::PottsGrid;
+use mc2a::engine::Engine;
 use mc2a::isa::HwConfig;
-use mc2a::mcmc::{build_algo, AlgoKind, BetaSchedule, Chain, SamplerKind};
+use mc2a::mcmc::{AlgoKind, BetaSchedule};
 use mc2a::roofline::{self, WorkloadProfile};
-use mc2a::sim::Simulator;
 
-fn main() {
+fn main() -> mc2a::Result<()> {
     // A 16×16 ferromagnetic Ising grid at moderate temperature.
     let model = PottsGrid::new(16, 16, 2, 1.0);
     let beta = 0.35;
 
     // --- 1. software chain -------------------------------------------------
-    let algo = build_algo(AlgoKind::BlockGibbs, SamplerKind::Gumbel, &model, 1);
-    let mut chain = Chain::new(&model, algo, BetaSchedule::Constant(beta), 42);
-    chain.run(2_000);
-    println!("software Block Gibbs ({} steps):", chain.step_count);
-    println!("  updates          = {}", chain.stats.updates);
-    println!("  P(spin[0] = 1)   = {:.3}", chain.marginal(0)[1]);
-    println!("  best objective   = {:.1}", chain.best_objective);
+    let metrics = Engine::for_model(&model)
+        .algo(AlgoKind::BlockGibbs)
+        .schedule(BetaSchedule::Constant(beta))
+        .steps(2_000)
+        .seed(42)
+        .build()?
+        .run()?;
+    let sw = &metrics.chains[0];
+    println!("software Block Gibbs ({} steps):", sw.steps);
+    println!("  updates          = {}", sw.stats.updates);
+    println!("  P(spin[0] = 1)   = {:.3}", sw.marginal0[1]);
+    println!("  best objective   = {:.1}", sw.best_objective);
 
     // --- 2. MC²A accelerator ----------------------------------------------
     let hw = HwConfig::paper_default();
-    let program = compile(&model, AlgoKind::BlockGibbs, &hw, 1);
-    let mut sim = Simulator::new(hw, &model, 1, 42);
-    sim.set_beta(beta);
-    let rep = sim.run(&program, 2_000);
+    let metrics = Engine::for_model(&model)
+        .algo(AlgoKind::BlockGibbs)
+        .schedule(BetaSchedule::Constant(beta))
+        .steps(2_000)
+        .seed(42)
+        .accelerator(hw)
+        .build()?
+        .run()?;
+    let acc = &metrics.chains[0];
+    let rep = acc.sim.as_ref().expect("accelerator report");
     println!("\nMC2A accelerator (T={} K={} S={} B={}):", hw.t, hw.k, hw.s, hw.bw_words);
-    println!("  program          = {} instrs/iter", program.body.len());
     println!("  cycles           = {}", rep.cycles);
     println!("  throughput       = {:.3} GS/s", rep.gsps(&hw));
     println!("  CU / SU util     = {:.2} / {:.2}", rep.cu_utilization(), rep.su_utilization());
     println!("  power (modeled)  = {:.3} W", rep.watts(&hw));
-    println!("  P(spin[0] = 1)   = {:.3}  (must match software)", sim.marginal(0)[1]);
+    println!("  P(spin[0] = 1)   = {:.3}  (must match software)", acc.marginal0[1]);
 
     // --- 3. roofline prediction --------------------------------------------
     let prof = WorkloadProfile::from_model(&model, AlgoKind::BlockGibbs);
@@ -51,4 +61,5 @@ fn main() {
         "  sim/prediction   = {:.2}",
         rep.gsps(&hw) / point.tp_gsps
     );
+    Ok(())
 }

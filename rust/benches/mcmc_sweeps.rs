@@ -1,22 +1,31 @@
 //! Bench: software MCMC sweep throughput (RV updates/s) per algorithm —
 //! the L3 hot path that the perf pass optimizes (EXPERIMENTS.md §Perf).
+//! All runs are constructed through the [`Engine`] builder.
 
 use mc2a::bench::bench_fn;
 use mc2a::energy::PottsGrid;
-use mc2a::mcmc::{build_algo, AlgoKind, BetaSchedule, Chain, SamplerKind};
+use mc2a::engine::Engine;
+use mc2a::mcmc::{AlgoKind, SamplerKind};
 use mc2a::workloads;
 
-fn bench_chain(name: &str, model: &dyn mc2a::energy::EnergyModel, algo: AlgoKind, sampler: SamplerKind, flips: usize, steps: usize) {
-    let stat = bench_fn(1, 5, || {
-        let a = build_algo(algo, sampler, model, flips);
-        let mut chain = Chain::new(model, a, BetaSchedule::Constant(1.0), 1);
-        chain.run(steps);
-        chain.stats.updates
-    });
-    let a = build_algo(algo, sampler, model, flips);
-    let mut chain = Chain::new(model, a, BetaSchedule::Constant(1.0), 1);
-    chain.run(steps);
-    let updates = chain.stats.updates as f64;
+fn bench_chain(
+    name: &str,
+    model: &dyn mc2a::energy::EnergyModel,
+    algo: AlgoKind,
+    sampler: SamplerKind,
+    flips: usize,
+    steps: usize,
+) {
+    let mut engine = Engine::for_model(model)
+        .algo(algo)
+        .sampler(sampler)
+        .pas_flips(flips)
+        .steps(steps)
+        .build()
+        .expect("engine");
+    let stat = bench_fn(1, 5, || engine.run().expect("run"));
+    let metrics = engine.run().expect("run");
+    let updates = metrics.total_updates() as f64;
     println!(
         "{name:<28} {:>8.3} ms/run  {:>10.3e} updates/s",
         stat.median_ms(),

@@ -1,23 +1,37 @@
 //! Bench: cycle-accurate simulator throughput (simulated cycles/s and
-//! simulated samples/s) across workload classes. The simulator must be
-//! fast enough that the Fig. 14 sweeps are not bottlenecked by the
-//! host (DESIGN.md §6 target: ≥ 10 M simulated cycles/s).
+//! simulated samples/s) across workload classes, driven through the
+//! [`Engine`] accelerator backend (compile + simulate per run). The
+//! simulator must be fast enough that the Fig. 14 sweeps are not
+//! bottlenecked by the host (DESIGN.md §6 target: ≥ 10 M simulated
+//! cycles/s).
 
 use mc2a::bench::bench_fn;
-use mc2a::compiler::compile;
+use mc2a::engine::Engine;
 use mc2a::energy::PottsGrid;
 use mc2a::isa::HwConfig;
 use mc2a::mcmc::AlgoKind;
-use mc2a::sim::Simulator;
 use mc2a::workloads;
 
-fn bench_workload(name: &str, model: &dyn mc2a::energy::EnergyModel, algo: AlgoKind, flips: usize, iters: usize) {
+fn bench_workload(
+    name: &str,
+    model: &dyn mc2a::energy::EnergyModel,
+    algo: AlgoKind,
+    flips: usize,
+    iters: usize,
+) {
     let hw = HwConfig::paper_default();
-    let program = compile(model, algo, &hw, flips);
-    let mut sim = Simulator::new(hw, model, flips, 42);
-    let stat = bench_fn(1, 5, || sim.run(&program, iters));
+    let mut engine = Engine::for_model(model)
+        .algo(algo)
+        .pas_flips(flips)
+        .steps(iters)
+        .seed(42)
+        .accelerator(hw)
+        .build()
+        .expect("engine");
+    let stat = bench_fn(1, 5, || engine.run().expect("run"));
     // one extra run for the cycle count
-    let rep = sim.run(&program, iters);
+    let metrics = engine.run().expect("run");
+    let rep = metrics.chains[0].sim.as_ref().expect("sim report");
     let cyc_per_sec = rep.cycles as f64 / (stat.median_ms() / 1e3);
     println!(
         "{name:<24} {:>10} cycles/run  {:>8.3} ms/run  {:>10.2e} sim-cycles/s  {:>10.2e} sim-samples/s",

@@ -13,9 +13,9 @@ pub use timing::{bench_fn, BenchStat};
 use std::fmt::Write as _;
 
 use crate::baselines::{self, BaselineWorkload};
-use crate::compiler::compile;
 
 use crate::energy::MaxCutModel;
+use crate::engine::{Engine, Mc2aError};
 use crate::graph::erdos_renyi_with_edges;
 use crate::isa::HwConfig;
 use crate::mcmc::sampler::{sampler_tv_distance, GumbelLutSampler, GumbelSampler};
@@ -26,7 +26,6 @@ use crate::rng::Rng;
 use crate::roofline::{self, dse_sweep, WorkloadProfile};
 use crate::runtime::Runtime;
 use crate::sim::su::fig13_sweep;
-use crate::sim::Simulator;
 use crate::workloads::{self, Workload};
 
 /// Table I: the workload suite, regenerated from the actual generators.
@@ -410,14 +409,27 @@ pub struct PlatformRow {
     pub gsps_per_watt: f64,
 }
 
-/// Evaluate one workload on MC²A (cycle-accurate sim) and all baselines.
-pub fn evaluate_platforms(wl: &Workload, iters: usize, irregular: bool) -> Vec<PlatformRow> {
+/// Evaluate one workload on MC²A (cycle-accurate sim, via the engine's
+/// accelerator backend) and all baselines.
+pub fn evaluate_platforms(
+    wl: &Workload,
+    iters: usize,
+    irregular: bool,
+) -> Result<Vec<PlatformRow>, Mc2aError> {
     let mut rows = Vec::new();
-    // MC²A: compile + simulate.
+    // MC²A: compile + simulate through the engine.
     let hw = HwConfig::paper_default();
-    let program = compile(wl.model.as_ref(), wl.algorithm, &hw, wl.pas_flips);
-    let mut sim = Simulator::new(hw, wl.model.as_ref(), wl.pas_flips, 0x14);
-    let rep = sim.run(&program, iters);
+    let metrics = Engine::for_model(wl.model.as_ref())
+        .algo(wl.algorithm)
+        .pas_flips(wl.pas_flips)
+        .steps(iters)
+        .seed(0x14)
+        .accelerator(hw)
+        .build()?
+        .run()?;
+    let rep = metrics.chains[0].sim.as_ref().ok_or_else(|| {
+        Mc2aError::InvalidConfig("accelerator backend returned no sim report".into())
+    })?;
     rows.push(PlatformRow {
         name: "MC2A".into(),
         gsps: rep.gsps(&hw),
@@ -439,7 +451,7 @@ pub fn evaluate_platforms(wl: &Workload, iters: usize, irregular: bool) -> Vec<P
             gsps_per_watt: b.gsps_per_watt(&w),
         });
     }
-    rows
+    Ok(rows)
 }
 
 /// Fig. 14: throughput/latency comparison across the workload suite.
@@ -454,8 +466,14 @@ pub fn fig14(quick: bool) -> String {
     let iters = if quick { 20 } else { 50 };
     for wl in &suite {
         let irregular = matches!(wl.model_kind, "Bayes Net" | "MIS" | "Max clique" | "MaxCut" | "EBM");
-        let rows = evaluate_platforms(wl, iters, irregular);
         writeln!(out, "\n## {} ({}, {})", wl.name, wl.model_kind, wl.algorithm.name()).unwrap();
+        let rows = match evaluate_platforms(wl, iters, irregular) {
+            Ok(rows) => rows,
+            Err(e) => {
+                writeln!(out, "evaluation failed: {e}").unwrap();
+                continue;
+            }
+        };
         let mc2a = rows[0].gsps;
         for r in &rows {
             if r.gsps == 0.0 {
@@ -547,7 +565,13 @@ pub fn fig15(quick: bool) -> String {
     let mut out = String::new();
     writeln!(out, "# Fig. 15 — energy efficiency on structured graphs (GS/s/W)").unwrap();
     let wl = workloads::wl_image_seg(!quick);
-    let rows = evaluate_platforms(&wl, if quick { 10 } else { 30 }, false);
+    let rows = match evaluate_platforms(&wl, if quick { 10 } else { 30 }, false) {
+        Ok(rows) => rows,
+        Err(e) => {
+            writeln!(out, "evaluation failed: {e}").unwrap();
+            return out;
+        }
+    };
     let mc2a = rows[0].gsps_per_watt;
     for r in &rows {
         if r.gsps_per_watt > 0.0 {
@@ -576,7 +600,13 @@ pub fn headline(quick: bool) -> String {
     let mut out = String::new();
     writeln!(out, "# §VI-D headline speedups (MRF workload, 150k nodes)").unwrap();
     let wl = workloads::wl_image_seg(true);
-    let rows = evaluate_platforms(&wl, if quick { 3 } else { 30 }, false);
+    let rows = match evaluate_platforms(&wl, if quick { 3 } else { 30 }, false) {
+        Ok(rows) => rows,
+        Err(e) => {
+            writeln!(out, "evaluation failed: {e}").unwrap();
+            return out;
+        }
+    };
     let mc2a = rows[0].gsps;
     let paper: &[(&str, f64)] = &[
         ("CPU (Xeon)", 307.6),

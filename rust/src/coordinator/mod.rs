@@ -1,34 +1,21 @@
-//! L3 coordinator: chain orchestration across execution backends.
+//! L3 chain results and multi-chain aggregation.
 //!
 //! The paper's accelerator targets single-chain acceleration and
 //! "can easily be scaled to support multiple chains … by instantiating
-//! multiple parallel MC²A cores" (§II-D). This module is that system
-//! layer: it routes a workload to a backend — the cycle-accurate
-//! accelerator simulator, the software (Rust) chain, or the AOT-XLA
-//! runtime path — fans chains out across OS threads (one per core,
-//! mirroring multi-core MC²A instantiation), tracks convergence, and
-//! aggregates metrics.
+//! multiple parallel MC²A cores" (§II-D). The orchestration itself —
+//! backend routing, thread fan-out, streaming observation, early stop
+//! — lives in [`crate::engine`]; this module owns the data the engine
+//! produces: one [`ChainResult`] per chain and the [`RunMetrics`]
+//! aggregate with cross-chain convergence diagnostics.
 //!
-//! Offline-environment note: the vendored crate set has no tokio, so
-//! the coordinator uses `std::thread::scope` + channels; the event
-//! loop is synchronous but the chains themselves are fully parallel.
+//! (The old closed `Backend` enum and `run_chains` free function were
+//! replaced by [`crate::engine::ExecutionBackend`] and
+//! [`crate::engine::EngineBuilder`].)
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use crate::compiler::compile;
-use crate::energy::EnergyModel;
-use crate::isa::HwConfig;
-use crate::mcmc::{build_algo, AlgoKind, BetaSchedule, Chain, SamplerKind, StepStats};
-use crate::sim::{SimReport, Simulator};
-
-/// Where a chain executes.
-#[derive(Clone, Copy, Debug)]
-pub enum Backend {
-    /// Pure-Rust software chain (the reference implementation).
-    Software(SamplerKind),
-    /// The cycle-accurate MC²A simulator with a hardware config.
-    Accelerator(HwConfig),
-}
+use crate::mcmc::{effective_sample_size, split_r_hat, StepStats};
+use crate::sim::SimReport;
 
 /// Result of one chain run.
 #[derive(Clone, Debug)]
@@ -37,7 +24,7 @@ pub struct ChainResult {
     pub chain_id: usize,
     /// Best objective found.
     pub best_objective: f64,
-    /// Steps executed.
+    /// Steps executed (may be fewer than requested on early stop).
     pub steps: usize,
     /// Software-side statistics (updates, ops, samples).
     pub stats: StepStats,
@@ -47,6 +34,11 @@ pub struct ChainResult {
     pub wall: Duration,
     /// Marginal of RV 0 (convergence smoke signal).
     pub marginal0: Vec<f64>,
+    /// Best assignment found (software) or final state (accelerator).
+    pub best_x: Vec<u32>,
+    /// Objective sampled at every observation point — the signal the
+    /// engine's R-hat/ESS diagnostics run on.
+    pub objective_trace: Vec<f64>,
 }
 
 /// Aggregated multi-chain metrics.
@@ -94,154 +86,79 @@ impl RunMetrics {
         }
         m
     }
-}
 
-/// A chain-run request.
-#[derive(Clone, Copy, Debug)]
-pub struct RunSpec {
-    /// Algorithm to run.
-    pub algo: AlgoKind,
-    /// β schedule.
-    pub schedule: BetaSchedule,
-    /// Steps per chain.
-    pub steps: usize,
-    /// Number of independent chains.
-    pub chains: usize,
-    /// Base RNG seed (chain i uses `seed + i`).
-    pub seed: u64,
-    /// PAS path length.
-    pub pas_flips: usize,
-}
-
-impl Default for RunSpec {
-    fn default() -> RunSpec {
-        RunSpec {
-            algo: AlgoKind::BlockGibbs,
-            schedule: BetaSchedule::Constant(1.0),
-            steps: 100,
-            chains: 1,
-            seed: 1,
-            pas_flips: 8,
+    /// Split R-hat over the chains' objective traces (`None` with
+    /// fewer than two chains or fewer than four observations each).
+    pub fn split_r_hat(&self) -> Option<f64> {
+        if self.chains.len() < 2 {
+            return None;
         }
-    }
-}
-
-/// Run one chain on the chosen backend.
-fn run_one(model: &dyn EnergyModel, backend: Backend, spec: &RunSpec, chain_id: usize) -> ChainResult {
-    let t0 = Instant::now();
-    let seed = spec.seed + chain_id as u64;
-    match backend {
-        Backend::Software(sampler) => {
-            let algo = build_algo(spec.algo, sampler, model, spec.pas_flips);
-            let mut chain = Chain::new(model, algo, spec.schedule, seed);
-            chain.run(spec.steps);
-            ChainResult {
-                chain_id,
-                best_objective: chain.best_objective,
-                steps: chain.step_count,
-                stats: chain.stats,
-                sim: None,
-                wall: t0.elapsed(),
-                marginal0: chain.marginal(0),
-            }
-        }
-        Backend::Accelerator(hw) => {
-            let program = compile(model, spec.algo, &hw, spec.pas_flips);
-            let mut sim = Simulator::new(hw, model, spec.pas_flips, seed);
-            sim.set_beta(spec.schedule.beta(spec.steps / 2));
-            let rep = sim.run(&program, spec.steps);
-            let mut stats = StepStats::default();
-            stats.updates = rep.updates;
-            stats.cost.samples = rep.samples;
-            stats.cost.bytes = 4 * (rep.load_words + rep.store_words);
-            let best = model.objective(&sim.x);
-            ChainResult {
-                chain_id,
-                best_objective: best,
-                steps: spec.steps,
-                stats,
-                marginal0: sim.marginal(0),
-                sim: Some(rep),
-                wall: t0.elapsed(),
-            }
-        }
-    }
-}
-
-/// Fan `spec.chains` chains out over OS threads and gather results.
-pub fn run_chains(model: &dyn EnergyModel, backend: Backend, spec: RunSpec) -> RunMetrics {
-    let t0 = Instant::now();
-    let chains: Vec<ChainResult> = std::thread::scope(|scope| {
-        let handles: Vec<_> = (0..spec.chains)
-            .map(|cid| scope.spawn(move || run_one(model, backend, &spec, cid)))
+        let traces: Vec<Vec<f64>> = self
+            .chains
+            .iter()
+            .map(|c| c.objective_trace.clone())
             .collect();
-        handles.into_iter().map(|h| h.join().expect("chain panicked")).collect()
-    });
-    RunMetrics {
-        chains,
-        wall: t0.elapsed(),
+        split_r_hat(&traces)
+    }
+
+    /// Smallest per-chain effective sample size of the objective trace.
+    pub fn min_ess(&self) -> f64 {
+        self.chains
+            .iter()
+            .map(|c| effective_sample_size(&c.objective_trace))
+            .fold(f64::INFINITY, f64::min)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::energy::PottsGrid;
 
-    #[test]
-    fn software_chains_run_in_parallel_and_agree() {
-        let m = PottsGrid::new(6, 6, 2, 0.3);
-        let metrics = run_chains(
-            &m,
-            Backend::Software(SamplerKind::Gumbel),
-            RunSpec {
-                chains: 4,
-                steps: 2000,
-                ..Default::default()
-            },
-        );
-        assert_eq!(metrics.chains.len(), 4);
-        // Symmetric Ising at moderate β: marginals near 0.5 for every chain.
-        for c in &metrics.chains {
-            assert!((c.marginal0[0] - 0.5).abs() < 0.1, "{:?}", c.marginal0);
-        }
-        assert!(metrics.total_updates() >= 4 * 2000 * 36);
-        assert!(metrics.updates_per_sec() > 0.0);
-    }
-
-    #[test]
-    fn accelerator_backend_reports_cycles() {
-        let m = PottsGrid::new(4, 4, 2, 0.5);
-        let metrics = run_chains(
-            &m,
-            Backend::Accelerator(HwConfig::fig10_toy()),
-            RunSpec {
-                chains: 2,
-                steps: 50,
-                ..Default::default()
-            },
-        );
-        for c in &metrics.chains {
-            let rep = c.sim.as_ref().expect("sim report");
-            assert!(rep.cycles > 0);
-            assert_eq!(rep.updates, 50 * 16);
+    fn result(chain_id: usize, best: f64, trace: Vec<f64>) -> ChainResult {
+        let stats = StepStats {
+            updates: 100,
+            ..Default::default()
+        };
+        ChainResult {
+            chain_id,
+            best_objective: best,
+            steps: trace.len() * 10,
+            stats,
+            sim: None,
+            wall: Duration::from_millis(10),
+            marginal0: vec![0.25, 0.75],
+            best_x: vec![0, 1],
+            objective_trace: trace,
         }
     }
 
     #[test]
-    fn chains_use_distinct_seeds() {
-        let m = PottsGrid::new(5, 5, 2, 0.5);
-        let metrics = run_chains(
-            &m,
-            Backend::Software(SamplerKind::Gumbel),
-            RunSpec {
-                chains: 2,
-                steps: 50,
-                ..Default::default()
-            },
-        );
-        // Two chains with different seeds should not produce identical
-        // marginal estimates at this short length.
-        assert_ne!(metrics.chains[0].marginal0, metrics.chains[1].marginal0);
+    fn aggregates_best_updates_and_marginals() {
+        let m = RunMetrics {
+            chains: vec![
+                result(0, 5.0, vec![1.0, 2.0, 5.0, 5.0]),
+                result(1, 7.0, vec![2.0, 3.0, 7.0, 7.0]),
+            ],
+            wall: Duration::from_millis(20),
+        };
+        assert_eq!(m.best_objective(), 7.0);
+        assert_eq!(m.total_updates(), 200);
+        assert!(m.updates_per_sec() > 0.0);
+        assert_eq!(m.mean_marginal0(), vec![0.25, 0.75]);
+    }
+
+    #[test]
+    fn diagnostics_require_two_chains() {
+        let one = RunMetrics {
+            chains: vec![result(0, 1.0, vec![1.0; 8])],
+            wall: Duration::from_millis(1),
+        };
+        assert!(one.split_r_hat().is_none());
+        let two = RunMetrics {
+            chains: vec![result(0, 1.0, vec![1.0; 8]), result(1, 1.0, vec![1.0; 8])],
+            wall: Duration::from_millis(1),
+        };
+        assert_eq!(two.split_r_hat(), Some(1.0));
+        assert_eq!(two.min_ess(), 8.0);
     }
 }

@@ -1,0 +1,406 @@
+//! Pluggable execution backends.
+//!
+//! [`ExecutionBackend`] replaces the old closed `coordinator::Backend`
+//! enum: a backend receives a *(model, chain spec, chain id)* triple
+//! plus a [`ChainCtx`] (stop flag + event channel) and returns one
+//! [`ChainResult`]. The engine fans chains out across OS threads and
+//! shares one backend instance between them, so implementations are
+//! `Send + Sync` and keep per-chain state on the stack.
+//!
+//! Three backends ship with the crate:
+//!
+//! * [`SoftwareBackend`] — the pure-Rust reference chains,
+//! * [`AcceleratorBackend`] — compile to the MC²A VLIW ISA and run the
+//!   cycle-accurate simulator, evaluating the β schedule once per
+//!   HWLOOP iteration,
+//! * [`RuntimeBackend`] — the AOT-JAX/PJRT measured-software path,
+//!   available when the crate is built with the `xla-runtime` feature
+//!   and the artifact directory exists.
+//!
+//! Future sharded / batched / multi-node backends implement the same
+//! trait and plug in through [`crate::engine::EngineBuilder::backend`]
+//! without touching any call site.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+use crate::compiler::compile_opt;
+use crate::coordinator::ChainResult;
+use crate::energy::{EnergyModel, OpCost};
+use crate::engine::error::Mc2aError;
+use crate::engine::observer::ProgressEvent;
+use crate::isa::HwConfig;
+use crate::mcmc::{build_algo, AlgoKind, BetaSchedule, Chain, SamplerKind, StepStats};
+use crate::rng::Rng;
+use crate::runtime::Runtime;
+use crate::sim::Simulator;
+
+/// Backend-agnostic description of one chain run (the successor of the
+/// old `coordinator::RunSpec`, built by [`crate::engine::EngineBuilder`]).
+#[derive(Clone, Debug)]
+pub struct ChainSpec {
+    /// Algorithm to run.
+    pub algo: AlgoKind,
+    /// Categorical sampler backing the software algorithms.
+    pub sampler: SamplerKind,
+    /// β (inverse-temperature) schedule, stepped every MCMC step.
+    pub schedule: BetaSchedule,
+    /// Steps per chain.
+    pub steps: usize,
+    /// Base RNG seed (chain `i` uses `seed + i`).
+    pub seed: u64,
+    /// PAS path length (ignored by other algorithms).
+    pub pas_flips: usize,
+    /// Emit a progress event every this many steps.
+    pub observe_every: usize,
+    /// Optional shared initial assignment (defaults to random).
+    pub init_state: Option<Vec<u32>>,
+}
+
+/// Per-chain run context handed to backends: the engine's shared stop
+/// flag and this chain's clone of the progress-event channel. (The
+/// observation cadence lives on [`ChainSpec::observe_every`].)
+pub struct ChainCtx<'a> {
+    /// Cooperative early-stop flag; backends poll it at observation
+    /// boundaries and exit early when raised.
+    pub stop: &'a AtomicBool,
+    /// Progress sink (None when the run has no observer loop).
+    pub events: Option<Sender<ProgressEvent>>,
+}
+
+impl ChainCtx<'_> {
+    /// True when the engine (or an observer) requested a stop.
+    pub fn stop_requested(&self) -> bool {
+        self.stop.load(Ordering::Relaxed)
+    }
+
+    /// Send one progress event (ignored when nobody listens).
+    pub fn emit(&self, event: ProgressEvent) {
+        if let Some(tx) = &self.events {
+            let _ = tx.send(event);
+        }
+    }
+}
+
+/// Where and how a chain executes. Implementations are shared across
+/// the engine's worker threads.
+pub trait ExecutionBackend: Send + Sync {
+    /// Short backend name for reports ("software", "accelerator", …).
+    fn name(&self) -> &'static str;
+
+    /// Run one chain to completion (or early stop) and report it.
+    fn run_chain(
+        &self,
+        model: &dyn EnergyModel,
+        spec: &ChainSpec,
+        chain_id: usize,
+        ctx: &ChainCtx<'_>,
+    ) -> Result<ChainResult, Mc2aError>;
+}
+
+/// Pure-Rust software chains (the reference implementation).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SoftwareBackend;
+
+impl ExecutionBackend for SoftwareBackend {
+    fn name(&self) -> &'static str {
+        "software"
+    }
+
+    fn run_chain(
+        &self,
+        model: &dyn EnergyModel,
+        spec: &ChainSpec,
+        chain_id: usize,
+        ctx: &ChainCtx<'_>,
+    ) -> Result<ChainResult, Mc2aError> {
+        let t0 = Instant::now();
+        let seed = spec.seed + chain_id as u64;
+        let algo = build_algo(spec.algo, spec.sampler, model, spec.pas_flips);
+        let mut chain = Chain::new(model, algo, spec.schedule, seed);
+        if let Some(x0) = &spec.init_state {
+            chain.set_state(x0);
+        }
+        let every = spec.observe_every.max(1);
+        let mut trace = Vec::new();
+        let mut done = 0usize;
+        while done < spec.steps {
+            if ctx.stop_requested() {
+                break;
+            }
+            let n = every.min(spec.steps - done);
+            chain.run(n);
+            done += n;
+            let objective = model.objective(&chain.x);
+            trace.push(objective);
+            ctx.emit(ProgressEvent {
+                chain_id,
+                step: done,
+                beta: spec.schedule.beta(done - 1),
+                objective,
+                best_objective: chain.best_objective,
+                updates: chain.stats.updates,
+            });
+        }
+        Ok(ChainResult {
+            chain_id,
+            best_objective: chain.best_objective,
+            steps: chain.step_count,
+            stats: chain.stats,
+            sim: None,
+            wall: t0.elapsed(),
+            marginal0: chain.marginal(0),
+            best_x: chain.best_assignment().to_vec(),
+            objective_trace: trace,
+        })
+    }
+}
+
+/// The cycle-accurate MC²A accelerator simulator: compile the workload
+/// to the VLIW ISA, then run it with the β schedule stepped once per
+/// HWLOOP iteration.
+#[derive(Clone, Copy, Debug)]
+pub struct AcceleratorBackend {
+    hw: HwConfig,
+    optimize: bool,
+}
+
+impl AcceleratorBackend {
+    /// Backend for `hw` with the VLIW load/compute fusion optimizer on
+    /// (the production compiler path).
+    pub fn new(hw: HwConfig) -> AcceleratorBackend {
+        AcceleratorBackend { hw, optimize: true }
+    }
+
+    /// Toggle the compiler optimizer (the §Perf ablation knob).
+    pub fn with_optimization(mut self, optimize: bool) -> AcceleratorBackend {
+        self.optimize = optimize;
+        self
+    }
+
+    /// The hardware configuration this backend simulates.
+    pub fn hw(&self) -> &HwConfig {
+        &self.hw
+    }
+}
+
+impl ExecutionBackend for AcceleratorBackend {
+    fn name(&self) -> &'static str {
+        "accelerator"
+    }
+
+    fn run_chain(
+        &self,
+        model: &dyn EnergyModel,
+        spec: &ChainSpec,
+        chain_id: usize,
+        ctx: &ChainCtx<'_>,
+    ) -> Result<ChainResult, Mc2aError> {
+        self.hw.validate().map_err(Mc2aError::InvalidHardware)?;
+        let t0 = Instant::now();
+        let seed = spec.seed + chain_id as u64;
+        let program = compile_opt(model, spec.algo, &self.hw, spec.pas_flips, self.optimize);
+        let mut sim = Simulator::new(self.hw, model, spec.pas_flips, seed);
+        if let Some(x0) = &spec.init_state {
+            sim.x.copy_from_slice(x0);
+        }
+        let every = spec.observe_every.max(1);
+        let mut trace = Vec::new();
+        let mut best = f64::NEG_INFINITY;
+        let rep = sim.run_observed(
+            &program,
+            spec.steps,
+            Some(spec.schedule),
+            &mut |iter, rep_so_far, x| {
+                let step = iter + 1;
+                if step % every == 0 || step == spec.steps {
+                    let objective = model.objective(x);
+                    best = best.max(objective);
+                    trace.push(objective);
+                    ctx.emit(ProgressEvent {
+                        chain_id,
+                        step,
+                        beta: spec.schedule.beta(iter),
+                        objective,
+                        best_objective: best,
+                        updates: rep_so_far.updates,
+                    });
+                }
+                !ctx.stop_requested()
+            },
+        );
+        let stats = StepStats {
+            updates: rep.updates,
+            accepted: 0,
+            cost: OpCost {
+                ops: 0,
+                bytes: 4 * (rep.load_words + rep.store_words),
+                samples: rep.samples,
+            },
+        };
+        let final_objective = model.objective(&sim.x);
+        Ok(ChainResult {
+            chain_id,
+            best_objective: best.max(final_objective),
+            steps: rep.iterations as usize,
+            stats,
+            marginal0: sim.marginal(0),
+            best_x: sim.x.clone(),
+            sim: Some(rep),
+            wall: t0.elapsed(),
+            objective_trace: trace,
+        })
+    }
+}
+
+/// The AOT-JAX/PJRT measured-software path: every categorical draw is
+/// delegated to the `gumbel_sample` artifact, so the chain exercises
+/// the exact compiled kernel the CPU baseline measures.
+///
+/// Requires the `xla-runtime` feature; without it (or without a built
+/// artifact directory) [`RuntimeBackend::new`] returns
+/// [`Mc2aError::RuntimeUnavailable`] and the builder surfaces that at
+/// `build()` time. Only sequential Gibbs-family algorithms are
+/// supported (the artifacts encode single-site conditionals).
+pub struct RuntimeBackend {
+    rt: Runtime,
+}
+
+impl RuntimeBackend {
+    /// Load the artifact set from `dir` (`<dir>/manifest.txt` + HLO
+    /// text files produced by `make artifacts`).
+    pub fn new(dir: impl AsRef<std::path::Path>) -> Result<RuntimeBackend, Mc2aError> {
+        let rt = Runtime::load(dir.as_ref())
+            .map_err(|e| Mc2aError::RuntimeUnavailable(format!("{e:#}")))?;
+        Ok(RuntimeBackend { rt })
+    }
+
+    /// The loaded PJRT runtime.
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+}
+
+impl ExecutionBackend for RuntimeBackend {
+    fn name(&self) -> &'static str {
+        "runtime"
+    }
+
+    fn run_chain(
+        &self,
+        model: &dyn EnergyModel,
+        spec: &ChainSpec,
+        chain_id: usize,
+        ctx: &ChainCtx<'_>,
+    ) -> Result<ChainResult, Mc2aError> {
+        if matches!(spec.algo, AlgoKind::Pas) {
+            return Err(Mc2aError::InvalidConfig(
+                "the runtime backend supports Gibbs-family algorithms only".into(),
+            ));
+        }
+        let art = self
+            .rt
+            .spec("gumbel_sample")
+            .ok_or_else(|| Mc2aError::RuntimeUnavailable("artifact `gumbel_sample` missing".into()))?;
+        let dims = art
+            .inputs
+            .first()
+            .map(|a| a.dims.clone())
+            .ok_or_else(|| Mc2aError::Runtime("gumbel_sample manifest lists no inputs".into()))?;
+        if dims.len() != 2 {
+            return Err(Mc2aError::Runtime(format!(
+                "gumbel_sample expects a 2-D energy input, manifest says {dims:?}"
+            )));
+        }
+        let (batch, width) = (dims[0], dims[1]);
+
+        let t0 = Instant::now();
+        let seed = spec.seed + chain_id as u64;
+        let mut rng = Rng::new(seed);
+        let mut x = match &spec.init_state {
+            Some(x0) => x0.clone(),
+            None => crate::energy::random_state(model, &mut rng),
+        };
+        let n = model.num_vars();
+        let mut scratch: Vec<f32> = Vec::new();
+        let mut hist0 = vec![0u64; model.num_states(0)];
+        let mut stats = StepStats::default();
+        let mut best = model.objective(&x);
+        let mut trace = Vec::new();
+        let every = spec.observe_every.max(1);
+        let mut done = 0usize;
+        // Prohibitive padding energy: never sampled by the Gumbel argmax.
+        const PAD: f32 = 1e30;
+        while done < spec.steps {
+            if ctx.stop_requested() {
+                break;
+            }
+            let beta = spec.schedule.beta(done);
+            for i in 0..n {
+                model.local_energies(&x, i, &mut scratch);
+                if scratch.len() > width {
+                    return Err(Mc2aError::Runtime(format!(
+                        "RV {i} has {} states, artifact supports ≤ {width}",
+                        scratch.len()
+                    )));
+                }
+                let mut e = vec![PAD; batch * width];
+                e[..scratch.len()].copy_from_slice(&scratch);
+                let u: Vec<f32> = (0..batch * width).map(|_| rng.uniform_open_f32()).collect();
+                let out = self
+                    .rt
+                    .execute_f32("gumbel_sample", &[&e, &u, &[beta]])
+                    .map_err(|e| Mc2aError::Runtime(format!("{e:#}")))?;
+                let sample = out
+                    .first()
+                    .and_then(|o| o.first())
+                    .copied()
+                    .ok_or_else(|| Mc2aError::Runtime("gumbel_sample returned no output".into()))?
+                    as usize;
+                if sample >= scratch.len() {
+                    return Err(Mc2aError::Runtime(format!(
+                        "gumbel_sample picked padded state {sample} for RV {i} ({} states)",
+                        scratch.len()
+                    )));
+                }
+                x[i] = sample as u32;
+                let c = model.update_cost(i);
+                stats.updates += 1;
+                stats.accepted += 1;
+                stats.cost.add(c);
+            }
+            hist0[x[0] as usize] += 1;
+            done += 1;
+            let objective = model.objective(&x);
+            best = best.max(objective);
+            if done % every == 0 || done == spec.steps {
+                trace.push(objective);
+                ctx.emit(ProgressEvent {
+                    chain_id,
+                    step: done,
+                    beta,
+                    objective,
+                    best_objective: best,
+                    updates: stats.updates,
+                });
+            }
+        }
+        let total: u64 = hist0.iter().sum();
+        let marginal0 = hist0
+            .iter()
+            .map(|&c| c as f64 / total.max(1) as f64)
+            .collect();
+        Ok(ChainResult {
+            chain_id,
+            best_objective: best,
+            steps: done,
+            stats,
+            sim: None,
+            wall: t0.elapsed(),
+            marginal0,
+            best_x: x,
+            objective_trace: trace,
+        })
+    }
+}

@@ -1,0 +1,79 @@
+//! Typed errors for the engine layer.
+//!
+//! Library code paths surface failures as [`Mc2aError`] values instead
+//! of panicking or calling `process::exit` — only `main.rs` is allowed
+//! to terminate the process. The enum is deliberately coarse: each
+//! variant is one *class* of failure a caller can meaningfully react
+//! to (fix the builder call, list the registry, install artifacts,
+//! retry on another backend).
+
+use std::fmt;
+
+/// Everything that can go wrong constructing or running an [`crate::engine::Engine`].
+#[derive(Debug)]
+#[non_exhaustive]
+pub enum Mc2aError {
+    /// A builder parameter is invalid (zero chains, zero steps, bad
+    /// flag value, mismatched initial-state length, …).
+    InvalidConfig(String),
+    /// The hardware configuration failed [`crate::isa::HwConfig::validate`].
+    InvalidHardware(String),
+    /// The requested workload is not in the registry. `known` lists
+    /// every registered name so callers can print the menu.
+    UnknownWorkload {
+        /// The name that failed to resolve.
+        name: String,
+        /// All registered workload names.
+        known: Vec<String>,
+    },
+    /// The PJRT runtime backend cannot be used (feature disabled, or
+    /// the artifact directory is missing/unloadable).
+    RuntimeUnavailable(String),
+    /// The PJRT runtime failed while executing an artifact.
+    Runtime(String),
+    /// A chain worker thread panicked.
+    ChainPanicked {
+        /// Which chain (seed-stream index) died.
+        chain_id: usize,
+    },
+}
+
+impl fmt::Display for Mc2aError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Mc2aError::InvalidConfig(msg) => write!(f, "invalid engine configuration: {msg}"),
+            Mc2aError::InvalidHardware(msg) => write!(f, "invalid hardware configuration: {msg}"),
+            Mc2aError::UnknownWorkload { name, known } => {
+                write!(f, "unknown workload `{name}`; available: {}", known.join(", "))
+            }
+            Mc2aError::RuntimeUnavailable(msg) => write!(f, "PJRT runtime unavailable: {msg}"),
+            Mc2aError::Runtime(msg) => write!(f, "PJRT runtime error: {msg}"),
+            Mc2aError::ChainPanicked { chain_id } => {
+                write!(f, "chain {chain_id} worker thread panicked")
+            }
+        }
+    }
+}
+
+impl std::error::Error for Mc2aError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_lists_registry_on_unknown_workload() {
+        let e = Mc2aError::UnknownWorkload {
+            name: "nope".into(),
+            known: vec!["earthquake".into(), "rbm".into()],
+        };
+        let s = e.to_string();
+        assert!(s.contains("nope") && s.contains("earthquake") && s.contains("rbm"), "{s}");
+    }
+
+    #[test]
+    fn error_trait_object_works() {
+        let e: Box<dyn std::error::Error> = Box::new(Mc2aError::ChainPanicked { chain_id: 3 });
+        assert!(e.to_string().contains("chain 3"));
+    }
+}

@@ -1,0 +1,516 @@
+//! The unified engine API — *the* public entry point of the crate.
+//!
+//! One fluent builder subsumes the CLI flag soup, the bench harness
+//! wiring and the per-example setups:
+//!
+//! ```no_run
+//! use mc2a::energy::PottsGrid;
+//! use mc2a::engine::Engine;
+//! use mc2a::mcmc::{AlgoKind, BetaSchedule};
+//!
+//! let model = PottsGrid::new(16, 16, 2, 1.0);
+//! let metrics = Engine::for_model(&model)
+//!     .algo(AlgoKind::BlockGibbs)
+//!     .schedule(BetaSchedule::Constant(0.5))
+//!     .steps(2_000)
+//!     .chains(4)
+//!     .build()?
+//!     .run()?;
+//! println!("best objective: {}", metrics.best_objective());
+//! # Ok::<(), mc2a::engine::Mc2aError>(())
+//! ```
+//!
+//! The moving parts:
+//!
+//! * [`ExecutionBackend`] — pluggable chain executors
+//!   ([`SoftwareBackend`], [`AcceleratorBackend`], [`RuntimeBackend`],
+//!   or any user type via [`EngineBuilder::backend`]),
+//! * [`EngineBuilder`] — validates the configuration up front and
+//!   returns typed [`Mc2aError`]s instead of panicking,
+//! * [`ChainObserver`] — streaming progress + convergence diagnostics
+//!   (split R-hat / ESS) with cooperative early stopping,
+//! * [`registry`] — the named-workload table the CLI and tests share.
+
+pub mod backend;
+pub mod error;
+pub mod observer;
+pub mod registry;
+
+pub use backend::{
+    AcceleratorBackend, ChainCtx, ChainSpec, ExecutionBackend, RuntimeBackend, SoftwareBackend,
+};
+pub use error::Mc2aError;
+pub use observer::{
+    ChainObserver, ConvergenceStop, DiagnosticsReport, NullObserver, ObserverAction,
+    PrintObserver, ProgressEvent,
+};
+pub use registry::{WorkloadEntry, REGISTRY};
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::coordinator::{ChainResult, RunMetrics};
+use crate::energy::EnergyModel;
+use crate::isa::HwConfig;
+use crate::mcmc::{AlgoKind, BetaSchedule, SamplerKind};
+use observer::DiagnosticsTracker;
+
+/// A model the engine can borrow (library callers) or own (registry
+/// workloads).
+enum ModelHandle<'m> {
+    Borrowed(&'m dyn EnergyModel),
+    Owned(Box<dyn EnergyModel>),
+}
+
+impl ModelHandle<'_> {
+    fn get(&self) -> &dyn EnergyModel {
+        match self {
+            ModelHandle::Borrowed(m) => *m,
+            ModelHandle::Owned(b) => b.as_ref(),
+        }
+    }
+}
+
+/// Backend selection held by the builder until `build()` validates it.
+enum BackendChoice {
+    Software,
+    Accelerator(AcceleratorBackend),
+    Runtime(PathBuf),
+    Custom(Box<dyn ExecutionBackend>),
+}
+
+/// Fluent configuration for an [`Engine`] run.
+///
+/// Obtained from [`Engine::for_model`] or [`Engine::for_workload`];
+/// every setter consumes and returns the builder, and [`build`]
+/// (`EngineBuilder::build`) performs all validation.
+pub struct EngineBuilder<'m> {
+    model: ModelHandle<'m>,
+    workload: Option<&'static str>,
+    algo: AlgoKind,
+    sampler: SamplerKind,
+    schedule: BetaSchedule,
+    steps: usize,
+    chains: usize,
+    seed: u64,
+    pas_flips: usize,
+    observe_every: usize,
+    init_state: Option<Vec<u32>>,
+    backend: BackendChoice,
+    observer: Option<Box<dyn ChainObserver>>,
+}
+
+impl<'m> EngineBuilder<'m> {
+    fn with_model(model: ModelHandle<'m>) -> EngineBuilder<'m> {
+        EngineBuilder {
+            model,
+            workload: None,
+            algo: AlgoKind::BlockGibbs,
+            sampler: SamplerKind::Gumbel,
+            schedule: BetaSchedule::Constant(1.0),
+            steps: 100,
+            chains: 1,
+            seed: 1,
+            pas_flips: 8,
+            observe_every: 0,
+            init_state: None,
+            backend: BackendChoice::Software,
+            observer: None,
+        }
+    }
+
+    /// MCMC algorithm (default: the workload's pairing, else Block Gibbs).
+    pub fn algo(mut self, algo: AlgoKind) -> Self {
+        self.algo = algo;
+        self
+    }
+
+    /// Categorical sampler for the software algorithms (default Gumbel).
+    pub fn sampler(mut self, sampler: SamplerKind) -> Self {
+        self.sampler = sampler;
+        self
+    }
+
+    /// β (inverse-temperature) schedule, stepped every MCMC step on
+    /// every backend (default: constant 1.0).
+    pub fn schedule(mut self, schedule: BetaSchedule) -> Self {
+        self.schedule = schedule;
+        self
+    }
+
+    /// Steps per chain (default 100).
+    pub fn steps(mut self, steps: usize) -> Self {
+        self.steps = steps;
+        self
+    }
+
+    /// Number of independent chains fanned out over OS threads
+    /// (default 1; chain `i` is seeded with `seed + i`).
+    pub fn chains(mut self, chains: usize) -> Self {
+        self.chains = chains;
+        self
+    }
+
+    /// Base RNG seed (default 1).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// PAS path length `L` (default 8; ignored by other algorithms).
+    pub fn pas_flips(mut self, pas_flips: usize) -> Self {
+        self.pas_flips = pas_flips;
+        self
+    }
+
+    /// Observation cadence in steps for progress events, diagnostics
+    /// and early-stop checks (default: `steps / 20`, at least 1).
+    pub fn observe_every(mut self, every: usize) -> Self {
+        self.observe_every = every;
+        self
+    }
+
+    /// Shared initial assignment for every chain (default: random per
+    /// chain). Length and per-RV ranges are validated by `build()`.
+    pub fn init_state(mut self, x0: Vec<u32>) -> Self {
+        self.init_state = Some(x0);
+        self
+    }
+
+    /// Streaming observer receiving progress and diagnostics callbacks.
+    pub fn observer(mut self, observer: Box<dyn ChainObserver>) -> Self {
+        self.observer = Some(observer);
+        self
+    }
+
+    /// Run on the pure-Rust software chains (the default).
+    pub fn software(mut self) -> Self {
+        self.backend = BackendChoice::Software;
+        self
+    }
+
+    /// Run on the cycle-accurate MC²A accelerator simulator with `hw`.
+    pub fn accelerator(mut self, hw: HwConfig) -> Self {
+        self.backend = BackendChoice::Accelerator(AcceleratorBackend::new(hw));
+        self
+    }
+
+    /// Run on the PJRT/XLA runtime path, loading artifacts from `dir`
+    /// (requires the `xla-runtime` feature and `make artifacts`).
+    pub fn runtime(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.backend = BackendChoice::Runtime(dir.into());
+        self
+    }
+
+    /// Run on a custom [`ExecutionBackend`] implementation.
+    pub fn backend(mut self, backend: Box<dyn ExecutionBackend>) -> Self {
+        self.backend = BackendChoice::Custom(backend);
+        self
+    }
+
+    /// Validate the configuration and construct the engine.
+    pub fn build(self) -> Result<Engine<'m>, Mc2aError> {
+        if self.chains == 0 {
+            return Err(Mc2aError::InvalidConfig("chains must be ≥ 1".into()));
+        }
+        if self.steps == 0 {
+            return Err(Mc2aError::InvalidConfig("steps must be ≥ 1".into()));
+        }
+        let model_vars = self.model.get().num_vars();
+        if let Some(x0) = &self.init_state {
+            if x0.len() != model_vars {
+                return Err(Mc2aError::InvalidConfig(format!(
+                    "initial state has {} entries, model has {model_vars} RVs",
+                    x0.len()
+                )));
+            }
+            for (i, &v) in x0.iter().enumerate() {
+                let k = self.model.get().num_states(i);
+                if v as usize >= k {
+                    return Err(Mc2aError::InvalidConfig(format!(
+                        "initial state[{i}] = {v} out of range (RV has {k} states)"
+                    )));
+                }
+            }
+        }
+        let backend: Box<dyn ExecutionBackend> = match self.backend {
+            BackendChoice::Software => Box::new(SoftwareBackend),
+            BackendChoice::Accelerator(ab) => {
+                ab.hw().validate().map_err(Mc2aError::InvalidHardware)?;
+                Box::new(ab)
+            }
+            BackendChoice::Runtime(dir) => Box::new(RuntimeBackend::new(dir)?),
+            BackendChoice::Custom(b) => b,
+        };
+        let observe_every = if self.observe_every == 0 {
+            (self.steps / 20).max(1)
+        } else {
+            self.observe_every
+        };
+        Ok(Engine {
+            model: self.model,
+            spec: ChainSpec {
+                algo: self.algo,
+                sampler: self.sampler,
+                schedule: self.schedule,
+                steps: self.steps,
+                seed: self.seed,
+                pas_flips: self.pas_flips,
+                observe_every,
+                init_state: self.init_state,
+            },
+            chains: self.chains,
+            backend,
+            observer: self.observer,
+            workload: self.workload,
+        })
+    }
+}
+
+/// A fully-validated multi-chain run: one model, one backend, `chains`
+/// seed streams, and an optional streaming observer.
+pub struct Engine<'m> {
+    model: ModelHandle<'m>,
+    spec: ChainSpec,
+    chains: usize,
+    backend: Box<dyn ExecutionBackend>,
+    observer: Option<Box<dyn ChainObserver>>,
+    workload: Option<&'static str>,
+}
+
+impl<'m> Engine<'m> {
+    /// Start configuring a run over a caller-owned model.
+    pub fn for_model(model: &'m dyn EnergyModel) -> EngineBuilder<'m> {
+        EngineBuilder::with_model(ModelHandle::Borrowed(model))
+    }
+
+    /// Start configuring a run over a registry workload; the workload's
+    /// Table I algorithm pairing and PAS path length become defaults.
+    pub fn for_workload(name: &str) -> Result<EngineBuilder<'static>, Mc2aError> {
+        let wl = registry::lookup(name)?;
+        let mut b = EngineBuilder::with_model(ModelHandle::Owned(wl.model));
+        b.workload = Some(wl.name);
+        b.algo = wl.algorithm;
+        b.pas_flips = wl.pas_flips;
+        Ok(b)
+    }
+
+    /// The model this engine runs.
+    pub fn model(&self) -> &dyn EnergyModel {
+        self.model.get()
+    }
+
+    /// The validated chain specification.
+    pub fn spec(&self) -> &ChainSpec {
+        &self.spec
+    }
+
+    /// Number of chains per run.
+    pub fn chains(&self) -> usize {
+        self.chains
+    }
+
+    /// The backend's short name.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Registry name when built via [`Engine::for_workload`].
+    pub fn workload_name(&self) -> Option<&'static str> {
+        self.workload
+    }
+
+    /// Fan the chains out over OS threads, stream events to the
+    /// observer, and gather per-chain results. Re-running the same
+    /// engine reproduces the same seeds and therefore the same chains.
+    pub fn run(&mut self) -> Result<RunMetrics, Mc2aError> {
+        let t0 = Instant::now();
+        let model = self.model.get();
+        let spec = &self.spec;
+        let backend = self.backend.as_ref();
+        let observer = &mut self.observer;
+        let n = self.chains;
+        let stop = AtomicBool::new(false);
+        let (tx, rx) = mpsc::channel::<ProgressEvent>();
+
+        let joined: Vec<Result<ChainResult, Mc2aError>> = std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(n);
+            for chain_id in 0..n {
+                let tx = tx.clone();
+                let stop = &stop;
+                handles.push(scope.spawn(move || {
+                    let ctx = ChainCtx {
+                        stop,
+                        events: Some(tx),
+                    };
+                    backend.run_chain(model, spec, chain_id, &ctx)
+                }));
+            }
+            drop(tx);
+
+            // Event loop on the coordinating thread: diagnostics are
+            // computed here, so observers can hold plain mutable state.
+            let mut tracker = DiagnosticsTracker::new(n);
+            while let Ok(event) = rx.recv() {
+                let diag = tracker.record(&event);
+                if let Some(obs) = observer.as_deref_mut() {
+                    if obs.on_progress(&event) == ObserverAction::Stop {
+                        stop.store(true, Ordering::Relaxed);
+                    }
+                    if let Some(d) = diag {
+                        if obs.on_diagnostics(&d) == ObserverAction::Stop {
+                            stop.store(true, Ordering::Relaxed);
+                        }
+                    }
+                }
+            }
+
+            handles
+                .into_iter()
+                .enumerate()
+                .map(|(chain_id, h)| {
+                    h.join()
+                        .unwrap_or_else(|_| Err(Mc2aError::ChainPanicked { chain_id }))
+                })
+                .collect()
+        });
+
+        let mut chains = Vec::with_capacity(n);
+        for result in joined {
+            let chain = result?;
+            if let Some(obs) = self.observer.as_deref_mut() {
+                obs.on_chain_done(&chain);
+            }
+            chains.push(chain);
+        }
+        Ok(RunMetrics {
+            chains,
+            wall: t0.elapsed(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::PottsGrid;
+
+    #[test]
+    fn software_chains_run_in_parallel_and_agree() {
+        let m = PottsGrid::new(6, 6, 2, 0.3);
+        let metrics = Engine::for_model(&m)
+            .steps(2000)
+            .chains(4)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(metrics.chains.len(), 4);
+        // Symmetric Ising at moderate β: marginals near 0.5 for every chain.
+        for c in &metrics.chains {
+            assert!((c.marginal0[0] - 0.5).abs() < 0.1, "{:?}", c.marginal0);
+        }
+        assert!(metrics.total_updates() >= 4 * 2000 * 36);
+        assert!(metrics.updates_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn accelerator_backend_reports_cycles() {
+        let m = PottsGrid::new(4, 4, 2, 0.5);
+        let metrics = Engine::for_model(&m)
+            .steps(50)
+            .chains(2)
+            .accelerator(HwConfig::fig10_toy())
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        for c in &metrics.chains {
+            let rep = c.sim.as_ref().expect("sim report");
+            assert!(rep.cycles > 0);
+            assert_eq!(rep.updates, 50 * 16);
+        }
+    }
+
+    #[test]
+    fn chains_use_distinct_seeds() {
+        let m = PottsGrid::new(5, 5, 2, 0.5);
+        let metrics = Engine::for_model(&m)
+            .steps(50)
+            .chains(2)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_ne!(metrics.chains[0].marginal0, metrics.chains[1].marginal0);
+    }
+
+    struct StopImmediately;
+    impl ChainObserver for StopImmediately {
+        fn on_progress(&mut self, _e: &ProgressEvent) -> ObserverAction {
+            ObserverAction::Stop
+        }
+    }
+
+    #[test]
+    fn observer_early_stop_halts_all_chains() {
+        let m = PottsGrid::new(8, 8, 2, 0.5);
+        let metrics = Engine::for_model(&m)
+            .steps(100_000)
+            .chains(2)
+            .observe_every(5)
+            .observer(Box::new(StopImmediately))
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        // At least one chain must have observed the stop request early;
+        // a chain that raced ahead of the flag may have run longer, but
+        // none can exceed the full budget only if the stop was ignored.
+        assert!(
+            metrics.chains.iter().any(|c| c.steps < 100_000),
+            "no chain stopped early: {:?}",
+            metrics.chains.iter().map(|c| c.steps).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn builder_rejects_zero_chains_and_steps() {
+        let m = PottsGrid::new(3, 3, 2, 0.5);
+        assert!(matches!(
+            Engine::for_model(&m).chains(0).build(),
+            Err(Mc2aError::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            Engine::for_model(&m).steps(0).build(),
+            Err(Mc2aError::InvalidConfig(_))
+        ));
+    }
+
+    #[test]
+    fn builder_validates_init_state() {
+        let m = PottsGrid::new(3, 3, 2, 0.5);
+        assert!(matches!(
+            Engine::for_model(&m).init_state(vec![0; 4]).build(),
+            Err(Mc2aError::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            Engine::for_model(&m).init_state(vec![7; 9]).build(),
+            Err(Mc2aError::InvalidConfig(_))
+        ));
+        assert!(Engine::for_model(&m).init_state(vec![1; 9]).build().is_ok());
+    }
+
+    #[test]
+    fn invalid_hardware_is_a_typed_error() {
+        let m = PottsGrid::new(3, 3, 2, 0.5);
+        let mut hw = HwConfig::paper_default();
+        hw.s = 48; // not a power of two
+        assert!(matches!(
+            Engine::for_model(&m).accelerator(hw).build(),
+            Err(Mc2aError::InvalidHardware(_))
+        ));
+    }
+}

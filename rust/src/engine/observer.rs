@@ -1,0 +1,228 @@
+//! Streaming chain observers: periodic progress callbacks, cross-chain
+//! convergence diagnostics (split R-hat / ESS from
+//! [`crate::mcmc::metrics`]) and cooperative early stopping.
+//!
+//! Backends emit a [`ProgressEvent`] every `observe_every` steps; the
+//! engine funnels all chains' events into one coordinating thread,
+//! which maintains per-chain objective traces, computes a
+//! [`DiagnosticsReport`] once per completed observation round, and
+//! forwards both to the run's [`ChainObserver`]. Returning
+//! [`ObserverAction::Stop`] from any callback raises the shared stop
+//! flag, and every chain exits at its next observation boundary.
+
+use crate::coordinator::ChainResult;
+use crate::mcmc::{effective_sample_size, split_r_hat};
+
+/// One periodic progress sample from a running chain.
+#[derive(Clone, Copy, Debug)]
+pub struct ProgressEvent {
+    /// Chain id (seed-stream index).
+    pub chain_id: usize,
+    /// Steps completed so far on this chain.
+    pub step: usize,
+    /// Inverse temperature at the last completed step.
+    pub beta: f32,
+    /// Objective of the *current* state (the diagnostics trace signal).
+    pub objective: f64,
+    /// Best objective seen so far on this chain.
+    pub best_objective: f64,
+    /// Cumulative RV updates on this chain.
+    pub updates: u64,
+}
+
+/// Cross-chain convergence snapshot, computed once per observation
+/// round (i.e. whenever every live chain has reported `round` events).
+#[derive(Clone, Copy, Debug)]
+pub struct DiagnosticsReport {
+    /// Observation round index (1-based).
+    pub round: usize,
+    /// Steps per chain at this round.
+    pub step: usize,
+    /// Split potential-scale-reduction over the per-chain objective
+    /// traces; `None` until there are ≥ 2 chains with ≥ 4 observations.
+    pub r_hat: Option<f64>,
+    /// Smallest per-chain effective sample size of the objective trace.
+    pub min_ess: f64,
+    /// Best objective across all chains so far.
+    pub best_objective: f64,
+}
+
+/// What the observer wants the run to do next.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ObserverAction {
+    /// Keep sampling.
+    Continue,
+    /// Raise the stop flag: all chains halt at the next boundary.
+    Stop,
+}
+
+/// Streaming callbacks for one engine run. All methods are invoked on
+/// the engine's coordinating thread, in event order, so implementations
+/// may hold plain mutable state.
+pub trait ChainObserver: Send {
+    /// Called for every periodic progress sample from every chain.
+    fn on_progress(&mut self, _event: &ProgressEvent) -> ObserverAction {
+        ObserverAction::Continue
+    }
+
+    /// Called once per completed observation round with cross-chain
+    /// convergence diagnostics.
+    fn on_diagnostics(&mut self, _report: &DiagnosticsReport) -> ObserverAction {
+        ObserverAction::Continue
+    }
+
+    /// Called after a chain finishes (normally or via early stop).
+    fn on_chain_done(&mut self, _result: &ChainResult) {}
+}
+
+/// No-op observer (the default when none is configured).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NullObserver;
+
+impl ChainObserver for NullObserver {}
+
+/// Observer that logs progress and diagnostics lines to stderr — the
+/// CLI's `--observe N` mode.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PrintObserver;
+
+impl ChainObserver for PrintObserver {
+    fn on_progress(&mut self, e: &ProgressEvent) -> ObserverAction {
+        eprintln!(
+            "[chain {}] step {:>8}  beta {:.3}  objective {:.3}  best {:.3}",
+            e.chain_id, e.step, e.beta, e.objective, e.best_objective
+        );
+        ObserverAction::Continue
+    }
+
+    fn on_diagnostics(&mut self, d: &DiagnosticsReport) -> ObserverAction {
+        match d.r_hat {
+            Some(r) => eprintln!(
+                "[diag] round {:>4} step {:>8}  R-hat {:.4}  min ESS {:.1}  best {:.3}",
+                d.round, d.step, r, d.min_ess, d.best_objective
+            ),
+            None => eprintln!(
+                "[diag] round {:>4} step {:>8}  R-hat n/a  min ESS {:.1}  best {:.3}",
+                d.round, d.step, d.min_ess, d.best_objective
+            ),
+        }
+        ObserverAction::Continue
+    }
+}
+
+/// Observer that stops the run once split R-hat falls to the target —
+/// adaptive chain length instead of a fixed step budget.
+#[derive(Clone, Copy, Debug)]
+pub struct ConvergenceStop {
+    /// Stop when R-hat ≤ this value (1.01 is a common threshold).
+    pub r_hat_target: f64,
+    /// Require at least this many observation rounds first.
+    pub min_rounds: usize,
+}
+
+impl ChainObserver for ConvergenceStop {
+    fn on_diagnostics(&mut self, d: &DiagnosticsReport) -> ObserverAction {
+        match d.r_hat {
+            Some(r) if d.round >= self.min_rounds && r <= self.r_hat_target => {
+                ObserverAction::Stop
+            }
+            _ => ObserverAction::Continue,
+        }
+    }
+}
+
+/// Per-run diagnostics bookkeeping: accumulates each chain's objective
+/// trace and emits a [`DiagnosticsReport`] whenever a new round (one
+/// observation from every chain) completes.
+pub(crate) struct DiagnosticsTracker {
+    traces: Vec<Vec<f64>>,
+    rounds_reported: usize,
+    best: f64,
+}
+
+impl DiagnosticsTracker {
+    pub(crate) fn new(chains: usize) -> DiagnosticsTracker {
+        DiagnosticsTracker {
+            traces: vec![Vec::new(); chains],
+            rounds_reported: 0,
+            best: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Record one progress event; returns a report if it completed a
+    /// round. Events with an out-of-range chain id (a misbehaving
+    /// custom backend) are ignored rather than panicking the run.
+    pub(crate) fn record(&mut self, e: &ProgressEvent) -> Option<DiagnosticsReport> {
+        self.traces.get_mut(e.chain_id)?.push(e.objective);
+        self.best = self.best.max(e.best_objective);
+        let round = self.traces.iter().map(Vec::len).min().unwrap_or(0);
+        if round <= self.rounds_reported {
+            return None;
+        }
+        self.rounds_reported = round;
+        let r_hat = if self.traces.len() >= 2 {
+            split_r_hat(&self.traces)
+        } else {
+            None
+        };
+        let min_ess = self
+            .traces
+            .iter()
+            .map(|t| effective_sample_size(t))
+            .fold(f64::INFINITY, f64::min);
+        Some(DiagnosticsReport {
+            round,
+            step: e.step,
+            r_hat,
+            min_ess,
+            best_objective: self.best,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(chain_id: usize, step: usize, objective: f64) -> ProgressEvent {
+        ProgressEvent {
+            chain_id,
+            step,
+            beta: 1.0,
+            objective,
+            best_objective: objective,
+            updates: step as u64,
+        }
+    }
+
+    #[test]
+    fn tracker_reports_once_per_complete_round() {
+        let mut t = DiagnosticsTracker::new(2);
+        assert!(t.record(&ev(0, 10, 1.0)).is_none());
+        let d = t.record(&ev(1, 10, 2.0)).expect("round 1 complete");
+        assert_eq!(d.round, 1);
+        assert_eq!(d.best_objective, 2.0);
+        // Second event from the same chain does not complete round 2.
+        assert!(t.record(&ev(1, 20, 3.0)).is_none());
+        let d = t.record(&ev(0, 20, 1.5)).expect("round 2 complete");
+        assert_eq!(d.round, 2);
+        assert_eq!(d.best_objective, 3.0);
+    }
+
+    #[test]
+    fn convergence_stop_waits_for_min_rounds() {
+        let mut obs = ConvergenceStop {
+            r_hat_target: 1.05,
+            min_rounds: 3,
+        };
+        let converged = |round| DiagnosticsReport {
+            round,
+            step: round * 10,
+            r_hat: Some(1.0),
+            min_ess: 50.0,
+            best_objective: 0.0,
+        };
+        assert_eq!(obs.on_diagnostics(&converged(1)), ObserverAction::Continue);
+        assert_eq!(obs.on_diagnostics(&converged(3)), ObserverAction::Stop);
+    }
+}

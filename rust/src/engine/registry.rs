@@ -1,0 +1,174 @@
+//! The workload registry: `name → constructor + metadata`.
+//!
+//! Replaces the hard-coded `match` the CLI used to carry. Each entry
+//! names one Table I workload, its aliases, a one-line summary, and a
+//! constructor. [`lookup`] resolves names case-insensitively and
+//! reports failures as [`Mc2aError::UnknownWorkload`] carrying the full
+//! menu, so callers (the CLI in particular) can print what *is*
+//! available instead of dying in a usage dump.
+
+use crate::engine::error::Mc2aError;
+use crate::workloads::{self, Workload};
+
+/// One registered workload.
+pub struct WorkloadEntry {
+    /// Canonical lookup name (lowercase).
+    pub name: &'static str,
+    /// Accepted aliases (lowercase).
+    pub aliases: &'static [&'static str],
+    /// One-line description for the CLI listing.
+    pub summary: &'static str,
+    /// Construction or a 10-step run is expensive (full-scale models);
+    /// fast regression sweeps should skip these.
+    pub heavy: bool,
+    ctor: fn() -> Workload,
+}
+
+impl WorkloadEntry {
+    /// Construct the workload.
+    pub fn build(&self) -> Workload {
+        (self.ctor)()
+    }
+}
+
+fn build_imageseg_small() -> Workload {
+    workloads::wl_image_seg(false)
+}
+
+fn build_imageseg_full() -> Workload {
+    workloads::wl_image_seg(true)
+}
+
+/// Every registered workload (the Table I suite).
+pub const REGISTRY: &[WorkloadEntry] = &[
+    WorkloadEntry {
+        name: "earthquake",
+        aliases: &[],
+        summary: "Earthquake Bayes net (5 nodes, Block Gibbs)",
+        heavy: false,
+        ctor: workloads::wl_earthquake,
+    },
+    WorkloadEntry {
+        name: "survey",
+        aliases: &[],
+        summary: "Survey Bayes net (6 nodes, Block Gibbs)",
+        heavy: false,
+        ctor: workloads::wl_survey,
+    },
+    WorkloadEntry {
+        name: "cancer",
+        aliases: &[],
+        summary: "Cancer Bayes net (5 nodes, Block Gibbs)",
+        heavy: false,
+        ctor: workloads::wl_cancer,
+    },
+    WorkloadEntry {
+        name: "alarm",
+        aliases: &[],
+        summary: "Alarm Bayes net (37 nodes, Block Gibbs)",
+        heavy: false,
+        ctor: workloads::wl_alarm,
+    },
+    WorkloadEntry {
+        name: "imageseg",
+        aliases: &[],
+        summary: "64×64 image-segmentation MRF (Block Gibbs)",
+        heavy: false,
+        ctor: build_imageseg_small,
+    },
+    WorkloadEntry {
+        name: "imageseg-full",
+        aliases: &[],
+        summary: "Table I-scale 150k-node segmentation MRF (Block Gibbs)",
+        heavy: true,
+        ctor: build_imageseg_full,
+    },
+    WorkloadEntry {
+        name: "er700",
+        aliases: &["mis"],
+        summary: "ER-1347 Maximum Independent Set (PAS)",
+        heavy: false,
+        ctor: workloads::wl_mis_er,
+    },
+    WorkloadEntry {
+        name: "twitter",
+        aliases: &["maxclique"],
+        summary: "Twitter-247 MaxClique (PAS)",
+        heavy: false,
+        ctor: workloads::wl_maxclique_twitter,
+    },
+    WorkloadEntry {
+        name: "optsicom",
+        aliases: &["maxcut"],
+        summary: "Optsicom-125 weighted MaxCut (PAS)",
+        heavy: false,
+        ctor: workloads::wl_maxcut_optsicom,
+    },
+    WorkloadEntry {
+        name: "rbm",
+        aliases: &[],
+        summary: "Binary RBM 784×25 EBM (PAS)",
+        heavy: false,
+        ctor: workloads::wl_rbm,
+    },
+];
+
+/// Find an entry by name or alias (case-insensitive).
+pub fn find(name: &str) -> Option<&'static WorkloadEntry> {
+    let q = name.to_ascii_lowercase();
+    REGISTRY
+        .iter()
+        .find(|e| e.name == q || e.aliases.contains(&q.as_str()))
+}
+
+/// All canonical registry names, in registration order.
+pub fn names() -> Vec<&'static str> {
+    REGISTRY.iter().map(|e| e.name).collect()
+}
+
+/// Build the named workload, or report the full menu on failure.
+pub fn lookup(name: &str) -> Result<Workload, Mc2aError> {
+    match find(name) {
+        Some(e) => Ok(e.build()),
+        None => Err(Mc2aError::UnknownWorkload {
+            name: name.to_string(),
+            known: names().iter().map(|s| s.to_string()).collect(),
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_names_and_aliases_resolve() {
+        assert!(find("earthquake").is_some());
+        assert!(find("EARTHQUAKE").is_some());
+        assert!(find("mis").is_some());
+        assert!(find("MaxCut").is_some());
+        assert!(find("nope").is_none());
+    }
+
+    #[test]
+    fn lookup_error_carries_menu() {
+        match lookup("bogus") {
+            Err(Mc2aError::UnknownWorkload { name, known }) => {
+                assert_eq!(name, "bogus");
+                assert!(known.iter().any(|n| n == "earthquake"));
+                assert_eq!(known.len(), REGISTRY.len());
+            }
+            Ok(_) => panic!("expected UnknownWorkload, got a workload"),
+            Err(e) => panic!("expected UnknownWorkload, got {e}"),
+        }
+    }
+
+    #[test]
+    fn registry_names_are_unique_and_lowercase() {
+        let ns = names();
+        for (i, a) in ns.iter().enumerate() {
+            assert_eq!(*a, a.to_ascii_lowercase());
+            assert!(!ns[i + 1..].contains(a), "duplicate name {a}");
+        }
+    }
+}

@@ -4,14 +4,35 @@
 //! Efficient Markov Chain Monte Carlo Acceleration"* (Zhao et al., 2025)
 //! as a three-layer Rust + JAX + Pallas stack.
 //!
-//! The crate provides:
+//! The public entry point is the [`engine`] — a builder façade over
+//! pluggable execution backends:
 //!
+//! ```no_run
+//! use mc2a::engine::Engine;
+//!
+//! let metrics = Engine::for_workload("optsicom")?
+//!     .steps(500)
+//!     .chains(4)
+//!     .build()?
+//!     .run()?;
+//! println!("best cut: {}", metrics.best_objective());
+//! # Ok::<(), mc2a::engine::Mc2aError>(())
+//! ```
+//!
+//! Module map:
+//!
+//! * [`engine`] — **the public API**: [`engine::EngineBuilder`] run
+//!   configuration, the [`engine::ExecutionBackend`] trait with
+//!   software / accelerator-sim / PJRT-runtime implementations, the
+//!   [`engine::ChainObserver`] streaming-diagnostics API, the typed
+//!   [`engine::Mc2aError`], and the named-workload [`engine::registry`].
 //! * [`energy`] — discrete energy models (Ising/Potts grids, Bayesian
 //!   networks, combinatorial-optimization graphs, RBMs) behind the common
 //!   [`energy::EnergyModel`] trait.
 //! * [`mcmc`] — the MCMC algorithm zoo the paper evaluates: MH, Gibbs,
 //!   Block Gibbs, Asynchronous Gibbs and the gradient-based PAS sampler,
-//!   plus the CDF and Gumbel-max categorical samplers.
+//!   plus the CDF and Gumbel-max categorical samplers and the
+//!   convergence metrics (accuracy traces, split R-hat, ESS).
 //! * [`roofline`] — the paper's 3D roofline model (Compute Intensity ×
 //!   Memory Intensity × Throughput) and the design-space exploration that
 //!   selects the accelerator parameters (Fig. 6, Fig. 11).
@@ -22,11 +43,10 @@
 //! * [`baselines`] — calibrated models of the comparison platforms
 //!   (CPU/GPU/TPU and the SPU/PGMA/CoopMC/sIM/PROCA accelerators).
 //! * [`runtime`] — PJRT client that loads the AOT-compiled JAX/Pallas
-//!   artifacts (`artifacts/*.hlo.txt`) and executes them from Rust; this
-//!   is the *measured* software baseline path (Python never runs at
-//!   request time).
-//! * [`coordinator`] — L3 chain orchestration: backend routing, chain
-//!   scheduling, convergence tracking, metrics.
+//!   artifacts (`artifacts/*.hlo.txt`) and executes them from Rust
+//!   (behind the `xla-runtime` feature; a stub otherwise).
+//! * [`coordinator`] — per-chain results and multi-chain aggregate
+//!   metrics produced by the engine.
 //! * [`workloads`] — the Table I benchmark suite generators.
 //! * [`bench`] — harnesses that regenerate every table and figure of the
 //!   paper's evaluation section.
@@ -36,6 +56,7 @@ pub mod bench;
 pub mod compiler;
 pub mod coordinator;
 pub mod energy;
+pub mod engine;
 pub mod graph;
 pub mod isa;
 pub mod mcmc;
@@ -44,6 +65,8 @@ pub mod roofline;
 pub mod runtime;
 pub mod sim;
 pub mod workloads;
+
+pub use engine::{Engine, EngineBuilder, ExecutionBackend, Mc2aError};
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

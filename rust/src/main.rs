@@ -3,22 +3,26 @@
 //! ```text
 //! mc2a table1 [--full]
 //! mc2a bench <fig5|fig6|fig11|fig12|fig13|fig14|fig15|headline|all> [--full]
-//! mc2a run --workload <name> [--algo mh|gibbs|bg|ag|pas] [--steps N]
-//!          [--chains N] [--backend sim|sw] [--beta B]
+//! mc2a run --workload <name> [--algo mh|gibbs|bg|ag|pas]
+//!          [--sampler cdf|gumbel|lut] [--steps N] [--chains N]
+//!          [--backend sim|sw|runtime] [--beta B] [--seed S] [--observe N]
+//! mc2a workloads
 //! mc2a roofline [--workload <name>]
 //! mc2a dse
 //! mc2a runtime-check [--artifacts DIR]
 //! ```
 //!
 //! (Hand-rolled argument parsing: the offline vendor set has no clap.)
+//!
+//! All run construction goes through [`mc2a::engine::EngineBuilder`];
+//! this file is the only place allowed to call `process::exit`.
 
 use mc2a::bench;
-use mc2a::coordinator::{run_chains, Backend, RunSpec};
+use mc2a::engine::{registry, Engine, Mc2aError, PrintObserver};
 use mc2a::isa::HwConfig;
 use mc2a::mcmc::{AlgoKind, BetaSchedule, SamplerKind};
 use mc2a::roofline::{self, WorkloadProfile};
 use mc2a::runtime::Runtime;
-use mc2a::workloads::{self, Workload};
 
 fn usage() -> ! {
     eprintln!(
@@ -27,14 +31,15 @@ fn usage() -> ! {
 USAGE:
   mc2a table1 [--full]
   mc2a bench <fig5|fig6|fig11|fig12|fig13|fig14|fig15|headline|all> [--full]
-  mc2a run --workload <name> [--algo mh|gibbs|bg|ag|pas] [--steps N]
-           [--chains N] [--backend sim|sw] [--beta B] [--seed S]
+  mc2a run --workload <name> [--algo mh|gibbs|bg|ag|pas]
+           [--sampler cdf|gumbel|lut] [--steps N] [--chains N]
+           [--backend sim|sw|runtime] [--beta B] [--seed S] [--observe N]
+  mc2a workloads
   mc2a roofline [--workload <name>]
   mc2a dse
   mc2a runtime-check [--artifacts DIR]
 
-Workloads: earthquake survey cancer alarm imageseg imageseg-full er700
-           twitter optsicom rbm"
+Run `mc2a workloads` for the registered workload list."
     );
     std::process::exit(2);
 }
@@ -50,94 +55,103 @@ fn has_flag(args: &[String], flag: &str) -> bool {
     args.iter().any(|a| a == flag)
 }
 
-fn find_workload(name: &str) -> Option<Workload> {
-    match name.to_ascii_lowercase().as_str() {
-        "earthquake" => Some(workloads::wl_earthquake()),
-        "survey" => Some(workloads::wl_survey()),
-        "cancer" => Some(workloads::wl_cancer()),
-        "alarm" => Some(workloads::wl_alarm()),
-        "imageseg" => Some(workloads::wl_image_seg(false)),
-        "imageseg-full" => Some(workloads::wl_image_seg(true)),
-        "er700" | "mis" => Some(workloads::wl_mis_er()),
-        "twitter" | "maxclique" => Some(workloads::wl_maxclique_twitter()),
-        "optsicom" | "maxcut" => Some(workloads::wl_maxcut_optsicom()),
-        "rbm" => Some(workloads::wl_rbm()),
-        _ => None,
+/// Parse the value of `--flag` with a typed error instead of a usage dump.
+fn parsed_flag<T: std::str::FromStr>(args: &[String], flag: &str) -> Result<Option<T>, Mc2aError> {
+    match flag_value(args, flag) {
+        None => Ok(None),
+        Some(raw) => raw.parse::<T>().map(Some).map_err(|_| {
+            Mc2aError::InvalidConfig(format!("bad value {raw:?} for {flag}"))
+        }),
     }
 }
 
-fn cmd_bench(args: &[String]) {
+fn cmd_bench(args: &[String]) -> Result<(), Mc2aError> {
     let which = args.first().map(String::as_str).unwrap_or("all");
     let full = has_flag(args, "--full");
     let quick = !full;
-    let run = |name: &str| match name {
-        "fig5" => bench::fig5(quick, 0.94),
-        "fig6" => bench::fig6(),
-        "fig11" => bench::fig11(),
-        "fig12" => bench::fig12(quick),
-        "fig13" => bench::fig13(),
-        "fig14" => bench::fig14(quick),
-        "fig15" => bench::fig15(quick),
-        "headline" => bench::headline(quick),
-        other => {
-            eprintln!("unknown figure {other}");
-            std::process::exit(2);
-        }
+    let run = |name: &str| -> Result<String, Mc2aError> {
+        Ok(match name {
+            "fig5" => bench::fig5(quick, 0.94),
+            "fig6" => bench::fig6(),
+            "fig11" => bench::fig11(),
+            "fig12" => bench::fig12(quick),
+            "fig13" => bench::fig13(),
+            "fig14" => bench::fig14(quick),
+            "fig15" => bench::fig15(quick),
+            "headline" => bench::headline(quick),
+            other => {
+                return Err(Mc2aError::InvalidConfig(format!(
+                    "unknown figure {other} (fig5|fig6|fig11|fig12|fig13|fig14|fig15|headline|all)"
+                )))
+            }
+        })
     };
     if which == "all" {
         for f in [
             "fig5", "fig6", "fig11", "fig12", "fig13", "fig14", "fig15", "headline",
         ] {
-            println!("{}", run(f));
+            println!("{}", run(f)?);
         }
     } else {
-        println!("{}", run(which));
+        println!("{}", run(which)?);
     }
+    Ok(())
 }
 
-fn cmd_run(args: &[String]) {
-    let Some(wname) = flag_value(args, "--workload") else {
-        usage()
+fn cmd_run(args: &[String]) -> Result<(), Mc2aError> {
+    let wname = flag_value(args, "--workload")
+        .ok_or_else(|| Mc2aError::InvalidConfig("--workload is required".into()))?;
+    let mut builder = Engine::for_workload(&wname)?;
+    if let Some(a) = flag_value(args, "--algo") {
+        let algo = AlgoKind::parse(&a).ok_or_else(|| {
+            Mc2aError::InvalidConfig(format!("unknown algo {a:?} (mh|gibbs|bg|ag|pas)"))
+        })?;
+        builder = builder.algo(algo);
+    }
+    if let Some(s) = flag_value(args, "--sampler") {
+        let sampler = SamplerKind::parse(&s).ok_or_else(|| {
+            Mc2aError::InvalidConfig(format!("unknown sampler {s:?} (cdf|gumbel|lut)"))
+        })?;
+        builder = builder.sampler(sampler);
+    }
+    let steps: usize = parsed_flag(args, "--steps")?.unwrap_or(200);
+    let chains: usize = parsed_flag(args, "--chains")?.unwrap_or(1);
+    let beta: f32 = parsed_flag(args, "--beta")?.unwrap_or(1.0);
+    let seed: u64 = parsed_flag(args, "--seed")?.unwrap_or(1);
+    builder = builder
+        .steps(steps)
+        .chains(chains)
+        .seed(seed)
+        .schedule(BetaSchedule::Constant(beta));
+    let hw = HwConfig::paper_default();
+    builder = match flag_value(args, "--backend").as_deref() {
+        Some("sim") => builder.accelerator(hw),
+        Some("runtime") => {
+            builder.runtime(flag_value(args, "--artifacts").unwrap_or_else(|| "artifacts".into()))
+        }
+        Some("sw") | None => builder.software(),
+        Some(other) => {
+            return Err(Mc2aError::InvalidConfig(format!(
+                "unknown backend {other:?} (sim|sw|runtime)"
+            )))
+        }
     };
-    let Some(wl) = find_workload(&wname) else {
-        eprintln!("unknown workload {wname}");
-        std::process::exit(2);
-    };
-    let algo = flag_value(args, "--algo")
-        .map(|a| AlgoKind::parse(&a).unwrap_or_else(|| usage()))
-        .unwrap_or(wl.algorithm);
-    let steps: usize = flag_value(args, "--steps")
-        .map(|s| s.parse().unwrap_or_else(|_| usage()))
-        .unwrap_or(200);
-    let chains: usize = flag_value(args, "--chains")
-        .map(|s| s.parse().unwrap_or_else(|_| usage()))
-        .unwrap_or(1);
-    let beta: f32 = flag_value(args, "--beta")
-        .map(|s| s.parse().unwrap_or_else(|_| usage()))
-        .unwrap_or(1.0);
-    let seed: u64 = flag_value(args, "--seed")
-        .map(|s| s.parse().unwrap_or_else(|_| usage()))
-        .unwrap_or(1);
-    let backend = match flag_value(args, "--backend").as_deref() {
-        Some("sim") => Backend::Accelerator(HwConfig::paper_default()),
-        _ => Backend::Software(SamplerKind::Gumbel),
-    };
-    let spec = RunSpec {
-        algo,
-        schedule: BetaSchedule::Constant(beta),
-        steps,
-        chains,
-        seed,
-        pas_flips: wl.pas_flips,
-    };
+    if let Some(every) = parsed_flag::<usize>(args, "--observe")? {
+        builder = builder
+            .observe_every(every)
+            .observer(Box::new(PrintObserver));
+    }
+    let mut engine = builder.build()?;
     println!(
-        "workload={} nodes={} edges={} algo={} steps={steps} chains={chains}",
-        wl.name,
-        wl.nodes(),
-        wl.edges(),
-        algo.name()
+        "workload={} nodes={} edges={} algo={} sampler={} backend={} steps={steps} chains={chains}",
+        engine.workload_name().unwrap_or("?"),
+        engine.model().num_vars(),
+        engine.model().interaction().num_edges(),
+        engine.spec().algo.name(),
+        engine.spec().sampler.name(),
+        engine.backend_name(),
     );
-    let metrics = run_chains(wl.model.as_ref(), backend, spec);
+    let metrics = engine.run()?;
     for c in &metrics.chains {
         print!(
             "chain {}: best objective {:.2}, {} updates, {:?}",
@@ -147,8 +161,8 @@ fn cmd_run(args: &[String]) {
             print!(
                 ", {} cycles, {:.4} GS/s, {:.2} W (modeled)",
                 rep.cycles,
-                rep.gsps(&HwConfig::paper_default()),
-                rep.watts(&HwConfig::paper_default()),
+                rep.gsps(&hw),
+                rep.watts(&hw),
             );
         }
         println!();
@@ -158,14 +172,28 @@ fn cmd_run(args: &[String]) {
         metrics.best_objective(),
         metrics.updates_per_sec()
     );
+    if let Some(r) = metrics.split_r_hat() {
+        println!("split R-hat {:.4}, min ESS {:.1}", r, metrics.min_ess());
+    }
+    Ok(())
 }
 
-fn cmd_roofline(args: &[String]) {
+fn cmd_workloads() {
+    println!("{:<14} {:<22} summary", "name", "aliases");
+    for e in registry::REGISTRY {
+        println!(
+            "{:<14} {:<22} {}{}",
+            e.name,
+            e.aliases.join(", "),
+            e.summary,
+            if e.heavy { "  [heavy]" } else { "" }
+        );
+    }
+}
+
+fn cmd_roofline(args: &[String]) -> Result<(), Mc2aError> {
     if let Some(wname) = flag_value(args, "--workload") {
-        let Some(wl) = find_workload(&wname) else {
-            eprintln!("unknown workload {wname}");
-            std::process::exit(2);
-        };
+        let wl = registry::lookup(&wname)?;
         let hw = HwConfig::paper_default();
         let p = WorkloadProfile::from_model(wl.model.as_ref(), wl.algorithm);
         let r = roofline::evaluate(&hw, &p);
@@ -184,32 +212,45 @@ fn cmd_roofline(args: &[String]) {
     } else {
         println!("{}", bench::fig6());
     }
+    Ok(())
 }
 
-fn cmd_runtime_check(args: &[String]) {
+fn cmd_runtime_check(args: &[String]) -> Result<(), Mc2aError> {
     let dir = flag_value(args, "--artifacts").unwrap_or_else(|| "artifacts".into());
     match Runtime::load(&dir) {
         Ok(rt) => {
             println!("platform: {}", rt.platform());
             println!("artifacts: {:?}", rt.names());
             print!("{}", bench::measured_cpu_rows(&rt));
+            Ok(())
         }
-        Err(e) => {
-            eprintln!("runtime check failed: {e:#}");
-            std::process::exit(1);
-        }
+        Err(e) => Err(Mc2aError::RuntimeUnavailable(format!("{e:#}"))),
     }
 }
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    match args.first().map(String::as_str) {
-        Some("table1") => println!("{}", bench::table1(has_flag(&args[1..], "--full"))),
+    let result = match args.first().map(String::as_str) {
+        Some("table1") => {
+            println!("{}", bench::table1(has_flag(&args[1..], "--full")));
+            Ok(())
+        }
         Some("bench") => cmd_bench(&args[1..]),
         Some("run") => cmd_run(&args[1..]),
+        Some("workloads") => {
+            cmd_workloads();
+            Ok(())
+        }
         Some("roofline") => cmd_roofline(&args[1..]),
-        Some("dse") => println!("{}", bench::fig11()),
+        Some("dse") => {
+            println!("{}", bench::fig11());
+            Ok(())
+        }
         Some("runtime-check") => cmd_runtime_check(&args[1..]),
         _ => usage(),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(2);
     }
 }

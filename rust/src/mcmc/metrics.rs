@@ -1,4 +1,6 @@
-//! Convergence metrics: accuracy-vs-steps/ops traces (Fig. 5a/5b).
+//! Convergence metrics: accuracy-vs-steps/ops traces (Fig. 5a/5b) and
+//! the cross-chain diagnostics the engine's observer loop streams
+//! (split potential-scale-reduction R-hat, effective sample size).
 //!
 //! "Accuracy" follows the paper's COP convention: the best objective
 //! seen so far divided by the instance's best-known objective, traced
@@ -105,12 +107,97 @@ pub fn run_to_accuracy(
     }
 }
 
+fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Unbiased sample variance (n−1 denominator); 0 for n < 2.
+fn sample_variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let mu = mean(xs);
+    xs.iter().map(|x| (x - mu).powi(2)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+/// Split potential-scale-reduction (R-hat) over per-chain scalar
+/// traces (Gelman et al.; each chain is split in half, so a single
+/// long chain still yields a diagnostic). Values near 1 indicate the
+/// chains have mixed; > ~1.05 means keep sampling.
+///
+/// Returns `None` until every chain has at least 4 observations (two
+/// per split half). Traces of unequal length are truncated to the
+/// shortest.
+pub fn split_r_hat(traces: &[Vec<f64>]) -> Option<f64> {
+    let n = traces.iter().map(Vec::len).min()?;
+    let half = n / 2;
+    if half < 2 {
+        return None;
+    }
+    let mut subs: Vec<&[f64]> = Vec::with_capacity(2 * traces.len());
+    for t in traces {
+        subs.push(&t[..half]);
+        subs.push(&t[n - half..n]);
+    }
+    let m = subs.len() as f64;
+    let len = half as f64;
+    let means: Vec<f64> = subs.iter().map(|s| mean(s)).collect();
+    let grand = mean(&means);
+    let between = len / (m - 1.0) * means.iter().map(|mu| (mu - grand).powi(2)).sum::<f64>();
+    let within = subs.iter().map(|s| sample_variance(s)).sum::<f64>() / m;
+    if within <= 0.0 {
+        // Zero within-chain variance: either perfectly stuck chains
+        // that agree (R-hat 1) or disagree (diverged → infinity).
+        return Some(if between <= 0.0 { 1.0 } else { f64::INFINITY });
+    }
+    let var_plus = (len - 1.0) / len * within + between / len;
+    Some((var_plus / within).sqrt())
+}
+
+/// Effective sample size of one scalar trace via Geyer's initial
+/// positive sequence: autocorrelations are summed in pairs until a
+/// pair goes negative. Clamped to `[1, n]`; short traces (< 4) return
+/// their own length.
+pub fn effective_sample_size(trace: &[f64]) -> f64 {
+    let n = trace.len();
+    if n < 4 {
+        return n as f64;
+    }
+    let mu = mean(trace);
+    let var = trace.iter().map(|x| (x - mu).powi(2)).sum::<f64>() / n as f64;
+    if var <= 0.0 {
+        return n as f64;
+    }
+    let rho = |lag: usize| -> f64 {
+        let mut acc = 0.0;
+        for t in 0..n - lag {
+            acc += (trace[t] - mu) * (trace[t + lag] - mu);
+        }
+        acc / n as f64 / var
+    };
+    let mut sum = 0.0;
+    let mut lag = 1;
+    while lag + 1 < n {
+        let pair = rho(lag) + rho(lag + 1);
+        if pair < 0.0 {
+            break;
+        }
+        sum += pair;
+        lag += 2;
+    }
+    (n as f64 / (1.0 + 2.0 * sum)).clamp(1.0, n as f64)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::energy::MaxCutModel;
     use crate::graph::Graph;
     use crate::mcmc::{build_algo, AlgoKind, SamplerKind};
+    use crate::rng::Rng;
 
     fn small_cut() -> MaxCutModel {
         // 4-cycle: optimal cut = 4.
@@ -148,6 +235,46 @@ mod tests {
             assert!(w[1].ops >= w[0].ops);
             assert!(w[1].accuracy >= w[0].accuracy);
         }
+    }
+
+    fn noise(seed: u64, n: usize, offset: f64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| offset + rng.uniform_f64()).collect()
+    }
+
+    #[test]
+    fn r_hat_near_one_for_matching_chains() {
+        let chains = vec![noise(1, 200, 0.0), noise(2, 200, 0.0), noise(3, 200, 0.0)];
+        let r = split_r_hat(&chains).unwrap();
+        assert!((r - 1.0).abs() < 0.1, "r_hat={r}");
+    }
+
+    #[test]
+    fn r_hat_large_for_disjoint_chains() {
+        let chains = vec![noise(1, 200, 0.0), noise(2, 200, 10.0)];
+        let r = split_r_hat(&chains).unwrap();
+        assert!(r > 2.0, "r_hat={r}");
+    }
+
+    #[test]
+    fn r_hat_needs_four_observations() {
+        assert!(split_r_hat(&[vec![1.0, 2.0, 3.0], vec![1.0, 2.0, 3.0]]).is_none());
+        assert!(split_r_hat(&[]).is_none());
+        assert!(split_r_hat(&[vec![0.0; 8], vec![0.0; 8]]).is_some());
+    }
+
+    #[test]
+    fn ess_high_for_iid_low_for_trending() {
+        let iid = noise(7, 400, 0.0);
+        let ess_iid = effective_sample_size(&iid);
+        assert!(ess_iid > 100.0, "iid ESS={ess_iid}");
+        // A monotone ramp is maximally autocorrelated.
+        let ramp: Vec<f64> = (0..400).map(|i| i as f64).collect();
+        let ess_ramp = effective_sample_size(&ramp);
+        assert!(ess_ramp < ess_iid / 5.0, "ramp ESS={ess_ramp} vs {ess_iid}");
+        // Bounds respected.
+        assert!(effective_sample_size(&[1.0, 2.0]) == 2.0);
+        assert!(effective_sample_size(&vec![3.0; 50]) == 50.0);
     }
 
     #[test]

@@ -12,7 +12,9 @@ mod pas;
 pub mod sampler;
 
 pub use gibbs::{AsyncGibbs, BlockGibbs, Gibbs};
-pub use metrics::{run_to_accuracy, AccuracyTrace, TracePoint};
+pub use metrics::{
+    effective_sample_size, run_to_accuracy, split_r_hat, AccuracyTrace, TracePoint,
+};
 pub use mh::MetropolisHastings;
 pub use pas::PathAuxiliarySampler;
 
@@ -77,6 +79,26 @@ pub enum SamplerKind {
 }
 
 impl SamplerKind {
+    /// Short name used in CLI output.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SamplerKind::Cdf => "cdf",
+            SamplerKind::Gumbel => "gumbel",
+            SamplerKind::GumbelLut { .. } => "lut",
+        }
+    }
+
+    /// Parse from a CLI string (`cdf`, `gumbel`, `lut`; the LUT uses
+    /// the paper's 16-entry / 8-bit configuration).
+    pub fn parse(s: &str) -> Option<SamplerKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "cdf" => Some(SamplerKind::Cdf),
+            "gumbel" => Some(SamplerKind::Gumbel),
+            "lut" | "gumbel-lut" => Some(SamplerKind::GumbelLut { size: 16, bits: 8 }),
+            _ => None,
+        }
+    }
+
     /// Instantiate the sampler.
     pub fn build(&self) -> Box<dyn CategoricalSampler> {
         match *self {
@@ -235,6 +257,15 @@ impl<'m> Chain<'m> {
             best_objective,
             best_x,
         }
+    }
+
+    /// Overwrite the current assignment and re-seed the best-so-far
+    /// tracking from it (the random state chosen at construction is
+    /// discarded entirely).
+    pub fn set_state(&mut self, x0: &[u32]) {
+        self.x.copy_from_slice(x0);
+        self.best_objective = self.model.objective(&self.x);
+        self.best_x.clone_from(&self.x);
     }
 
     /// Run `n` steps, updating histograms and best-so-far.

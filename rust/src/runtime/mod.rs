@@ -6,9 +6,23 @@
 //! Rust binary is self-contained — every software-baseline measurement
 //! (Fig. 5d, Fig. 14 "CPU") goes through this module, never through a
 //! Python interpreter.
+//!
+//! The XLA/PJRT dependency is gated behind the off-by-default
+//! `xla-runtime` cargo feature. Without it, [`Runtime`] is a stub
+//! whose `load` always fails with a clear message, so every caller
+//! (CLI `runtime-check`, Fig. 14's measured rows, the engine's
+//! `RuntimeBackend`) degrades gracefully instead of failing to build.
+//! The manifest format and its parser are feature-independent.
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+#[cfg(feature = "xla-runtime")]
+mod pjrt;
+#[cfg(feature = "xla-runtime")]
+pub use pjrt::{LoadedArtifact, Runtime};
+
+#[cfg(not(feature = "xla-runtime"))]
+mod stub;
+#[cfg(not(feature = "xla-runtime"))]
+pub use stub::Runtime;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -84,124 +98,6 @@ pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactSpec>> {
     Ok(specs)
 }
 
-/// A loaded, compiled artifact ready for execution.
-pub struct LoadedArtifact {
-    /// Manifest metadata.
-    pub spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-/// The PJRT runtime: one CPU client + the compiled artifact set.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    artifacts: HashMap<String, LoadedArtifact>,
-    dir: PathBuf,
-}
-
-impl Runtime {
-    /// Create a CPU PJRT client and load every artifact listed in
-    /// `<dir>/manifest.txt`.
-    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
-        let dir = dir.as_ref().to_path_buf();
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
-            .with_context(|| format!("reading {}/manifest.txt — run `make artifacts`", dir.display()))?;
-        let mut artifacts = HashMap::new();
-        for spec in parse_manifest(&manifest)? {
-            let path = dir.join(format!("{}.hlo.txt", spec.name));
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compiling {}: {e:?}", spec.name))?;
-            artifacts.insert(spec.name.clone(), LoadedArtifact { spec, exe });
-        }
-        Ok(Runtime {
-            client,
-            artifacts,
-            dir,
-        })
-    }
-
-    /// PJRT platform name (should be "cpu"/"Host").
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Artifact directory this runtime was loaded from.
-    pub fn dir(&self) -> &Path {
-        &self.dir
-    }
-
-    /// Names of all loaded artifacts.
-    pub fn names(&self) -> Vec<&str> {
-        let mut v: Vec<&str> = self.artifacts.keys().map(|s| s.as_str()).collect();
-        v.sort();
-        v
-    }
-
-    /// Metadata for one artifact.
-    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
-        self.artifacts.get(name).map(|a| &a.spec)
-    }
-
-    /// Execute artifact `name` on f32 buffers (one slice per argument,
-    /// shapes validated against the manifest). Returns the flattened
-    /// f32 contents of each tuple output.
-    pub fn execute_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
-        let art = self
-            .artifacts
-            .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact {name}; have {:?}", self.names()))?;
-        if inputs.len() != art.spec.inputs.len() {
-            bail!(
-                "{name}: got {} inputs, manifest says {}",
-                inputs.len(),
-                art.spec.inputs.len()
-            );
-        }
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (k, (&data, spec)) in inputs.iter().zip(&art.spec.inputs).enumerate() {
-            if data.len() != spec.elements() {
-                bail!(
-                    "{name}: input {k} has {} elements, expected {} ({:?})",
-                    data.len(),
-                    spec.elements(),
-                    spec.dims
-                );
-            }
-            let lit = if spec.dims.is_empty() {
-                xla::Literal::scalar(data[0])
-            } else {
-                let dims: Vec<i64> = spec.dims.iter().map(|&d| d as i64).collect();
-                xla::Literal::vec1(data)
-                    .reshape(&dims)
-                    .map_err(|e| anyhow!("{name}: reshape input {k}: {e:?}"))?
-            };
-            literals.push(lit);
-        }
-        let result = art
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("{name}: execute: {e:?}"))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("{name}: fetch: {e:?}"))?;
-        let outs = tuple
-            .to_tuple()
-            .map_err(|e| anyhow!("{name}: untuple: {e:?}"))?;
-        let mut flat = Vec::with_capacity(outs.len());
-        for (k, o) in outs.into_iter().enumerate() {
-            flat.push(
-                o.to_vec::<f32>()
-                    .map_err(|e| anyhow!("{name}: output {k} to f32: {e:?}"))?,
-            );
-        }
-        Ok(flat)
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -234,5 +130,15 @@ ising_step|64x64:f32,64x64:f32,64x64:f32,scalar:f32,scalar:f32|1|H=64,W=64
     #[test]
     fn manifest_rejects_malformed() {
         assert!(parse_manifest("name|only|three").is_err());
+    }
+
+    #[cfg(not(feature = "xla-runtime"))]
+    #[test]
+    fn stub_runtime_load_fails_with_feature_hint() {
+        let err = match Runtime::load("artifacts") {
+            Ok(_) => panic!("stub runtime loaded"),
+            Err(e) => e,
+        };
+        assert!(format!("{err:#}").contains("xla-runtime"), "{err:#}");
     }
 }

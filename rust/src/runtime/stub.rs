@@ -1,0 +1,58 @@
+//! Stub runtime compiled when the `xla-runtime` feature is off.
+//!
+//! Presents the exact same surface as the real PJRT [`Runtime`] so
+//! every caller typechecks, but `load` always fails with a message
+//! naming the missing feature. The struct is uninhabited (it wraps an
+//! empty enum), so the remaining methods are statically unreachable —
+//! no panics, no dead code paths at runtime.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::ArtifactSpec;
+
+enum Never {}
+
+/// Uninhabited stand-in for the PJRT runtime (`xla-runtime` feature off).
+pub struct Runtime {
+    _never: Never,
+}
+
+impl Runtime {
+    /// Always fails: the crate was built without the `xla-runtime`
+    /// feature, so no PJRT client exists to load artifacts with.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        bail!(
+            "mc2a was built without the `xla-runtime` feature, so the PJRT \
+             path is unavailable (artifact dir: {}); rebuild with \
+             `--features xla-runtime` and the vendored `xla` crate",
+            dir.as_ref().display()
+        )
+    }
+
+    /// PJRT platform name (unreachable on the stub).
+    pub fn platform(&self) -> String {
+        match self._never {}
+    }
+
+    /// Artifact directory (unreachable on the stub).
+    pub fn dir(&self) -> &Path {
+        match self._never {}
+    }
+
+    /// Names of all loaded artifacts (unreachable on the stub).
+    pub fn names(&self) -> Vec<&str> {
+        match self._never {}
+    }
+
+    /// Metadata for one artifact (unreachable on the stub).
+    pub fn spec(&self, _name: &str) -> Option<&ArtifactSpec> {
+        match self._never {}
+    }
+
+    /// Execute an artifact (unreachable on the stub).
+    pub fn execute_f32(&self, _name: &str, _inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        match self._never {}
+    }
+}

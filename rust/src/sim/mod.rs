@@ -27,7 +27,7 @@ pub use energy::{EnergyBreakdown, EnergyParams};
 use crate::energy::EnergyModel;
 use crate::isa::{CtrlType, HwConfig, Instr, Program, Semantics, SuMode};
 use crate::mcmc::sampler::{CategoricalSampler, GumbelLutSampler};
-use crate::mcmc::{Mcmc, PathAuxiliarySampler};
+use crate::mcmc::{BetaSchedule, Mcmc, PathAuxiliarySampler};
 use crate::rng::Rng;
 
 /// Aggregated simulation statistics.
@@ -180,6 +180,11 @@ impl<'m> Simulator<'m> {
         self.beta = beta;
     }
 
+    /// Current inverse temperature of the functional model.
+    pub fn beta(&self) -> f32 {
+        self.beta
+    }
+
     /// Override energy parameters.
     pub fn set_energy_params(&mut self, p: EnergyParams) {
         self.eparams = p;
@@ -196,11 +201,30 @@ impl<'m> Simulator<'m> {
 
     /// Run `iterations` HWLOOP trips of `program`, returning the report.
     pub fn run(&mut self, program: &Program, iterations: usize) -> SimReport {
+        self.run_observed(program, iterations, None, &mut |_, _, _| true)
+    }
+
+    /// [`Simulator::run`] with two engine hooks: an optional β
+    /// `schedule` evaluated once per HWLOOP iteration (so annealed
+    /// runs sweep the schedule instead of holding one temperature),
+    /// and an `observe(iter, report_so_far, state)` callback invoked
+    /// after every iteration; returning `false` stops the run early
+    /// (the engine's cooperative early-stop path).
+    pub fn run_observed(
+        &mut self,
+        program: &Program,
+        iterations: usize,
+        schedule: Option<BetaSchedule>,
+        observe: &mut dyn FnMut(usize, &SimReport, &[u32]) -> bool,
+    ) -> SimReport {
         let mut rep = SimReport::default();
         for instr in &program.prologue {
             self.execute(instr, &mut rep);
         }
-        for _ in 0..iterations {
+        for iter in 0..iterations {
+            if let Some(s) = schedule {
+                self.beta = s.beta(iter);
+            }
             for instr in &program.body {
                 self.execute(instr, &mut rep);
             }
@@ -213,6 +237,9 @@ impl<'m> Simulator<'m> {
             // Histogram memory update (one per RV per iteration).
             for i in 0..self.model.num_vars() {
                 self.hist[self.hist_offsets[i] + self.x[i] as usize] += 1;
+            }
+            if !observe(iter, &rep, &self.x) {
+                break;
             }
         }
         rep.energy.static_ +=
@@ -456,6 +483,39 @@ mod tests {
         assert!(rep.cu_utilization() > 0.0 && rep.su_utilization() > 0.0);
         assert!(rep.gsps(&HwConfig::fig10_toy()) > 0.0);
         assert!(rep.energy.total_pj() > 0.0);
+    }
+
+    #[test]
+    fn schedule_steps_beta_every_iteration() {
+        use crate::mcmc::BetaSchedule;
+        let m = toy_model();
+        let mut sim = mk_sim(&m);
+        let mut p = Program::default();
+        p.body.push(Instr::nop());
+        let schedule = BetaSchedule::Linear {
+            from: 0.0,
+            to: 1.0,
+            steps: 10,
+        };
+        let mut seen = Vec::new();
+        // Can't observe sim.beta inside the callback (sim is mutably
+        // borrowed), so recompute the expectation and check the final β.
+        sim.run_observed(&p, 10, Some(schedule), &mut |iter, _, _| {
+            seen.push(iter);
+            true
+        });
+        assert_eq!(seen, (0..10).collect::<Vec<_>>());
+        assert_eq!(sim.beta(), schedule.beta(9), "β frozen instead of stepped");
+    }
+
+    #[test]
+    fn observe_false_stops_early() {
+        let m = toy_model();
+        let mut sim = mk_sim(&m);
+        let mut p = Program::default();
+        p.body.push(Instr::nop());
+        let rep = sim.run_observed(&p, 100, None, &mut |iter, _, _| iter < 4);
+        assert_eq!(rep.iterations, 5);
     }
 
     #[test]

@@ -1,0 +1,337 @@
+//! Integration tests for the unified `Engine` API: builder error
+//! paths, workload-registry coverage, observer streaming + early-stop
+//! semantics, convergence diagnostics, and backend pluggability.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use mc2a::coordinator::ChainResult;
+use mc2a::energy::PottsGrid;
+use mc2a::engine::{
+    registry, ChainCtx, ChainSpec, ChainObserver, ConvergenceStop, DiagnosticsReport, Engine,
+    ExecutionBackend, Mc2aError, ObserverAction, ProgressEvent,
+};
+use mc2a::mcmc::{AlgoKind, StepStats};
+
+// ---------------------------------------------------------------- builder
+
+#[test]
+fn builder_rejects_zero_chains() {
+    let m = PottsGrid::new(4, 4, 2, 0.5);
+    match Engine::for_model(&m).chains(0).build() {
+        Err(Mc2aError::InvalidConfig(msg)) => assert!(msg.contains("chains"), "{msg}"),
+        Ok(_) => panic!("zero chains accepted"),
+        Err(e) => panic!("wrong error: {e}"),
+    }
+}
+
+#[test]
+fn unknown_workload_lists_registry() {
+    match Engine::for_workload("no-such-workload") {
+        Err(Mc2aError::UnknownWorkload { name, known }) => {
+            assert_eq!(name, "no-such-workload");
+            assert!(known.contains(&"earthquake".to_string()));
+            assert!(known.contains(&"optsicom".to_string()));
+        }
+        Err(e) => panic!("wrong error: {e}"),
+        Ok(_) => panic!("bogus workload resolved"),
+    }
+}
+
+#[test]
+fn runtime_backend_without_artifacts_is_a_typed_error() {
+    let result = Engine::for_workload("earthquake")
+        .unwrap()
+        .runtime("definitely/not/a/real/artifact/dir")
+        .build();
+    match result {
+        Err(Mc2aError::RuntimeUnavailable(msg)) => {
+            assert!(!msg.is_empty(), "empty runtime error message");
+        }
+        Err(e) => panic!("wrong error: {e}"),
+        Ok(_) => panic!("runtime backend built without artifacts"),
+    }
+}
+
+#[test]
+fn workload_defaults_come_from_table1_pairing() {
+    let engine = Engine::for_workload("optsicom").unwrap().build().unwrap();
+    assert_eq!(engine.spec().algo, AlgoKind::Pas);
+    assert_eq!(engine.spec().pas_flips, 8);
+    assert_eq!(engine.workload_name(), Some("optsicom"));
+    let engine = Engine::for_workload("earthquake").unwrap().build().unwrap();
+    assert_eq!(engine.spec().algo, AlgoKind::BlockGibbs);
+}
+
+// ------------------------------------------------------------- registry
+
+/// Every (non-heavy) registry workload must construct and survive a
+/// 10-step run on the software backend with its Table I pairing.
+#[test]
+fn every_registry_workload_runs_ten_steps() {
+    for entry in registry::REGISTRY {
+        if entry.heavy {
+            continue; // full-scale MRF: construction alone dominates CI time
+        }
+        let metrics = Engine::for_workload(entry.name)
+            .unwrap_or_else(|e| panic!("{}: {e}", entry.name))
+            .steps(10)
+            .build()
+            .unwrap_or_else(|e| panic!("{}: {e}", entry.name))
+            .run()
+            .unwrap_or_else(|e| panic!("{}: {e}", entry.name));
+        assert_eq!(metrics.chains.len(), 1, "{}", entry.name);
+        let c = &metrics.chains[0];
+        assert_eq!(c.steps, 10, "{}", entry.name);
+        assert!(c.stats.updates > 0, "{} made no updates", entry.name);
+        assert!(!c.best_x.is_empty(), "{} has no assignment", entry.name);
+    }
+}
+
+#[test]
+fn aliases_resolve_to_same_workload() {
+    let a = Engine::for_workload("er700").unwrap().build().unwrap();
+    let b = Engine::for_workload("mis").unwrap().build().unwrap();
+    assert_eq!(a.model().num_vars(), b.model().num_vars());
+}
+
+// ------------------------------------------------- observer / early stop
+
+#[derive(Default)]
+struct Recording {
+    events: Vec<(usize, usize)>, // (chain_id, step)
+    diagnostics: Vec<DiagnosticsReport>,
+    chains_done: usize,
+}
+
+struct RecordingObserver(Arc<Mutex<Recording>>);
+
+impl ChainObserver for RecordingObserver {
+    fn on_progress(&mut self, e: &ProgressEvent) -> ObserverAction {
+        self.0.lock().unwrap().events.push((e.chain_id, e.step));
+        ObserverAction::Continue
+    }
+    fn on_diagnostics(&mut self, d: &DiagnosticsReport) -> ObserverAction {
+        self.0.lock().unwrap().diagnostics.push(*d);
+        ObserverAction::Continue
+    }
+    fn on_chain_done(&mut self, _r: &ChainResult) {
+        self.0.lock().unwrap().chains_done += 1;
+    }
+}
+
+#[test]
+fn observer_streams_ordered_events_and_diagnostics() {
+    let m = PottsGrid::new(5, 5, 2, 0.5);
+    let rec = Arc::new(Mutex::new(Recording::default()));
+    let metrics = Engine::for_model(&m)
+        .steps(200)
+        .chains(2)
+        .observe_every(20)
+        .observer(Box::new(RecordingObserver(rec.clone())))
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    let rec = rec.lock().unwrap();
+    // 2 chains × 10 observation points.
+    assert_eq!(rec.events.len(), 20, "{:?}", rec.events);
+    for chain in 0..2 {
+        let steps: Vec<usize> = rec
+            .events
+            .iter()
+            .filter(|(c, _)| *c == chain)
+            .map(|(_, s)| *s)
+            .collect();
+        assert_eq!(steps, (1..=10).map(|k| k * 20).collect::<Vec<_>>());
+    }
+    // One diagnostics report per completed round; R-hat defined from
+    // round 4 (two split halves of ≥ 2 observations each).
+    assert_eq!(rec.diagnostics.len(), 10);
+    assert!(rec.diagnostics[0].r_hat.is_none());
+    assert!(rec.diagnostics[9].r_hat.is_some());
+    assert!(rec.diagnostics.iter().all(|d| d.min_ess >= 1.0));
+    assert_eq!(rec.chains_done, 2);
+    // The engine-level aggregate agrees with the streamed trace length.
+    for c in &metrics.chains {
+        assert_eq!(c.objective_trace.len(), 10);
+    }
+    assert!(metrics.split_r_hat().is_some());
+}
+
+struct StopAfter {
+    seen: usize,
+    limit: usize,
+}
+
+impl ChainObserver for StopAfter {
+    fn on_progress(&mut self, _e: &ProgressEvent) -> ObserverAction {
+        self.seen += 1;
+        if self.seen >= self.limit {
+            ObserverAction::Stop
+        } else {
+            ObserverAction::Continue
+        }
+    }
+}
+
+#[test]
+fn early_stop_truncates_chains() {
+    let m = PottsGrid::new(8, 8, 2, 0.5);
+    let metrics = Engine::for_model(&m)
+        .steps(50_000)
+        .chains(2)
+        .observe_every(10)
+        .observer(Box::new(StopAfter { seen: 0, limit: 3 }))
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert!(
+        metrics.chains.iter().any(|c| c.steps < 50_000),
+        "no chain stopped early: {:?}",
+        metrics.chains.iter().map(|c| c.steps).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn convergence_stop_ends_mixed_chains_early() {
+    // A tiny symmetric grid mixes almost immediately, so the R-hat
+    // criterion must fire long before the 50k-step budget.
+    let m = PottsGrid::new(4, 4, 2, 0.3);
+    let metrics = Engine::for_model(&m)
+        .steps(50_000)
+        .chains(4)
+        .observe_every(25)
+        .observer(Box::new(ConvergenceStop {
+            r_hat_target: 1.2,
+            min_rounds: 4,
+        }))
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    for c in &metrics.chains {
+        assert!(c.steps < 50_000, "chain {} never stopped", c.chain_id);
+    }
+}
+
+// ------------------------------------------------------ custom backends
+
+struct CountingBackend {
+    calls: AtomicUsize,
+}
+
+impl ExecutionBackend for CountingBackend {
+    fn name(&self) -> &'static str {
+        "counting"
+    }
+
+    fn run_chain(
+        &self,
+        model: &dyn mc2a::energy::EnergyModel,
+        spec: &ChainSpec,
+        chain_id: usize,
+        _ctx: &ChainCtx<'_>,
+    ) -> Result<ChainResult, Mc2aError> {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        Ok(ChainResult {
+            chain_id,
+            best_objective: 0.0,
+            steps: spec.steps,
+            stats: StepStats::default(),
+            sim: None,
+            wall: Duration::from_millis(1),
+            marginal0: vec![1.0],
+            best_x: vec![0; model.num_vars()],
+            objective_trace: Vec::new(),
+        })
+    }
+}
+
+#[test]
+fn custom_backends_plug_in_without_touching_call_sites() {
+    let m = PottsGrid::new(3, 3, 2, 0.5);
+    let mut engine = Engine::for_model(&m)
+        .steps(7)
+        .chains(3)
+        .backend(Box::new(CountingBackend {
+            calls: AtomicUsize::new(0),
+        }))
+        .build()
+        .unwrap();
+    assert_eq!(engine.backend_name(), "counting");
+    let metrics = engine.run().unwrap();
+    assert_eq!(metrics.chains.len(), 3);
+    assert!(metrics.chains.iter().all(|c| c.steps == 7));
+}
+
+struct FailingBackend;
+
+impl ExecutionBackend for FailingBackend {
+    fn name(&self) -> &'static str {
+        "failing"
+    }
+
+    fn run_chain(
+        &self,
+        _model: &dyn mc2a::energy::EnergyModel,
+        _spec: &ChainSpec,
+        chain_id: usize,
+        _ctx: &ChainCtx<'_>,
+    ) -> Result<ChainResult, Mc2aError> {
+        Err(Mc2aError::Runtime(format!("chain {chain_id} boom")))
+    }
+}
+
+#[test]
+fn backend_errors_surface_as_results_not_panics() {
+    let m = PottsGrid::new(3, 3, 2, 0.5);
+    let err = Engine::for_model(&m)
+        .chains(2)
+        .backend(Box::new(FailingBackend))
+        .build()
+        .unwrap()
+        .run()
+        .unwrap_err();
+    assert!(matches!(err, Mc2aError::Runtime(_)), "{err}");
+}
+
+// -------------------------------------------------- accelerator parity
+
+/// The accelerator backend must anneal: with a schedule that freezes
+/// cold at the end, a run through the engine ends far more ordered
+/// than a constant hot run — this regression-tests the old midpoint-β
+/// bug, which made annealed sim runs equivalent to a constant lukewarm β.
+#[test]
+fn accelerator_backend_steps_the_beta_schedule() {
+    use mc2a::isa::HwConfig;
+    use mc2a::mcmc::BetaSchedule;
+    let m = PottsGrid::new(8, 8, 2, 1.0);
+    let run = |schedule| {
+        let metrics = Engine::for_model(&m)
+            .algo(AlgoKind::BlockGibbs)
+            .schedule(schedule)
+            .steps(300)
+            .seed(0xC01D)
+            .accelerator(HwConfig::fig10_toy())
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        metrics.chains[0].best_objective
+    };
+    let annealed = run(BetaSchedule::Linear {
+        from: 0.05,
+        to: 4.0,
+        steps: 200,
+    });
+    let hot = run(BetaSchedule::Constant(0.05));
+    // Ferromagnet objective = -E; the annealed run must find a much
+    // better (ordered) state than the permanently hot run.
+    assert!(
+        annealed > hot + 10.0,
+        "annealed {annealed} vs hot {hot}: schedule not applied"
+    );
+}
