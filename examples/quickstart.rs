@@ -1,9 +1,11 @@
-//! Quickstart: sample a small Ising model three ways through the
+//! Quickstart: sample a small Ising model four ways through the
 //! unified [`Engine`] API.
 //!
 //! 1. Software Block Gibbs (the reference algorithm library),
-//! 2. the MC²A accelerator (compile → cycle-accurate simulation),
-//! 3. the 3D roofline prediction for the same workload.
+//! 2. 32 chains on the batched SoA backend (work-stealing pool) —
+//!    bit-identical chains, many-chain throughput,
+//! 3. the MC²A accelerator (compile → cycle-accurate simulation),
+//! 4. the 3D roofline prediction for the same workload.
 //!
 //! Run with: `cargo run --release --example quickstart`
 
@@ -32,7 +34,35 @@ fn main() -> mc2a::Result<()> {
     println!("  P(spin[0] = 1)   = {:.3}", sw.marginal0[1]);
     println!("  best objective   = {:.1}", sw.best_objective);
 
-    // --- 2. MC²A accelerator ----------------------------------------------
+    // --- 2. many chains, batched ------------------------------------------
+    // 32 chains as structure-of-arrays batches over a fixed thread
+    // pool: chain 0 reproduces the single-chain run above bit-for-bit
+    // (same `Rng::fork(seed, chain_id)` stream on every backend).
+    let metrics = Engine::for_model(&model)
+        .algo(AlgoKind::BlockGibbs)
+        .schedule(BetaSchedule::Constant(beta))
+        .steps(2_000)
+        .chains(32)
+        .batch(16)
+        .seed(42)
+        .build()?
+        .run()?;
+    println!("\nbatched backend (32 chains, batch 16):");
+    println!("  updates          = {}", metrics.total_updates());
+    println!("  updates/s        = {:.3e}", metrics.updates_per_sec());
+    println!(
+        "  mean P(spin = 1) = {:.3}  (across chains)",
+        metrics.mean_marginal0()[1]
+    );
+    println!(
+        "  chain 0 matches single-chain run: {}",
+        metrics.chains[0].marginal0 == sw.marginal0
+    );
+    if let Some(r) = metrics.split_r_hat() {
+        println!("  split R-hat      = {r:.4}");
+    }
+
+    // --- 3. MC²A accelerator ----------------------------------------------
     let hw = HwConfig::paper_default();
     let metrics = Engine::for_model(&model)
         .algo(AlgoKind::BlockGibbs)
@@ -51,7 +81,7 @@ fn main() -> mc2a::Result<()> {
     println!("  power (modeled)  = {:.3} W", rep.watts(&hw));
     println!("  P(spin[0] = 1)   = {:.3}  (must match software)", acc.marginal0[1]);
 
-    // --- 3. roofline prediction --------------------------------------------
+    // --- 4. roofline prediction --------------------------------------------
     let prof = WorkloadProfile::from_model(&model, AlgoKind::BlockGibbs);
     let point = roofline::evaluate(&hw, &prof);
     println!("\n3D roofline @ (CI={:.4}, MI={:.4}):", prof.ci, prof.mi);

@@ -1,0 +1,14 @@
+//! Bench: many-chain throughput — thread-per-chain `SoftwareBackend`
+//! vs the batched work-stealing `BatchedSoftwareBackend` on a
+//! 1024-variable Ising Gibbs sweep at 64 chains. Prints the same CSV
+//! as `mc2a bench chains` (samples/sec and chains/sec per backend).
+
+fn main() {
+    match mc2a::bench::many_chains(false) {
+        Ok(report) => print!("{report}"),
+        Err(e) => {
+            eprintln!("many_chain bench failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}

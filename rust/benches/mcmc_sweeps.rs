@@ -26,10 +26,12 @@ fn bench_chain(
     let stat = bench_fn(1, 5, || engine.run().expect("run"));
     let metrics = engine.run().expect("run");
     let updates = metrics.total_updates() as f64;
+    let samples: u64 = metrics.chains.iter().map(|c| c.stats.cost.samples).sum();
     println!(
-        "{name:<28} {:>8.3} ms/run  {:>10.3e} updates/s",
+        "{name:<28} {:>8.3} ms/run  {:>10.3e} updates/s  {:>10.3e} samples/s",
         stat.median_ms(),
-        updates / (stat.median_ms() / 1e3)
+        updates / (stat.median_ms() / 1e3),
+        samples as f64 / (stat.median_ms() / 1e3)
     );
 }
 
@@ -44,4 +46,8 @@ fn main() {
     bench_chain("optsicom pas L=8", mc.model.as_ref(), AlgoKind::Pas, SamplerKind::Gumbel, 8, 100);
     let rbm = workloads::wl_rbm();
     bench_chain("rbm784 block-gibbs", rbm.model.as_ref(), AlgoKind::BlockGibbs, SamplerKind::Gumbel, 1, 3);
+
+    // Many-chain backend comparison (thread-per-chain vs batched pool).
+    println!();
+    print!("{}", mc2a::bench::many_chains(true).expect("many_chains"));
 }

@@ -29,7 +29,7 @@ fn main() {
     println!("# samplers — software sampling kernels");
     for n in [8usize, 64, 256] {
         bench_sampler("cdf", &mut CdfSampler, n);
-        bench_sampler("gumbel", &mut GumbelSampler, n);
+        bench_sampler("gumbel", &mut GumbelSampler::default(), n);
         bench_sampler("gumbel-lut16", &mut GumbelLutSampler::new(16, 8), n);
     }
     println!("\n# hardware SU models (Fig. 13 sweep @ paper config)");

@@ -14,7 +14,7 @@ use std::fmt::Write as _;
 
 use crate::baselines::{self, BaselineWorkload};
 
-use crate::energy::MaxCutModel;
+use crate::energy::{MaxCutModel, PottsGrid};
 use crate::engine::{Engine, Mc2aError};
 use crate::graph::erdos_renyi_with_edges;
 use crate::isa::HwConfig;
@@ -342,7 +342,7 @@ pub fn fig12(quick: bool) -> String {
         writeln!(out).unwrap();
     }
     // exact-sampler floor for reference
-    let mut exact = GumbelSampler;
+    let mut exact = GumbelSampler::default();
     let tv0: f64 = dists
         .iter()
         .map(|e| sampler_tv_distance(&mut exact, e, 1.0, draws / 20, &mut rng))
@@ -591,6 +591,85 @@ pub fn fig15(quick: bool) -> String {
     out
 }
 
+/// Many-chain throughput: the thread-per-chain [`SoftwareBackend`]
+/// versus the batched work-stealing backend on a 1024-variable Ising
+/// Gibbs sweep, 64 chains — the acceptance benchmark for the batched
+/// execution path, reproducible with `mc2a bench chains` (or
+/// `cargo bench --bench many_chain`).
+///
+/// Emits a CSV block with **samples/sec** and **chains/sec** per
+/// backend (not just wall time), so successive PRs have a throughput
+/// trajectory to track.
+///
+/// [`SoftwareBackend`]: crate::engine::SoftwareBackend
+pub fn many_chains(quick: bool) -> Result<String, Mc2aError> {
+    let mut out = String::new();
+    let chains = 64usize;
+    let steps = if quick { 10 } else { 50 };
+    let model = PottsGrid::new(32, 32, 2, 0.6); // 1024 RVs, 4-neighborhood
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    writeln!(
+        out,
+        "# many-chain throughput — {chains} chains × {steps} Gibbs sweeps, 32×32 Ising (1024 RVs)"
+    )
+    .unwrap();
+    writeln!(
+        out,
+        "backend,chains,batch,threads,steps,wall_ms,samples_per_sec,chains_per_sec"
+    )
+    .unwrap();
+    // Batch so the pool's work items cover every core: `chains/batch`
+    // items ≈ `threads`, and the CSV reports the configuration that
+    // actually runs.
+    let pool_batch = chains.div_ceil(threads).max(1);
+    let mut rates = Vec::new();
+    for (label, batch) in [("software", 0usize), ("batched", pool_batch)] {
+        // One expression feeds both the engine and the CSV, so the
+        // reported thread count is the one that actually ran.
+        let pool_threads = if batch == 0 {
+            chains // one OS thread per chain
+        } else {
+            threads.min(chains.div_ceil(batch))
+        };
+        let mut builder = Engine::for_model(&model)
+            .algo(AlgoKind::Gibbs)
+            .sampler(SamplerKind::Gumbel)
+            .schedule(BetaSchedule::Constant(0.6))
+            .steps(steps)
+            .chains(chains)
+            .seed(0xC4A1);
+        if batch > 0 {
+            builder = builder.batch(batch).threads(pool_threads);
+        }
+        let mut engine = builder.build()?;
+        engine.run()?; // warmup (page-in, allocator, thread spawn)
+        let metrics = engine.run()?;
+        let wall = metrics.wall.as_secs_f64().max(1e-12);
+        let samples: u64 = metrics.chains.iter().map(|c| c.stats.cost.samples).sum();
+        let samples_per_sec = samples as f64 / wall;
+        let chains_per_sec = chains as f64 / wall;
+        writeln!(
+            out,
+            "{label},{chains},{},{pool_threads},{steps},{:.3},{:.4e},{:.2}",
+            if batch == 0 { 1 } else { batch },
+            wall * 1e3,
+            samples_per_sec,
+            chains_per_sec,
+        )
+        .unwrap();
+        rates.push(samples_per_sec);
+    }
+    if let [scalar, batched] = rates[..] {
+        writeln!(
+            out,
+            "\nbatched/software samples-per-sec speedup: {:.2}x",
+            batched / scalar.max(1e-12)
+        )
+        .unwrap();
+    }
+    Ok(out)
+}
+
 /// §VI-D headline: speedup ratios vs the paper's claims.
 ///
 /// Always uses the paper-scale 150 k-node MRF — the analytical GPU/TPU
@@ -661,5 +740,15 @@ mod tests {
         let t = fig12(true);
         assert!(t.contains("size=16"));
         assert!(t.contains("exact"));
+    }
+
+    #[test]
+    fn many_chains_csv_has_throughput_columns() {
+        let t = many_chains(true).unwrap();
+        assert!(t.contains("samples_per_sec"), "{t}");
+        assert!(t.contains("chains_per_sec"), "{t}");
+        assert!(t.contains("software,64"), "{t}");
+        assert!(t.contains("batched,64,"), "{t}");
+        assert!(t.contains("speedup"), "{t}");
     }
 }

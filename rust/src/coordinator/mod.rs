@@ -30,7 +30,11 @@ pub struct ChainResult {
     pub stats: StepStats,
     /// Accelerator report when run on the simulator backend.
     pub sim: Option<SimReport>,
-    /// Wall-clock duration of the chain.
+    /// Wall-clock duration of the chain's executor. On thread-per-chain
+    /// backends this is the chain's own thread time; on the batched
+    /// backend every chain of a work item shares the item's duration
+    /// (the chains genuinely ran interleaved, so the time is shared,
+    /// not divisible).
     pub wall: Duration,
     /// Marginal of RV 0 (convergence smoke signal).
     pub marginal0: Vec<f64>,

@@ -299,6 +299,14 @@ mod tests {
     }
 
     #[test]
+    fn default_batched_energies_match_scalar_bitwise() {
+        // BayesNet has no override: this exercises the trait's default
+        // Markov-blanket gather path.
+        use crate::energy::testutil::check_batch_consistency;
+        check_batch_consistency(&sprinkler(), 6, 31);
+    }
+
+    #[test]
     fn exact_marginal_sums_to_one() {
         let net = sprinkler();
         let m = net.exact_marginal(3);

@@ -5,7 +5,7 @@
 //! the paper evaluates (§VI-A): binary RVs, energy = -objective +
 //! λ·constraint-violations, sampled with PAS / MH / Block Gibbs.
 
-use super::{EnergyModel, OpCost};
+use super::{BatchScratch, EnergyModel, OpCost};
 use crate::graph::Graph;
 
 /// MaxCut: partition nodes into two sets maximizing the weight of cut
@@ -69,6 +69,31 @@ impl EnergyModel for MaxCutModel {
         }
         out[0] = e0;
         out[1] = e1;
+    }
+
+    fn local_energies_batch(
+        &self,
+        xs: &[u32],
+        k: usize,
+        i: usize,
+        out: &mut Vec<f32>,
+        _scratch: &mut BatchScratch,
+    ) {
+        out.clear();
+        out.resize(k * 2, 0.0);
+        let nbrs = self.graph.neighbors(i);
+        let ws = self.graph.neighbor_weights(i);
+        // Each (neighbor, weight) pair is fetched once and applied to
+        // all K chains via a contiguous gather of the SoA column.
+        for (e, &j) in nbrs.iter().enumerate() {
+            let w = ws.map_or(1.0, |w| w[e]);
+            let col = &xs[j as usize * k..j as usize * k + k];
+            for (c, &side) in col.iter().enumerate() {
+                // Neighbor on side 0 rewards side 1 (edge cut) and
+                // vice versa, as in the scalar kernel.
+                out[c * 2 + usize::from(side == 0)] -= w;
+            }
+        }
     }
 
     fn energy(&self, x: &[u32]) -> f64 {
@@ -193,6 +218,32 @@ impl EnergyModel for MisModel {
         0
     }
 
+    fn local_energies_batch(
+        &self,
+        xs: &[u32],
+        k: usize,
+        i: usize,
+        out: &mut Vec<f32>,
+        _scratch: &mut BatchScratch,
+    ) {
+        out.clear();
+        out.resize(k * 2, 0.0);
+        // Accumulate the selected-neighbor count in `out[c*2+1]`, then
+        // fold in the reward/penalty. Counts are small integers, so the
+        // f32 accumulation matches the scalar `count() as f32` exactly.
+        for &j in self.graph.neighbors(i) {
+            let col = &xs[j as usize * k..j as usize * k + k];
+            for (c, &b) in col.iter().enumerate() {
+                if b == 1 {
+                    out[c * 2 + 1] += 1.0;
+                }
+            }
+        }
+        for c in 0..k {
+            out[c * 2 + 1] = -1.0 + self.penalty * out[c * 2 + 1];
+        }
+    }
+
     fn energy(&self, x: &[u32]) -> f64 {
         -(self.set_size(x) as f64) + self.penalty as f64 * self.violations(x) as f64
     }
@@ -271,6 +322,17 @@ impl EnergyModel for MaxCliqueModel {
         self.inner.local_energies(x, i, out)
     }
 
+    fn local_energies_batch(
+        &self,
+        xs: &[u32],
+        k: usize,
+        i: usize,
+        out: &mut Vec<f32>,
+        scratch: &mut BatchScratch,
+    ) {
+        self.inner.local_energies_batch(xs, k, i, out, scratch)
+    }
+
     fn energy(&self, x: &[u32]) -> f64 {
         self.inner.energy(x)
     }
@@ -335,6 +397,28 @@ mod tests {
             let want = (m.energy(&y) - m.energy(&x)) as f32;
             assert!((d - want).abs() < 1e-4, "i={i} {d} vs {want}");
         }
+    }
+
+    #[test]
+    fn batched_energies_match_scalar_bitwise() {
+        use crate::energy::testutil::check_batch_consistency;
+        let g = Graph::from_edges(3, &[(0, 1), (1, 2)], Some(&[2.0, 5.0]));
+        check_batch_consistency(&MaxCutModel::new(g, None), 4, 21);
+        check_batch_consistency(
+            &MaxCutModel::new(erdos_renyi_with_edges(30, 90, 17), None),
+            7,
+            22,
+        );
+        check_batch_consistency(
+            &MisModel::new(erdos_renyi_with_edges(25, 60, 23), 1.5, None),
+            5,
+            23,
+        );
+        check_batch_consistency(
+            &MaxCliqueModel::new(erdos_renyi_with_edges(20, 80, 31), 1.5, None),
+            5,
+            24,
+        );
     }
 
     #[test]

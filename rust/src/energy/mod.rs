@@ -40,9 +40,28 @@ impl OpCost {
     }
 }
 
+/// Reusable scratch buffers for the default (loop-over-scalar) batched
+/// energy kernels, so the hot loop performs no per-call allocation.
+#[derive(Debug, Default)]
+pub struct BatchScratch {
+    /// Full-length gathered assignment for one chain of the batch.
+    pub x: Vec<u32>,
+    /// Scalar conditional-energy buffer for one chain.
+    pub e: Vec<f32>,
+}
+
 /// A discrete energy model: the target distribution is
 /// `P(x) ∝ exp(-β E(x))` over assignment vectors `x` with
 /// `x[i] ∈ [0, num_states(i))`.
+///
+/// # Contract
+///
+/// [`EnergyModel::local_energies`] (and [`EnergyModel::delta_energy`])
+/// may only read `x` at position `i` and at `i`'s neighbors in
+/// [`EnergyModel::interaction`] — the Markov blanket. The batched
+/// execution path relies on this to gather one chain's conditional
+/// context out of a structure-of-arrays state block without
+/// materializing the full assignment.
 pub trait EnergyModel: Send + Sync {
     /// Number of random variables.
     fn num_vars(&self) -> usize;
@@ -60,6 +79,40 @@ pub trait EnergyModel: Send + Sync {
     /// additive constant shared across `s`** (constants cancel in the
     /// conditional distribution). `out` is resized to `num_states(i)`.
     fn local_energies(&self, x: &[u32], i: usize, out: &mut Vec<f32>);
+
+    /// Batched conditional energies of RV `i` for `k` chains held in a
+    /// structure-of-arrays state block: `xs[j * k + c]` is chain `c`'s
+    /// value of RV `j` (column-major per variable). Fills `out` with
+    /// `k * num_states(i)` entries, chain-major: `out[c * S + s]` is
+    /// chain `c`'s energy for candidate state `s`.
+    ///
+    /// The default gathers each chain's Markov blanket into
+    /// `scratch.x` and evaluates the scalar kernel, so every model
+    /// works unchanged; models with vectorizable structure (Potts,
+    /// MaxCut, MIS) override it to amortize the neighbor-index walk
+    /// across the whole batch.
+    fn local_energies_batch(
+        &self,
+        xs: &[u32],
+        k: usize,
+        i: usize,
+        out: &mut Vec<f32>,
+        scratch: &mut BatchScratch,
+    ) {
+        let s = self.num_states(i);
+        out.clear();
+        out.resize(k * s, 0.0);
+        scratch.x.resize(self.num_vars(), 0);
+        let nbrs = self.interaction().neighbors(i);
+        for c in 0..k {
+            scratch.x[i] = xs[i * k + c];
+            for &nb in nbrs {
+                scratch.x[nb as usize] = xs[nb as usize * k + c];
+            }
+            self.local_energies(&scratch.x, i, &mut scratch.e);
+            out[c * s..(c + 1) * s].copy_from_slice(&scratch.e);
+        }
+    }
 
     /// Total energy of assignment `x`.
     fn energy(&self, x: &[u32]) -> f64;
@@ -133,6 +186,36 @@ pub fn random_state(model: &dyn EnergyModel, rng: &mut crate::rng::Rng) -> Vec<u
 #[cfg(test)]
 pub(crate) mod testutil {
     use super::*;
+
+    /// Check that `local_energies_batch` reproduces the scalar kernel
+    /// **bit-exactly** for `k` random chains packed into an SoA block.
+    pub fn check_batch_consistency(model: &dyn EnergyModel, k: usize, seed: u64) {
+        let mut rng = crate::rng::Rng::new(seed);
+        let n = model.num_vars();
+        let chains: Vec<Vec<u32>> = (0..k).map(|_| random_state(model, &mut rng)).collect();
+        let mut xs = vec![0u32; n * k];
+        for (c, x) in chains.iter().enumerate() {
+            for i in 0..n {
+                xs[i * k + c] = x[i];
+            }
+        }
+        let mut out = Vec::new();
+        let mut scratch = BatchScratch::default();
+        let mut e = Vec::new();
+        for i in 0..n {
+            let s = model.num_states(i);
+            model.local_energies_batch(&xs, k, i, &mut out, &mut scratch);
+            assert_eq!(out.len(), k * s, "var {i}: wrong batch output length");
+            for (c, x) in chains.iter().enumerate() {
+                model.local_energies(x, i, &mut e);
+                assert_eq!(
+                    &out[c * s..(c + 1) * s],
+                    &e[..],
+                    "var {i} chain {c}: batched energies diverge from scalar"
+                );
+            }
+        }
+    }
 
     /// Exhaustively check that `local_energies` differences agree with
     /// full-energy differences for every var/state on small models.

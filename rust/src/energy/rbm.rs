@@ -192,6 +192,19 @@ mod tests {
     use crate::energy::random_state;
 
     #[test]
+    fn default_batched_energies_match_scalar_bitwise() {
+        // RBM has no override: exercises the default blanket gather on
+        // a bipartite (dense-blanket) interaction graph.
+        use crate::energy::testutil::check_batch_consistency;
+        let mut rng = crate::rng::Rng::new(41);
+        let (nv, nh) = (6, 4);
+        let w: Vec<f32> = (0..nv * nh).map(|_| rng.uniform_f32() - 0.5).collect();
+        let a: Vec<f32> = (0..nv).map(|_| rng.uniform_f32() - 0.5).collect();
+        let b: Vec<f32> = (0..nh).map(|_| rng.uniform_f32() - 0.5).collect();
+        check_batch_consistency(&Rbm::new(nv, nh, w, a, b), 5, 42);
+    }
+
+    #[test]
     fn energy_by_hand() {
         // 2 visible, 1 hidden; only v0 & h on.
         let rbm = Rbm::new(2, 1, vec![0.5, -0.3], vec![0.1, 0.2], vec![0.4]);

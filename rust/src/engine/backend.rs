@@ -7,9 +7,12 @@
 //! shares one backend instance between them, so implementations are
 //! `Send + Sync` and keep per-chain state on the stack.
 //!
-//! Three backends ship with the crate:
+//! Four backends ship with the crate:
 //!
-//! * [`SoftwareBackend`] — the pure-Rust reference chains,
+//! * [`SoftwareBackend`] — the pure-Rust reference chains, one OS
+//!   thread per chain,
+//! * [`crate::engine::BatchedSoftwareBackend`] — structure-of-arrays
+//!   chain batches multiplexed over a fixed work-stealing thread pool,
 //! * [`AcceleratorBackend`] — compile to the MC²A VLIW ISA and run the
 //!   cycle-accurate simulator, evaluating the β schedule once per
 //!   HWLOOP iteration,
@@ -17,9 +20,13 @@
 //!   available when the crate is built with the `xla-runtime` feature
 //!   and the artifact directory exists.
 //!
-//! Future sharded / batched / multi-node backends implement the same
-//! trait and plug in through [`crate::engine::EngineBuilder::backend`]
-//! without touching any call site.
+//! A backend implements per-chain execution ([`ExecutionBackend::run_chain`])
+//! and may override the whole-run entry point
+//! ([`ExecutionBackend::run_chains`], default: one OS thread per
+//! chain) to control its own scheduling — that is how the batched
+//! backend replaces thread-per-chain fan-out without touching any
+//! call site. Future sharded / multi-node backends plug in through
+//! [`crate::engine::EngineBuilder::backend`] the same way.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::Sender;
@@ -48,7 +55,8 @@ pub struct ChainSpec {
     pub schedule: BetaSchedule,
     /// Steps per chain.
     pub steps: usize,
-    /// Base RNG seed (chain `i` uses `seed + i`).
+    /// Base RNG seed; chain `i` draws from the stream
+    /// [`Rng::fork`]`(seed, i)` (see [`ChainSpec::chain_rng`]).
     pub seed: u64,
     /// PAS path length (ignored by other algorithms).
     pub pas_flips: usize,
@@ -58,9 +66,26 @@ pub struct ChainSpec {
     pub init_state: Option<Vec<u32>>,
 }
 
-/// Per-chain run context handed to backends: the engine's shared stop
-/// flag and this chain's clone of the progress-event channel. (The
-/// observation cadence lives on [`ChainSpec::observe_every`].)
+impl ChainSpec {
+    /// The RNG stream for chain `chain_id`: a pure function of
+    /// `(seed, chain_id)`, so chains are bit-identical regardless of
+    /// thread count, batch size, or backend.
+    pub fn chain_rng(&self, chain_id: usize) -> Rng {
+        Rng::fork(self.seed, chain_id as u64)
+    }
+
+    /// Raw 64-bit seed for chain `chain_id` — for components that
+    /// seed their own generator (the simulator's URNG).
+    pub fn chain_seed(&self, chain_id: usize) -> u64 {
+        Rng::fork_seed(self.seed, chain_id as u64)
+    }
+}
+
+/// Run context handed to backends: the engine's shared stop flag and
+/// a clone of the progress-event channel. One context serves a whole
+/// run; backends clone it per worker thread. (The observation cadence
+/// lives on [`ChainSpec::observe_every`].)
+#[derive(Clone)]
 pub struct ChainCtx<'a> {
     /// Cooperative early-stop flag; backends poll it at observation
     /// boundaries and exit early when raised.
@@ -83,10 +108,10 @@ impl ChainCtx<'_> {
     }
 }
 
-/// Where and how a chain executes. Implementations are shared across
+/// Where and how chains execute. Implementations are shared across
 /// the engine's worker threads.
 pub trait ExecutionBackend: Send + Sync {
-    /// Short backend name for reports ("software", "accelerator", …).
+    /// Short backend name for reports ("software", "batched", …).
     fn name(&self) -> &'static str;
 
     /// Run one chain to completion (or early stop) and report it.
@@ -97,9 +122,91 @@ pub trait ExecutionBackend: Send + Sync {
         chain_id: usize,
         ctx: &ChainCtx<'_>,
     ) -> Result<ChainResult, Mc2aError>;
+
+    /// Run the whole fan-out: chains `0..chains`, results ordered by
+    /// chain id. The default spawns one OS thread per chain — correct
+    /// everywhere, but a backend that schedules chains itself (the
+    /// batched backend's work-stealing pool) overrides this to decouple
+    /// chain count from thread count.
+    fn run_chains(
+        &self,
+        model: &dyn EnergyModel,
+        spec: &ChainSpec,
+        chains: usize,
+        ctx: &ChainCtx<'_>,
+    ) -> Result<Vec<ChainResult>, Mc2aError> {
+        let joined: Vec<Result<ChainResult, Mc2aError>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..chains)
+                .map(|chain_id| {
+                    let ctx = ctx.clone();
+                    scope.spawn(move || self.run_chain(model, spec, chain_id, &ctx))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .enumerate()
+                .map(|(chain_id, h)| {
+                    h.join()
+                        .unwrap_or_else(|_| Err(Mc2aError::ChainPanicked { chain_id }))
+                })
+                .collect()
+        });
+        joined.into_iter().collect()
+    }
 }
 
-/// Pure-Rust software chains (the reference implementation).
+/// Run one scalar software chain — shared by [`SoftwareBackend`] and
+/// the batched backend's fallback path for algorithms without a
+/// batched kernel (PAS, Async Gibbs), so both produce bit-identical
+/// chains.
+pub(crate) fn run_software_chain(
+    model: &dyn EnergyModel,
+    spec: &ChainSpec,
+    chain_id: usize,
+    ctx: &ChainCtx<'_>,
+) -> Result<ChainResult, Mc2aError> {
+    let t0 = Instant::now();
+    let algo = build_algo(spec.algo, spec.sampler, model, spec.pas_flips);
+    let mut chain = Chain::with_rng(model, algo, spec.schedule, spec.chain_rng(chain_id));
+    if let Some(x0) = &spec.init_state {
+        chain.set_state(x0);
+    }
+    let every = spec.observe_every.max(1);
+    let mut trace = Vec::new();
+    let mut done = 0usize;
+    while done < spec.steps {
+        if ctx.stop_requested() {
+            break;
+        }
+        let n = every.min(spec.steps - done);
+        chain.run(n);
+        done += n;
+        let objective = model.objective(&chain.x);
+        trace.push(objective);
+        ctx.emit(ProgressEvent {
+            chain_id,
+            step: done,
+            beta: spec.schedule.beta(done - 1),
+            objective,
+            best_objective: chain.best_objective,
+            updates: chain.stats.updates,
+        });
+    }
+    Ok(ChainResult {
+        chain_id,
+        best_objective: chain.best_objective,
+        steps: chain.step_count,
+        stats: chain.stats,
+        sim: None,
+        wall: t0.elapsed(),
+        marginal0: chain.marginal(0),
+        best_x: chain.best_assignment().to_vec(),
+        objective_trace: trace,
+    })
+}
+
+/// Pure-Rust software chains (the reference implementation),
+/// thread-per-chain.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SoftwareBackend;
 
@@ -115,45 +222,7 @@ impl ExecutionBackend for SoftwareBackend {
         chain_id: usize,
         ctx: &ChainCtx<'_>,
     ) -> Result<ChainResult, Mc2aError> {
-        let t0 = Instant::now();
-        let seed = spec.seed + chain_id as u64;
-        let algo = build_algo(spec.algo, spec.sampler, model, spec.pas_flips);
-        let mut chain = Chain::new(model, algo, spec.schedule, seed);
-        if let Some(x0) = &spec.init_state {
-            chain.set_state(x0);
-        }
-        let every = spec.observe_every.max(1);
-        let mut trace = Vec::new();
-        let mut done = 0usize;
-        while done < spec.steps {
-            if ctx.stop_requested() {
-                break;
-            }
-            let n = every.min(spec.steps - done);
-            chain.run(n);
-            done += n;
-            let objective = model.objective(&chain.x);
-            trace.push(objective);
-            ctx.emit(ProgressEvent {
-                chain_id,
-                step: done,
-                beta: spec.schedule.beta(done - 1),
-                objective,
-                best_objective: chain.best_objective,
-                updates: chain.stats.updates,
-            });
-        }
-        Ok(ChainResult {
-            chain_id,
-            best_objective: chain.best_objective,
-            steps: chain.step_count,
-            stats: chain.stats,
-            sim: None,
-            wall: t0.elapsed(),
-            marginal0: chain.marginal(0),
-            best_x: chain.best_assignment().to_vec(),
-            objective_trace: trace,
-        })
+        run_software_chain(model, spec, chain_id, ctx)
     }
 }
 
@@ -199,9 +268,8 @@ impl ExecutionBackend for AcceleratorBackend {
     ) -> Result<ChainResult, Mc2aError> {
         self.hw.validate().map_err(Mc2aError::InvalidHardware)?;
         let t0 = Instant::now();
-        let seed = spec.seed + chain_id as u64;
         let program = compile_opt(model, spec.algo, &self.hw, spec.pas_flips, self.optimize);
-        let mut sim = Simulator::new(self.hw, model, spec.pas_flips, seed);
+        let mut sim = Simulator::new(self.hw, model, spec.pas_flips, spec.chain_seed(chain_id));
         if let Some(x0) = &spec.init_state {
             sim.x.copy_from_slice(x0);
         }
@@ -316,8 +384,7 @@ impl ExecutionBackend for RuntimeBackend {
         let (batch, width) = (dims[0], dims[1]);
 
         let t0 = Instant::now();
-        let seed = spec.seed + chain_id as u64;
-        let mut rng = Rng::new(seed);
+        let mut rng = spec.chain_rng(chain_id);
         let mut x = match &spec.init_state {
             Some(x0) => x0.clone(),
             None => crate::energy::random_state(model, &mut rng),

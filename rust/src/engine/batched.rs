@@ -1,0 +1,312 @@
+//! The batched software backend: SoA chain batches scheduled by a
+//! work-stealing thread pool.
+//!
+//! Where [`SoftwareBackend`](crate::engine::SoftwareBackend) spawns
+//! one OS thread per chain (1024 chains ⇒ 1024 threads), this backend
+//! splits the fan-out into `ceil(chains / batch)` work items, each a
+//! [`ChainBatch`] of up to `batch` chains stepped together through the
+//! batched kernels, and multiplexes the items over a fixed pool of
+//! `threads` workers via [`scheduler::run_stealing`]. Per-variable
+//! costs (neighbor-index walks, virtual dispatch, parameter fetches)
+//! amortize across each batch; the pool keeps the core count, not the
+//! chain count, as the thread count.
+//!
+//! Chains are **bit-identical** to the scalar backend for every
+//! algorithm: Gibbs / Block Gibbs / MH run the batched kernels (whose
+//! per-chain RNG consumption matches the scalar kernels exactly), and
+//! PAS / Async Gibbs fall back to the shared scalar chain runner —
+//! still scheduled by the pool, so the thread-count benefit remains.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::coordinator::ChainResult;
+use crate::energy::EnergyModel;
+use crate::engine::backend::{run_software_chain, ChainCtx, ChainSpec, ExecutionBackend};
+use crate::engine::error::Mc2aError;
+use crate::engine::observer::ProgressEvent;
+use crate::engine::scheduler;
+use crate::mcmc::{batch_supported, build_batch_algo, ChainBatch};
+
+/// Default chains per work item when the caller does not choose one.
+pub const DEFAULT_BATCH: usize = 32;
+
+/// Structure-of-arrays software chains over a work-stealing pool.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchedSoftwareBackend {
+    batch: usize,
+    threads: usize,
+}
+
+impl BatchedSoftwareBackend {
+    /// Backend batching `batch` chains per work item (`batch ≥ 1`),
+    /// with the thread count defaulting to the machine's available
+    /// parallelism.
+    pub fn new(batch: usize) -> BatchedSoftwareBackend {
+        assert!(batch >= 1, "batch must be ≥ 1");
+        BatchedSoftwareBackend { batch, threads: 0 }
+    }
+
+    /// Fix the worker-pool size (0 = available parallelism).
+    pub fn with_threads(mut self, threads: usize) -> BatchedSoftwareBackend {
+        self.threads = threads;
+        self
+    }
+
+    /// Chains per work item.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Configured worker-pool size (0 = auto).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn resolve_threads(&self, items: usize) -> usize {
+        let t = if self.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.threads
+        };
+        t.clamp(1, items.max(1))
+    }
+}
+
+impl Default for BatchedSoftwareBackend {
+    fn default() -> Self {
+        BatchedSoftwareBackend::new(DEFAULT_BATCH)
+    }
+}
+
+/// Run one work item — the chain range `start..end` — to completion
+/// (or early stop), on the batched kernels when the algorithm has
+/// them, else chain-by-chain on the shared scalar runner.
+fn run_batch_item(
+    model: &dyn EnergyModel,
+    spec: &ChainSpec,
+    start: usize,
+    end: usize,
+    ctx: &ChainCtx<'_>,
+) -> Vec<(usize, Result<ChainResult, Mc2aError>)> {
+    if !batch_supported(spec.algo) {
+        return (start..end)
+            .map(|cid| (cid, run_software_chain(model, spec, cid, ctx)))
+            .collect();
+    }
+    let k = end - start;
+    let t0 = Instant::now();
+    let mut algo =
+        build_batch_algo(spec.algo, spec.sampler, model).expect("batched kernel exists");
+    let mut batch = ChainBatch::new(
+        model,
+        spec.schedule,
+        spec.seed,
+        start,
+        k,
+        spec.init_state.as_deref(),
+    );
+    let every = spec.observe_every.max(1);
+    let mut traces = vec![Vec::new(); batch.k()];
+    let mut done = 0usize;
+    while done < spec.steps {
+        if ctx.stop_requested() {
+            break;
+        }
+        let n = every.min(spec.steps - done);
+        batch.run(&mut *algo, n);
+        done += n;
+        let beta = batch.last_beta();
+        for c in 0..batch.k() {
+            traces[c].push(batch.objectives[c]);
+            ctx.emit(ProgressEvent {
+                chain_id: batch.chain_id(c),
+                step: done,
+                beta,
+                objective: batch.objectives[c],
+                best_objective: batch.best_objectives[c],
+                updates: batch.stats[c].updates,
+            });
+        }
+    }
+    let wall = t0.elapsed();
+    traces
+        .into_iter()
+        .enumerate()
+        .map(|(c, objective_trace)| {
+            (
+                start + c,
+                Ok(ChainResult {
+                    chain_id: start + c,
+                    best_objective: batch.best_objectives[c],
+                    steps: batch.step_count,
+                    stats: batch.stats[c],
+                    sim: None,
+                    wall,
+                    marginal0: batch.marginal0(c),
+                    best_x: batch.best_state(c),
+                    objective_trace,
+                }),
+            )
+        })
+        .collect()
+}
+
+impl ExecutionBackend for BatchedSoftwareBackend {
+    fn name(&self) -> &'static str {
+        "batched"
+    }
+
+    /// A single chain is a batch of one; the scalar runner produces
+    /// the identical trajectory, so use it directly.
+    fn run_chain(
+        &self,
+        model: &dyn EnergyModel,
+        spec: &ChainSpec,
+        chain_id: usize,
+        ctx: &ChainCtx<'_>,
+    ) -> Result<ChainResult, Mc2aError> {
+        run_software_chain(model, spec, chain_id, ctx)
+    }
+
+    fn run_chains(
+        &self,
+        model: &dyn EnergyModel,
+        spec: &ChainSpec,
+        chains: usize,
+        ctx: &ChainCtx<'_>,
+    ) -> Result<Vec<ChainResult>, Mc2aError> {
+        // Algorithms without a batched kernel run chain-by-chain, so
+        // give the pool chain-granularity items to steal — otherwise a
+        // whole batch of scalar chains would serialize on one worker.
+        let batch = if batch_supported(spec.algo) {
+            self.batch.max(1)
+        } else {
+            1
+        };
+        let items: Vec<(usize, usize)> = (0..chains)
+            .step_by(batch)
+            .map(|start| (start, (start + batch).min(chains)))
+            .collect();
+        let threads = self.resolve_threads(items.len());
+        let slots: Mutex<Vec<Option<Result<ChainResult, Mc2aError>>>> =
+            Mutex::new((0..chains).map(|_| None).collect());
+        scheduler::run_stealing(threads, items, |_w, (start, end)| {
+            let out = catch_unwind(AssertUnwindSafe(|| {
+                run_batch_item(model, spec, start, end, ctx)
+            }));
+            let mut slots = slots.lock().unwrap();
+            match out {
+                Ok(results) => {
+                    for (cid, r) in results {
+                        slots[cid] = Some(r);
+                    }
+                }
+                Err(_) => {
+                    for cid in start..end {
+                        slots[cid] = Some(Err(Mc2aError::ChainPanicked { chain_id: cid }));
+                    }
+                }
+            }
+        });
+        slots
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .enumerate()
+            .map(|(chain_id, slot)| slot.unwrap_or(Err(Mc2aError::ChainPanicked { chain_id })))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::PottsGrid;
+    use crate::engine::backend::SoftwareBackend;
+    use crate::mcmc::{AlgoKind, BetaSchedule, SamplerKind};
+    use std::sync::atomic::AtomicBool;
+
+    fn spec(algo: AlgoKind, steps: usize) -> ChainSpec {
+        ChainSpec {
+            algo,
+            sampler: SamplerKind::Gumbel,
+            schedule: BetaSchedule::Constant(0.8),
+            steps,
+            seed: 0xBEEF,
+            pas_flips: 4,
+            observe_every: 5,
+            init_state: None,
+        }
+    }
+
+    fn run(
+        backend: &dyn ExecutionBackend,
+        model: &dyn EnergyModel,
+        spec: &ChainSpec,
+        chains: usize,
+    ) -> Vec<ChainResult> {
+        let stop = AtomicBool::new(false);
+        let ctx = ChainCtx {
+            stop: &stop,
+            events: None,
+        };
+        backend.run_chains(model, spec, chains, &ctx).unwrap()
+    }
+
+    #[test]
+    fn matches_scalar_backend_for_every_batch_and_thread_count() {
+        let m = PottsGrid::new(5, 5, 2, 0.6);
+        let spec = spec(AlgoKind::Gibbs, 20);
+        let reference = run(&SoftwareBackend, &m, &spec, 7);
+        for batch in [1, 2, 3, 7, 16] {
+            for threads in [1, 2, 4] {
+                let got = run(
+                    &BatchedSoftwareBackend::new(batch).with_threads(threads),
+                    &m,
+                    &spec,
+                    7,
+                );
+                for (a, b) in reference.iter().zip(&got) {
+                    assert_eq!(a.chain_id, b.chain_id);
+                    assert_eq!(a.best_x, b.best_x, "batch={batch} threads={threads}");
+                    assert_eq!(a.best_objective, b.best_objective);
+                    assert_eq!(a.marginal0, b.marginal0);
+                    assert_eq!(a.objective_trace, b.objective_trace);
+                    assert_eq!(a.steps, b.steps);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pas_falls_back_to_scalar_chains() {
+        let m = PottsGrid::new(4, 4, 2, 0.6);
+        let spec = spec(AlgoKind::Pas, 10);
+        let reference = run(&SoftwareBackend, &m, &spec, 4);
+        let got = run(&BatchedSoftwareBackend::new(2).with_threads(2), &m, &spec, 4);
+        for (a, b) in reference.iter().zip(&got) {
+            assert_eq!(a.best_x, b.best_x);
+            assert_eq!(a.objective_trace, b.objective_trace);
+        }
+    }
+
+    #[test]
+    fn stop_flag_halts_batches_at_observation_boundaries() {
+        let m = PottsGrid::new(6, 6, 2, 0.5);
+        let mut s = spec(AlgoKind::Gibbs, 1_000_000);
+        s.observe_every = 1;
+        let stop = AtomicBool::new(true); // raised before the run starts
+        let ctx = ChainCtx {
+            stop: &stop,
+            events: None,
+        };
+        let results = BatchedSoftwareBackend::new(4)
+            .run_chains(&m, &s, 8, &ctx)
+            .unwrap();
+        for r in results {
+            assert_eq!(r.steps, 0, "chain {} ignored the stop flag", r.chain_id);
+        }
+    }
+}

@@ -36,6 +36,9 @@ pub enum Mc2aError {
         /// Which chain (seed-stream index) died.
         chain_id: usize,
     },
+    /// The backend's whole-run coordinator panicked outside any
+    /// single chain (e.g. while partitioning work items).
+    BackendPanicked,
 }
 
 impl fmt::Display for Mc2aError {
@@ -50,6 +53,9 @@ impl fmt::Display for Mc2aError {
             Mc2aError::Runtime(msg) => write!(f, "PJRT runtime error: {msg}"),
             Mc2aError::ChainPanicked { chain_id } => {
                 write!(f, "chain {chain_id} worker thread panicked")
+            }
+            Mc2aError::BackendPanicked => {
+                write!(f, "backend run coordinator panicked outside any chain")
             }
         }
     }

@@ -23,8 +23,12 @@
 //! The moving parts:
 //!
 //! * [`ExecutionBackend`] — pluggable chain executors
-//!   ([`SoftwareBackend`], [`AcceleratorBackend`], [`RuntimeBackend`],
-//!   or any user type via [`EngineBuilder::backend`]),
+//!   ([`SoftwareBackend`], [`BatchedSoftwareBackend`],
+//!   [`AcceleratorBackend`], [`RuntimeBackend`], or any user type via
+//!   [`EngineBuilder::backend`]); a backend runs single chains and may
+//!   override the whole-run fan-out,
+//! * [`scheduler`] — the work-stealing thread pool the batched backend
+//!   multiplexes `chains / batch` work items over,
 //! * [`EngineBuilder`] — validates the configuration up front and
 //!   returns typed [`Mc2aError`]s instead of panicking,
 //! * [`ChainObserver`] — streaming progress + convergence diagnostics
@@ -32,13 +36,16 @@
 //! * [`registry`] — the named-workload table the CLI and tests share.
 
 pub mod backend;
+pub mod batched;
 pub mod error;
 pub mod observer;
 pub mod registry;
+pub mod scheduler;
 
 pub use backend::{
     AcceleratorBackend, ChainCtx, ChainSpec, ExecutionBackend, RuntimeBackend, SoftwareBackend,
 };
+pub use batched::BatchedSoftwareBackend;
 pub use error::Mc2aError;
 pub use observer::{
     ChainObserver, ConvergenceStop, DiagnosticsReport, NullObserver, ObserverAction,
@@ -76,6 +83,7 @@ impl ModelHandle<'_> {
 /// Backend selection held by the builder until `build()` validates it.
 enum BackendChoice {
     Software,
+    Batched,
     Accelerator(AcceleratorBackend),
     Runtime(PathBuf),
     Custom(Box<dyn ExecutionBackend>),
@@ -99,6 +107,8 @@ pub struct EngineBuilder<'m> {
     observe_every: usize,
     init_state: Option<Vec<u32>>,
     backend: BackendChoice,
+    batch: Option<usize>,
+    threads: Option<usize>,
     observer: Option<Box<dyn ChainObserver>>,
 }
 
@@ -117,6 +127,8 @@ impl<'m> EngineBuilder<'m> {
             observe_every: 0,
             init_state: None,
             backend: BackendChoice::Software,
+            batch: None,
+            threads: None,
             observer: None,
         }
     }
@@ -146,8 +158,10 @@ impl<'m> EngineBuilder<'m> {
         self
     }
 
-    /// Number of independent chains fanned out over OS threads
-    /// (default 1; chain `i` is seeded with `seed + i`).
+    /// Number of independent chains (default 1). Chain `i` draws from
+    /// the RNG stream `Rng::fork(seed, i)` on every backend, so its
+    /// trajectory is bit-identical regardless of thread count, batch
+    /// size, or backend.
     pub fn chains(mut self, chains: usize) -> Self {
         self.chains = chains;
         self
@@ -185,9 +199,39 @@ impl<'m> EngineBuilder<'m> {
         self
     }
 
-    /// Run on the pure-Rust software chains (the default).
+    /// Run on the pure-Rust software chains (the default),
+    /// thread-per-chain.
     pub fn software(mut self) -> Self {
         self.backend = BackendChoice::Software;
+        self
+    }
+
+    /// Run on the batched software backend: structure-of-arrays chain
+    /// batches multiplexed over a work-stealing thread pool. Batch
+    /// size defaults to `min(chains, 32)`; tune with
+    /// [`EngineBuilder::batch`] / [`EngineBuilder::threads`].
+    pub fn batched(mut self) -> Self {
+        self.backend = BackendChoice::Batched;
+        self
+    }
+
+    /// Chains per batched work item (implies the batched backend).
+    /// `build()` rejects 0 and values above the chain count.
+    pub fn batch(mut self, batch: usize) -> Self {
+        self.batch = Some(batch);
+        if matches!(self.backend, BackendChoice::Software) {
+            self.backend = BackendChoice::Batched;
+        }
+        self
+    }
+
+    /// Worker-pool size for the batched backend (implies the batched
+    /// backend; default: the machine's available parallelism).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads);
+        if matches!(self.backend, BackendChoice::Software) {
+            self.backend = BackendChoice::Batched;
+        }
         self
     }
 
@@ -235,8 +279,41 @@ impl<'m> EngineBuilder<'m> {
                 }
             }
         }
+        if let Some(batch) = self.batch {
+            if batch == 0 {
+                return Err(Mc2aError::InvalidConfig("batch must be ≥ 1".into()));
+            }
+            if batch > self.chains {
+                return Err(Mc2aError::InvalidConfig(format!(
+                    "batch ({batch}) must not exceed chains ({})",
+                    self.chains
+                )));
+            }
+        }
+        if self.threads == Some(0) {
+            return Err(Mc2aError::InvalidConfig("threads must be ≥ 1".into()));
+        }
+        // `batch`/`threads` configure the batched software backend
+        // only; silently ignoring them on another backend would let
+        // `--backend sim --batch 8` run unbatched without a word.
+        if (self.batch.is_some() || self.threads.is_some())
+            && !matches!(self.backend, BackendChoice::Batched)
+        {
+            return Err(Mc2aError::InvalidConfig(
+                "batch/threads apply to the batched software backend only".into(),
+            ));
+        }
         let backend: Box<dyn ExecutionBackend> = match self.backend {
             BackendChoice::Software => Box::new(SoftwareBackend),
+            BackendChoice::Batched => {
+                let batch = self
+                    .batch
+                    .unwrap_or_else(|| batched::DEFAULT_BATCH.min(self.chains));
+                Box::new(
+                    BatchedSoftwareBackend::new(batch)
+                        .with_threads(self.threads.unwrap_or(0)),
+                )
+            }
             BackendChoice::Accelerator(ab) => {
                 ab.hw().validate().map_err(Mc2aError::InvalidHardware)?;
                 Box::new(ab)
@@ -322,9 +399,11 @@ impl<'m> Engine<'m> {
         self.workload
     }
 
-    /// Fan the chains out over OS threads, stream events to the
-    /// observer, and gather per-chain results. Re-running the same
-    /// engine reproduces the same seeds and therefore the same chains.
+    /// Hand the fan-out to the backend ([`ExecutionBackend::run_chains`]
+    /// — OS thread per chain by default, a work-stealing batch pool on
+    /// the batched backend), stream events to the observer, and gather
+    /// per-chain results. Re-running the same engine reproduces the
+    /// same seeds and therefore the same chains.
     pub fn run(&mut self) -> Result<RunMetrics, Mc2aError> {
         let t0 = Instant::now();
         let model = self.model.get();
@@ -335,23 +414,18 @@ impl<'m> Engine<'m> {
         let stop = AtomicBool::new(false);
         let (tx, rx) = mpsc::channel::<ProgressEvent>();
 
-        let joined: Vec<Result<ChainResult, Mc2aError>> = std::thread::scope(|scope| {
-            let mut handles = Vec::with_capacity(n);
-            for chain_id in 0..n {
-                let tx = tx.clone();
-                let stop = &stop;
-                handles.push(scope.spawn(move || {
-                    let ctx = ChainCtx {
-                        stop,
-                        events: Some(tx),
-                    };
-                    backend.run_chain(model, spec, chain_id, &ctx)
-                }));
-            }
-            drop(tx);
+        let result: Result<Vec<ChainResult>, Mc2aError> = std::thread::scope(|scope| {
+            let ctx = ChainCtx {
+                stop: &stop,
+                events: Some(tx),
+            };
+            // The backend owns its scheduling; the coordinating thread
+            // runs the event loop until every sender is gone (the
+            // backend thread drops `ctx` when `run_chains` returns).
+            let handle = scope.spawn(move || backend.run_chains(model, spec, n, &ctx));
 
-            // Event loop on the coordinating thread: diagnostics are
-            // computed here, so observers can hold plain mutable state.
+            // Diagnostics are computed here, so observers can hold
+            // plain mutable state.
             let mut tracker = DiagnosticsTracker::new(n);
             while let Ok(event) = rx.recv() {
                 let diag = tracker.record(&event);
@@ -367,23 +441,17 @@ impl<'m> Engine<'m> {
                 }
             }
 
-            handles
-                .into_iter()
-                .enumerate()
-                .map(|(chain_id, h)| {
-                    h.join()
-                        .unwrap_or_else(|_| Err(Mc2aError::ChainPanicked { chain_id }))
-                })
-                .collect()
+            // Per-chain panics are already mapped to `ChainPanicked`
+            // inside `run_chains`; a join failure here means the
+            // backend's coordinator itself died.
+            handle.join().unwrap_or(Err(Mc2aError::BackendPanicked))
         });
 
-        let mut chains = Vec::with_capacity(n);
-        for result in joined {
-            let chain = result?;
+        let chains = result?;
+        for chain in &chains {
             if let Some(obs) = self.observer.as_deref_mut() {
-                obs.on_chain_done(&chain);
+                obs.on_chain_done(chain);
             }
-            chains.push(chain);
         }
         Ok(RunMetrics {
             chains,
@@ -432,6 +500,46 @@ mod tests {
             assert!(rep.cycles > 0);
             assert_eq!(rep.updates, 50 * 16);
         }
+    }
+
+    #[test]
+    fn batched_backend_matches_software_backend() {
+        let m = PottsGrid::new(6, 6, 2, 0.4);
+        let run = |b: EngineBuilder| b.steps(60).chains(6).seed(9).build().unwrap().run().unwrap();
+        let a = run(Engine::for_model(&m));
+        let b = run(Engine::for_model(&m).batch(4).threads(2));
+        for (x, y) in a.chains.iter().zip(&b.chains) {
+            assert_eq!(x.best_x, y.best_x);
+            assert_eq!(x.best_objective, y.best_objective);
+            assert_eq!(x.objective_trace, y.objective_trace);
+            assert_eq!(x.marginal0, y.marginal0);
+        }
+    }
+
+    #[test]
+    fn builder_validates_batch_and_threads() {
+        let m = PottsGrid::new(3, 3, 2, 0.5);
+        assert!(matches!(
+            Engine::for_model(&m).chains(2).batch(0).build(),
+            Err(Mc2aError::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            Engine::for_model(&m).chains(2).batch(4).build(),
+            Err(Mc2aError::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            Engine::for_model(&m).chains(2).threads(0).build(),
+            Err(Mc2aError::InvalidConfig(_))
+        ));
+        let e = Engine::for_model(&m)
+            .chains(4)
+            .batch(4)
+            .threads(2)
+            .build()
+            .unwrap();
+        assert_eq!(e.backend_name(), "batched");
+        // `.batched()` alone clamps the default batch to the chain count.
+        assert!(Engine::for_model(&m).chains(2).batched().build().is_ok());
     }
 
     #[test]

@@ -23,15 +23,20 @@
 //!
 //! * [`engine`] — **the public API**: [`engine::EngineBuilder`] run
 //!   configuration, the [`engine::ExecutionBackend`] trait with
-//!   software / accelerator-sim / PJRT-runtime implementations, the
-//!   [`engine::ChainObserver`] streaming-diagnostics API, the typed
-//!   [`engine::Mc2aError`], and the named-workload [`engine::registry`].
+//!   software / batched-software / accelerator-sim / PJRT-runtime
+//!   implementations, the [`engine::scheduler`] work-stealing thread
+//!   pool that multiplexes `chains / batch` work items over a fixed
+//!   worker set, the [`engine::ChainObserver`] streaming-diagnostics
+//!   API, the typed [`engine::Mc2aError`], and the named-workload
+//!   [`engine::registry`].
 //! * [`energy`] — discrete energy models (Ising/Potts grids, Bayesian
 //!   networks, combinatorial-optimization graphs, RBMs) behind the common
-//!   [`energy::EnergyModel`] trait.
+//!   [`energy::EnergyModel`] trait, with batched (structure-of-arrays)
+//!   conditional-energy kernels for the many-chain path.
 //! * [`mcmc`] — the MCMC algorithm zoo the paper evaluates: MH, Gibbs,
 //!   Block Gibbs, Asynchronous Gibbs and the gradient-based PAS sampler,
-//!   plus the CDF and Gumbel-max categorical samplers and the
+//!   plus the CDF and Gumbel-max categorical samplers (scalar and
+//!   batched), the SoA [`mcmc::ChainBatch`] many-chain state, and the
 //!   convergence metrics (accuracy traces, split R-hat, ESS).
 //! * [`roofline`] — the paper's 3D roofline model (Compute Intensity ×
 //!   Memory Intensity × Throughput) and the design-space exploration that

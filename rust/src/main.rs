@@ -2,10 +2,11 @@
 //!
 //! ```text
 //! mc2a table1 [--full]
-//! mc2a bench <fig5|fig6|fig11|fig12|fig13|fig14|fig15|headline|all> [--full]
+//! mc2a bench <fig5|fig6|fig11|fig12|fig13|fig14|fig15|chains|headline|all> [--full]
 //! mc2a run --workload <name> [--algo mh|gibbs|bg|ag|pas]
 //!          [--sampler cdf|gumbel|lut] [--steps N] [--chains N]
-//!          [--backend sim|sw|runtime] [--beta B] [--seed S] [--observe N]
+//!          [--backend sim|sw|batched|runtime] [--batch K] [--threads T]
+//!          [--beta B] [--seed S] [--observe N]
 //! mc2a workloads
 //! mc2a roofline [--workload <name>]
 //! mc2a dse
@@ -30,10 +31,11 @@ fn usage() -> ! {
 
 USAGE:
   mc2a table1 [--full]
-  mc2a bench <fig5|fig6|fig11|fig12|fig13|fig14|fig15|headline|all> [--full]
+  mc2a bench <fig5|fig6|fig11|fig12|fig13|fig14|fig15|chains|headline|all> [--full]
   mc2a run --workload <name> [--algo mh|gibbs|bg|ag|pas]
            [--sampler cdf|gumbel|lut] [--steps N] [--chains N]
-           [--backend sim|sw|runtime] [--beta B] [--seed S] [--observe N]
+           [--backend sim|sw|batched|runtime] [--batch K] [--threads T]
+           [--beta B] [--seed S] [--observe N]
   mc2a workloads
   mc2a roofline [--workload <name>]
   mc2a dse
@@ -78,17 +80,18 @@ fn cmd_bench(args: &[String]) -> Result<(), Mc2aError> {
             "fig13" => bench::fig13(),
             "fig14" => bench::fig14(quick),
             "fig15" => bench::fig15(quick),
+            "chains" => bench::many_chains(quick)?,
             "headline" => bench::headline(quick),
             other => {
                 return Err(Mc2aError::InvalidConfig(format!(
-                    "unknown figure {other} (fig5|fig6|fig11|fig12|fig13|fig14|fig15|headline|all)"
+                    "unknown figure {other} (fig5|fig6|fig11|fig12|fig13|fig14|fig15|chains|headline|all)"
                 )))
             }
         })
     };
     if which == "all" {
         for f in [
-            "fig5", "fig6", "fig11", "fig12", "fig13", "fig14", "fig15", "headline",
+            "fig5", "fig6", "fig11", "fig12", "fig13", "fig14", "fig15", "chains", "headline",
         ] {
             println!("{}", run(f)?);
         }
@@ -124,18 +127,38 @@ fn cmd_run(args: &[String]) -> Result<(), Mc2aError> {
         .seed(seed)
         .schedule(BetaSchedule::Constant(beta));
     let hw = HwConfig::paper_default();
+    let batch: Option<usize> = parsed_flag(args, "--batch")?;
+    let threads: Option<usize> = parsed_flag(args, "--threads")?;
     builder = match flag_value(args, "--backend").as_deref() {
         Some("sim") => builder.accelerator(hw),
         Some("runtime") => {
             builder.runtime(flag_value(args, "--artifacts").unwrap_or_else(|| "artifacts".into()))
         }
+        Some("batched") => builder.batched(),
+        // An *explicit* `sw` with batch knobs is a contradiction, not
+        // an auto-switch — same rule build() applies to sim/runtime.
+        Some("sw") if batch.is_some() || threads.is_some() => {
+            return Err(Mc2aError::InvalidConfig(
+                "--batch/--threads require the batched backend (drop --backend sw \
+                 or use --backend batched)"
+                    .into(),
+            ))
+        }
+        // With no backend flag, `--batch`/`--threads` below switch the
+        // default software backend to batched via the builder.
         Some("sw") | None => builder.software(),
         Some(other) => {
             return Err(Mc2aError::InvalidConfig(format!(
-                "unknown backend {other:?} (sim|sw|runtime)"
+                "unknown backend {other:?} (sim|sw|batched|runtime)"
             )))
         }
     };
+    if let Some(k) = batch {
+        builder = builder.batch(k);
+    }
+    if let Some(t) = threads {
+        builder = builder.threads(t);
+    }
     if let Some(every) = parsed_flag::<usize>(args, "--observe")? {
         builder = builder
             .observe_every(every)

@@ -1,0 +1,508 @@
+//! Batched many-chain execution: a structure-of-arrays [`ChainBatch`]
+//! holding K chains' states column-major per variable, plus batched
+//! step loops ([`BatchMcmc`]) for the Gibbs-family algorithms and MH.
+//!
+//! The MC²A roofline (§II) and Sountsov & Carroll's many-chain study
+//! both make the same point: MCMC throughput on modern hardware is won
+//! by keeping many independent chains resident and amortizing every
+//! per-variable cost (neighbor-index walks, parameter fetches, virtual
+//! dispatch) across the whole batch. The SoA layout puts chain `c`'s
+//! value of RV `i` at `states[i * K + c]`, so one neighbor lookup
+//! serves K chains and the inner loops stream contiguous columns.
+//!
+//! **Bit-identity invariant:** every chain owns its RNG
+//! ([`crate::rng::Rng::fork`]`(seed, chain_id)`), and the batched
+//! kernels consume each chain's stream in exactly the order the scalar
+//! kernels do. A chain's trajectory is therefore identical whether it
+//! runs on the scalar thread-per-chain backend, in a batch of 1, or in
+//! a batch of 1024 — the equivalence tests in
+//! `tests/integration_batched.rs` pin this down per workload.
+
+use crate::energy::{BatchScratch, EnergyModel};
+use crate::graph::color_greedy;
+use crate::mcmc::sampler::CategoricalSampler;
+use crate::mcmc::{AlgoKind, BetaSchedule, SamplerKind, StepStats};
+use crate::rng::Rng;
+
+/// A batched MCMC transition kernel: one call advances all `k` chains
+/// of an SoA state block by one step (one sweep).
+pub trait BatchMcmc: Send {
+    /// Perform one step for every chain. `states[i * k + c]` is chain
+    /// `c`'s value of RV `i`; `betas[c]`, `rngs[c]` and `stats[c]` are
+    /// chain `c`'s inverse temperature, RNG stream and statistics.
+    fn step_batch(
+        &mut self,
+        model: &dyn EnergyModel,
+        states: &mut [u32],
+        k: usize,
+        betas: &[f32],
+        rngs: &mut [Rng],
+        stats: &mut [StepStats],
+    );
+
+    /// Algorithm name.
+    fn name(&self) -> &'static str;
+}
+
+/// True when [`build_batch_algo`] has a batched kernel for `kind`
+/// (PAS and Async Gibbs fall back to scalar chains).
+pub fn batch_supported(kind: AlgoKind) -> bool {
+    matches!(kind, AlgoKind::Gibbs | AlgoKind::BlockGibbs | AlgoKind::Mh)
+}
+
+/// Build the batched kernel for `kind`, or `None` when only the scalar
+/// path exists.
+pub fn build_batch_algo(
+    kind: AlgoKind,
+    sampler: SamplerKind,
+    model: &dyn EnergyModel,
+) -> Option<Box<dyn BatchMcmc>> {
+    match kind {
+        AlgoKind::Gibbs => Some(Box::new(BatchGibbs::new(sampler.build()))),
+        AlgoKind::BlockGibbs => Some(Box::new(BatchBlockGibbs::new(sampler.build(), model))),
+        AlgoKind::Mh => Some(Box::new(BatchMh::new())),
+        AlgoKind::AsyncGibbs | AlgoKind::Pas => None,
+    }
+}
+
+/// K chains' worth of MCMC state in structure-of-arrays form: the
+/// software twin of K parallel MC²A cores sharing one compiled model.
+///
+/// Layout: `states[i * k + c]` (column-major per variable), so a
+/// variable's K values are contiguous. Per-chain scalars (β, current
+/// and best objective, RNG, statistics, RV-0 histogram) live in dense
+/// K-length vectors.
+pub struct ChainBatch<'m> {
+    model: &'m dyn EnergyModel,
+    k: usize,
+    first_chain: usize,
+    /// SoA states: `states[i * k + c]`.
+    states: Vec<u32>,
+    /// Per-chain inverse temperature at the current step. All chains
+    /// follow `schedule` today; the per-chain storage is the hook for
+    /// parallel tempering.
+    betas: Vec<f32>,
+    schedule: BetaSchedule,
+    /// Steps taken (uniform across the batch).
+    pub step_count: usize,
+    rngs: Vec<Rng>,
+    /// Per-chain cumulative statistics.
+    pub stats: Vec<StepStats>,
+    /// Per-chain objective of the current state.
+    pub objectives: Vec<f64>,
+    /// Per-chain best objective seen so far.
+    pub best_objectives: Vec<f64>,
+    /// Best assignments, same SoA layout as `states`.
+    best_states: Vec<u32>,
+    /// RV-0 state histogram per chain: `hist0[c * S0 + s]`.
+    hist0: Vec<u64>,
+    s0: usize,
+    gather: Vec<u32>,
+}
+
+impl<'m> ChainBatch<'m> {
+    /// Create a batch of `k` chains with ids `first_chain ..
+    /// first_chain + k`. Each chain draws its random initial state from
+    /// `Rng::fork(seed, chain_id)` exactly as the scalar path does;
+    /// `init` (when given) then overwrites every chain's state, again
+    /// mirroring the scalar `Chain::new` + `set_state` sequence so RNG
+    /// streams stay aligned.
+    pub fn new(
+        model: &'m dyn EnergyModel,
+        schedule: BetaSchedule,
+        seed: u64,
+        first_chain: usize,
+        k: usize,
+        init: Option<&[u32]>,
+    ) -> ChainBatch<'m> {
+        assert!(k >= 1);
+        let n = model.num_vars();
+        let s0 = model.num_states(0);
+        let mut states = vec![0u32; n * k];
+        let mut rngs = Vec::with_capacity(k);
+        let mut objectives = Vec::with_capacity(k);
+        for c in 0..k {
+            let mut rng = Rng::fork(seed, (first_chain + c) as u64);
+            let mut x = crate::energy::random_state(model, &mut rng);
+            if let Some(x0) = init {
+                x.copy_from_slice(x0);
+            }
+            for (i, &v) in x.iter().enumerate() {
+                states[i * k + c] = v;
+            }
+            objectives.push(model.objective(&x));
+            rngs.push(rng);
+        }
+        let best_states = states.clone();
+        let best_objectives = objectives.clone();
+        ChainBatch {
+            model,
+            k,
+            first_chain,
+            states,
+            betas: vec![schedule.beta(0); k],
+            schedule,
+            step_count: 0,
+            rngs,
+            stats: vec![StepStats::default(); k],
+            objectives,
+            best_objectives,
+            best_states,
+            hist0: vec![0; s0 * k],
+            s0,
+            gather: vec![0; n],
+        }
+    }
+
+    /// Number of chains in the batch.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Global chain id of batch slot `c`.
+    pub fn chain_id(&self, c: usize) -> usize {
+        self.first_chain + c
+    }
+
+    /// β at the last completed step (what a progress event reports).
+    pub fn last_beta(&self) -> f32 {
+        self.schedule.beta(self.step_count.saturating_sub(1))
+    }
+
+    /// Gather chain `c`'s current assignment out of the SoA block.
+    pub fn chain_state(&self, c: usize, out: &mut Vec<u32>) {
+        out.clear();
+        out.extend(self.states[c..].iter().step_by(self.k).copied());
+    }
+
+    /// Chain `c`'s best assignment so far.
+    pub fn best_state(&self, c: usize) -> Vec<u32> {
+        self.best_states[c..].iter().step_by(self.k).copied().collect()
+    }
+
+    /// Empirical marginal of RV 0 for chain `c` (the convergence smoke
+    /// signal every `ChainResult` carries).
+    pub fn marginal0(&self, c: usize) -> Vec<f64> {
+        let span = &self.hist0[c * self.s0..(c + 1) * self.s0];
+        let total: u64 = span.iter().sum();
+        span.iter().map(|&v| v as f64 / total.max(1) as f64).collect()
+    }
+
+    /// Run `n` steps of `algo`, updating histograms, objectives and
+    /// best-so-far per chain — the batched twin of `Chain::run`.
+    pub fn run(&mut self, algo: &mut dyn BatchMcmc, n: usize) {
+        let nv = self.model.num_vars();
+        for _ in 0..n {
+            let beta = self.schedule.beta(self.step_count);
+            self.betas.fill(beta);
+            algo.step_batch(
+                self.model,
+                &mut self.states,
+                self.k,
+                &self.betas,
+                &mut self.rngs,
+                &mut self.stats,
+            );
+            self.step_count += 1;
+            for c in 0..self.k {
+                self.hist0[c * self.s0 + self.states[c] as usize] += 1;
+                self.gather.clear();
+                self.gather
+                    .extend(self.states[c..].iter().step_by(self.k).copied());
+                let obj = self.model.objective(&self.gather);
+                self.objectives[c] = obj;
+                if obj > self.best_objectives[c] {
+                    self.best_objectives[c] = obj;
+                    for i in 0..nv {
+                        self.best_states[i * self.k + c] = self.states[i * self.k + c];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Batched sequential Gibbs: one step = one systematic sweep; every
+/// variable's conditional is built for all K chains at once
+/// ([`EnergyModel::local_energies_batch`]) and sampled K-wide
+/// ([`CategoricalSampler::sample_batch`]).
+pub struct BatchGibbs {
+    sampler: Box<dyn CategoricalSampler>,
+    e: Vec<f32>,
+    scratch: BatchScratch,
+    out: Vec<u32>,
+}
+
+impl BatchGibbs {
+    /// Batched Gibbs kernel backed by `sampler`.
+    pub fn new(sampler: Box<dyn CategoricalSampler>) -> BatchGibbs {
+        BatchGibbs {
+            sampler,
+            e: Vec::new(),
+            scratch: BatchScratch::default(),
+            out: Vec::new(),
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn update_var(
+        &mut self,
+        model: &dyn EnergyModel,
+        states: &mut [u32],
+        k: usize,
+        i: usize,
+        betas: &[f32],
+        rngs: &mut [Rng],
+        stats: &mut [StepStats],
+    ) {
+        let s = model.num_states(i);
+        model.local_energies_batch(states, k, i, &mut self.e, &mut self.scratch);
+        self.out.resize(k, 0);
+        self.sampler.sample_batch(&self.e, s, betas, rngs, &mut self.out);
+        states[i * k..(i + 1) * k].copy_from_slice(&self.out);
+        let mut cost = model.update_cost(i);
+        cost.ops += self.sampler.ops_per_sample(s);
+        for st in stats.iter_mut() {
+            st.updates += 1;
+            st.accepted += 1;
+            st.cost.add(cost);
+        }
+    }
+}
+
+impl BatchMcmc for BatchGibbs {
+    fn step_batch(
+        &mut self,
+        model: &dyn EnergyModel,
+        states: &mut [u32],
+        k: usize,
+        betas: &[f32],
+        rngs: &mut [Rng],
+        stats: &mut [StepStats],
+    ) {
+        for i in 0..model.num_vars() {
+            self.update_var(model, states, k, i, betas, rngs, stats);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "Gibbs"
+    }
+}
+
+/// Batched Block Gibbs: the same greedy coloring as the scalar kernel,
+/// swept color class by color class with K-wide conditional builds.
+pub struct BatchBlockGibbs {
+    inner: BatchGibbs,
+    blocks: Vec<Vec<u32>>,
+}
+
+impl BatchBlockGibbs {
+    /// Build by coloring `model`'s interaction graph greedily.
+    pub fn new(sampler: Box<dyn CategoricalSampler>, model: &dyn EnergyModel) -> BatchBlockGibbs {
+        BatchBlockGibbs {
+            inner: BatchGibbs::new(sampler),
+            blocks: color_greedy(model.interaction()).blocks(),
+        }
+    }
+}
+
+impl BatchMcmc for BatchBlockGibbs {
+    fn step_batch(
+        &mut self,
+        model: &dyn EnergyModel,
+        states: &mut [u32],
+        k: usize,
+        betas: &[f32],
+        rngs: &mut [Rng],
+        stats: &mut [StepStats],
+    ) {
+        for block in &self.blocks {
+            for &iu in block {
+                self.inner
+                    .update_var(model, states, k, iu as usize, betas, rngs, stats);
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "BG"
+    }
+}
+
+/// Batched single-site Metropolis-Hastings. Each chain keeps its own
+/// shuffled visit order (exactly as the scalar kernel evolves it), so
+/// the sweep iterates position-outer / chain-inner: neighbor gathers
+/// are per-chain, but proposal evaluation and acceptance still run
+/// K-wide per position.
+pub struct BatchMh {
+    /// Chain-major visit orders: `orders[c * n + idx]`.
+    orders: Vec<u32>,
+    scratch: BatchScratch,
+}
+
+impl BatchMh {
+    /// New batched MH kernel.
+    pub fn new() -> BatchMh {
+        BatchMh {
+            orders: Vec::new(),
+            scratch: BatchScratch::default(),
+        }
+    }
+}
+
+impl Default for BatchMh {
+    fn default() -> Self {
+        BatchMh::new()
+    }
+}
+
+impl BatchMcmc for BatchMh {
+    fn step_batch(
+        &mut self,
+        model: &dyn EnergyModel,
+        states: &mut [u32],
+        k: usize,
+        betas: &[f32],
+        rngs: &mut [Rng],
+        stats: &mut [StepStats],
+    ) {
+        let n = model.num_vars();
+        if self.orders.len() != k * n {
+            self.orders.clear();
+            for _ in 0..k {
+                self.orders.extend(0..n as u32);
+            }
+        }
+        for (c, rng) in rngs.iter_mut().enumerate() {
+            rng.shuffle(&mut self.orders[c * n..(c + 1) * n]);
+        }
+        self.scratch.x.resize(n, 0);
+        for idx in 0..n {
+            for c in 0..k {
+                let i = self.orders[c * n + idx] as usize;
+                let card = model.num_states(i);
+                if card < 2 {
+                    continue;
+                }
+                let cur = states[i * k + c];
+                let mut s = rngs[c].below(card - 1) as u32;
+                if s >= cur {
+                    s += 1;
+                }
+                // Gather chain c's Markov blanket for the scalar ΔE.
+                self.scratch.x[i] = cur;
+                for &nb in model.interaction().neighbors(i) {
+                    self.scratch.x[nb as usize] = states[nb as usize * k + c];
+                }
+                let de = model.delta_energy(&self.scratch.x, i, s, &mut self.scratch.e);
+                let accept = de <= 0.0 || rngs[c].uniform_f32() < (-betas[c] * de).exp();
+                if accept {
+                    states[i * k + c] = s;
+                    stats[c].accepted += 1;
+                }
+                stats[c].updates += 1;
+                let mut cost = model.update_cost(i);
+                cost.samples = 1;
+                stats[c].cost.add(cost);
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "MH"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::PottsGrid;
+    use crate::mcmc::{build_algo, Chain};
+
+    /// Batched kernels must reproduce the scalar chains bit-for-bit:
+    /// same states, same best-so-far, same RV-0 marginals.
+    fn assert_matches_scalar(algo_kind: AlgoKind, sampler: SamplerKind, steps: usize) {
+        let m = PottsGrid::new(6, 5, 3, 0.8);
+        let (seed, k) = (0xBA7C4u64, 5usize);
+
+        let mut batch = ChainBatch::new(&m, BetaSchedule::Constant(0.9), seed, 0, k, None);
+        let mut batch_algo = build_batch_algo(algo_kind, sampler, &m).expect("batched kernel");
+        batch.run(&mut *batch_algo, steps);
+
+        let mut gathered = Vec::new();
+        for c in 0..k {
+            let algo = build_algo(algo_kind, sampler, &m, 1);
+            let mut chain =
+                Chain::with_rng(&m, algo, BetaSchedule::Constant(0.9), Rng::fork(seed, c as u64));
+            chain.run(steps);
+            batch.chain_state(c, &mut gathered);
+            assert_eq!(gathered, chain.x, "{algo_kind:?} chain {c}: states diverge");
+            assert_eq!(
+                batch.best_objectives[c], chain.best_objective,
+                "{algo_kind:?} chain {c}: best objective diverges"
+            );
+            assert_eq!(
+                batch.best_state(c),
+                chain.best_assignment(),
+                "{algo_kind:?} chain {c}: best assignment diverges"
+            );
+            assert_eq!(
+                batch.marginal0(c),
+                chain.marginal(0),
+                "{algo_kind:?} chain {c}: marginal diverges"
+            );
+            assert_eq!(batch.stats[c].updates, chain.stats.updates);
+            assert_eq!(batch.stats[c].accepted, chain.stats.accepted);
+        }
+    }
+
+    #[test]
+    fn batched_gibbs_is_bit_identical_to_scalar() {
+        assert_matches_scalar(AlgoKind::Gibbs, SamplerKind::Gumbel, 25);
+        assert_matches_scalar(AlgoKind::Gibbs, SamplerKind::Cdf, 25);
+    }
+
+    #[test]
+    fn batched_block_gibbs_is_bit_identical_to_scalar() {
+        assert_matches_scalar(AlgoKind::BlockGibbs, SamplerKind::Gumbel, 25);
+        assert_matches_scalar(
+            AlgoKind::BlockGibbs,
+            SamplerKind::GumbelLut { size: 16, bits: 8 },
+            25,
+        );
+    }
+
+    #[test]
+    fn batched_mh_is_bit_identical_to_scalar() {
+        assert_matches_scalar(AlgoKind::Mh, SamplerKind::Gumbel, 25);
+    }
+
+    #[test]
+    fn init_state_keeps_streams_aligned() {
+        let m = PottsGrid::new(4, 4, 2, 0.5);
+        let x0 = vec![1u32; 16];
+        let mut batch = ChainBatch::new(&m, BetaSchedule::Constant(1.0), 3, 0, 3, Some(&x0));
+        let mut algo = build_batch_algo(AlgoKind::Gibbs, SamplerKind::Gumbel, &m).unwrap();
+        batch.run(&mut *algo, 10);
+        let mut gathered = Vec::new();
+        for c in 0..3 {
+            let scalar = build_algo(AlgoKind::Gibbs, SamplerKind::Gumbel, &m, 1);
+            let mut chain =
+                Chain::with_rng(&m, scalar, BetaSchedule::Constant(1.0), Rng::fork(3, c as u64));
+            chain.set_state(&x0);
+            chain.run(10);
+            batch.chain_state(c, &mut gathered);
+            assert_eq!(gathered, chain.x, "chain {c}");
+        }
+    }
+
+    #[test]
+    fn pas_and_async_gibbs_have_no_batched_kernel() {
+        let m = PottsGrid::new(3, 3, 2, 0.5);
+        assert!(build_batch_algo(AlgoKind::Pas, SamplerKind::Gumbel, &m).is_none());
+        assert!(build_batch_algo(AlgoKind::AsyncGibbs, SamplerKind::Gumbel, &m).is_none());
+        assert!(!batch_supported(AlgoKind::Pas));
+        assert!(batch_supported(AlgoKind::BlockGibbs));
+    }
+}

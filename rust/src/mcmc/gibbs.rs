@@ -200,7 +200,7 @@ mod tests {
     fn gibbs_marginals_match_exact() {
         let net = two_node_net();
         let exact = net.exact_marginal(1);
-        let algo = Box::new(Gibbs::new(Box::new(GumbelSampler)));
+        let algo = Box::new(Gibbs::new(Box::new(GumbelSampler::default())));
         let mut chain = Chain::new(&net, algo, BetaSchedule::Constant(1.0), 11);
         chain.run(60_000);
         let emp = chain.marginal(1);
@@ -220,14 +220,14 @@ mod tests {
             chain.marginal(0)[1]
         };
         let a = run(Box::new(CdfSampler), 1);
-        let b = run(Box::new(GumbelSampler), 2);
+        let b = run(Box::new(GumbelSampler::default()), 2);
         assert!((a - b).abs() < 0.015, "cdf={a} gumbel={b}");
     }
 
     #[test]
     fn block_gibbs_blocks_are_independent_sets() {
         let m = PottsGrid::new(6, 6, 2, 1.0);
-        let bg = BlockGibbs::new(Box::new(GumbelSampler), &m);
+        let bg = BlockGibbs::new(Box::new(GumbelSampler::default()), &m);
         let g = m.interaction();
         for block in bg.blocks() {
             for (a, &i) in block.iter().enumerate() {
@@ -244,7 +244,7 @@ mod tests {
     #[test]
     fn block_gibbs_marginals_match_exact() {
         let net = two_node_net();
-        let algo = Box::new(BlockGibbs::new(Box::new(GumbelSampler), &net));
+        let algo = Box::new(BlockGibbs::new(Box::new(GumbelSampler::default()), &net));
         let mut chain = Chain::new(&net, algo, BetaSchedule::Constant(1.0), 17);
         chain.run(60_000);
         let exact = net.exact_marginal(0);
@@ -255,7 +255,7 @@ mod tests {
     #[test]
     fn async_gibbs_runs_and_mixes_roughly() {
         let net = two_node_net();
-        let algo = Box::new(AsyncGibbs::new(Box::new(GumbelSampler)));
+        let algo = Box::new(AsyncGibbs::new(Box::new(GumbelSampler::default())));
         let mut chain = Chain::new(&net, algo, BetaSchedule::Constant(1.0), 23);
         chain.run(60_000);
         // AG is biased on strongly-coupled pairs but must stay in the
@@ -269,7 +269,7 @@ mod tests {
     fn gibbs_never_moves_clamped_evidence() {
         let mut net = two_node_net();
         net.set_evidence(0, 1);
-        let algo = Box::new(Gibbs::new(Box::new(GumbelSampler)));
+        let algo = Box::new(Gibbs::new(Box::new(GumbelSampler::default())));
         let mut chain = Chain::new(&net, algo, BetaSchedule::Constant(1.0), 31);
         // Force evidence into the initial state, then check it never moves.
         chain.x[0] = 1;

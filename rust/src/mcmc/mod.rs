@@ -5,12 +5,14 @@
 //! Sampler (PAS), all parameterized by a pluggable categorical sampler
 //! (CDF baseline vs Gumbel-max, §V-D) and an annealing schedule.
 
+pub mod batch;
 mod gibbs;
 mod metrics;
 mod mh;
 mod pas;
 pub mod sampler;
 
+pub use batch::{batch_supported, build_batch_algo, BatchMcmc, ChainBatch};
 pub use gibbs::{AsyncGibbs, BlockGibbs, Gibbs};
 pub use metrics::{
     effective_sample_size, run_to_accuracy, split_r_hat, AccuracyTrace, TracePoint,
@@ -103,7 +105,7 @@ impl SamplerKind {
     pub fn build(&self) -> Box<dyn CategoricalSampler> {
         match *self {
             SamplerKind::Cdf => Box::new(CdfSampler),
-            SamplerKind::Gumbel => Box::new(GumbelSampler),
+            SamplerKind::Gumbel => Box::new(GumbelSampler::default()),
             SamplerKind::GumbelLut { size, bits } => Box::new(GumbelLutSampler::new(size, bits)),
         }
     }
@@ -233,7 +235,17 @@ impl<'m> Chain<'m> {
         schedule: BetaSchedule,
         seed: u64,
     ) -> Chain<'m> {
-        let mut rng = Rng::new(seed);
+        Chain::with_rng(model, algo, schedule, Rng::new(seed))
+    }
+
+    /// Create a chain driving a caller-supplied RNG stream — the
+    /// engine's per-chain seeding path (`Rng::fork(seed, chain_id)`).
+    pub fn with_rng(
+        model: &'m dyn EnergyModel,
+        algo: Box<dyn Mcmc>,
+        schedule: BetaSchedule,
+        mut rng: Rng,
+    ) -> Chain<'m> {
         let x = crate::energy::random_state(model, &mut rng);
         let mut hist_offsets = Vec::with_capacity(model.num_vars() + 1);
         let mut acc = 0usize;

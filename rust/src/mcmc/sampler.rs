@@ -19,12 +19,56 @@ pub trait CategoricalSampler: Send {
     /// Draw a state index from `P(s) ∝ exp(-β e[s])`.
     fn sample(&mut self, e: &[f32], beta: f32, rng: &mut Rng) -> usize;
 
+    /// Draw one state per chain from a chain-major batch of `k`
+    /// energy vectors: `e[c * n + s]` is chain `c`'s energy for state
+    /// `s`, `betas[c]` its inverse temperature, `rngs[c]` its RNG, and
+    /// `out[c]` receives its sample (`k = out.len()`).
+    ///
+    /// Every implementation must consume exactly the same draws from
+    /// `rngs[c]` as `k` scalar [`CategoricalSampler::sample`] calls
+    /// would, so batched and scalar chains stay bit-identical. The
+    /// default simply loops the scalar kernel; vectorized overrides
+    /// (Gumbel) iterate state-outer / chain-inner, which preserves
+    /// each chain's per-state draw order.
+    fn sample_batch(&mut self, e: &[f32], n: usize, betas: &[f32], rngs: &mut [Rng], out: &mut [u32]) {
+        for (c, o) in out.iter_mut().enumerate() {
+            *o = self.sample(&e[c * n..(c + 1) * n], betas[c], &mut rngs[c]) as u32;
+        }
+    }
+
     /// Human-readable name (used by the benches).
     fn name(&self) -> &'static str;
 
     /// Abstract op count to draw one sample from a size-`n`
     /// distribution — the Fig. 9(d)/Fig. 13 accounting.
     fn ops_per_sample(&self, n: usize) -> u64;
+}
+
+/// Shared batched Gumbel-argmax loop: state-outer / chain-inner so
+/// each chain draws its noise in state order (bit-identical to the
+/// scalar kernel), with `noise(c)` supplying chain `c`'s next variate.
+fn gumbel_argmax_batch(
+    e: &[f32],
+    n: usize,
+    betas: &[f32],
+    out: &mut [u32],
+    best_v: &mut Vec<f32>,
+    mut noise: impl FnMut(usize) -> f32,
+) {
+    let k = out.len();
+    debug_assert_eq!(e.len(), k * n);
+    best_v.clear();
+    best_v.resize(k, f32::NEG_INFINITY);
+    out.fill(0);
+    for s in 0..n {
+        for c in 0..k {
+            let v = -betas[c] * e[c * n + s] + noise(c);
+            if v > best_v[c] {
+                best_v[c] = v;
+                out[c] = s as u32;
+            }
+        }
+    }
 }
 
 /// Baseline inverse-transform (CDF) sampler, as used by SPU / PGMA.
@@ -72,7 +116,10 @@ impl CategoricalSampler for CdfSampler {
 /// Exact (float-precision) Gumbel-max sampler:
 /// `argmax_s (-β e_s + g_s)`, `g_s ~ Gumbel(0,1)`.
 #[derive(Clone, Debug, Default)]
-pub struct GumbelSampler;
+pub struct GumbelSampler {
+    /// Per-chain running argmax values for the batched kernel.
+    best_v: Vec<f32>,
+}
 
 impl CategoricalSampler for GumbelSampler {
     fn sample(&mut self, e: &[f32], beta: f32, rng: &mut Rng) -> usize {
@@ -86,6 +133,10 @@ impl CategoricalSampler for GumbelSampler {
             }
         }
         best
+    }
+
+    fn sample_batch(&mut self, e: &[f32], n: usize, betas: &[f32], rngs: &mut [Rng], out: &mut [u32]) {
+        gumbel_argmax_batch(e, n, betas, out, &mut self.best_v, |c| rngs[c].gumbel_f32());
     }
 
     fn name(&self) -> &'static str {
@@ -107,6 +158,8 @@ pub struct GumbelLutSampler {
     lut: Vec<f32>,
     size: usize,
     bits: u32,
+    /// Per-chain running argmax values for the batched kernel.
+    best_v: Vec<f32>,
 }
 
 impl GumbelLutSampler {
@@ -131,7 +184,12 @@ impl GumbelLutSampler {
                 lo + q * (hi - lo)
             })
             .collect();
-        GumbelLutSampler { lut, size, bits }
+        GumbelLutSampler {
+            lut,
+            size,
+            bits,
+            best_v: Vec::new(),
+        }
     }
 
     /// LUT size (number of entries).
@@ -163,6 +221,13 @@ impl CategoricalSampler for GumbelLutSampler {
             }
         }
         best
+    }
+
+    fn sample_batch(&mut self, e: &[f32], n: usize, betas: &[f32], rngs: &mut [Rng], out: &mut [u32]) {
+        let (lut, size) = (&self.lut, self.size);
+        gumbel_argmax_batch(e, n, betas, out, &mut self.best_v, |c| {
+            lut[rngs[c].below(size)]
+        });
     }
 
     fn name(&self) -> &'static str {
@@ -219,7 +284,7 @@ mod tests {
 
     #[test]
     fn gumbel_matches_softmax() {
-        check_distribution(&mut GumbelSampler, 0.01);
+        check_distribution(&mut GumbelSampler::default(), 0.01);
     }
 
     #[test]
@@ -244,7 +309,7 @@ mod tests {
         let e = [5.0f32, 0.0, 5.0];
         let mut rng = Rng::new(1);
         for _ in 0..100 {
-            assert_eq!(GumbelSampler.sample(&e, 50.0, &mut rng), 1);
+            assert_eq!(GumbelSampler::default().sample(&e, 50.0, &mut rng), 1);
             assert_eq!(CdfSampler.sample(&e, 50.0, &mut rng), 1);
         }
     }
@@ -255,7 +320,34 @@ mod tests {
         let mut rng = Rng::new(2);
         for _ in 0..100 {
             assert_eq!(CdfSampler.sample(&e, 1.0, &mut rng), 1);
-            assert_eq!(GumbelSampler.sample(&e, 1.0, &mut rng), 1);
+            assert_eq!(GumbelSampler::default().sample(&e, 1.0, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn batched_sampling_is_bit_identical_to_scalar() {
+        let (n, k) = (5usize, 4usize);
+        let mut rng = Rng::new(99);
+        let e: Vec<f32> = (0..k * n).map(|_| rng.uniform_f32() * 3.0).collect();
+        let betas: Vec<f32> = (0..k).map(|c| 0.5 + c as f32 * 0.3).collect();
+        let samplers: Vec<Box<dyn CategoricalSampler>> = vec![
+            Box::new(CdfSampler),
+            Box::new(GumbelSampler::default()),
+            Box::new(GumbelLutSampler::new(16, 8)),
+        ];
+        for mut s in samplers {
+            let mut rngs_a: Vec<Rng> = (0..k as u64).map(|c| Rng::fork(7, c)).collect();
+            let mut rngs_b = rngs_a.clone();
+            let scalar: Vec<u32> = (0..k)
+                .map(|c| s.sample(&e[c * n..(c + 1) * n], betas[c], &mut rngs_a[c]) as u32)
+                .collect();
+            let mut batched = vec![0u32; k];
+            s.sample_batch(&e, n, &betas, &mut rngs_b, &mut batched);
+            assert_eq!(scalar, batched, "{}: samples diverge", s.name());
+            // Identical RNG consumption: the streams must stay in sync.
+            for (a, b) in rngs_a.iter_mut().zip(&mut rngs_b) {
+                assert_eq!(a.next_u64(), b.next_u64(), "{}: rng streams diverged", s.name());
+            }
         }
     }
 
@@ -263,7 +355,7 @@ mod tests {
     fn op_counts_match_paper() {
         // Fig. 9(d): CDF O(2N+1) vs Gumbel O(N).
         assert_eq!(CdfSampler.ops_per_sample(64), 129);
-        assert_eq!(GumbelSampler.ops_per_sample(64), 64);
+        assert_eq!(GumbelSampler::default().ops_per_sample(64), 64);
     }
 
     #[test]

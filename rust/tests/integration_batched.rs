@@ -1,0 +1,151 @@
+//! Scalar-vs-batched equivalence: for every registry workload, the
+//! thread-per-chain `SoftwareBackend` and the `BatchedSoftwareBackend`
+//! must produce **identical** chains (`best_x`, final energies,
+//! marginals, traces) from the same seeds — for every batch size and
+//! thread count. This pins down the bit-identity invariant the batched
+//! execution path is built on.
+
+use mc2a::engine::{registry, BatchedSoftwareBackend, Engine, Mc2aError};
+use mc2a::mcmc::BetaSchedule;
+
+const CHAINS: usize = 6;
+const STEPS: usize = 8;
+const SEED: u64 = 0xE0_1D;
+
+fn run_workload(name: &str, batch: Option<(usize, usize)>) -> mc2a::coordinator::RunMetrics {
+    let mut builder = Engine::for_workload(name)
+        .unwrap()
+        .schedule(BetaSchedule::Constant(0.9))
+        .steps(STEPS)
+        .chains(CHAINS)
+        .seed(SEED)
+        .observe_every(2);
+    if let Some((k, t)) = batch {
+        builder = builder.batch(k).threads(t);
+    }
+    builder
+        .build()
+        .unwrap_or_else(|e| panic!("{name}: {e}"))
+        .run()
+        .unwrap_or_else(|e| panic!("{name}: {e}"))
+}
+
+/// Every (non-heavy) registry workload: software == batched, chain by
+/// chain, bit for bit — including the PAS workloads, which exercise
+/// the batched backend's scalar fallback.
+#[test]
+fn every_registry_workload_is_backend_invariant() {
+    for entry in registry::REGISTRY {
+        if entry.heavy {
+            continue;
+        }
+        let scalar = run_workload(entry.name, None);
+        let batched = run_workload(entry.name, Some((4, 3)));
+        assert_eq!(scalar.chains.len(), batched.chains.len());
+        for (a, b) in scalar.chains.iter().zip(&batched.chains) {
+            assert_eq!(a.chain_id, b.chain_id, "{}", entry.name);
+            assert_eq!(a.best_x, b.best_x, "{}: best_x diverges", entry.name);
+            assert_eq!(
+                a.best_objective, b.best_objective,
+                "{}: best objective diverges",
+                entry.name
+            );
+            assert_eq!(
+                a.objective_trace, b.objective_trace,
+                "{}: final energies diverge",
+                entry.name
+            );
+            assert_eq!(a.marginal0, b.marginal0, "{}: marginals diverge", entry.name);
+            assert_eq!(a.steps, b.steps, "{}", entry.name);
+        }
+    }
+}
+
+/// Chains must not depend on how the batch boundary falls or how many
+/// workers the pool runs.
+#[test]
+fn results_are_invariant_to_batch_size_and_thread_count() {
+    let reference = run_workload("imageseg", Some((1, 1)));
+    for (k, t) in [(2, 1), (3, 2), (4, 4), (CHAINS, 2)] {
+        let got = run_workload("imageseg", Some((k, t)));
+        for (a, b) in reference.chains.iter().zip(&got.chains) {
+            assert_eq!(a.best_x, b.best_x, "batch={k} threads={t}");
+            assert_eq!(a.objective_trace, b.objective_trace, "batch={k} threads={t}");
+            assert_eq!(a.marginal0, b.marginal0, "batch={k} threads={t}");
+        }
+    }
+}
+
+/// The batched backend reports its name and honors early stop through
+/// the engine observer loop (per batch, at observation boundaries).
+#[test]
+fn batched_backend_early_stops() {
+    use mc2a::engine::{ChainObserver, ObserverAction, ProgressEvent};
+    struct StopImmediately;
+    impl ChainObserver for StopImmediately {
+        fn on_progress(&mut self, _e: &ProgressEvent) -> ObserverAction {
+            ObserverAction::Stop
+        }
+    }
+    let metrics = Engine::for_workload("imageseg")
+        .unwrap()
+        .steps(100_000)
+        .chains(8)
+        .batch(4)
+        .threads(2)
+        .observe_every(2)
+        .observer(Box::new(StopImmediately))
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert!(
+        metrics.chains.iter().any(|c| c.steps < 100_000),
+        "no chain stopped early: {:?}",
+        metrics.chains.iter().map(|c| c.steps).collect::<Vec<_>>()
+    );
+}
+
+/// Typed validation for the new knobs.
+#[test]
+fn batch_and_thread_validation_is_typed() {
+    let err = Engine::for_workload("earthquake")
+        .unwrap()
+        .chains(2)
+        .batch(8)
+        .build()
+        .unwrap_err();
+    match err {
+        Mc2aError::InvalidConfig(msg) => {
+            assert!(msg.contains("batch") && msg.contains("chains"), "{msg}")
+        }
+        e => panic!("wrong error: {e}"),
+    }
+    assert!(matches!(
+        Engine::for_workload("earthquake").unwrap().batch(0).build(),
+        Err(Mc2aError::InvalidConfig(_))
+    ));
+}
+
+/// A custom wiring of the backend type through `.backend(...)` works
+/// exactly like the builder's `.batch(...)` sugar.
+#[test]
+fn explicit_backend_box_matches_builder_sugar() {
+    let via_sugar = run_workload("survey", Some((3, 2)));
+    let via_box = Engine::for_workload("survey")
+        .unwrap()
+        .schedule(BetaSchedule::Constant(0.9))
+        .steps(STEPS)
+        .chains(CHAINS)
+        .seed(SEED)
+        .observe_every(2)
+        .backend(Box::new(BatchedSoftwareBackend::new(3).with_threads(2)))
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    for (a, b) in via_sugar.chains.iter().zip(&via_box.chains) {
+        assert_eq!(a.best_x, b.best_x);
+        assert_eq!(a.objective_trace, b.objective_trace);
+    }
+}
