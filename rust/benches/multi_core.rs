@@ -1,0 +1,14 @@
+//! Bench: multi-core scaling — the sharded `MultiCoreAcceleratorBackend`
+//! on the imageseg Potts MRF at C ∈ {1, 2, 4, 8, 16}. Prints the same
+//! CSV as `mc2a bench cores` (aggregate GS/s, speedup, parallel
+//! efficiency, sync overhead per core count).
+
+fn main() {
+    match mc2a::bench::core_scaling(false) {
+        Ok(report) => print!("{report}"),
+        Err(e) => {
+            eprintln!("multi_core bench failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}

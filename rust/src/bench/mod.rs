@@ -28,6 +28,12 @@ use crate::runtime::Runtime;
 use crate::sim::su::fig13_sweep;
 use crate::workloads::{self, Workload};
 
+/// Every bench name `mc2a bench` accepts, in the order `all` runs
+/// them (the `all` meta-name itself excluded).
+pub const BENCH_NAMES: &[&str] = &[
+    "fig5", "fig6", "fig11", "fig12", "fig13", "fig14", "fig15", "chains", "cores", "headline",
+];
+
 /// Table I: the workload suite, regenerated from the actual generators.
 pub fn table1(full: bool) -> String {
     let suite = if full {
@@ -670,6 +676,63 @@ pub fn many_chains(quick: bool) -> Result<String, Mc2aError> {
     Ok(out)
 }
 
+/// Multi-core scaling sweep (§II-D): the Potts/MRF registry workload
+/// (`imageseg`, 4096 RVs, Block Gibbs) on the sharded multi-core
+/// accelerator backend at C ∈ {1, 2, 4, 8, 16}, as a CSV of aggregate
+/// GS/s, speedup over one core, parallel efficiency, and sync
+/// overhead — reproducible with `mc2a bench cores` (or
+/// `cargo bench --bench multi_core`).
+pub fn core_scaling(quick: bool) -> Result<String, Mc2aError> {
+    let mut out = String::new();
+    let hw = HwConfig::paper_default();
+    let steps = if quick { 6 } else { 25 };
+    writeln!(
+        out,
+        "# multi-core scaling — imageseg MRF (64×64, Block Gibbs), {steps} iterations/core-count"
+    )
+    .unwrap();
+    writeln!(
+        out,
+        "cores,cycles,aggregate_gsps,speedup,parallel_efficiency,sync_overhead,xfer_words,cut_edges"
+    )
+    .unwrap();
+    let mut base_gsps: Option<f64> = None;
+    for cores in [1usize, 2, 4, 8, 16] {
+        let metrics = Engine::for_workload("imageseg")?
+            .steps(steps)
+            .seed(0x3C0)
+            .multicore(hw)
+            .cores(cores)
+            .build()?
+            .run()?;
+        let mc = metrics.chains[0].multicore.as_ref().ok_or_else(|| {
+            Mc2aError::InvalidConfig("multi-core backend returned no multicore report".into())
+        })?;
+        let gsps = mc.aggregate_gsps(&hw);
+        let base = *base_gsps.get_or_insert(gsps);
+        let speedup = gsps / base.max(1e-18);
+        writeln!(
+            out,
+            "{cores},{},{:.6},{:.3},{:.3},{:.4},{},{}",
+            mc.cycles,
+            gsps,
+            speedup,
+            speedup / cores as f64,
+            mc.sync_overhead_fraction(),
+            mc.xfer_words,
+            mc.cut_edges,
+        )
+        .unwrap();
+    }
+    writeln!(
+        out,
+        "\n(aggregate GS/s = all cores' samples / synchronized makespan at {} GHz)",
+        hw.clock_ghz
+    )
+    .unwrap();
+    Ok(out)
+}
+
 /// §VI-D headline: speedup ratios vs the paper's claims.
 ///
 /// Always uses the paper-scale 150 k-node MRF — the analytical GPU/TPU
@@ -740,6 +803,27 @@ mod tests {
         let t = fig12(true);
         assert!(t.contains("size=16"));
         assert!(t.contains("exact"));
+    }
+
+    #[test]
+    fn core_scaling_csv_hits_the_acceptance_ratio() {
+        let t = core_scaling(true).unwrap();
+        assert!(t.contains("aggregate_gsps"), "{t}");
+        assert!(t.contains("parallel_efficiency"), "{t}");
+        // Acceptance: aggregate GS/s at C=8 ≥ 4× the C=1 figure.
+        let speedup_of = |cores: &str| -> f64 {
+            t.lines()
+                .find(|l| l.starts_with(&format!("{cores},")))
+                .unwrap_or_else(|| panic!("no row for C={cores} in:\n{t}"))
+                .split(',')
+                .nth(3)
+                .unwrap()
+                .parse()
+                .unwrap()
+        };
+        assert!((speedup_of("1") - 1.0).abs() < 1e-9);
+        let s8 = speedup_of("8");
+        assert!(s8 >= 4.0, "C=8 speedup {s8} < 4x:\n{t}");
     }
 
     #[test]

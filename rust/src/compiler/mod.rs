@@ -47,17 +47,77 @@ pub fn compile_opt(
 ) -> Program {
     hw.validate().expect("invalid hardware config");
     let c = Compiler::new(model, hw);
-    let mut program = match algo {
-        AlgoKind::Gibbs => c.compile_gibbs_family(false, true),
-        AlgoKind::Mh => c.compile_gibbs_family(false, true),
-        AlgoKind::BlockGibbs => c.compile_gibbs_family(true, false),
-        AlgoKind::AsyncGibbs => c.compile_async_gibbs(),
-        AlgoKind::Pas => c.compile_pas(pas_flips.max(1)),
-    };
+    let (mut program, _marks) = dispatch(c, algo, pas_flips);
     if optimize {
         program.body = fuse_loads(program.body, hw);
     }
     program
+}
+
+/// Compile the schedule for one *shard* of a multi-core system: only
+/// the RVs in `owned` are scheduled, but the group structure (the
+/// full-graph color classes for Block Gibbs) is preserved, so every
+/// core's program has the same synchronization rounds. Returns the
+/// program plus the per-round segment boundaries — `marks[s]` is the
+/// body index just past round `s`'s instructions (ascending, last
+/// equals `body.len()`); the multi-core simulator barriers cores at
+/// these points.
+///
+/// With `owned` covering every RV the emitted program is identical to
+/// [`compile_opt`]: load fusion never crosses the drain NOPs that end
+/// each round, so per-segment fusion equals whole-body fusion.
+///
+/// PAS schedules a *global* move table and therefore cannot be
+/// sharded; for `AlgoKind::Pas` the mask is ignored and the full
+/// single-core program is returned as one segment (the multi-core
+/// backend only accepts PAS at C = 1).
+pub fn compile_shard(
+    model: &dyn EnergyModel,
+    algo: AlgoKind,
+    hw: &HwConfig,
+    pas_flips: usize,
+    owned: &[u32],
+    optimize: bool,
+) -> (Program, Vec<usize>) {
+    hw.validate().expect("invalid hardware config");
+    let mut c = Compiler::new(model, hw);
+    if !matches!(algo, AlgoKind::Pas) {
+        let mut mask = vec![false; model.num_vars()];
+        for &rv in owned {
+            mask[rv as usize] = true;
+        }
+        c.owned = Some(mask);
+    }
+    let (mut program, mut marks) = dispatch(c, algo, pas_flips);
+    if optimize {
+        let (body, fused_marks) = fuse_segments(program.body, &marks, hw);
+        program.body = body;
+        marks = fused_marks;
+    }
+    (program, marks)
+}
+
+fn dispatch(c: Compiler<'_>, algo: AlgoKind, pas_flips: usize) -> (Program, Vec<usize>) {
+    match algo {
+        AlgoKind::Gibbs | AlgoKind::Mh => c.compile_gibbs_family(false, true),
+        AlgoKind::BlockGibbs => c.compile_gibbs_family(true, false),
+        AlgoKind::AsyncGibbs => c.compile_async_gibbs(),
+        AlgoKind::Pas => c.compile_pas(pas_flips.max(1)),
+    }
+}
+
+/// [`fuse_loads`] applied independently within each segment, keeping
+/// the segment boundaries valid after fusion shrinks the body.
+fn fuse_segments(body: Vec<Instr>, marks: &[usize], hw: &HwConfig) -> (Vec<Instr>, Vec<usize>) {
+    let mut out: Vec<Instr> = Vec::with_capacity(body.len());
+    let mut new_marks = Vec::with_capacity(marks.len());
+    let mut start = 0usize;
+    for &end in marks {
+        out.extend(fuse_loads(body[start..end].to_vec(), hw));
+        new_marks.push(out.len());
+        start = end;
+    }
+    (out, new_marks)
 }
 
 /// VLIW software pipelining: fold Load-only instructions into the
@@ -123,6 +183,10 @@ struct Compiler<'m> {
     body: Vec<Instr>,
     /// rotating register row cursor per bank
     reg_cursor: Vec<usize>,
+    /// Shard mask for multi-core compilation: when set, only RVs with
+    /// `owned[rv]` are scheduled (the group/round structure of the
+    /// full model is kept so cores stay barrier-aligned).
+    owned: Option<Vec<bool>>,
 }
 
 impl<'m> Compiler<'m> {
@@ -132,6 +196,15 @@ impl<'m> Compiler<'m> {
             hw: *hw,
             body: Vec::new(),
             reg_cursor: vec![0; hw.rf_banks],
+            owned: None,
+        }
+    }
+
+    /// Apply the shard mask to one group/block of RVs.
+    fn filter_owned(&self, rvs: &[u32]) -> Vec<u32> {
+        match &self.owned {
+            None => rvs.to_vec(),
+            Some(mask) => rvs.iter().copied().filter(|&rv| mask[rv as usize]).collect(),
         }
     }
 
@@ -364,8 +437,16 @@ impl<'m> Compiler<'m> {
 
     /// Gibbs-family schedule. `use_coloring` = Block Gibbs parallelism;
     /// otherwise sequential single-RV groups (Gibbs/MH). `drain_each` =
-    /// drain after every group (sequential chains need it).
-    fn compile_gibbs_family(mut self, use_coloring: bool, drain_each: bool) -> Program {
+    /// drain after every group (sequential chains need it). Returns the
+    /// program plus one segment mark per block — the multi-core
+    /// synchronization rounds (a block owned entirely by other shards
+    /// still yields a mark, with zero instructions, so every core sees
+    /// the same round count).
+    fn compile_gibbs_family(
+        mut self,
+        use_coloring: bool,
+        drain_each: bool,
+    ) -> (Program, Vec<usize>) {
         let n = self.model.num_vars();
         let blocks: Vec<Vec<u32>> = if use_coloring {
             color_greedy(self.model.interaction()).blocks()
@@ -374,55 +455,65 @@ impl<'m> Compiler<'m> {
         };
         let width = self.group_width();
         let mut updates = 0u64;
+        let mut marks = Vec::with_capacity(blocks.len());
         for block in &blocks {
-            for group in block.chunks(width) {
-                self.emit_group_update(group);
-                updates += group.len() as u64;
-                if drain_each {
+            let mine = self.filter_owned(block);
+            if !mine.is_empty() {
+                for group in mine.chunks(width) {
+                    self.emit_group_update(group);
+                    updates += group.len() as u64;
+                    if drain_each {
+                        self.emit_drain();
+                    }
+                }
+                if !drain_each {
                     self.emit_drain();
                 }
             }
-            if !drain_each {
-                self.emit_drain();
-            }
+            marks.push(self.body.len());
         }
-        Program {
+        let program = Program {
             prologue: Vec::new(),
             body: self.body,
             updates_per_iter: updates,
             samples_per_iter: updates,
             name: if use_coloring { "block-gibbs" } else { "gibbs" }.into(),
-        }
+        };
+        (program, marks)
     }
 
     /// Async Gibbs: snapshot, then all RVs in maximal groups with no
     /// inter-block drains (stale reads are the algorithm's semantics).
-    fn compile_async_gibbs(mut self) -> Program {
+    /// One segment: cores exchange boundary state once per iteration.
+    fn compile_async_gibbs(mut self) -> (Program, Vec<usize>) {
         let n = self.model.num_vars();
         let width = self.group_width();
         let mut snap = Instr::nop();
         snap.sem = Semantics::Snapshot;
         self.body.push(snap);
-        let all: Vec<u32> = (0..n as u32).collect();
+        let all = self.filter_owned(&(0..n as u32).collect::<Vec<u32>>());
         let mut updates = 0u64;
         for group in all.chunks(width) {
             self.emit_group_update(group);
             updates += group.len() as u64;
         }
         self.emit_drain();
-        Program {
+        let marks = vec![self.body.len()];
+        let program = Program {
             prologue: Vec::new(),
             body: self.body,
             updates_per_iter: updates,
             samples_per_iter: updates,
             name: "async-gibbs".into(),
-        }
+        };
+        (program, marks)
     }
 
     /// PAS schedule (Fig. 10c): multi-cycle ΔE Compute pass over all
     /// moves, spatial-mode Sample passes for the L indices, then L
-    /// sequential conditional updates plus the MH energy check.
-    fn compile_pas(mut self, l: usize) -> Program {
+    /// sequential conditional updates plus the MH energy check. The
+    /// move table is global, so the schedule is always one segment.
+    fn compile_pas(mut self, l: usize) -> (Program, Vec<usize>) {
         let n = self.model.num_vars();
         let ports = 1 << self.hw.k;
         let width = self.group_width();
@@ -613,13 +704,15 @@ impl<'m> Compiler<'m> {
             }],
             sem: Semantics::PasIterate,
         });
-        Program {
+        let marks = vec![self.body.len()];
+        let program = Program {
             prologue: Vec::new(),
             body: self.body,
             updates_per_iter: l as u64,
             samples_per_iter: l as u64,
             name: "pas".into(),
-        }
+        };
+        (program, marks)
     }
 }
 
@@ -690,6 +783,50 @@ mod tests {
             }
             assert!(seen.iter().all(|&c| c == 1), "{algo:?}: {seen:?}");
         }
+    }
+
+    #[test]
+    fn shard_with_full_ownership_matches_single_core() {
+        let m = PottsGrid::new(8, 8, 2, 1.0);
+        let hw = HwConfig::paper_default();
+        let all: Vec<u32> = (0..64).collect();
+        for algo in [
+            AlgoKind::Gibbs,
+            AlgoKind::BlockGibbs,
+            AlgoKind::AsyncGibbs,
+            AlgoKind::Pas,
+        ] {
+            let full = compile(&m, algo, &hw, 4);
+            let (shard, marks) = compile_shard(&m, algo, &hw, 4, &all, true);
+            assert_eq!(shard.body, full.body, "{algo:?} diverged");
+            assert_eq!(shard.updates_per_iter, full.updates_per_iter);
+            assert_eq!(*marks.last().unwrap(), shard.body.len());
+            assert!(marks.windows(2).all(|w| w[0] <= w[1]), "{algo:?}: {marks:?}");
+        }
+    }
+
+    #[test]
+    fn shards_jointly_cover_every_rv_once_with_aligned_rounds() {
+        let m = PottsGrid::new(6, 6, 2, 1.0);
+        let hw = HwConfig::fig10_toy();
+        let p = crate::graph::partition_balanced(m.interaction(), 3);
+        let mut seen = vec![0u32; 36];
+        let mut rounds: Option<usize> = None;
+        for part in p.parts() {
+            let (prog, marks) = compile_shard(&m, AlgoKind::BlockGibbs, &hw, 1, &part, true);
+            match rounds {
+                None => rounds = Some(marks.len()),
+                Some(k) => assert_eq!(k, marks.len(), "cores disagree on round count"),
+            }
+            for i in &prog.body {
+                if let Semantics::UpdateRvs(rvs) = &i.sem {
+                    for &rv in rvs {
+                        seen[rv as usize] += 1;
+                    }
+                }
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "{seen:?}");
     }
 
     #[test]

@@ -15,7 +15,7 @@
 use std::time::Duration;
 
 use crate::mcmc::{effective_sample_size, split_r_hat, StepStats};
-use crate::sim::SimReport;
+use crate::sim::{MultiCoreReport, SimReport};
 
 /// Result of one chain run.
 #[derive(Clone, Debug)]
@@ -28,8 +28,12 @@ pub struct ChainResult {
     pub steps: usize,
     /// Software-side statistics (updates, ops, samples).
     pub stats: StepStats,
-    /// Accelerator report when run on the simulator backend.
+    /// Accelerator report when run on the simulator backend. On the
+    /// multi-core backend this is the merged (aggregate) report.
     pub sim: Option<SimReport>,
+    /// Per-core breakdown when run on the multi-core accelerator
+    /// backend (aggregate GS/s, per-core utilization, sync overhead).
+    pub multicore: Option<MultiCoreReport>,
     /// Wall-clock duration of the chain's executor. On thread-per-chain
     /// backends this is the chain's own thread time; on the batched
     /// backend every chain of a work item shares the item's duration
@@ -129,6 +133,7 @@ mod tests {
             steps: trace.len() * 10,
             stats,
             sim: None,
+            multicore: None,
             wall: Duration::from_millis(10),
             marginal0: vec![0.25, 0.75],
             best_x: vec![0, 1],

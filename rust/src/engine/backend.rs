@@ -7,7 +7,7 @@
 //! shares one backend instance between them, so implementations are
 //! `Send + Sync` and keep per-chain state on the stack.
 //!
-//! Four backends ship with the crate:
+//! Five backends ship with the crate:
 //!
 //! * [`SoftwareBackend`] — the pure-Rust reference chains, one OS
 //!   thread per chain,
@@ -16,6 +16,9 @@
 //! * [`AcceleratorBackend`] — compile to the MC²A VLIW ISA and run the
 //!   cycle-accurate simulator, evaluating the β schedule once per
 //!   HWLOOP iteration,
+//! * [`MultiCoreAcceleratorBackend`] — the sharded C-core MC²A system
+//!   (§II-D): one model partitioned across C pipelines that sync at
+//!   color-class barriers and share a crossbar + histogram memory,
 //! * [`RuntimeBackend`] — the AOT-JAX/PJRT measured-software path,
 //!   available when the crate is built with the `xla-runtime` feature
 //!   and the artifact directory exists.
@@ -28,7 +31,7 @@
 //! call site. Future sharded / multi-node backends plug in through
 //! [`crate::engine::EngineBuilder::backend`] the same way.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
 use std::time::Instant;
 
@@ -37,11 +40,11 @@ use crate::coordinator::ChainResult;
 use crate::energy::{EnergyModel, OpCost};
 use crate::engine::error::Mc2aError;
 use crate::engine::observer::ProgressEvent;
-use crate::isa::HwConfig;
+use crate::isa::{HwConfig, MultiHwConfig};
 use crate::mcmc::{build_algo, AlgoKind, BetaSchedule, Chain, SamplerKind, StepStats};
 use crate::rng::Rng;
 use crate::runtime::Runtime;
-use crate::sim::Simulator;
+use crate::sim::{MultiCoreSim, Simulator};
 
 /// Backend-agnostic description of one chain run (the successor of the
 /// old `coordinator::RunSpec`, built by [`crate::engine::EngineBuilder`]).
@@ -81,6 +84,29 @@ impl ChainSpec {
     }
 }
 
+/// Cold-chain restart signal (see
+/// [`crate::engine::EngineBuilder::restart_on_stagnation`]): the
+/// engine's diagnostics loop bumps the epoch when split R-hat stays
+/// above threshold for K consecutive observer rounds, and software
+/// chains poll it at observation boundaries — on a new epoch a chain
+/// re-forks its RNG stream and restarts from its best state so far.
+#[derive(Debug, Default)]
+pub struct RestartSignal {
+    epoch: AtomicUsize,
+}
+
+impl RestartSignal {
+    /// Current restart epoch (0 = never triggered).
+    pub fn epoch(&self) -> usize {
+        self.epoch.load(Ordering::Relaxed)
+    }
+
+    /// Request a restart: every polling chain re-forks once.
+    pub fn trigger(&self) {
+        self.epoch.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
 /// Run context handed to backends: the engine's shared stop flag and
 /// a clone of the progress-event channel. One context serves a whole
 /// run; backends clone it per worker thread. (The observation cadence
@@ -92,6 +118,10 @@ pub struct ChainCtx<'a> {
     pub stop: &'a AtomicBool,
     /// Progress sink (None when the run has no observer loop).
     pub events: Option<Sender<ProgressEvent>>,
+    /// Cold-chain restart signal (None unless enabled on the builder).
+    /// Honored by the scalar software chain runner; other backends
+    /// ignore it.
+    pub restart: Option<&'a RestartSignal>,
 }
 
 impl ChainCtx<'_> {
@@ -174,9 +204,22 @@ pub(crate) fn run_software_chain(
     let every = spec.observe_every.max(1);
     let mut trace = Vec::new();
     let mut done = 0usize;
+    let mut seen_epoch = 0usize;
     while done < spec.steps {
         if ctx.stop_requested() {
             break;
+        }
+        // Cold-chain restart: on a new epoch, re-fork the RNG stream
+        // (epoch-disambiguated so the chain explores fresh trajectories)
+        // and restart from the best assignment found so far.
+        if let Some(signal) = ctx.restart {
+            let epoch = signal.epoch();
+            if epoch > seen_epoch {
+                seen_epoch = epoch;
+                let best = chain.best_assignment().to_vec();
+                chain.reseed(Rng::fork(spec.seed, chain_id as u64 + ((epoch as u64) << 32)));
+                chain.set_state(&best);
+            }
         }
         let n = every.min(spec.steps - done);
         chain.run(n);
@@ -198,6 +241,7 @@ pub(crate) fn run_software_chain(
         steps: chain.step_count,
         stats: chain.stats,
         sim: None,
+        multicore: None,
         wall: t0.elapsed(),
         marginal0: chain.marginal(0),
         best_x: chain.best_assignment().to_vec(),
@@ -316,6 +360,117 @@ impl ExecutionBackend for AcceleratorBackend {
             marginal0: sim.marginal(0),
             best_x: sim.x.clone(),
             sim: Some(rep),
+            multicore: None,
+            wall: t0.elapsed(),
+            objective_trace: trace,
+        })
+    }
+}
+
+/// The sharded multi-core MC²A system (§II-D): C single-core
+/// pipelines sharing a crossbar and the histogram memory, one model
+/// partitioned across them by [`crate::graph::partition_balanced`].
+///
+/// At `cores = 1` this is bit-identical — cycles, samples, state — to
+/// [`AcceleratorBackend`] (the shard compiler emits the same program
+/// and no interconnect cost is charged). At `cores > 1` only Block
+/// Gibbs and Async Gibbs can be sharded; the builder rejects other
+/// algorithms up front.
+#[derive(Clone, Copy, Debug)]
+pub struct MultiCoreAcceleratorBackend {
+    mhw: MultiHwConfig,
+}
+
+impl MultiCoreAcceleratorBackend {
+    /// A `cores`-core system of identical `hw` pipelines with the
+    /// default shared interconnect ([`MultiHwConfig::new`]). The shard
+    /// compiler always runs with the fusion optimizer on (the §Perf
+    /// ablation knob lives on the single-core [`AcceleratorBackend`]).
+    pub fn new(hw: HwConfig, cores: usize) -> MultiCoreAcceleratorBackend {
+        MultiCoreAcceleratorBackend { mhw: MultiHwConfig::new(hw, cores) }
+    }
+
+    /// Backend over a fully-specified multi-core configuration
+    /// (custom crossbar bandwidth / barrier latency).
+    pub fn with_config(mhw: MultiHwConfig) -> MultiCoreAcceleratorBackend {
+        MultiCoreAcceleratorBackend { mhw }
+    }
+
+    /// The multi-core hardware configuration this backend simulates.
+    pub fn hw(&self) -> &MultiHwConfig {
+        &self.mhw
+    }
+}
+
+impl ExecutionBackend for MultiCoreAcceleratorBackend {
+    fn name(&self) -> &'static str {
+        "multicore"
+    }
+
+    fn run_chain(
+        &self,
+        model: &dyn EnergyModel,
+        spec: &ChainSpec,
+        chain_id: usize,
+        ctx: &ChainCtx<'_>,
+    ) -> Result<ChainResult, Mc2aError> {
+        self.mhw.validate().map_err(Mc2aError::InvalidHardware)?;
+        let t0 = Instant::now();
+        let mut sim = MultiCoreSim::new(
+            self.mhw,
+            model,
+            spec.algo,
+            spec.pas_flips,
+            spec.chain_seed(chain_id),
+        )
+        .map_err(Mc2aError::InvalidConfig)?;
+        if let Some(x0) = &spec.init_state {
+            sim.set_state(x0);
+        }
+        let every = spec.observe_every.max(1);
+        let mut trace = Vec::new();
+        let mut best = f64::NEG_INFINITY;
+        let report = sim.run_observed(
+            spec.steps,
+            Some(spec.schedule),
+            &mut |iter, updates_so_far, x| {
+                let step = iter + 1;
+                if step % every == 0 || step == spec.steps {
+                    let objective = model.objective(x);
+                    best = best.max(objective);
+                    trace.push(objective);
+                    ctx.emit(ProgressEvent {
+                        chain_id,
+                        step,
+                        beta: spec.schedule.beta(iter),
+                        objective,
+                        best_objective: best,
+                        updates: updates_so_far,
+                    });
+                }
+                !ctx.stop_requested()
+            },
+        );
+        let merged = report.merged();
+        let stats = StepStats {
+            updates: merged.updates,
+            accepted: 0,
+            cost: OpCost {
+                ops: 0,
+                bytes: 4 * (merged.load_words + merged.store_words),
+                samples: merged.samples,
+            },
+        };
+        let final_objective = model.objective(&sim.x);
+        Ok(ChainResult {
+            chain_id,
+            best_objective: best.max(final_objective),
+            steps: merged.iterations as usize,
+            stats,
+            marginal0: sim.marginal(0),
+            best_x: sim.x.clone(),
+            sim: Some(merged),
+            multicore: Some(report),
             wall: t0.elapsed(),
             objective_trace: trace,
         })
@@ -464,6 +619,7 @@ impl ExecutionBackend for RuntimeBackend {
             steps: done,
             stats,
             sim: None,
+            multicore: None,
             wall: t0.elapsed(),
             marginal0,
             best_x: x,

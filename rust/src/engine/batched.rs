@@ -143,6 +143,7 @@ fn run_batch_item(
                     steps: batch.step_count,
                     stats: batch.stats[c],
                     sim: None,
+                    multicore: None,
                     wall,
                     marginal0: batch.marginal0(c),
                     best_x: batch.best_state(c),
@@ -251,6 +252,7 @@ mod tests {
         let ctx = ChainCtx {
             stop: &stop,
             events: None,
+            restart: None,
         };
         backend.run_chains(model, spec, chains, &ctx).unwrap()
     }
@@ -301,6 +303,7 @@ mod tests {
         let ctx = ChainCtx {
             stop: &stop,
             events: None,
+            restart: None,
         };
         let results = BatchedSoftwareBackend::new(4)
             .run_chains(&m, &s, 8, &ctx)

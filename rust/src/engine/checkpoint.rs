@@ -1,0 +1,204 @@
+//! Checkpoint / resume for chain runs.
+//!
+//! A [`Checkpoint`] captures the minimum needed to continue a search:
+//! the base seed, how many steps ran, and the best assignment (plus
+//! its objective, for sanity display). The CLI writes one with
+//! `--save-state <path>` after a run and feeds one back through the
+//! builder's `init_state` with `--init-from <path>`.
+//!
+//! The format is a single flat JSON object, hand-rolled both ways
+//! because the offline vendor set carries no serde:
+//!
+//! ```json
+//! {"seed":1,"steps":500,"best_objective":-42.5,"best_x":[0,1,2]}
+//! ```
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::engine::error::Mc2aError;
+
+/// Resumable snapshot of a chain run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    /// Base RNG seed the run used.
+    pub seed: u64,
+    /// Steps completed when the snapshot was taken.
+    pub steps: usize,
+    /// Objective of `best_x`.
+    pub best_objective: f64,
+    /// Best assignment found (the resume state).
+    pub best_x: Vec<u32>,
+}
+
+impl Checkpoint {
+    /// Serialize to the flat JSON object.
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(64 + self.best_x.len() * 4);
+        write!(
+            out,
+            "{{\"seed\":{},\"steps\":{},\"best_objective\":{},\"best_x\":[",
+            self.seed,
+            self.steps,
+            self.best_objective
+        )
+        .unwrap();
+        for (i, v) in self.best_x.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            write!(out, "{v}").unwrap();
+        }
+        out.push_str("]}");
+        out
+    }
+
+    /// Parse the flat JSON object produced by [`Checkpoint::to_json`]
+    /// (whitespace-tolerant; key order free).
+    pub fn from_json(s: &str) -> Result<Checkpoint, Mc2aError> {
+        let seed = scalar_field(s, "seed")?
+            .parse::<u64>()
+            .map_err(|e| bad("seed", &e.to_string()))?;
+        let steps = scalar_field(s, "steps")?
+            .parse::<usize>()
+            .map_err(|e| bad("steps", &e.to_string()))?;
+        let best_objective = scalar_field(s, "best_objective")?
+            .parse::<f64>()
+            .map_err(|e| bad("best_objective", &e.to_string()))?;
+        let body = array_field(s, "best_x")?;
+        let mut best_x = Vec::new();
+        for tok in body.split(',') {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            best_x.push(tok.parse::<u32>().map_err(|e| bad("best_x", &e.to_string()))?);
+        }
+        Ok(Checkpoint {
+            seed,
+            steps,
+            best_objective,
+            best_x,
+        })
+    }
+
+    /// Write the checkpoint to `path`.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), Mc2aError> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json())
+            .map_err(|e| Mc2aError::Checkpoint(format!("writing {}: {e}", path.display())))
+    }
+
+    /// Read a checkpoint from `path`.
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint, Mc2aError> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Mc2aError::Checkpoint(format!("reading {}: {e}", path.display())))?;
+        Checkpoint::from_json(&text)
+    }
+}
+
+fn bad(key: &str, why: &str) -> Mc2aError {
+    Mc2aError::Checkpoint(format!("field `{key}`: {why}"))
+}
+
+/// Locate `"key":` and return the byte offset just past the colon.
+fn value_start(s: &str, key: &str) -> Result<usize, Mc2aError> {
+    let pat = format!("\"{key}\"");
+    let k = s.find(&pat).ok_or_else(|| bad(key, "missing"))?;
+    let rest = &s[k + pat.len()..];
+    let colon = rest.find(':').ok_or_else(|| bad(key, "missing `:`"))?;
+    Ok(k + pat.len() + colon + 1)
+}
+
+/// Extract a numeric scalar field as a trimmed token.
+fn scalar_field<'a>(s: &'a str, key: &str) -> Result<&'a str, Mc2aError> {
+    let start = value_start(s, key)?;
+    let rest = &s[start..];
+    let end = rest.find(|c| c == ',' || c == '}').ok_or_else(|| bad(key, "unterminated value"))?;
+    Ok(rest[..end].trim())
+}
+
+/// Extract the inside of a `[...]` array field.
+fn array_field<'a>(s: &'a str, key: &str) -> Result<&'a str, Mc2aError> {
+    let start = value_start(s, key)?;
+    let rest = &s[start..];
+    let open = rest.find('[').ok_or_else(|| bad(key, "missing `[`"))?;
+    let close = rest[open..].find(']').ok_or_else(|| bad(key, "missing `]`"))?;
+    Ok(&rest[open + 1..open + close])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_round_trip() {
+        let ck = Checkpoint {
+            seed: 0xDEADBEEF,
+            steps: 12_345,
+            best_objective: -87.25,
+            best_x: vec![0, 3, 1, 2, 0, 1],
+        };
+        let parsed = Checkpoint::from_json(&ck.to_json()).unwrap();
+        assert_eq!(parsed, ck);
+    }
+
+    #[test]
+    fn empty_state_round_trips() {
+        let ck = Checkpoint {
+            seed: 1,
+            steps: 0,
+            best_objective: 0.0,
+            best_x: Vec::new(),
+        };
+        assert_eq!(Checkpoint::from_json(&ck.to_json()).unwrap(), ck);
+    }
+
+    #[test]
+    fn tolerates_whitespace_and_reordering() {
+        let text = r#"{ "best_x": [ 2, 0 , 1 ],
+                        "best_objective": 3.5,
+                        "steps": 7, "seed": 42 }"#;
+        let ck = Checkpoint::from_json(text).unwrap();
+        assert_eq!(ck.seed, 42);
+        assert_eq!(ck.steps, 7);
+        assert_eq!(ck.best_objective, 3.5);
+        assert_eq!(ck.best_x, vec![2, 0, 1]);
+    }
+
+    #[test]
+    fn malformed_inputs_are_typed_errors() {
+        for text in [
+            "",
+            "{}",
+            "{\"seed\":1}",
+            "{\"seed\":\"x\",\"steps\":1,\"best_objective\":0,\"best_x\":[]}",
+            "{\"seed\":1,\"steps\":1,\"best_objective\":0,\"best_x\":[1,-2]}",
+        ] {
+            assert!(
+                matches!(Checkpoint::from_json(text), Err(Mc2aError::Checkpoint(_))),
+                "accepted: {text}"
+            );
+        }
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let ck = Checkpoint {
+            seed: 9,
+            steps: 100,
+            best_objective: 1.5,
+            best_x: vec![1, 1, 0],
+        };
+        let path = std::env::temp_dir().join("mc2a_checkpoint_test.json");
+        ck.save(&path).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(loaded, ck);
+        assert!(matches!(
+            Checkpoint::load("/nonexistent/mc2a.json"),
+            Err(Mc2aError::Checkpoint(_))
+        ));
+    }
+}

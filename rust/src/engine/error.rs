@@ -26,6 +26,18 @@ pub enum Mc2aError {
         /// All registered workload names.
         known: Vec<String>,
     },
+    /// The requested bench is not in the harness. `known` lists every
+    /// bench name so callers can print the menu (mirrors
+    /// [`Mc2aError::UnknownWorkload`]).
+    UnknownBench {
+        /// The name that failed to resolve.
+        name: String,
+        /// All bench names.
+        known: Vec<String>,
+    },
+    /// A checkpoint file could not be written, read, or parsed
+    /// (`--save-state` / `--init-from`).
+    Checkpoint(String),
     /// The PJRT runtime backend cannot be used (feature disabled, or
     /// the artifact directory is missing/unloadable).
     RuntimeUnavailable(String),
@@ -49,6 +61,10 @@ impl fmt::Display for Mc2aError {
             Mc2aError::UnknownWorkload { name, known } => {
                 write!(f, "unknown workload `{name}`; available: {}", known.join(", "))
             }
+            Mc2aError::UnknownBench { name, known } => {
+                write!(f, "unknown bench `{name}`; available: {}", known.join(", "))
+            }
+            Mc2aError::Checkpoint(msg) => write!(f, "checkpoint error: {msg}"),
             Mc2aError::RuntimeUnavailable(msg) => write!(f, "PJRT runtime unavailable: {msg}"),
             Mc2aError::Runtime(msg) => write!(f, "PJRT runtime error: {msg}"),
             Mc2aError::ChainPanicked { chain_id } => {

@@ -24,7 +24,8 @@
 //!
 //! * [`ExecutionBackend`] — pluggable chain executors
 //!   ([`SoftwareBackend`], [`BatchedSoftwareBackend`],
-//!   [`AcceleratorBackend`], [`RuntimeBackend`], or any user type via
+//!   [`AcceleratorBackend`], [`MultiCoreAcceleratorBackend`],
+//!   [`RuntimeBackend`], or any user type via
 //!   [`EngineBuilder::backend`]); a backend runs single chains and may
 //!   override the whole-run fan-out,
 //! * [`scheduler`] — the work-stealing thread pool the batched backend
@@ -37,15 +38,18 @@
 
 pub mod backend;
 pub mod batched;
+pub mod checkpoint;
 pub mod error;
 pub mod observer;
 pub mod registry;
 pub mod scheduler;
 
 pub use backend::{
-    AcceleratorBackend, ChainCtx, ChainSpec, ExecutionBackend, RuntimeBackend, SoftwareBackend,
+    AcceleratorBackend, ChainCtx, ChainSpec, ExecutionBackend, MultiCoreAcceleratorBackend,
+    RestartSignal, RuntimeBackend, SoftwareBackend,
 };
 pub use batched::BatchedSoftwareBackend;
+pub use checkpoint::Checkpoint;
 pub use error::Mc2aError;
 pub use observer::{
     ChainObserver, ConvergenceStop, DiagnosticsReport, NullObserver, ObserverAction,
@@ -85,8 +89,19 @@ enum BackendChoice {
     Software,
     Batched,
     Accelerator(AcceleratorBackend),
+    MultiCore(HwConfig),
     Runtime(PathBuf),
     Custom(Box<dyn ExecutionBackend>),
+}
+
+/// Cold-chain restart policy (see
+/// [`EngineBuilder::restart_on_stagnation`]).
+#[derive(Clone, Copy, Debug)]
+pub struct RestartConfig {
+    /// Trigger while split R-hat stays above this value.
+    pub r_hat_threshold: f64,
+    /// Consecutive stagnant observation rounds required to trigger.
+    pub rounds: usize,
 }
 
 /// Fluent configuration for an [`Engine`] run.
@@ -109,6 +124,8 @@ pub struct EngineBuilder<'m> {
     backend: BackendChoice,
     batch: Option<usize>,
     threads: Option<usize>,
+    cores: Option<usize>,
+    restart: Option<RestartConfig>,
     observer: Option<Box<dyn ChainObserver>>,
 }
 
@@ -129,6 +146,8 @@ impl<'m> EngineBuilder<'m> {
             backend: BackendChoice::Software,
             batch: None,
             threads: None,
+            cores: None,
+            restart: None,
             observer: None,
         }
     }
@@ -241,6 +260,40 @@ impl<'m> EngineBuilder<'m> {
         self
     }
 
+    /// Run on the sharded multi-core MC²A simulator (§II-D) with `hw`
+    /// per core; choose the core count with [`EngineBuilder::cores`]
+    /// (default 1, which is bit-identical to the single-core
+    /// accelerator backend).
+    pub fn multicore(mut self, hw: HwConfig) -> Self {
+        self.backend = BackendChoice::MultiCore(hw);
+        self
+    }
+
+    /// Number of parallel MC²A cores (implies the multi-core
+    /// accelerator backend with the paper-default hardware when no
+    /// backend was chosen). `build()` rejects 0, more cores than the
+    /// model has RVs, and — at cores > 1 — algorithms that cannot be
+    /// sharded (only Block Gibbs and Async Gibbs can).
+    pub fn cores(mut self, cores: usize) -> Self {
+        self.cores = Some(cores);
+        if matches!(self.backend, BackendChoice::Software) {
+            self.backend = BackendChoice::MultiCore(HwConfig::paper_default());
+        }
+        self
+    }
+
+    /// Enable observer-driven cold-chain restarts (off by default):
+    /// when split R-hat stays above `r_hat_threshold` for `rounds`
+    /// consecutive observation rounds, every software chain re-forks
+    /// its RNG stream and restarts from its best state so far.
+    /// Honored by the scalar software chain runner (the thread-per-
+    /// chain backend and the batched backend's scalar fallback);
+    /// accelerator backends ignore it.
+    pub fn restart_on_stagnation(mut self, r_hat_threshold: f64, rounds: usize) -> Self {
+        self.restart = Some(RestartConfig { r_hat_threshold, rounds: rounds.max(1) });
+        self
+    }
+
     /// Run on the PJRT/XLA runtime path, loading artifacts from `dir`
     /// (requires the `xla-runtime` feature and `make artifacts`).
     pub fn runtime(mut self, dir: impl Into<PathBuf>) -> Self {
@@ -303,6 +356,40 @@ impl<'m> EngineBuilder<'m> {
                 "batch/threads apply to the batched software backend only".into(),
             ));
         }
+        // Same rule for `cores` and the multi-core backend; the shard
+        // constraints themselves live in one place
+        // ([`crate::sim::multicore::validate_shard_config`]).
+        if let Some(cores) = self.cores {
+            if !matches!(self.backend, BackendChoice::MultiCore(_)) {
+                return Err(Mc2aError::InvalidConfig(
+                    "cores applies to the multi-core accelerator backend only".into(),
+                ));
+            }
+            crate::sim::multicore::validate_shard_config(model_vars, self.algo, cores)
+                .map_err(Mc2aError::InvalidConfig)?;
+        }
+        // Split R-hat — the restart trigger — is undefined for a single
+        // chain, and only the software chain runners poll the signal;
+        // accepting other configs would make the feature a silent no-op.
+        if self.restart.is_some() {
+            if self.chains < 2 {
+                return Err(Mc2aError::InvalidConfig(
+                    "restart_on_stagnation needs at least 2 chains (split R-hat is \
+                     undefined for one chain)"
+                        .into(),
+                ));
+            }
+            if !matches!(
+                self.backend,
+                BackendChoice::Software | BackendChoice::Batched | BackendChoice::Custom(_)
+            ) {
+                return Err(Mc2aError::InvalidConfig(
+                    "restart_on_stagnation is honored by the software chain runners only \
+                     (software/batched backends)"
+                        .into(),
+                ));
+            }
+        }
         let backend: Box<dyn ExecutionBackend> = match self.backend {
             BackendChoice::Software => Box::new(SoftwareBackend),
             BackendChoice::Batched => {
@@ -317,6 +404,11 @@ impl<'m> EngineBuilder<'m> {
             BackendChoice::Accelerator(ab) => {
                 ab.hw().validate().map_err(Mc2aError::InvalidHardware)?;
                 Box::new(ab)
+            }
+            BackendChoice::MultiCore(hw) => {
+                let mb = MultiCoreAcceleratorBackend::new(hw, self.cores.unwrap_or(1));
+                mb.hw().validate().map_err(Mc2aError::InvalidHardware)?;
+                Box::new(mb)
             }
             BackendChoice::Runtime(dir) => Box::new(RuntimeBackend::new(dir)?),
             BackendChoice::Custom(b) => b,
@@ -340,6 +432,7 @@ impl<'m> EngineBuilder<'m> {
             },
             chains: self.chains,
             backend,
+            restart: self.restart,
             observer: self.observer,
             workload: self.workload,
         })
@@ -353,6 +446,7 @@ pub struct Engine<'m> {
     spec: ChainSpec,
     chains: usize,
     backend: Box<dyn ExecutionBackend>,
+    restart: Option<RestartConfig>,
     observer: Option<Box<dyn ChainObserver>>,
     workload: Option<&'static str>,
 }
@@ -411,13 +505,16 @@ impl<'m> Engine<'m> {
         let backend = self.backend.as_ref();
         let observer = &mut self.observer;
         let n = self.chains;
+        let restart_cfg = self.restart;
         let stop = AtomicBool::new(false);
+        let restart_signal = restart_cfg.map(|_| RestartSignal::default());
         let (tx, rx) = mpsc::channel::<ProgressEvent>();
 
         let result: Result<Vec<ChainResult>, Mc2aError> = std::thread::scope(|scope| {
             let ctx = ChainCtx {
                 stop: &stop,
                 events: Some(tx),
+                restart: restart_signal.as_ref(),
             };
             // The backend owns its scheduling; the coordinating thread
             // runs the event loop until every sender is gone (the
@@ -427,8 +524,22 @@ impl<'m> Engine<'m> {
             // Diagnostics are computed here, so observers can hold
             // plain mutable state.
             let mut tracker = DiagnosticsTracker::new(n);
+            let mut stagnant_rounds = 0usize;
             while let Ok(event) = rx.recv() {
                 let diag = tracker.record(&event);
+                // Cold-chain restarts: after `rounds` consecutive
+                // stagnant diagnostics rounds, bump the restart epoch
+                // — chains re-fork at their next observation boundary.
+                if let (Some(cfg), Some(d)) = (restart_cfg, &diag) {
+                    let stagnating = d.r_hat.is_some_and(|r| r > cfg.r_hat_threshold);
+                    stagnant_rounds = if stagnating { stagnant_rounds + 1 } else { 0 };
+                    if stagnant_rounds >= cfg.rounds {
+                        if let Some(signal) = restart_signal.as_ref() {
+                            signal.trigger();
+                        }
+                        stagnant_rounds = 0;
+                    }
+                }
                 if let Some(obs) = observer.as_deref_mut() {
                     if obs.on_progress(&event) == ObserverAction::Stop {
                         stop.store(true, Ordering::Relaxed);
@@ -540,6 +651,98 @@ mod tests {
         assert_eq!(e.backend_name(), "batched");
         // `.batched()` alone clamps the default batch to the chain count.
         assert!(Engine::for_model(&m).chains(2).batched().build().is_ok());
+    }
+
+    #[test]
+    fn builder_validates_cores() {
+        let m = PottsGrid::new(3, 3, 2, 0.5); // 9 RVs
+        assert!(matches!(
+            Engine::for_model(&m).cores(0).build(),
+            Err(Mc2aError::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            Engine::for_model(&m).cores(16).build(), // > 9 RVs
+            Err(Mc2aError::InvalidConfig(_))
+        ));
+        // `--cores` on a non-multicore backend is a contradiction.
+        assert!(matches!(
+            Engine::for_model(&m).accelerator(HwConfig::paper_default()).cores(2).build(),
+            Err(Mc2aError::InvalidConfig(_))
+        ));
+        // PAS cannot be sharded across cores.
+        assert!(matches!(
+            Engine::for_model(&m).algo(crate::mcmc::AlgoKind::Pas).cores(2).build(),
+            Err(Mc2aError::InvalidConfig(_))
+        ));
+        let e = Engine::for_model(&m).cores(2).build().unwrap();
+        assert_eq!(e.backend_name(), "multicore");
+        // `.multicore()` alone defaults to one core.
+        assert!(Engine::for_model(&m).multicore(HwConfig::fig10_toy()).build().is_ok());
+    }
+
+    #[test]
+    fn restart_signal_reforks_software_chain() {
+        use crate::engine::backend::run_software_chain;
+        let m = PottsGrid::new(5, 5, 2, 0.6);
+        let spec = ChainSpec {
+            algo: crate::mcmc::AlgoKind::Gibbs,
+            sampler: SamplerKind::Gumbel,
+            schedule: BetaSchedule::Constant(0.7),
+            steps: 40,
+            seed: 11,
+            pas_flips: 1,
+            observe_every: 5,
+            init_state: None,
+        };
+        let stop = AtomicBool::new(false);
+        let baseline = {
+            let ctx = ChainCtx {
+                stop: &stop,
+                events: None,
+                restart: None,
+            };
+            run_software_chain(&m, &spec, 0, &ctx).unwrap()
+        };
+        let signal = RestartSignal::default();
+        signal.trigger();
+        let restarted = {
+            let ctx = ChainCtx {
+                stop: &stop,
+                events: None,
+                restart: Some(&signal),
+            };
+            run_software_chain(&m, &spec, 0, &ctx).unwrap()
+        };
+        assert_eq!(signal.epoch(), 1);
+        assert_ne!(
+            baseline.objective_trace,
+            restarted.objective_trace,
+            "restart did not change the trajectory"
+        );
+    }
+
+    #[test]
+    fn stagnation_restart_run_completes() {
+        let m = PottsGrid::new(6, 6, 2, 0.5);
+        // One chain has no split R-hat: the builder rejects the config
+        // instead of letting the feature silently never fire.
+        assert!(matches!(
+            Engine::for_model(&m).restart_on_stagnation(1.1, 3).build(),
+            Err(Mc2aError::InvalidConfig(_))
+        ));
+        // Threshold 0 ⇒ every diagnostics round looks stagnant ⇒ the
+        // signal fires repeatedly; the run must still complete cleanly.
+        let metrics = Engine::for_model(&m)
+            .steps(200)
+            .chains(2)
+            .observe_every(10)
+            .restart_on_stagnation(0.0, 1)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(metrics.chains.len(), 2);
+        assert!(metrics.chains.iter().all(|c| c.steps == 200));
     }
 
     #[test]

@@ -1,14 +1,18 @@
 //! Graph substrate: sparse undirected graphs (CSR), generators for the
-//! Table I workload suite, and the greedy coloring used by Block Gibbs
-//! to partition RVs into conditionally-independent blocks.
+//! Table I workload suite, the greedy coloring used by Block Gibbs to
+//! partition RVs into conditionally-independent blocks, and the
+//! balanced partitioner that shards a model across multi-core MC²A
+//! simulations.
 
 mod coloring;
 mod generators;
+mod partition;
 
 pub use coloring::{color_greedy, Coloring};
 pub use generators::{
     erdos_renyi_with_edges, grid_2d, grid_2d_conn, power_law_graph, random_regular_ish,
 };
+pub use partition::{partition_balanced, Partition};
 
 /// An undirected graph in compressed-sparse-row form.
 ///

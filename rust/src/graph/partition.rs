@@ -1,0 +1,213 @@
+//! Graph partitioning for sharded multi-core simulation (§II-D).
+//!
+//! Scaling one model across C parallel MC²A cores means assigning each
+//! RV to exactly one core. The partitioner aims for the two properties
+//! the tiled-Gibbs literature (Duke MRF accelerator, AIA) optimizes:
+//! **balance** (every core gets `n/C` ± 1 RVs, so no core straggles at
+//! the color-class barrier) and **locality** (few cut edges, so little
+//! boundary state crosses the shared crossbar per sync round).
+//!
+//! Cross-shard *correctness* comes from [`super::coloring`]: the
+//! multi-core schedule syncs at color-class boundaries, and a proper
+//! coloring guarantees that all RVs updated within one class — across
+//! all cores — are conditionally independent, so cores never race on a
+//! Markov blanket.
+
+use super::Graph;
+
+/// A node → part assignment over `[0, num_parts)`.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    /// Per-node part id.
+    pub assignment: Vec<u32>,
+    /// Number of parts.
+    pub num_parts: u32,
+}
+
+impl Partition {
+    /// Group node ids by part: `parts()[p]` lists every node of part
+    /// `p`, in ascending id order.
+    pub fn parts(&self) -> Vec<Vec<u32>> {
+        let mut parts = vec![Vec::new(); self.num_parts as usize];
+        for (v, &p) in self.assignment.iter().enumerate() {
+            parts[p as usize].push(v as u32);
+        }
+        parts
+    }
+
+    /// Part owning node `v`.
+    #[inline]
+    pub fn part_of(&self, v: usize) -> usize {
+        self.assignment[v] as usize
+    }
+
+    /// Number of edges with endpoints in different parts — the traffic
+    /// the shared crossbar must carry per full sweep.
+    pub fn cut_edges(&self, g: &Graph) -> usize {
+        let mut cut = 0usize;
+        for v in 0..g.num_nodes() {
+            for &u in g.neighbors(v) {
+                if (u as usize) > v && self.assignment[v] != self.assignment[u as usize] {
+                    cut += 1;
+                }
+            }
+        }
+        cut
+    }
+
+    /// Per-node flag: does `v` have a neighbor in another part? A
+    /// boundary node's value must be broadcast after every update, so
+    /// this mask prices the per-round interconnect exchange.
+    pub fn boundary_mask(&self, g: &Graph) -> Vec<bool> {
+        (0..g.num_nodes())
+            .map(|v| {
+                g.neighbors(v).iter().any(|&u| self.assignment[u as usize] != self.assignment[v])
+            })
+            .collect()
+    }
+
+    /// Fraction of nodes on a shard boundary, in [0, 1] (the
+    /// roofline's interconnect-traffic estimate).
+    pub fn boundary_fraction(&self, g: &Graph) -> f64 {
+        let n = g.num_nodes();
+        if n == 0 || self.num_parts <= 1 {
+            return 0.0;
+        }
+        let b = self.boundary_mask(g).iter().filter(|&&x| x).count();
+        b as f64 / n as f64
+    }
+
+    /// Every node assigned to a valid part, and no part empty (when
+    /// `num_parts ≤ n`).
+    pub fn is_valid(&self, g: &Graph) -> bool {
+        if self.assignment.len() != g.num_nodes() {
+            return false;
+        }
+        let mut seen = vec![false; self.num_parts as usize];
+        for &p in &self.assignment {
+            if p >= self.num_parts {
+                return false;
+            }
+            seen[p as usize] = true;
+        }
+        self.num_parts as usize > g.num_nodes() || seen.iter().all(|&s| s)
+    }
+}
+
+/// Balanced BFS-grown partition: parts are grown one at a time from the
+/// lowest unassigned node id, absorbing neighbors first, so connected
+/// regions (grid stripes, community clusters) stay on one core. Part
+/// sizes are exactly `n/parts` ± 1. On a row-major 2-D grid this
+/// reduces to horizontal stripes — the minimum-cut contiguous layout.
+///
+/// `parts` must satisfy `1 ≤ parts ≤ n` (callers validate; the
+/// multi-core backend reports a typed error before getting here).
+pub fn partition_balanced(g: &Graph, parts: usize) -> Partition {
+    let n = g.num_nodes();
+    assert!(parts >= 1, "parts must be ≥ 1");
+    assert!(parts <= n.max(1), "parts ({parts}) exceed nodes ({n})");
+    let mut assignment = vec![u32::MAX; n];
+    let base = n / parts;
+    let extra = n % parts;
+    let mut next_seed = 0usize;
+    for p in 0..parts {
+        let target = base + usize::from(p < extra);
+        let mut taken = 0usize;
+        let mut queue = std::collections::VecDeque::new();
+        while taken < target {
+            if queue.is_empty() {
+                // Next seed: lowest unassigned node (restarts across
+                // disconnected components).
+                while assignment[next_seed] != u32::MAX {
+                    next_seed += 1;
+                }
+                queue.push_back(next_seed as u32);
+                assignment[next_seed] = p as u32;
+                taken += 1;
+                if taken == target {
+                    break;
+                }
+            }
+            let v = queue.pop_front().unwrap();
+            for &u in g.neighbors(v as usize) {
+                if assignment[u as usize] == u32::MAX {
+                    assignment[u as usize] = p as u32;
+                    queue.push_back(u);
+                    taken += 1;
+                    if taken == target {
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    Partition {
+        assignment,
+        num_parts: parts as u32,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{erdos_renyi_with_edges, grid_2d};
+
+    #[test]
+    fn partition_covers_and_balances() {
+        let g = erdos_renyi_with_edges(103, 400, 7);
+        for parts in [1, 2, 4, 8] {
+            let p = partition_balanced(&g, parts);
+            assert!(p.is_valid(&g), "parts={parts}");
+            let sizes: Vec<usize> = p.parts().iter().map(Vec::len).collect();
+            assert_eq!(sizes.iter().sum::<usize>(), 103);
+            let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1, "unbalanced: {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn single_part_has_no_cut() {
+        let g = grid_2d(8, 8);
+        let p = partition_balanced(&g, 1);
+        assert_eq!(p.cut_edges(&g), 0);
+        assert_eq!(p.boundary_fraction(&g), 0.0);
+    }
+
+    #[test]
+    fn grid_partition_cuts_far_fewer_edges_than_total() {
+        let g = grid_2d(16, 16);
+        let p = partition_balanced(&g, 4);
+        let cut = p.cut_edges(&g);
+        assert!(cut > 0);
+        // BFS growth keeps stripes contiguous: the cut stays near the
+        // 3 × 16 stripe-boundary ideal, far below the 480 total edges.
+        assert!(cut <= 6 * 16, "cut={cut}");
+    }
+
+    #[test]
+    fn boundary_mask_matches_cut_structure() {
+        let g = grid_2d(6, 6);
+        let p = partition_balanced(&g, 2);
+        let mask = p.boundary_mask(&g);
+        for v in 0..g.num_nodes() {
+            let expect = g.neighbors(v).iter().any(|&u| p.part_of(u as usize) != p.part_of(v));
+            assert_eq!(mask[v], expect, "node {v}");
+        }
+    }
+
+    #[test]
+    fn parts_equal_nodes_is_fine() {
+        let g = grid_2d(3, 3);
+        let p = partition_balanced(&g, 9);
+        assert!(p.is_valid(&g));
+        assert!(p.parts().iter().all(|part| part.len() == 1));
+    }
+
+    #[test]
+    fn deterministic() {
+        let g = erdos_renyi_with_edges(64, 200, 3);
+        let a = partition_balanced(&g, 4);
+        let b = partition_balanced(&g, 4);
+        assert_eq!(a.assignment, b.assignment);
+    }
+}

@@ -119,6 +119,58 @@ impl HwConfig {
     }
 }
 
+/// Design-time parameters of a C-core MC²A system (§II-D): C identical
+/// single-core pipelines sharing a crossbar and the histogram memory.
+///
+/// The shared interconnect is characterized by its word bandwidth and a
+/// fixed per-barrier latency; both are charged by the multi-core
+/// simulator only when `cores > 1` (a single core owns its ports, which
+/// keeps the 1-core system cycle-identical to [`HwConfig`] alone).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MultiHwConfig {
+    /// Per-core configuration (all cores are identical).
+    pub core: HwConfig,
+    /// Number of parallel MC²A cores `C`.
+    pub cores: usize,
+    /// Shared crossbar / histogram-port bandwidth in 32-bit words per
+    /// cycle (boundary-state broadcast + histogram commits contend on
+    /// this).
+    pub xbar_words_per_cycle: usize,
+    /// Fixed barrier cost per synchronization round in cycles
+    /// (crossbar arbitration + barrier release).
+    pub sync_latency: usize,
+}
+
+/// Default per-barrier latency: one crossbar-arbitration cycle plus
+/// one barrier-release cycle.
+pub const DEFAULT_SYNC_LATENCY: usize = 2;
+
+impl MultiHwConfig {
+    /// A `cores`-core system of identical `core` pipelines with the
+    /// default interconnect: the crossbar matches one core's memory
+    /// bandwidth and a barrier costs [`DEFAULT_SYNC_LATENCY`] cycles.
+    pub fn new(core: HwConfig, cores: usize) -> MultiHwConfig {
+        MultiHwConfig {
+            cores,
+            xbar_words_per_cycle: core.bw_words,
+            sync_latency: DEFAULT_SYNC_LATENCY,
+            core,
+        }
+    }
+
+    /// Sanity-check internal consistency.
+    pub fn validate(&self) -> Result<(), String> {
+        self.core.validate()?;
+        if self.cores == 0 {
+            return Err("core count must be ≥ 1".into());
+        }
+        if self.xbar_words_per_cycle == 0 {
+            return Err("shared crossbar bandwidth must be ≥ 1 word/cycle".into());
+        }
+        Ok(())
+    }
+}
+
 /// The six pipeline-control types of the VLIW ISA (§V-B).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum CtrlType {
@@ -438,6 +490,20 @@ mod tests {
     #[test]
     fn toy_config_valid() {
         assert!(HwConfig::fig10_toy().validate().is_ok());
+    }
+
+    #[test]
+    fn multi_core_config_validates() {
+        let m = MultiHwConfig::new(HwConfig::paper_default(), 8);
+        assert!(m.validate().is_ok());
+        assert_eq!(m.xbar_words_per_cycle, 320);
+        assert_eq!(m.sync_latency, DEFAULT_SYNC_LATENCY);
+        let mut bad = m;
+        bad.cores = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = m;
+        bad.xbar_words_per_cycle = 0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -23,12 +23,14 @@
 //!
 //! * [`engine`] — **the public API**: [`engine::EngineBuilder`] run
 //!   configuration, the [`engine::ExecutionBackend`] trait with
-//!   software / batched-software / accelerator-sim / PJRT-runtime
-//!   implementations, the [`engine::scheduler`] work-stealing thread
-//!   pool that multiplexes `chains / batch` work items over a fixed
-//!   worker set, the [`engine::ChainObserver`] streaming-diagnostics
-//!   API, the typed [`engine::Mc2aError`], and the named-workload
-//!   [`engine::registry`].
+//!   software / batched-software / accelerator-sim / sharded
+//!   multi-core / PJRT-runtime implementations, the
+//!   [`engine::scheduler`] work-stealing thread pool that multiplexes
+//!   `chains / batch` work items over a fixed worker set, the
+//!   [`engine::ChainObserver`] streaming-diagnostics API with
+//!   optional cold-chain restarts, [`engine::Checkpoint`]
+//!   save/resume, the typed [`engine::Mc2aError`], and the
+//!   named-workload [`engine::registry`].
 //! * [`energy`] — discrete energy models (Ising/Potts grids, Bayesian
 //!   networks, combinatorial-optimization graphs, RBMs) behind the common
 //!   [`energy::EnergyModel`] trait, with batched (structure-of-arrays)
@@ -42,9 +44,11 @@
 //!   Memory Intensity × Throughput) and the design-space exploration that
 //!   selects the accelerator parameters (Fig. 6, Fig. 11).
 //! * [`isa`] / [`compiler`] / [`sim`] — the MC²A accelerator itself: the
-//!   VLIW instruction set (Fig. 7c), the scheduling compiler, and a
-//!   cycle-accurate simulator of the 4-stage pipeline with tree-CU,
-//!   reconfigurable Gumbel SU, crossbar and multi-bank register file.
+//!   VLIW instruction set (Fig. 7c), the scheduling compiler (single-
+//!   core and per-shard), and a cycle-accurate simulator of the 4-stage
+//!   pipeline with tree-CU, reconfigurable Gumbel SU, crossbar and
+//!   multi-bank register file — plus [`sim::multicore`], the sharded
+//!   C-core system of §II-D with its shared-crossbar contention model.
 //! * [`baselines`] — calibrated models of the comparison platforms
 //!   (CPU/GPU/TPU and the SPU/PGMA/CoopMC/sIM/PROCA accelerators).
 //! * [`runtime`] — PJRT client that loads the AOT-compiled JAX/Pallas

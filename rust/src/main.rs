@@ -2,13 +2,15 @@
 //!
 //! ```text
 //! mc2a table1 [--full]
-//! mc2a bench <fig5|fig6|fig11|fig12|fig13|fig14|fig15|chains|headline|all> [--full]
+//! mc2a bench <fig5|fig6|fig11|fig12|fig13|fig14|fig15|chains|cores|headline|all> [--full]
 //! mc2a run --workload <name> [--algo mh|gibbs|bg|ag|pas]
 //!          [--sampler cdf|gumbel|lut] [--steps N] [--chains N]
-//!          [--backend sim|sw|batched|runtime] [--batch K] [--threads T]
+//!          [--backend sim|sw|batched|multicore|runtime]
+//!          [--batch K] [--threads T] [--cores C]
 //!          [--beta B] [--seed S] [--observe N]
+//!          [--save-state PATH] [--init-from PATH]
 //! mc2a workloads
-//! mc2a roofline [--workload <name>]
+//! mc2a roofline [--workload <name>] [--cores C]
 //! mc2a dse
 //! mc2a runtime-check [--artifacts DIR]
 //! ```
@@ -19,9 +21,10 @@
 //! this file is the only place allowed to call `process::exit`.
 
 use mc2a::bench;
-use mc2a::engine::{registry, Engine, Mc2aError, PrintObserver};
-use mc2a::isa::HwConfig;
+use mc2a::engine::{registry, Checkpoint, Engine, Mc2aError, PrintObserver};
+use mc2a::isa::{HwConfig, MultiHwConfig};
 use mc2a::mcmc::{AlgoKind, BetaSchedule, SamplerKind};
+use mc2a::rng::Rng;
 use mc2a::roofline::{self, WorkloadProfile};
 use mc2a::runtime::Runtime;
 
@@ -31,13 +34,15 @@ fn usage() -> ! {
 
 USAGE:
   mc2a table1 [--full]
-  mc2a bench <fig5|fig6|fig11|fig12|fig13|fig14|fig15|chains|headline|all> [--full]
+  mc2a bench <fig5|fig6|fig11|fig12|fig13|fig14|fig15|chains|cores|headline|all> [--full]
   mc2a run --workload <name> [--algo mh|gibbs|bg|ag|pas]
            [--sampler cdf|gumbel|lut] [--steps N] [--chains N]
-           [--backend sim|sw|batched|runtime] [--batch K] [--threads T]
+           [--backend sim|sw|batched|multicore|runtime]
+           [--batch K] [--threads T] [--cores C]
            [--beta B] [--seed S] [--observe N]
+           [--save-state PATH] [--init-from PATH]
   mc2a workloads
-  mc2a roofline [--workload <name>]
+  mc2a roofline [--workload <name>] [--cores C]
   mc2a dse
   mc2a runtime-check [--artifacts DIR]
 
@@ -81,18 +86,21 @@ fn cmd_bench(args: &[String]) -> Result<(), Mc2aError> {
             "fig14" => bench::fig14(quick),
             "fig15" => bench::fig15(quick),
             "chains" => bench::many_chains(quick)?,
+            "cores" => bench::core_scaling(quick)?,
             "headline" => bench::headline(quick),
             other => {
-                return Err(Mc2aError::InvalidConfig(format!(
-                    "unknown figure {other} (fig5|fig6|fig11|fig12|fig13|fig14|fig15|chains|headline|all)"
-                )))
+                let mut known: Vec<String> =
+                    bench::BENCH_NAMES.iter().map(|s| s.to_string()).collect();
+                known.push("all".into());
+                return Err(Mc2aError::UnknownBench {
+                    name: other.to_string(),
+                    known,
+                });
             }
         })
     };
     if which == "all" {
-        for f in [
-            "fig5", "fig6", "fig11", "fig12", "fig13", "fig14", "fig15", "chains", "headline",
-        ] {
+        for f in bench::BENCH_NAMES {
             println!("{}", run(f)?);
         }
     } else {
@@ -120,7 +128,26 @@ fn cmd_run(args: &[String]) -> Result<(), Mc2aError> {
     let steps: usize = parsed_flag(args, "--steps")?.unwrap_or(200);
     let chains: usize = parsed_flag(args, "--chains")?.unwrap_or(1);
     let beta: f32 = parsed_flag(args, "--beta")?.unwrap_or(1.0);
-    let seed: u64 = parsed_flag(args, "--seed")?.unwrap_or(1);
+    let seed_flag: Option<u64> = parsed_flag(args, "--seed")?;
+    // Steps completed before this invocation (from `--init-from`), so a
+    // later `--save-state` records cumulative progress across resumes.
+    let mut prior_steps = 0usize;
+    // Without an explicit --seed, a resumed run continues on a seed
+    // derived from (checkpoint seed, checkpoint steps) — replaying the
+    // original RNG streams from the best state would just re-explore
+    // the same trajectories.
+    let mut resume_seed: Option<u64> = None;
+    if let Some(path) = flag_value(args, "--init-from") {
+        let ck = Checkpoint::load(&path)?;
+        prior_steps = ck.steps;
+        resume_seed = Some(Rng::fork_seed(ck.seed, ck.steps as u64 + 1));
+        println!(
+            "resuming from {path}: {} steps done, best objective {:.2}",
+            ck.steps, ck.best_objective
+        );
+        builder = builder.init_state(ck.best_x);
+    }
+    let seed: u64 = seed_flag.or(resume_seed).unwrap_or(1);
     builder = builder
         .steps(steps)
         .chains(chains)
@@ -129,8 +156,10 @@ fn cmd_run(args: &[String]) -> Result<(), Mc2aError> {
     let hw = HwConfig::paper_default();
     let batch: Option<usize> = parsed_flag(args, "--batch")?;
     let threads: Option<usize> = parsed_flag(args, "--threads")?;
+    let cores: Option<usize> = parsed_flag(args, "--cores")?;
     builder = match flag_value(args, "--backend").as_deref() {
         Some("sim") => builder.accelerator(hw),
+        Some("multicore") => builder.multicore(hw),
         Some("runtime") => {
             builder.runtime(flag_value(args, "--artifacts").unwrap_or_else(|| "artifacts".into()))
         }
@@ -144,12 +173,19 @@ fn cmd_run(args: &[String]) -> Result<(), Mc2aError> {
                     .into(),
             ))
         }
-        // With no backend flag, `--batch`/`--threads` below switch the
-        // default software backend to batched via the builder.
+        Some("sw") if cores.is_some() => {
+            return Err(Mc2aError::InvalidConfig(
+                "--cores requires the multi-core backend (drop --backend sw \
+                 or use --backend multicore)"
+                    .into(),
+            ))
+        }
+        // With no backend flag, `--batch`/`--threads`/`--cores` below
+        // switch the default software backend via the builder.
         Some("sw") | None => builder.software(),
         Some(other) => {
             return Err(Mc2aError::InvalidConfig(format!(
-                "unknown backend {other:?} (sim|sw|batched|runtime)"
+                "unknown backend {other:?} (sim|sw|batched|multicore|runtime)"
             )))
         }
     };
@@ -158,6 +194,9 @@ fn cmd_run(args: &[String]) -> Result<(), Mc2aError> {
     }
     if let Some(t) = threads {
         builder = builder.threads(t);
+    }
+    if let Some(c) = cores {
+        builder = builder.cores(c);
     }
     if let Some(every) = parsed_flag::<usize>(args, "--observe")? {
         builder = builder
@@ -189,6 +228,23 @@ fn cmd_run(args: &[String]) -> Result<(), Mc2aError> {
             );
         }
         println!();
+        if let Some(mc) = &c.multicore {
+            let util = mc
+                .core_utilization()
+                .iter()
+                .map(|u| format!("{:.2}", u))
+                .collect::<Vec<_>>()
+                .join(" ");
+            println!(
+                "  {} cores: aggregate {:.4} GS/s, sync overhead {:.1}%, \
+                 {} xfer words, cut edges {}, per-core utilization [{util}]",
+                mc.cores(),
+                mc.aggregate_gsps(&hw),
+                100.0 * mc.sync_overhead_fraction(),
+                mc.xfer_words,
+                mc.cut_edges,
+            );
+        }
     }
     println!(
         "best objective overall: {:.2}; software wall throughput {:.3e} updates/s",
@@ -197,6 +253,29 @@ fn cmd_run(args: &[String]) -> Result<(), Mc2aError> {
     );
     if let Some(r) = metrics.split_r_hat() {
         println!("split R-hat {:.4}, min ESS {:.1}", r, metrics.min_ess());
+    }
+    if let Some(path) = flag_value(args, "--save-state") {
+        // On accelerator backends `best_x` is the *final* state, whose
+        // objective can trail `best_objective`; the checkpoint contract
+        // pairs `best_objective` with `best_x`, so score each chain's
+        // saved state directly and keep the best one.
+        let (best, objective) = metrics
+            .chains
+            .iter()
+            .map(|c| (c, engine.model().objective(&c.best_x)))
+            .reduce(|a, b| if b.1 > a.1 { b } else { a })
+            .ok_or_else(|| Mc2aError::InvalidConfig("no chains to checkpoint".into()))?;
+        let ck = Checkpoint {
+            seed,
+            steps: prior_steps + best.steps,
+            best_objective: objective,
+            best_x: best.best_x.clone(),
+        };
+        ck.save(&path)?;
+        println!(
+            "saved checkpoint to {path} (chain {}, state objective {objective:.2})",
+            best.chain_id
+        );
     }
     Ok(())
 }
@@ -232,6 +311,31 @@ fn cmd_roofline(args: &[String]) -> Result<(), Mc2aError> {
             "TP={:.4} GS/s (SU {:.4} / CU {:.4} / MEM {:.4}) bottleneck={:?}",
             r.tp_gsps, r.su_roof, r.cu_roof, r.mem_roof, r.bottleneck
         );
+        if let Some(cores) = parsed_flag::<usize>(args, "--cores")? {
+            let g = wl.model.interaction();
+            mc2a::sim::multicore::validate_shard_config(g.num_nodes(), wl.algorithm, cores)
+                .map_err(Mc2aError::InvalidConfig)?;
+            let bf = mc2a::graph::partition_balanced(g, cores).boundary_fraction(g);
+            let m = roofline::evaluate_multicore(&MultiHwConfig::new(hw, cores), &p, bf);
+            println!(
+                "C={} cores: TP={:.4} GS/s (linear {:.4} / xbar roof {:.4}, \
+                 boundary fraction {:.3}) bottleneck={}",
+                m.cores,
+                m.tp_gsps,
+                m.linear_tp,
+                m.xbar_roof,
+                bf,
+                if m.interconnect_bound {
+                    "SharedInterconnect"
+                } else {
+                    "PerCoreEnvelope"
+                }
+            );
+        }
+    } else if has_flag(args, "--cores") {
+        return Err(Mc2aError::InvalidConfig(
+            "--cores needs a workload point to evaluate (add --workload <name>)".into(),
+        ));
     } else {
         println!("{}", bench::fig6());
     }

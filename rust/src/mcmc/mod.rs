@@ -271,6 +271,13 @@ impl<'m> Chain<'m> {
         }
     }
 
+    /// Replace the RNG stream — the engine's cold-chain restart hook:
+    /// a stagnating chain is handed a freshly-forked stream so its
+    /// continuation explores a different trajectory.
+    pub fn reseed(&mut self, rng: Rng) {
+        self.rng = rng;
+    }
+
     /// Overwrite the current assignment and re-seed the best-so-far
     /// tracking from it (the random state chosen at construction is
     /// discarded entirely).

@@ -16,7 +16,7 @@ pub mod dse;
 pub use dse::{area_units, dse_sweep, DseCandidate, DseResult};
 
 use crate::energy::EnergyModel;
-use crate::isa::HwConfig;
+use crate::isa::{HwConfig, MultiHwConfig};
 use crate::mcmc::AlgoKind;
 
 /// A workload's position in the roofline plane plus the SU shape it
@@ -145,6 +145,64 @@ pub fn evaluate(hw: &HwConfig, w: &WorkloadProfile) -> RooflinePoint {
     }
 }
 
+/// The C-core operating point plotted against the single-core one
+/// (§II-D scaling): each core is bounded by the single-core envelope,
+/// and the aggregate is additionally capped by the shared
+/// crossbar/histogram port every sample must cross.
+#[derive(Clone, Copy, Debug)]
+pub struct MultiCorePoint {
+    /// The single-core evaluation (the reference point).
+    pub single: RooflinePoint,
+    /// Core count C.
+    pub cores: usize,
+    /// Ideal linear scaling: C × single-core TP, GS/s.
+    pub linear_tp: f64,
+    /// Shared-interconnect roof, GS/s (∞ at C = 1 — a single core
+    /// owns its ports).
+    pub xbar_roof: f64,
+    /// Predicted aggregate throughput: min(linear, crossbar), GS/s.
+    pub tp_gsps: f64,
+    /// True when the shared interconnect (not the per-core envelope)
+    /// binds — the point where adding cores stops paying.
+    pub interconnect_bound: bool,
+}
+
+/// Evaluate the C-core roofline at a workload point.
+///
+/// `boundary_fraction` is the fraction of samples whose RV sits on a
+/// shard boundary (obtain it from
+/// [`crate::graph::Partition::boundary_fraction`]); each such sample
+/// broadcasts one word, and every sample commits one shared-histogram
+/// word, so the port moves `boundary_fraction + 1` words per sample.
+pub fn evaluate_multicore(
+    mhw: &MultiHwConfig,
+    w: &WorkloadProfile,
+    boundary_fraction: f64,
+) -> MultiCorePoint {
+    let single = evaluate(&mhw.core, w);
+    let linear_tp = single.tp_gsps * mhw.cores as f64;
+    if mhw.cores <= 1 {
+        return MultiCorePoint {
+            single,
+            cores: mhw.cores,
+            linear_tp,
+            xbar_roof: f64::INFINITY,
+            tp_gsps: single.tp_gsps,
+            interconnect_bound: false,
+        };
+    }
+    let words_per_sample = boundary_fraction.max(0.0) + 1.0;
+    let xbar_roof = mhw.xbar_words_per_cycle as f64 * mhw.core.clock_ghz / words_per_sample;
+    MultiCorePoint {
+        single,
+        cores: mhw.cores,
+        linear_tp,
+        xbar_roof,
+        tp_gsps: linear_tp.min(xbar_roof),
+        interconnect_bound: xbar_roof < linear_tp,
+    }
+}
+
 /// The roofline apex (the purple star of Fig. 6a): the (CI*, MI*) where
 /// the three roofs intersect — the workload shape this hardware serves
 /// with every unit saturated.
@@ -231,6 +289,29 @@ mod tests {
         assert_eq!(p.bottleneck, Bottleneck::Balanced);
         assert!((p.cu_roof - p.su_roof).abs() / p.su_roof < 1e-9);
         assert!((p.mem_roof - p.su_roof).abs() / p.su_roof < 1e-9);
+    }
+
+    #[test]
+    fn multicore_roofline_scales_until_the_crossbar_binds() {
+        use crate::isa::MultiHwConfig;
+        let w = WorkloadProfile::fig6_ising_example();
+        let hw = HwConfig::paper_default();
+        let one = evaluate_multicore(&MultiHwConfig::new(hw, 1), &w, 0.2);
+        assert_eq!(one.tp_gsps, one.single.tp_gsps);
+        assert!(!one.interconnect_bound);
+
+        let four = evaluate_multicore(&MultiHwConfig::new(hw, 4), &w, 0.2);
+        assert!(four.tp_gsps > one.tp_gsps);
+        assert!(four.tp_gsps <= four.linear_tp);
+
+        // Saturate the shared port: heavy boundary traffic on many
+        // cores must become interconnect-bound below linear scaling.
+        let mut mhw = MultiHwConfig::new(hw, 64);
+        mhw.xbar_words_per_cycle = 8;
+        let congested = evaluate_multicore(&mhw, &w, 1.0);
+        assert!(congested.interconnect_bound);
+        assert!(congested.tp_gsps < congested.linear_tp);
+        assert!((congested.tp_gsps - congested.xbar_roof).abs() < 1e-12);
     }
 
     #[test]

@@ -20,9 +20,11 @@
 //! accelerator", §VI-A).
 
 pub mod energy;
+pub mod multicore;
 pub mod su;
 
 pub use energy::{EnergyBreakdown, EnergyParams};
+pub use multicore::{MultiCoreReport, MultiCoreSim};
 
 use crate::energy::EnergyModel;
 use crate::isa::{CtrlType, HwConfig, Instr, Program, Semantics, SuMode};
@@ -43,6 +45,15 @@ pub struct SimReport {
     pub stall_mem_bw: u64,
     /// Extra cycles from RF bank conflicts.
     pub stall_bank: u64,
+    /// Cycles spent idle at multi-core synchronization barriers,
+    /// waiting for slower shards (0 on single-core runs).
+    pub stall_sync: u64,
+    /// Cycles spent on the shared crossbar / histogram port moving
+    /// boundary state between cores (0 on single-core runs).
+    pub stall_xbar: u64,
+    /// 32-bit words exchanged over the inter-core crossbar (boundary
+    /// broadcasts + shared-histogram commits; 0 on single-core runs).
+    pub xfer_words: u64,
     /// Cycles where the CU had work.
     pub cu_busy: u64,
     /// Cycles where the SU had work.
@@ -107,6 +118,16 @@ impl SimReport {
         }
     }
 
+    /// Fraction of cycles lost to multi-core synchronization (barrier
+    /// waits + shared-interconnect transfers); 0 on single-core runs.
+    pub fn sync_overhead(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            (self.stall_sync + self.stall_xbar) as f64 / self.cycles as f64
+        }
+    }
+
     /// Average power in watts.
     pub fn watts(&self, hw: &HwConfig) -> f64 {
         self.energy.avg_watts(self.seconds(hw))
@@ -121,6 +142,27 @@ impl SimReport {
             self.gsps(hw) / w
         }
     }
+}
+
+/// Build the flattened per-RV state-count layout shared by the
+/// sample/histogram memories: per-RV offsets (length `n + 1`) plus the
+/// total word count.
+fn hist_layout(model: &dyn EnergyModel) -> (Vec<usize>, usize) {
+    let mut offsets = Vec::with_capacity(model.num_vars() + 1);
+    let mut acc = 0usize;
+    for i in 0..model.num_vars() {
+        offsets.push(acc);
+        acc += model.num_states(i);
+    }
+    offsets.push(acc);
+    (offsets, acc)
+}
+
+/// Empirical marginal of RV `i` from a flattened histogram.
+fn marginal_of(hist: &[u64], offsets: &[usize], i: usize) -> Vec<f64> {
+    let span = &hist[offsets[i]..offsets[i + 1]];
+    let total: u64 = span.iter().sum();
+    span.iter().map(|&c| c as f64 / total.max(1) as f64).collect()
 }
 
 /// The MC²A accelerator simulator bound to a workload model.
@@ -152,13 +194,7 @@ impl<'m> Simulator<'m> {
         hw.validate().expect("invalid hardware config");
         let mut rng = Rng::new(seed);
         let x = crate::energy::random_state(model, &mut rng);
-        let mut hist_offsets = Vec::with_capacity(model.num_vars() + 1);
-        let mut acc = 0usize;
-        for i in 0..model.num_vars() {
-            hist_offsets.push(acc);
-            acc += model.num_states(i);
-        }
-        hist_offsets.push(acc);
+        let (hist_offsets, acc) = hist_layout(model);
         Simulator {
             sampler: GumbelLutSampler::new(hw.lut_size, hw.lut_bits),
             hw,
@@ -192,11 +228,7 @@ impl<'m> Simulator<'m> {
 
     /// Empirical marginal of RV `i` from the histogram memory.
     pub fn marginal(&self, i: usize) -> Vec<f64> {
-        let span = &self.hist[self.hist_offsets[i]..self.hist_offsets[i + 1]];
-        let total: u64 = span.iter().sum();
-        span.iter()
-            .map(|&c| c as f64 / total.max(1) as f64)
-            .collect()
+        marginal_of(&self.hist, &self.hist_offsets, i)
     }
 
     /// Run `iterations` HWLOOP trips of `program`, returning the report.

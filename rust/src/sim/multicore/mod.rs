@@ -1,0 +1,575 @@
+//! Sharded multi-core MC²A simulation (§II-D).
+//!
+//! The paper's system-level claim is that single-core MC²A "can easily
+//! be scaled to support multiple chains … by instantiating multiple
+//! parallel MC²A cores" sharing a crossbar and the histogram memory.
+//! [`MultiCoreSim`] models exactly that system for the *one-model,
+//! many-cores* axis: one workload is sharded across C single-core
+//! [`Simulator`] pipelines by [`crate::graph::partition_balanced`],
+//! each core runs the shard program emitted by
+//! [`crate::compiler::compile_shard`], and the cores synchronize at
+//! color-class boundaries where they exchange boundary state over the
+//! shared crossbar.
+//!
+//! **Timing model.** Per synchronization round, every core advances
+//! independently through its shard's instructions (the single-core
+//! 4-stage pipeline model, reused verbatim), then the round closes
+//! with a barrier: faster cores idle until the slowest finishes
+//! (`stall_sync`), and the boundary words all cores broadcast drain
+//! through the shared crossbar at `xbar_words_per_cycle`, plus a fixed
+//! arbitration latency (`stall_xbar`). Once per iteration the cores
+//! also commit their RV states to the *shared histogram memory*
+//! (banked by shard; each core's commits cross the crossbar, and the
+//! critical path pays for the largest shard). All inter-core costs are charged only
+//! when C > 1 — a 1-core system is cycle-identical (and sample-
+//! identical) to the plain single-core [`Simulator`].
+//!
+//! **Functional model.** Correctness across shards comes from the
+//! coloring: within one color class every RV — on any core — is
+//! conditionally independent of every other, so cores can update
+//! concurrently as long as boundary state is exchanged *between*
+//! classes. The simulator enforces exactly that: a master assignment
+//! is broadcast to all cores at the start of each round and each
+//! core's committed updates are merged back at the end, so the sampled
+//! distribution is the same as the single-core Block Gibbs chain
+//! (Async Gibbs keeps its snapshot semantics; boundary staleness is
+//! the algorithm's own contract).
+
+use crate::compiler::compile_shard;
+use crate::energy::EnergyModel;
+use crate::graph::{partition_balanced, Partition};
+use crate::isa::{HwConfig, MultiHwConfig, Program, Semantics};
+use crate::mcmc::{AlgoKind, BetaSchedule};
+use crate::rng::Rng;
+use crate::sim::{SimReport, Simulator};
+
+/// Aggregate of a multi-core run: per-core reports plus the
+/// synchronized (barrier-aligned) totals.
+#[derive(Clone, Debug)]
+pub struct MultiCoreReport {
+    /// One report per core, barrier-aligned: every core's `cycles`
+    /// includes its sync waits, so all cores finish at [`MultiCoreReport::cycles`].
+    pub per_core: Vec<SimReport>,
+    /// Makespan in cycles (all cores, barriers included).
+    pub cycles: u64,
+    /// MCMC iterations completed.
+    pub iterations: u64,
+    /// Total 32-bit words moved over the shared crossbar (boundary
+    /// broadcasts + shared-histogram commits).
+    pub xfer_words: u64,
+    /// Total core-cycles spent idle at barriers (summed over cores).
+    pub stall_sync: u64,
+    /// Critical-path cycles spent draining the shared crossbar.
+    pub stall_xbar: u64,
+    /// Cross-shard edges of the partition (the locality the
+    /// partitioner achieved).
+    pub cut_edges: u64,
+    /// Synchronization rounds executed (color classes × iterations).
+    pub sync_rounds: u64,
+}
+
+impl MultiCoreReport {
+    /// Number of cores.
+    pub fn cores(&self) -> usize {
+        self.per_core.len()
+    }
+
+    /// Categorical samples drawn across all cores.
+    pub fn samples(&self) -> u64 {
+        self.per_core.iter().map(|r| r.samples).sum()
+    }
+
+    /// RV updates committed across all cores.
+    pub fn updates(&self) -> u64 {
+        self.per_core.iter().map(|r| r.updates).sum()
+    }
+
+    /// Aggregate throughput in Giga-samples/s: all cores' samples over
+    /// the synchronized makespan at the per-core clock.
+    pub fn aggregate_gsps(&self, hw: &HwConfig) -> f64 {
+        let s = self.cycles as f64 / (hw.clock_ghz * 1e9);
+        if s <= 0.0 {
+            0.0
+        } else {
+            self.samples() as f64 / s / 1e9
+        }
+    }
+
+    /// Per-core busy fraction: 1 − (barrier waits + crossbar stalls) /
+    /// makespan. A straggling shard shows up as high utilization on
+    /// its core and low on the others.
+    pub fn core_utilization(&self) -> Vec<f64> {
+        self.per_core
+            .iter()
+            .map(|r| {
+                if r.cycles == 0 {
+                    0.0
+                } else {
+                    1.0 - (r.stall_sync + r.stall_xbar) as f64 / r.cycles as f64
+                }
+            })
+            .collect()
+    }
+
+    /// Fraction of all core-cycles lost to synchronization (barrier
+    /// idling + shared-crossbar transfers), in [0, 1].
+    pub fn sync_overhead_fraction(&self) -> f64 {
+        let total: u64 = self.per_core.iter().map(|r| r.cycles).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let lost: u64 = self
+            .per_core
+            .iter()
+            .map(|r| r.stall_sync + r.stall_xbar)
+            .sum();
+        lost as f64 / total as f64
+    }
+
+    /// Parallel efficiency against a measured 1-core throughput:
+    /// `aggregate / (C × single)`, 1.0 = perfect linear scaling.
+    pub fn parallel_efficiency(&self, single_core_gsps: f64, hw: &HwConfig) -> f64 {
+        if single_core_gsps <= 0.0 {
+            0.0
+        } else {
+            self.aggregate_gsps(hw) / (single_core_gsps * self.cores() as f64)
+        }
+    }
+
+    /// Collapse into one [`SimReport`]: makespan cycles, work and
+    /// energy summed over cores — except the two sync-stall fields,
+    /// which are *averaged* per core so that
+    /// [`SimReport::sync_overhead`] stays a fraction of the makespan
+    /// (summing them across cores could exceed the makespan). With one
+    /// core this is exactly that core's report, so downstream
+    /// consumers (`ChainResult.sim`, the CLI's GS/s line) keep working
+    /// unchanged.
+    pub fn merged(&self) -> SimReport {
+        let mut m = SimReport {
+            cycles: self.cycles,
+            iterations: self.iterations,
+            ..SimReport::default()
+        };
+        for r in &self.per_core {
+            m.instrs += r.instrs;
+            m.nops += r.nops;
+            m.stall_mem_bw += r.stall_mem_bw;
+            m.stall_bank += r.stall_bank;
+            m.stall_sync += r.stall_sync;
+            m.stall_xbar += r.stall_xbar;
+            m.xfer_words += r.xfer_words;
+            m.cu_busy += r.cu_busy;
+            m.su_busy += r.su_busy;
+            m.mem_busy += r.mem_busy;
+            m.load_words += r.load_words;
+            m.store_words += r.store_words;
+            m.updates += r.updates;
+            m.samples += r.samples;
+            m.energy.cu += r.energy.cu;
+            m.energy.su += r.energy.su;
+            m.energy.rf += r.energy.rf;
+            m.energy.sram += r.energy.sram;
+            m.energy.ifetch += r.energy.ifetch;
+            m.energy.xbar += r.energy.xbar;
+            m.energy.static_ += r.energy.static_;
+        }
+        let c = self.per_core.len().max(1) as u64;
+        m.stall_sync /= c;
+        m.stall_xbar /= c;
+        m
+    }
+}
+
+/// Validate a *(model size, algorithm, core count)* sharding request —
+/// the single authority shared by the engine builder, the simulator
+/// constructor and the roofline CLI, so accept/reject behavior and
+/// error text cannot drift apart.
+pub fn validate_shard_config(num_vars: usize, algo: AlgoKind, cores: usize) -> Result<(), String> {
+    if cores == 0 {
+        return Err("core count must be ≥ 1".into());
+    }
+    if cores > num_vars {
+        return Err(format!("cores ({cores}) exceed the model's {num_vars} RVs"));
+    }
+    if cores > 1 && !matches!(algo, AlgoKind::BlockGibbs | AlgoKind::AsyncGibbs) {
+        return Err(format!(
+            "multi-core simulation supports Block Gibbs and Async Gibbs at cores > 1 \
+             (got {}); use cores = 1 or switch the algorithm",
+            algo.name()
+        ));
+    }
+    Ok(())
+}
+
+/// One shard: a single-core pipeline bound to its slice of the model.
+struct Core<'m> {
+    sim: Simulator<'m>,
+    program: Program,
+    /// Body index just past each synchronization round.
+    seg_ends: Vec<usize>,
+    /// RV ids this core owns (ascending).
+    owned: Vec<u32>,
+    /// Boundary words this core broadcasts per round.
+    seg_xfer_words: Vec<u64>,
+    /// Accumulating report (reset at the start of each run).
+    rep: SimReport,
+}
+
+/// C single-core MC²A pipelines sharing a crossbar and the histogram
+/// memory, executing one sharded model.
+pub struct MultiCoreSim<'m> {
+    mhw: MultiHwConfig,
+    model: &'m dyn EnergyModel,
+    cores: Vec<Core<'m>>,
+    partition: Partition,
+    /// Master assignment (the merged, authoritative state).
+    pub x: Vec<u32>,
+    /// Shared histogram memory (flattened per-RV state counts).
+    hist: Vec<u64>,
+    hist_offsets: Vec<usize>,
+    num_segments: usize,
+    cut_edges: u64,
+}
+
+impl<'m> MultiCoreSim<'m> {
+    /// Shard `model` across `mhw.cores` pipelines. Fails (with a
+    /// human-readable reason; the engine wraps it in a typed error)
+    /// when the configuration is invalid, when there are more cores
+    /// than RVs, or when `algo` cannot be sharded at C > 1 — the
+    /// global-move-table PAS and the sequentially-dependent Gibbs/MH
+    /// chains only run single-core.
+    pub fn new(
+        mhw: MultiHwConfig,
+        model: &'m dyn EnergyModel,
+        algo: AlgoKind,
+        pas_flips: usize,
+        seed: u64,
+    ) -> Result<MultiCoreSim<'m>, String> {
+        mhw.validate()?;
+        let n = model.num_vars();
+        let c = mhw.cores;
+        validate_shard_config(n, algo, c)?;
+        let partition = partition_balanced(model.interaction(), c);
+        let boundary = partition.boundary_mask(model.interaction());
+        let mut cores = Vec::with_capacity(c);
+        let mut num_segments = 0usize;
+        for (cid, owned) in partition.parts().into_iter().enumerate() {
+            let (program, seg_ends) =
+                compile_shard(model, algo, &mhw.core, pas_flips, &owned, true);
+            let mut seg_xfer_words = vec![0u64; seg_ends.len()];
+            let mut start = 0usize;
+            for (s, &end) in seg_ends.iter().enumerate() {
+                for instr in &program.body[start..end] {
+                    if let Semantics::UpdateRvs(rvs) = &instr.sem {
+                        seg_xfer_words[s] +=
+                            rvs.iter().filter(|&&rv| boundary[rv as usize]).count() as u64;
+                    }
+                }
+                start = end;
+            }
+            if cid == 0 {
+                num_segments = seg_ends.len();
+            } else {
+                assert_eq!(num_segments, seg_ends.len(), "shard programs disagree on round count");
+            }
+            // Core 0 draws from the chain seed so a 1-core system is
+            // RNG-identical to the single-core simulator.
+            let sim_seed = if cid == 0 {
+                seed
+            } else {
+                Rng::fork_seed(seed, cid as u64)
+            };
+            let sim = Simulator::new(mhw.core, model, pas_flips, sim_seed);
+            cores.push(Core {
+                sim,
+                program,
+                seg_ends,
+                owned,
+                seg_xfer_words,
+                rep: SimReport::default(),
+            });
+        }
+        let x = cores[0].sim.x.clone();
+        for core in &mut cores[1..] {
+            core.sim.x.copy_from_slice(&x);
+        }
+        let (hist_offsets, acc) = crate::sim::hist_layout(model);
+        let cut_edges = partition.cut_edges(model.interaction()) as u64;
+        Ok(MultiCoreSim {
+            mhw,
+            model,
+            cores,
+            partition,
+            x,
+            hist: vec![0; acc],
+            hist_offsets,
+            num_segments,
+            cut_edges,
+        })
+    }
+
+    /// Number of cores.
+    pub fn cores(&self) -> usize {
+        self.cores.len()
+    }
+
+    /// The shard assignment.
+    pub fn partition(&self) -> &Partition {
+        &self.partition
+    }
+
+    /// Set the inverse temperature on every core's functional model.
+    pub fn set_beta(&mut self, beta: f32) {
+        for core in &mut self.cores {
+            core.sim.set_beta(beta);
+        }
+    }
+
+    /// Overwrite the master assignment (and every core's copy).
+    pub fn set_state(&mut self, x0: &[u32]) {
+        self.x.copy_from_slice(x0);
+        for core in &mut self.cores {
+            core.sim.x.copy_from_slice(x0);
+        }
+    }
+
+    /// Empirical marginal of RV `i` from the shared histogram memory.
+    pub fn marginal(&self, i: usize) -> Vec<f64> {
+        crate::sim::marginal_of(&self.hist, &self.hist_offsets, i)
+    }
+
+    /// Run `iterations` synchronized HWLOOP trips.
+    pub fn run(&mut self, iterations: usize) -> MultiCoreReport {
+        self.run_observed(iterations, None, &mut |_, _, _| true)
+    }
+
+    /// [`MultiCoreSim::run`] with the engine hooks: an optional β
+    /// `schedule` evaluated once per iteration, and an
+    /// `observe(iter, updates_so_far, master_state)` callback after
+    /// every iteration; returning `false` stops the run early.
+    pub fn run_observed(
+        &mut self,
+        iterations: usize,
+        schedule: Option<BetaSchedule>,
+        observe: &mut dyn FnMut(usize, u64, &[u32]) -> bool,
+    ) -> MultiCoreReport {
+        let ncores = self.cores.len();
+        let multi = ncores > 1;
+        let n = self.model.num_vars();
+        let mut xfer_total = 0u64;
+        let mut stall_xbar_path = 0u64;
+        let mut sync_rounds = 0u64;
+        for core in &mut self.cores {
+            core.rep = SimReport::default();
+            let Core { sim, program, rep, .. } = core;
+            for instr in &program.prologue {
+                sim.execute(instr, rep);
+            }
+        }
+        let mut spent = vec![0u64; ncores];
+        let mut seg_start = vec![0usize; ncores];
+        for iter in 0..iterations {
+            if let Some(s) = schedule {
+                let beta = s.beta(iter);
+                for core in &mut self.cores {
+                    core.sim.set_beta(beta);
+                }
+            }
+            seg_start.fill(0);
+            for seg in 0..self.num_segments {
+                // Broadcast the merged master state so every core reads
+                // fresh boundary values for this round. (A single core
+                // is already authoritative — skip the copy traffic; its
+                // state is pulled into the master once per iteration.)
+                if multi {
+                    for core in &mut self.cores {
+                        core.sim.x.copy_from_slice(&self.x);
+                    }
+                }
+                let mut max_cycles = 0u64;
+                let mut round_words = 0u64;
+                for (c, core) in self.cores.iter_mut().enumerate() {
+                    let Core { sim, program, rep, seg_ends, seg_xfer_words, .. } = core;
+                    let before = rep.cycles;
+                    let end = seg_ends[seg];
+                    for instr in &program.body[seg_start[c]..end] {
+                        sim.execute(instr, rep);
+                    }
+                    seg_start[c] = end;
+                    spent[c] = rep.cycles - before;
+                    max_cycles = max_cycles.max(spent[c]);
+                    round_words += seg_xfer_words[seg];
+                }
+                // Merge each core's committed updates into the master.
+                if multi {
+                    for core in &self.cores {
+                        for &rv in &core.owned {
+                            self.x[rv as usize] = core.sim.x[rv as usize];
+                        }
+                    }
+                    // Barrier: faster shards idle for the slowest.
+                    for (c, core) in self.cores.iter_mut().enumerate() {
+                        let wait = max_cycles - spent[c];
+                        core.rep.stall_sync += wait;
+                        core.rep.cycles += wait;
+                    }
+                    // Boundary broadcast through the shared crossbar,
+                    // plus the fixed barrier/arbitration latency.
+                    let xfer = round_words.div_ceil(self.mhw.xbar_words_per_cycle as u64)
+                        + self.mhw.sync_latency as u64;
+                    for core in &mut self.cores {
+                        core.rep.stall_xbar += xfer;
+                        core.rep.cycles += xfer;
+                        let words = core.seg_xfer_words[seg];
+                        core.rep.xfer_words += words;
+                        core.rep.energy.xbar += words as f64 * core.sim.eparams.pj_xbar_word;
+                    }
+                    xfer_total += round_words;
+                    stall_xbar_path += xfer;
+                    sync_rounds += 1;
+                }
+            }
+            if !multi {
+                self.x.copy_from_slice(&self.cores[0].sim.x);
+            }
+            // Pipeline drain at the loop boundary (same as the
+            // single-core simulator's HWLOOP model).
+            let drain = self.mhw.core.cu_latency() as u64;
+            for core in &mut self.cores {
+                core.rep.cycles += drain;
+                core.rep.energy.ifetch += drain as f64 * core.sim.eparams.pj_ifetch;
+                core.rep.iterations += 1;
+            }
+            // Shared histogram memory: every core commits its shard's
+            // states once per iteration. The histogram is banked by
+            // shard, so commits drain in parallel — one crossbar port
+            // per core — and the critical path pays for the largest
+            // shard. A single core owns its port outright (free, as in
+            // the single-core model); C > 1 pay the crossbar hop.
+            if multi {
+                let max_owned = self.cores.iter().map(|c| c.owned.len() as u64).max().unwrap_or(0);
+                let hist_cost = max_owned.div_ceil(self.mhw.xbar_words_per_cycle as u64);
+                for core in &mut self.cores {
+                    core.rep.stall_xbar += hist_cost;
+                    core.rep.cycles += hist_cost;
+                    core.rep.xfer_words += core.owned.len() as u64;
+                }
+                xfer_total += n as u64;
+                stall_xbar_path += hist_cost;
+            }
+            for i in 0..n {
+                self.hist[self.hist_offsets[i] + self.x[i] as usize] += 1;
+            }
+            let updates: u64 = self.cores.iter().map(|c| c.rep.updates).sum();
+            if !observe(iter, updates, &self.x) {
+                break;
+            }
+        }
+        let clock_hz = self.mhw.core.clock_ghz * 1e9;
+        for core in &mut self.cores {
+            let seconds = core.rep.cycles as f64 / clock_hz;
+            core.rep.energy.static_ += core.sim.eparams.static_watts * seconds * 1e12;
+        }
+        let per_core: Vec<SimReport> = self.cores.iter().map(|c| c.rep.clone()).collect();
+        let cycles = per_core.iter().map(|r| r.cycles).max().unwrap_or(0);
+        let iterations = per_core.first().map(|r| r.iterations).unwrap_or(0);
+        let stall_sync = per_core.iter().map(|r| r.stall_sync).sum();
+        MultiCoreReport {
+            per_core,
+            cycles,
+            iterations,
+            xfer_words: xfer_total,
+            stall_sync,
+            stall_xbar: stall_xbar_path,
+            cut_edges: self.cut_edges,
+            sync_rounds,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::compile;
+    use crate::energy::PottsGrid;
+
+    fn mhw(cores: usize) -> MultiHwConfig {
+        MultiHwConfig::new(HwConfig::paper_default(), cores)
+    }
+
+    #[test]
+    fn one_core_is_cycle_and_sample_identical_to_single_core() {
+        let m = PottsGrid::new(6, 6, 2, 0.8);
+        let hw = HwConfig::paper_default();
+        let program = compile(&m, AlgoKind::BlockGibbs, &hw, 1);
+        let mut single = Simulator::new(hw, &m, 1, 0xA11CE);
+        let single_rep = single.run(&program, 40);
+
+        let mut mc = MultiCoreSim::new(mhw(1), &m, AlgoKind::BlockGibbs, 1, 0xA11CE).unwrap();
+        let report = mc.run(40);
+        let merged = report.merged();
+        assert_eq!(merged.cycles, single_rep.cycles);
+        assert_eq!(merged.samples, single_rep.samples);
+        assert_eq!(merged.updates, single_rep.updates);
+        assert_eq!(merged.instrs, single_rep.instrs);
+        assert_eq!(merged.stall_mem_bw, single_rep.stall_mem_bw);
+        assert_eq!(merged.stall_bank, single_rep.stall_bank);
+        assert_eq!(merged.stall_sync, 0);
+        assert_eq!(merged.stall_xbar, 0);
+        assert_eq!(mc.x, single.x, "functional state diverged");
+        for i in 0..m.num_vars() {
+            assert_eq!(mc.marginal(i), single.marginal(i), "marginal {i}");
+        }
+    }
+
+    #[test]
+    fn more_cores_cut_the_makespan() {
+        let m = PottsGrid::new(16, 16, 2, 0.8);
+        let cycles = |cores: usize| {
+            let mut mc = MultiCoreSim::new(mhw(cores), &m, AlgoKind::BlockGibbs, 1, 7).unwrap();
+            mc.run(10).cycles
+        };
+        let c1 = cycles(1);
+        let c4 = cycles(4);
+        assert!(c4 < c1, "4-core {c4} not faster than 1-core {c1}");
+    }
+
+    #[test]
+    fn multicore_report_accounts_sync_and_interconnect() {
+        let m = PottsGrid::new(12, 12, 2, 0.8);
+        let mut mc = MultiCoreSim::new(mhw(4), &m, AlgoKind::BlockGibbs, 1, 3).unwrap();
+        let r = mc.run(5);
+        assert_eq!(r.cores(), 4);
+        assert_eq!(r.iterations, 5);
+        assert!(r.xfer_words > 0, "no interconnect traffic modeled");
+        assert!(r.stall_xbar > 0);
+        assert!(r.sync_rounds >= 5 * 2, "rounds={}", r.sync_rounds);
+        assert!(r.cut_edges > 0);
+        assert!(r.sync_overhead_fraction() > 0.0 && r.sync_overhead_fraction() < 1.0);
+        let util = r.core_utilization();
+        assert_eq!(util.len(), 4);
+        assert!(util.iter().all(|&u| (0.0..=1.0).contains(&u)));
+        // Barrier alignment: every core finishes at the makespan.
+        assert!(r.per_core.iter().all(|c| c.cycles == r.cycles));
+        // All RVs updated once per iteration across the shards.
+        assert_eq!(r.updates(), 144 * 5);
+    }
+
+    #[test]
+    fn rejects_unshardable_configs() {
+        let m = PottsGrid::new(4, 4, 2, 0.5);
+        assert!(MultiCoreSim::new(mhw(32), &m, AlgoKind::BlockGibbs, 1, 1).is_err());
+        assert!(MultiCoreSim::new(mhw(2), &m, AlgoKind::Pas, 4, 1).is_err());
+        assert!(MultiCoreSim::new(mhw(2), &m, AlgoKind::Gibbs, 1, 1).is_err());
+        assert!(MultiCoreSim::new(mhw(1), &m, AlgoKind::Pas, 4, 1).is_ok());
+        assert!(MultiCoreSim::new(mhw(2), &m, AlgoKind::AsyncGibbs, 1, 1).is_ok());
+    }
+
+    #[test]
+    fn early_stop_halts_all_cores() {
+        let m = PottsGrid::new(8, 8, 2, 0.5);
+        let mut mc = MultiCoreSim::new(mhw(2), &m, AlgoKind::BlockGibbs, 1, 1).unwrap();
+        let r = mc.run_observed(100, None, &mut |iter, _, _| iter < 4);
+        assert_eq!(r.iterations, 5);
+    }
+}

@@ -242,6 +242,7 @@ impl ExecutionBackend for CountingBackend {
             steps: spec.steps,
             stats: StepStats::default(),
             sim: None,
+            multicore: None,
             wall: Duration::from_millis(1),
             marginal0: vec![1.0],
             best_x: vec![0; model.num_vars()],

@@ -1,0 +1,179 @@
+//! Integration tests for the sharded multi-core MC²A simulation:
+//! (a) a 1-core multi-core system is bit-identical to the single-core
+//! accelerator backend on every (non-heavy) registry workload, (b)
+//! C > 1 produces statistically correct samples (exact Bayes-net
+//! posterior, Ising phase behavior) with the same tolerances
+//! `integration_sim.rs` uses, (c) adding cores cuts the synchronized
+//! makespan, and (d) checkpoints round-trip through the builder's
+//! `init_state`.
+
+use mc2a::energy::PottsGrid;
+use mc2a::engine::{registry, Checkpoint, Engine, EngineBuilder};
+use mc2a::isa::{HwConfig, MultiHwConfig};
+use mc2a::mcmc::AlgoKind;
+use mc2a::sim::MultiCoreSim;
+use mc2a::workloads;
+
+/// THE C=1 equivalence test: same seeds, same programs, same cycles,
+/// same samples as the single-core `AcceleratorBackend` — for every
+/// registry workload, including the PAS-paired COP suite.
+#[test]
+fn one_core_backend_is_bit_identical_to_accelerator_everywhere() {
+    for entry in registry::REGISTRY.iter().filter(|e| !e.heavy) {
+        let run = |multi: bool| {
+            let mut b = Engine::for_workload(entry.name).unwrap().steps(6).seed(0xF00D);
+            b = if multi {
+                b.multicore(HwConfig::paper_default()).cores(1)
+            } else {
+                b.accelerator(HwConfig::paper_default())
+            };
+            b.build().unwrap().run().unwrap()
+        };
+        let single = run(false);
+        let multi = run(true);
+        let (a, b) = (&single.chains[0], &multi.chains[0]);
+        assert_eq!(a.best_x, b.best_x, "{}: state diverged", entry.name);
+        assert_eq!(a.best_objective, b.best_objective, "{}", entry.name);
+        assert_eq!(a.marginal0, b.marginal0, "{}", entry.name);
+        assert_eq!(a.objective_trace, b.objective_trace, "{}", entry.name);
+        assert_eq!(a.steps, b.steps, "{}", entry.name);
+        let (ra, rb) = (a.sim.as_ref().unwrap(), b.sim.as_ref().unwrap());
+        assert_eq!(ra.cycles, rb.cycles, "{}: cycle count diverged", entry.name);
+        assert_eq!(ra.instrs, rb.instrs, "{}", entry.name);
+        assert_eq!(ra.nops, rb.nops, "{}", entry.name);
+        assert_eq!(ra.samples, rb.samples, "{}", entry.name);
+        assert_eq!(ra.updates, rb.updates, "{}", entry.name);
+        assert_eq!(ra.stall_mem_bw, rb.stall_mem_bw, "{}", entry.name);
+        assert_eq!(ra.stall_bank, rb.stall_bank, "{}", entry.name);
+        assert_eq!(ra.load_words, rb.load_words, "{}", entry.name);
+        assert_eq!(ra.store_words, rb.store_words, "{}", entry.name);
+        assert_eq!(rb.stall_sync, 0, "{}: phantom sync stalls", entry.name);
+        assert_eq!(rb.stall_xbar, 0, "{}: phantom crossbar stalls", entry.name);
+        assert_eq!(
+            ra.energy.total_pj(),
+            rb.energy.total_pj(),
+            "{}: energy diverged",
+            entry.name
+        );
+        let mc = b.multicore.as_ref().expect("multicore report");
+        assert_eq!(mc.cores(), 1);
+        assert_eq!(mc.xfer_words, 0);
+    }
+}
+
+/// Sharded sampling stays correct: the 2-core accelerator posterior on
+/// the earthquake net matches the exact marginal within the tolerance
+/// `integration_sim.rs` uses for the single-core simulator.
+#[test]
+fn two_core_marginals_match_exact_posterior() {
+    let net = workloads::earthquake();
+    let exact = net.exact_marginal(2);
+    let mhw = MultiHwConfig::new(HwConfig::paper_default(), 2);
+    let mut sim = MultiCoreSim::new(mhw, &net, AlgoKind::BlockGibbs, 1, 0x51B).unwrap();
+    let _ = sim.run(120_000);
+    let marg = sim.marginal(2);
+    assert!(
+        (marg[1] - exact[1]).abs() < 0.02,
+        "2-core accelerator {} vs exact {}",
+        marg[1],
+        exact[1]
+    );
+}
+
+/// Ising phase behavior survives sharding: a cold 4-core chain keeps
+/// its magnetization (the `sim_ising_orders_when_cold` story).
+#[test]
+fn four_core_ising_orders_when_cold() {
+    let m = PottsGrid::new(16, 16, 2, 1.0);
+    let mhw = MultiHwConfig::new(HwConfig::paper_default(), 4);
+    let mut sim = MultiCoreSim::new(mhw, &m, AlgoKind::BlockGibbs, 1, 0xC01D).unwrap();
+    sim.set_beta(2.0);
+    let all_up = vec![1u32; 256];
+    sim.set_state(&all_up);
+    let _ = sim.run(300);
+    let ones = sim.x.iter().filter(|&&v| v == 1).count();
+    assert!(ones > 230, "magnetization lost: {ones}/256");
+}
+
+/// Scaling sanity through the engine: more cores must cut the
+/// synchronized makespan on a parallel-friendly grid, and the report
+/// must account interconnect traffic.
+#[test]
+fn more_cores_cut_cycles_through_the_backend() {
+    let m = PottsGrid::new(32, 32, 2, 0.8);
+    let cycles = |cores: usize| {
+        let metrics = Engine::for_model(&m)
+            .steps(5)
+            .seed(9)
+            .multicore(HwConfig::paper_default())
+            .cores(cores)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        let mc = metrics.chains[0].multicore.clone().expect("multicore report");
+        (mc.cycles, mc.xfer_words, mc.sync_overhead_fraction())
+    };
+    let (c1, x1, _) = cycles(1);
+    let (c8, x8, overhead8) = cycles(8);
+    assert!(c8 < c1 / 2, "8-core {c8} vs 1-core {c1}");
+    assert_eq!(x1, 0);
+    assert!(x8 > 0);
+    assert!(overhead8 > 0.0 && overhead8 < 0.9, "overhead {overhead8}");
+}
+
+/// Checkpoint → builder `init_state` round trip: resuming from a saved
+/// best state starts the next run at (at least) that objective.
+#[test]
+fn checkpoint_resumes_through_init_state() {
+    let m = PottsGrid::new(8, 8, 2, 1.0);
+    let first = Engine::for_model(&m)
+        .steps(50)
+        .seed(3)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    let best = &first.chains[0];
+    let ck = Checkpoint {
+        seed: 3,
+        steps: best.steps,
+        best_objective: best.best_objective,
+        best_x: best.best_x.clone(),
+    };
+    let path = std::env::temp_dir().join("mc2a_integration_checkpoint.json");
+    ck.save(&path).unwrap();
+    let loaded = Checkpoint::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(loaded, ck);
+
+    let resumed = Engine::for_model(&m)
+        .steps(10)
+        .seed(4)
+        .init_state(loaded.best_x)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert!(
+        resumed.chains[0].best_objective >= ck.best_objective,
+        "resume lost ground: {} < {}",
+        resumed.chains[0].best_objective,
+        ck.best_objective
+    );
+}
+
+/// The builder surfaces unshardable configurations as typed errors
+/// before anything runs.
+#[test]
+fn builder_rejects_unshardable_multicore_runs() {
+    fn build(b: EngineBuilder<'_>) -> bool {
+        b.build().is_ok()
+    }
+    let m = PottsGrid::new(4, 4, 2, 0.5);
+    assert!(!build(Engine::for_model(&m).algo(AlgoKind::Pas).cores(2)));
+    assert!(!build(Engine::for_model(&m).algo(AlgoKind::Gibbs).cores(2)));
+    assert!(build(Engine::for_model(&m).algo(AlgoKind::Pas).cores(1)));
+    assert!(build(Engine::for_model(&m).algo(AlgoKind::AsyncGibbs).cores(2)));
+    assert!(build(Engine::for_model(&m).cores(4))); // Block Gibbs default
+}
