@@ -1,0 +1,384 @@
+//! The lockstep adaptive-annealing driver.
+//!
+//! Adaptive β control ([`crate::mcmc::anneal`]) needs a feedback loop:
+//! the controller consumes *cross-chain* diagnostics (split R-hat /
+//! min ESS / best-objective plateau) and re-plans β for the next
+//! segment. On the free-running backends chains drift apart, so the
+//! diagnostics a chain would see depend on scheduling — and the β
+//! trajectory would stop being reproducible. This driver therefore
+//! runs the fan-out in **lockstep**: every chain advances exactly one
+//! observation segment (`observe_every` steps), the driver computes
+//! the round's diagnostics synchronously — with the same
+//! [`split_r_hat`] / [`effective_sample_size`] functions the streaming
+//! observer reports use — feeds them to the controller, and only then
+//! plans the next segment's β values. Decisions are a pure function of
+//! the diagnostics sequence, so backends with bit-identical chains
+//! (scalar vs batched software) produce bit-identical β trajectories.
+//!
+//! One [`ExecUnit`] wraps whatever a backend advances per segment: a
+//! scalar [`Chain`], an SoA [`ChainBatch`], a single-core
+//! [`Simulator`] or a sharded [`MultiCoreSim`] (via their segmented
+//! `begin_run` / `advance_run` / `finish_run` APIs). Units advance in
+//! parallel (one scoped thread each); everything else happens on the
+//! driver thread in deterministic unit order.
+
+use std::time::Instant;
+
+use crate::coordinator::ChainResult;
+use crate::energy::{EnergyModel, OpCost};
+use crate::engine::backend::{ChainCtx, ChainSpec};
+use crate::engine::error::Mc2aError;
+use crate::engine::observer::ProgressEvent;
+use crate::isa::Program;
+use crate::mcmc::anneal::{BetaController, RoundDiagnostics};
+use crate::mcmc::{
+    effective_sample_size, split_r_hat, BatchMcmc, Chain, ChainBatch, StepStats,
+};
+use crate::sim::multicore::McRunState;
+use crate::sim::{MultiCoreSim, SimReport, Simulator};
+
+/// Per-chain signals collected at a segment boundary.
+struct ChainSignal {
+    chain_id: usize,
+    objective: f64,
+    best: f64,
+    updates: u64,
+}
+
+/// One lockstep-advanceable executor covering one or more chains.
+pub(crate) enum ExecUnit<'m> {
+    /// A scalar software chain.
+    Scalar {
+        chain_id: usize,
+        chain: Chain<'m>,
+        t0: Instant,
+    },
+    /// An SoA batch of software chains.
+    Batch {
+        batch: ChainBatch<'m>,
+        algo: Box<dyn BatchMcmc>,
+        t0: Instant,
+    },
+    /// A single-core accelerator simulation.
+    Sim {
+        chain_id: usize,
+        sim: Simulator<'m>,
+        program: Program,
+        rep: SimReport,
+        best: f64,
+        t0: Instant,
+    },
+    /// A sharded multi-core accelerator simulation.
+    Multi {
+        chain_id: usize,
+        sim: MultiCoreSim<'m>,
+        run: McRunState,
+        best: f64,
+        t0: Instant,
+    },
+}
+
+impl<'m> ExecUnit<'m> {
+    pub(crate) fn scalar(chain_id: usize, chain: Chain<'m>) -> ExecUnit<'m> {
+        ExecUnit::Scalar {
+            chain_id,
+            chain,
+            t0: Instant::now(),
+        }
+    }
+
+    pub(crate) fn batch(batch: ChainBatch<'m>, algo: Box<dyn BatchMcmc>) -> ExecUnit<'m> {
+        ExecUnit::Batch {
+            batch,
+            algo,
+            t0: Instant::now(),
+        }
+    }
+
+    pub(crate) fn sim(chain_id: usize, mut sim: Simulator<'m>, program: Program) -> ExecUnit<'m> {
+        let rep = sim.begin_run(&program);
+        ExecUnit::Sim {
+            chain_id,
+            sim,
+            program,
+            rep,
+            best: f64::NEG_INFINITY,
+            t0: Instant::now(),
+        }
+    }
+
+    pub(crate) fn multi(chain_id: usize, mut sim: MultiCoreSim<'m>) -> ExecUnit<'m> {
+        let run = sim.begin_run();
+        ExecUnit::Multi {
+            chain_id,
+            sim,
+            run,
+            best: f64::NEG_INFINITY,
+            t0: Instant::now(),
+        }
+    }
+
+    /// Advance every chain of this unit by `betas.len()` steps, using
+    /// `betas[j]` at local segment step `j` (`iter0` is the run-local
+    /// step index of the segment start).
+    fn advance(&mut self, iter0: usize, betas: &[f32]) {
+        match self {
+            ExecUnit::Scalar { chain, .. } => chain.run_betas(betas),
+            ExecUnit::Batch { batch, algo, .. } => batch.run_betas(algo.as_mut(), betas),
+            ExecUnit::Sim {
+                sim, program, rep, ..
+            } => {
+                sim.advance_run(program, rep, iter0, betas.len(), Some(betas), &mut |_, _, _| {
+                    true
+                });
+            }
+            ExecUnit::Multi { sim, run, .. } => {
+                sim.advance_run(run, iter0, betas.len(), Some(betas), &mut |_, _, _| true);
+            }
+        }
+    }
+
+    /// Collect the segment-boundary signals of every chain this unit
+    /// owns, in ascending chain-id order.
+    fn signals(&mut self, model: &dyn EnergyModel, out: &mut Vec<ChainSignal>) {
+        match self {
+            ExecUnit::Scalar {
+                chain_id, chain, ..
+            } => out.push(ChainSignal {
+                chain_id: *chain_id,
+                objective: model.objective(&chain.x),
+                best: chain.best_objective,
+                updates: chain.stats.updates,
+            }),
+            ExecUnit::Batch { batch, .. } => {
+                for c in 0..batch.k() {
+                    out.push(ChainSignal {
+                        chain_id: batch.chain_id(c),
+                        objective: batch.objectives[c],
+                        best: batch.best_objectives[c],
+                        updates: batch.stats[c].updates,
+                    });
+                }
+            }
+            ExecUnit::Sim {
+                chain_id,
+                sim,
+                rep,
+                best,
+                ..
+            } => {
+                let objective = model.objective(&sim.x);
+                *best = (*best).max(objective);
+                out.push(ChainSignal {
+                    chain_id: *chain_id,
+                    objective,
+                    best: *best,
+                    updates: rep.updates,
+                });
+            }
+            ExecUnit::Multi {
+                chain_id,
+                sim,
+                best,
+                ..
+            } => {
+                let objective = model.objective(&sim.x);
+                *best = (*best).max(objective);
+                out.push(ChainSignal {
+                    chain_id: *chain_id,
+                    objective,
+                    best: *best,
+                    updates: sim.total_updates(),
+                });
+            }
+        }
+    }
+
+    /// Finalize into per-chain results (mirrors each backend's fixed-
+    /// path result assembly).
+    fn finish(self, model: &dyn EnergyModel, traces: &[Vec<f64>], out: &mut Vec<ChainResult>) {
+        match self {
+            ExecUnit::Scalar {
+                chain_id,
+                chain,
+                t0,
+            } => out.push(ChainResult {
+                chain_id,
+                best_objective: chain.best_objective,
+                steps: chain.step_count,
+                stats: chain.stats,
+                sim: None,
+                multicore: None,
+                wall: t0.elapsed(),
+                marginal0: chain.marginal(0),
+                best_x: chain.best_assignment().to_vec(),
+                objective_trace: traces[chain_id].clone(),
+            }),
+            ExecUnit::Batch { batch, t0, .. } => {
+                for c in 0..batch.k() {
+                    let chain_id = batch.chain_id(c);
+                    out.push(ChainResult {
+                        chain_id,
+                        best_objective: batch.best_objectives[c],
+                        steps: batch.step_count,
+                        stats: batch.stats[c],
+                        sim: None,
+                        multicore: None,
+                        wall: t0.elapsed(),
+                        marginal0: batch.marginal0(c),
+                        best_x: batch.best_state(c),
+                        objective_trace: traces[chain_id].clone(),
+                    });
+                }
+            }
+            ExecUnit::Sim {
+                chain_id,
+                mut sim,
+                mut rep,
+                best,
+                t0,
+                program: _,
+            } => {
+                sim.finish_run(&mut rep);
+                let stats = StepStats {
+                    updates: rep.updates,
+                    accepted: 0,
+                    cost: OpCost {
+                        ops: 0,
+                        bytes: 4 * (rep.load_words + rep.store_words),
+                        samples: rep.samples,
+                    },
+                };
+                let final_objective = model.objective(&sim.x);
+                out.push(ChainResult {
+                    chain_id,
+                    best_objective: best.max(final_objective),
+                    steps: rep.iterations as usize,
+                    stats,
+                    marginal0: sim.marginal(0),
+                    best_x: sim.x.clone(),
+                    sim: Some(rep),
+                    multicore: None,
+                    wall: t0.elapsed(),
+                    objective_trace: traces[chain_id].clone(),
+                });
+            }
+            ExecUnit::Multi {
+                chain_id,
+                mut sim,
+                run,
+                best,
+                t0,
+            } => {
+                let report = sim.finish_run(run);
+                let merged = report.merged();
+                let stats = StepStats {
+                    updates: merged.updates,
+                    accepted: 0,
+                    cost: OpCost {
+                        ops: 0,
+                        bytes: 4 * (merged.load_words + merged.store_words),
+                        samples: merged.samples,
+                    },
+                };
+                let final_objective = model.objective(&sim.x);
+                out.push(ChainResult {
+                    chain_id,
+                    best_objective: best.max(final_objective),
+                    steps: merged.iterations as usize,
+                    stats,
+                    marginal0: sim.marginal(0),
+                    best_x: sim.x.clone(),
+                    sim: Some(merged),
+                    multicore: Some(report),
+                    wall: t0.elapsed(),
+                    objective_trace: traces[chain_id].clone(),
+                });
+            }
+        }
+    }
+}
+
+/// Run `units` to completion (or early stop) under `controller`,
+/// in lockstep observation rounds. Returns per-chain results ordered
+/// by chain id.
+pub(crate) fn run_adaptive<'m>(
+    model: &'m dyn EnergyModel,
+    spec: &ChainSpec,
+    chains: usize,
+    ctx: &ChainCtx<'_>,
+    controller: &mut dyn BetaController,
+    mut units: Vec<ExecUnit<'m>>,
+) -> Result<Vec<ChainResult>, Mc2aError> {
+    let every = spec.observe_every.max(1);
+    let mut traces: Vec<Vec<f64>> = vec![Vec::new(); chains];
+    let mut signals: Vec<ChainSignal> = Vec::new();
+    let mut best_overall = f64::NEG_INFINITY;
+    let mut done = 0usize;
+    let mut round = 0usize;
+    while done < spec.steps {
+        if ctx.stop_requested() {
+            break;
+        }
+        let n = every.min(spec.steps - done);
+        // Plan the segment's β values from the controller's current
+        // state; the controller works on the *global* step clock so a
+        // resumed run continues the ramp where it stopped.
+        let betas: Vec<f32> = (0..n)
+            .map(|j| controller.beta_at(spec.beta_offset + done + j))
+            .collect();
+        if units.len() > 1 {
+            let betas = &betas;
+            std::thread::scope(|scope| {
+                for unit in units.iter_mut() {
+                    scope.spawn(move || unit.advance(done, betas));
+                }
+            });
+        } else if let Some(unit) = units.first_mut() {
+            unit.advance(done, &betas);
+        }
+        done += n;
+        round += 1;
+        // Segment boundary: gather signals in deterministic order,
+        // stream progress events, close the observation round.
+        signals.clear();
+        for unit in units.iter_mut() {
+            unit.signals(model, &mut signals);
+        }
+        let last_beta = betas[n - 1];
+        for s in &signals {
+            traces[s.chain_id].push(s.objective);
+            best_overall = best_overall.max(s.best);
+            ctx.emit(ProgressEvent {
+                chain_id: s.chain_id,
+                step: done,
+                beta: last_beta,
+                objective: s.objective,
+                best_objective: s.best,
+                updates: s.updates,
+            });
+        }
+        let r_hat = if chains >= 2 {
+            split_r_hat(&traces)
+        } else {
+            None
+        };
+        let min_ess = traces
+            .iter()
+            .map(|t| effective_sample_size(t))
+            .fold(f64::INFINITY, f64::min);
+        controller.observe_round(&RoundDiagnostics {
+            round,
+            step: spec.beta_offset + done,
+            r_hat,
+            min_ess,
+            best_objective: best_overall,
+        });
+    }
+    let mut results = Vec::with_capacity(chains);
+    for unit in units {
+        unit.finish(model, &traces, &mut results);
+    }
+    results.sort_by_key(|r| r.chain_id);
+    Ok(results)
+}

@@ -38,9 +38,11 @@ use std::time::Instant;
 use crate::compiler::compile_opt;
 use crate::coordinator::ChainResult;
 use crate::energy::{EnergyModel, OpCost};
+use crate::engine::adaptive::{run_adaptive, ExecUnit};
 use crate::engine::error::Mc2aError;
 use crate::engine::observer::ProgressEvent;
 use crate::isa::{HwConfig, MultiHwConfig};
+use crate::mcmc::anneal::BetaController;
 use crate::mcmc::{build_algo, AlgoKind, BetaSchedule, Chain, SamplerKind, StepStats};
 use crate::rng::Rng;
 use crate::runtime::Runtime;
@@ -56,6 +58,11 @@ pub struct ChainSpec {
     pub sampler: SamplerKind,
     /// β (inverse-temperature) schedule, stepped every MCMC step.
     pub schedule: BetaSchedule,
+    /// Global-step offset of the schedule clock: a resumed run
+    /// evaluates β at `beta_offset + t` (the checkpoint's cumulative
+    /// step count), so the annealing ramp continues instead of
+    /// restarting at t = 0. See [`ChainSpec::beta`].
+    pub beta_offset: usize,
     /// Steps per chain.
     pub steps: usize,
     /// Base RNG seed; chain `i` draws from the stream
@@ -81,6 +88,14 @@ impl ChainSpec {
     /// seed their own generator (the simulator's URNG).
     pub fn chain_seed(&self, chain_id: usize) -> u64 {
         Rng::fork_seed(self.seed, chain_id as u64)
+    }
+
+    /// β at run-local step `t`: the schedule evaluated on the global
+    /// clock (`beta_offset + t`). Every backend's fixed-ramp path
+    /// evaluates β through this helper so checkpoint resume continues
+    /// the ramp uniformly.
+    pub fn beta(&self, t: usize) -> f32 {
+        self.schedule.beta(self.beta_offset + t)
     }
 }
 
@@ -153,6 +168,28 @@ pub trait ExecutionBackend: Send + Sync {
         ctx: &ChainCtx<'_>,
     ) -> Result<ChainResult, Mc2aError>;
 
+    /// Run the whole fan-out under an adaptive β controller
+    /// ([`crate::mcmc::anneal`]): all chains advance in lockstep
+    /// observation rounds and the controller re-plans β from each
+    /// round's cross-chain diagnostics (see
+    /// [`crate::engine::EngineBuilder::adaptive`]). The default
+    /// rejects the configuration; the software, batched and
+    /// accelerator-simulator backends override it via the shared
+    /// lockstep driver.
+    fn run_chains_adaptive(
+        &self,
+        _model: &dyn EnergyModel,
+        _spec: &ChainSpec,
+        _chains: usize,
+        _ctx: &ChainCtx<'_>,
+        _controller: &mut dyn BetaController,
+    ) -> Result<Vec<ChainResult>, Mc2aError> {
+        Err(Mc2aError::InvalidConfig(format!(
+            "the {} backend does not support adaptive annealing",
+            self.name()
+        )))
+    }
+
     /// Run the whole fan-out: chains `0..chains`, results ordered by
     /// chain id. The default spawns one OS thread per chain — correct
     /// everywhere, but a backend that schedules chains itself (the
@@ -196,11 +233,7 @@ pub(crate) fn run_software_chain(
     ctx: &ChainCtx<'_>,
 ) -> Result<ChainResult, Mc2aError> {
     let t0 = Instant::now();
-    let algo = build_algo(spec.algo, spec.sampler, model, spec.pas_flips);
-    let mut chain = Chain::with_rng(model, algo, spec.schedule, spec.chain_rng(chain_id));
-    if let Some(x0) = &spec.init_state {
-        chain.set_state(x0);
-    }
+    let mut chain = software_chain(model, spec, chain_id);
     let every = spec.observe_every.max(1);
     let mut trace = Vec::new();
     let mut done = 0usize;
@@ -229,7 +262,7 @@ pub(crate) fn run_software_chain(
         ctx.emit(ProgressEvent {
             chain_id,
             step: done,
-            beta: spec.schedule.beta(done - 1),
+            beta: spec.beta(done - 1),
             objective,
             best_objective: chain.best_objective,
             updates: chain.stats.updates,
@@ -268,6 +301,37 @@ impl ExecutionBackend for SoftwareBackend {
     ) -> Result<ChainResult, Mc2aError> {
         run_software_chain(model, spec, chain_id, ctx)
     }
+
+    fn run_chains_adaptive(
+        &self,
+        model: &dyn EnergyModel,
+        spec: &ChainSpec,
+        chains: usize,
+        ctx: &ChainCtx<'_>,
+        controller: &mut dyn BetaController,
+    ) -> Result<Vec<ChainResult>, Mc2aError> {
+        let units = (0..chains)
+            .map(|chain_id| ExecUnit::scalar(chain_id, software_chain(model, spec, chain_id)))
+            .collect();
+        run_adaptive(model, spec, chains, ctx, controller, units)
+    }
+}
+
+/// Construct one scalar software chain exactly as the fixed-ramp
+/// runner does (same seeding, init-state and offset sequence), so the
+/// adaptive driver's chains stay bit-compatible with the fixed path.
+pub(crate) fn software_chain<'m>(
+    model: &'m dyn EnergyModel,
+    spec: &ChainSpec,
+    chain_id: usize,
+) -> Chain<'m> {
+    let algo = build_algo(spec.algo, spec.sampler, model, spec.pas_flips);
+    let mut chain = Chain::with_rng(model, algo, spec.schedule, spec.chain_rng(chain_id));
+    if let Some(x0) = &spec.init_state {
+        chain.set_state(x0);
+    }
+    chain.set_step_offset(spec.beta_offset);
+    chain
 }
 
 /// The cycle-accurate MC²A accelerator simulator: compile the workload
@@ -320,28 +384,44 @@ impl ExecutionBackend for AcceleratorBackend {
         let every = spec.observe_every.max(1);
         let mut trace = Vec::new();
         let mut best = f64::NEG_INFINITY;
-        let rep = sim.run_observed(
-            &program,
-            spec.steps,
-            Some(spec.schedule),
-            &mut |iter, rep_so_far, x| {
-                let step = iter + 1;
-                if step % every == 0 || step == spec.steps {
-                    let objective = model.objective(x);
-                    best = best.max(objective);
-                    trace.push(objective);
-                    ctx.emit(ProgressEvent {
-                        chain_id,
-                        step,
-                        beta: spec.schedule.beta(iter),
-                        objective,
-                        best_objective: best,
-                        updates: rep_so_far.updates,
-                    });
-                }
-                !ctx.stop_requested()
-            },
-        );
+        let mut rep = sim.begin_run(&program);
+        // β evaluated on the global clock so a resumed run continues
+        // the ramp; planned one observation segment at a time so the
+        // buffer stays O(observe_every), not O(steps).
+        let mut betas: Vec<f32> = Vec::with_capacity(every.min(spec.steps));
+        let mut done = 0usize;
+        let mut go = true;
+        while go && done < spec.steps {
+            let n = every.min(spec.steps - done);
+            betas.clear();
+            betas.extend((done..done + n).map(|t| spec.beta(t)));
+            go = sim.advance_run(
+                &program,
+                &mut rep,
+                done,
+                n,
+                Some(&betas),
+                &mut |iter, rep_so_far, x| {
+                    let step = iter + 1;
+                    if step % every == 0 || step == spec.steps {
+                        let objective = model.objective(x);
+                        best = best.max(objective);
+                        trace.push(objective);
+                        ctx.emit(ProgressEvent {
+                            chain_id,
+                            step,
+                            beta: spec.beta(iter),
+                            objective,
+                            best_objective: best,
+                            updates: rep_so_far.updates,
+                        });
+                    }
+                    !ctx.stop_requested()
+                },
+            );
+            done += n;
+        }
+        sim.finish_run(&mut rep);
         let stats = StepStats {
             updates: rep.updates,
             accepted: 0,
@@ -364,6 +444,31 @@ impl ExecutionBackend for AcceleratorBackend {
             wall: t0.elapsed(),
             objective_trace: trace,
         })
+    }
+
+    fn run_chains_adaptive(
+        &self,
+        model: &dyn EnergyModel,
+        spec: &ChainSpec,
+        chains: usize,
+        ctx: &ChainCtx<'_>,
+        controller: &mut dyn BetaController,
+    ) -> Result<Vec<ChainResult>, Mc2aError> {
+        self.hw.validate().map_err(Mc2aError::InvalidHardware)?;
+        // One compile serves every chain — the program depends only on
+        // (model, algo, hw), not on the chain id.
+        let program = compile_opt(model, spec.algo, &self.hw, spec.pas_flips, self.optimize);
+        let units = (0..chains)
+            .map(|chain_id| {
+                let mut sim =
+                    Simulator::new(self.hw, model, spec.pas_flips, spec.chain_seed(chain_id));
+                if let Some(x0) = &spec.init_state {
+                    sim.x.copy_from_slice(x0);
+                }
+                ExecUnit::sim(chain_id, sim, program.clone())
+            })
+            .collect();
+        run_adaptive(model, spec, chains, ctx, controller, units)
     }
 }
 
@@ -430,27 +535,42 @@ impl ExecutionBackend for MultiCoreAcceleratorBackend {
         let every = spec.observe_every.max(1);
         let mut trace = Vec::new();
         let mut best = f64::NEG_INFINITY;
-        let report = sim.run_observed(
-            spec.steps,
-            Some(spec.schedule),
-            &mut |iter, updates_so_far, x| {
-                let step = iter + 1;
-                if step % every == 0 || step == spec.steps {
-                    let objective = model.objective(x);
-                    best = best.max(objective);
-                    trace.push(objective);
-                    ctx.emit(ProgressEvent {
-                        chain_id,
-                        step,
-                        beta: spec.schedule.beta(iter),
-                        objective,
-                        best_objective: best,
-                        updates: updates_so_far,
-                    });
-                }
-                !ctx.stop_requested()
-            },
-        );
+        let mut run = sim.begin_run();
+        // β on the global clock, planned one observation segment at a
+        // time, as in the single-core backend.
+        let mut betas: Vec<f32> = Vec::with_capacity(every.min(spec.steps));
+        let mut done = 0usize;
+        let mut go = true;
+        while go && done < spec.steps {
+            let n = every.min(spec.steps - done);
+            betas.clear();
+            betas.extend((done..done + n).map(|t| spec.beta(t)));
+            go = sim.advance_run(
+                &mut run,
+                done,
+                n,
+                Some(&betas),
+                &mut |iter, updates_so_far, x| {
+                    let step = iter + 1;
+                    if step % every == 0 || step == spec.steps {
+                        let objective = model.objective(x);
+                        best = best.max(objective);
+                        trace.push(objective);
+                        ctx.emit(ProgressEvent {
+                            chain_id,
+                            step,
+                            beta: spec.beta(iter),
+                            objective,
+                            best_objective: best,
+                            updates: updates_so_far,
+                        });
+                    }
+                    !ctx.stop_requested()
+                },
+            );
+            done += n;
+        }
+        let report = sim.finish_run(run);
         let merged = report.merged();
         let stats = StepStats {
             updates: merged.updates,
@@ -474,6 +594,33 @@ impl ExecutionBackend for MultiCoreAcceleratorBackend {
             wall: t0.elapsed(),
             objective_trace: trace,
         })
+    }
+
+    fn run_chains_adaptive(
+        &self,
+        model: &dyn EnergyModel,
+        spec: &ChainSpec,
+        chains: usize,
+        ctx: &ChainCtx<'_>,
+        controller: &mut dyn BetaController,
+    ) -> Result<Vec<ChainResult>, Mc2aError> {
+        self.mhw.validate().map_err(Mc2aError::InvalidHardware)?;
+        let mut units = Vec::with_capacity(chains);
+        for chain_id in 0..chains {
+            let mut sim = MultiCoreSim::new(
+                self.mhw,
+                model,
+                spec.algo,
+                spec.pas_flips,
+                spec.chain_seed(chain_id),
+            )
+            .map_err(Mc2aError::InvalidConfig)?;
+            if let Some(x0) = &spec.init_state {
+                sim.set_state(x0);
+            }
+            units.push(ExecUnit::multi(chain_id, sim));
+        }
+        run_adaptive(model, spec, chains, ctx, controller, units)
     }
 }
 
@@ -558,7 +705,7 @@ impl ExecutionBackend for RuntimeBackend {
             if ctx.stop_requested() {
                 break;
             }
-            let beta = spec.schedule.beta(done);
+            let beta = spec.beta(done);
             for i in 0..n {
                 model.local_energies(&x, i, &mut scratch);
                 if scratch.len() > width {

@@ -23,10 +23,14 @@ use std::time::Instant;
 
 use crate::coordinator::ChainResult;
 use crate::energy::EnergyModel;
-use crate::engine::backend::{run_software_chain, ChainCtx, ChainSpec, ExecutionBackend};
+use crate::engine::adaptive::{run_adaptive, ExecUnit};
+use crate::engine::backend::{
+    run_software_chain, software_chain, ChainCtx, ChainSpec, ExecutionBackend,
+};
 use crate::engine::error::Mc2aError;
 use crate::engine::observer::ProgressEvent;
 use crate::engine::scheduler;
+use crate::mcmc::anneal::BetaController;
 use crate::mcmc::{batch_supported, build_batch_algo, ChainBatch};
 
 /// Default chains per work item when the caller does not choose one.
@@ -107,6 +111,7 @@ fn run_batch_item(
         k,
         spec.init_state.as_deref(),
     );
+    batch.set_step_offset(spec.beta_offset);
     let every = spec.observe_every.max(1);
     let mut traces = vec![Vec::new(); batch.k()];
     let mut done = 0usize;
@@ -169,6 +174,52 @@ impl ExecutionBackend for BatchedSoftwareBackend {
         ctx: &ChainCtx<'_>,
     ) -> Result<ChainResult, Mc2aError> {
         run_software_chain(model, spec, chain_id, ctx)
+    }
+
+    /// Adaptive lockstep over the same work decomposition as
+    /// [`BatchedSoftwareBackend::run_chains`]: one [`ChainBatch`] unit
+    /// per `batch` chains (scalar fallback units for algorithms
+    /// without a batched kernel), all advancing one observation
+    /// segment per round. Chains — and therefore the diagnostics the
+    /// controller sees — are bit-identical to the scalar software
+    /// backend, so the β trajectory is too.
+    fn run_chains_adaptive(
+        &self,
+        model: &dyn EnergyModel,
+        spec: &ChainSpec,
+        chains: usize,
+        ctx: &ChainCtx<'_>,
+        controller: &mut dyn BetaController,
+    ) -> Result<Vec<ChainResult>, Mc2aError> {
+        let mut units = Vec::new();
+        if batch_supported(spec.algo) {
+            let size = self.batch.max(1);
+            let mut start = 0usize;
+            while start < chains {
+                let end = (start + size).min(chains);
+                let mut batch = ChainBatch::new(
+                    model,
+                    spec.schedule,
+                    spec.seed,
+                    start,
+                    end - start,
+                    spec.init_state.as_deref(),
+                );
+                batch.set_step_offset(spec.beta_offset);
+                let algo = build_batch_algo(spec.algo, spec.sampler, model)
+                    .expect("batched kernel exists");
+                units.push(ExecUnit::batch(batch, algo));
+                start = end;
+            }
+        } else {
+            for chain_id in 0..chains {
+                units.push(ExecUnit::scalar(
+                    chain_id,
+                    software_chain(model, spec, chain_id),
+                ));
+            }
+        }
+        run_adaptive(model, spec, chains, ctx, controller, units)
     }
 
     fn run_chains(
@@ -234,6 +285,7 @@ mod tests {
             algo,
             sampler: SamplerKind::Gumbel,
             schedule: BetaSchedule::Constant(0.8),
+            beta_offset: 0,
             steps,
             seed: 0xBEEF,
             pas_flips: 4,

@@ -12,6 +12,13 @@
 //! ```json
 //! {"seed":1,"steps":500,"best_objective":-42.5,"best_x":[0,1,2]}
 //! ```
+//!
+//! Adaptive-annealing runs append the controller's serialized memory
+//! (`"anneal":[...]`, see [`crate::mcmc::anneal::BetaController::state`]),
+//! so a resumed run continues both the β ramp — the engine evaluates
+//! the schedule at `steps + t` via
+//! [`crate::engine::EngineBuilder::schedule_offset`] — and the
+//! controller's plateau/rate memory.
 
 use std::fmt::Write as _;
 use std::path::Path;
@@ -29,6 +36,10 @@ pub struct Checkpoint {
     pub best_objective: f64,
     /// Best assignment found (the resume state).
     pub best_x: Vec<u32>,
+    /// Serialized adaptive-annealing controller memory
+    /// ([`crate::engine::Engine::anneal_state`]); `None` on fixed-ramp
+    /// runs.
+    pub anneal: Option<Vec<f64>>,
 }
 
 impl Checkpoint {
@@ -49,7 +60,18 @@ impl Checkpoint {
             }
             write!(out, "{v}").unwrap();
         }
-        out.push_str("]}");
+        out.push(']');
+        if let Some(anneal) = &self.anneal {
+            out.push_str(",\"anneal\":[");
+            for (i, v) in anneal.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write!(out, "{v}").unwrap();
+            }
+            out.push(']');
+        }
+        out.push('}');
         out
     }
 
@@ -74,11 +96,28 @@ impl Checkpoint {
             }
             best_x.push(tok.parse::<u32>().map_err(|e| bad("best_x", &e.to_string()))?);
         }
+        // Optional field: absent on fixed-ramp checkpoints (and on any
+        // checkpoint written before adaptive annealing existed).
+        let anneal = if s.contains("\"anneal\"") {
+            let body = array_field(s, "anneal")?;
+            let mut state = Vec::new();
+            for tok in body.split(',') {
+                let tok = tok.trim();
+                if tok.is_empty() {
+                    continue;
+                }
+                state.push(tok.parse::<f64>().map_err(|e| bad("anneal", &e.to_string()))?);
+            }
+            Some(state)
+        } else {
+            None
+        };
         Ok(Checkpoint {
             seed,
             steps,
             best_objective,
             best_x,
+            anneal,
         })
     }
 
@@ -139,9 +178,30 @@ mod tests {
             steps: 12_345,
             best_objective: -87.25,
             best_x: vec![0, 3, 1, 2, 0, 1],
+            anneal: None,
         };
         let parsed = Checkpoint::from_json(&ck.to_json()).unwrap();
         assert_eq!(parsed, ck);
+    }
+
+    #[test]
+    fn anneal_state_round_trips() {
+        let ck = Checkpoint {
+            seed: 7,
+            steps: 400,
+            best_objective: 12.5,
+            best_x: vec![1, 0, 2],
+            anneal: Some(vec![180.0, 400.0, 2.0, 1.0, 12.5, 3.0, 5.0, 0.0]),
+        };
+        let parsed = Checkpoint::from_json(&ck.to_json()).unwrap();
+        assert_eq!(parsed, ck);
+        // Negative and fractional entries survive (best_seen may be
+        // -inf on a run that never observed a round).
+        let ck2 = Checkpoint {
+            anneal: Some(vec![0.5, -3.25, f64::NEG_INFINITY]),
+            ..ck
+        };
+        assert_eq!(Checkpoint::from_json(&ck2.to_json()).unwrap(), ck2);
     }
 
     #[test]
@@ -151,6 +211,7 @@ mod tests {
             steps: 0,
             best_objective: 0.0,
             best_x: Vec::new(),
+            anneal: None,
         };
         assert_eq!(Checkpoint::from_json(&ck.to_json()).unwrap(), ck);
     }
@@ -190,6 +251,7 @@ mod tests {
             steps: 100,
             best_objective: 1.5,
             best_x: vec![1, 1, 0],
+            anneal: None,
         };
         let path = std::env::temp_dir().join("mc2a_checkpoint_test.json");
         ck.save(&path).unwrap();

@@ -36,6 +36,7 @@
 //!   (split R-hat / ESS) with cooperative early stopping,
 //! * [`registry`] — the named-workload table the CLI and tests share.
 
+pub(crate) mod adaptive;
 pub mod backend;
 pub mod batched;
 pub mod checkpoint;
@@ -65,6 +66,7 @@ use std::time::Instant;
 use crate::coordinator::{ChainResult, RunMetrics};
 use crate::energy::EnergyModel;
 use crate::isa::HwConfig;
+use crate::mcmc::anneal::{AdaptiveSchedule, AnnealConfig, AnnealPolicy, BetaController};
 use crate::mcmc::{AlgoKind, BetaSchedule, SamplerKind};
 use observer::DiagnosticsTracker;
 
@@ -115,6 +117,9 @@ pub struct EngineBuilder<'m> {
     algo: AlgoKind,
     sampler: SamplerKind,
     schedule: BetaSchedule,
+    schedule_offset: usize,
+    adaptive: Option<AnnealConfig>,
+    anneal_state: Option<Vec<f64>>,
     steps: usize,
     chains: usize,
     seed: u64,
@@ -137,6 +142,9 @@ impl<'m> EngineBuilder<'m> {
             algo: AlgoKind::BlockGibbs,
             sampler: SamplerKind::Gumbel,
             schedule: BetaSchedule::Constant(1.0),
+            schedule_offset: 0,
+            adaptive: None,
+            anneal_state: None,
             steps: 100,
             chains: 1,
             seed: 1,
@@ -168,6 +176,46 @@ impl<'m> EngineBuilder<'m> {
     /// every backend (default: constant 1.0).
     pub fn schedule(mut self, schedule: BetaSchedule) -> Self {
         self.schedule = schedule;
+        self
+    }
+
+    /// Global-step offset of the schedule clock (default 0). A resumed
+    /// run passes the checkpoint's cumulative step count here so β is
+    /// evaluated at `offset + t` — the ramp continues where the
+    /// previous run stopped instead of restarting at t = 0. With
+    /// [`EngineBuilder::adaptive`], the controller's virtual clock
+    /// starts at the same offset.
+    pub fn schedule_offset(mut self, steps: usize) -> Self {
+        self.schedule_offset = steps;
+        self
+    }
+
+    /// Enable observer-driven adaptive annealing with the default
+    /// configuration for `policy` ([`AnnealConfig::new`]): the fixed
+    /// schedule becomes the *base ramp* of an
+    /// [`AdaptiveSchedule`] controller that consumes each observation
+    /// round's cross-chain diagnostics — reheat (or hold, per
+    /// `policy`) when the best objective stagnates, accelerate cooling
+    /// while split R-hat says the chains mix. Chains run in lockstep
+    /// observation rounds; supported on the software, batched and
+    /// accelerator-simulator backends.
+    pub fn adaptive(mut self, policy: AnnealPolicy) -> Self {
+        self.adaptive = Some(AnnealConfig::new(policy));
+        self
+    }
+
+    /// Adaptive annealing with explicit tuning knobs (see
+    /// [`EngineBuilder::adaptive`]).
+    pub fn adaptive_config(mut self, cfg: AnnealConfig) -> Self {
+        self.adaptive = Some(cfg);
+        self
+    }
+
+    /// Restore adaptive-controller memory serialized by a previous
+    /// run ([`Engine::anneal_state`], stored in
+    /// [`Checkpoint::anneal`]). Requires [`EngineBuilder::adaptive`].
+    pub fn anneal_state(mut self, state: Vec<f64>) -> Self {
+        self.anneal_state = Some(state);
         self
     }
 
@@ -315,6 +363,30 @@ impl<'m> EngineBuilder<'m> {
         if self.steps == 0 {
             return Err(Mc2aError::InvalidConfig("steps must be ≥ 1".into()));
         }
+        self.schedule.validate().map_err(Mc2aError::InvalidConfig)?;
+        if self.anneal_state.is_some() && self.adaptive.is_none() {
+            return Err(Mc2aError::InvalidConfig(
+                "anneal_state restores adaptive-controller memory; enable adaptive(...) first"
+                    .into(),
+            ));
+        }
+        if self.adaptive.is_some() {
+            // Both features respond to the same stagnation signal;
+            // combining them would fight over the escape strategy.
+            if self.restart.is_some() {
+                return Err(Mc2aError::InvalidConfig(
+                    "adaptive annealing and restart_on_stagnation are mutually exclusive"
+                        .into(),
+                ));
+            }
+            if matches!(self.backend, BackendChoice::Runtime(_)) {
+                return Err(Mc2aError::InvalidConfig(
+                    "adaptive annealing is supported on the software, batched and \
+                     accelerator-simulator backends only"
+                        .into(),
+                ));
+            }
+        }
         let model_vars = self.model.get().num_vars();
         if let Some(x0) = &self.init_state {
             if x0.len() != model_vars {
@@ -418,12 +490,24 @@ impl<'m> EngineBuilder<'m> {
         } else {
             self.observe_every
         };
+        let controller: Option<Box<dyn BetaController>> = match self.adaptive {
+            Some(cfg) => {
+                let mut c =
+                    AdaptiveSchedule::new(self.schedule, cfg).with_offset(self.schedule_offset);
+                if let Some(state) = &self.anneal_state {
+                    c.restore(state).map_err(Mc2aError::InvalidConfig)?;
+                }
+                Some(Box::new(c))
+            }
+            None => None,
+        };
         Ok(Engine {
             model: self.model,
             spec: ChainSpec {
                 algo: self.algo,
                 sampler: self.sampler,
                 schedule: self.schedule,
+                beta_offset: self.schedule_offset,
                 steps: self.steps,
                 seed: self.seed,
                 pas_flips: self.pas_flips,
@@ -434,6 +518,7 @@ impl<'m> EngineBuilder<'m> {
             backend,
             restart: self.restart,
             observer: self.observer,
+            controller,
             workload: self.workload,
         })
     }
@@ -448,6 +533,7 @@ pub struct Engine<'m> {
     backend: Box<dyn ExecutionBackend>,
     restart: Option<RestartConfig>,
     observer: Option<Box<dyn ChainObserver>>,
+    controller: Option<Box<dyn BetaController>>,
     workload: Option<&'static str>,
 }
 
@@ -493,6 +579,21 @@ impl<'m> Engine<'m> {
         self.workload
     }
 
+    /// Serialized adaptive-controller memory (None unless the engine
+    /// was built with [`EngineBuilder::adaptive`]). After [`Engine::run`]
+    /// this is the controller's final state — store it in a
+    /// [`Checkpoint`] so a resumed run continues both the β ramp and
+    /// the controller's memory.
+    pub fn anneal_state(&self) -> Option<Vec<f64>> {
+        self.controller.as_ref().map(|c| c.state())
+    }
+
+    /// One-line adaptive-controller summary (decisions taken), when
+    /// adaptive annealing is enabled.
+    pub fn anneal_describe(&self) -> Option<String> {
+        self.controller.as_ref().map(|c| c.describe())
+    }
+
     /// Hand the fan-out to the backend ([`ExecutionBackend::run_chains`]
     /// — OS thread per chain by default, a work-stealing batch pool on
     /// the batched backend), stream events to the observer, and gather
@@ -504,6 +605,7 @@ impl<'m> Engine<'m> {
         let spec = &self.spec;
         let backend = self.backend.as_ref();
         let observer = &mut self.observer;
+        let controller = self.controller.as_deref_mut();
         let n = self.chains;
         let restart_cfg = self.restart;
         let stop = AtomicBool::new(false);
@@ -519,7 +621,12 @@ impl<'m> Engine<'m> {
             // The backend owns its scheduling; the coordinating thread
             // runs the event loop until every sender is gone (the
             // backend thread drops `ctx` when `run_chains` returns).
-            let handle = scope.spawn(move || backend.run_chains(model, spec, n, &ctx));
+            // With adaptive annealing the backend instead drives its
+            // chains in lockstep under the β controller.
+            let handle = scope.spawn(move || match controller {
+                Some(c) => backend.run_chains_adaptive(model, spec, n, &ctx, c),
+                None => backend.run_chains(model, spec, n, &ctx),
+            });
 
             // Diagnostics are computed here, so observers can hold
             // plain mutable state.
@@ -688,6 +795,7 @@ mod tests {
             algo: crate::mcmc::AlgoKind::Gibbs,
             sampler: SamplerKind::Gumbel,
             schedule: BetaSchedule::Constant(0.7),
+            beta_offset: 0,
             steps: 40,
             seed: 11,
             pas_flips: 1,

@@ -2,12 +2,13 @@
 //!
 //! ```text
 //! mc2a table1 [--full]
-//! mc2a bench <fig5|fig6|fig11|fig12|fig13|fig14|fig15|chains|cores|headline|all> [--full]
+//! mc2a bench <fig5|fig6|fig11|fig12|fig13|fig14|fig15|chains|cores|anneal|headline|all> [--full]
 //! mc2a run --workload <name> [--algo mh|gibbs|bg|ag|pas]
 //!          [--sampler cdf|gumbel|lut] [--steps N] [--chains N]
 //!          [--backend sim|sw|batched|multicore|runtime]
 //!          [--batch K] [--threads T] [--cores C]
-//!          [--beta B] [--seed S] [--observe N]
+//!          [--beta B | --schedule const:B|linear:FROM:TO:STEPS|geom:FROM:TO:RATE]
+//!          [--adaptive reheat|plateau] [--seed S] [--observe N]
 //!          [--save-state PATH] [--init-from PATH]
 //! mc2a workloads
 //! mc2a roofline [--workload <name>] [--cores C]
@@ -23,7 +24,7 @@
 use mc2a::bench;
 use mc2a::engine::{registry, Checkpoint, Engine, Mc2aError, PrintObserver};
 use mc2a::isa::{HwConfig, MultiHwConfig};
-use mc2a::mcmc::{AlgoKind, BetaSchedule, SamplerKind};
+use mc2a::mcmc::{AlgoKind, AnnealPolicy, BetaSchedule, SamplerKind};
 use mc2a::rng::Rng;
 use mc2a::roofline::{self, WorkloadProfile};
 use mc2a::runtime::Runtime;
@@ -34,12 +35,13 @@ fn usage() -> ! {
 
 USAGE:
   mc2a table1 [--full]
-  mc2a bench <fig5|fig6|fig11|fig12|fig13|fig14|fig15|chains|cores|headline|all> [--full]
+  mc2a bench <fig5|fig6|fig11|fig12|fig13|fig14|fig15|chains|cores|anneal|headline|all> [--full]
   mc2a run --workload <name> [--algo mh|gibbs|bg|ag|pas]
            [--sampler cdf|gumbel|lut] [--steps N] [--chains N]
            [--backend sim|sw|batched|multicore|runtime]
            [--batch K] [--threads T] [--cores C]
-           [--beta B] [--seed S] [--observe N]
+           [--beta B | --schedule const:B|linear:FROM:TO:STEPS|geom:FROM:TO:RATE]
+           [--adaptive reheat|plateau] [--seed S] [--observe N]
            [--save-state PATH] [--init-from PATH]
   mc2a workloads
   mc2a roofline [--workload <name>] [--cores C]
@@ -87,6 +89,7 @@ fn cmd_bench(args: &[String]) -> Result<(), Mc2aError> {
             "fig15" => bench::fig15(quick),
             "chains" => bench::many_chains(quick)?,
             "cores" => bench::core_scaling(quick)?,
+            "anneal" => bench::anneal_compare(quick)?,
             "headline" => bench::headline(quick),
             other => {
                 let mut known: Vec<String> =
@@ -109,6 +112,32 @@ fn cmd_bench(args: &[String]) -> Result<(), Mc2aError> {
     Ok(())
 }
 
+/// Parse a `--schedule` spec: `const:B`, `linear:FROM:TO:STEPS` or
+/// `geom:FROM:TO:RATE` (the builder validates the numbers).
+fn parse_schedule(s: &str) -> Result<BetaSchedule, Mc2aError> {
+    fn bad(s: &str) -> Mc2aError {
+        Mc2aError::InvalidConfig(format!(
+            "bad schedule {s:?} (const:B | linear:FROM:TO:STEPS | geom:FROM:TO:RATE)"
+        ))
+    }
+    let num = |tok: &str| -> Result<f32, Mc2aError> { tok.parse::<f32>().map_err(|_| bad(s)) };
+    let parts: Vec<&str> = s.split(':').collect();
+    match parts.as_slice() {
+        ["const", b] => Ok(BetaSchedule::Constant(num(b)?)),
+        ["linear", f, t, n] => Ok(BetaSchedule::Linear {
+            from: num(f)?,
+            to: num(t)?,
+            steps: n.parse::<usize>().map_err(|_| bad(s))?,
+        }),
+        ["geom", f, t, r] | ["geometric", f, t, r] => Ok(BetaSchedule::Geometric {
+            from: num(f)?,
+            to: num(t)?,
+            rate: num(r)?,
+        }),
+        _ => Err(bad(s)),
+    }
+}
+
 fn cmd_run(args: &[String]) -> Result<(), Mc2aError> {
     let wname = flag_value(args, "--workload")
         .ok_or_else(|| Mc2aError::InvalidConfig("--workload is required".into()))?;
@@ -127,10 +156,26 @@ fn cmd_run(args: &[String]) -> Result<(), Mc2aError> {
     }
     let steps: usize = parsed_flag(args, "--steps")?.unwrap_or(200);
     let chains: usize = parsed_flag(args, "--chains")?.unwrap_or(1);
-    let beta: f32 = parsed_flag(args, "--beta")?.unwrap_or(1.0);
     let seed_flag: Option<u64> = parsed_flag(args, "--seed")?;
+    let schedule = match (flag_value(args, "--schedule"), parsed_flag::<f32>(args, "--beta")?) {
+        (Some(_), Some(_)) => {
+            return Err(Mc2aError::InvalidConfig(
+                "--beta is shorthand for --schedule const:B; pass one or the other".into(),
+            ))
+        }
+        (Some(spec), None) => parse_schedule(&spec)?,
+        (None, Some(b)) => BetaSchedule::Constant(b),
+        (None, None) => BetaSchedule::Constant(1.0),
+    };
+    let adaptive: Option<AnnealPolicy> = match flag_value(args, "--adaptive") {
+        Some(p) => Some(AnnealPolicy::parse(&p).ok_or_else(|| {
+            Mc2aError::InvalidConfig(format!("unknown adaptive policy {p:?} (reheat|plateau)"))
+        })?),
+        None => None,
+    };
     // Steps completed before this invocation (from `--init-from`), so a
-    // later `--save-state` records cumulative progress across resumes.
+    // later `--save-state` records cumulative progress across resumes
+    // and the β ramp continues at the checkpoint's step count.
     let mut prior_steps = 0usize;
     // Without an explicit --seed, a resumed run continues on a seed
     // derived from (checkpoint seed, checkpoint steps) — replaying the
@@ -145,14 +190,20 @@ fn cmd_run(args: &[String]) -> Result<(), Mc2aError> {
             "resuming from {path}: {} steps done, best objective {:.2}",
             ck.steps, ck.best_objective
         );
-        builder = builder.init_state(ck.best_x);
+        builder = builder.init_state(ck.best_x).schedule_offset(ck.steps);
+        // Adaptive resume also restores the controller's memory, so
+        // plateau counters and the virtual clock carry over.
+        if adaptive.is_some() {
+            if let Some(state) = ck.anneal {
+                builder = builder.anneal_state(state);
+            }
+        }
     }
     let seed: u64 = seed_flag.or(resume_seed).unwrap_or(1);
-    builder = builder
-        .steps(steps)
-        .chains(chains)
-        .seed(seed)
-        .schedule(BetaSchedule::Constant(beta));
+    builder = builder.steps(steps).chains(chains).seed(seed).schedule(schedule);
+    if let Some(policy) = adaptive {
+        builder = builder.adaptive(policy);
+    }
     let hw = HwConfig::paper_default();
     let batch: Option<usize> = parsed_flag(args, "--batch")?;
     let threads: Option<usize> = parsed_flag(args, "--threads")?;
@@ -214,6 +265,9 @@ fn cmd_run(args: &[String]) -> Result<(), Mc2aError> {
         engine.backend_name(),
     );
     let metrics = engine.run()?;
+    if let Some(summary) = engine.anneal_describe() {
+        println!("{summary}");
+    }
     for c in &metrics.chains {
         print!(
             "chain {}: best objective {:.2}, {} updates, {:?}",
@@ -270,6 +324,7 @@ fn cmd_run(args: &[String]) -> Result<(), Mc2aError> {
             steps: prior_steps + best.steps,
             best_objective: objective,
             best_x: best.best_x.clone(),
+            anneal: engine.anneal_state(),
         };
         ck.save(&path)?;
         println!(

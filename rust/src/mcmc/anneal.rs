@@ -1,0 +1,475 @@
+//! Observer-driven adaptive annealing: stateful β controllers layered
+//! over the fixed [`BetaSchedule`] ramps.
+//!
+//! The fixed schedules of §II-A are open-loop: β(t) is a pure function
+//! of the step index, blind to whether the chains are mixing, stuck,
+//! or already converged. Sountsov et al. ("Running MCMC on Modern
+//! Hardware and Software") make the case that cheap streaming
+//! diagnostics — exactly the split R-hat / ESS the engine's
+//! [`crate::engine::ChainObserver`] already computes — should close
+//! that loop. This module provides the controller layer:
+//!
+//! * [`BetaController`] — the trait the engine drives: β for any
+//!   global step, one diagnostics callback per observation round, and
+//!   flat-state serialization for checkpoint/resume,
+//! * [`AdaptiveSchedule`] — wraps a fixed [`BetaSchedule`] in a
+//!   *virtual clock* that the controller warps between observation
+//!   rounds: **reheat** (rewind the ramp) on best-objective
+//!   stagnation, **accelerate** cooling while the chains mix (low
+//!   R-hat), **hold** the temperature on plateau,
+//! * [`FixedController`] — the trivial open-loop controller (β(t) =
+//!   schedule.beta(t)), useful for testing the engine's lockstep
+//!   driver against the plain fixed-ramp path.
+//!
+//! Every decision is a deterministic function of the diagnostics
+//! sequence, so two backends that produce bit-identical chains (the
+//! scalar and batched software backends) produce bit-identical β
+//! trajectories — pinned by `tests/integration_anneal.rs`.
+
+use crate::mcmc::BetaSchedule;
+
+/// Stagnation response policy (the CLI's `--adaptive reheat|plateau`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AnnealPolicy {
+    /// Rewind the ramp on stagnation: β drops back along the schedule
+    /// (a fraction of the elapsed virtual time), giving trapped chains
+    /// another escape window.
+    Reheat,
+    /// Freeze the ramp on stagnation: β holds its current value until
+    /// the best objective improves again.
+    Plateau,
+}
+
+impl AnnealPolicy {
+    /// Short name used in CLI output.
+    pub fn name(&self) -> &'static str {
+        match self {
+            AnnealPolicy::Reheat => "reheat",
+            AnnealPolicy::Plateau => "plateau",
+        }
+    }
+
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> Option<AnnealPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "reheat" => Some(AnnealPolicy::Reheat),
+            "plateau" | "hold" => Some(AnnealPolicy::Plateau),
+            _ => None,
+        }
+    }
+}
+
+/// Tuning knobs for [`AdaptiveSchedule`]. [`AnnealConfig::new`] gives
+/// the defaults the CLI uses; every field is public for library
+/// callers.
+#[derive(Clone, Copy, Debug)]
+pub struct AnnealConfig {
+    /// Stagnation response.
+    pub policy: AnnealPolicy,
+    /// Consecutive observation rounds without best-objective
+    /// improvement that count as stagnation.
+    pub patience: usize,
+    /// Minimum absolute best-objective gain that resets the plateau
+    /// counter.
+    pub min_improve: f64,
+    /// Split R-hat at or below which the chains count as mixed (the
+    /// acceleration trigger). Needs ≥ 2 chains; with one chain R-hat
+    /// is undefined and cooling never accelerates.
+    pub mixed_r_hat: f64,
+    /// Virtual-clock rate while the chains are mixed (> 1 cools
+    /// faster than the fixed ramp).
+    pub accel: f64,
+    /// Fraction of the elapsed virtual ramp rewound per reheat
+    /// (policy [`AnnealPolicy::Reheat`] only), in [0, 1].
+    pub reheat_fraction: f64,
+}
+
+impl AnnealConfig {
+    /// Default configuration for `policy`: patience 3, R-hat 1.05,
+    /// 2× acceleration, 50% reheat rewind.
+    pub fn new(policy: AnnealPolicy) -> AnnealConfig {
+        AnnealConfig {
+            policy,
+            patience: 3,
+            min_improve: 1e-9,
+            mixed_r_hat: 1.05,
+            accel: 2.0,
+            reheat_fraction: 0.5,
+        }
+    }
+}
+
+/// One observation round's cross-chain diagnostics, as consumed by a
+/// [`BetaController`]. The engine's lockstep driver computes these
+/// with the same `split_r_hat` / `effective_sample_size` functions the
+/// streaming [`crate::engine::ChainObserver`] reports use.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundDiagnostics {
+    /// Observation round index (1-based within this run).
+    pub round: usize,
+    /// Global step at the round boundary (resume offset included).
+    pub step: usize,
+    /// Split potential-scale-reduction over the per-chain objective
+    /// traces; `None` until ≥ 2 chains have ≥ 4 observations.
+    pub r_hat: Option<f64>,
+    /// Smallest per-chain effective sample size of the objective
+    /// trace.
+    pub min_ess: f64,
+    /// Best objective across all chains so far.
+    pub best_objective: f64,
+}
+
+/// A stateful β controller. `t` is always the *global* step index —
+/// cumulative across checkpoint resumes — so a restored controller
+/// continues both the ramp and its own memory.
+pub trait BetaController: Send {
+    /// β at global step `t`.
+    fn beta_at(&self, t: usize) -> f32;
+
+    /// Consume one completed observation round's diagnostics; the
+    /// controller may adjust its state for the next segment.
+    fn observe_round(&mut self, d: &RoundDiagnostics);
+
+    /// Serialize the controller's memory as a flat vector (stored in
+    /// [`crate::engine::Checkpoint`]'s `anneal` field).
+    fn state(&self) -> Vec<f64>;
+
+    /// Restore memory serialized by [`BetaController::state`].
+    fn restore(&mut self, state: &[f64]) -> Result<(), String>;
+
+    /// One-line human-readable summary (decisions taken so far).
+    fn describe(&self) -> String;
+
+    /// Short controller name ("fixed", "adaptive").
+    fn name(&self) -> &'static str;
+}
+
+/// The open-loop controller: β(t) = `schedule.beta(t)`, no memory.
+#[derive(Clone, Copy, Debug)]
+pub struct FixedController {
+    schedule: BetaSchedule,
+}
+
+impl FixedController {
+    /// Controller replaying `schedule` verbatim.
+    pub fn new(schedule: BetaSchedule) -> FixedController {
+        FixedController { schedule }
+    }
+}
+
+impl BetaController for FixedController {
+    fn beta_at(&self, t: usize) -> f32 {
+        self.schedule.beta(t)
+    }
+
+    fn observe_round(&mut self, _d: &RoundDiagnostics) {}
+
+    fn state(&self) -> Vec<f64> {
+        Vec::new()
+    }
+
+    fn restore(&mut self, _state: &[f64]) -> Result<(), String> {
+        Ok(())
+    }
+
+    fn describe(&self) -> String {
+        format!("fixed({:?})", self.schedule)
+    }
+
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+}
+
+/// Number of entries in [`AdaptiveSchedule`]'s serialized state.
+const ADAPTIVE_STATE_LEN: usize = 8;
+
+/// A fixed [`BetaSchedule`] driven through a warped *virtual clock*.
+///
+/// The schedule is evaluated at a virtual time `v` instead of the real
+/// step index. Between observation rounds `v` advances at `rate`
+/// virtual steps per real step; the diagnostics of each completed
+/// round pick the rate for the next segment:
+///
+/// * best objective stagnant for `patience` rounds → **reheat**
+///   (rewind `v` by `reheat_fraction`, policy `Reheat`) or **hold**
+///   (`rate = 0`, policy `Plateau`),
+/// * chains mixed (split R-hat ≤ `mixed_r_hat`) → **accelerate**
+///   (`rate = accel`),
+/// * otherwise → follow the fixed ramp (`rate = 1`).
+pub struct AdaptiveSchedule {
+    base: BetaSchedule,
+    cfg: AnnealConfig,
+    /// Virtual schedule time at `anchor`.
+    virtual_t: f64,
+    /// Global step where the current segment began.
+    anchor: usize,
+    /// Virtual steps per real step for the current segment.
+    rate: f64,
+    /// Consecutive stagnant observation rounds.
+    plateau: usize,
+    /// Best objective the controller has seen.
+    best_seen: f64,
+    reheats: u64,
+    accels: u64,
+    holds: u64,
+}
+
+impl AdaptiveSchedule {
+    /// Adaptive controller over `base`, starting at virtual time 0.
+    pub fn new(base: BetaSchedule, cfg: AnnealConfig) -> AdaptiveSchedule {
+        AdaptiveSchedule {
+            base,
+            cfg,
+            virtual_t: 0.0,
+            anchor: 0,
+            rate: 1.0,
+            plateau: 0,
+            best_seen: f64::NEG_INFINITY,
+            reheats: 0,
+            accels: 0,
+            holds: 0,
+        }
+    }
+
+    /// Start the virtual clock at global step `offset` (checkpoint
+    /// resume: the ramp continues where the previous run stopped).
+    /// Restoring a serialized state afterwards overrides this.
+    pub fn with_offset(mut self, offset: usize) -> AdaptiveSchedule {
+        self.virtual_t = offset as f64;
+        self.anchor = offset;
+        self
+    }
+
+    /// The wrapped fixed schedule.
+    pub fn base(&self) -> BetaSchedule {
+        self.base
+    }
+
+    /// Reheats issued so far.
+    pub fn reheats(&self) -> u64 {
+        self.reheats
+    }
+
+    /// Accelerated segments issued so far.
+    pub fn accels(&self) -> u64 {
+        self.accels
+    }
+
+    /// Hold segments issued so far.
+    pub fn holds(&self) -> u64 {
+        self.holds
+    }
+
+    fn virtual_at(&self, t: usize) -> f64 {
+        let dt = t.saturating_sub(self.anchor) as f64;
+        (self.virtual_t + self.rate * dt).max(0.0)
+    }
+}
+
+impl BetaController for AdaptiveSchedule {
+    fn beta_at(&self, t: usize) -> f32 {
+        self.base.beta(self.virtual_at(t) as usize)
+    }
+
+    fn observe_round(&mut self, d: &RoundDiagnostics) {
+        // Close the finished segment: advance the virtual clock to the
+        // round boundary, then decide the next segment's rate.
+        self.virtual_t = self.virtual_at(d.step);
+        self.anchor = d.step;
+        let improved = d.best_objective > self.best_seen + self.cfg.min_improve;
+        if d.best_objective > self.best_seen {
+            self.best_seen = d.best_objective;
+        }
+        self.plateau = if improved { 0 } else { self.plateau + 1 };
+        let mixed = d.r_hat.is_some_and(|r| r <= self.cfg.mixed_r_hat);
+        if self.plateau >= self.cfg.patience {
+            match self.cfg.policy {
+                AnnealPolicy::Reheat => {
+                    self.virtual_t *= 1.0 - self.cfg.reheat_fraction.clamp(0.0, 1.0);
+                    self.rate = 1.0;
+                    self.plateau = 0;
+                    self.reheats += 1;
+                }
+                AnnealPolicy::Plateau => {
+                    self.rate = 0.0;
+                    self.holds += 1;
+                }
+            }
+        } else if mixed {
+            self.rate = self.cfg.accel;
+            self.accels += 1;
+        } else {
+            self.rate = 1.0;
+        }
+    }
+
+    fn state(&self) -> Vec<f64> {
+        vec![
+            self.virtual_t,
+            self.anchor as f64,
+            self.rate,
+            self.plateau as f64,
+            self.best_seen,
+            self.reheats as f64,
+            self.accels as f64,
+            self.holds as f64,
+        ]
+    }
+
+    fn restore(&mut self, state: &[f64]) -> Result<(), String> {
+        if state.len() != ADAPTIVE_STATE_LEN {
+            return Err(format!(
+                "adaptive annealing state has {} entries, expected {ADAPTIVE_STATE_LEN}",
+                state.len()
+            ));
+        }
+        self.virtual_t = state[0];
+        self.anchor = state[1] as usize;
+        self.rate = state[2];
+        self.plateau = state[3] as usize;
+        self.best_seen = state[4];
+        self.reheats = state[5] as u64;
+        self.accels = state[6] as u64;
+        self.holds = state[7] as u64;
+        Ok(())
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "adaptive({}): {} reheats, {} accels, {} holds, virtual t {:.0}",
+            self.cfg.policy.name(),
+            self.reheats,
+            self.accels,
+            self.holds,
+            self.virtual_t
+        )
+    }
+
+    fn name(&self) -> &'static str {
+        "adaptive"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ramp() -> BetaSchedule {
+        BetaSchedule::Linear {
+            from: 0.0,
+            to: 1.0,
+            steps: 100,
+        }
+    }
+
+    fn diag(round: usize, step: usize, r_hat: Option<f64>, best: f64) -> RoundDiagnostics {
+        RoundDiagnostics {
+            round,
+            step,
+            r_hat,
+            min_ess: 10.0,
+            best_objective: best,
+        }
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in [AnnealPolicy::Reheat, AnnealPolicy::Plateau] {
+            assert_eq!(AnnealPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(AnnealPolicy::parse("nope"), None);
+    }
+
+    #[test]
+    fn follows_the_fixed_ramp_until_a_decision_fires() {
+        let mut c = AdaptiveSchedule::new(ramp(), AnnealConfig::new(AnnealPolicy::Reheat));
+        for t in 0..10 {
+            assert_eq!(c.beta_at(t), ramp().beta(t), "t={t}");
+        }
+        // Improving rounds with unmixed chains keep rate 1.
+        c.observe_round(&diag(1, 10, Some(2.0), 1.0));
+        c.observe_round(&diag(2, 20, Some(2.0), 2.0));
+        for t in 20..30 {
+            assert_eq!(c.beta_at(t), ramp().beta(t), "t={t}");
+        }
+    }
+
+    #[test]
+    fn mixed_chains_accelerate_cooling() {
+        let mut c = AdaptiveSchedule::new(ramp(), AnnealConfig::new(AnnealPolicy::Reheat));
+        c.observe_round(&diag(1, 10, Some(1.0), 1.0));
+        assert_eq!(c.accels(), 1);
+        // rate 2: at real step 20 the virtual clock reads 10 + 2·10 = 30.
+        assert_eq!(c.beta_at(20), ramp().beta(30));
+    }
+
+    #[test]
+    fn stagnation_reheats_under_reheat_policy() {
+        let mut cfg = AnnealConfig::new(AnnealPolicy::Reheat);
+        cfg.patience = 2;
+        let mut c = AdaptiveSchedule::new(ramp(), cfg);
+        c.observe_round(&diag(1, 40, Some(2.0), 5.0));
+        // Two stagnant rounds at the patience threshold trigger the
+        // rewind: virtual time halves (reheat_fraction 0.5).
+        c.observe_round(&diag(2, 50, Some(2.0), 5.0));
+        c.observe_round(&diag(3, 60, Some(2.0), 5.0));
+        assert_eq!(c.reheats(), 1);
+        assert_eq!(c.beta_at(60), ramp().beta(30));
+    }
+
+    #[test]
+    fn stagnation_holds_under_plateau_policy() {
+        let mut cfg = AnnealConfig::new(AnnealPolicy::Plateau);
+        cfg.patience = 1;
+        let mut c = AdaptiveSchedule::new(ramp(), cfg);
+        c.observe_round(&diag(1, 30, Some(2.0), 5.0));
+        c.observe_round(&diag(2, 40, Some(2.0), 5.0));
+        assert!(c.holds() >= 1);
+        // Frozen clock: β stays at the round-boundary value.
+        assert_eq!(c.beta_at(80), c.beta_at(40));
+    }
+
+    #[test]
+    fn state_roundtrip_continues_the_trajectory() {
+        let mut cfg = AnnealConfig::new(AnnealPolicy::Reheat);
+        cfg.patience = 2;
+        let rounds = [
+            diag(1, 10, Some(1.0), 1.0),
+            diag(2, 20, Some(2.0), 1.0),
+            diag(3, 30, Some(2.0), 1.0),
+            diag(4, 40, None, 3.0),
+        ];
+        // Uninterrupted controller.
+        let mut a = AdaptiveSchedule::new(ramp(), cfg);
+        for d in &rounds[..2] {
+            a.observe_round(d);
+        }
+        let saved = a.state();
+        for d in &rounds[2..] {
+            a.observe_round(d);
+        }
+        // Resumed controller: restore mid-sequence state, replay the tail.
+        let mut b = AdaptiveSchedule::new(ramp(), cfg).with_offset(20);
+        b.restore(&saved).unwrap();
+        for d in &rounds[2..] {
+            b.observe_round(d);
+        }
+        assert_eq!(a.state(), b.state());
+        for t in 40..60 {
+            assert_eq!(a.beta_at(t), b.beta_at(t), "t={t}");
+        }
+        assert!(b.restore(&[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn fixed_controller_replays_the_schedule() {
+        let mut c = FixedController::new(ramp());
+        c.observe_round(&diag(1, 10, Some(1.0), 1.0));
+        for t in [0, 5, 50, 150] {
+            assert_eq!(c.beta_at(t), ramp().beta(t));
+        }
+        assert!(c.state().is_empty());
+        assert_eq!(c.name(), "fixed");
+    }
+}

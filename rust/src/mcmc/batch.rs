@@ -83,6 +83,9 @@ pub struct ChainBatch<'m> {
     /// parallel tempering.
     betas: Vec<f32>,
     schedule: BetaSchedule,
+    /// Global-step offset added to the schedule clock (checkpoint
+    /// resume; mirrors `Chain::step_offset`).
+    step_offset: usize,
     /// Steps taken (uniform across the batch).
     pub step_count: usize,
     rngs: Vec<Rng>,
@@ -142,6 +145,7 @@ impl<'m> ChainBatch<'m> {
             states,
             betas: vec![schedule.beta(0); k],
             schedule,
+            step_offset: 0,
             step_count: 0,
             rngs,
             stats: vec![StepStats::default(); k],
@@ -164,9 +168,16 @@ impl<'m> ChainBatch<'m> {
         self.first_chain + c
     }
 
+    /// Set the global-step offset of the schedule clock (checkpoint
+    /// resume: β continues at `offset + t` instead of restarting).
+    pub fn set_step_offset(&mut self, offset: usize) {
+        self.step_offset = offset;
+    }
+
     /// β at the last completed step (what a progress event reports).
     pub fn last_beta(&self) -> f32 {
-        self.schedule.beta(self.step_count.saturating_sub(1))
+        self.schedule
+            .beta((self.step_offset + self.step_count).saturating_sub(1))
     }
 
     /// Gather chain `c`'s current assignment out of the SoA block.
@@ -191,31 +202,45 @@ impl<'m> ChainBatch<'m> {
     /// Run `n` steps of `algo`, updating histograms, objectives and
     /// best-so-far per chain — the batched twin of `Chain::run`.
     pub fn run(&mut self, algo: &mut dyn BatchMcmc, n: usize) {
-        let nv = self.model.num_vars();
         for _ in 0..n {
-            let beta = self.schedule.beta(self.step_count);
-            self.betas.fill(beta);
-            algo.step_batch(
-                self.model,
-                &mut self.states,
-                self.k,
-                &self.betas,
-                &mut self.rngs,
-                &mut self.stats,
-            );
-            self.step_count += 1;
-            for c in 0..self.k {
-                self.hist0[c * self.s0 + self.states[c] as usize] += 1;
-                self.gather.clear();
-                self.gather
-                    .extend(self.states[c..].iter().step_by(self.k).copied());
-                let obj = self.model.objective(&self.gather);
-                self.objectives[c] = obj;
-                if obj > self.best_objectives[c] {
-                    self.best_objectives[c] = obj;
-                    for i in 0..nv {
-                        self.best_states[i * self.k + c] = self.states[i * self.k + c];
-                    }
+            let beta = self.schedule.beta(self.step_offset + self.step_count);
+            self.step_with(algo, beta);
+        }
+    }
+
+    /// Run one step per entry of `betas`, using the supplied β values
+    /// instead of the fixed schedule — the adaptive annealing
+    /// controller's entry point (the batched twin of
+    /// `Chain::run_betas`).
+    pub fn run_betas(&mut self, algo: &mut dyn BatchMcmc, betas: &[f32]) {
+        for &beta in betas {
+            self.step_with(algo, beta);
+        }
+    }
+
+    fn step_with(&mut self, algo: &mut dyn BatchMcmc, beta: f32) {
+        let nv = self.model.num_vars();
+        self.betas.fill(beta);
+        algo.step_batch(
+            self.model,
+            &mut self.states,
+            self.k,
+            &self.betas,
+            &mut self.rngs,
+            &mut self.stats,
+        );
+        self.step_count += 1;
+        for c in 0..self.k {
+            self.hist0[c * self.s0 + self.states[c] as usize] += 1;
+            self.gather.clear();
+            self.gather
+                .extend(self.states[c..].iter().step_by(self.k).copied());
+            let obj = self.model.objective(&self.gather);
+            self.objectives[c] = obj;
+            if obj > self.best_objectives[c] {
+                self.best_objectives[c] = obj;
+                for i in 0..nv {
+                    self.best_states[i * self.k + c] = self.states[i * self.k + c];
                 }
             }
         }

@@ -5,6 +5,7 @@
 //! Sampler (PAS), all parameterized by a pluggable categorical sampler
 //! (CDF baseline vs Gumbel-max, §V-D) and an annealing schedule.
 
+pub mod anneal;
 pub mod batch;
 mod gibbs;
 mod metrics;
@@ -12,6 +13,10 @@ mod mh;
 mod pas;
 pub mod sampler;
 
+pub use anneal::{
+    AdaptiveSchedule, AnnealConfig, AnnealPolicy, BetaController, FixedController,
+    RoundDiagnostics,
+};
 pub use batch::{batch_supported, build_batch_algo, BatchMcmc, ChainBatch};
 pub use gibbs::{AsyncGibbs, BlockGibbs, Gibbs};
 pub use metrics::{
@@ -173,13 +178,16 @@ pub enum BetaSchedule {
         /// Ramp length in steps.
         steps: usize,
     },
-    /// Geometric ramp: β(t) = from · r^t, capped at `to`.
+    /// Geometric ramp: β(t) = from · r^t, clamped at `to` from
+    /// whichever side the ramp approaches it — heating (`rate > 1`)
+    /// caps from below, cooling (`rate < 1`) terminates exactly at
+    /// `to` from above.
     Geometric {
         /// Initial β.
         from: f32,
-        /// Final β (cap).
+        /// Final β (clamp target).
         to: f32,
-        /// Per-step growth factor (> 1).
+        /// Per-step growth factor (> 1 heats, < 1 cools).
         rate: f32,
     },
 }
@@ -190,14 +198,80 @@ impl BetaSchedule {
         match *self {
             BetaSchedule::Constant(b) => b,
             BetaSchedule::Linear { from, to, steps } => {
-                if steps == 0 {
+                if steps == 0 || t >= steps {
+                    // Past the ramp the schedule holds *exactly* `to`
+                    // (`from + (to - from) · 1` can miss it by an ulp).
                     to
                 } else {
-                    let f = (t as f32 / steps as f32).min(1.0);
-                    from + (to - from) * f
+                    let f = t as f32 / steps as f32;
+                    let b = from + (to - from) * f;
+                    // Float guard: interpolation never leaves [from, to].
+                    if from <= to {
+                        b.clamp(from, to)
+                    } else {
+                        b.clamp(to, from)
+                    }
                 }
             }
-            BetaSchedule::Geometric { from, to, rate } => (from * rate.powi(t as i32)).min(to),
+            BetaSchedule::Geometric { from, to, rate } => {
+                // Clamp toward `to` regardless of ramp direction: a
+                // one-sided `.min(to)` would let a cooling schedule
+                // (`rate < 1`) sail straight past its target.
+                let b = from * rate.powi(t as i32);
+                if from <= to {
+                    b.min(to)
+                } else {
+                    b.max(to)
+                }
+            }
+        }
+    }
+
+    /// Reject degenerate configurations up front (the engine builder
+    /// calls this; a bad schedule is a typed error, not a silent NaN
+    /// or runaway ramp at step time).
+    pub fn validate(&self) -> Result<(), String> {
+        let finite_beta = |name: &str, b: f32| -> Result<(), String> {
+            if !b.is_finite() || b < 0.0 {
+                Err(format!("schedule {name} β must be finite and ≥ 0 (got {b})"))
+            } else {
+                Ok(())
+            }
+        };
+        match *self {
+            BetaSchedule::Constant(b) => finite_beta("constant", b),
+            BetaSchedule::Linear { from, to, .. } => {
+                finite_beta("linear `from`", from)?;
+                finite_beta("linear `to`", to)
+            }
+            BetaSchedule::Geometric { from, to, rate } => {
+                if !rate.is_finite() || rate <= 0.0 {
+                    return Err(format!(
+                        "geometric schedule rate must be finite and > 0 (got {rate})"
+                    ));
+                }
+                if !from.is_finite() || from <= 0.0 {
+                    return Err(format!(
+                        "geometric schedule `from` must be finite and > 0 (got {from}); \
+                         a ramp starting at 0 never moves"
+                    ));
+                }
+                finite_beta("geometric `to`", to)?;
+                // A rate pointed away from (or exactly at) the target
+                // never reaches it: β drifts out of [from, to] with the
+                // clamp never firing.
+                let mismatched = (rate > 1.0 && to < from)
+                    || (rate < 1.0 && to > from)
+                    || (rate == 1.0 && to != from);
+                if mismatched {
+                    return Err(format!(
+                        "geometric schedule never reaches `to`: from {from}, to {to}, \
+                         rate {rate} (use rate > 1 to heat toward to > from, \
+                         rate < 1 to cool toward to < from)"
+                    ));
+                }
+                Ok(())
+            }
         }
     }
 }
@@ -214,6 +288,10 @@ pub struct Chain<'m> {
     pub x: Vec<u32>,
     /// β schedule.
     pub schedule: BetaSchedule,
+    /// Global-step offset added to the schedule clock: a resumed chain
+    /// evaluates β at `step_offset + step_count` so the ramp continues
+    /// where the previous run stopped instead of restarting at t = 0.
+    step_offset: usize,
     /// Steps taken.
     pub step_count: usize,
     /// Cumulative statistics.
@@ -261,6 +339,7 @@ impl<'m> Chain<'m> {
             algo,
             x,
             schedule,
+            step_offset: 0,
             step_count: 0,
             stats: StepStats::default(),
             hist: vec![0; acc],
@@ -287,23 +366,47 @@ impl<'m> Chain<'m> {
         self.best_x.clone_from(&self.x);
     }
 
+    /// Set the global-step offset of the schedule clock (checkpoint
+    /// resume: β continues at `offset + t` instead of restarting).
+    pub fn set_step_offset(&mut self, offset: usize) {
+        self.step_offset = offset;
+    }
+
+    /// The global-step offset of the schedule clock.
+    pub fn step_offset(&self) -> usize {
+        self.step_offset
+    }
+
     /// Run `n` steps, updating histograms and best-so-far.
     pub fn run(&mut self, n: usize) {
         for _ in 0..n {
-            let beta = self.schedule.beta(self.step_count);
-            let s = self
-                .algo
-                .step(self.model, &mut self.x, beta, &mut self.rng);
-            self.stats.add(&s);
-            self.step_count += 1;
-            for i in 0..self.model.num_vars() {
-                self.hist[self.hist_offsets[i] + self.x[i] as usize] += 1;
-            }
-            let obj = self.model.objective(&self.x);
-            if obj > self.best_objective {
-                self.best_objective = obj;
-                self.best_x.clone_from(&self.x);
-            }
+            let beta = self.schedule.beta(self.step_offset + self.step_count);
+            self.step_once(beta);
+        }
+    }
+
+    /// Run one step per entry of `betas`, using the supplied β values
+    /// instead of the fixed schedule — the adaptive annealing
+    /// controller's entry point ([`crate::mcmc::anneal`]).
+    pub fn run_betas(&mut self, betas: &[f32]) {
+        for &beta in betas {
+            self.step_once(beta);
+        }
+    }
+
+    fn step_once(&mut self, beta: f32) {
+        let s = self
+            .algo
+            .step(self.model, &mut self.x, beta, &mut self.rng);
+        self.stats.add(&s);
+        self.step_count += 1;
+        for i in 0..self.model.num_vars() {
+            self.hist[self.hist_offsets[i] + self.x[i] as usize] += 1;
+        }
+        let obj = self.model.objective(&self.x);
+        if obj > self.best_objective {
+            self.best_objective = obj;
+            self.best_x.clone_from(&self.x);
         }
     }
 
@@ -366,6 +469,57 @@ mod tests {
         };
         assert_eq!(g.beta(0), 0.1);
         assert!(g.beta(10) <= 2.0);
+        // Cooling schedule: clamps from above and terminates *exactly*
+        // at `to` (the wrong-sided `.min(to)` regression).
+        let cool = BetaSchedule::Geometric {
+            from: 2.0,
+            to: 0.5,
+            rate: 0.5,
+        };
+        assert_eq!(cool.beta(0), 2.0);
+        assert_eq!(cool.beta(1), 1.0);
+        assert_eq!(cool.beta(2), 0.5);
+        assert_eq!(cool.beta(100), 0.5);
+    }
+
+    #[test]
+    fn schedule_validation_rejects_degenerate_ramps() {
+        for bad in [
+            BetaSchedule::Geometric { from: 1.0, to: 2.0, rate: 0.0 },
+            BetaSchedule::Geometric { from: 1.0, to: 2.0, rate: -1.0 },
+            BetaSchedule::Geometric { from: 0.0, to: 2.0, rate: 1.5 },
+            BetaSchedule::Geometric { from: 1.0, to: f32::NAN, rate: 1.5 },
+            // Rate pointed away from (or exactly at) the target.
+            BetaSchedule::Geometric { from: 0.5, to: 2.0, rate: 0.9 },
+            BetaSchedule::Geometric { from: 2.0, to: 0.5, rate: 1.1 },
+            BetaSchedule::Geometric { from: 0.5, to: 2.0, rate: 1.0 },
+            BetaSchedule::Constant(-1.0),
+            BetaSchedule::Linear { from: -0.5, to: 1.0, steps: 10 },
+        ] {
+            assert!(bad.validate().is_err(), "accepted {bad:?}");
+        }
+        for ok in [
+            BetaSchedule::Constant(1.0),
+            BetaSchedule::Linear { from: 0.0, to: 1.0, steps: 10 },
+            BetaSchedule::Geometric { from: 0.1, to: 2.0, rate: 2.0 },
+            BetaSchedule::Geometric { from: 2.0, to: 0.5, rate: 0.5 },
+        ] {
+            assert!(ok.validate().is_ok(), "rejected {ok:?}");
+        }
+    }
+
+    #[test]
+    fn chain_step_offset_shifts_the_schedule_clock() {
+        let m = PottsGrid::new(3, 3, 2, 0.5);
+        let schedule = BetaSchedule::Linear { from: 0.0, to: 1.0, steps: 100 };
+        let algo = build_algo(AlgoKind::Gibbs, SamplerKind::Gumbel, &m, 1);
+        let mut chain = Chain::new(&m, algo, schedule, 7);
+        chain.set_step_offset(50);
+        assert_eq!(chain.step_offset(), 50);
+        chain.run(10);
+        // β consumed at the last step was schedule.beta(50 + 9); the
+        // next one would be beta(60) — pinned via the public clock.
+        assert_eq!(chain.step_count, 10);
     }
 
     #[test]

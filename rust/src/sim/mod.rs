@@ -249,16 +249,50 @@ impl<'m> Simulator<'m> {
         schedule: Option<BetaSchedule>,
         observe: &mut dyn FnMut(usize, &SimReport, &[u32]) -> bool,
     ) -> SimReport {
+        let betas: Option<Vec<f32>> =
+            schedule.map(|s| (0..iterations).map(|t| s.beta(t)).collect());
+        let mut rep = self.begin_run(program);
+        self.advance_run(program, &mut rep, 0, iterations, betas.as_deref(), observe);
+        self.finish_run(&mut rep);
+        rep
+    }
+
+    /// Begin a segmented run: execute the prologue into a fresh
+    /// report. Together with [`Simulator::advance_run`] and
+    /// [`Simulator::finish_run`] this is the engine's adaptive-
+    /// annealing entry point — the controller advances the simulator
+    /// one observation segment at a time, choosing each segment's β
+    /// values from the previous segment's diagnostics.
+    pub fn begin_run(&mut self, program: &Program) -> SimReport {
         let mut rep = SimReport::default();
         for instr in &program.prologue {
             self.execute(instr, &mut rep);
         }
-        for iter in 0..iterations {
-            if let Some(s) = schedule {
-                self.beta = s.beta(iter);
+        rep
+    }
+
+    /// Advance `n` HWLOOP iterations (global indices `iter0 .. iter0 +
+    /// n`), accumulating into `rep`. `betas[j]` (when given) is
+    /// applied before iteration `iter0 + j`; `observe` runs after
+    /// every iteration and returning `false` stops the run. Returns
+    /// `false` when the run was stopped early.
+    #[allow(clippy::too_many_arguments)]
+    pub fn advance_run(
+        &mut self,
+        program: &Program,
+        rep: &mut SimReport,
+        iter0: usize,
+        n: usize,
+        betas: Option<&[f32]>,
+        observe: &mut dyn FnMut(usize, &SimReport, &[u32]) -> bool,
+    ) -> bool {
+        for j in 0..n {
+            let iter = iter0 + j;
+            if let Some(b) = betas {
+                self.beta = b[j];
             }
             for instr in &program.body {
-                self.execute(instr, &mut rep);
+                self.execute(instr, rep);
             }
             // Pipeline drain at the loop boundary: the HWLOOP must not
             // start re-reading sample memory while stores are in flight.
@@ -270,13 +304,18 @@ impl<'m> Simulator<'m> {
             for i in 0..self.model.num_vars() {
                 self.hist[self.hist_offsets[i] + self.x[i] as usize] += 1;
             }
-            if !observe(iter, &rep, &self.x) {
-                break;
+            if !observe(iter, rep, &self.x) {
+                return false;
             }
         }
+        true
+    }
+
+    /// Close a segmented run: charge static energy for the elapsed
+    /// cycles.
+    pub fn finish_run(&mut self, rep: &mut SimReport) {
         rep.energy.static_ +=
             self.eparams.static_watts * rep.cycles as f64 / (self.hw.clock_ghz * 1e9) * 1e12;
-        rep
     }
 
     /// Execute one instruction: timing first, then functional commit.

@@ -180,6 +180,18 @@ impl MultiCoreReport {
     }
 }
 
+/// In-flight bookkeeping for a segmented multi-core run (created by
+/// [`MultiCoreSim::begin_run`], threaded through
+/// [`MultiCoreSim::advance_run`], consumed by
+/// [`MultiCoreSim::finish_run`]). Opaque to callers.
+pub struct McRunState {
+    xfer_total: u64,
+    stall_xbar_path: u64,
+    sync_rounds: u64,
+    spent: Vec<u64>,
+    seg_start: Vec<usize>,
+}
+
 /// Validate a *(model size, algorithm, core count)* sharding request —
 /// the single authority shared by the engine builder, the simulator
 /// constructor and the roofline CLI, so accept/reject behavior and
@@ -353,12 +365,24 @@ impl<'m> MultiCoreSim<'m> {
         schedule: Option<BetaSchedule>,
         observe: &mut dyn FnMut(usize, u64, &[u32]) -> bool,
     ) -> MultiCoreReport {
-        let ncores = self.cores.len();
-        let multi = ncores > 1;
-        let n = self.model.num_vars();
-        let mut xfer_total = 0u64;
-        let mut stall_xbar_path = 0u64;
-        let mut sync_rounds = 0u64;
+        let betas: Option<Vec<f32>> =
+            schedule.map(|s| (0..iterations).map(|t| s.beta(t)).collect());
+        let mut run = self.begin_run();
+        self.advance_run(&mut run, 0, iterations, betas.as_deref(), observe);
+        self.finish_run(run)
+    }
+
+    /// RV updates committed across all cores so far in the current
+    /// run (the `updates_so_far` the observe callback reports).
+    pub fn total_updates(&self) -> u64 {
+        self.cores.iter().map(|c| c.rep.updates).sum()
+    }
+
+    /// Begin a segmented run: reset every core's report and execute
+    /// the shard prologues. Together with
+    /// [`MultiCoreSim::advance_run`] and [`MultiCoreSim::finish_run`]
+    /// this is the engine's adaptive-annealing entry point.
+    pub fn begin_run(&mut self) -> McRunState {
         for core in &mut self.cores {
             core.rep = SimReport::default();
             let Core { sim, program, rep, .. } = core;
@@ -366,13 +390,43 @@ impl<'m> MultiCoreSim<'m> {
                 sim.execute(instr, rep);
             }
         }
-        let mut spent = vec![0u64; ncores];
-        let mut seg_start = vec![0usize; ncores];
-        for iter in 0..iterations {
-            if let Some(s) = schedule {
-                let beta = s.beta(iter);
+        McRunState {
+            xfer_total: 0,
+            stall_xbar_path: 0,
+            sync_rounds: 0,
+            spent: vec![0u64; self.cores.len()],
+            seg_start: vec![0usize; self.cores.len()],
+        }
+    }
+
+    /// Advance `n` synchronized HWLOOP iterations (global indices
+    /// `iter0 .. iter0 + n`). `betas[j]` (when given) is applied to
+    /// every core before iteration `iter0 + j`; `observe` runs after
+    /// every iteration and returning `false` stops the run. Returns
+    /// `false` when the run was stopped early.
+    pub fn advance_run(
+        &mut self,
+        run: &mut McRunState,
+        iter0: usize,
+        n_iters: usize,
+        betas: Option<&[f32]>,
+        observe: &mut dyn FnMut(usize, u64, &[u32]) -> bool,
+    ) -> bool {
+        let ncores = self.cores.len();
+        let multi = ncores > 1;
+        let n = self.model.num_vars();
+        let McRunState {
+            xfer_total,
+            stall_xbar_path,
+            sync_rounds,
+            spent,
+            seg_start,
+        } = run;
+        for j in 0..n_iters {
+            let iter = iter0 + j;
+            if let Some(b) = betas {
                 for core in &mut self.cores {
-                    core.sim.set_beta(beta);
+                    core.sim.set_beta(b[j]);
                 }
             }
             seg_start.fill(0);
@@ -424,9 +478,9 @@ impl<'m> MultiCoreSim<'m> {
                         core.rep.xfer_words += words;
                         core.rep.energy.xbar += words as f64 * core.sim.eparams.pj_xbar_word;
                     }
-                    xfer_total += round_words;
-                    stall_xbar_path += xfer;
-                    sync_rounds += 1;
+                    *xfer_total += round_words;
+                    *stall_xbar_path += xfer;
+                    *sync_rounds += 1;
                 }
             }
             if !multi {
@@ -454,17 +508,23 @@ impl<'m> MultiCoreSim<'m> {
                     core.rep.cycles += hist_cost;
                     core.rep.xfer_words += core.owned.len() as u64;
                 }
-                xfer_total += n as u64;
-                stall_xbar_path += hist_cost;
+                *xfer_total += n as u64;
+                *stall_xbar_path += hist_cost;
             }
             for i in 0..n {
                 self.hist[self.hist_offsets[i] + self.x[i] as usize] += 1;
             }
             let updates: u64 = self.cores.iter().map(|c| c.rep.updates).sum();
             if !observe(iter, updates, &self.x) {
-                break;
+                return false;
             }
         }
+        true
+    }
+
+    /// Close a segmented run: charge static energy and assemble the
+    /// barrier-aligned [`MultiCoreReport`].
+    pub fn finish_run(&mut self, run: McRunState) -> MultiCoreReport {
         let clock_hz = self.mhw.core.clock_ghz * 1e9;
         for core in &mut self.cores {
             let seconds = core.rep.cycles as f64 / clock_hz;
@@ -478,11 +538,11 @@ impl<'m> MultiCoreSim<'m> {
             per_core,
             cycles,
             iterations,
-            xfer_words: xfer_total,
+            xfer_words: run.xfer_total,
             stall_sync,
-            stall_xbar: stall_xbar_path,
+            stall_xbar: run.stall_xbar_path,
             cut_edges: self.cut_edges,
-            sync_rounds,
+            sync_rounds: run.sync_rounds,
         }
     }
 }

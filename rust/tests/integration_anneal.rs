@@ -1,0 +1,521 @@
+//! Integration tests for the annealing core and the observer-driven
+//! adaptive controller: schedule clamping/validation, checkpoint
+//! resume continuing the β ramp, lockstep-driver equivalence with the
+//! fixed-ramp paths, cross-backend β-trajectory determinism, and the
+//! adaptive-vs-fixed time-to-target acceptance run.
+
+use std::sync::atomic::AtomicBool;
+use std::sync::{Arc, Mutex};
+
+use mc2a::energy::{EnergyModel, PottsGrid};
+use mc2a::engine::{
+    BatchedSoftwareBackend, ChainCtx, ChainObserver, ChainSpec, Engine, ExecutionBackend,
+    Mc2aError, ObserverAction, ProgressEvent, SoftwareBackend,
+};
+use mc2a::isa::HwConfig;
+use mc2a::mcmc::{
+    build_algo, AlgoKind, AnnealPolicy, BetaSchedule, Chain, FixedController, Mcmc, SamplerKind,
+    StepStats,
+};
+use mc2a::rng::Rng;
+
+// ------------------------------------------------------------ schedules
+
+#[test]
+fn geometric_cooling_terminates_exactly_at_target() {
+    // The regression: a cooling schedule (`rate < 1`) used to sail
+    // straight past `to` because of a wrong-sided `.min(to)` clamp.
+    let cool = BetaSchedule::Geometric {
+        from: 4.0,
+        to: 0.5,
+        rate: 0.5,
+    };
+    assert_eq!(cool.beta(0), 4.0);
+    let mut prev = f32::INFINITY;
+    for t in 0..300 {
+        let b = cool.beta(t);
+        assert!(b <= prev, "not monotone at t={t}: {b} > {prev}");
+        assert!(b >= 0.5, "overshot the target at t={t}: {b}");
+        prev = b;
+    }
+    assert_eq!(cool.beta(3), 0.5, "did not terminate at `to`");
+    assert_eq!(cool.beta(299), 0.5, "did not hold at `to`");
+}
+
+#[test]
+fn schedules_move_monotonically_toward_to_and_clamp() {
+    // Direction-agnostic property over a grid of configurations:
+    // β moves from `from` toward `to` without ever overshooting, and
+    // linear/geometric ramps eventually reach `to` exactly.
+    let cases = [
+        BetaSchedule::Linear { from: 0.1, to: 2.0, steps: 40 },
+        BetaSchedule::Linear { from: 2.0, to: 0.1, steps: 40 },
+        BetaSchedule::Linear { from: 1.0, to: 1.0, steps: 7 },
+        BetaSchedule::Geometric { from: 0.1, to: 2.0, rate: 1.3 },
+        BetaSchedule::Geometric { from: 2.0, to: 0.1, rate: 0.7 },
+        BetaSchedule::Geometric { from: 0.5, to: 8.0, rate: 2.0 },
+        BetaSchedule::Geometric { from: 8.0, to: 0.5, rate: 0.25 },
+    ];
+    for s in cases {
+        s.validate().expect("grid case must be valid");
+        let (from, to) = match s {
+            BetaSchedule::Linear { from, to, .. } => (from, to),
+            BetaSchedule::Geometric { from, to, .. } => (from, to),
+            BetaSchedule::Constant(b) => (b, b),
+        };
+        let (lo, hi) = (from.min(to), from.max(to));
+        assert_eq!(s.beta(0), from, "{s:?}: wrong start");
+        let mut prev = s.beta(0);
+        for t in 1..500 {
+            let b = s.beta(t);
+            assert!((lo..=hi).contains(&b), "{s:?}: β out of range at t={t}: {b}");
+            if from <= to {
+                assert!(b >= prev, "{s:?}: not non-decreasing at t={t}");
+            } else {
+                assert!(b <= prev, "{s:?}: not non-increasing at t={t}");
+            }
+            prev = b;
+        }
+        assert_eq!(s.beta(499), to, "{s:?}: never reached `to`");
+    }
+}
+
+#[test]
+fn builder_rejects_degenerate_schedules() {
+    let m = PottsGrid::new(3, 3, 2, 0.5);
+    for bad in [
+        BetaSchedule::Geometric { from: 1.0, to: 2.0, rate: 0.0 },
+        BetaSchedule::Geometric { from: 1.0, to: 2.0, rate: -2.0 },
+        BetaSchedule::Geometric { from: 0.0, to: 2.0, rate: 1.5 },
+        BetaSchedule::Constant(f32::NAN),
+    ] {
+        assert!(
+            matches!(
+                Engine::for_model(&m).schedule(bad).build(),
+                Err(Mc2aError::InvalidConfig(_))
+            ),
+            "builder accepted {bad:?}"
+        );
+    }
+}
+
+// ------------------------------------------------------- resume offsets
+
+/// Transition-kernel wrapper that records every β it is stepped with.
+struct BetaRecorder {
+    inner: Box<dyn Mcmc>,
+    seen: Arc<Mutex<Vec<f32>>>,
+}
+
+impl Mcmc for BetaRecorder {
+    fn step(
+        &mut self,
+        model: &dyn EnergyModel,
+        x: &mut [u32],
+        beta: f32,
+        rng: &mut Rng,
+    ) -> StepStats {
+        self.seen.lock().unwrap().push(beta);
+        self.inner.step(model, x, beta, rng)
+    }
+
+    fn name(&self) -> &'static str {
+        "beta-recorder"
+    }
+}
+
+#[test]
+fn chain_resume_consumes_the_continuous_beta_tail() {
+    // One 2N-step run bit-compared against "N steps → checkpoint →
+    // N steps with the schedule clock offset": the resumed chain must
+    // consume exactly the second half of the continuous β sequence.
+    let m = PottsGrid::new(4, 4, 2, 0.5);
+    let schedule = BetaSchedule::Geometric {
+        from: 0.2,
+        to: 5.0,
+        rate: 1.05,
+    };
+    let n = 40usize;
+    let record = |offset: usize, steps: usize| -> Vec<f32> {
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let algo = Box::new(BetaRecorder {
+            inner: build_algo(AlgoKind::Gibbs, SamplerKind::Gumbel, &m, 1),
+            seen: Arc::clone(&seen),
+        });
+        let mut chain = Chain::new(&m, algo, schedule, 9);
+        chain.set_step_offset(offset);
+        chain.run(steps);
+        let out = seen.lock().unwrap().clone();
+        out
+    };
+    let continuous = record(0, 2 * n);
+    let resumed = record(n, n);
+    assert_eq!(continuous.len(), 2 * n);
+    assert_eq!(
+        resumed,
+        continuous[n..],
+        "resumed ramp did not continue at the checkpoint step"
+    );
+    // The regression this pins: without the offset the resumed chain
+    // replays the ramp head instead of its tail.
+    assert_ne!(resumed, continuous[..n], "schedule is degenerate");
+}
+
+/// One recorded progress event: (chain id, step, β, objective).
+type Event = (usize, usize, f32, f64);
+
+/// Observer capturing every progress event's (chain, step, β,
+/// objective) for trajectory comparisons.
+#[derive(Clone, Default)]
+struct EventTrace {
+    events: Arc<Mutex<Vec<Event>>>,
+}
+
+impl ChainObserver for EventTrace {
+    fn on_progress(&mut self, e: &ProgressEvent) -> ObserverAction {
+        self.events
+            .lock()
+            .unwrap()
+            .push((e.chain_id, e.step, e.beta, e.objective));
+        ObserverAction::Continue
+    }
+}
+
+#[test]
+fn engine_resume_continues_the_ramp_on_every_software_backend() {
+    let m = PottsGrid::new(5, 5, 2, 0.5);
+    let schedule = BetaSchedule::Linear {
+        from: 0.2,
+        to: 3.0,
+        steps: 80,
+    };
+    let run = |batched: bool, offset: usize, steps: usize| -> Vec<(usize, usize, f32, f64)> {
+        let trace = EventTrace::default();
+        let events = Arc::clone(&trace.events);
+        let mut b = Engine::for_model(&m)
+            .algo(AlgoKind::Gibbs)
+            .schedule(schedule)
+            .schedule_offset(offset)
+            .steps(steps)
+            .chains(1)
+            .seed(5)
+            .observe_every(10)
+            .observer(Box::new(trace));
+        if batched {
+            b = b.batched();
+        }
+        b.build().unwrap().run().unwrap();
+        let out = events.lock().unwrap().clone();
+        out
+    };
+    for batched in [false, true] {
+        let full = run(batched, 0, 100);
+        let tail = run(batched, 50, 50);
+        assert_eq!(full.len(), 10, "batched={batched}");
+        assert_eq!(tail.len(), 5, "batched={batched}");
+        // Steps are run-local (10..50) but the β values must be the
+        // global-clock tail of the continuous run.
+        let full_betas: Vec<f32> = full[5..].iter().map(|e| e.2).collect();
+        let tail_betas: Vec<f32> = tail.iter().map(|e| e.2).collect();
+        assert_eq!(tail_betas, full_betas, "batched={batched}: ramp restarted");
+    }
+}
+
+// ------------------------------------------- lockstep driver equivalence
+
+fn plain_ctx(stop: &AtomicBool) -> ChainCtx<'_> {
+    ChainCtx {
+        stop,
+        events: None,
+        restart: None,
+    }
+}
+
+#[test]
+fn adaptive_driver_with_fixed_controller_matches_fixed_software_path() {
+    let m = PottsGrid::new(6, 5, 3, 0.7);
+    let schedule = BetaSchedule::Linear {
+        from: 0.3,
+        to: 2.0,
+        steps: 50,
+    };
+    let spec = ChainSpec {
+        algo: AlgoKind::Gibbs,
+        sampler: SamplerKind::Gumbel,
+        schedule,
+        beta_offset: 0,
+        steps: 60,
+        seed: 0xFEED,
+        pas_flips: 1,
+        observe_every: 7,
+        init_state: None,
+    };
+    let stop = AtomicBool::new(false);
+    let ctx = plain_ctx(&stop);
+    let fixed = SoftwareBackend.run_chains(&m, &spec, 4, &ctx).unwrap();
+    for backend in [
+        Box::new(SoftwareBackend) as Box<dyn ExecutionBackend>,
+        Box::new(BatchedSoftwareBackend::new(3)),
+    ] {
+        let mut controller = FixedController::new(schedule);
+        let driven = backend
+            .run_chains_adaptive(&m, &spec, 4, &ctx, &mut controller)
+            .unwrap();
+        assert_eq!(driven.len(), fixed.len());
+        for (a, b) in fixed.iter().zip(&driven) {
+            assert_eq!(a.chain_id, b.chain_id);
+            assert_eq!(a.steps, b.steps, "{}", backend.name());
+            assert_eq!(a.best_x, b.best_x, "{}", backend.name());
+            assert_eq!(a.best_objective, b.best_objective, "{}", backend.name());
+            assert_eq!(a.objective_trace, b.objective_trace, "{}", backend.name());
+            assert_eq!(a.marginal0, b.marginal0, "{}", backend.name());
+        }
+    }
+}
+
+#[test]
+fn adaptive_driver_with_fixed_controller_matches_fixed_accelerator_path() {
+    use mc2a::engine::AcceleratorBackend;
+    let m = PottsGrid::new(4, 4, 2, 0.6);
+    let schedule = BetaSchedule::Linear {
+        from: 0.2,
+        to: 1.5,
+        steps: 30,
+    };
+    let spec = ChainSpec {
+        algo: AlgoKind::BlockGibbs,
+        sampler: SamplerKind::Gumbel,
+        schedule,
+        beta_offset: 0,
+        steps: 20,
+        seed: 0xACC,
+        pas_flips: 1,
+        observe_every: 7,
+        init_state: None,
+    };
+    let backend = AcceleratorBackend::new(HwConfig::fig10_toy());
+    let stop = AtomicBool::new(false);
+    let ctx = plain_ctx(&stop);
+    let fixed = backend.run_chains(&m, &spec, 2, &ctx).unwrap();
+    let mut controller = FixedController::new(schedule);
+    let driven = backend
+        .run_chains_adaptive(&m, &spec, 2, &ctx, &mut controller)
+        .unwrap();
+    for (a, b) in fixed.iter().zip(&driven) {
+        assert_eq!(a.best_x, b.best_x, "final accelerator state diverged");
+        assert_eq!(a.marginal0, b.marginal0);
+        assert_eq!(a.objective_trace, b.objective_trace);
+        let (ra, rb) = (a.sim.as_ref().unwrap(), b.sim.as_ref().unwrap());
+        assert_eq!(ra.cycles, rb.cycles);
+        assert_eq!(ra.samples, rb.samples);
+        assert_eq!(ra.iterations, rb.iterations);
+    }
+}
+
+// ------------------------------------------------ adaptive determinism
+
+#[test]
+fn adaptive_beta_trajectory_is_bit_identical_across_software_backends() {
+    // Satellite: same seed + same observer cadence ⇒ the adaptive
+    // controller makes the same decisions on the scalar and batched
+    // backends, over registry workloads covering both the batched
+    // kernels (Block Gibbs) and the scalar fallback (PAS).
+    for wname in ["earthquake", "maxcut"] {
+        let run = |batched: bool| -> Vec<(usize, usize, f32, f64)> {
+            let trace = EventTrace::default();
+            let events = Arc::clone(&trace.events);
+            let mut b = Engine::for_workload(wname)
+                .unwrap()
+                .schedule(BetaSchedule::Geometric {
+                    from: 0.2,
+                    to: 4.0,
+                    rate: 1.05,
+                })
+                .adaptive(AnnealPolicy::Reheat)
+                .steps(60)
+                .chains(4)
+                .seed(0xD15C)
+                .observe_every(10)
+                .observer(Box::new(trace));
+            if batched {
+                b = b.batched().batch(2);
+            }
+            b.build().unwrap().run().unwrap();
+            let out = events.lock().unwrap().clone();
+            out
+        };
+        let scalar = run(false);
+        let batched = run(true);
+        assert!(!scalar.is_empty(), "{wname}: no events");
+        assert_eq!(
+            scalar, batched,
+            "{wname}: adaptive trajectory diverged across backends"
+        );
+    }
+}
+
+// ------------------------------------------------- acceptance: adaptive
+
+#[test]
+fn adaptive_matches_fixed_best_within_the_same_budget() {
+    // Acceptance: on at least one registry COP workload (seeded, small
+    // budget), adaptive annealing reaches the fixed schedule's best
+    // objective within the fixed schedule's own step budget. The fixed
+    // baseline is an aggressive geometric quench that freezes the
+    // chains early — the trap the reheat controller exists to escape.
+    let schedule = BetaSchedule::Geometric {
+        from: 0.1,
+        to: 6.0,
+        rate: 1.1,
+    };
+    let budget = 400usize;
+    let mut wins = Vec::new();
+    for wname in ["maxcut", "maxclique"] {
+        for seed in [3u64, 7, 11] {
+            let run = |policy: Option<AnnealPolicy>| -> f64 {
+                let mut b = Engine::for_workload(wname)
+                    .unwrap()
+                    .algo(AlgoKind::Mh)
+                    .schedule(schedule)
+                    .steps(budget)
+                    .chains(4)
+                    .seed(seed)
+                    .observe_every(20);
+                if let Some(p) = policy {
+                    b = b.adaptive(p);
+                }
+                let metrics = b.build().unwrap().run().unwrap();
+                assert!(metrics.chains.iter().all(|c| c.steps == budget));
+                metrics.best_objective()
+            };
+            let fixed = run(None);
+            let adaptive = run(Some(AnnealPolicy::Reheat));
+            if adaptive >= fixed {
+                wins.push((wname, seed, fixed, adaptive));
+            }
+        }
+    }
+    assert!(
+        !wins.is_empty(),
+        "adaptive annealing never matched the fixed best within the budget"
+    );
+}
+
+// ------------------------------------------------------ backend support
+
+#[test]
+fn adaptive_runs_on_the_accelerator_backends() {
+    // Single-core simulator backend.
+    let m = PottsGrid::new(4, 4, 2, 0.6);
+    let metrics = Engine::for_model(&m)
+        .schedule(BetaSchedule::Linear {
+            from: 0.2,
+            to: 2.0,
+            steps: 30,
+        })
+        .adaptive(AnnealPolicy::Plateau)
+        .steps(24)
+        .chains(2)
+        .observe_every(6)
+        .accelerator(HwConfig::fig10_toy())
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(metrics.chains.len(), 2);
+    for c in &metrics.chains {
+        assert_eq!(c.steps, 24);
+        assert!(c.sim.as_ref().unwrap().cycles > 0);
+    }
+    // Sharded multi-core backend (2 cores, Block Gibbs workload).
+    let metrics = Engine::for_workload("earthquake")
+        .unwrap()
+        .schedule(BetaSchedule::Linear {
+            from: 0.5,
+            to: 2.0,
+            steps: 20,
+        })
+        .adaptive(AnnealPolicy::Reheat)
+        .steps(24)
+        .chains(2)
+        .observe_every(6)
+        .cores(2)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(metrics.chains.len(), 2);
+    for c in &metrics.chains {
+        assert_eq!(c.steps, 24);
+        assert!(c.multicore.is_some(), "no multi-core report");
+    }
+}
+
+// -------------------------------------------------- builder + checkpoint
+
+#[test]
+fn adaptive_builder_validation() {
+    let m = PottsGrid::new(4, 4, 2, 0.5);
+    // Mutually exclusive with cold-chain restarts.
+    assert!(matches!(
+        Engine::for_model(&m)
+            .chains(2)
+            .adaptive(AnnealPolicy::Reheat)
+            .restart_on_stagnation(1.1, 2)
+            .build(),
+        Err(Mc2aError::InvalidConfig(_))
+    ));
+    // Controller state without a controller.
+    assert!(matches!(
+        Engine::for_model(&m).anneal_state(vec![0.0; 8]).build(),
+        Err(Mc2aError::InvalidConfig(_))
+    ));
+    // Malformed controller state.
+    assert!(matches!(
+        Engine::for_model(&m)
+            .adaptive(AnnealPolicy::Reheat)
+            .anneal_state(vec![1.0, 2.0])
+            .build(),
+        Err(Mc2aError::InvalidConfig(_))
+    ));
+    // Well-formed adaptive config builds.
+    assert!(Engine::for_model(&m).adaptive(AnnealPolicy::Plateau).build().is_ok());
+}
+
+#[test]
+fn adaptive_resume_restores_controller_memory() {
+    let m = PottsGrid::new(5, 5, 2, 0.6);
+    let schedule = BetaSchedule::Linear {
+        from: 0.1,
+        to: 2.5,
+        steps: 120,
+    };
+    let mut first = Engine::for_model(&m)
+        .schedule(schedule)
+        .adaptive(AnnealPolicy::Reheat)
+        .steps(60)
+        .chains(2)
+        .seed(21)
+        .observe_every(10)
+        .build()
+        .unwrap();
+    first.run().unwrap();
+    let state = first.anneal_state().expect("adaptive run has state");
+    assert!(first.anneal_describe().unwrap().starts_with("adaptive"));
+    // Resume: ramp offset + restored controller memory both accepted,
+    // and the continuation runs to completion.
+    let metrics = Engine::for_model(&m)
+        .schedule(schedule)
+        .schedule_offset(60)
+        .adaptive(AnnealPolicy::Reheat)
+        .anneal_state(state)
+        .steps(30)
+        .chains(2)
+        .seed(22)
+        .observe_every(10)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert!(metrics.chains.iter().all(|c| c.steps == 30));
+}

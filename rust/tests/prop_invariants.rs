@@ -157,6 +157,57 @@ fn prop_sim_state_conserved() {
     }
 }
 
+/// β schedules on random configurations: every valid ramp moves
+/// monotonically from `from` toward `to`, never overshoots in either
+/// direction (the wrong-sided Geometric clamp regression), and
+/// linear/geometric ramps terminate exactly at `to`.
+#[test]
+fn prop_beta_schedules_monotone_toward_to() {
+    let mut rng = Rng::new(0xBE7A);
+    for case in 0..CASES {
+        let from = 0.05 + 4.0 * rng.uniform_f32();
+        let to = 0.05 + 4.0 * rng.uniform_f32();
+        let schedule = if rng.below(2) == 0 {
+            BetaSchedule::Linear {
+                from,
+                to,
+                steps: 1 + rng.below(60),
+            }
+        } else {
+            // Rate pointed at the target: > 1 when heating, < 1 when
+            // cooling (a valid configuration by construction).
+            let rate = if to >= from {
+                1.05 + rng.uniform_f32()
+            } else {
+                0.3 + 0.6 * rng.uniform_f32()
+            };
+            BetaSchedule::Geometric { from, to, rate }
+        };
+        schedule.validate().unwrap_or_else(|e| panic!("case {case}: {e}"));
+        let (lo, hi) = (from.min(to), from.max(to));
+        let mut prev = schedule.beta(0);
+        assert_eq!(prev, from, "case {case} {schedule:?}: wrong start");
+        for t in 1..400 {
+            let b = schedule.beta(t);
+            assert!(
+                (lo..=hi).contains(&b),
+                "case {case} {schedule:?}: β {b} outside [{lo}, {hi}] at t={t}"
+            );
+            if from <= to {
+                assert!(b >= prev, "case {case} {schedule:?}: decreased at t={t}");
+            } else {
+                assert!(b <= prev, "case {case} {schedule:?}: increased at t={t}");
+            }
+            prev = b;
+        }
+        assert_eq!(
+            schedule.beta(399),
+            to,
+            "case {case} {schedule:?}: never clamped to `to`"
+        );
+    }
+}
+
 /// Chain bookkeeping: best_objective is the max over the trajectory
 /// and always achievable by the stored assignment.
 #[test]
