@@ -20,7 +20,7 @@ use crate::graph::erdos_renyi_with_edges;
 use crate::isa::HwConfig;
 use crate::mcmc::sampler::{sampler_tv_distance, GumbelLutSampler, GumbelSampler};
 use crate::mcmc::{
-    build_algo, run_to_accuracy, AlgoKind, AnnealPolicy, BetaSchedule, SamplerKind,
+    build_algo, run_to_accuracy, AlgoKind, AnnealPolicy, BetaSchedule, Ladder, SamplerKind,
 };
 use crate::rng::Rng;
 use crate::roofline::{self, dse_sweep, WorkloadProfile};
@@ -32,7 +32,7 @@ use crate::workloads::{self, Workload};
 /// them (the `all` meta-name itself excluded).
 pub const BENCH_NAMES: &[&str] = &[
     "fig5", "fig6", "fig11", "fig12", "fig13", "fig14", "fig15", "chains", "cores", "anneal",
-    "headline",
+    "temper", "headline",
 ];
 
 /// Table I: the workload suite, regenerated from the actual generators.
@@ -828,6 +828,112 @@ pub fn anneal_compare(quick: bool) -> Result<String, Mc2aError> {
             )
             .unwrap();
         }
+    }
+    Ok(out)
+}
+
+/// `mc2a bench temper`: single-β quench vs replica exchange
+/// (parallel tempering) time-to-target on COP workloads.
+///
+/// The single-β baseline runs every chain at the ladder's coldest β —
+/// the greedy regime that freezes into local optima. The tempered run
+/// spends the *same* step budget across a K-rung geometric ladder:
+/// hot replicas keep crossing barriers and accepted swaps carry their
+/// basins down to the cold rung. `steps_to_single_beta_best` is the
+/// first observation step at which a mode's running best (over the
+/// boundary-sampled traces) matched the single-β run's best
+/// boundary-sampled objective ("-" if never); the tempered row also
+/// reports the mean per-pair swap rate and total ladder round trips.
+pub fn temper_compare(quick: bool) -> Result<String, Mc2aError> {
+    let steps = if quick { 300 } else { 3000 };
+    let chains = 4usize;
+    let swap_every = (steps / 30).max(1);
+    let seed = 0x7E4Au64;
+    let (beta_cold, beta_hot, k) = (4.0f32, 0.2f32, 4usize);
+    let mut out = String::new();
+    writeln!(
+        out,
+        "# parallel tempering — single-β quench vs {k}-rung replica exchange \
+         ({steps} steps, {chains} chains, swap every {swap_every})"
+    )
+    .unwrap();
+    writeln!(
+        out,
+        "workload,mode,best_objective,steps_to_single_beta_best,mean_swap_rate,round_trips"
+    )
+    .unwrap();
+    let trace_best = |metrics: &crate::coordinator::RunMetrics| -> f64 {
+        metrics
+            .chains
+            .iter()
+            .flat_map(|c| c.objective_trace.iter().copied())
+            .fold(f64::NEG_INFINITY, f64::max)
+    };
+    // Steps until the cross-chain running best reaches `target`. Both
+    // modes observe at the swap cadence, so rounds align.
+    let steps_to = |metrics: &crate::coordinator::RunMetrics, target: f64| -> String {
+        let rounds = metrics
+            .chains
+            .iter()
+            .map(|c| c.objective_trace.len())
+            .max()
+            .unwrap_or(0);
+        let mut best = f64::NEG_INFINITY;
+        for r in 0..rounds {
+            for c in &metrics.chains {
+                if let Some(&obj) = c.objective_trace.get(r) {
+                    best = best.max(obj);
+                }
+            }
+            if best >= target {
+                return ((r + 1) * swap_every).to_string();
+            }
+        }
+        "-".into()
+    };
+    for wname in ["maxcut", "maxclique"] {
+        let single = Engine::for_workload(wname)?
+            .algo(AlgoKind::Mh)
+            .schedule(BetaSchedule::Constant(beta_cold))
+            .steps(steps)
+            .chains(chains)
+            .seed(seed)
+            .observe_every(swap_every)
+            .build()?
+            .run()?;
+        let target = trace_best(&single);
+        writeln!(
+            out,
+            "{wname},single-beta,{:.3},{},-,-",
+            single.best_objective(),
+            steps_to(&single, target)
+        )
+        .unwrap();
+        let tempered = Engine::for_workload(wname)?
+            .algo(AlgoKind::Mh)
+            .tempering(Ladder::geometric(beta_hot, beta_cold, k))
+            .swap_every(swap_every)
+            .steps(steps)
+            .chains(chains)
+            .seed(seed)
+            .build()?
+            .run()?;
+        let report = tempered
+            .chains
+            .first()
+            .and_then(|c| c.tempering.clone())
+            .ok_or_else(|| {
+                Mc2aError::InvalidConfig("tempered run reported no swap diagnostics".into())
+            })?;
+        writeln!(
+            out,
+            "{wname},tempered,{:.3},{},{:.3},{}",
+            tempered.best_objective(),
+            steps_to(&tempered, target),
+            report.mean_swap_rate(),
+            report.total_round_trips()
+        )
+        .unwrap();
     }
     Ok(out)
 }

@@ -14,6 +14,7 @@
 
 use std::time::Duration;
 
+use crate::mcmc::tempering::TemperingReport;
 use crate::mcmc::{effective_sample_size, split_r_hat, StepStats};
 use crate::sim::{MultiCoreReport, SimReport};
 
@@ -34,6 +35,10 @@ pub struct ChainResult {
     /// Per-core breakdown when run on the multi-core accelerator
     /// backend (aggregate GS/s, per-core utilization, sync overhead).
     pub multicore: Option<MultiCoreReport>,
+    /// Replica-exchange diagnostics when run under a tempering ladder
+    /// ([`crate::engine::EngineBuilder::tempering`]): per-pair swap
+    /// rates and per-replica round trips for this chain's ensemble.
+    pub tempering: Option<TemperingReport>,
     /// Wall-clock duration of the chain's executor. On thread-per-chain
     /// backends this is the chain's own thread time; on the batched
     /// backend every chain of a work item shares the item's duration
@@ -134,6 +139,7 @@ mod tests {
             stats,
             sim: None,
             multicore: None,
+            tempering: None,
             wall: Duration::from_millis(10),
             marginal0: vec![0.25, 0.75],
             best_x: vec![0, 1],

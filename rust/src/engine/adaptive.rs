@@ -38,11 +38,11 @@ use crate::sim::multicore::McRunState;
 use crate::sim::{MultiCoreSim, SimReport, Simulator};
 
 /// Per-chain signals collected at a segment boundary.
-struct ChainSignal {
-    chain_id: usize,
-    objective: f64,
-    best: f64,
-    updates: u64,
+pub(crate) struct ChainSignal {
+    pub(crate) chain_id: usize,
+    pub(crate) objective: f64,
+    pub(crate) best: f64,
+    pub(crate) updates: u64,
 }
 
 /// One lockstep-advanceable executor covering one or more chains.
@@ -118,6 +118,43 @@ impl<'m> ExecUnit<'m> {
         }
     }
 
+    /// Advance every chain of this unit by `n` steps, holding chain
+    /// `c` at `betas_by_chain[c]` for the whole segment (indexed by
+    /// *global* chain id) — the replica-exchange driver's entry point
+    /// ([`crate::engine::tempering`]). Scalar and simulator units hold
+    /// one chain; batch units slice their contiguous chain range.
+    pub(crate) fn advance_per_chain(&mut self, iter0: usize, n: usize, betas_by_chain: &[f32]) {
+        match self {
+            ExecUnit::Scalar {
+                chain_id, chain, ..
+            } => {
+                let betas = vec![betas_by_chain[*chain_id]; n];
+                chain.run_betas(&betas);
+            }
+            ExecUnit::Batch { batch, algo, .. } => {
+                let first = batch.chain_id(0);
+                let k = batch.k();
+                batch.run_betas_per_chain(algo.as_mut(), &betas_by_chain[first..first + k], n);
+            }
+            ExecUnit::Sim {
+                chain_id,
+                sim,
+                program,
+                rep,
+                ..
+            } => {
+                let betas = vec![betas_by_chain[*chain_id]; n];
+                sim.advance_run(program, rep, iter0, n, Some(&betas), &mut |_, _, _| true);
+            }
+            ExecUnit::Multi {
+                chain_id, sim, run, ..
+            } => {
+                let betas = vec![betas_by_chain[*chain_id]; n];
+                sim.advance_run(run, iter0, n, Some(&betas), &mut |_, _, _| true);
+            }
+        }
+    }
+
     /// Advance every chain of this unit by `betas.len()` steps, using
     /// `betas[j]` at local segment step `j` (`iter0` is the run-local
     /// step index of the segment start).
@@ -140,7 +177,7 @@ impl<'m> ExecUnit<'m> {
 
     /// Collect the segment-boundary signals of every chain this unit
     /// owns, in ascending chain-id order.
-    fn signals(&mut self, model: &dyn EnergyModel, out: &mut Vec<ChainSignal>) {
+    pub(crate) fn signals(&mut self, model: &dyn EnergyModel, out: &mut Vec<ChainSignal>) {
         match self {
             ExecUnit::Scalar {
                 chain_id, chain, ..
@@ -196,7 +233,7 @@ impl<'m> ExecUnit<'m> {
 
     /// Finalize into per-chain results (mirrors each backend's fixed-
     /// path result assembly).
-    fn finish(self, model: &dyn EnergyModel, traces: &[Vec<f64>], out: &mut Vec<ChainResult>) {
+    pub(crate) fn finish(self, model: &dyn EnergyModel, traces: &[Vec<f64>], out: &mut Vec<ChainResult>) {
         match self {
             ExecUnit::Scalar {
                 chain_id,
@@ -209,6 +246,7 @@ impl<'m> ExecUnit<'m> {
                 stats: chain.stats,
                 sim: None,
                 multicore: None,
+                tempering: None,
                 wall: t0.elapsed(),
                 marginal0: chain.marginal(0),
                 best_x: chain.best_assignment().to_vec(),
@@ -224,6 +262,7 @@ impl<'m> ExecUnit<'m> {
                         stats: batch.stats[c],
                         sim: None,
                         multicore: None,
+                        tempering: None,
                         wall: t0.elapsed(),
                         marginal0: batch.marginal0(c),
                         best_x: batch.best_state(c),
@@ -259,6 +298,7 @@ impl<'m> ExecUnit<'m> {
                     best_x: sim.x.clone(),
                     sim: Some(rep),
                     multicore: None,
+                    tempering: None,
                     wall: t0.elapsed(),
                     objective_trace: traces[chain_id].clone(),
                 });
@@ -291,6 +331,7 @@ impl<'m> ExecUnit<'m> {
                     best_x: sim.x.clone(),
                     sim: Some(merged),
                     multicore: Some(report),
+                    tempering: None,
                     wall: t0.elapsed(),
                     objective_trace: traces[chain_id].clone(),
                 });

@@ -41,8 +41,10 @@ use crate::energy::{EnergyModel, OpCost};
 use crate::engine::adaptive::{run_adaptive, ExecUnit};
 use crate::engine::error::Mc2aError;
 use crate::engine::observer::ProgressEvent;
+use crate::engine::tempering::run_tempered;
 use crate::isa::{HwConfig, MultiHwConfig};
 use crate::mcmc::anneal::BetaController;
+use crate::mcmc::tempering::ReplicaExchange;
 use crate::mcmc::{build_algo, AlgoKind, BetaSchedule, Chain, SamplerKind, StepStats};
 use crate::rng::Rng;
 use crate::runtime::Runtime;
@@ -190,6 +192,29 @@ pub trait ExecutionBackend: Send + Sync {
         )))
     }
 
+    /// Run the whole fan-out under replica exchange (parallel
+    /// tempering, [`crate::mcmc::tempering`]): chains advance in
+    /// lockstep to each swap boundary, where the per-ensemble
+    /// [`ReplicaExchange`] controllers propose even/odd neighbor
+    /// temperature swaps from the chains' cached energies (see
+    /// [`crate::engine::EngineBuilder::tempering`]). The default
+    /// rejects the configuration; the software, batched and
+    /// accelerator-simulator backends override it via the shared
+    /// lockstep driver.
+    fn run_chains_tempered(
+        &self,
+        _model: &dyn EnergyModel,
+        _spec: &ChainSpec,
+        _chains: usize,
+        _ctx: &ChainCtx<'_>,
+        _exchanges: &mut [ReplicaExchange],
+    ) -> Result<Vec<ChainResult>, Mc2aError> {
+        Err(Mc2aError::InvalidConfig(format!(
+            "the {} backend does not support replica exchange (parallel tempering)",
+            self.name()
+        )))
+    }
+
     /// Run the whole fan-out: chains `0..chains`, results ordered by
     /// chain id. The default spawns one OS thread per chain — correct
     /// everywhere, but a backend that schedules chains itself (the
@@ -275,6 +300,7 @@ pub(crate) fn run_software_chain(
         stats: chain.stats,
         sim: None,
         multicore: None,
+        tempering: None,
         wall: t0.elapsed(),
         marginal0: chain.marginal(0),
         best_x: chain.best_assignment().to_vec(),
@@ -314,6 +340,20 @@ impl ExecutionBackend for SoftwareBackend {
             .map(|chain_id| ExecUnit::scalar(chain_id, software_chain(model, spec, chain_id)))
             .collect();
         run_adaptive(model, spec, chains, ctx, controller, units)
+    }
+
+    fn run_chains_tempered(
+        &self,
+        model: &dyn EnergyModel,
+        spec: &ChainSpec,
+        chains: usize,
+        ctx: &ChainCtx<'_>,
+        exchanges: &mut [ReplicaExchange],
+    ) -> Result<Vec<ChainResult>, Mc2aError> {
+        let units = (0..chains)
+            .map(|chain_id| ExecUnit::scalar(chain_id, software_chain(model, spec, chain_id)))
+            .collect();
+        run_tempered(model, spec, chains, ctx, exchanges, units)
     }
 }
 
@@ -441,6 +481,7 @@ impl ExecutionBackend for AcceleratorBackend {
             best_x: sim.x.clone(),
             sim: Some(rep),
             multicore: None,
+            tempering: None,
             wall: t0.elapsed(),
             objective_trace: trace,
         })
@@ -469,6 +510,29 @@ impl ExecutionBackend for AcceleratorBackend {
             })
             .collect();
         run_adaptive(model, spec, chains, ctx, controller, units)
+    }
+
+    fn run_chains_tempered(
+        &self,
+        model: &dyn EnergyModel,
+        spec: &ChainSpec,
+        chains: usize,
+        ctx: &ChainCtx<'_>,
+        exchanges: &mut [ReplicaExchange],
+    ) -> Result<Vec<ChainResult>, Mc2aError> {
+        self.hw.validate().map_err(Mc2aError::InvalidHardware)?;
+        let program = compile_opt(model, spec.algo, &self.hw, spec.pas_flips, self.optimize);
+        let units = (0..chains)
+            .map(|chain_id| {
+                let mut sim =
+                    Simulator::new(self.hw, model, spec.pas_flips, spec.chain_seed(chain_id));
+                if let Some(x0) = &spec.init_state {
+                    sim.x.copy_from_slice(x0);
+                }
+                ExecUnit::sim(chain_id, sim, program.clone())
+            })
+            .collect();
+        run_tempered(model, spec, chains, ctx, exchanges, units)
     }
 }
 
@@ -591,6 +655,7 @@ impl ExecutionBackend for MultiCoreAcceleratorBackend {
             best_x: sim.x.clone(),
             sim: Some(merged),
             multicore: Some(report),
+            tempering: None,
             wall: t0.elapsed(),
             objective_trace: trace,
         })
@@ -621,6 +686,33 @@ impl ExecutionBackend for MultiCoreAcceleratorBackend {
             units.push(ExecUnit::multi(chain_id, sim));
         }
         run_adaptive(model, spec, chains, ctx, controller, units)
+    }
+
+    fn run_chains_tempered(
+        &self,
+        model: &dyn EnergyModel,
+        spec: &ChainSpec,
+        chains: usize,
+        ctx: &ChainCtx<'_>,
+        exchanges: &mut [ReplicaExchange],
+    ) -> Result<Vec<ChainResult>, Mc2aError> {
+        self.mhw.validate().map_err(Mc2aError::InvalidHardware)?;
+        let mut units = Vec::with_capacity(chains);
+        for chain_id in 0..chains {
+            let mut sim = MultiCoreSim::new(
+                self.mhw,
+                model,
+                spec.algo,
+                spec.pas_flips,
+                spec.chain_seed(chain_id),
+            )
+            .map_err(Mc2aError::InvalidConfig)?;
+            if let Some(x0) = &spec.init_state {
+                sim.set_state(x0);
+            }
+            units.push(ExecUnit::multi(chain_id, sim));
+        }
+        run_tempered(model, spec, chains, ctx, exchanges, units)
     }
 }
 
@@ -767,6 +859,7 @@ impl ExecutionBackend for RuntimeBackend {
             stats,
             sim: None,
             multicore: None,
+            tempering: None,
             wall: t0.elapsed(),
             marginal0,
             best_x: x,

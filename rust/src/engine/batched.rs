@@ -30,7 +30,9 @@ use crate::engine::backend::{
 use crate::engine::error::Mc2aError;
 use crate::engine::observer::ProgressEvent;
 use crate::engine::scheduler;
+use crate::engine::tempering::run_tempered;
 use crate::mcmc::anneal::BetaController;
+use crate::mcmc::tempering::ReplicaExchange;
 use crate::mcmc::{batch_supported, build_batch_algo, ChainBatch};
 
 /// Default chains per work item when the caller does not choose one.
@@ -75,6 +77,48 @@ impl BatchedSoftwareBackend {
             self.threads
         };
         t.clamp(1, items.max(1))
+    }
+
+    /// The lockstep-driver work decomposition shared by the adaptive
+    /// and tempered paths: one [`ChainBatch`] unit per `batch` chains
+    /// when the algorithm has a batched kernel, scalar fallback units
+    /// otherwise. Chains — and the diagnostics/energies the drivers
+    /// see — are bit-identical to the scalar software backend.
+    fn lockstep_units<'m>(
+        &self,
+        model: &'m dyn EnergyModel,
+        spec: &ChainSpec,
+        chains: usize,
+    ) -> Vec<ExecUnit<'m>> {
+        let mut units = Vec::new();
+        if batch_supported(spec.algo) {
+            let size = self.batch.max(1);
+            let mut start = 0usize;
+            while start < chains {
+                let end = (start + size).min(chains);
+                let mut batch = ChainBatch::new(
+                    model,
+                    spec.schedule,
+                    spec.seed,
+                    start,
+                    end - start,
+                    spec.init_state.as_deref(),
+                );
+                batch.set_step_offset(spec.beta_offset);
+                let algo = build_batch_algo(spec.algo, spec.sampler, model)
+                    .expect("batched kernel exists");
+                units.push(ExecUnit::batch(batch, algo));
+                start = end;
+            }
+        } else {
+            for chain_id in 0..chains {
+                units.push(ExecUnit::scalar(
+                    chain_id,
+                    software_chain(model, spec, chain_id),
+                ));
+            }
+        }
+        units
     }
 }
 
@@ -149,6 +193,7 @@ fn run_batch_item(
                     stats: batch.stats[c],
                     sim: None,
                     multicore: None,
+                    tempering: None,
                     wall,
                     marginal0: batch.marginal0(c),
                     best_x: batch.best_state(c),
@@ -191,35 +236,24 @@ impl ExecutionBackend for BatchedSoftwareBackend {
         ctx: &ChainCtx<'_>,
         controller: &mut dyn BetaController,
     ) -> Result<Vec<ChainResult>, Mc2aError> {
-        let mut units = Vec::new();
-        if batch_supported(spec.algo) {
-            let size = self.batch.max(1);
-            let mut start = 0usize;
-            while start < chains {
-                let end = (start + size).min(chains);
-                let mut batch = ChainBatch::new(
-                    model,
-                    spec.schedule,
-                    spec.seed,
-                    start,
-                    end - start,
-                    spec.init_state.as_deref(),
-                );
-                batch.set_step_offset(spec.beta_offset);
-                let algo = build_batch_algo(spec.algo, spec.sampler, model)
-                    .expect("batched kernel exists");
-                units.push(ExecUnit::batch(batch, algo));
-                start = end;
-            }
-        } else {
-            for chain_id in 0..chains {
-                units.push(ExecUnit::scalar(
-                    chain_id,
-                    software_chain(model, spec, chain_id),
-                ));
-            }
-        }
+        let units = self.lockstep_units(model, spec, chains);
         run_adaptive(model, spec, chains, ctx, controller, units)
+    }
+
+    /// Replica exchange over the same work decomposition (and
+    /// therefore the same bit-identical chains) as the adaptive path;
+    /// the SoA batches run true per-chain β through
+    /// [`ChainBatch::run_betas_per_chain`].
+    fn run_chains_tempered(
+        &self,
+        model: &dyn EnergyModel,
+        spec: &ChainSpec,
+        chains: usize,
+        ctx: &ChainCtx<'_>,
+        exchanges: &mut [ReplicaExchange],
+    ) -> Result<Vec<ChainResult>, Mc2aError> {
+        let units = self.lockstep_units(model, spec, chains);
+        run_tempered(model, spec, chains, ctx, exchanges, units)
     }
 
     fn run_chains(

@@ -40,6 +40,11 @@ pub struct Checkpoint {
     /// ([`crate::engine::Engine::anneal_state`]); `None` on fixed-ramp
     /// runs.
     pub anneal: Option<Vec<f64>>,
+    /// Serialized replica-exchange memory
+    /// ([`crate::engine::Engine::temper_state`]): the (possibly
+    /// re-spaced) β ladder, chain→rung assignment and swap history;
+    /// `None` on untempered runs.
+    pub temper: Option<Vec<f64>>,
 }
 
 impl Checkpoint {
@@ -61,15 +66,19 @@ impl Checkpoint {
             write!(out, "{v}").unwrap();
         }
         out.push(']');
-        if let Some(anneal) = &self.anneal {
-            out.push_str(",\"anneal\":[");
-            for (i, v) in anneal.iter().enumerate() {
-                if i > 0 {
-                    out.push(',');
+        for (key, values) in [("anneal", &self.anneal), ("temper", &self.temper)] {
+            if let Some(values) = values {
+                out.push_str(",\"");
+                out.push_str(key);
+                out.push_str("\":[");
+                for (i, v) in values.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write!(out, "{v}").unwrap();
                 }
-                write!(out, "{v}").unwrap();
+                out.push(']');
             }
-            out.push(']');
         }
         out.push('}');
         out
@@ -96,28 +105,17 @@ impl Checkpoint {
             }
             best_x.push(tok.parse::<u32>().map_err(|e| bad("best_x", &e.to_string()))?);
         }
-        // Optional field: absent on fixed-ramp checkpoints (and on any
-        // checkpoint written before adaptive annealing existed).
-        let anneal = if s.contains("\"anneal\"") {
-            let body = array_field(s, "anneal")?;
-            let mut state = Vec::new();
-            for tok in body.split(',') {
-                let tok = tok.trim();
-                if tok.is_empty() {
-                    continue;
-                }
-                state.push(tok.parse::<f64>().map_err(|e| bad("anneal", &e.to_string()))?);
-            }
-            Some(state)
-        } else {
-            None
-        };
+        // Optional fields: absent on checkpoints written before the
+        // respective controller existed (or on plain fixed-ramp runs).
+        let anneal = optional_f64_array(s, "anneal")?;
+        let temper = optional_f64_array(s, "temper")?;
         Ok(Checkpoint {
             seed,
             steps,
             best_objective,
             best_x,
             anneal,
+            temper,
         })
     }
 
@@ -139,6 +137,23 @@ impl Checkpoint {
 
 fn bad(key: &str, why: &str) -> Mc2aError {
     Mc2aError::Checkpoint(format!("field `{key}`: {why}"))
+}
+
+/// Parse an optional `"key":[f64,…]` field (None when absent).
+fn optional_f64_array(s: &str, key: &str) -> Result<Option<Vec<f64>>, Mc2aError> {
+    if !s.contains(&format!("\"{key}\"")) {
+        return Ok(None);
+    }
+    let body = array_field(s, key)?;
+    let mut values = Vec::new();
+    for tok in body.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        values.push(tok.parse::<f64>().map_err(|e| bad(key, &e.to_string()))?);
+    }
+    Ok(Some(values))
 }
 
 /// Locate `"key":` and return the byte offset just past the colon.
@@ -179,6 +194,7 @@ mod tests {
             best_objective: -87.25,
             best_x: vec![0, 3, 1, 2, 0, 1],
             anneal: None,
+            temper: None,
         };
         let parsed = Checkpoint::from_json(&ck.to_json()).unwrap();
         assert_eq!(parsed, ck);
@@ -192,6 +208,7 @@ mod tests {
             best_objective: 12.5,
             best_x: vec![1, 0, 2],
             anneal: Some(vec![180.0, 400.0, 2.0, 1.0, 12.5, 3.0, 5.0, 0.0]),
+            temper: None,
         };
         let parsed = Checkpoint::from_json(&ck.to_json()).unwrap();
         assert_eq!(parsed, ck);
@@ -205,6 +222,26 @@ mod tests {
     }
 
     #[test]
+    fn temper_state_round_trips() {
+        let ck = Checkpoint {
+            seed: 11,
+            steps: 250,
+            best_objective: 40.0,
+            best_x: vec![0, 1, 1],
+            anneal: None,
+            temper: Some(vec![1.0, 4.0, 25.0, 0.0, 0.25, 0.5, 1.0, 2.0]),
+        };
+        let parsed = Checkpoint::from_json(&ck.to_json()).unwrap();
+        assert_eq!(parsed, ck);
+        // Both optional blocks coexist.
+        let both = Checkpoint {
+            anneal: Some(vec![1.5, -2.0]),
+            ..ck
+        };
+        assert_eq!(Checkpoint::from_json(&both.to_json()).unwrap(), both);
+    }
+
+    #[test]
     fn empty_state_round_trips() {
         let ck = Checkpoint {
             seed: 1,
@@ -212,6 +249,7 @@ mod tests {
             best_objective: 0.0,
             best_x: Vec::new(),
             anneal: None,
+            temper: None,
         };
         assert_eq!(Checkpoint::from_json(&ck.to_json()).unwrap(), ck);
     }
@@ -252,6 +290,7 @@ mod tests {
             best_objective: 1.5,
             best_x: vec![1, 1, 0],
             anneal: None,
+            temper: None,
         };
         let path = std::env::temp_dir().join("mc2a_checkpoint_test.json");
         ck.save(&path).unwrap();

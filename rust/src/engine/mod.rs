@@ -44,6 +44,7 @@ pub mod error;
 pub mod observer;
 pub mod registry;
 pub mod scheduler;
+pub(crate) mod tempering;
 
 pub use backend::{
     AcceleratorBackend, ChainCtx, ChainSpec, ExecutionBackend, MultiCoreAcceleratorBackend,
@@ -67,6 +68,7 @@ use crate::coordinator::{ChainResult, RunMetrics};
 use crate::energy::EnergyModel;
 use crate::isa::HwConfig;
 use crate::mcmc::anneal::{AdaptiveSchedule, AnnealConfig, AnnealPolicy, BetaController};
+use crate::mcmc::tempering::{AdaptSpacing, Ladder, ReplicaExchange, TemperConfig};
 use crate::mcmc::{AlgoKind, BetaSchedule, SamplerKind};
 use observer::DiagnosticsTracker;
 
@@ -120,6 +122,10 @@ pub struct EngineBuilder<'m> {
     schedule_offset: usize,
     adaptive: Option<AnnealConfig>,
     anneal_state: Option<Vec<f64>>,
+    temper_ladder: Option<Ladder>,
+    temper_swap_every: Option<usize>,
+    temper_adapt: Option<AdaptSpacing>,
+    temper_state: Option<Vec<f64>>,
     steps: usize,
     chains: usize,
     seed: u64,
@@ -145,6 +151,10 @@ impl<'m> EngineBuilder<'m> {
             schedule_offset: 0,
             adaptive: None,
             anneal_state: None,
+            temper_ladder: None,
+            temper_swap_every: None,
+            temper_adapt: None,
+            temper_state: None,
             steps: 100,
             chains: 1,
             seed: 1,
@@ -216,6 +226,49 @@ impl<'m> EngineBuilder<'m> {
     /// [`Checkpoint::anneal`]). Requires [`EngineBuilder::adaptive`].
     pub fn anneal_state(mut self, state: Vec<f64>) -> Self {
         self.anneal_state = Some(state);
+        self
+    }
+
+    /// Enable replica exchange (parallel tempering,
+    /// [`crate::mcmc::tempering`]): the chains split into
+    /// `chains / K` independent ensembles of `K = ladder.k()`
+    /// replicas, each replica pinned to one ladder rung, with
+    /// Metropolis temperature swaps between neighboring rungs every
+    /// [`EngineBuilder::swap_every`] steps. Chains run in lockstep
+    /// swap rounds (the swap cadence is also the observation
+    /// cadence); supported on the software, batched and
+    /// accelerator-simulator backends. `build()` rejects ladders with
+    /// fewer than 2 rungs, non-monotone rungs, `K > chains`, chain
+    /// counts that are not a multiple of `K`, and combinations with
+    /// [`EngineBuilder::adaptive`] or a non-constant schedule.
+    pub fn tempering(mut self, ladder: Ladder) -> Self {
+        self.temper_ladder = Some(ladder);
+        self
+    }
+
+    /// Steps between replica-exchange swap rounds (default 10).
+    /// Requires [`EngineBuilder::tempering`].
+    pub fn swap_every(mut self, every: usize) -> Self {
+        self.temper_swap_every = Some(every);
+        self
+    }
+
+    /// Enable adaptive ladder re-spacing: every few swap rounds the
+    /// β gaps are retuned toward `target_rate` per-pair swap
+    /// acceptance ([`AdaptSpacing::new`]). `build()` rejects rates
+    /// outside (0, 1). Requires [`EngineBuilder::tempering`].
+    pub fn temper_adapt(mut self, target_rate: f64) -> Self {
+        self.temper_adapt = Some(AdaptSpacing::new(target_rate));
+        self
+    }
+
+    /// Restore replica-exchange memory serialized by a previous run
+    /// ([`Engine::temper_state`], stored in [`Checkpoint::temper`]):
+    /// the (possibly re-spaced) ladder, the chain→rung assignment,
+    /// swap statistics and the swap-RNG position. Requires
+    /// [`EngineBuilder::tempering`] with a same-K ladder.
+    pub fn temper_state(mut self, state: Vec<f64>) -> Self {
+        self.temper_state = Some(state);
         self
     }
 
@@ -387,6 +440,75 @@ impl<'m> EngineBuilder<'m> {
                 ));
             }
         }
+        if self.temper_ladder.is_none()
+            && (self.temper_swap_every.is_some()
+                || self.temper_adapt.is_some()
+                || self.temper_state.is_some())
+        {
+            return Err(Mc2aError::InvalidConfig(
+                "swap_every/temper_adapt/temper_state configure replica exchange; \
+                 enable tempering(ladder) first"
+                    .into(),
+            ));
+        }
+        if let Some(ladder) = &self.temper_ladder {
+            ladder.validate().map_err(Mc2aError::InvalidConfig)?;
+            let k = ladder.k();
+            // Both controllers want to own β; a tempered replica's
+            // temperature is fixed by its rung, not a schedule.
+            if self.adaptive.is_some() {
+                return Err(Mc2aError::InvalidConfig(
+                    "adaptive annealing and replica exchange are mutually exclusive \
+                     (the ladder already fixes each replica's β)"
+                        .into(),
+                ));
+            }
+            if self.restart.is_some() {
+                return Err(Mc2aError::InvalidConfig(
+                    "replica exchange and restart_on_stagnation are mutually exclusive"
+                        .into(),
+                ));
+            }
+            if matches!(self.backend, BackendChoice::Runtime(_)) {
+                return Err(Mc2aError::InvalidConfig(
+                    "replica exchange is supported on the software, batched and \
+                     accelerator-simulator backends only"
+                        .into(),
+                ));
+            }
+            if !matches!(self.schedule, BetaSchedule::Constant(_)) {
+                return Err(Mc2aError::InvalidConfig(
+                    "tempering pins each replica to a ladder rung; drop the β \
+                     schedule (the ladder replaces it)"
+                        .into(),
+                ));
+            }
+            if k > self.chains {
+                return Err(Mc2aError::InvalidConfig(format!(
+                    "tempering ladder has {k} rungs but only {} chains; \
+                     need chains ≥ K",
+                    self.chains
+                )));
+            }
+            if self.chains % k != 0 {
+                return Err(Mc2aError::InvalidConfig(format!(
+                    "chains ({}) must be a multiple of the ladder size ({k}) — \
+                     each ensemble holds one replica per rung",
+                    self.chains
+                )));
+            }
+            if self.temper_swap_every == Some(0) {
+                return Err(Mc2aError::InvalidConfig("swap_every must be ≥ 1".into()));
+            }
+            if let Some(adapt) = &self.temper_adapt {
+                let rate = adapt.target_rate;
+                if !rate.is_finite() || rate <= 0.0 || rate >= 1.0 {
+                    return Err(Mc2aError::InvalidConfig(format!(
+                        "tempering target swap rate must be in (0, 1) (got {rate})"
+                    )));
+                }
+            }
+        }
         let model_vars = self.model.get().num_vars();
         if let Some(x0) = &self.init_state {
             if x0.len() != model_vars {
@@ -501,6 +623,23 @@ impl<'m> EngineBuilder<'m> {
             }
             None => None,
         };
+        let temper: Option<Vec<ReplicaExchange>> = match &self.temper_ladder {
+            Some(ladder) => {
+                let k = ladder.k();
+                let cfg = TemperConfig {
+                    swap_every: self.temper_swap_every.unwrap_or(10),
+                    adapt: self.temper_adapt,
+                };
+                let mut exchanges: Vec<ReplicaExchange> = (0..self.chains / k)
+                    .map(|e| ReplicaExchange::new(ladder.clone(), cfg, self.seed, e * k, e as u64))
+                    .collect();
+                if let Some(state) = &self.temper_state {
+                    restore_temper_state(&mut exchanges, state)?;
+                }
+                Some(exchanges)
+            }
+            None => None,
+        };
         Ok(Engine {
             model: self.model,
             spec: ChainSpec {
@@ -519,9 +658,45 @@ impl<'m> EngineBuilder<'m> {
             restart: self.restart,
             observer: self.observer,
             controller,
+            temper,
             workload: self.workload,
         })
     }
+}
+
+/// Restore the per-ensemble replica-exchange states from the flat
+/// blob serialized by [`Engine::temper_state`] (`[ensembles,
+/// block…]`, one fixed-size block per ensemble).
+fn restore_temper_state(
+    exchanges: &mut [ReplicaExchange],
+    state: &[f64],
+) -> Result<(), Mc2aError> {
+    let declared = state.first().map(|&e| e as usize);
+    if declared != Some(exchanges.len()) {
+        return Err(Mc2aError::InvalidConfig(format!(
+            "tempering state holds {} ensemble(s), this run has {}",
+            declared.unwrap_or(0),
+            exchanges.len()
+        )));
+    }
+    let mut at = 1usize;
+    for ex in exchanges.iter_mut() {
+        let len = ReplicaExchange::state_len(ex.k());
+        let end = at + len;
+        if end > state.len() {
+            return Err(Mc2aError::InvalidConfig(
+                "tempering state is truncated".into(),
+            ));
+        }
+        ex.restore(&state[at..end]).map_err(Mc2aError::InvalidConfig)?;
+        at = end;
+    }
+    if at != state.len() {
+        return Err(Mc2aError::InvalidConfig(
+            "tempering state has trailing entries".into(),
+        ));
+    }
+    Ok(())
 }
 
 /// A fully-validated multi-chain run: one model, one backend, `chains`
@@ -534,6 +709,7 @@ pub struct Engine<'m> {
     restart: Option<RestartConfig>,
     observer: Option<Box<dyn ChainObserver>>,
     controller: Option<Box<dyn BetaController>>,
+    temper: Option<Vec<ReplicaExchange>>,
     workload: Option<&'static str>,
 }
 
@@ -594,6 +770,33 @@ impl<'m> Engine<'m> {
         self.controller.as_ref().map(|c| c.describe())
     }
 
+    /// Serialized replica-exchange memory (None unless the engine was
+    /// built with [`EngineBuilder::tempering`]): `[ensembles]`
+    /// followed by one fixed-size block per ensemble. After
+    /// [`Engine::run`] this is the controllers' final state — store it
+    /// in a [`Checkpoint`] so a resumed run continues the ladder, the
+    /// chain→rung assignment and the swap schedule.
+    pub fn temper_state(&self) -> Option<Vec<f64>> {
+        self.temper.as_ref().map(|exs| {
+            let mut out = vec![exs.len() as f64];
+            for ex in exs {
+                out.extend(ex.state());
+            }
+            out
+        })
+    }
+
+    /// Per-ensemble replica-exchange summaries, when tempering is
+    /// enabled.
+    pub fn temper_describe(&self) -> Option<String> {
+        self.temper.as_ref().map(|exs| {
+            exs.iter()
+                .map(|ex| ex.describe())
+                .collect::<Vec<_>>()
+                .join("; ")
+        })
+    }
+
     /// Hand the fan-out to the backend ([`ExecutionBackend::run_chains`]
     /// — OS thread per chain by default, a work-stealing batch pool on
     /// the batched backend), stream events to the observer, and gather
@@ -606,6 +809,7 @@ impl<'m> Engine<'m> {
         let backend = self.backend.as_ref();
         let observer = &mut self.observer;
         let controller = self.controller.as_deref_mut();
+        let temper = self.temper.as_mut().map(|v| v.as_mut_slice());
         let n = self.chains;
         let restart_cfg = self.restart;
         let stop = AtomicBool::new(false);
@@ -621,11 +825,17 @@ impl<'m> Engine<'m> {
             // The backend owns its scheduling; the coordinating thread
             // runs the event loop until every sender is gone (the
             // backend thread drops `ctx` when `run_chains` returns).
-            // With adaptive annealing the backend instead drives its
-            // chains in lockstep under the β controller.
-            let handle = scope.spawn(move || match controller {
-                Some(c) => backend.run_chains_adaptive(model, spec, n, &ctx, c),
-                None => backend.run_chains(model, spec, n, &ctx),
+            // With adaptive annealing or replica exchange the backend
+            // instead drives its chains in lockstep under the
+            // respective controller.
+            let handle = scope.spawn(move || {
+                if let Some(exchanges) = temper {
+                    backend.run_chains_tempered(model, spec, n, &ctx, exchanges)
+                } else if let Some(c) = controller {
+                    backend.run_chains_adaptive(model, spec, n, &ctx, c)
+                } else {
+                    backend.run_chains(model, spec, n, &ctx)
+                }
             });
 
             // Diagnostics are computed here, so observers can hold

@@ -1,0 +1,146 @@
+//! The lockstep replica-exchange (parallel tempering) driver.
+//!
+//! Swap decisions are *cross-chain*: a round compares the cached
+//! energies of neighboring replicas, so — exactly like the adaptive-
+//! annealing driver ([`crate::engine::adaptive`]) — tempered fan-outs
+//! run in **lockstep**: every chain advances to the next swap boundary
+//! (`swap_every` steps on the global clock), the driver gathers each
+//! chain's energy synchronously in deterministic chain order, and each
+//! ensemble's [`ReplicaExchange`] controller proposes its even/odd
+//! neighbor swaps before the next segment's per-chain β values are
+//! planned. Swaps exchange *temperatures*, never states, so chains
+//! stay bit-identical across backends whose chains are bit-identical
+//! (scalar vs batched software) — and the β-label migration is O(1)
+//! on every backend, including the cycle-accurate simulators.
+//!
+//! The driver reuses the adaptive driver's [`ExecUnit`] machinery via
+//! [`ExecUnit::advance_per_chain`]: a scalar [`crate::mcmc::Chain`]
+//! runs `run_betas` at its constant segment β, an SoA
+//! [`crate::mcmc::ChainBatch`] finally exercises true per-chain β
+//! through [`crate::mcmc::ChainBatch::run_betas_per_chain`], and the
+//! single-/multi-core simulators advance through their segmented
+//! `begin_run` / `advance_run` / `finish_run` APIs.
+
+use crate::coordinator::ChainResult;
+use crate::energy::EnergyModel;
+use crate::engine::adaptive::{ChainSignal, ExecUnit};
+use crate::engine::backend::{ChainCtx, ChainSpec};
+use crate::engine::error::Mc2aError;
+use crate::engine::observer::ProgressEvent;
+use crate::mcmc::tempering::ReplicaExchange;
+
+/// Run `units` to completion (or early stop) under the per-ensemble
+/// replica-exchange controllers, in lockstep swap rounds. Returns
+/// per-chain results ordered by chain id, each carrying its
+/// ensemble's [`crate::mcmc::tempering::TemperingReport`].
+pub(crate) fn run_tempered<'m>(
+    model: &'m dyn EnergyModel,
+    spec: &ChainSpec,
+    chains: usize,
+    ctx: &ChainCtx<'_>,
+    exchanges: &mut [ReplicaExchange],
+    mut units: Vec<ExecUnit<'m>>,
+) -> Result<Vec<ChainResult>, Mc2aError> {
+    // The builder guarantees this; guard anyway because the trait
+    // entry point is public: ensembles must tile 0..chains contiguously
+    // (overlaps would leave chains at the never-written β 0.0, gaps
+    // would panic on the energy slices below).
+    let mut covered = 0usize;
+    for ex in exchanges.iter() {
+        if ex.first_chain() != covered {
+            return Err(Mc2aError::InvalidConfig(format!(
+                "replica-exchange ensemble starts at chain {}, expected {covered} \
+                 (ensembles must tile the chain range contiguously)",
+                ex.first_chain()
+            )));
+        }
+        covered += ex.k();
+    }
+    if covered != chains {
+        return Err(Mc2aError::InvalidConfig(format!(
+            "replica-exchange ensembles cover {covered} chains, run has {chains}"
+        )));
+    }
+    let swap_every = exchanges
+        .first()
+        .map(|ex| ex.swap_every())
+        .unwrap_or(1)
+        .max(1);
+    let mut traces: Vec<Vec<f64>> = vec![Vec::new(); chains];
+    let mut betas_by_chain: Vec<f32> = vec![0.0; chains];
+    let mut energies: Vec<f64> = vec![0.0; chains];
+    let mut signals: Vec<ChainSignal> = Vec::new();
+    let mut done = 0usize;
+    while done < spec.steps {
+        if ctx.stop_requested() {
+            break;
+        }
+        // Segment ends at the next swap boundary of the *global* step
+        // clock, so a resumed run keeps the uninterrupted run's swap
+        // schedule (the final segment may be shorter; it ends the run
+        // without a swap).
+        let global = spec.beta_offset + done;
+        let to_boundary = swap_every - (global % swap_every);
+        let n = to_boundary.min(spec.steps - done);
+        // Plan each chain's β from its replica's current rung.
+        for ex in exchanges.iter() {
+            for slot in 0..ex.k() {
+                betas_by_chain[ex.chain_id(slot)] = ex.beta_of_slot(slot);
+            }
+        }
+        if units.len() > 1 {
+            let betas_by_chain = &betas_by_chain;
+            std::thread::scope(|scope| {
+                for unit in units.iter_mut() {
+                    scope.spawn(move || unit.advance_per_chain(done, n, betas_by_chain));
+                }
+            });
+        } else if let Some(unit) = units.first_mut() {
+            unit.advance_per_chain(done, n, &betas_by_chain);
+        }
+        done += n;
+        // Segment boundary: gather the chains' cached energies in
+        // deterministic order and stream progress events.
+        signals.clear();
+        for unit in units.iter_mut() {
+            unit.signals(model, &mut signals);
+        }
+        for s in &signals {
+            // The swap rule works on energies; the engine tracks the
+            // objective (−E for every shipped model).
+            energies[s.chain_id] = -s.objective;
+            traces[s.chain_id].push(s.objective);
+            ctx.emit(ProgressEvent {
+                chain_id: s.chain_id,
+                step: done,
+                beta: betas_by_chain[s.chain_id],
+                objective: s.objective,
+                best_objective: s.best,
+                updates: s.updates,
+            });
+        }
+        // Swap only at true boundaries (a truncated final segment
+        // ends the run without one).
+        if (spec.beta_offset + done) % swap_every == 0 {
+            for ex in exchanges.iter_mut() {
+                let first = ex.first_chain();
+                let k = ex.k();
+                ex.swap_round(&energies[first..first + k]);
+            }
+        }
+    }
+    let mut results = Vec::with_capacity(chains);
+    for unit in units {
+        unit.finish(model, &traces, &mut results);
+    }
+    results.sort_by_key(|r| r.chain_id);
+    // Attach each ensemble's diagnostics to its chains' results
+    // (after the sort, chain ids 0..chains index the vector directly).
+    for ex in exchanges.iter() {
+        let report = ex.report();
+        for slot in 0..ex.k() {
+            results[ex.chain_id(slot)].tempering = Some(report.clone());
+        }
+    }
+    Ok(results)
+}

@@ -2,13 +2,15 @@
 //!
 //! ```text
 //! mc2a table1 [--full]
-//! mc2a bench <fig5|fig6|fig11|fig12|fig13|fig14|fig15|chains|cores|anneal|headline|all> [--full]
+//! mc2a bench <fig5|fig6|fig11|fig12|fig13|fig14|fig15|chains|cores|anneal|temper|headline|all> [--full]
 //! mc2a run --workload <name> [--algo mh|gibbs|bg|ag|pas]
 //!          [--sampler cdf|gumbel|lut] [--steps N] [--chains N]
 //!          [--backend sim|sw|batched|multicore|runtime]
 //!          [--batch K] [--threads T] [--cores C]
 //!          [--beta B | --schedule const:B|linear:FROM:TO:STEPS|geom:FROM:TO:RATE]
-//!          [--adaptive reheat|plateau] [--seed S] [--observe N]
+//!          [--adaptive reheat|plateau]
+//!          [--temper K] [--swap-every N] [--ladder geom:FROM:TO|explicit:B1,B2,…]
+//!          [--swap-target RATE] [--seed S] [--observe N]
 //!          [--save-state PATH] [--init-from PATH]
 //! mc2a workloads
 //! mc2a roofline [--workload <name>] [--cores C]
@@ -24,7 +26,7 @@
 use mc2a::bench;
 use mc2a::engine::{registry, Checkpoint, Engine, Mc2aError, PrintObserver};
 use mc2a::isa::{HwConfig, MultiHwConfig};
-use mc2a::mcmc::{AlgoKind, AnnealPolicy, BetaSchedule, SamplerKind};
+use mc2a::mcmc::{AlgoKind, AnnealPolicy, BetaSchedule, Ladder, SamplerKind};
 use mc2a::rng::Rng;
 use mc2a::roofline::{self, WorkloadProfile};
 use mc2a::runtime::Runtime;
@@ -35,13 +37,15 @@ fn usage() -> ! {
 
 USAGE:
   mc2a table1 [--full]
-  mc2a bench <fig5|fig6|fig11|fig12|fig13|fig14|fig15|chains|cores|anneal|headline|all> [--full]
+  mc2a bench <fig5|fig6|fig11|fig12|fig13|fig14|fig15|chains|cores|anneal|temper|headline|all> [--full]
   mc2a run --workload <name> [--algo mh|gibbs|bg|ag|pas]
            [--sampler cdf|gumbel|lut] [--steps N] [--chains N]
            [--backend sim|sw|batched|multicore|runtime]
            [--batch K] [--threads T] [--cores C]
            [--beta B | --schedule const:B|linear:FROM:TO:STEPS|geom:FROM:TO:RATE]
-           [--adaptive reheat|plateau] [--seed S] [--observe N]
+           [--adaptive reheat|plateau]
+           [--temper K] [--swap-every N] [--ladder geom:FROM:TO|explicit:B1,B2,…]
+           [--swap-target RATE] [--seed S] [--observe N]
            [--save-state PATH] [--init-from PATH]
   mc2a workloads
   mc2a roofline [--workload <name>] [--cores C]
@@ -90,6 +94,7 @@ fn cmd_bench(args: &[String]) -> Result<(), Mc2aError> {
             "chains" => bench::many_chains(quick)?,
             "cores" => bench::core_scaling(quick)?,
             "anneal" => bench::anneal_compare(quick)?,
+            "temper" => bench::temper_compare(quick)?,
             "headline" => bench::headline(quick),
             other => {
                 let mut known: Vec<String> =
@@ -157,7 +162,15 @@ fn cmd_run(args: &[String]) -> Result<(), Mc2aError> {
     let steps: usize = parsed_flag(args, "--steps")?.unwrap_or(200);
     let chains: usize = parsed_flag(args, "--chains")?.unwrap_or(1);
     let seed_flag: Option<u64> = parsed_flag(args, "--seed")?;
-    let schedule = match (flag_value(args, "--schedule"), parsed_flag::<f32>(args, "--beta")?) {
+    let schedule_flags = (flag_value(args, "--schedule"), parsed_flag::<f32>(args, "--beta")?);
+    if has_flag(args, "--temper") && (schedule_flags.0.is_some() || schedule_flags.1.is_some()) {
+        return Err(Mc2aError::InvalidConfig(
+            "--temper fixes each replica's β from the ladder; drop --beta/--schedule \
+             (use --ladder to choose the temperatures)"
+                .into(),
+        ));
+    }
+    let schedule = match schedule_flags {
         (Some(_), Some(_)) => {
             return Err(Mc2aError::InvalidConfig(
                 "--beta is shorthand for --schedule const:B; pass one or the other".into(),
@@ -171,6 +184,32 @@ fn cmd_run(args: &[String]) -> Result<(), Mc2aError> {
         Some(p) => Some(AnnealPolicy::parse(&p).ok_or_else(|| {
             Mc2aError::InvalidConfig(format!("unknown adaptive policy {p:?} (reheat|plateau)"))
         })?),
+        None => None,
+    };
+    let temper: Option<usize> = parsed_flag(args, "--temper")?;
+    let swap_every: Option<usize> = parsed_flag(args, "--swap-every")?;
+    let swap_target: Option<f64> = parsed_flag(args, "--swap-target")?;
+    let ladder_spec = flag_value(args, "--ladder");
+    if temper.is_none() && (swap_every.is_some() || swap_target.is_some() || ladder_spec.is_some())
+    {
+        return Err(Mc2aError::InvalidConfig(
+            "--swap-every/--swap-target/--ladder require --temper K".into(),
+        ));
+    }
+    let ladder = match temper {
+        // `--temper 1` (or 0) falls through to Ladder::validate's
+        // "needs at least 2 rungs" typed error via parse.
+        Some(k) => {
+            if adaptive.is_some() {
+                return Err(Mc2aError::InvalidConfig(
+                    "--temper and --adaptive are mutually exclusive (each replica's β \
+                     is fixed by its ladder rung)"
+                        .into(),
+                ));
+            }
+            let spec = ladder_spec.as_deref().unwrap_or("geom:0.2:4.0");
+            Some(Ladder::parse(spec, k).map_err(Mc2aError::InvalidConfig)?)
+        }
         None => None,
     };
     // Steps completed before this invocation (from `--init-from`), so a
@@ -198,11 +237,29 @@ fn cmd_run(args: &[String]) -> Result<(), Mc2aError> {
                 builder = builder.anneal_state(state);
             }
         }
+        // Tempered resume continues the ladder, the chain→rung
+        // assignment and the swap schedule. Note: a resumed run with a
+        // fresh seed re-forks the *chain* streams, but the swap stream
+        // position is part of the serialized state.
+        if temper.is_some() {
+            if let Some(state) = ck.temper {
+                builder = builder.temper_state(state);
+            }
+        }
     }
     let seed: u64 = seed_flag.or(resume_seed).unwrap_or(1);
     builder = builder.steps(steps).chains(chains).seed(seed).schedule(schedule);
     if let Some(policy) = adaptive {
         builder = builder.adaptive(policy);
+    }
+    if let Some(l) = ladder {
+        builder = builder.tempering(l);
+        if let Some(every) = swap_every {
+            builder = builder.swap_every(every);
+        }
+        if let Some(rate) = swap_target {
+            builder = builder.temper_adapt(rate);
+        }
     }
     let hw = HwConfig::paper_default();
     let batch: Option<usize> = parsed_flag(args, "--batch")?;
@@ -268,6 +325,9 @@ fn cmd_run(args: &[String]) -> Result<(), Mc2aError> {
     if let Some(summary) = engine.anneal_describe() {
         println!("{summary}");
     }
+    if let Some(summary) = engine.temper_describe() {
+        println!("{summary}");
+    }
     for c in &metrics.chains {
         print!(
             "chain {}: best objective {:.2}, {} updates, {:?}",
@@ -300,6 +360,26 @@ fn cmd_run(args: &[String]) -> Result<(), Mc2aError> {
             );
         }
     }
+    // Per-ensemble tempering diagnostics: one line per ensemble (the
+    // report is shared by all of an ensemble's chains).
+    let mut seen_ensembles = std::collections::HashSet::new();
+    for c in &metrics.chains {
+        if let Some(t) = &c.tempering {
+            if seen_ensembles.insert(t.first_chain) {
+                let rates = t
+                    .swap_rates()
+                    .iter()
+                    .map(|r| format!("{r:.2}"))
+                    .collect::<Vec<_>>()
+                    .join(" ");
+                println!(
+                    "  ensemble @chain {}: pair swap rates [{rates}], {} round trips",
+                    t.first_chain,
+                    t.total_round_trips()
+                );
+            }
+        }
+    }
     println!(
         "best objective overall: {:.2}; software wall throughput {:.3e} updates/s",
         metrics.best_objective(),
@@ -325,6 +405,7 @@ fn cmd_run(args: &[String]) -> Result<(), Mc2aError> {
             best_objective: objective,
             best_x: best.best_x.clone(),
             anneal: engine.anneal_state(),
+            temper: engine.temper_state(),
         };
         ck.save(&path)?;
         println!(

@@ -218,9 +218,30 @@ impl<'m> ChainBatch<'m> {
         }
     }
 
+    /// Run `n` steps with chain `c` held at `per_chain[c]` — true
+    /// per-chain β, the replica-exchange entry point
+    /// ([`crate::mcmc::tempering`]). Each chain's trajectory is
+    /// bit-identical to a scalar chain running the same constant β,
+    /// because the batched kernels already consume `betas[c]` per
+    /// chain; only the uniform [`ChainBatch::run`]/[`ChainBatch::run_betas`]
+    /// paths flatten the vector.
+    pub fn run_betas_per_chain(&mut self, algo: &mut dyn BatchMcmc, per_chain: &[f32], n: usize) {
+        assert_eq!(per_chain.len(), self.k, "one β per chain in the batch");
+        self.betas.copy_from_slice(per_chain);
+        for _ in 0..n {
+            self.step_current(algo);
+        }
+    }
+
     fn step_with(&mut self, algo: &mut dyn BatchMcmc, beta: f32) {
-        let nv = self.model.num_vars();
         self.betas.fill(beta);
+        self.step_current(algo);
+    }
+
+    /// One step at whatever `self.betas` currently holds (the shared
+    /// tail of the uniform and per-chain paths).
+    fn step_current(&mut self, algo: &mut dyn BatchMcmc) {
+        let nv = self.model.num_vars();
         algo.step_batch(
             self.model,
             &mut self.states,
@@ -519,6 +540,63 @@ mod tests {
             chain.run(10);
             batch.chain_state(c, &mut gathered);
             assert_eq!(gathered, chain.x, "chain {c}");
+        }
+    }
+
+    #[test]
+    fn uniform_beta_path_is_identical_via_per_chain_entry_point() {
+        // Regression pin for the `step_with` refactor: feeding the
+        // per-chain entry point a uniform β vector must reproduce the
+        // uniform `run` path bit-for-bit.
+        let m = PottsGrid::new(5, 4, 3, 0.7);
+        let (seed, k, steps) = (0x5EEDu64, 4usize, 20usize);
+        let mut uniform = ChainBatch::new(&m, BetaSchedule::Constant(0.8), seed, 0, k, None);
+        let mut a1 = build_batch_algo(AlgoKind::Gibbs, SamplerKind::Gumbel, &m).unwrap();
+        uniform.run(&mut *a1, steps);
+        let mut per_chain = ChainBatch::new(&m, BetaSchedule::Constant(0.8), seed, 0, k, None);
+        let mut a2 = build_batch_algo(AlgoKind::Gibbs, SamplerKind::Gumbel, &m).unwrap();
+        per_chain.run_betas_per_chain(&mut *a2, &[0.8; 4], steps);
+        let (mut ga, mut gb) = (Vec::new(), Vec::new());
+        for c in 0..k {
+            uniform.chain_state(c, &mut ga);
+            per_chain.chain_state(c, &mut gb);
+            assert_eq!(ga, gb, "chain {c}: states diverge");
+            assert_eq!(uniform.best_objectives[c], per_chain.best_objectives[c]);
+            assert_eq!(uniform.marginal0(c), per_chain.marginal0(c));
+        }
+    }
+
+    #[test]
+    fn per_chain_betas_match_scalar_chains_at_their_own_beta() {
+        // True per-chain β: chain c of the batch held at betas[c] must
+        // be bit-identical to a scalar chain running Constant(betas[c]).
+        let m = PottsGrid::new(5, 5, 2, 0.6);
+        let (seed, steps) = (0xB17Au64, 25usize);
+        let betas = [0.25f32, 0.5, 1.0, 2.0];
+        for (algo_kind, sampler) in [
+            (AlgoKind::Gibbs, SamplerKind::Gumbel),
+            (AlgoKind::BlockGibbs, SamplerKind::Cdf),
+            (AlgoKind::Mh, SamplerKind::Gumbel),
+        ] {
+            let mut batch =
+                ChainBatch::new(&m, BetaSchedule::Constant(1.0), seed, 0, betas.len(), None);
+            let mut algo = build_batch_algo(algo_kind, sampler, &m).unwrap();
+            batch.run_betas_per_chain(&mut *algo, &betas, steps);
+            let mut gathered = Vec::new();
+            for (c, &beta) in betas.iter().enumerate() {
+                let scalar = build_algo(algo_kind, sampler, &m, 1);
+                let mut chain = Chain::with_rng(
+                    &m,
+                    scalar,
+                    BetaSchedule::Constant(beta),
+                    Rng::fork(seed, c as u64),
+                );
+                chain.run(steps);
+                batch.chain_state(c, &mut gathered);
+                assert_eq!(gathered, chain.x, "{algo_kind:?} chain {c} at β={beta}");
+                assert_eq!(batch.best_objectives[c], chain.best_objective);
+                assert_eq!(batch.marginal0(c), chain.marginal(0));
+            }
         }
     }
 

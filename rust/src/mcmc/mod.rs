@@ -12,12 +12,16 @@ mod metrics;
 mod mh;
 mod pas;
 pub mod sampler;
+pub mod tempering;
 
 pub use anneal::{
     AdaptiveSchedule, AnnealConfig, AnnealPolicy, BetaController, FixedController,
     RoundDiagnostics,
 };
 pub use batch::{batch_supported, build_batch_algo, BatchMcmc, ChainBatch};
+pub use tempering::{
+    AdaptSpacing, Ladder, ReplicaExchange, TemperConfig, TemperingReport, SWAP_STREAM,
+};
 pub use gibbs::{AsyncGibbs, BlockGibbs, Gibbs};
 pub use metrics::{
     effective_sample_size, run_to_accuracy, split_r_hat, AccuracyTrace, TracePoint,

@@ -1,0 +1,760 @@
+//! Replica exchange (parallel tempering): per-chain β ladders with
+//! even/odd neighbor swaps.
+//!
+//! Adaptive annealing ([`crate::mcmc::anneal`]) moves *every* chain
+//! along one shared β trajectory. Replica exchange instead pins K
+//! chains ("replicas") to K fixed inverse temperatures — a [`Ladder`]
+//! — and periodically proposes to exchange the temperatures of
+//! neighboring replicas with the standard Metropolis swap rule
+//! `min(1, exp((β_i − β_j)(E_i − E_j)))`. Hot replicas (low β) cross
+//! energy barriers freely; accepted swaps carry their discoveries down
+//! to the cold end of the ladder. This is exactly the many-chain
+//! scheme Sountsov et al. recommend for modern hardware, and the
+//! tempered-ensemble mode the MRF accelerator of Bashizade et al. runs
+//! for multimodal COP workloads — it is what makes the batched
+//! backend's per-chain β storage ([`crate::mcmc::ChainBatch`]) real.
+//!
+//! The moving parts:
+//!
+//! * [`Ladder`] — the β rungs (geometric or explicit spacing) with
+//!   up-front validation (K ≥ 2, strictly increasing, finite),
+//! * [`ReplicaExchange`] — the controller for one ensemble of K
+//!   replicas: swap proposals, per-pair acceptance accounting,
+//!   round-trip tracking, optional adaptive re-spacing
+//!   ([`AdaptSpacing`]) toward a target swap rate, and flat-state
+//!   serialization for checkpoint/resume,
+//! * [`TemperingReport`] — the per-pair swap-rate / per-replica
+//!   round-trip diagnostics attached to every tempered
+//!   [`crate::coordinator::ChainResult`].
+//!
+//! **Determinism:** swap decisions consume a dedicated RNG stream,
+//! [`crate::rng::Rng::fork`]`(seed, `[`SWAP_STREAM`]` ^ ensemble)`,
+//! disjoint from every chain's stream — and exactly one uniform draw
+//! is consumed per proposed pair whether or not the acceptance test
+//! needs it, so the stream position is a pure function of `(K, rounds)`
+//! and a restored controller can replay it. Tempered trajectories are
+//! therefore bit-identical across the software and batched backends,
+//! pinned by `tests/integration_temper.rs`.
+
+use crate::rng::Rng;
+
+/// Dedicated RNG stream tag for swap decisions: ensemble `e` draws
+/// from `Rng::fork(seed, SWAP_STREAM ^ e)`. The constant is far above
+/// any chain id (chains use streams `0..chains`, restarts
+/// `chain_id + epoch << 32`), so swap randomness never aliases a
+/// chain's stream.
+pub const SWAP_STREAM: u64 = 0x7E3A_9B1C_5D2F_8A47;
+
+/// A β (inverse-temperature) ladder: one rung per replica, strictly
+/// increasing from the hottest (rung 0, lowest β) to the coldest
+/// (rung K−1, highest β — the sampling/optimization target).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Ladder {
+    betas: Vec<f32>,
+}
+
+impl Ladder {
+    /// A K-rung ladder spaced geometrically (uniform in log β) from
+    /// `from` to `to`, endpoints exact.
+    pub fn geometric(from: f32, to: f32, k: usize) -> Ladder {
+        let mut betas = Vec::with_capacity(k);
+        if k == 1 {
+            betas.push(to);
+        } else if k >= 2 {
+            let lf = (from.max(f32::MIN_POSITIVE) as f64).ln();
+            let lt = (to.max(f32::MIN_POSITIVE) as f64).ln();
+            for r in 0..k {
+                let f = r as f64 / (k - 1) as f64;
+                betas.push((lf + (lt - lf) * f).exp() as f32);
+            }
+            betas[0] = from;
+            betas[k - 1] = to;
+        }
+        Ladder { betas }
+    }
+
+    /// A ladder from explicit rungs (validated by [`Ladder::validate`]).
+    pub fn explicit(betas: Vec<f32>) -> Ladder {
+        Ladder { betas }
+    }
+
+    /// The rungs, hottest first.
+    pub fn betas(&self) -> &[f32] {
+        &self.betas
+    }
+
+    /// Number of rungs (replicas per ensemble).
+    pub fn k(&self) -> usize {
+        self.betas.len()
+    }
+
+    /// Reject degenerate ladders up front: fewer than 2 rungs, a
+    /// non-finite or non-positive β, or rungs that are not strictly
+    /// increasing.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.betas.len() < 2 {
+            return Err(format!(
+                "tempering ladder needs at least 2 rungs (got {})",
+                self.betas.len()
+            ));
+        }
+        for (r, &b) in self.betas.iter().enumerate() {
+            if !b.is_finite() || b <= 0.0 {
+                return Err(format!(
+                    "tempering ladder rung {r} must be finite and > 0 (got {b})"
+                ));
+            }
+        }
+        for (r, w) in self.betas.windows(2).enumerate() {
+            if w[1] <= w[0] {
+                return Err(format!(
+                    "tempering ladder must be strictly increasing: rung {} (β = {}) \
+                     does not exceed rung {r} (β = {})",
+                    r + 1,
+                    w[1],
+                    w[0]
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse a CLI `--ladder` spec for a K-replica ensemble:
+    /// `geom:FROM:TO` (K rungs, geometric spacing) or
+    /// `explicit:B1,B2,…` (exactly K comma-separated rungs).
+    pub fn parse(spec: &str, k: usize) -> Result<Ladder, String> {
+        let bad = || format!("bad ladder {spec:?} (geom:FROM:TO | explicit:B1,B2,…)");
+        let parts: Vec<&str> = spec.split(':').collect();
+        let ladder = match parts.as_slice() {
+            ["geom", f, t] | ["geometric", f, t] => {
+                let from = f.parse::<f32>().map_err(|_| bad())?;
+                let to = t.parse::<f32>().map_err(|_| bad())?;
+                Ladder::geometric(from, to, k)
+            }
+            ["explicit", list] => {
+                let mut betas = Vec::new();
+                for tok in list.split(',') {
+                    betas.push(tok.trim().parse::<f32>().map_err(|_| bad())?);
+                }
+                if betas.len() != k {
+                    return Err(format!(
+                        "explicit ladder lists {} rungs but --temper asks for {k} replicas",
+                        betas.len()
+                    ));
+                }
+                Ladder::explicit(betas)
+            }
+            _ => return Err(bad()),
+        };
+        ladder.validate()?;
+        Ok(ladder)
+    }
+}
+
+/// Adaptive ladder re-spacing: every `every_rounds` swap rounds the
+/// log-β gaps are rescaled toward `target_rate` per-pair acceptance
+/// (a pair swapping too often sits too close — widen its gap; one
+/// swapping too rarely sits too far — shrink it), then renormalized so
+/// the endpoint rungs stay fixed. Monotonicity is preserved because
+/// gaps stay positive.
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptSpacing {
+    /// Per-pair swap acceptance rate to steer toward (must lie in
+    /// (0, 1); the engine builder enforces this).
+    pub target_rate: f64,
+    /// Swap rounds per adaptation window.
+    pub every_rounds: usize,
+    /// Per-window clamp on any gap's rescale factor (and its inverse).
+    pub max_factor: f64,
+}
+
+impl AdaptSpacing {
+    /// The CLI default: 30% target rate, retune every 10 swap rounds,
+    /// gaps move at most 2× per window.
+    pub fn new(target_rate: f64) -> AdaptSpacing {
+        AdaptSpacing {
+            target_rate,
+            every_rounds: 10,
+            max_factor: 2.0,
+        }
+    }
+}
+
+impl Default for AdaptSpacing {
+    fn default() -> Self {
+        AdaptSpacing::new(0.3)
+    }
+}
+
+/// Tuning knobs for a [`ReplicaExchange`] controller.
+#[derive(Clone, Copy, Debug)]
+pub struct TemperConfig {
+    /// Steps between swap rounds (the CLI's `--swap-every`).
+    pub swap_every: usize,
+    /// Adaptive ladder re-spacing (None = keep the ladder fixed).
+    pub adapt: Option<AdaptSpacing>,
+}
+
+impl Default for TemperConfig {
+    fn default() -> Self {
+        TemperConfig {
+            swap_every: 10,
+            adapt: None,
+        }
+    }
+}
+
+/// Per-ensemble tempering diagnostics, attached to every tempered
+/// chain's [`crate::coordinator::ChainResult`]. Pair `r` is the swap
+/// channel between rungs `r` and `r + 1`; replica slot `s` is the
+/// chain `first_chain + s`.
+#[derive(Clone, Debug)]
+pub struct TemperingReport {
+    /// First chain id of the ensemble.
+    pub first_chain: usize,
+    /// Final ladder rungs (differs from the initial ladder only under
+    /// [`AdaptSpacing`]).
+    pub betas: Vec<f32>,
+    /// Swap proposals per adjacent rung pair (length K−1).
+    pub pair_attempts: Vec<u64>,
+    /// Accepted swaps per adjacent rung pair (length K−1).
+    pub pair_accepts: Vec<u64>,
+    /// Completed ladder round trips (rung 0 → K−1 → 0) per replica
+    /// slot.
+    pub round_trips: Vec<u64>,
+    /// Final rung of each replica slot.
+    pub rungs: Vec<usize>,
+    /// Swap rounds executed.
+    pub rounds: u64,
+    /// Ladder re-spacing windows applied.
+    pub adapts: u64,
+}
+
+impl TemperingReport {
+    /// Acceptance rate per adjacent rung pair (0 when never proposed).
+    pub fn swap_rates(&self) -> Vec<f64> {
+        self.pair_attempts
+            .iter()
+            .zip(&self.pair_accepts)
+            .map(|(&att, &acc)| if att == 0 { 0.0 } else { acc as f64 / att as f64 })
+            .collect()
+    }
+
+    /// Mean per-pair acceptance rate.
+    pub fn mean_swap_rate(&self) -> f64 {
+        let rates = self.swap_rates();
+        if rates.is_empty() {
+            0.0
+        } else {
+            rates.iter().sum::<f64>() / rates.len() as f64
+        }
+    }
+
+    /// Total round trips across the ensemble.
+    pub fn total_round_trips(&self) -> u64 {
+        self.round_trips.iter().sum()
+    }
+}
+
+/// Round-trip phase per replica slot: the slot has not yet touched the
+/// bottom rung, is heading up from the bottom, or is heading back down
+/// from the top.
+const PHASE_NONE: u8 = 0;
+const PHASE_UP: u8 = 1;
+const PHASE_DOWN: u8 = 2;
+
+/// The replica-exchange controller for one ensemble of K replicas
+/// (chains `first_chain .. first_chain + K`).
+///
+/// The controller swaps *temperatures*, not states: replica slot `s`
+/// is a chain whose RNG stream and state evolve untouched, while
+/// `rung_of[s]` — the ladder rung it currently runs at — migrates via
+/// accepted swaps. This keeps every backend's chains bit-identical
+/// (no cross-chain state copies) and makes a swap O(1).
+pub struct ReplicaExchange {
+    ladder: Ladder,
+    cfg: TemperConfig,
+    first_chain: usize,
+    /// Seed of the dedicated swap stream (replayable on restore).
+    rng_seed: u64,
+    rng: Rng,
+    /// Swap rounds completed (round parity selects even/odd pairs).
+    rounds: u64,
+    /// Replica slot → current rung.
+    rung_of: Vec<usize>,
+    /// Current rung → replica slot (inverse of `rung_of`).
+    slot_of: Vec<usize>,
+    pair_attempts: Vec<u64>,
+    pair_accepts: Vec<u64>,
+    /// Adaptation-window counters (reset every retune).
+    win_attempts: Vec<u64>,
+    win_accepts: Vec<u64>,
+    trip_phase: Vec<u8>,
+    round_trips: Vec<u64>,
+    adapts: u64,
+}
+
+impl ReplicaExchange {
+    /// Controller for ensemble `ensemble` (chains `first_chain ..
+    /// first_chain + ladder.k()`), with slot `s` starting on rung `s`.
+    pub fn new(
+        ladder: Ladder,
+        cfg: TemperConfig,
+        seed: u64,
+        first_chain: usize,
+        ensemble: u64,
+    ) -> ReplicaExchange {
+        let k = ladder.k();
+        let rng_seed = Rng::fork_seed(seed, SWAP_STREAM ^ ensemble);
+        let mut trip_phase = vec![PHASE_NONE; k];
+        if k > 0 {
+            // Slot 0 starts on the bottom rung: its round trip is armed.
+            trip_phase[0] = PHASE_UP;
+        }
+        ReplicaExchange {
+            ladder,
+            cfg,
+            first_chain,
+            rng_seed,
+            rng: Rng::new(rng_seed),
+            rounds: 0,
+            rung_of: (0..k).collect(),
+            slot_of: (0..k).collect(),
+            pair_attempts: vec![0; k.saturating_sub(1)],
+            pair_accepts: vec![0; k.saturating_sub(1)],
+            win_attempts: vec![0; k.saturating_sub(1)],
+            win_accepts: vec![0; k.saturating_sub(1)],
+            trip_phase,
+            round_trips: vec![0; k],
+            adapts: 0,
+        }
+    }
+
+    /// Replicas per ensemble.
+    pub fn k(&self) -> usize {
+        self.ladder.k()
+    }
+
+    /// First chain id of the ensemble.
+    pub fn first_chain(&self) -> usize {
+        self.first_chain
+    }
+
+    /// Global chain id of replica slot `slot`.
+    pub fn chain_id(&self, slot: usize) -> usize {
+        self.first_chain + slot
+    }
+
+    /// Steps between swap rounds.
+    pub fn swap_every(&self) -> usize {
+        self.cfg.swap_every.max(1)
+    }
+
+    /// β replica slot `slot` currently runs at.
+    pub fn beta_of_slot(&self, slot: usize) -> f32 {
+        self.ladder.betas()[self.rung_of[slot]]
+    }
+
+    /// The current ladder (re-spaced under [`AdaptSpacing`]).
+    pub fn ladder(&self) -> &Ladder {
+        &self.ladder
+    }
+
+    /// Swap rounds completed so far.
+    pub fn rounds(&self) -> u64 {
+        self.rounds
+    }
+
+    /// One even/odd swap round. `energies[slot]` is the *energy*
+    /// (−objective) of replica slot `slot`'s current state; a pair of
+    /// neighboring rungs `(r, r+1)` swaps with probability
+    /// `min(1, exp((β_r − β_{r+1})(E_r − E_{r+1})))`. Even rounds
+    /// propose pairs starting at rung 0, odd rounds at rung 1, so
+    /// every channel is exercised every two rounds. Returns the number
+    /// of accepted swaps.
+    pub fn swap_round(&mut self, energies: &[f64]) -> usize {
+        let k = self.k();
+        assert_eq!(energies.len(), k, "one energy per replica slot");
+        let betas = self.ladder.betas().to_vec();
+        let mut accepted = 0usize;
+        let mut r = (self.rounds % 2) as usize;
+        while r + 1 < k {
+            let (si, sj) = (self.slot_of[r], self.slot_of[r + 1]);
+            // One draw per proposed pair, *always*: the stream position
+            // stays a pure function of (K, rounds) so checkpoint
+            // restore can replay it.
+            let u = self.rng.uniform_f64();
+            let log_a = (betas[r] as f64 - betas[r + 1] as f64) * (energies[si] - energies[sj]);
+            self.pair_attempts[r] += 1;
+            self.win_attempts[r] += 1;
+            if log_a >= 0.0 || u < log_a.exp() {
+                self.rung_of[si] = r + 1;
+                self.rung_of[sj] = r;
+                self.slot_of[r] = sj;
+                self.slot_of[r + 1] = si;
+                self.pair_accepts[r] += 1;
+                self.win_accepts[r] += 1;
+                accepted += 1;
+            }
+            r += 2;
+        }
+        self.rounds += 1;
+        // Round-trip bookkeeping: a slot completes a trip when it
+        // returns to the bottom rung after touching the top.
+        for slot in 0..k {
+            let rung = self.rung_of[slot];
+            if rung == 0 {
+                if self.trip_phase[slot] == PHASE_DOWN {
+                    self.round_trips[slot] += 1;
+                }
+                self.trip_phase[slot] = PHASE_UP;
+            } else if rung == k - 1 && self.trip_phase[slot] == PHASE_UP {
+                self.trip_phase[slot] = PHASE_DOWN;
+            }
+        }
+        if let Some(adapt) = self.cfg.adapt {
+            if adapt.every_rounds > 0 && self.rounds % adapt.every_rounds as u64 == 0 {
+                self.retune(adapt);
+            }
+        }
+        accepted
+    }
+
+    /// Rescale the log-β gaps toward the target per-pair swap rate and
+    /// renormalize so the endpoint rungs stay fixed.
+    fn retune(&mut self, adapt: AdaptSpacing) {
+        let k = self.k();
+        if k < 2 {
+            return;
+        }
+        let betas = self.ladder.betas();
+        let lo = (betas[0] as f64).ln();
+        let hi = (betas[k - 1] as f64).ln();
+        // Damping keeps a zero-acceptance window from collapsing a gap
+        // to the clamp floor in one jump.
+        const DAMP: f64 = 0.05;
+        let max_f = adapt.max_factor.max(1.0);
+        let mut gaps: Vec<f64> = betas
+            .windows(2)
+            .map(|w| (w[1] as f64).ln() - (w[0] as f64).ln())
+            .collect();
+        for (r, gap) in gaps.iter_mut().enumerate() {
+            let rate = if self.win_attempts[r] == 0 {
+                adapt.target_rate
+            } else {
+                self.win_accepts[r] as f64 / self.win_attempts[r] as f64
+            };
+            let factor = ((rate + DAMP) / (adapt.target_rate + DAMP)).clamp(1.0 / max_f, max_f);
+            *gap *= factor;
+        }
+        let total: f64 = gaps.iter().sum();
+        if total > 0.0 && total.is_finite() {
+            let span = hi - lo;
+            let mut new_betas = Vec::with_capacity(k);
+            new_betas.push(betas[0]);
+            let mut acc = lo;
+            for gap in &gaps[..k - 1] {
+                acc += gap / total * span;
+                new_betas.push(acc.exp() as f32);
+            }
+            new_betas[k - 1] = betas[k - 1];
+            self.ladder = Ladder::explicit(new_betas);
+        }
+        self.win_attempts.fill(0);
+        self.win_accepts.fill(0);
+        self.adapts += 1;
+    }
+
+    /// The ensemble's diagnostics snapshot.
+    pub fn report(&self) -> TemperingReport {
+        TemperingReport {
+            first_chain: self.first_chain,
+            betas: self.ladder.betas().to_vec(),
+            pair_attempts: self.pair_attempts.clone(),
+            pair_accepts: self.pair_accepts.clone(),
+            round_trips: self.round_trips.clone(),
+            rungs: self.rung_of.clone(),
+            rounds: self.rounds,
+            adapts: self.adapts,
+        }
+    }
+
+    /// Serialized-state length for a K-rung ensemble (see
+    /// [`ReplicaExchange::state`]).
+    pub fn state_len(k: usize) -> usize {
+        3 + 4 * k + 4 * k.saturating_sub(1)
+    }
+
+    /// Serialize the controller's memory as a flat vector (stored in
+    /// [`crate::engine::Checkpoint`]'s `temper` field). The swap RNG
+    /// is *not* serialized: its position is `rounds`-determined and
+    /// [`ReplicaExchange::restore`] replays it.
+    pub fn state(&self) -> Vec<f64> {
+        let k = self.k();
+        let mut s = Vec::with_capacity(Self::state_len(k));
+        s.push(k as f64);
+        s.push(self.rounds as f64);
+        s.push(self.adapts as f64);
+        s.extend(self.ladder.betas().iter().map(|&b| b as f64));
+        s.extend(self.rung_of.iter().map(|&r| r as f64));
+        s.extend(self.pair_attempts.iter().map(|&v| v as f64));
+        s.extend(self.pair_accepts.iter().map(|&v| v as f64));
+        s.extend(self.win_attempts.iter().map(|&v| v as f64));
+        s.extend(self.win_accepts.iter().map(|&v| v as f64));
+        s.extend(self.trip_phase.iter().map(|&p| p as f64));
+        s.extend(self.round_trips.iter().map(|&v| v as f64));
+        s
+    }
+
+    /// Restore memory serialized by [`ReplicaExchange::state`],
+    /// replaying the swap RNG to its recorded position: one draw per
+    /// proposed pair, `⌊K/2⌋` pairs on even rounds and `⌊(K−1)/2⌋` on
+    /// odd rounds.
+    pub fn restore(&mut self, state: &[f64]) -> Result<(), String> {
+        let k = self.k();
+        if state.len() != Self::state_len(k) {
+            return Err(format!(
+                "tempering state has {} entries, expected {} for a {k}-rung ladder",
+                state.len(),
+                Self::state_len(k)
+            ));
+        }
+        if state[0] as usize != k {
+            return Err(format!(
+                "tempering state was saved for a {}-rung ladder, this run uses {k}",
+                state[0] as usize
+            ));
+        }
+        self.rounds = state[1] as u64;
+        self.adapts = state[2] as u64;
+        let mut at = 3usize;
+        let mut next = |n: usize| {
+            let range = at..at + n;
+            at += n;
+            range
+        };
+        let betas: Vec<f32> = state[next(k)].iter().map(|&b| b as f32).collect();
+        let ladder = Ladder::explicit(betas);
+        ladder.validate()?;
+        self.ladder = ladder;
+        let rung_of: Vec<usize> = state[next(k)].iter().map(|&r| r as usize).collect();
+        let mut slot_of = vec![usize::MAX; k];
+        for (slot, &rung) in rung_of.iter().enumerate() {
+            if rung >= k || slot_of[rung] != usize::MAX {
+                return Err("tempering state rung assignment is not a permutation".into());
+            }
+            slot_of[rung] = slot;
+        }
+        self.rung_of = rung_of;
+        self.slot_of = slot_of;
+        self.pair_attempts = state[next(k - 1)].iter().map(|&v| v as u64).collect();
+        self.pair_accepts = state[next(k - 1)].iter().map(|&v| v as u64).collect();
+        self.win_attempts = state[next(k - 1)].iter().map(|&v| v as u64).collect();
+        self.win_accepts = state[next(k - 1)].iter().map(|&v| v as u64).collect();
+        self.trip_phase = state[next(k)].iter().map(|&p| p as u8).collect();
+        self.round_trips = state[next(k)].iter().map(|&v| v as u64).collect();
+        // Replay the swap stream to its recorded position.
+        self.rng = Rng::new(self.rng_seed);
+        let ku = k as u64;
+        let draws = (self.rounds / 2) * ku.saturating_sub(1) + (self.rounds % 2) * (ku / 2);
+        for _ in 0..draws {
+            let _ = self.rng.uniform_f64();
+        }
+        Ok(())
+    }
+
+    /// One-line human-readable summary.
+    pub fn describe(&self) -> String {
+        format!(
+            "temper(K={}, chains {}..{}): {} swap rounds, mean swap rate {:.2}, \
+             {} round trips, {} retunes",
+            self.k(),
+            self.first_chain,
+            self.first_chain + self.k(),
+            self.rounds,
+            self.report().mean_swap_rate(),
+            self.round_trips.iter().sum::<u64>(),
+            self.adapts
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ladder4() -> Ladder {
+        Ladder::explicit(vec![0.25, 0.5, 1.0, 2.0])
+    }
+
+    #[test]
+    fn geometric_ladder_hits_endpoints_and_is_monotone() {
+        let l = Ladder::geometric(0.2, 3.2, 5);
+        assert_eq!(l.k(), 5);
+        assert_eq!(l.betas()[0], 0.2);
+        assert_eq!(l.betas()[4], 3.2);
+        l.validate().unwrap();
+        // Uniform log spacing: ratios between neighbors are equal.
+        let r0 = l.betas()[1] / l.betas()[0];
+        let r2 = l.betas()[3] / l.betas()[2];
+        assert!((r0 - r2).abs() < 1e-3, "{r0} vs {r2}");
+    }
+
+    #[test]
+    fn ladder_validation_rejects_degenerate_rungs() {
+        for bad in [
+            Ladder::explicit(vec![1.0]),
+            Ladder::explicit(vec![]),
+            Ladder::explicit(vec![1.0, 1.0]),
+            Ladder::explicit(vec![2.0, 1.0]),
+            Ladder::explicit(vec![0.0, 1.0]),
+            Ladder::explicit(vec![-1.0, 1.0]),
+            Ladder::explicit(vec![1.0, f32::NAN]),
+        ] {
+            assert!(bad.validate().is_err(), "accepted {:?}", bad.betas());
+        }
+        ladder4().validate().unwrap();
+    }
+
+    #[test]
+    fn ladder_parse_roundtrip_and_errors() {
+        let l = Ladder::parse("geom:0.2:3.2", 5).unwrap();
+        assert_eq!(l.betas(), Ladder::geometric(0.2, 3.2, 5).betas());
+        let e = Ladder::parse("explicit:0.25,0.5,1,2", 4).unwrap();
+        assert_eq!(e, ladder4());
+        assert!(Ladder::parse("geom:0.2", 4).is_err());
+        assert!(Ladder::parse("explicit:1,2", 4).is_err());
+        assert!(Ladder::parse("explicit:2,1,3,4", 4).is_err());
+        assert!(Ladder::parse("nope:1:2", 4).is_err());
+        assert!(Ladder::parse("geom:0.5:2.0", 1).is_err());
+    }
+
+    #[test]
+    fn certain_swaps_are_accepted_and_rungs_migrate() {
+        // Hot replica holds a *lower* energy than its colder neighbor:
+        // log_a = (β_r − β_{r+1})(E_r − E_{r+1}) > 0 ⇒ certain accept.
+        let mut ex = ReplicaExchange::new(ladder4(), TemperConfig::default(), 1, 0, 0);
+        // Slot s starts on rung s. Energies increasing in slot make
+        // every even pair a certain swap.
+        let accepted = ex.swap_round(&[-30.0, -20.0, -10.0, 0.0]);
+        assert_eq!(accepted, 2, "pairs (0,1) and (2,3) must both swap");
+        // Slots 0↔1 and 2↔3 exchanged rungs.
+        assert_eq!(ex.beta_of_slot(0), 0.5);
+        assert_eq!(ex.beta_of_slot(1), 0.25);
+        assert_eq!(ex.beta_of_slot(2), 2.0);
+        assert_eq!(ex.beta_of_slot(3), 1.0);
+        let rep = ex.report();
+        assert_eq!(rep.pair_attempts, vec![1, 0, 1]);
+        assert_eq!(rep.pair_accepts, vec![1, 0, 1]);
+    }
+
+    #[test]
+    fn hopeless_swaps_are_rejected() {
+        // Huge energy penalty the wrong way: exp(log_a) underflows to 0.
+        let mut ex = ReplicaExchange::new(ladder4(), TemperConfig::default(), 1, 0, 0);
+        let accepted = ex.swap_round(&[0.0, -1e6, 0.0, -1e6]);
+        assert_eq!(accepted, 0);
+        assert_eq!(ex.beta_of_slot(0), 0.25);
+        let rep = ex.report();
+        assert_eq!(rep.pair_attempts, vec![1, 0, 1]);
+        assert_eq!(rep.pair_accepts, vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn even_odd_rounds_alternate_pairs() {
+        let mut ex = ReplicaExchange::new(ladder4(), TemperConfig::default(), 1, 0, 0);
+        ex.swap_round(&[0.0; 4]);
+        ex.swap_round(&[0.0; 4]);
+        let rep = ex.report();
+        // Round 0 proposes (0,1),(2,3); round 1 proposes (1,2).
+        assert_eq!(rep.pair_attempts, vec![1, 1, 1]);
+        assert_eq!(rep.rounds, 2);
+    }
+
+    #[test]
+    fn round_trips_count_bottom_top_bottom() {
+        let mut ex = ReplicaExchange::new(
+            Ladder::explicit(vec![0.5, 1.0]),
+            TemperConfig::default(),
+            1,
+            0,
+            0,
+        );
+        // K = 2: every even round proposes the single pair. Equal
+        // energies ⇒ log_a = 0 ⇒ certain accept. Slot 0 bounces
+        // 0 → 1 → 0 → 1 …, completing a trip every second accepted
+        // swap. Odd rounds propose nothing.
+        for _ in 0..8 {
+            ex.swap_round(&[0.0, 0.0]);
+        }
+        let rep = ex.report();
+        // 4 even rounds ⇒ 4 swaps: slot 0 path 1,1?,… rungs after each
+        // even round alternate; two full trips.
+        assert_eq!(rep.pair_attempts, vec![4]);
+        assert_eq!(rep.pair_accepts, vec![4]);
+        assert!(rep.round_trips[0] >= 1, "{:?}", rep.round_trips);
+        assert_eq!(rep.total_round_trips(), rep.round_trips.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn adaptive_respacing_keeps_endpoints_and_monotonicity() {
+        let cfg = TemperConfig {
+            swap_every: 5,
+            adapt: Some(AdaptSpacing {
+                target_rate: 0.3,
+                every_rounds: 2,
+                max_factor: 2.0,
+            }),
+        };
+        let mut ex = ReplicaExchange::new(ladder4(), cfg, 1, 0, 0);
+        // All swaps certain ⇒ rates 1.0 ≫ target ⇒ gaps widen, then
+        // renormalize; endpoints must stay put and order must hold.
+        for _ in 0..6 {
+            ex.swap_round(&[0.0; 4]);
+        }
+        let rep = ex.report();
+        assert!(rep.adapts >= 1);
+        assert_eq!(rep.betas[0], 0.25);
+        assert_eq!(rep.betas[3], 2.0);
+        Ladder::explicit(rep.betas.clone()).validate().unwrap();
+    }
+
+    #[test]
+    fn state_roundtrip_replays_the_swap_stream() {
+        let cfg = TemperConfig {
+            swap_every: 5,
+            adapt: Some(AdaptSpacing::new(0.3)),
+        };
+        // Borderline energies so acceptance genuinely consumes the
+        // uniform draw (neither certain accept nor certain reject).
+        let energy = |round: u64, slot: usize| -> f64 {
+            ((round as f64 * 0.7 + slot as f64 * 1.3).sin()) * 2.0
+        };
+        let mut a = ReplicaExchange::new(ladder4(), cfg, 99, 4, 1);
+        for round in 0..5 {
+            let e: Vec<f64> = (0..4).map(|s| energy(round, s)).collect();
+            a.swap_round(&e);
+        }
+        let saved = a.state();
+        assert_eq!(saved.len(), ReplicaExchange::state_len(4));
+        // Continue the original.
+        for round in 5..12 {
+            let e: Vec<f64> = (0..4).map(|s| energy(round, s)).collect();
+            a.swap_round(&e);
+        }
+        // Restore a fresh controller mid-sequence and replay the tail.
+        let mut b = ReplicaExchange::new(ladder4(), cfg, 99, 4, 1);
+        b.restore(&saved).unwrap();
+        for round in 5..12 {
+            let e: Vec<f64> = (0..4).map(|s| energy(round, s)).collect();
+            b.swap_round(&e);
+        }
+        assert_eq!(a.state(), b.state(), "resumed swap schedule diverged");
+        assert_eq!(a.report().pair_accepts, b.report().pair_accepts);
+        // Wrong-length and wrong-K states are typed errors.
+        assert!(b.restore(&[1.0, 2.0]).is_err());
+        let mut wrong_k = saved.clone();
+        wrong_k[0] = 3.0;
+        assert!(b.restore(&wrong_k).is_err());
+    }
+}

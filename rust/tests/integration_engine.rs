@@ -243,6 +243,7 @@ impl ExecutionBackend for CountingBackend {
             stats: StepStats::default(),
             sim: None,
             multicore: None,
+            tempering: None,
             wall: Duration::from_millis(1),
             marginal0: vec![1.0],
             best_x: vec![0; model.num_vars()],

@@ -141,6 +141,7 @@ fn checkpoint_resumes_through_init_state() {
         best_objective: best.best_objective,
         best_x: best.best_x.clone(),
         anneal: None,
+        temper: None,
     };
     let path = std::env::temp_dir().join("mc2a_integration_checkpoint.json");
     ck.save(&path).unwrap();

@@ -1,0 +1,494 @@
+//! Integration tests for the replica-exchange (parallel tempering)
+//! subsystem: builder validation, per-replica β assignment, swap-rate
+//! and round-trip diagnostics, cross-backend bit-identity of tempered
+//! trajectories, checkpoint round trips of the ladder + swap history,
+//! and the tempered-vs-single-β time-to-target acceptance run.
+
+use std::sync::{Arc, Mutex};
+
+use mc2a::coordinator::ChainResult;
+use mc2a::energy::PottsGrid;
+use mc2a::engine::{
+    ChainCtx, ChainObserver, ChainSpec, Checkpoint, Engine, ExecutionBackend, Mc2aError,
+    ObserverAction, ProgressEvent,
+};
+use mc2a::isa::HwConfig;
+use mc2a::mcmc::{AlgoKind, AnnealPolicy, BetaSchedule, Ladder, SamplerKind};
+
+fn ladder4() -> Ladder {
+    Ladder::explicit(vec![0.25, 0.5, 1.0, 2.0])
+}
+
+// ------------------------------------------------------- builder rules
+
+#[test]
+fn builder_rejects_degenerate_tempering_configs() {
+    let m = PottsGrid::new(4, 4, 2, 0.5);
+    fn expect_invalid(b: mc2a::EngineBuilder<'_>, what: &str) {
+        match b.build() {
+            Err(Mc2aError::InvalidConfig(_)) => {}
+            other => panic!("{what}: expected InvalidConfig, got ok={:?}", other.is_ok()),
+        }
+    }
+    // `--temper 1`: a one-rung ladder has nothing to swap with.
+    expect_invalid(
+        Engine::for_model(&m).chains(1).tempering(Ladder::explicit(vec![1.0])),
+        "one-rung ladder",
+    );
+    // Non-monotone explicit ladder.
+    expect_invalid(
+        Engine::for_model(&m).chains(2).tempering(Ladder::explicit(vec![2.0, 1.0])),
+        "non-monotone ladder",
+    );
+    // More rungs than chains.
+    expect_invalid(
+        Engine::for_model(&m).chains(2).tempering(ladder4()),
+        "K > chains",
+    );
+    // Chains not a multiple of K (no partial ensembles).
+    expect_invalid(
+        Engine::for_model(&m).chains(6).tempering(ladder4()),
+        "chains % K != 0",
+    );
+    // Tempering and adaptive annealing both want to own β.
+    expect_invalid(
+        Engine::for_model(&m)
+            .chains(4)
+            .tempering(ladder4())
+            .adaptive(AnnealPolicy::Reheat),
+        "temper + adaptive",
+    );
+    // Tempering replaces the β schedule.
+    expect_invalid(
+        Engine::for_model(&m)
+            .chains(4)
+            .tempering(ladder4())
+            .schedule(BetaSchedule::Linear { from: 0.1, to: 2.0, steps: 50 }),
+        "temper + non-constant schedule",
+    );
+    // Swap cadence of 0 is meaningless.
+    expect_invalid(
+        Engine::for_model(&m).chains(4).tempering(ladder4()).swap_every(0),
+        "swap_every 0",
+    );
+    // Tempering knobs without tempering(ladder).
+    expect_invalid(Engine::for_model(&m).chains(4).swap_every(5), "swap_every alone");
+    expect_invalid(
+        Engine::for_model(&m).chains(4).temper_adapt(0.3),
+        "temper_adapt alone",
+    );
+    // Adaptive re-spacing needs a meaningful target rate.
+    for bad_rate in [0.0, 1.0, -0.3, 1.5, f64::NAN] {
+        expect_invalid(
+            Engine::for_model(&m).chains(4).tempering(ladder4()).temper_adapt(bad_rate),
+            "bad swap-target rate",
+        );
+    }
+    assert!(Engine::for_model(&m)
+        .chains(4)
+        .tempering(ladder4())
+        .temper_adapt(0.3)
+        .build()
+        .is_ok());
+    // Restart and tempering are mutually exclusive.
+    expect_invalid(
+        Engine::for_model(&m)
+            .chains(4)
+            .tempering(ladder4())
+            .restart_on_stagnation(1.1, 3),
+        "temper + restart",
+    );
+    // A valid configuration builds.
+    assert!(Engine::for_model(&m).chains(4).tempering(ladder4()).build().is_ok());
+    assert!(Engine::for_model(&m).chains(8).tempering(ladder4()).build().is_ok());
+}
+
+#[test]
+fn error_messages_name_the_offending_flag_combination() {
+    let m = PottsGrid::new(4, 4, 2, 0.5);
+    fn msg(b: mc2a::EngineBuilder<'_>) -> String {
+        match b.build() {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("expected an error"),
+        }
+    }
+    let s = msg(Engine::for_model(&m).chains(1).tempering(Ladder::explicit(vec![1.0])));
+    assert!(s.contains("at least 2 rungs"), "{s}");
+    let s = msg(Engine::for_model(&m).chains(2).tempering(Ladder::explicit(vec![2.0, 1.0])));
+    assert!(s.contains("strictly increasing"), "{s}");
+    let s = msg(
+        Engine::for_model(&m)
+            .chains(4)
+            .tempering(ladder4())
+            .adaptive(AnnealPolicy::Plateau),
+    );
+    assert!(s.contains("mutually exclusive"), "{s}");
+    let s = msg(Engine::for_model(&m).chains(2).tempering(ladder4()));
+    assert!(s.contains("chains ≥ K"), "{s}");
+}
+
+// ----------------------------------------------- default trait surface
+
+struct NoTemperBackend;
+
+impl ExecutionBackend for NoTemperBackend {
+    fn name(&self) -> &'static str {
+        "no-temper"
+    }
+
+    fn run_chain(
+        &self,
+        _model: &dyn mc2a::energy::EnergyModel,
+        _spec: &ChainSpec,
+        _chain_id: usize,
+        _ctx: &ChainCtx<'_>,
+    ) -> Result<ChainResult, Mc2aError> {
+        unreachable!("tempered run must not reach run_chain")
+    }
+}
+
+#[test]
+fn backends_without_tempering_support_reject_with_a_typed_error() {
+    // The default trait impl (what the runtime backend inherits)
+    // surfaces a typed error naming the backend.
+    let m = PottsGrid::new(3, 3, 2, 0.5);
+    let err = Engine::for_model(&m)
+        .chains(2)
+        .tempering(Ladder::explicit(vec![0.5, 1.0]))
+        .backend(Box::new(NoTemperBackend))
+        .build()
+        .unwrap()
+        .run()
+        .unwrap_err();
+    let s = err.to_string();
+    assert!(s.contains("no-temper") && s.contains("parallel tempering"), "{s}");
+}
+
+// ------------------------------------------------ tempered runs + diag
+
+/// Observer recording every progress event.
+#[derive(Default)]
+struct EventTrace {
+    events: Arc<Mutex<Vec<(usize, usize, f32, f64)>>>,
+}
+
+impl ChainObserver for EventTrace {
+    fn on_progress(&mut self, e: &ProgressEvent) -> ObserverAction {
+        self.events
+            .lock()
+            .unwrap()
+            .push((e.chain_id, e.step, e.beta, e.objective));
+        ObserverAction::Continue
+    }
+}
+
+#[test]
+fn tempered_software_run_reports_per_pair_swap_diagnostics() {
+    let m = PottsGrid::new(5, 5, 2, 0.8);
+    let trace = EventTrace::default();
+    let events = Arc::clone(&trace.events);
+    let metrics = Engine::for_model(&m)
+        .algo(AlgoKind::Gibbs)
+        .chains(8) // two ensembles of 4
+        .steps(120)
+        .seed(21)
+        .tempering(ladder4())
+        .swap_every(6)
+        .observer(Box::new(trace))
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(metrics.chains.len(), 8);
+    for c in &metrics.chains {
+        assert_eq!(c.steps, 120);
+        let t = c.tempering.as_ref().expect("tempered chain has a report");
+        // Ensemble membership: chains 0..4 → first ensemble, 4..8 → second.
+        assert_eq!(t.first_chain, (c.chain_id / 4) * 4);
+        assert_eq!(t.betas.len(), 4);
+        assert_eq!(t.pair_attempts.len(), 3);
+        assert_eq!(t.pair_accepts.len(), 3);
+        assert_eq!(t.round_trips.len(), 4);
+        assert_eq!(t.rounds, 120 / 6);
+        // Every pair was proposed: 20 rounds alternate even/odd.
+        assert!(t.pair_attempts.iter().all(|&a| a > 0), "{:?}", t.pair_attempts);
+        assert!(t.swap_rates().iter().all(|&r| (0.0..=1.0).contains(&r)));
+    }
+    // First observation segment: chain c of each ensemble still sits on
+    // rung c % 4, so its reported β is the ladder rung.
+    let events = events.lock().unwrap();
+    let rungs = ladder4();
+    for c in 0..8usize {
+        let first = events
+            .iter()
+            .find(|(cid, _, _, _)| *cid == c)
+            .expect("every chain emits events");
+        assert_eq!(first.2, rungs.betas()[c % 4], "chain {c} first-segment β");
+    }
+}
+
+#[test]
+fn tempered_trajectories_are_bit_identical_across_software_backends() {
+    // Satellite: the swap stream is Rng::fork(seed, SWAP_STREAM), so a
+    // tempered run makes identical swap decisions on the scalar and
+    // batched backends — and since swaps move temperatures, not
+    // states, the full event stream matches bit-for-bit. Registry
+    // workloads cover the batched kernels (Block Gibbs) and the
+    // scalar PAS fallback.
+    for wname in ["earthquake", "maxcut"] {
+        let run = |batched: bool| -> (Vec<(usize, usize, f32, f64)>, Vec<f64>, Vec<u64>) {
+            let trace = EventTrace::default();
+            let events = Arc::clone(&trace.events);
+            let mut b = Engine::for_workload(wname)
+                .unwrap()
+                .tempering(ladder4())
+                .swap_every(5)
+                .steps(60)
+                .chains(4)
+                .seed(0x7E12)
+                .observer(Box::new(trace));
+            if batched {
+                b = b.batched().batch(2);
+            }
+            let metrics = b.build().unwrap().run().unwrap();
+            let t = metrics.chains[0].tempering.clone().unwrap();
+            let out = events.lock().unwrap().clone();
+            (out, t.swap_rates(), t.round_trips)
+        };
+        let scalar = run(false);
+        let batched = run(true);
+        assert!(!scalar.0.is_empty(), "{wname}: no events");
+        assert_eq!(scalar.0, batched.0, "{wname}: tempered events diverged");
+        assert_eq!(scalar.1, batched.1, "{wname}: swap rates diverged");
+        assert_eq!(scalar.2, batched.2, "{wname}: round trips diverged");
+    }
+}
+
+#[test]
+fn tempered_accelerator_and_multicore_runs_complete() {
+    let m = PottsGrid::new(4, 4, 2, 0.6);
+    let ladder = Ladder::explicit(vec![0.5, 1.0]);
+    for multicore in [false, true] {
+        let mut b = Engine::for_model(&m)
+            .algo(AlgoKind::BlockGibbs)
+            .chains(2)
+            .steps(30)
+            .seed(5)
+            .tempering(ladder.clone())
+            .swap_every(5);
+        b = if multicore {
+            b.multicore(HwConfig::fig10_toy())
+        } else {
+            b.accelerator(HwConfig::fig10_toy())
+        };
+        let metrics = b.build().unwrap().run().unwrap();
+        assert_eq!(metrics.chains.len(), 2);
+        for c in &metrics.chains {
+            let rep = c.sim.as_ref().expect("sim report");
+            assert!(rep.cycles > 0);
+            assert_eq!(rep.iterations, 30);
+            let t = c.tempering.as_ref().expect("tempering report");
+            assert_eq!(t.rounds, 6);
+            assert!(t.pair_attempts[0] > 0);
+        }
+    }
+}
+
+// -------------------------------------------------- checkpoint resume
+
+#[test]
+fn temper_state_round_trips_through_builder_and_checkpoint() {
+    let m = PottsGrid::new(5, 5, 2, 0.7);
+    let build = |steps: usize| {
+        Engine::for_model(&m)
+            .algo(AlgoKind::Gibbs)
+            .chains(4)
+            .steps(steps)
+            .seed(33)
+            .tempering(ladder4())
+            .swap_every(5)
+            .temper_adapt(0.3)
+            .build()
+            .unwrap()
+    };
+    let mut engine = build(100);
+    let metrics = engine.run().unwrap();
+    let state = engine.temper_state().expect("tempered engine serializes state");
+    assert_eq!(state[0], 1.0, "one ensemble");
+
+    // Through the flat-JSON checkpoint.
+    let ck = Checkpoint {
+        seed: 33,
+        steps: 100,
+        best_objective: metrics.best_objective(),
+        best_x: metrics.chains[0].best_x.clone(),
+        anneal: None,
+        temper: Some(state.clone()),
+    };
+    let parsed = Checkpoint::from_json(&ck.to_json()).unwrap();
+    assert_eq!(parsed.temper.as_ref(), Some(&state));
+
+    // Through the builder: restoring reproduces the serialized state
+    // exactly (ladder, rung assignment, swap history, RNG position).
+    let resumed = Engine::for_model(&m)
+        .algo(AlgoKind::Gibbs)
+        .chains(4)
+        .steps(100)
+        .seed(33)
+        .tempering(ladder4())
+        .swap_every(5)
+        .temper_adapt(0.3)
+        .schedule_offset(100)
+        .temper_state(parsed.temper.clone().unwrap())
+        .build()
+        .unwrap();
+    assert_eq!(resumed.temper_state().unwrap(), state);
+
+    // Wrong-shape states are typed errors.
+    assert!(matches!(
+        Engine::for_model(&m)
+            .chains(4)
+            .tempering(ladder4())
+            .temper_state(vec![2.0, 1.0])
+            .build(),
+        Err(Mc2aError::InvalidConfig(_))
+    ));
+}
+
+#[test]
+fn resumed_tempered_run_continues_the_swap_clock() {
+    // The satellite's swap-schedule contract: swap rounds live on the
+    // *global* step clock, so a run split in half performs exactly as
+    // many swap rounds as the uninterrupted run — the tail rounds keep
+    // the even/odd parity sequence (pinned bit-exactly at the
+    // ReplicaExchange level in `mcmc::tempering`'s unit tests, where
+    // the same energy tail reproduces identical decisions).
+    let m = PottsGrid::new(5, 5, 2, 0.7);
+    let run_half = |steps: usize, offset: usize, state: Option<Vec<f64>>| {
+        let mut b = Engine::for_model(&m)
+            .algo(AlgoKind::Gibbs)
+            .chains(4)
+            .steps(steps)
+            .seed(71)
+            .tempering(ladder4())
+            .swap_every(7)
+            .schedule_offset(offset);
+        if let Some(s) = state {
+            b = b.temper_state(s);
+        }
+        let mut engine = b.build().unwrap();
+        engine.run().unwrap();
+        engine.temper_state().unwrap()
+    };
+    // Uninterrupted: 140 steps ⇒ 20 swap rounds.
+    let full = run_half(140, 0, None);
+    // Split: 70 + 70 with the state carried across. The first half's
+    // final segment (70 % 7 == 0) ends exactly on a boundary.
+    let first = run_half(70, 0, None);
+    let second = run_half(70, 70, Some(first));
+    // Same number of swap rounds on the global clock. (state[2] is the
+    // first ensemble's rounds counter: [ensembles, k, rounds, …].)
+    assert_eq!(full[2], 20.0, "uninterrupted rounds");
+    assert_eq!(second[2], 20.0, "resumed run lost swap rounds");
+}
+
+// ------------------------------------------- acceptance: time-to-best
+
+#[test]
+fn tempered_matches_single_beta_best_within_the_same_budget() {
+    // Acceptance: on at least one registry COP workload (seeded, small
+    // budget), replica exchange reaches the single-β run's best
+    // objective within the single-β run's own step budget. The
+    // baseline runs every chain at the cold target β — the greedy
+    // regime that freezes into local optima; the ladder's hot rungs
+    // exist to escape them.
+    let budget = 400usize;
+    let mut wins = Vec::new();
+    for wname in ["maxcut", "maxclique"] {
+        for seed in [3u64, 7, 11] {
+            let single = Engine::for_workload(wname)
+                .unwrap()
+                .algo(AlgoKind::Mh)
+                .schedule(BetaSchedule::Constant(4.0))
+                .steps(budget)
+                .chains(4)
+                .seed(seed)
+                .observe_every(20)
+                .build()
+                .unwrap()
+                .run()
+                .unwrap();
+            let tempered = Engine::for_workload(wname)
+                .unwrap()
+                .algo(AlgoKind::Mh)
+                .tempering(Ladder::geometric(0.2, 4.0, 4))
+                .swap_every(20)
+                .steps(budget)
+                .chains(4)
+                .seed(seed)
+                .build()
+                .unwrap()
+                .run()
+                .unwrap();
+            assert!(tempered.chains.iter().all(|c| c.steps == budget));
+            if tempered.best_objective() >= single.best_objective() {
+                wins.push((wname, seed));
+            }
+        }
+    }
+    assert!(
+        !wins.is_empty(),
+        "replica exchange never matched the single-β best within the budget"
+    );
+}
+
+#[test]
+fn adaptive_ladder_respacing_keeps_a_valid_ladder() {
+    let m = PottsGrid::new(5, 5, 2, 0.8);
+    let metrics = Engine::for_model(&m)
+        .algo(AlgoKind::Gibbs)
+        .chains(4)
+        .steps(300)
+        .seed(13)
+        .tempering(ladder4())
+        .swap_every(3)
+        .temper_adapt(0.3)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    let t = metrics.chains[0].tempering.as_ref().unwrap();
+    assert!(t.adapts >= 1, "re-spacing never fired");
+    // Endpoints pinned, interior re-spaced but still a valid ladder.
+    assert_eq!(t.betas[0], 0.25);
+    assert_eq!(t.betas[3], 2.0);
+    Ladder::explicit(t.betas.clone()).validate().unwrap();
+}
+
+// ---------------------------------------------- sampler-kind coverage
+
+#[test]
+fn tempering_works_with_every_batched_kernel() {
+    let m = PottsGrid::new(4, 4, 3, 0.5);
+    for (algo, sampler) in [
+        (AlgoKind::Gibbs, SamplerKind::Gumbel),
+        (AlgoKind::BlockGibbs, SamplerKind::Cdf),
+        (AlgoKind::Mh, SamplerKind::Gumbel),
+    ] {
+        let metrics = Engine::for_model(&m)
+            .algo(algo)
+            .sampler(sampler)
+            .chains(2)
+            .steps(40)
+            .seed(9)
+            .tempering(Ladder::explicit(vec![0.5, 1.5]))
+            .swap_every(4)
+            .batched()
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(metrics.chains.len(), 2);
+        assert!(metrics.chains[0].tempering.is_some(), "{algo:?}");
+    }
+}
