@@ -31,9 +31,30 @@ use crate::workloads::{self, Workload};
 /// Every bench name `mc2a bench` accepts, in the order `all` runs
 /// them (the `all` meta-name itself excluded).
 pub const BENCH_NAMES: &[&str] = &[
-    "fig5", "fig6", "fig11", "fig12", "fig13", "fig14", "fig15", "chains", "cores", "anneal",
-    "temper", "headline",
+    "fig5", "fig6", "fig11", "fig12", "fig13", "fig14", "fig15", "chains", "serve", "cores",
+    "anneal", "temper", "headline",
 ];
+
+/// Drop a machine-readable benchmark artifact (`BENCH_<name>.json`) at
+/// the repo root, so CI and successive PRs have a throughput trajectory
+/// to diff. The root is found by probing for `ROADMAP.md` in `.` then
+/// `..` (the crate lives one level below it); a missing root or a
+/// failed write degrades to a warning line — benches must not fail
+/// over artifact plumbing.
+fn write_bench_artifact(file: &str, json: &str) -> String {
+    let root = if std::path::Path::new("ROADMAP.md").exists() {
+        std::path::Path::new(".")
+    } else if std::path::Path::new("../ROADMAP.md").exists() {
+        std::path::Path::new("..")
+    } else {
+        return format!("(skipped {file}: repo root not found from {:?})", std::env::current_dir());
+    };
+    let path = root.join(file);
+    match std::fs::write(&path, json) {
+        Ok(()) => format!("wrote {}", path.display()),
+        Err(e) => format!("(failed to write {}: {e})", path.display()),
+    }
+}
 
 /// Table I: the workload suite, regenerated from the actual generators.
 pub fn table1(full: bool) -> String {
@@ -673,7 +694,82 @@ pub fn many_chains(quick: bool) -> Result<String, Mc2aError> {
             batched / scalar.max(1e-12)
         )
         .unwrap();
+        let json = format!(
+            "{{\"bench\":\"chains\",\"quick\":{quick},\"chains\":{chains},\"steps\":{steps},\
+             \"threads\":{threads},\
+             \"software_samples_per_sec\":{scalar},\"batched_samples_per_sec\":{batched},\
+             \"batched_speedup\":{:.4}}}\n",
+            batched / scalar.max(1e-12)
+        );
+        writeln!(out, "{}", write_bench_artifact("BENCH_chains.json", &json)).unwrap();
     }
+    Ok(out)
+}
+
+/// Job-server throughput: a mixed queue of three heterogeneous
+/// registry workloads (COP / Potts-MRF / Bayesian-network) at three
+/// priority classes, submitted up front and drained through one shared
+/// [`JobServer`] pool — reproducible with `mc2a bench serve`. Reports
+/// jobs/sec and chains/sec for the whole queue and emits
+/// `BENCH_serve.json`.
+///
+/// [`JobServer`]: crate::engine::JobServer
+pub fn serve_throughput(quick: bool) -> Result<String, Mc2aError> {
+    use crate::engine::{JobServer, JobSpec, Priority};
+    use std::time::{Duration, Instant};
+    let mut out = String::new();
+    let rounds = if quick { 3 } else { 8 };
+    // (workload, steps, chains): one COP, one Potts grid, one Bayesian
+    // network, sized so a quick run stays in seconds.
+    let mix: &[(&str, usize, usize)] =
+        &[("optsicom", 60, 2), ("imageseg", 6, 2), ("earthquake", 150, 2)];
+    let priorities = [Priority::Low, Priority::Normal, Priority::High];
+    let server = JobServer::in_memory(0);
+    let started = Instant::now();
+    let mut ids = Vec::new();
+    for round in 0..rounds {
+        for (k, &(workload, steps, chains)) in mix.iter().enumerate() {
+            let mut spec = JobSpec::new(workload);
+            spec.steps = steps;
+            spec.chains = chains;
+            spec.seed = 0x5E17 + (round * mix.len() + k) as u64;
+            spec.priority = priorities[(round + k) % priorities.len()];
+            ids.push((workload, server.submit(spec)?));
+        }
+    }
+    let mut total_chains = 0usize;
+    for &(_, id) in &ids {
+        total_chains += server.wait(id, Duration::from_secs(600))?.chains.len();
+    }
+    let wall = started.elapsed().as_secs_f64().max(1e-12);
+    let jobs = ids.len();
+    let jobs_per_sec = jobs as f64 / wall;
+    let chains_per_sec = total_chains as f64 / wall;
+    writeln!(
+        out,
+        "# job-server throughput — {jobs} mixed jobs ({} workloads × {rounds} rounds, \
+         3 priority classes) over {} pool threads",
+        mix.len(),
+        server.threads()
+    )
+    .unwrap();
+    writeln!(out, "jobs,chains,threads,wall_ms,jobs_per_sec,chains_per_sec").unwrap();
+    writeln!(
+        out,
+        "{jobs},{total_chains},{},{:.3},{jobs_per_sec:.2},{chains_per_sec:.2}",
+        server.threads(),
+        wall * 1e3,
+    )
+    .unwrap();
+    server.shutdown();
+    let json = format!(
+        "{{\"bench\":\"serve\",\"quick\":{quick},\"jobs\":{jobs},\"chains\":{total_chains},\
+         \"threads\":{},\"wall_ms\":{:.3},\
+         \"jobs_per_sec\":{jobs_per_sec},\"chains_per_sec\":{chains_per_sec}}}\n",
+        server.threads(),
+        wall * 1e3,
+    );
+    writeln!(out, "{}", write_bench_artifact("BENCH_serve.json", &json)).unwrap();
     Ok(out)
 }
 

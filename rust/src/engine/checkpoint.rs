@@ -45,6 +45,18 @@ pub struct Checkpoint {
     /// re-spaced) β ladder, chain→rung assignment and swap history;
     /// `None` on untempered runs.
     pub temper: Option<Vec<f64>>,
+    /// Canonical workload name the checkpoint was saved from. `None`
+    /// on checkpoints written before the metadata existed; when
+    /// present, [`crate::engine::EngineBuilder::init_from_checkpoint`]
+    /// rejects resuming under a different workload with a typed
+    /// [`Mc2aError::CheckpointMismatch`].
+    pub workload: Option<String>,
+    /// Sampler name ("cdf" / "gumbel" / "lut") the run used; checked
+    /// on resume like [`Checkpoint::workload`].
+    pub sampler: Option<String>,
+    /// Chain count of the saving run; checked on resume like
+    /// [`Checkpoint::workload`].
+    pub chains: Option<usize>,
 }
 
 impl Checkpoint {
@@ -80,6 +92,14 @@ impl Checkpoint {
                 out.push(']');
             }
         }
+        for (key, value) in [("workload", &self.workload), ("sampler", &self.sampler)] {
+            if let Some(value) = value {
+                write!(out, ",\"{key}\":\"{}\"", escape_json(value)).unwrap();
+            }
+        }
+        if let Some(chains) = self.chains {
+            write!(out, ",\"chains\":{chains}").unwrap();
+        }
         out.push('}');
         out
     }
@@ -109,6 +129,14 @@ impl Checkpoint {
         // respective controller existed (or on plain fixed-ramp runs).
         let anneal = optional_f64_array(s, "anneal")?;
         let temper = optional_f64_array(s, "temper")?;
+        let workload = optional_string_field(s, "workload")?;
+        let sampler = optional_string_field(s, "sampler")?;
+        let chains = match optional_scalar_field(s, "chains")? {
+            None => None,
+            Some(tok) => {
+                Some(tok.parse::<usize>().map_err(|e| bad("chains", &e.to_string()))?)
+            }
+        };
         Ok(Checkpoint {
             seed,
             steps,
@@ -116,6 +144,9 @@ impl Checkpoint {
             best_x,
             anneal,
             temper,
+            workload,
+            sampler,
+            chains,
         })
     }
 
@@ -135,12 +166,12 @@ impl Checkpoint {
     }
 }
 
-fn bad(key: &str, why: &str) -> Mc2aError {
+pub(crate) fn bad(key: &str, why: &str) -> Mc2aError {
     Mc2aError::Checkpoint(format!("field `{key}`: {why}"))
 }
 
 /// Parse an optional `"key":[f64,…]` field (None when absent).
-fn optional_f64_array(s: &str, key: &str) -> Result<Option<Vec<f64>>, Mc2aError> {
+pub(crate) fn optional_f64_array(s: &str, key: &str) -> Result<Option<Vec<f64>>, Mc2aError> {
     if !s.contains(&format!("\"{key}\"")) {
         return Ok(None);
     }
@@ -157,7 +188,7 @@ fn optional_f64_array(s: &str, key: &str) -> Result<Option<Vec<f64>>, Mc2aError>
 }
 
 /// Locate `"key":` and return the byte offset just past the colon.
-fn value_start(s: &str, key: &str) -> Result<usize, Mc2aError> {
+pub(crate) fn value_start(s: &str, key: &str) -> Result<usize, Mc2aError> {
     let pat = format!("\"{key}\"");
     let k = s.find(&pat).ok_or_else(|| bad(key, "missing"))?;
     let rest = &s[k + pat.len()..];
@@ -166,20 +197,253 @@ fn value_start(s: &str, key: &str) -> Result<usize, Mc2aError> {
 }
 
 /// Extract a numeric scalar field as a trimmed token.
-fn scalar_field<'a>(s: &'a str, key: &str) -> Result<&'a str, Mc2aError> {
+pub(crate) fn scalar_field<'a>(s: &'a str, key: &str) -> Result<&'a str, Mc2aError> {
     let start = value_start(s, key)?;
     let rest = &s[start..];
     let end = rest.find(|c| c == ',' || c == '}').ok_or_else(|| bad(key, "unterminated value"))?;
     Ok(rest[..end].trim())
 }
 
+/// [`scalar_field`] that distinguishes "absent" (Ok(None)) from
+/// "present but malformed" (Err).
+pub(crate) fn optional_scalar_field<'a>(
+    s: &'a str,
+    key: &str,
+) -> Result<Option<&'a str>, Mc2aError> {
+    if !s.contains(&format!("\"{key}\"")) {
+        return Ok(None);
+    }
+    scalar_field(s, key).map(Some)
+}
+
 /// Extract the inside of a `[...]` array field.
-fn array_field<'a>(s: &'a str, key: &str) -> Result<&'a str, Mc2aError> {
+pub(crate) fn array_field<'a>(s: &'a str, key: &str) -> Result<&'a str, Mc2aError> {
     let start = value_start(s, key)?;
     let rest = &s[start..];
     let open = rest.find('[').ok_or_else(|| bad(key, "missing `[`"))?;
     let close = rest[open..].find(']').ok_or_else(|| bad(key, "missing `]`"))?;
     Ok(&rest[open + 1..open + close])
+}
+
+/// Extract a `"key":"…"` string field, undoing [`escape_json`].
+pub(crate) fn string_field(s: &str, key: &str) -> Result<String, Mc2aError> {
+    let start = value_start(s, key)?;
+    let rest = s[start..].trim_start();
+    if !rest.starts_with('"') {
+        return Err(bad(key, "expected a string value"));
+    }
+    let mut out = String::new();
+    let mut escaped = false;
+    for c in rest[1..].chars() {
+        if escaped {
+            out.push(match c {
+                'n' => '\n',
+                't' => '\t',
+                'r' => '\r',
+                other => other, // covers \" \\ \/
+            });
+            escaped = false;
+        } else if c == '\\' {
+            escaped = true;
+        } else if c == '"' {
+            return Ok(out);
+        } else {
+            out.push(c);
+        }
+    }
+    Err(bad(key, "unterminated string"))
+}
+
+/// [`string_field`] that distinguishes "absent" from "malformed".
+pub(crate) fn optional_string_field(s: &str, key: &str) -> Result<Option<String>, Mc2aError> {
+    if !s.contains(&format!("\"{key}\"")) {
+        return Ok(None);
+    }
+    string_field(s, key).map(Some)
+}
+
+/// Escape a string for embedding in the flat JSON (the inverse of
+/// [`string_field`]'s unescaping; control characters beyond \n \t \r
+/// do not occur in the names we serialize).
+pub(crate) fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            other => out.push(other),
+        }
+    }
+    out
+}
+
+/// Extract the byte range of a `"key":{…}` object value (brace-depth
+/// matched; the values we nest contain no braces inside strings).
+pub(crate) fn object_field_range(s: &str, key: &str) -> Result<(usize, usize), Mc2aError> {
+    let start = value_start(s, key)?;
+    let open_rel = s[start..].find('{').ok_or_else(|| bad(key, "missing `{`"))?;
+    let open = start + open_rel;
+    let mut depth = 0usize;
+    for (i, c) in s[open..].char_indices() {
+        match c {
+            '{' => depth += 1,
+            '}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Ok((open, open + i + 1));
+                }
+            }
+            _ => {}
+        }
+    }
+    Err(bad(key, "unterminated object"))
+}
+
+/// Durable record of one job-server job: everything
+/// [`crate::engine::server::JobServer::recover`] needs to rebuild the
+/// job — the spec that shaped its [`crate::engine::ChainSpec`], the
+/// scheduling metadata (priority, backend, state), and a nested
+/// [`Checkpoint`] holding the best assignment seen so far.
+///
+/// Serialized as one more flat-ish JSON object: every envelope field
+/// first, the checkpoint object last. Written atomically by the
+/// server's persistence layer on submit, per-chain completion, and
+/// finalization.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobEnvelope {
+    /// Server-assigned job id (also the file name: `job-<id>.json`).
+    pub job_id: u64,
+    /// Canonical registry workload name.
+    pub workload: String,
+    /// Algorithm name, lowercase ("mh", "gibbs", "bg", "ag", "pas").
+    pub algo: String,
+    /// Sampler name ("cdf", "gumbel", "lut").
+    pub sampler: String,
+    /// Backend name ("sw" or "sim").
+    pub backend: String,
+    /// Priority class name ("low", "normal", "high").
+    pub priority: String,
+    /// Job state name at save time ("queued", "running", "done",
+    /// "cancelled", "failed"). Non-terminal states are re-run on
+    /// recovery; terminal ones are reloaded as finished.
+    pub state: String,
+    /// Per-chain step budget.
+    pub steps: usize,
+    /// Number of chains in the job.
+    pub chains: usize,
+    /// Observer cadence (steps between progress events).
+    pub observe_every: usize,
+    /// PAS proposal flips per step.
+    pub pas_flips: usize,
+    /// Chains that had fully completed when this envelope was saved.
+    pub chains_done: usize,
+    /// Base RNG seed (chain `i` forks stream `i`).
+    pub seed: u64,
+    /// Inverse temperature of the run's constant schedule.
+    pub beta: f64,
+    /// Best-so-far snapshot (seed/steps/best_x plus the run-shape
+    /// metadata fields used by resume-mismatch checking).
+    pub checkpoint: Checkpoint,
+}
+
+impl JobEnvelope {
+    /// Serialize: envelope fields first, nested checkpoint last.
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(256 + self.checkpoint.best_x.len() * 4);
+        write!(out, "{{\"job_id\":{}", self.job_id).unwrap();
+        for (key, value) in [
+            ("workload", &self.workload),
+            ("algo", &self.algo),
+            ("sampler", &self.sampler),
+            ("backend", &self.backend),
+            ("priority", &self.priority),
+            ("state", &self.state),
+        ] {
+            write!(out, ",\"{key}\":\"{}\"", escape_json(value)).unwrap();
+        }
+        for (key, value) in [
+            ("steps", self.steps),
+            ("chains", self.chains),
+            ("observe_every", self.observe_every),
+            ("pas_flips", self.pas_flips),
+            ("chains_done", self.chains_done),
+        ] {
+            write!(out, ",\"{key}\":{value}").unwrap();
+        }
+        write!(out, ",\"seed\":{},\"beta\":{}", self.seed, self.beta).unwrap();
+        out.push_str(",\"checkpoint\":");
+        out.push_str(&self.checkpoint.to_json());
+        out.push('}');
+        out
+    }
+
+    /// Parse the object produced by [`JobEnvelope::to_json`]. The
+    /// nested checkpoint shares key names with the envelope ("seed",
+    /// "steps", "chains", …), so the checkpoint object is carved out
+    /// first and the envelope scalars are parsed from what remains.
+    pub fn from_json(s: &str) -> Result<JobEnvelope, Mc2aError> {
+        let (open, end) = object_field_range(s, "checkpoint")?;
+        let checkpoint = Checkpoint::from_json(&s[open..end])?;
+        let head = format!("{}{}", &s[..open], &s[end..]);
+        let h = head.as_str();
+        let envelope = JobEnvelope {
+            job_id: scalar_field(h, "job_id")?
+                .parse::<u64>()
+                .map_err(|e| bad("job_id", &e.to_string()))?,
+            workload: string_field(h, "workload")?,
+            algo: string_field(h, "algo")?,
+            sampler: string_field(h, "sampler")?,
+            backend: string_field(h, "backend")?,
+            priority: string_field(h, "priority")?,
+            state: string_field(h, "state")?,
+            steps: scalar_field(h, "steps")?
+                .parse::<usize>()
+                .map_err(|e| bad("steps", &e.to_string()))?,
+            chains: scalar_field(h, "chains")?
+                .parse::<usize>()
+                .map_err(|e| bad("chains", &e.to_string()))?,
+            observe_every: scalar_field(h, "observe_every")?
+                .parse::<usize>()
+                .map_err(|e| bad("observe_every", &e.to_string()))?,
+            pas_flips: scalar_field(h, "pas_flips")?
+                .parse::<usize>()
+                .map_err(|e| bad("pas_flips", &e.to_string()))?,
+            chains_done: scalar_field(h, "chains_done")?
+                .parse::<usize>()
+                .map_err(|e| bad("chains_done", &e.to_string()))?,
+            seed: scalar_field(h, "seed")?
+                .parse::<u64>()
+                .map_err(|e| bad("seed", &e.to_string()))?,
+            beta: scalar_field(h, "beta")?
+                .parse::<f64>()
+                .map_err(|e| bad("beta", &e.to_string()))?,
+            checkpoint,
+        };
+        Ok(envelope)
+    }
+
+    /// Write the envelope to `path` (atomic: tmp file + rename, so a
+    /// crash mid-write never leaves a truncated envelope for
+    /// recovery to choke on).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), Mc2aError> {
+        let path = path.as_ref();
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, self.to_json())
+            .map_err(|e| Mc2aError::Checkpoint(format!("writing {}: {e}", tmp.display())))?;
+        std::fs::rename(&tmp, path)
+            .map_err(|e| Mc2aError::Checkpoint(format!("renaming to {}: {e}", path.display())))
+    }
+
+    /// Read an envelope from `path`.
+    pub fn load(path: impl AsRef<Path>) -> Result<JobEnvelope, Mc2aError> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Mc2aError::Checkpoint(format!("reading {}: {e}", path.display())))?;
+        JobEnvelope::from_json(&text)
+    }
 }
 
 #[cfg(test)]
@@ -195,6 +459,9 @@ mod tests {
             best_x: vec![0, 3, 1, 2, 0, 1],
             anneal: None,
             temper: None,
+            workload: None,
+            sampler: None,
+            chains: None,
         };
         let parsed = Checkpoint::from_json(&ck.to_json()).unwrap();
         assert_eq!(parsed, ck);
@@ -209,6 +476,9 @@ mod tests {
             best_x: vec![1, 0, 2],
             anneal: Some(vec![180.0, 400.0, 2.0, 1.0, 12.5, 3.0, 5.0, 0.0]),
             temper: None,
+            workload: None,
+            sampler: None,
+            chains: None,
         };
         let parsed = Checkpoint::from_json(&ck.to_json()).unwrap();
         assert_eq!(parsed, ck);
@@ -230,6 +500,9 @@ mod tests {
             best_x: vec![0, 1, 1],
             anneal: None,
             temper: Some(vec![1.0, 4.0, 25.0, 0.0, 0.25, 0.5, 1.0, 2.0]),
+            workload: None,
+            sampler: None,
+            chains: None,
         };
         let parsed = Checkpoint::from_json(&ck.to_json()).unwrap();
         assert_eq!(parsed, ck);
@@ -250,6 +523,25 @@ mod tests {
             best_x: Vec::new(),
             anneal: None,
             temper: None,
+            workload: None,
+            sampler: None,
+            chains: None,
+        };
+        assert_eq!(Checkpoint::from_json(&ck.to_json()).unwrap(), ck);
+    }
+
+    #[test]
+    fn run_shape_metadata_round_trips() {
+        let ck = Checkpoint {
+            seed: 3,
+            steps: 600,
+            best_objective: -4.5,
+            best_x: vec![1, 0],
+            anneal: None,
+            temper: None,
+            workload: Some("optsicom".into()),
+            sampler: Some("gumbel".into()),
+            chains: Some(4),
         };
         assert_eq!(Checkpoint::from_json(&ck.to_json()).unwrap(), ck);
     }
@@ -264,6 +556,11 @@ mod tests {
         assert_eq!(ck.steps, 7);
         assert_eq!(ck.best_objective, 3.5);
         assert_eq!(ck.best_x, vec![2, 0, 1]);
+        // Pre-metadata checkpoints still load; the run-shape fields
+        // just come back empty.
+        assert_eq!(ck.workload, None);
+        assert_eq!(ck.sampler, None);
+        assert_eq!(ck.chains, None);
     }
 
     #[test]
@@ -291,6 +588,9 @@ mod tests {
             best_x: vec![1, 1, 0],
             anneal: None,
             temper: None,
+            workload: None,
+            sampler: None,
+            chains: None,
         };
         let path = std::env::temp_dir().join("mc2a_checkpoint_test.json");
         ck.save(&path).unwrap();
@@ -301,5 +601,67 @@ mod tests {
             Checkpoint::load("/nonexistent/mc2a.json"),
             Err(Mc2aError::Checkpoint(_))
         ));
+    }
+
+    fn sample_envelope() -> JobEnvelope {
+        JobEnvelope {
+            job_id: 17,
+            workload: "optsicom".into(),
+            algo: "pas".into(),
+            sampler: "gumbel".into(),
+            backend: "sw".into(),
+            priority: "high".into(),
+            state: "running".into(),
+            steps: 500,
+            chains: 4,
+            observe_every: 25,
+            pas_flips: 4,
+            chains_done: 2,
+            seed: 99,
+            beta: 2.5,
+            checkpoint: Checkpoint {
+                seed: 99,
+                steps: 500,
+                best_objective: -12.75,
+                best_x: vec![0, 1, 1, 0],
+                anneal: None,
+                temper: None,
+                workload: Some("optsicom".into()),
+                sampler: Some("gumbel".into()),
+                chains: Some(4),
+            },
+        }
+    }
+
+    #[test]
+    fn job_envelope_round_trips() {
+        // The nested checkpoint reuses the envelope's key names
+        // ("seed", "steps", "chains") — the parse must keep the two
+        // scopes separate.
+        let env = sample_envelope();
+        let parsed = JobEnvelope::from_json(&env.to_json()).unwrap();
+        assert_eq!(parsed, env);
+        assert_eq!(parsed.checkpoint.chains, Some(4));
+        assert_eq!(parsed.steps, 500);
+    }
+
+    #[test]
+    fn job_envelope_file_round_trip_is_atomic_rename() {
+        let env = sample_envelope();
+        let path = std::env::temp_dir().join("mc2a_envelope_test.json");
+        env.save(&path).unwrap();
+        // The tmp file must be gone after a successful save.
+        assert!(!path.with_extension("json.tmp").exists());
+        let loaded = JobEnvelope::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(loaded, env);
+    }
+
+    #[test]
+    fn string_escapes_round_trip() {
+        let mut env = sample_envelope();
+        env.workload = "odd \"name\"\\with\nnoise".into();
+        let parsed = JobEnvelope::from_json(&env.to_json()).unwrap();
+        assert_eq!(parsed.workload, env.workload);
     }
 }

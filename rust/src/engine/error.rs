@@ -51,6 +51,29 @@ pub enum Mc2aError {
     /// The backend's whole-run coordinator panicked outside any
     /// single chain (e.g. while partitioning work items).
     BackendPanicked,
+    /// A job-server operation failed (job directory I/O, waiting
+    /// timed out, result requested before the job finished, …).
+    Server(String),
+    /// A malformed request or response line on the serve/client
+    /// newline-delimited JSON protocol.
+    Protocol(String),
+    /// The job id is not in the server's table.
+    UnknownJob {
+        /// The id that failed to resolve.
+        id: u64,
+    },
+    /// A `--init-from` checkpoint records a different run shape than
+    /// the one requested (workload, sampler, chain count, or model RV
+    /// count). Both sides are named so the fix is obvious.
+    CheckpointMismatch {
+        /// Which property disagrees ("workload", "sampler", "chains",
+        /// "model RVs").
+        what: String,
+        /// The requested run's value.
+        run: String,
+        /// The checkpoint's recorded value.
+        checkpoint: String,
+    },
 }
 
 impl fmt::Display for Mc2aError {
@@ -73,6 +96,15 @@ impl fmt::Display for Mc2aError {
             Mc2aError::BackendPanicked => {
                 write!(f, "backend run coordinator panicked outside any chain")
             }
+            Mc2aError::Server(msg) => write!(f, "job server error: {msg}"),
+            Mc2aError::Protocol(msg) => write!(f, "protocol error: {msg}"),
+            Mc2aError::UnknownJob { id } => write!(f, "unknown job id {id}"),
+            Mc2aError::CheckpointMismatch { what, run, checkpoint } => write!(
+                f,
+                "checkpoint does not match this run: {what} is {run} here but the \
+                 checkpoint records {checkpoint} (match the flags the checkpoint was \
+                 saved with, or drop --init-from)"
+            ),
         }
     }
 }
@@ -91,6 +123,17 @@ mod tests {
         };
         let s = e.to_string();
         assert!(s.contains("nope") && s.contains("earthquake") && s.contains("rbm"), "{s}");
+    }
+
+    #[test]
+    fn checkpoint_mismatch_names_both_sides() {
+        let e = Mc2aError::CheckpointMismatch {
+            what: "sampler".into(),
+            run: "cdf".into(),
+            checkpoint: "gumbel".into(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("sampler") && s.contains("cdf") && s.contains("gumbel"), "{s}");
     }
 
     #[test]

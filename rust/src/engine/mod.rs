@@ -34,7 +34,11 @@
 //!   returns typed [`Mc2aError`]s instead of panicking,
 //! * [`ChainObserver`] — streaming progress + convergence diagnostics
 //!   (split R-hat / ESS) with cooperative early stopping,
-//! * [`registry`] — the named-workload table the CLI and tests share.
+//! * [`registry`] — the named-workload table the CLI and tests share,
+//! * [`server`] — sampling-as-a-service: the persistent multi-tenant
+//!   [`server::JobServer`] that multiplexes many jobs over one shared
+//!   priority-aware pool, with checkpoint-backed crash recovery and a
+//!   std-only TCP front-end (`mc2a serve` / `mc2a client`).
 
 pub(crate) mod adaptive;
 pub mod backend;
@@ -44,6 +48,7 @@ pub mod error;
 pub mod observer;
 pub mod registry;
 pub mod scheduler;
+pub mod server;
 pub(crate) mod tempering;
 
 pub use backend::{
@@ -51,13 +56,17 @@ pub use backend::{
     RestartSignal, RuntimeBackend, SoftwareBackend,
 };
 pub use batched::BatchedSoftwareBackend;
-pub use checkpoint::Checkpoint;
+pub use checkpoint::{Checkpoint, JobEnvelope};
 pub use error::Mc2aError;
 pub use observer::{
-    ChainObserver, ConvergenceStop, DiagnosticsReport, NullObserver, ObserverAction,
-    PrintObserver, ProgressEvent,
+    event_stream, ChainObserver, ChannelObserver, ConvergenceStop, DiagnosticsReport,
+    EventStream, NullObserver, ObserverAction, PrintObserver, ProgressEvent, StreamEvent,
 };
 pub use registry::{WorkloadEntry, REGISTRY};
+pub use server::{
+    JobId, JobResult, JobServer, JobServerConfig, JobSpec, JobState, JobStatus, Priority,
+    ServeBackend,
+};
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -311,6 +320,44 @@ impl<'m> EngineBuilder<'m> {
     pub fn init_state(mut self, x0: Vec<u32>) -> Self {
         self.init_state = Some(x0);
         self
+    }
+
+    /// Resume from a saved [`Checkpoint`]: seed every chain with the
+    /// checkpoint's best assignment and continue the β-schedule clock
+    /// at its cumulative step count.
+    ///
+    /// The checkpoint's run-shape metadata (workload, sampler, chain
+    /// count — recorded by `--save-state` since the fields were added;
+    /// absent fields are not checked) must match this builder, and the
+    /// saved assignment must match the model's RV count; a mismatch is
+    /// a typed [`Mc2aError::CheckpointMismatch`] naming both sides
+    /// instead of a silent resume of the wrong run. Call after setting
+    /// the workload/model, sampler and chain count.
+    pub fn init_from_checkpoint(self, ck: &Checkpoint) -> Result<Self, Mc2aError> {
+        let mismatch = |what: &str, run: String, checkpoint: String| {
+            Err(Mc2aError::CheckpointMismatch { what: what.to_string(), run, checkpoint })
+        };
+        if let (Some(run), Some(saved)) = (self.workload, ck.workload.as_deref()) {
+            if !run.eq_ignore_ascii_case(saved) {
+                return mismatch("workload", run.to_string(), saved.to_string());
+            }
+        }
+        if let Some(saved) = ck.sampler.as_deref() {
+            let run = self.sampler.name();
+            if !run.eq_ignore_ascii_case(saved) {
+                return mismatch("sampler", run.to_string(), saved.to_string());
+            }
+        }
+        if let Some(saved) = ck.chains {
+            if self.chains != saved {
+                return mismatch("chains", self.chains.to_string(), saved.to_string());
+            }
+        }
+        let num_vars = self.model.get().num_vars();
+        if ck.best_x.len() != num_vars {
+            return mismatch("model RVs", num_vars.to_string(), ck.best_x.len().to_string());
+        }
+        Ok(self.init_state(ck.best_x.clone()).schedule_offset(ck.steps))
     }
 
     /// Streaming observer receiving progress and diagnostics callbacks.

@@ -10,6 +10,9 @@
 //! [`ObserverAction::Stop`] from any callback raises the shared stop
 //! flag, and every chain exits at its next observation boundary.
 
+use std::sync::mpsc;
+use std::time::Duration;
+
 use crate::coordinator::ChainResult;
 use crate::mcmc::{effective_sample_size, split_r_hat};
 
@@ -131,6 +134,96 @@ impl ChainObserver for ConvergenceStop {
     }
 }
 
+/// One item on an [`EventStream`]: the union of everything a run can
+/// report while it is alive, plus a terminal marker.
+#[derive(Clone, Debug)]
+pub enum StreamEvent {
+    /// A periodic per-chain progress sample.
+    Progress(ProgressEvent),
+    /// A completed cross-chain observation round.
+    Diagnostics(DiagnosticsReport),
+    /// The job reached a terminal state; no further events follow on
+    /// this stream. Emitted by [`crate::engine::server::JobServer`]
+    /// streams; plain engine runs end by disconnect instead (the
+    /// observer is dropped, so [`EventStream::recv`] returns `None`).
+    Done {
+        /// Terminal state name ("done", "cancelled", "failed").
+        state: String,
+        /// Best objective across all chains at the end.
+        best_objective: f64,
+    },
+}
+
+/// Receiving half of a diagnostics stream: a pull-based alternative to
+/// implementing [`ChainObserver`]. Create one with [`event_stream`],
+/// pass the paired [`ChannelObserver`] to
+/// [`crate::engine::EngineBuilder::observer`] (or get one from
+/// [`crate::engine::server::JobServer::stream`]), then drain events
+/// from any thread.
+pub struct EventStream {
+    rx: mpsc::Receiver<StreamEvent>,
+}
+
+impl EventStream {
+    /// Block until the next event; `None` once the producer is gone
+    /// (after `Done`, or if the run was dropped).
+    pub fn recv(&self) -> Option<StreamEvent> {
+        self.rx.recv().ok()
+    }
+
+    /// Like [`EventStream::recv`] with a deadline; `None` on timeout
+    /// or disconnect.
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<StreamEvent> {
+        self.rx.recv_timeout(timeout).ok()
+    }
+
+    /// Drain whatever is queued right now without blocking.
+    pub fn drain(&self) -> Vec<StreamEvent> {
+        self.rx.try_iter().collect()
+    }
+}
+
+impl Iterator for &EventStream {
+    type Item = StreamEvent;
+
+    fn next(&mut self) -> Option<StreamEvent> {
+        self.recv()
+    }
+}
+
+/// Observer that forwards every event into an [`EventStream`]. Send
+/// failures (the stream was dropped) are ignored — an abandoned
+/// listener must not stop the run.
+pub struct ChannelObserver {
+    tx: mpsc::Sender<StreamEvent>,
+}
+
+impl ChainObserver for ChannelObserver {
+    fn on_progress(&mut self, e: &ProgressEvent) -> ObserverAction {
+        let _ = self.tx.send(StreamEvent::Progress(*e));
+        ObserverAction::Continue
+    }
+
+    fn on_diagnostics(&mut self, d: &DiagnosticsReport) -> ObserverAction {
+        let _ = self.tx.send(StreamEvent::Diagnostics(*d));
+        ObserverAction::Continue
+    }
+}
+
+/// Build a connected ([`ChannelObserver`], [`EventStream`]) pair.
+pub fn event_stream() -> (ChannelObserver, EventStream) {
+    let (tx, rx) = mpsc::channel();
+    (ChannelObserver { tx }, EventStream { rx })
+}
+
+/// Stream with a bare sender — for producers (the job server) that
+/// push [`StreamEvent`]s directly instead of going through the
+/// [`ChainObserver`] trait.
+pub(crate) fn raw_stream() -> (mpsc::Sender<StreamEvent>, EventStream) {
+    let (tx, rx) = mpsc::channel();
+    (tx, EventStream { rx })
+}
+
 /// Per-run diagnostics bookkeeping: accumulates each chain's objective
 /// trace and emits a [`DiagnosticsReport`] whenever a new round (one
 /// observation from every chain) completes.
@@ -224,5 +317,24 @@ mod tests {
         };
         assert_eq!(obs.on_diagnostics(&converged(1)), ObserverAction::Continue);
         assert_eq!(obs.on_diagnostics(&converged(3)), ObserverAction::Stop);
+    }
+
+    #[test]
+    fn event_stream_forwards_and_ends_on_drop() {
+        let (mut obs, stream) = event_stream();
+        assert_eq!(obs.on_progress(&ev(0, 10, 1.0)), ObserverAction::Continue);
+        match stream.recv() {
+            Some(StreamEvent::Progress(p)) => assert_eq!(p.step, 10),
+            other => panic!("expected progress, got {other:?}"),
+        }
+        drop(obs);
+        assert!(stream.recv().is_none(), "stream ends when observer drops");
+    }
+
+    #[test]
+    fn abandoned_stream_does_not_stop_the_run() {
+        let (mut obs, stream) = event_stream();
+        drop(stream);
+        assert_eq!(obs.on_progress(&ev(0, 10, 1.0)), ObserverAction::Continue);
     }
 }

@@ -1,20 +1,33 @@
-//! A minimal work-stealing scheduler for chain work items.
+//! Work scheduling: the run-scoped work-stealing pool and the
+//! process-scoped multi-job pool.
 //!
-//! [`run_stealing`] multiplexes a static set of work items over a
-//! fixed pool of OS threads: items are dealt round-robin into
-//! per-worker deques, each worker drains its own deque front-to-back
-//! and, when empty, steals from the *back* of a victim's deque. Large
-//! items (e.g. a straggler batch on a slow core) therefore migrate to
-//! idle workers instead of serializing the tail of the run — the
-//! classic Blumofe–Leiserson discipline, here with mutex-guarded
-//! deques (items are coarse — whole chain batches — so queue
-//! operations are nowhere near the contention point).
+//! Two schedulers live here, one per lifetime:
 //!
-//! This is what lets the batched backend run 1024 chains on 8 cores
-//! with 8 threads instead of 1024.
+//! * [`run_stealing`] — **run-scoped**: multiplexes a static set of
+//!   work items over a pool of OS threads spawned for one call. Items
+//!   are dealt round-robin into per-worker deques, each worker drains
+//!   its own deque front-to-back and, when empty, steals from the
+//!   *back* of a victim's deque. Large items (e.g. a straggler batch
+//!   on a slow core) therefore migrate to idle workers instead of
+//!   serializing the tail of the run — the classic Blumofe–Leiserson
+//!   discipline, here with mutex-guarded deques (items are coarse —
+//!   whole chain batches — so queue operations are nowhere near the
+//!   contention point). This is what lets the batched backend run
+//!   1024 chains on 8 cores with 8 threads instead of 1024.
+//!
+//! * [`WorkPool`] — **process-scoped**: a fixed worker set that
+//!   outlives any single run and multiplexes tasks from *many jobs*
+//!   ([`crate::engine::server::JobServer`]). Every task carries a
+//!   [`TaskTag`] (job id + priority class); the pool always serves the
+//!   highest non-empty priority class and, within a class, deals tasks
+//!   round-robin *across jobs* (fair-share at task granularity), so a
+//!   100-task job cannot starve a 2-task neighbor of the same class.
+//!   Queued tasks of one job can be purged ([`WorkPool::cancel_job`])
+//!   without touching its already-running tasks.
 
-use std::collections::VecDeque;
-use std::sync::Mutex;
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 
 /// Run every item of `items` exactly once on a pool of `threads`
 /// workers. `f` receives `(worker_index, item)` and must be safe to
@@ -73,10 +86,217 @@ where
     });
 }
 
+/// Identity of a pool task: which job it belongs to and how urgent
+/// that job is. Higher `class` values are served strictly first
+/// (see [`crate::engine::server::Priority`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TaskTag {
+    /// Owning job id; tasks with the same id share one fair-share slot.
+    pub job: u64,
+    /// Priority class (higher runs first).
+    pub class: u8,
+}
+
+type PoolTask = Box<dyn FnOnce() + Send + 'static>;
+
+/// Tasks of one priority class: a round-robin rotation of job ids plus
+/// each job's FIFO of pending tasks. Invariant: `rotation` holds a job
+/// id exactly once iff that job has at least one queued task.
+#[derive(Default)]
+struct ClassQueue {
+    rotation: VecDeque<u64>,
+    tasks: HashMap<u64, VecDeque<PoolTask>>,
+}
+
+#[derive(Default)]
+struct PoolQueue {
+    /// class → queue; `BTreeMap` so workers can scan classes
+    /// highest-first.
+    classes: BTreeMap<u8, ClassQueue>,
+    shutdown: bool,
+}
+
+impl PoolQueue {
+    fn push(&mut self, tag: TaskTag, task: PoolTask) {
+        let cq = self.classes.entry(tag.class).or_default();
+        match cq.tasks.get_mut(&tag.job) {
+            Some(dq) => dq.push_back(task),
+            None => {
+                cq.tasks.insert(tag.job, VecDeque::from([task]));
+                cq.rotation.push_back(tag.job);
+            }
+        }
+    }
+
+    /// Next task: highest non-empty class, round-robin across its jobs.
+    fn pop_next(&mut self) -> Option<PoolTask> {
+        let class = *self.classes.iter().rev().find(|(_, cq)| !cq.rotation.is_empty())?.0;
+        let cq = self.classes.get_mut(&class).expect("class just found");
+        let job = cq.rotation.pop_front().expect("rotation non-empty");
+        let dq = cq.tasks.get_mut(&job).expect("rotation invariant");
+        let task = dq.pop_front().expect("rotation invariant");
+        if dq.is_empty() {
+            cq.tasks.remove(&job);
+        } else {
+            cq.rotation.push_back(job);
+        }
+        if cq.rotation.is_empty() {
+            self.classes.remove(&class);
+        }
+        Some(task)
+    }
+
+    fn purge_job(&mut self, job: u64) -> usize {
+        let mut purged = 0;
+        for cq in self.classes.values_mut() {
+            if let Some(dq) = cq.tasks.remove(&job) {
+                purged += dq.len();
+                cq.rotation.retain(|j| *j != job);
+            }
+        }
+        self.classes.retain(|_, cq| !cq.rotation.is_empty());
+        purged
+    }
+
+    fn pending(&self) -> usize {
+        self.classes
+            .values()
+            .flat_map(|cq| cq.tasks.values())
+            .map(VecDeque::len)
+            .sum()
+    }
+}
+
+struct PoolShared {
+    queue: Mutex<PoolQueue>,
+    available: Condvar,
+}
+
+/// Process-scoped worker pool with job-tagged tasks: spawned once,
+/// shared by every job a [`crate::engine::server::JobServer`] accepts
+/// over its lifetime. Scheduling is strict-priority across classes and
+/// round-robin across jobs within a class; see the module docs.
+///
+/// Dropping the pool (or calling [`WorkPool::shutdown`]) abandons
+/// still-queued tasks, lets running tasks finish, and joins the
+/// workers. A task that panics is contained to that task; the worker
+/// thread survives.
+pub struct WorkPool {
+    shared: Arc<PoolShared>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    threads: usize,
+}
+
+impl WorkPool {
+    /// Spawn a pool of `threads` workers (min 1).
+    pub fn new(threads: usize) -> WorkPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(PoolQueue::default()),
+            available: Condvar::new(),
+        });
+        let workers = (0..threads)
+            .map(|w| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("mc2a-pool-{w}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        WorkPool {
+            shared,
+            workers: Mutex::new(workers),
+            threads,
+        }
+    }
+
+    /// Worker count the pool was built with.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Enqueue one task under `tag`. Tasks submitted after
+    /// [`WorkPool::shutdown`] are dropped silently (the closure's
+    /// destructor runs; the body never does).
+    pub fn submit(&self, tag: TaskTag, task: impl FnOnce() + Send + 'static) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            if q.shutdown {
+                return;
+            }
+            q.push(tag, Box::new(task));
+        }
+        self.shared.available.notify_one();
+    }
+
+    /// Drop every *queued* task of `job` (running tasks are untouched;
+    /// the caller stops those through its own job-level flag). Returns
+    /// how many tasks were purged — the caller needs the exact count
+    /// to settle its completion accounting.
+    pub fn cancel_job(&self, job: u64) -> usize {
+        self.shared.queue.lock().unwrap().purge_job(job)
+    }
+
+    /// Tasks queued but not yet started, across all jobs.
+    pub fn pending(&self) -> usize {
+        self.shared.queue.lock().unwrap().pending()
+    }
+
+    /// Stop accepting work, abandon the queue, finish running tasks,
+    /// and join every worker. Idempotent.
+    pub fn shutdown(&self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+            q.classes.clear(); // queued tasks are dropped, not run
+        }
+        self.shared.available.notify_all();
+        let workers: Vec<JoinHandle<()>> = self.workers.lock().unwrap().drain(..).collect();
+        for w in workers {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for WorkPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(shared: &PoolShared) {
+    loop {
+        let task = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(t) = q.pop_next() {
+                    break Some(t);
+                }
+                if q.shutdown {
+                    break None;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        match task {
+            // A panicking task must not take the worker (and with it
+            // every future job) down; the owning job maps the panic to
+            // a typed error through its own bookkeeping.
+            Some(t) => {
+                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(t));
+            }
+            None => return,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::mpsc;
+    use std::time::Duration;
 
     #[test]
     fn every_item_runs_exactly_once() {
@@ -116,5 +336,161 @@ mod tests {
     #[test]
     fn worker_indices_are_in_range() {
         run_stealing(3, (0..32).collect(), |w, _i: usize| assert!(w < 3));
+    }
+
+    #[test]
+    fn uneven_task_costs_all_complete() {
+        // Costs cycle through 0..17ms with no structure aligned to the
+        // round-robin deal: every item must still run exactly once.
+        let hits: Vec<AtomicUsize> = (0..40).map(|_| AtomicUsize::new(0)).collect();
+        run_stealing(4, (0..40).collect(), |_w, i: usize| {
+            std::thread::sleep(Duration::from_millis((i * 3 % 17) as u64));
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "item {i}");
+        }
+    }
+
+    #[test]
+    fn more_tasks_than_threads_spread_across_workers() {
+        // 48 tasks on 3 threads, the first one a straggler: workers 1
+        // and 2 must drain their own deques (and steal worker 0's tail)
+        // while worker 0 sleeps — so at least two distinct worker
+        // indices appear, and no index exceeds the pool size.
+        let by_worker: Vec<AtomicUsize> = (0..3).map(|_| AtomicUsize::new(0)).collect();
+        let done = AtomicUsize::new(0);
+        run_stealing(3, (0..48).collect(), |w, i: usize| {
+            if i == 0 {
+                std::thread::sleep(Duration::from_millis(40));
+            }
+            by_worker[w].fetch_add(1, Ordering::Relaxed);
+            done.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(done.load(Ordering::Relaxed), 48);
+        let active = by_worker.iter().filter(|c| c.load(Ordering::Relaxed) > 0).count();
+        assert!(active >= 2, "no stealing happened: {by_worker:?}");
+    }
+
+    #[test]
+    fn results_are_independent_of_thread_count() {
+        // The determinism pin behind the process-scoped lift: per-item
+        // work depends only on the item, so any thread count yields
+        // bit-identical outputs.
+        use std::sync::atomic::AtomicU64;
+        let compute = |i: u64| {
+            // xorshift64* — cheap, but wrong anywhere the item id leaks
+            // scheduling state into the value.
+            let mut x = i.wrapping_add(0x9E3779B97F4A7C15);
+            x ^= x >> 12;
+            x ^= x << 25;
+            x ^= x >> 27;
+            x.wrapping_mul(0x2545F4914F6CDD1D)
+        };
+        let run = |threads: usize| -> Vec<u64> {
+            let out: Vec<AtomicU64> = (0..64).map(|_| AtomicU64::new(0)).collect();
+            run_stealing(threads, (0..64).collect(), |_w, i: u64| {
+                out[i as usize].store(compute(i), Ordering::Relaxed);
+            });
+            out.into_iter().map(|a| a.into_inner()).collect()
+        };
+        let single = run(1);
+        assert_eq!(run(3), single);
+        assert_eq!(run(8), single);
+    }
+
+    /// Gate that holds the pool's single worker busy so tests can
+    /// stage a queue deterministically before anything else runs.
+    fn gated_pool() -> (WorkPool, mpsc::Sender<()>) {
+        let pool = WorkPool::new(1);
+        let (open, gate) = mpsc::channel::<()>();
+        pool.submit(TaskTag { job: u64::MAX, class: 255 }, move || {
+            let _ = gate.recv();
+        });
+        // Make sure the worker picked the gate up before callers queue
+        // behind it.
+        while pool.pending() > 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        (pool, open)
+    }
+
+    #[test]
+    fn pool_serves_higher_priority_class_first() {
+        let (pool, open) = gated_pool();
+        let (tx, rx) = mpsc::channel::<u64>();
+        for job in [1u64, 2, 3] {
+            let tx = tx.clone();
+            pool.submit(TaskTag { job, class: 0 }, move || tx.send(job).unwrap());
+        }
+        let tx_hi = tx.clone();
+        pool.submit(TaskTag { job: 9, class: 2 }, move || tx_hi.send(9).unwrap());
+        open.send(()).unwrap();
+        let order: Vec<u64> = (0..4).map(|_| rx.recv().unwrap()).collect();
+        assert_eq!(order[0], 9, "high-priority task did not jump the queue: {order:?}");
+    }
+
+    #[test]
+    fn pool_round_robins_jobs_within_a_class() {
+        let (pool, open) = gated_pool();
+        let (tx, rx) = mpsc::channel::<u64>();
+        // Job 1 enqueues all three tasks before job 2 shows up; fair
+        // sharing must still interleave them 1,2,1,2,… once both wait.
+        for job in [1u64, 1, 1, 2, 2, 2] {
+            let tx = tx.clone();
+            pool.submit(TaskTag { job, class: 1 }, move || tx.send(job).unwrap());
+        }
+        open.send(()).unwrap();
+        let order: Vec<u64> = (0..6).map(|_| rx.recv().unwrap()).collect();
+        assert_eq!(order, vec![1, 2, 1, 2, 1, 2], "not fair-shared: {order:?}");
+    }
+
+    #[test]
+    fn pool_cancel_purges_only_the_target_job() {
+        let (pool, open) = gated_pool();
+        let (tx, rx) = mpsc::channel::<u64>();
+        for job in [1u64, 1, 2, 1] {
+            let tx = tx.clone();
+            pool.submit(TaskTag { job, class: 1 }, move || tx.send(job).unwrap());
+        }
+        assert_eq!(pool.cancel_job(1), 3);
+        assert_eq!(pool.pending(), 1);
+        open.send(()).unwrap();
+        assert_eq!(rx.recv().unwrap(), 2);
+        // All of job 1's tasks are gone: the channel drains empty once
+        // job 2's lone task is through.
+        drop(tx);
+        assert!(rx.recv().is_err());
+    }
+
+    #[test]
+    fn pool_task_panic_does_not_kill_the_worker() {
+        let pool = WorkPool::new(1);
+        let (tx, rx) = mpsc::channel::<u32>();
+        pool.submit(TaskTag { job: 1, class: 1 }, || panic!("task bug"));
+        pool.submit(TaskTag { job: 2, class: 1 }, move || tx.send(7).unwrap());
+        assert_eq!(rx.recv_timeout(Duration::from_secs(10)).unwrap(), 7);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn pool_shutdown_drops_queued_tasks_and_joins() {
+        let (pool, open) = gated_pool();
+        let ran = Arc::new(AtomicUsize::new(0));
+        for job in 1..=4u64 {
+            let ran = Arc::clone(&ran);
+            pool.submit(TaskTag { job, class: 1 }, move || {
+                ran.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        open.send(()).unwrap();
+        pool.shutdown();
+        // The gate task was running; everything queued behind it may or
+        // may not have started before the shutdown flag landed, but
+        // after shutdown() returns nothing runs anymore.
+        let settled = ran.load(Ordering::Relaxed);
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(ran.load(Ordering::Relaxed), settled);
+        assert_eq!(pool.pending(), 0);
     }
 }

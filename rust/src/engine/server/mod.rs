@@ -1,0 +1,1060 @@
+//! Sampling-as-a-service: a persistent, multi-tenant job server.
+//!
+//! A [`JobServer`] lifts the run-scoped engine into a long-lived,
+//! process-scoped service: many heterogeneous jobs (different
+//! workloads, algorithms, samplers, backends, budgets) are multiplexed
+//! over ONE shared [`crate::engine::scheduler::WorkPool`] with strict
+//! priority classes and per-job round-robin fair sharing. Each job's
+//! chains are the pool's work items — and because chain `i` always
+//! draws from `Rng::fork(seed, i)`, a job's results are bit-identical
+//! to running the same spec solo through [`crate::engine::Engine`],
+//! no matter how its chains interleave with other tenants'.
+//!
+//! The server surfaces five operations — [`JobServer::submit`],
+//! [`JobServer::status`], [`JobServer::stream`] (live
+//! [`StreamEvent`]s), [`JobServer::cancel`], [`JobServer::result`] —
+//! plus [`JobServer::wait`] for blocking callers.
+//!
+//! **Durability.** With a job directory configured, every submit,
+//! chain completion and state change persists a
+//! [`crate::engine::checkpoint::JobEnvelope`] (and per-chain result
+//! records). [`JobServer::recover`] rebuilds the job table from disk:
+//! terminal jobs reload their records, in-flight jobs re-run exactly
+//! the chains that had not completed — deterministically, so the
+//! recovered result is bit-identical to an uninterrupted run. Because
+//! the trajectory is a pure function of `(model, spec, chain_id)`,
+//! recovery may even resume on a *different* backend
+//! ([`JobServer::recover_with`] with a [`ServeBackend`] override).
+//!
+//! The TCP front-end lives in [`net`] (newline-delimited JSON, see
+//! [`proto`]); the CLI's `mc2a serve` / `mc2a client` wrap it.
+
+pub mod net;
+mod persist;
+pub mod proto;
+
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::ChainResult;
+use crate::energy::EnergyModel;
+use crate::engine::backend::{
+    AcceleratorBackend, ChainCtx, ChainSpec, ExecutionBackend, SoftwareBackend,
+};
+use crate::engine::checkpoint::{Checkpoint, JobEnvelope};
+use crate::engine::error::Mc2aError;
+use crate::engine::observer::{
+    raw_stream, DiagnosticsReport, DiagnosticsTracker, EventStream, ProgressEvent, StreamEvent,
+};
+use crate::engine::registry;
+use crate::engine::scheduler::{TaskTag, WorkPool};
+use crate::isa::HwConfig;
+use crate::mcmc::{AlgoKind, BetaSchedule, SamplerKind};
+
+/// Server-assigned job identifier (monotone from 1).
+pub type JobId = u64;
+
+/// Scheduling priority class. The pool serves classes strictly
+/// (everything `High` before anything `Normal` before anything `Low`)
+/// and round-robins one chain at a time across the jobs inside a
+/// class.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Priority {
+    /// Background work: runs only when nothing else is queued.
+    Low,
+    /// The default.
+    Normal,
+    /// Jumps every queued `Normal`/`Low` chain.
+    High,
+}
+
+impl Priority {
+    /// The pool class this priority maps to (higher serves first).
+    pub(crate) fn class(self) -> u8 {
+        match self {
+            Priority::Low => 0,
+            Priority::Normal => 1,
+            Priority::High => 2,
+        }
+    }
+
+    /// Wire/CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        }
+    }
+
+    /// Parse a wire/CLI name.
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s.to_ascii_lowercase().as_str() {
+            "low" => Some(Priority::Low),
+            "normal" => Some(Priority::Normal),
+            "high" => Some(Priority::High),
+            _ => None,
+        }
+    }
+}
+
+/// Life-cycle state of a job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    /// Accepted; chains waiting for pool slots (also the persisted
+    /// state of a job interrupted by server shutdown — resumable).
+    Queued,
+    /// At least one chain has started.
+    Running,
+    /// Every chain completed its full step budget.
+    Done,
+    /// Cancelled by the client; completed chains are kept.
+    Cancelled,
+    /// A chain returned an error or panicked.
+    Failed,
+}
+
+impl JobState {
+    /// Wire/CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Cancelled => "cancelled",
+            JobState::Failed => "failed",
+        }
+    }
+
+    /// Parse a wire/CLI name.
+    pub fn parse(s: &str) -> Option<JobState> {
+        match s.to_ascii_lowercase().as_str() {
+            "queued" => Some(JobState::Queued),
+            "running" => Some(JobState::Running),
+            "done" => Some(JobState::Done),
+            "cancelled" => Some(JobState::Cancelled),
+            "failed" => Some(JobState::Failed),
+            _ => None,
+        }
+    }
+
+    /// Terminal states stop changing and have a result.
+    pub fn is_terminal(self) -> bool {
+        matches!(self, JobState::Done | JobState::Cancelled | JobState::Failed)
+    }
+}
+
+/// Which execution backend a job's chains run on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeBackend {
+    /// Thread-per-chain software MCMC ([`SoftwareBackend`]).
+    Software,
+    /// Cycle-accurate accelerator simulator with the paper-default
+    /// hardware ([`AcceleratorBackend`]).
+    Accelerator,
+}
+
+impl ServeBackend {
+    /// Wire/CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ServeBackend::Software => "sw",
+            ServeBackend::Accelerator => "sim",
+        }
+    }
+
+    /// Parse a wire/CLI name.
+    pub fn parse(s: &str) -> Option<ServeBackend> {
+        match s.to_ascii_lowercase().as_str() {
+            "sw" | "software" => Some(ServeBackend::Software),
+            "sim" | "accel" | "accelerator" => Some(ServeBackend::Accelerator),
+            _ => None,
+        }
+    }
+}
+
+/// Everything needed to run one job: the workload, the run shape, and
+/// the scheduling metadata.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    /// Registry workload name (or a free-form label for
+    /// [`JobServer::submit_custom`] jobs).
+    pub workload: String,
+    /// Algorithm override; `None` uses the workload's Table I pairing.
+    pub algo: Option<AlgoKind>,
+    /// Categorical sampler.
+    pub sampler: SamplerKind,
+    /// Steps per chain.
+    pub steps: usize,
+    /// Number of chains.
+    pub chains: usize,
+    /// Base RNG seed; chain `i` draws stream `i`.
+    pub seed: u64,
+    /// Inverse temperature (constant schedule).
+    pub beta: f32,
+    /// Execution backend.
+    pub backend: ServeBackend,
+    /// Scheduling priority class.
+    pub priority: Priority,
+    /// Progress-event cadence in steps; 0 means the engine default
+    /// (`steps / 20`, at least 1).
+    pub observe_every: usize,
+    /// PAS path length override; `None` uses the workload's value.
+    pub pas_flips: Option<usize>,
+}
+
+impl JobSpec {
+    /// A spec with the same defaults as the CLI's `run` subcommand.
+    pub fn new(workload: impl Into<String>) -> JobSpec {
+        JobSpec {
+            workload: workload.into(),
+            algo: None,
+            sampler: SamplerKind::Gumbel,
+            steps: 200,
+            chains: 1,
+            seed: 1,
+            beta: 1.0,
+            backend: ServeBackend::Software,
+            priority: Priority::Normal,
+            observe_every: 0,
+            pas_flips: None,
+        }
+    }
+}
+
+/// Point-in-time snapshot of one job.
+#[derive(Clone, Debug)]
+pub struct JobStatus {
+    /// Job id.
+    pub id: JobId,
+    /// Canonical workload name (or custom label).
+    pub workload: String,
+    /// Current life-cycle state.
+    pub state: JobState,
+    /// Scheduling class.
+    pub priority: Priority,
+    /// Execution backend.
+    pub backend: ServeBackend,
+    /// Algorithm actually running.
+    pub algo: AlgoKind,
+    /// Total chains.
+    pub chains: usize,
+    /// Chains that completed their full budget.
+    pub chains_done: usize,
+    /// Per-chain step budget.
+    pub steps: usize,
+    /// Steps observed so far, summed over chains.
+    pub steps_done: usize,
+    /// Best objective seen so far (−∞ before the first observation).
+    pub best_objective: f64,
+    /// Latest cross-chain split R-hat, when a diagnostics round has
+    /// completed.
+    pub r_hat: Option<f64>,
+    /// First chain error, for `Failed` jobs.
+    pub error: Option<String>,
+}
+
+/// Final outcome of a terminal job.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    /// Job id.
+    pub id: JobId,
+    /// Terminal state ([`JobState::Done`] / `Cancelled` / `Failed`).
+    pub state: JobState,
+    /// Best objective across completed chains.
+    pub best_objective: f64,
+    /// Completed chains (all of them for `Done`; the subset that
+    /// finished before the stop for `Cancelled`).
+    pub chains: Vec<ChainResult>,
+    /// First chain error, for `Failed` jobs.
+    pub error: Option<String>,
+}
+
+/// Construction parameters for [`JobServer::new`].
+#[derive(Clone, Debug, Default)]
+pub struct JobServerConfig {
+    /// Pool worker threads; 0 means `available_parallelism`.
+    pub threads: usize,
+    /// Job directory for durability; `None` runs in memory only.
+    pub dir: Option<PathBuf>,
+}
+
+struct Job {
+    spec: JobSpec,
+    algo: AlgoKind,
+    cspec: ChainSpec,
+    durable: bool,
+    state: JobState,
+    cancelled: bool,
+    stop: Arc<AtomicBool>,
+    /// Chains still owed a [`chain_finished`] call (queued or running).
+    pending: usize,
+    results: Vec<Option<ChainResult>>,
+    steps_done: Vec<usize>,
+    best_objective: f64,
+    tracker: DiagnosticsTracker,
+    last_diag: Option<DiagnosticsReport>,
+    subs: Vec<Sender<StreamEvent>>,
+    error: Option<String>,
+}
+
+struct Inner {
+    pool: WorkPool,
+    jobs: Mutex<BTreeMap<JobId, Job>>,
+    /// Signalled whenever a job reaches a terminal state.
+    done: Condvar,
+    next_id: AtomicU64,
+    dir: Option<PathBuf>,
+    closing: AtomicBool,
+}
+
+/// The job server. Cheap to clone (all clones share one pool and one
+/// job table); the TCP front-end hands a clone to every connection.
+#[derive(Clone)]
+pub struct JobServer {
+    inner: Arc<Inner>,
+}
+
+impl JobServer {
+    /// Start a server. Creates the job directory if configured.
+    pub fn new(cfg: JobServerConfig) -> Result<JobServer, Mc2aError> {
+        if let Some(dir) = &cfg.dir {
+            std::fs::create_dir_all(dir).map_err(|e| {
+                Mc2aError::Server(format!("creating job dir {}: {e}", dir.display()))
+            })?;
+        }
+        let threads = if cfg.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        } else {
+            cfg.threads
+        };
+        Ok(JobServer {
+            inner: Arc::new(Inner {
+                pool: WorkPool::new(threads),
+                jobs: Mutex::new(BTreeMap::new()),
+                done: Condvar::new(),
+                next_id: AtomicU64::new(1),
+                dir: cfg.dir,
+                closing: AtomicBool::new(false),
+            }),
+        })
+    }
+
+    /// An in-memory server (no durability) — the library-embedding and
+    /// test entry point.
+    pub fn in_memory(threads: usize) -> JobServer {
+        JobServer::new(JobServerConfig { threads, dir: None })
+            .expect("in-memory server construction cannot fail")
+    }
+
+    /// Rebuild a server from a job directory: terminal jobs reload
+    /// their results, interrupted jobs re-run exactly their missing
+    /// chains (bit-identical to an uninterrupted run).
+    pub fn recover(dir: impl Into<PathBuf>) -> Result<JobServer, Mc2aError> {
+        JobServer::recover_with(
+            JobServerConfig { threads: 0, dir: Some(dir.into()) },
+            None,
+        )
+    }
+
+    /// [`JobServer::recover`] with full config and an optional backend
+    /// override — resume every recovered job on `backend` regardless
+    /// of what it originally ran on (results are backend-independent).
+    pub fn recover_with(
+        cfg: JobServerConfig,
+        backend: Option<ServeBackend>,
+    ) -> Result<JobServer, Mc2aError> {
+        let dir = cfg
+            .dir
+            .clone()
+            .ok_or_else(|| Mc2aError::Server("recover requires a job directory".into()))?;
+        let server = JobServer::new(cfg)?;
+        let mut envelopes = persist::load_envelopes(&dir)?;
+        envelopes.sort_by_key(|e| e.job_id);
+        let mut max_id = 0;
+        for env in envelopes {
+            max_id = max_id.max(env.job_id);
+            server.restore_job(env, backend, &dir)?;
+        }
+        server.inner.next_id.store(max_id + 1, Ordering::SeqCst);
+        Ok(server)
+    }
+
+    /// Submit a registry workload. Returns the job id immediately;
+    /// chains run as pool slots free up.
+    pub fn submit(&self, mut spec: JobSpec) -> Result<JobId, Mc2aError> {
+        let entry = registry::find(&spec.workload).ok_or_else(|| Mc2aError::UnknownWorkload {
+            name: spec.workload.clone(),
+            known: registry::names().iter().map(|s| s.to_string()).collect(),
+        })?;
+        let wl = entry.build();
+        spec.workload = entry.name.to_string();
+        let algo = spec.algo.unwrap_or(wl.algorithm);
+        if spec.pas_flips.is_none() {
+            spec.pas_flips = Some(wl.pas_flips);
+        }
+        let model: Arc<dyn EnergyModel> = Arc::from(wl.model);
+        let id = self.inner.next_id.fetch_add(1, Ordering::SeqCst);
+        self.install(id, spec, algo, model, true, Vec::new())?;
+        Ok(id)
+    }
+
+    /// Submit a caller-supplied model under a free-form label. Custom
+    /// jobs are not persisted (the model cannot be rebuilt from disk),
+    /// so they do not survive restart.
+    pub fn submit_custom(
+        &self,
+        label: impl Into<String>,
+        model: Arc<dyn EnergyModel>,
+        mut spec: JobSpec,
+    ) -> Result<JobId, Mc2aError> {
+        spec.workload = label.into();
+        let algo = spec.algo.unwrap_or(AlgoKind::Gibbs);
+        if spec.pas_flips.is_none() {
+            spec.pas_flips = Some(1);
+        }
+        let id = self.inner.next_id.fetch_add(1, Ordering::SeqCst);
+        self.install(id, spec, algo, model, false, Vec::new())?;
+        Ok(id)
+    }
+
+    /// Snapshot one job.
+    pub fn status(&self, id: JobId) -> Result<JobStatus, Mc2aError> {
+        let jobs = self.inner.jobs.lock().unwrap();
+        let job = jobs.get(&id).ok_or(Mc2aError::UnknownJob { id })?;
+        Ok(status_of(id, job))
+    }
+
+    /// Snapshot every job, in id order.
+    pub fn status_all(&self) -> Vec<JobStatus> {
+        let jobs = self.inner.jobs.lock().unwrap();
+        jobs.iter().map(|(id, job)| status_of(*id, job)).collect()
+    }
+
+    /// Cancel a job: queued chains are purged from the pool, running
+    /// chains stop at their next observation boundary. Already-terminal
+    /// jobs are left untouched. Returns the state after the call.
+    pub fn cancel(&self, id: JobId) -> Result<JobState, Mc2aError> {
+        // Purge the pool first — the pool lock and the job-table lock
+        // are never held together.
+        let purged = self.inner.pool.cancel_job(id);
+        let mut jobs = self.inner.jobs.lock().unwrap();
+        let job = jobs.get_mut(&id).ok_or(Mc2aError::UnknownJob { id })?;
+        if job.state.is_terminal() {
+            return Ok(job.state);
+        }
+        job.cancelled = true;
+        job.stop.store(true, Ordering::SeqCst);
+        job.pending = job.pending.saturating_sub(purged);
+        if job.pending == 0 {
+            finalize_locked(&self.inner, id, job);
+            self.inner.done.notify_all();
+        }
+        Ok(job.state)
+    }
+
+    /// The final result of a terminal job; an error while it is still
+    /// queued or running (poll [`JobServer::status`] or use
+    /// [`JobServer::wait`]).
+    pub fn result(&self, id: JobId) -> Result<JobResult, Mc2aError> {
+        let jobs = self.inner.jobs.lock().unwrap();
+        let job = jobs.get(&id).ok_or(Mc2aError::UnknownJob { id })?;
+        if !job.state.is_terminal() {
+            return Err(Mc2aError::Server(format!(
+                "job {id} is not finished (state {})",
+                job.state.name()
+            )));
+        }
+        Ok(result_of(id, job))
+    }
+
+    /// Block until the job reaches a terminal state (or `timeout`).
+    pub fn wait(&self, id: JobId, timeout: Duration) -> Result<JobResult, Mc2aError> {
+        let deadline = Instant::now() + timeout;
+        let mut jobs = self.inner.jobs.lock().unwrap();
+        loop {
+            match jobs.get(&id) {
+                None => return Err(Mc2aError::UnknownJob { id }),
+                Some(job) if job.state.is_terminal() => return Ok(result_of(id, job)),
+                Some(_) if self.inner.closing.load(Ordering::SeqCst) => {
+                    return Err(Mc2aError::Server(format!(
+                        "server shut down before job {id} finished"
+                    )));
+                }
+                Some(_) => {}
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(Mc2aError::Server(format!("timed out waiting for job {id}")));
+            }
+            let (guard, _) = self.inner.done.wait_timeout(jobs, deadline - now).unwrap();
+            jobs = guard;
+        }
+    }
+
+    /// Subscribe to a job's live diagnostics. Terminal jobs yield one
+    /// immediate [`StreamEvent::Done`]; live jobs stream progress and
+    /// diagnostics until they finish.
+    pub fn stream(&self, id: JobId) -> Result<EventStream, Mc2aError> {
+        let (tx, stream) = raw_stream();
+        let mut jobs = self.inner.jobs.lock().unwrap();
+        let job = jobs.get_mut(&id).ok_or(Mc2aError::UnknownJob { id })?;
+        if job.state.is_terminal() {
+            let _ = tx.send(StreamEvent::Done {
+                state: job.state.name().to_string(),
+                best_objective: job.best_objective,
+            });
+        } else {
+            job.subs.push(tx);
+        }
+        Ok(stream)
+    }
+
+    /// Graceful stop: reject new submits, drop queued chains, let
+    /// running chains exit at their next boundary, join the pool, and
+    /// persist every interrupted durable job as `queued` so
+    /// [`JobServer::recover`] resumes it. Idempotent.
+    pub fn shutdown(&self) {
+        self.inner.closing.store(true, Ordering::SeqCst);
+        {
+            let jobs = self.inner.jobs.lock().unwrap();
+            for job in jobs.values() {
+                job.stop.store(true, Ordering::SeqCst);
+            }
+        }
+        self.inner.pool.shutdown();
+        let mut jobs = self.inner.jobs.lock().unwrap();
+        for (&id, job) in jobs.iter_mut() {
+            if !job.state.is_terminal() {
+                // Queued tasks were dropped with the pool queue; no
+                // chain_finished call is coming for them.
+                job.pending = 0;
+                finalize_locked(&self.inner, id, job);
+            }
+        }
+        self.inner.done.notify_all();
+    }
+
+    /// Worker-thread count of the shared pool.
+    pub fn threads(&self) -> usize {
+        self.inner.pool.threads()
+    }
+
+    fn restore_job(
+        &self,
+        env: JobEnvelope,
+        backend: Option<ServeBackend>,
+        dir: &Path,
+    ) -> Result<(), Mc2aError> {
+        let broken = |what: &str, value: &str| {
+            Mc2aError::Server(format!("recovering job {}: bad {what} `{value}`", env.job_id))
+        };
+        let state = JobState::parse(&env.state).ok_or_else(|| broken("state", &env.state))?;
+        let algo = AlgoKind::parse(&env.algo).ok_or_else(|| broken("algo", &env.algo))?;
+        let sampler =
+            SamplerKind::parse(&env.sampler).ok_or_else(|| broken("sampler", &env.sampler))?;
+        let priority =
+            Priority::parse(&env.priority).ok_or_else(|| broken("priority", &env.priority))?;
+        let backend = match backend {
+            Some(b) => b,
+            None => ServeBackend::parse(&env.backend)
+                .ok_or_else(|| broken("backend", &env.backend))?,
+        };
+        let entry = registry::find(&env.workload).ok_or_else(|| Mc2aError::UnknownWorkload {
+            name: env.workload.clone(),
+            known: registry::names().iter().map(|s| s.to_string()).collect(),
+        })?;
+        let wl = entry.build();
+        let model: Arc<dyn EnergyModel> = Arc::from(wl.model);
+        let spec = JobSpec {
+            workload: entry.name.to_string(),
+            algo: Some(algo),
+            sampler,
+            steps: env.steps,
+            chains: env.chains,
+            seed: env.seed,
+            beta: env.beta as f32,
+            backend,
+            priority,
+            observe_every: env.observe_every,
+            pas_flips: Some(env.pas_flips),
+        };
+        let preloaded = persist::load_chains(dir, env.job_id, env.chains, env.steps)?;
+        if state.is_terminal() {
+            self.insert_finished(env.job_id, spec, algo, state, preloaded)
+        } else {
+            self.install(env.job_id, spec, algo, model, true, preloaded)
+        }
+    }
+
+    /// Re-insert a terminal recovered job so status/result still answer
+    /// for it — without scheduling anything.
+    fn insert_finished(
+        &self,
+        id: JobId,
+        spec: JobSpec,
+        algo: AlgoKind,
+        state: JobState,
+        results: Vec<Option<ChainResult>>,
+    ) -> Result<(), Mc2aError> {
+        let cspec = chain_spec_of(&spec, algo);
+        let best_objective = results
+            .iter()
+            .flatten()
+            .map(|c| c.best_objective)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let steps_done = results.iter().map(|r| r.as_ref().map_or(0, |c| c.steps)).collect();
+        let job = Job {
+            tracker: DiagnosticsTracker::new(spec.chains),
+            spec,
+            algo,
+            cspec,
+            durable: true,
+            state,
+            cancelled: state == JobState::Cancelled,
+            stop: Arc::new(AtomicBool::new(true)),
+            pending: 0,
+            results,
+            steps_done,
+            best_objective,
+            last_diag: None,
+            subs: Vec::new(),
+            error: None,
+        };
+        let mut jobs = self.inner.jobs.lock().unwrap();
+        if jobs.insert(id, job).is_some() {
+            return Err(Mc2aError::Server(format!("duplicate job id {id}")));
+        }
+        Ok(())
+    }
+
+    /// Validate a spec, persist its envelope, insert it into the table
+    /// and enqueue its missing chains. `preloaded` carries recovered
+    /// chain results (empty on fresh submits).
+    fn install(
+        &self,
+        id: JobId,
+        mut spec: JobSpec,
+        algo: AlgoKind,
+        model: Arc<dyn EnergyModel>,
+        durable: bool,
+        preloaded: Vec<Option<ChainResult>>,
+    ) -> Result<(), Mc2aError> {
+        if self.inner.closing.load(Ordering::SeqCst) {
+            return Err(Mc2aError::Server("server is shutting down".into()));
+        }
+        if spec.chains == 0 {
+            return Err(Mc2aError::InvalidConfig("chains must be ≥ 1".into()));
+        }
+        if spec.steps == 0 {
+            return Err(Mc2aError::InvalidConfig("steps must be ≥ 1".into()));
+        }
+        let schedule = BetaSchedule::Constant(spec.beta);
+        schedule.validate().map_err(Mc2aError::InvalidConfig)?;
+        if spec.observe_every == 0 {
+            // Mirror EngineBuilder's default so server jobs are
+            // bit-identical to solo runs of the same flags.
+            spec.observe_every = (spec.steps / 20).max(1);
+        }
+        let backend: Arc<dyn ExecutionBackend> = match spec.backend {
+            ServeBackend::Software => Arc::new(SoftwareBackend),
+            ServeBackend::Accelerator => {
+                let hw = HwConfig::paper_default();
+                hw.validate().map_err(Mc2aError::InvalidHardware)?;
+                Arc::new(AcceleratorBackend::new(hw))
+            }
+        };
+        let cspec = chain_spec_of(&spec, algo);
+        let mut results = preloaded;
+        results.resize(spec.chains, None);
+        let missing: Vec<usize> =
+            (0..spec.chains).filter(|&c| results[c].is_none()).collect();
+        let best_objective = results
+            .iter()
+            .flatten()
+            .map(|c| c.best_objective)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let steps_done =
+            results.iter().map(|r| r.as_ref().map_or(0, |c| c.steps)).collect();
+        let stop = Arc::new(AtomicBool::new(false));
+        let class = spec.priority.class();
+        let job = Job {
+            tracker: DiagnosticsTracker::new(spec.chains),
+            spec,
+            algo,
+            cspec: cspec.clone(),
+            durable,
+            state: if missing.is_empty() { JobState::Done } else { JobState::Queued },
+            cancelled: false,
+            stop: Arc::clone(&stop),
+            pending: missing.len(),
+            results,
+            steps_done,
+            best_objective,
+            last_diag: None,
+            subs: Vec::new(),
+            error: None,
+        };
+        if durable {
+            if let Some(dir) = &self.inner.dir {
+                // Persist before the first chain can run, so a crash at
+                // any later point finds a resumable envelope on disk.
+                envelope_of(id, &job).save(persist::envelope_path(dir, id))?;
+            }
+        }
+        let done_already = missing.is_empty();
+        {
+            let mut jobs = self.inner.jobs.lock().unwrap();
+            if jobs.insert(id, job).is_some() {
+                return Err(Mc2aError::Server(format!("duplicate job id {id}")));
+            }
+        }
+        if done_already {
+            self.inner.done.notify_all();
+            return Ok(());
+        }
+        let (tx, rx) = mpsc::channel::<ProgressEvent>();
+        let pump_inner = Arc::clone(&self.inner);
+        std::thread::Builder::new()
+            .name(format!("mc2a-job-{id}"))
+            .spawn(move || pump_events(&pump_inner, id, rx))
+            .map_err(|e| Mc2aError::Server(format!("spawning event pump: {e}")))?;
+        for chain in missing {
+            let inner = Arc::clone(&self.inner);
+            let model = Arc::clone(&model);
+            let backend = Arc::clone(&backend);
+            let cspec = cspec.clone();
+            let stop = Arc::clone(&stop);
+            let tx = tx.clone();
+            self.inner.pool.submit(TaskTag { job: id, class }, move || {
+                run_chain_task(&inner, id, chain, &model, &backend, &cspec, &stop, tx);
+            });
+        }
+        // Drop the original sender: the pump exits once the last chain
+        // task's clone is gone.
+        drop(tx);
+        Ok(())
+    }
+}
+
+/// The [`ChainSpec`] a spec maps to — shared by submit, recovery and
+/// the finished-job path so all three agree bit-for-bit.
+fn chain_spec_of(spec: &JobSpec, algo: AlgoKind) -> ChainSpec {
+    ChainSpec {
+        algo,
+        sampler: spec.sampler,
+        schedule: BetaSchedule::Constant(spec.beta),
+        beta_offset: 0,
+        steps: spec.steps,
+        seed: spec.seed,
+        pas_flips: spec.pas_flips.unwrap_or(1).max(1),
+        observe_every: spec.observe_every,
+        init_state: None,
+    }
+}
+
+fn status_of(id: JobId, job: &Job) -> JobStatus {
+    JobStatus {
+        id,
+        workload: job.spec.workload.clone(),
+        state: job.state,
+        priority: job.spec.priority,
+        backend: job.spec.backend,
+        algo: job.algo,
+        chains: job.spec.chains,
+        chains_done: job.results.iter().flatten().count(),
+        steps: job.cspec.steps,
+        steps_done: job.steps_done.iter().sum(),
+        best_objective: job.best_objective,
+        r_hat: job.last_diag.and_then(|d| d.r_hat),
+        error: job.error.clone(),
+    }
+}
+
+fn result_of(id: JobId, job: &Job) -> JobResult {
+    JobResult {
+        id,
+        state: job.state,
+        best_objective: job.best_objective,
+        chains: job.results.iter().flatten().cloned().collect(),
+        error: job.error.clone(),
+    }
+}
+
+/// One pool task: run one chain to completion (or to the stop flag).
+#[allow(clippy::too_many_arguments)]
+fn run_chain_task(
+    inner: &Arc<Inner>,
+    id: JobId,
+    chain: usize,
+    model: &Arc<dyn EnergyModel>,
+    backend: &Arc<dyn ExecutionBackend>,
+    cspec: &ChainSpec,
+    stop: &Arc<AtomicBool>,
+    tx: Sender<ProgressEvent>,
+) {
+    if stop.load(Ordering::SeqCst) {
+        chain_finished(inner, id, chain, None);
+        return;
+    }
+    mark_running(inner, id);
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        let ctx = ChainCtx { stop: &**stop, events: Some(tx), restart: None };
+        backend.run_chain(model.as_ref(), cspec, chain, &ctx)
+    }));
+    let res = match outcome {
+        Ok(r) => r,
+        Err(_) => Err(Mc2aError::ChainPanicked { chain_id: chain }),
+    };
+    chain_finished(inner, id, chain, Some(res));
+}
+
+fn mark_running(inner: &Inner, id: JobId) {
+    let mut jobs = inner.jobs.lock().unwrap();
+    if let Some(job) = jobs.get_mut(&id) {
+        if job.state == JobState::Queued {
+            job.state = JobState::Running;
+        }
+    }
+}
+
+/// Bookkeeping for one finished (or skipped) chain task. `None` means
+/// the task never ran (stop flag was already up).
+fn chain_finished(
+    inner: &Arc<Inner>,
+    id: JobId,
+    chain: usize,
+    res: Option<Result<ChainResult, Mc2aError>>,
+) {
+    let mut jobs = inner.jobs.lock().unwrap();
+    let Some(job) = jobs.get_mut(&id) else { return };
+    if job.state.is_terminal() {
+        // A cancel/shutdown already finalized this job while the task
+        // was in flight.
+        return;
+    }
+    job.pending = job.pending.saturating_sub(1);
+    match res {
+        Some(Ok(r)) if r.steps == job.cspec.steps => {
+            job.steps_done[chain] = r.steps;
+            job.best_objective = job.best_objective.max(r.best_objective);
+            if job.durable {
+                if let Some(dir) = &inner.dir {
+                    if let Err(e) = persist::save_chain(dir, id, &r) {
+                        eprintln!("mc2a serve: persisting job {id} chain {chain}: {e}");
+                    }
+                }
+            }
+            job.results[chain] = Some(r);
+        }
+        Some(Ok(_partial)) => {
+            // Stopped early (cancel or shutdown): discard — recovery
+            // re-runs the chain from step 0 for bit-identical results.
+        }
+        Some(Err(e)) => {
+            if job.error.is_none() {
+                job.error = Some(e.to_string());
+            }
+            // Fail fast: siblings exit at their next boundary, queued
+            // siblings see the flag before starting.
+            job.stop.store(true, Ordering::SeqCst);
+        }
+        None => {}
+    }
+    if job.pending == 0 {
+        finalize_locked(inner, id, job);
+        inner.done.notify_all();
+    }
+}
+
+/// Move a job with no outstanding chain tasks to its resting state,
+/// notify stream subscribers, and persist the final envelope.
+fn finalize_locked(inner: &Inner, id: JobId, job: &mut Job) {
+    let complete = job.results.iter().all(Option::is_some);
+    job.state = if job.cancelled {
+        JobState::Cancelled
+    } else if job.error.is_some() {
+        JobState::Failed
+    } else if complete {
+        JobState::Done
+    } else {
+        // Interrupted by server shutdown: stays resumable on disk.
+        JobState::Queued
+    };
+    let event = StreamEvent::Done {
+        state: job.state.name().to_string(),
+        best_objective: job.best_objective,
+    };
+    for sub in job.subs.drain(..) {
+        let _ = sub.send(event.clone());
+    }
+    if job.durable {
+        if let Some(dir) = &inner.dir {
+            if let Err(e) = envelope_of(id, job).save(persist::envelope_path(dir, id)) {
+                eprintln!("mc2a serve: persisting job {id} envelope: {e}");
+            }
+        }
+    }
+}
+
+/// The durable record of a job's current shape and progress.
+fn envelope_of(id: JobId, job: &Job) -> JobEnvelope {
+    let best = job.results.iter().flatten().max_by(|a, b| {
+        a.best_objective
+            .partial_cmp(&b.best_objective)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let checkpoint = Checkpoint {
+        seed: job.cspec.seed,
+        steps: best.map_or(0, |c| c.steps),
+        best_objective: best.map_or(f64::NEG_INFINITY, |c| c.best_objective),
+        best_x: best.map(|c| c.best_x.clone()).unwrap_or_default(),
+        anneal: None,
+        temper: None,
+        workload: Some(job.spec.workload.clone()),
+        sampler: Some(job.cspec.sampler.name().to_string()),
+        chains: Some(job.spec.chains),
+    };
+    JobEnvelope {
+        job_id: id,
+        workload: job.spec.workload.clone(),
+        algo: job.algo.name().to_ascii_lowercase(),
+        sampler: job.cspec.sampler.name().to_string(),
+        backend: job.spec.backend.name().to_string(),
+        priority: job.spec.priority.name().to_string(),
+        state: job.state.name().to_string(),
+        steps: job.cspec.steps,
+        chains: job.spec.chains,
+        observe_every: job.cspec.observe_every,
+        pas_flips: job.cspec.pas_flips,
+        chains_done: job.results.iter().flatten().count(),
+        seed: job.cspec.seed,
+        beta: job.spec.beta as f64,
+        checkpoint,
+    }
+}
+
+/// Per-job event pump: folds chain progress into the job's status
+/// fields and forwards events to stream subscribers. One thread per
+/// live job; exits when every chain task has dropped its sender.
+fn pump_events(inner: &Inner, id: JobId, rx: mpsc::Receiver<ProgressEvent>) {
+    while let Ok(event) = rx.recv() {
+        let mut jobs = inner.jobs.lock().unwrap();
+        let Some(job) = jobs.get_mut(&id) else { break };
+        if let Some(slot) = job.steps_done.get_mut(event.chain_id) {
+            *slot = (*slot).max(event.step);
+        }
+        job.best_objective = job.best_objective.max(event.best_objective);
+        let diag = job.tracker.record(&event);
+        if let Some(d) = diag {
+            job.last_diag = Some(d);
+        }
+        if !job.subs.is_empty() {
+            let forward = StreamEvent::Progress(event);
+            job.subs.retain(|sub| sub.send(forward.clone()).is_ok());
+            if let Some(d) = diag {
+                let forward = StreamEvent::Diagnostics(d);
+                job.subs.retain(|sub| sub.send(forward.clone()).is_ok());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_spec(workload: &str, steps: usize, chains: usize, seed: u64) -> JobSpec {
+        let mut spec = JobSpec::new(workload);
+        spec.steps = steps;
+        spec.chains = chains;
+        spec.seed = seed;
+        spec
+    }
+
+    #[test]
+    fn submit_wait_result_round_trip() {
+        let server = JobServer::in_memory(2);
+        let id = server.submit(quick_spec("earthquake", 60, 2, 5)).unwrap();
+        let result = server.wait(id, Duration::from_secs(60)).unwrap();
+        assert_eq!(result.state, JobState::Done);
+        assert_eq!(result.chains.len(), 2);
+        let status = server.status(id).unwrap();
+        assert_eq!(status.chains_done, 2);
+        assert_eq!(status.steps_done, 120);
+        server.shutdown();
+    }
+
+    #[test]
+    fn unknown_workload_and_unknown_job_are_typed() {
+        let server = JobServer::in_memory(1);
+        assert!(matches!(
+            server.submit(JobSpec::new("nope")),
+            Err(Mc2aError::UnknownWorkload { .. })
+        ));
+        assert!(matches!(server.status(99), Err(Mc2aError::UnknownJob { id: 99 })));
+        assert!(matches!(server.cancel(99), Err(Mc2aError::UnknownJob { id: 99 })));
+        server.shutdown();
+    }
+
+    #[test]
+    fn result_before_terminal_is_an_error() {
+        let server = JobServer::in_memory(1);
+        let mut spec = quick_spec("earthquake", 50_000, 1, 5);
+        spec.observe_every = 50;
+        let id = server.submit(spec).unwrap();
+        // Either still queued/running (the common case) or already
+        // done on a fast machine — only the non-terminal path must
+        // error.
+        match server.result(id) {
+            Err(Mc2aError::Server(msg)) => assert!(msg.contains("not finished"), "{msg}"),
+            Ok(r) => assert_eq!(r.state, JobState::Done),
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+        server.cancel(id).unwrap();
+        server.wait(id, Duration::from_secs(60)).unwrap();
+        server.shutdown();
+    }
+
+    #[test]
+    fn stream_ends_with_done_event() {
+        let server = JobServer::in_memory(2);
+        let mut spec = quick_spec("earthquake", 100, 2, 5);
+        spec.observe_every = 10;
+        let id = server.submit(spec).unwrap();
+        let stream = server.stream(id).unwrap();
+        let mut saw_progress = false;
+        let mut last = None;
+        while let Some(ev) = stream.recv_timeout(Duration::from_secs(60)) {
+            match &ev {
+                StreamEvent::Progress(_) => saw_progress = true,
+                StreamEvent::Done { .. } => {
+                    last = Some(ev);
+                    break;
+                }
+                StreamEvent::Diagnostics(_) => {}
+            }
+        }
+        assert!(saw_progress, "expected at least one progress event");
+        match last {
+            Some(StreamEvent::Done { state, .. }) => assert_eq!(state, "done"),
+            other => panic!("expected Done, got {other:?}"),
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_rejects_new_submits() {
+        let server = JobServer::in_memory(1);
+        server.shutdown();
+        assert!(matches!(
+            server.submit(quick_spec("earthquake", 10, 1, 1)),
+            Err(Mc2aError::Server(_))
+        ));
+    }
+}

@@ -1,0 +1,230 @@
+//! TCP front-end for the job server: one thread per connection,
+//! newline-delimited JSON ([`super::proto`]) over `std::net` — no
+//! async runtime.
+//!
+//! Each request line gets one response line, except:
+//!
+//! * `stream` — the connection becomes a one-way event feed and closes
+//!   after the job's `done` event;
+//! * `shutdown` — the server acknowledges, stops accepting, drains the
+//!   pool (persisting interrupted jobs as resumable) and the accept
+//!   loop returns.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::proto::{self, Request};
+use super::{JobId, JobServer};
+use crate::engine::error::Mc2aError;
+use crate::engine::observer::StreamEvent;
+
+/// Bind and serve until a client sends `shutdown`. Blocks the calling
+/// thread for the server's lifetime.
+pub fn serve(server: JobServer, addr: &str) -> Result<(), Mc2aError> {
+    let listener = TcpListener::bind(addr)
+        .map_err(|e| Mc2aError::Server(format!("binding {addr}: {e}")))?;
+    serve_on(server, listener)
+}
+
+/// [`serve`] over an already-bound listener (tests bind port 0 and
+/// read the assigned address back).
+pub fn serve_on(server: JobServer, listener: TcpListener) -> Result<(), Mc2aError> {
+    let local = listener
+        .local_addr()
+        .map_err(|e| Mc2aError::Server(format!("reading local addr: {e}")))?;
+    eprintln!("mc2a serve: listening on {local}");
+    let stop_accept = Arc::new(AtomicBool::new(false));
+    let mut conns = Vec::new();
+    for stream in listener.incoming() {
+        if stop_accept.load(Ordering::SeqCst) {
+            break;
+        }
+        match stream {
+            Ok(sock) => {
+                let server = server.clone();
+                let stop_accept = Arc::clone(&stop_accept);
+                conns.push(std::thread::spawn(move || {
+                    handle_conn(server, sock, &stop_accept, local);
+                }));
+            }
+            Err(e) => eprintln!("mc2a serve: accept failed: {e}"),
+        }
+    }
+    for conn in conns {
+        let _ = conn.join();
+    }
+    Ok(())
+}
+
+fn handle_conn(
+    server: JobServer,
+    mut sock: TcpStream,
+    stop_accept: &AtomicBool,
+    local: SocketAddr,
+) {
+    let Ok(read_half) = sock.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => return,
+            Ok(_) => {}
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        match proto::parse_request(trimmed) {
+            Ok(Request::Stream { job }) => {
+                stream_events(&server, job, &mut sock);
+                return;
+            }
+            Ok(Request::Shutdown) => {
+                let _ = writeln!(sock, "{}", proto::ok_shutdown());
+                stop_accept.store(true, Ordering::SeqCst);
+                server.shutdown();
+                // Wake the accept loop so it observes the flag.
+                let _ = TcpStream::connect(local);
+                return;
+            }
+            Ok(req) => {
+                if writeln!(sock, "{}", handle_request(&server, req)).is_err() {
+                    return;
+                }
+            }
+            Err(e) => {
+                if writeln!(sock, "{}", proto::err_line(&e)).is_err() {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+fn handle_request(server: &JobServer, req: Request) -> String {
+    match req {
+        Request::Submit(spec) => match server.submit(spec) {
+            Ok(id) => proto::ok_submit(id),
+            Err(e) => proto::err_line(&e),
+        },
+        Request::Status { job: Some(id) } => match server.status(id) {
+            Ok(status) => proto::ok_status(std::slice::from_ref(&status)),
+            Err(e) => proto::err_line(&e),
+        },
+        Request::Status { job: None } => proto::ok_status(&server.status_all()),
+        Request::Result { job } => match server.result(job) {
+            Ok(result) => proto::ok_result(&result),
+            Err(e) => proto::err_line(&e),
+        },
+        Request::Cancel { job } => match server.cancel(job) {
+            Ok(state) => proto::ok_cancel(job, state.name()),
+            Err(e) => proto::err_line(&e),
+        },
+        Request::Ping => proto::ok_ping(),
+        // Stream and Shutdown never reach here; the connection loop
+        // intercepts them.
+        Request::Stream { .. } | Request::Shutdown => {
+            proto::err_line(&Mc2aError::Protocol("request handled by connection loop".into()))
+        }
+    }
+}
+
+fn stream_events(server: &JobServer, job: JobId, sock: &mut TcpStream) {
+    match server.stream(job) {
+        Ok(stream) => {
+            while let Some(ev) = stream.recv() {
+                let done = matches!(ev, StreamEvent::Done { .. });
+                if writeln!(sock, "{}", proto::event_line(&ev)).is_err() {
+                    return;
+                }
+                if done {
+                    return;
+                }
+            }
+        }
+        Err(e) => {
+            let _ = writeln!(sock, "{}", proto::err_line(&e));
+        }
+    }
+}
+
+/// Connect, retrying every 250 ms up to `retries` times — the CLI uses
+/// this to tolerate a daemon that is still binding its port.
+pub fn connect_with_retry(addr: &str, retries: u32) -> Result<TcpStream, Mc2aError> {
+    let mut attempt = 0;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(sock) => return Ok(sock),
+            Err(_) if attempt < retries => {
+                attempt += 1;
+                std::thread::sleep(Duration::from_millis(250));
+            }
+            Err(e) => {
+                return Err(Mc2aError::Server(format!("connecting to {addr}: {e}")));
+            }
+        }
+    }
+}
+
+/// One request line in, one response line out.
+pub fn client_request(addr: &str, line: &str, retries: u32) -> Result<String, Mc2aError> {
+    let mut sock = connect_with_retry(addr, retries)?;
+    writeln!(sock, "{line}")
+        .map_err(|e| Mc2aError::Server(format!("sending to {addr}: {e}")))?;
+    let mut reader = BufReader::new(sock);
+    let mut response = String::new();
+    reader
+        .read_line(&mut response)
+        .map_err(|e| Mc2aError::Server(format!("reading from {addr}: {e}")))?;
+    if response.is_empty() {
+        return Err(Mc2aError::Server(format!("{addr} closed the connection")));
+    }
+    Ok(response.trim_end().to_string())
+}
+
+/// Send one request line, then feed every response line to `on_line`
+/// until it returns `false` or the server closes the feed.
+pub fn client_stream(
+    addr: &str,
+    line: &str,
+    mut on_line: impl FnMut(&str) -> bool,
+) -> Result<(), Mc2aError> {
+    let mut sock = connect_with_retry(addr, 0)?;
+    writeln!(sock, "{line}")
+        .map_err(|e| Mc2aError::Server(format!("sending to {addr}: {e}")))?;
+    let mut reader = BufReader::new(sock);
+    let mut buf = String::new();
+    loop {
+        buf.clear();
+        let n = reader
+            .read_line(&mut buf)
+            .map_err(|e| Mc2aError::Server(format!("reading from {addr}: {e}")))?;
+        if n == 0 || !on_line(buf.trim_end()) {
+            return Ok(());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ping_and_shutdown_round_trip_over_loopback() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = JobServer::in_memory(1);
+        let handle = std::thread::spawn(move || serve_on(server, listener));
+        let pong = client_request(&addr, &proto::ping_line(), 4).unwrap();
+        assert!(proto::response_is_ok(&pong), "{pong}");
+        let bad = client_request(&addr, "not json", 0).unwrap();
+        assert_eq!(proto::response_kind(&bad).as_deref(), Some("protocol"));
+        let bye = client_request(&addr, &proto::shutdown_line(), 0).unwrap();
+        assert!(proto::response_is_ok(&bye), "{bye}");
+        handle.join().unwrap().unwrap();
+    }
+}

@@ -1,0 +1,249 @@
+//! On-disk layout of the job directory.
+//!
+//! One [`JobEnvelope`] per job at `job-<id>.json`, plus one chain
+//! record per *completed* chain at `job-<id>.chain-<c>.json`. Both are
+//! written atomically (tmp + rename). Recovery loads every envelope,
+//! reattaches the chain records whose step count matches the job's
+//! budget, and re-runs only the missing chains — which is sound
+//! because each chain's trajectory is a pure function of
+//! `(model, spec, chain_id)`.
+//!
+//! Chain records keep the software-visible result (objective, state,
+//! traces, step statistics); simulator reports (`sim` / `multicore` /
+//! `tempering`) and wall-clock time are not persisted — a recovered
+//! accelerator job keeps its sampling results but loses the
+//! cycle-accounting of chains that completed before the restart.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use crate::coordinator::ChainResult;
+use crate::energy::OpCost;
+use crate::engine::checkpoint::{array_field, bad, scalar_field, JobEnvelope};
+use crate::engine::error::Mc2aError;
+use crate::mcmc::StepStats;
+
+use super::JobId;
+
+/// Path of a job's envelope file.
+pub(super) fn envelope_path(dir: &Path, id: JobId) -> PathBuf {
+    dir.join(format!("job-{id}.json"))
+}
+
+/// Path of one chain's result record.
+pub(super) fn chain_path(dir: &Path, id: JobId, chain: usize) -> PathBuf {
+    dir.join(format!("job-{id}.chain-{chain}.json"))
+}
+
+fn chain_to_json(c: &ChainResult) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::with_capacity(
+        128 + c.best_x.len() * 4 + (c.marginal0.len() + c.objective_trace.len()) * 8,
+    );
+    write!(
+        out,
+        "{{\"chain_id\":{},\"steps\":{},\"best_objective\":{},\"updates\":{},\
+         \"accepted\":{},\"ops\":{},\"bytes\":{},\"samples\":{}",
+        c.chain_id,
+        c.steps,
+        c.best_objective,
+        c.stats.updates,
+        c.stats.accepted,
+        c.stats.cost.ops,
+        c.stats.cost.bytes,
+        c.stats.cost.samples,
+    )
+    .unwrap();
+    for (key, values) in [("marginal0", &c.marginal0), ("objective_trace", &c.objective_trace)] {
+        write!(out, ",\"{key}\":[").unwrap();
+        for (i, v) in values.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            write!(out, "{v}").unwrap();
+        }
+        out.push(']');
+    }
+    out.push_str(",\"best_x\":[");
+    for (i, v) in c.best_x.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        write!(out, "{v}").unwrap();
+    }
+    out.push_str("]}");
+    out
+}
+
+fn f64_array(s: &str, key: &str) -> Result<Vec<f64>, Mc2aError> {
+    let mut values = Vec::new();
+    for tok in array_field(s, key)?.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        values.push(tok.parse::<f64>().map_err(|e| bad(key, &e.to_string()))?);
+    }
+    Ok(values)
+}
+
+fn chain_from_json(s: &str) -> Result<ChainResult, Mc2aError> {
+    let num =
+        |key: &str| -> Result<u64, Mc2aError> {
+            scalar_field(s, key)?.parse::<u64>().map_err(|e| bad(key, &e.to_string()))
+        };
+    let mut best_x = Vec::new();
+    for tok in array_field(s, "best_x")?.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        best_x.push(tok.parse::<u32>().map_err(|e| bad("best_x", &e.to_string()))?);
+    }
+    Ok(ChainResult {
+        chain_id: num("chain_id")? as usize,
+        best_objective: scalar_field(s, "best_objective")?
+            .parse::<f64>()
+            .map_err(|e| bad("best_objective", &e.to_string()))?,
+        steps: num("steps")? as usize,
+        stats: StepStats {
+            updates: num("updates")?,
+            accepted: num("accepted")?,
+            cost: OpCost { ops: num("ops")?, bytes: num("bytes")?, samples: num("samples")? },
+        },
+        sim: None,
+        multicore: None,
+        tempering: None,
+        wall: Duration::ZERO,
+        marginal0: f64_array(s, "marginal0")?,
+        best_x,
+        objective_trace: f64_array(s, "objective_trace")?,
+    })
+}
+
+/// Atomically write one completed chain's record.
+pub(super) fn save_chain(dir: &Path, id: JobId, c: &ChainResult) -> Result<(), Mc2aError> {
+    let path = chain_path(dir, id, c.chain_id);
+    let tmp = path.with_extension("json.tmp");
+    std::fs::write(&tmp, chain_to_json(c))
+        .map_err(|e| Mc2aError::Server(format!("writing {}: {e}", tmp.display())))?;
+    std::fs::rename(&tmp, &path)
+        .map_err(|e| Mc2aError::Server(format!("renaming to {}: {e}", path.display())))
+}
+
+/// Load whatever chain records exist for a job. A record only counts
+/// when it carries the full step budget for the right chain slot;
+/// anything else (stale budget after a spec edit, unreadable file) is
+/// treated as missing and re-run.
+pub(super) fn load_chains(
+    dir: &Path,
+    id: JobId,
+    chains: usize,
+    steps: usize,
+) -> Result<Vec<Option<ChainResult>>, Mc2aError> {
+    let mut results = vec![None; chains];
+    for (chain, slot) in results.iter_mut().enumerate() {
+        let path = chain_path(dir, id, chain);
+        let Ok(text) = std::fs::read_to_string(&path) else { continue };
+        match chain_from_json(&text) {
+            Ok(c) if c.chain_id == chain && c.steps == steps => *slot = Some(c),
+            Ok(_) => {}
+            Err(e) => eprintln!("mc2a serve: skipping {}: {e}", path.display()),
+        }
+    }
+    Ok(results)
+}
+
+/// Load every job envelope in the directory (unsorted). Unreadable
+/// envelopes are skipped with a warning rather than aborting the whole
+/// recovery.
+pub(super) fn load_envelopes(dir: &Path) -> Result<Vec<JobEnvelope>, Mc2aError> {
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| Mc2aError::Server(format!("reading job dir {}: {e}", dir.display())))?;
+    let mut envelopes = Vec::new();
+    for entry in entries {
+        let entry =
+            entry.map_err(|e| Mc2aError::Server(format!("reading job dir entry: {e}")))?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if !name.starts_with("job-") || !name.ends_with(".json") || name.contains(".chain-") {
+            continue;
+        }
+        match JobEnvelope::load(entry.path()) {
+            Ok(env) => envelopes.push(env),
+            Err(e) => eprintln!("mc2a serve: skipping {}: {e}", entry.path().display()),
+        }
+    }
+    Ok(envelopes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_chain(chain_id: usize, steps: usize) -> ChainResult {
+        ChainResult {
+            chain_id,
+            best_objective: -33.5,
+            steps,
+            stats: StepStats {
+                updates: 1200,
+                accepted: 800,
+                cost: OpCost { ops: 5000, bytes: 9000, samples: 1200 },
+            },
+            sim: None,
+            multicore: None,
+            tempering: None,
+            wall: Duration::from_millis(7),
+            marginal0: vec![0.25, 0.75],
+            best_x: vec![1, 0, 2, 1],
+            objective_trace: vec![-40.0, -35.5, -33.5],
+        }
+    }
+
+    #[test]
+    fn chain_record_round_trips() {
+        let c = sample_chain(2, 300);
+        let r = chain_from_json(&chain_to_json(&c)).unwrap();
+        assert_eq!(r.chain_id, c.chain_id);
+        assert_eq!(r.steps, c.steps);
+        assert_eq!(r.best_objective, c.best_objective);
+        assert_eq!(r.stats.updates, c.stats.updates);
+        assert_eq!(r.stats.accepted, c.stats.accepted);
+        assert_eq!(r.stats.cost.ops, c.stats.cost.ops);
+        assert_eq!(r.stats.cost.bytes, c.stats.cost.bytes);
+        assert_eq!(r.stats.cost.samples, c.stats.cost.samples);
+        assert_eq!(r.marginal0, c.marginal0);
+        assert_eq!(r.best_x, c.best_x);
+        assert_eq!(r.objective_trace, c.objective_trace);
+        // Wall time and simulator reports are not persisted.
+        assert_eq!(r.wall, Duration::ZERO);
+        assert!(r.sim.is_none());
+    }
+
+    #[test]
+    fn load_chains_filters_wrong_budget_and_slot() {
+        let dir = std::env::temp_dir().join("mc2a_persist_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        save_chain(&dir, 1, &sample_chain(0, 300)).unwrap();
+        save_chain(&dir, 1, &sample_chain(1, 200)).unwrap(); // stale budget
+        std::fs::write(chain_path(&dir, 1, 2), "garbage").unwrap();
+        let loaded = load_chains(&dir, 1, 4, 300).unwrap();
+        assert!(loaded[0].is_some());
+        assert!(loaded[1].is_none(), "wrong step budget must not count");
+        assert!(loaded[2].is_none(), "corrupt record must not count");
+        assert!(loaded[3].is_none(), "never-written chain is missing");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_envelopes_ignores_chain_records() {
+        let dir = std::env::temp_dir().join("mc2a_persist_env_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        save_chain(&dir, 3, &sample_chain(0, 100)).unwrap();
+        assert!(load_envelopes(&dir).unwrap().is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

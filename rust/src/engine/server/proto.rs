@@ -1,0 +1,636 @@
+//! The serve/client wire protocol: newline-delimited JSON.
+//!
+//! Every request and most responses are **flat** JSON objects (no
+//! nesting), hand-rolled both ways because the crate carries no serde.
+//! One request line yields one response line, except `stream`, which
+//! turns the connection into a one-way event feed.
+//!
+//! Requests (`op` selects the operation):
+//!
+//! ```json
+//! {"op":"submit","workload":"optsicom","steps":500,"chains":4,"seed":7,
+//!  "beta":2.0,"sampler":"gumbel","backend":"sw","priority":"high"}
+//! {"op":"status"}            {"op":"status","job":3}
+//! {"op":"result","job":3}    {"op":"cancel","job":3}
+//! {"op":"stream","job":3}    {"op":"ping"}    {"op":"shutdown"}
+//! ```
+//!
+//! Responses carry `"ok":true` plus operation payload, or `"ok":false`
+//! with a machine-readable `kind` and a human `error`:
+//!
+//! ```json
+//! {"ok":true,"job":3}
+//! {"ok":false,"kind":"unknown-job","error":"unknown job id 99"}
+//! ```
+//!
+//! Non-finite floats (an untouched best objective is −∞) serialize as
+//! `null`.
+
+use super::{JobId, JobResult, JobSpec, JobStatus, Priority, ServeBackend};
+use crate::engine::error::Mc2aError;
+use crate::engine::observer::StreamEvent;
+use crate::mcmc::{AlgoKind, SamplerKind};
+
+/// A parsed flat-JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JVal {
+    /// A JSON string.
+    Str(String),
+    /// Any JSON number.
+    Num(f64),
+    /// `true` / `false`.
+    Bool(bool),
+    /// `null`.
+    Null,
+}
+
+fn perr(line: &str, why: &str) -> Mc2aError {
+    let snippet: String = line.chars().take(80).collect();
+    Mc2aError::Protocol(format!("{why} in `{snippet}`"))
+}
+
+/// Parse one flat JSON object (`{"k":v,…}`, no nested objects or
+/// arrays) into key/value pairs, preserving order.
+pub fn parse_flat_object(line: &str) -> Result<Vec<(String, JVal)>, Mc2aError> {
+    let chars: Vec<char> = line.chars().collect();
+    let mut i = 0usize;
+    let skip_ws = |i: &mut usize| {
+        while *i < chars.len() && chars[*i].is_ascii_whitespace() {
+            *i += 1;
+        }
+    };
+    let parse_string = |i: &mut usize| -> Result<String, Mc2aError> {
+        // Caller has consumed the opening quote.
+        let mut out = String::new();
+        while *i < chars.len() {
+            let c = chars[*i];
+            *i += 1;
+            match c {
+                '"' => return Ok(out),
+                '\\' => {
+                    let e = *chars.get(*i).ok_or_else(|| perr(line, "truncated escape"))?;
+                    *i += 1;
+                    match e {
+                        '"' | '\\' | '/' => out.push(e),
+                        'n' => out.push('\n'),
+                        't' => out.push('\t'),
+                        'r' => out.push('\r'),
+                        'b' => out.push('\u{0008}'),
+                        'f' => out.push('\u{000C}'),
+                        'u' => {
+                            if *i + 4 > chars.len() {
+                                return Err(perr(line, "truncated \\u escape"));
+                            }
+                            let hex: String = chars[*i..*i + 4].iter().collect();
+                            *i += 4;
+                            let code = u32::from_str_radix(&hex, 16)
+                                .map_err(|_| perr(line, "bad \\u escape"))?;
+                            out.push(
+                                char::from_u32(code)
+                                    .ok_or_else(|| perr(line, "bad \\u code point"))?,
+                            );
+                        }
+                        _ => return Err(perr(line, "unknown escape")),
+                    }
+                }
+                other => out.push(other),
+            }
+        }
+        Err(perr(line, "unterminated string"))
+    };
+
+    let mut fields = Vec::new();
+    skip_ws(&mut i);
+    if chars.get(i) != Some(&'{') {
+        return Err(perr(line, "expected `{`"));
+    }
+    i += 1;
+    skip_ws(&mut i);
+    if chars.get(i) == Some(&'}') {
+        i += 1;
+    } else {
+        loop {
+            skip_ws(&mut i);
+            if chars.get(i) != Some(&'"') {
+                return Err(perr(line, "expected a key string"));
+            }
+            i += 1;
+            let key = parse_string(&mut i)?;
+            skip_ws(&mut i);
+            if chars.get(i) != Some(&':') {
+                return Err(perr(line, "expected `:`"));
+            }
+            i += 1;
+            skip_ws(&mut i);
+            let value = match chars.get(i) {
+                Some('"') => {
+                    i += 1;
+                    JVal::Str(parse_string(&mut i)?)
+                }
+                Some('t') if chars[i..].starts_with(&['t', 'r', 'u', 'e']) => {
+                    i += 4;
+                    JVal::Bool(true)
+                }
+                Some('f') if chars[i..].starts_with(&['f', 'a', 'l', 's', 'e']) => {
+                    i += 5;
+                    JVal::Bool(false)
+                }
+                Some('n') if chars[i..].starts_with(&['n', 'u', 'l', 'l']) => {
+                    i += 4;
+                    JVal::Null
+                }
+                Some(c) if *c == '-' || c.is_ascii_digit() => {
+                    let start = i;
+                    while i < chars.len()
+                        && matches!(chars[i], '-' | '+' | '.' | 'e' | 'E' | '0'..='9')
+                    {
+                        i += 1;
+                    }
+                    let tok: String = chars[start..i].iter().collect();
+                    JVal::Num(tok.parse::<f64>().map_err(|_| perr(line, "bad number"))?)
+                }
+                _ => return Err(perr(line, "expected a value")),
+            };
+            fields.push((key, value));
+            skip_ws(&mut i);
+            match chars.get(i) {
+                Some(',') => i += 1,
+                Some('}') => {
+                    i += 1;
+                    break;
+                }
+                _ => return Err(perr(line, "expected `,` or `}`")),
+            }
+        }
+    }
+    skip_ws(&mut i);
+    if i != chars.len() {
+        return Err(perr(line, "trailing garbage"));
+    }
+    Ok(fields)
+}
+
+/// A parsed client request.
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// Submit a new job.
+    Submit(JobSpec),
+    /// Status of one job, or of every job when `job` is `None`.
+    Status {
+        /// Target job, if any.
+        job: Option<JobId>,
+    },
+    /// Final result of a terminal job.
+    Result {
+        /// Target job.
+        job: JobId,
+    },
+    /// Cancel a job.
+    Cancel {
+        /// Target job.
+        job: JobId,
+    },
+    /// Turn the connection into an event feed for a job.
+    Stream {
+        /// Target job.
+        job: JobId,
+    },
+    /// Liveness check.
+    Ping,
+    /// Graceful server stop.
+    Shutdown,
+}
+
+/// Parse one request line.
+pub fn parse_request(line: &str) -> Result<Request, Mc2aError> {
+    let fields = parse_flat_object(line)?;
+    let get = |key: &str| fields.iter().find(|(k, _)| k == key).map(|(_, v)| v);
+    let usize_of = |key: &str| -> Result<Option<usize>, Mc2aError> {
+        match get(key) {
+            None | Some(JVal::Null) => Ok(None),
+            Some(JVal::Num(n)) if *n >= 0.0 && n.fract() == 0.0 => Ok(Some(*n as usize)),
+            Some(_) => Err(perr(line, &format!("`{key}` must be a non-negative integer"))),
+        }
+    };
+    let u64_of = |key: &str| -> Result<Option<u64>, Mc2aError> {
+        match get(key) {
+            None | Some(JVal::Null) => Ok(None),
+            Some(JVal::Num(n)) if *n >= 0.0 && n.fract() == 0.0 => Ok(Some(*n as u64)),
+            Some(_) => Err(perr(line, &format!("`{key}` must be a non-negative integer"))),
+        }
+    };
+    let required_job = |key: &str| -> Result<JobId, Mc2aError> {
+        u64_of(key)?.ok_or_else(|| perr(line, "missing `job`"))
+    };
+    let op = match get("op") {
+        Some(JVal::Str(s)) => s.clone(),
+        _ => return Err(perr(line, "missing `op`")),
+    };
+    match op.as_str() {
+        "submit" => {
+            let workload = match get("workload") {
+                Some(JVal::Str(s)) => s.clone(),
+                _ => return Err(perr(line, "submit requires `workload`")),
+            };
+            let mut spec = JobSpec::new(workload);
+            if let Some(v) = usize_of("steps")? {
+                spec.steps = v;
+            }
+            if let Some(v) = usize_of("chains")? {
+                spec.chains = v;
+            }
+            if let Some(v) = u64_of("seed")? {
+                spec.seed = v;
+            }
+            if let Some(v) = usize_of("observe_every")? {
+                spec.observe_every = v;
+            }
+            spec.pas_flips = usize_of("pas_flips")?;
+            if let Some(JVal::Num(b)) = get("beta") {
+                spec.beta = *b as f32;
+            }
+            if let Some(JVal::Str(s)) = get("algo") {
+                spec.algo = Some(
+                    AlgoKind::parse(s)
+                        .ok_or_else(|| perr(line, &format!("unknown algo `{s}`")))?,
+                );
+            }
+            if let Some(JVal::Str(s)) = get("sampler") {
+                spec.sampler = SamplerKind::parse(s)
+                    .ok_or_else(|| perr(line, &format!("unknown sampler `{s}`")))?;
+            }
+            if let Some(JVal::Str(s)) = get("backend") {
+                spec.backend = ServeBackend::parse(s)
+                    .ok_or_else(|| perr(line, &format!("unknown backend `{s}`")))?;
+            }
+            if let Some(JVal::Str(s)) = get("priority") {
+                spec.priority = Priority::parse(s)
+                    .ok_or_else(|| perr(line, &format!("unknown priority `{s}`")))?;
+            }
+            Ok(Request::Submit(spec))
+        }
+        "status" => Ok(Request::Status { job: u64_of("job")? }),
+        "result" => Ok(Request::Result { job: required_job("job")? }),
+        "cancel" => Ok(Request::Cancel { job: required_job("job")? }),
+        "stream" => Ok(Request::Stream { job: required_job("job")? }),
+        "ping" => Ok(Request::Ping),
+        "shutdown" => Ok(Request::Shutdown),
+        other => Err(perr(line, &format!("unknown op `{other}`"))),
+    }
+}
+
+/// A number for the wire: non-finite becomes `null`.
+fn jnum(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn jstr(s: &str) -> String {
+    format!("\"{}\"", crate::engine::checkpoint::escape_json(s))
+}
+
+fn jopt_str(s: &Option<String>) -> String {
+    match s {
+        Some(s) => jstr(s),
+        None => "null".to_string(),
+    }
+}
+
+/// `{"ok":true,"job":N}` — submit accepted.
+pub fn ok_submit(id: JobId) -> String {
+    format!("{{\"ok\":true,\"job\":{id}}}")
+}
+
+/// `{"ok":true,"pong":true}`.
+pub fn ok_ping() -> String {
+    "{\"ok\":true,\"pong\":true}".to_string()
+}
+
+/// `{"ok":true,"stopping":true}`.
+pub fn ok_shutdown() -> String {
+    "{\"ok\":true,\"stopping\":true}".to_string()
+}
+
+/// `{"ok":true,"job":N,"state":"…"}` — state after a cancel.
+pub fn ok_cancel(id: JobId, state: &str) -> String {
+    format!("{{\"ok\":true,\"job\":{id},\"state\":{}}}", jstr(state))
+}
+
+fn status_json(s: &JobStatus) -> String {
+    let r_hat = match s.r_hat {
+        Some(r) => jnum(r),
+        None => "null".to_string(),
+    };
+    format!(
+        "{{\"job\":{},\"workload\":{},\"state\":{},\"priority\":{},\"backend\":{},\
+         \"algo\":{},\"chains\":{},\"chains_done\":{},\"steps\":{},\"steps_done\":{},\
+         \"best_objective\":{},\"r_hat\":{},\"error\":{}}}",
+        s.id,
+        jstr(&s.workload),
+        jstr(s.state.name()),
+        jstr(s.priority.name()),
+        jstr(s.backend.name()),
+        jstr(s.algo.name()),
+        s.chains,
+        s.chains_done,
+        s.steps,
+        s.steps_done,
+        jnum(s.best_objective),
+        r_hat,
+        jopt_str(&s.error),
+    )
+}
+
+/// `{"ok":true,"jobs":[…]}` — one status object per job.
+pub fn ok_status(list: &[JobStatus]) -> String {
+    let jobs: Vec<String> = list.iter().map(status_json).collect();
+    format!("{{\"ok\":true,\"jobs\":[{}]}}", jobs.join(","))
+}
+
+/// `{"ok":true,"job":N,"state":"…","best_objective":…,"chains":[…]}`.
+pub fn ok_result(r: &JobResult) -> String {
+    let chains: Vec<String> = r
+        .chains
+        .iter()
+        .map(|c| {
+            let best_x: Vec<String> = c.best_x.iter().map(|v| v.to_string()).collect();
+            format!(
+                "{{\"chain\":{},\"steps\":{},\"best_objective\":{},\"updates\":{},\
+                 \"trace_len\":{},\"best_x\":[{}]}}",
+                c.chain_id,
+                c.steps,
+                jnum(c.best_objective),
+                c.stats.updates,
+                c.objective_trace.len(),
+                best_x.join(","),
+            )
+        })
+        .collect();
+    format!(
+        "{{\"ok\":true,\"job\":{},\"state\":{},\"best_objective\":{},\"error\":{},\"chains\":[{}]}}",
+        r.id,
+        jstr(r.state.name()),
+        jnum(r.best_objective),
+        jopt_str(&r.error),
+        chains.join(","),
+    )
+}
+
+/// The machine-readable failure class of an error.
+pub fn error_kind(e: &Mc2aError) -> &'static str {
+    match e {
+        Mc2aError::InvalidConfig(_) => "invalid-config",
+        Mc2aError::InvalidHardware(_) => "invalid-hardware",
+        Mc2aError::UnknownWorkload { .. } => "unknown-workload",
+        Mc2aError::UnknownBench { .. } => "unknown-bench",
+        Mc2aError::Checkpoint(_) => "checkpoint",
+        Mc2aError::CheckpointMismatch { .. } => "checkpoint-mismatch",
+        Mc2aError::RuntimeUnavailable(_) => "runtime-unavailable",
+        Mc2aError::Runtime(_) => "runtime",
+        Mc2aError::ChainPanicked { .. } | Mc2aError::BackendPanicked => "panic",
+        Mc2aError::Server(msg) if msg.contains("is not finished") => "not-finished",
+        Mc2aError::Server(_) => "server",
+        Mc2aError::Protocol(_) => "protocol",
+        Mc2aError::UnknownJob { .. } => "unknown-job",
+    }
+}
+
+/// `{"ok":false,"kind":"…","error":"…"}`.
+pub fn err_line(e: &Mc2aError) -> String {
+    format!(
+        "{{\"ok\":false,\"kind\":{},\"error\":{}}}",
+        jstr(error_kind(e)),
+        jstr(&e.to_string())
+    )
+}
+
+/// One stream event as a wire line.
+pub fn event_line(ev: &StreamEvent) -> String {
+    match ev {
+        StreamEvent::Progress(p) => format!(
+            "{{\"event\":\"progress\",\"chain\":{},\"step\":{},\"beta\":{},\
+             \"objective\":{},\"best\":{},\"updates\":{}}}",
+            p.chain_id,
+            p.step,
+            jnum(p.beta as f64),
+            jnum(p.objective),
+            jnum(p.best_objective),
+            p.updates,
+        ),
+        StreamEvent::Diagnostics(d) => {
+            let r_hat = match d.r_hat {
+                Some(r) => jnum(r),
+                None => "null".to_string(),
+            };
+            format!(
+                "{{\"event\":\"diagnostics\",\"round\":{},\"step\":{},\"r_hat\":{},\
+                 \"min_ess\":{},\"best\":{}}}",
+                d.round,
+                d.step,
+                r_hat,
+                jnum(d.min_ess),
+                jnum(d.best_objective),
+            )
+        }
+        StreamEvent::Done { state, best_objective } => format!(
+            "{{\"event\":\"done\",\"state\":{},\"best\":{}}}",
+            jstr(state),
+            jnum(*best_objective),
+        ),
+    }
+}
+
+// ---- Client-side line builders (used by `mc2a client` and tests) ----
+
+/// Build a submit request line from a spec.
+pub fn submit_line(spec: &JobSpec) -> String {
+    let mut line = format!(
+        "{{\"op\":\"submit\",\"workload\":{},\"steps\":{},\"chains\":{},\"seed\":{},\
+         \"beta\":{},\"sampler\":{},\"backend\":{},\"priority\":{}",
+        jstr(&spec.workload),
+        spec.steps,
+        spec.chains,
+        spec.seed,
+        spec.beta,
+        jstr(spec.sampler.name()),
+        jstr(spec.backend.name()),
+        jstr(spec.priority.name()),
+    );
+    if let Some(algo) = spec.algo {
+        line.push_str(&format!(",\"algo\":{}", jstr(&algo.name().to_ascii_lowercase())));
+    }
+    if spec.observe_every > 0 {
+        line.push_str(&format!(",\"observe_every\":{}", spec.observe_every));
+    }
+    if let Some(p) = spec.pas_flips {
+        line.push_str(&format!(",\"pas_flips\":{p}"));
+    }
+    line.push('}');
+    line
+}
+
+/// Build a status request line.
+pub fn status_line(job: Option<JobId>) -> String {
+    match job {
+        Some(id) => format!("{{\"op\":\"status\",\"job\":{id}}}"),
+        None => "{\"op\":\"status\"}".to_string(),
+    }
+}
+
+/// Build a result request line.
+pub fn result_line(job: JobId) -> String {
+    format!("{{\"op\":\"result\",\"job\":{job}}}")
+}
+
+/// Build a cancel request line.
+pub fn cancel_line(job: JobId) -> String {
+    format!("{{\"op\":\"cancel\",\"job\":{job}}}")
+}
+
+/// Build a stream request line.
+pub fn stream_line(job: JobId) -> String {
+    format!("{{\"op\":\"stream\",\"job\":{job}}}")
+}
+
+/// Build a ping request line.
+pub fn ping_line() -> String {
+    "{\"op\":\"ping\"}".to_string()
+}
+
+/// Build a shutdown request line.
+pub fn shutdown_line() -> String {
+    "{\"op\":\"shutdown\"}".to_string()
+}
+
+/// Did the server accept the request? (Responses always lead with the
+/// `ok` field.)
+pub fn response_is_ok(line: &str) -> bool {
+    line.trim_start().starts_with("{\"ok\":true")
+}
+
+/// The `kind` of an error response (`None` on success lines).
+pub fn response_kind(line: &str) -> Option<String> {
+    if response_is_ok(line) {
+        return None;
+    }
+    let fields = parse_flat_object(line).ok()?;
+    fields.into_iter().find_map(|(k, v)| match (k.as_str(), v) {
+        ("kind", JVal::Str(s)) => Some(s),
+        _ => None,
+    })
+}
+
+/// The `job` id of a flat success response (submit/cancel).
+pub fn response_job(line: &str) -> Option<JobId> {
+    let fields = parse_flat_object(line).ok()?;
+    fields.into_iter().find_map(|(k, v)| match (k.as_str(), v) {
+        ("job", JVal::Num(n)) if n >= 0.0 && n.fract() == 0.0 => Some(n as JobId),
+        _ => None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_object_parses_all_value_kinds() {
+        let fields = parse_flat_object(
+            r#"{"s":"a\"b\\cA","n":-2.5e1,"t":true,"f":false,"z":null}"#,
+        )
+        .unwrap();
+        assert_eq!(fields[0], ("s".into(), JVal::Str("a\"b\\cA".into())));
+        assert_eq!(fields[1], ("n".into(), JVal::Num(-25.0)));
+        assert_eq!(fields[2], ("t".into(), JVal::Bool(true)));
+        assert_eq!(fields[3], ("f".into(), JVal::Bool(false)));
+        assert_eq!(fields[4], ("z".into(), JVal::Null));
+    }
+
+    #[test]
+    fn malformed_lines_are_protocol_errors() {
+        for line in [
+            "",
+            "not json",
+            "{\"a\":}",
+            "{\"a\":1,}",
+            "{\"a\":1} extra",
+            "{\"a\":\"unterminated}",
+            "{\"op\":\"nope\"}",
+            "{\"op\":\"result\"}",
+            "{\"steps\":5}",
+        ] {
+            assert!(
+                matches!(parse_request(line), Err(Mc2aError::Protocol(_))),
+                "accepted: {line}"
+            );
+        }
+    }
+
+    #[test]
+    fn submit_line_round_trips_through_parse_request() {
+        let mut spec = JobSpec::new("optsicom");
+        spec.steps = 500;
+        spec.chains = 4;
+        spec.seed = 7;
+        spec.beta = 2.5;
+        spec.algo = Some(AlgoKind::Pas);
+        spec.sampler = SamplerKind::Cdf;
+        spec.backend = ServeBackend::Accelerator;
+        spec.priority = Priority::High;
+        spec.observe_every = 50;
+        spec.pas_flips = Some(3);
+        let parsed = match parse_request(&submit_line(&spec)).unwrap() {
+            Request::Submit(s) => s,
+            other => panic!("expected submit, got {other:?}"),
+        };
+        assert_eq!(parsed.workload, "optsicom");
+        assert_eq!(parsed.steps, 500);
+        assert_eq!(parsed.chains, 4);
+        assert_eq!(parsed.seed, 7);
+        assert_eq!(parsed.beta, 2.5);
+        assert_eq!(parsed.algo, Some(AlgoKind::Pas));
+        assert_eq!(parsed.sampler, SamplerKind::Cdf);
+        assert_eq!(parsed.backend, ServeBackend::Accelerator);
+        assert_eq!(parsed.priority, Priority::High);
+        assert_eq!(parsed.observe_every, 50);
+        assert_eq!(parsed.pas_flips, Some(3));
+    }
+
+    #[test]
+    fn simple_request_lines_parse() {
+        assert!(matches!(parse_request(&ping_line()), Ok(Request::Ping)));
+        assert!(matches!(parse_request(&shutdown_line()), Ok(Request::Shutdown)));
+        assert!(matches!(
+            parse_request(&status_line(None)),
+            Ok(Request::Status { job: None })
+        ));
+        assert!(matches!(
+            parse_request(&status_line(Some(3))),
+            Ok(Request::Status { job: Some(3) })
+        ));
+        assert!(matches!(parse_request(&result_line(9)), Ok(Request::Result { job: 9 })));
+        assert!(matches!(parse_request(&cancel_line(9)), Ok(Request::Cancel { job: 9 })));
+        assert!(matches!(parse_request(&stream_line(9)), Ok(Request::Stream { job: 9 })));
+    }
+
+    #[test]
+    fn responses_are_classified() {
+        assert!(response_is_ok(&ok_submit(4)));
+        assert_eq!(response_job(&ok_submit(4)), Some(4));
+        let err = err_line(&Mc2aError::UnknownJob { id: 99 });
+        assert!(!response_is_ok(&err));
+        assert_eq!(response_kind(&err).as_deref(), Some("unknown-job"));
+        let busy = err_line(&Mc2aError::Server("job 3 is not finished (state running)".into()));
+        assert_eq!(response_kind(&busy).as_deref(), Some("not-finished"));
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        assert_eq!(jnum(f64::NEG_INFINITY), "null");
+        let done = StreamEvent::Done { state: "done".into(), best_objective: f64::NAN };
+        assert!(event_line(&done).contains("\"best\":null"));
+    }
+}

@@ -29,8 +29,11 @@
 //!   `chains / batch` work items over a fixed worker set, the
 //!   [`engine::ChainObserver`] streaming-diagnostics API with
 //!   optional cold-chain restarts, [`engine::Checkpoint`]
-//!   save/resume, the typed [`engine::Mc2aError`], and the
-//!   named-workload [`engine::registry`].
+//!   save/resume, the typed [`engine::Mc2aError`], the
+//!   named-workload [`engine::registry`], and [`engine::server`] —
+//!   the persistent multi-tenant job server (`mc2a serve`) that
+//!   multiplexes heterogeneous jobs over one shared priority-aware
+//!   pool with checkpoint-backed crash recovery.
 //! * [`energy`] — discrete energy models (Ising/Potts grids, Bayesian
 //!   networks, combinatorial-optimization graphs, RBMs) behind the common
 //!   [`energy::EnergyModel`] trait, with batched (structure-of-arrays)

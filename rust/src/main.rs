@@ -12,6 +12,8 @@
 //!          [--temper K] [--swap-every N] [--ladder geom:FROM:TO|explicit:B1,B2,…]
 //!          [--swap-target RATE] [--seed S] [--observe N]
 //!          [--save-state PATH] [--init-from PATH]
+//! mc2a serve [--addr HOST:PORT] [--dir JOBDIR] [--threads N] [--recover]
+//! mc2a client [--addr HOST:PORT] <submit|status|result|cancel|stream|shutdown|ping> …
 //! mc2a workloads
 //! mc2a roofline [--workload <name>] [--cores C]
 //! mc2a dse
@@ -23,8 +25,15 @@
 //! All run construction goes through [`mc2a::engine::EngineBuilder`];
 //! this file is the only place allowed to call `process::exit`.
 
+use std::path::PathBuf;
+use std::time::Duration;
+
 use mc2a::bench;
-use mc2a::engine::{registry, Checkpoint, Engine, Mc2aError, PrintObserver};
+use mc2a::engine::server::{net, proto};
+use mc2a::engine::{
+    registry, Checkpoint, Engine, JobServer, JobServerConfig, JobSpec, Mc2aError, PrintObserver,
+    Priority, ServeBackend,
+};
 use mc2a::isa::{HwConfig, MultiHwConfig};
 use mc2a::mcmc::{AlgoKind, AnnealPolicy, BetaSchedule, Ladder, SamplerKind};
 use mc2a::rng::Rng;
@@ -47,6 +56,15 @@ USAGE:
            [--temper K] [--swap-every N] [--ladder geom:FROM:TO|explicit:B1,B2,…]
            [--swap-target RATE] [--seed S] [--observe N]
            [--save-state PATH] [--init-from PATH]
+  mc2a serve [--addr HOST:PORT] [--dir JOBDIR] [--threads N]
+             [--recover] [--force-backend sw|sim]
+  mc2a client [--addr HOST:PORT] [--connect-retries N]
+              <submit|status|result|cancel|stream|shutdown|ping>
+              submit: --workload <name> [--steps N] [--chains N] [--seed S]
+                      [--beta B] [--algo A] [--sampler S] [--observe N]
+                      [--backend sw|sim] [--priority low|normal|high]
+              status [--job N] | cancel/stream --job N
+              result --job N [--wait] [--timeout SECS]
   mc2a workloads
   mc2a roofline [--workload <name>] [--cores C]
   mc2a dse
@@ -92,6 +110,7 @@ fn cmd_bench(args: &[String]) -> Result<(), Mc2aError> {
             "fig14" => bench::fig14(quick),
             "fig15" => bench::fig15(quick),
             "chains" => bench::many_chains(quick)?,
+            "serve" => bench::serve_throughput(quick)?,
             "cores" => bench::core_scaling(quick)?,
             "anneal" => bench::anneal_compare(quick)?,
             "temper" => bench::temper_compare(quick)?,
@@ -221,6 +240,10 @@ fn cmd_run(args: &[String]) -> Result<(), Mc2aError> {
     // original RNG streams from the best state would just re-explore
     // the same trajectories.
     let mut resume_seed: Option<u64> = None;
+    // Shape flags are applied *before* `--init-from` so the checkpoint
+    // is validated against this run's final workload/sampler/chain
+    // configuration, not the defaults.
+    builder = builder.steps(steps).chains(chains).schedule(schedule);
     if let Some(path) = flag_value(args, "--init-from") {
         let ck = Checkpoint::load(&path)?;
         prior_steps = ck.steps;
@@ -229,7 +252,7 @@ fn cmd_run(args: &[String]) -> Result<(), Mc2aError> {
             "resuming from {path}: {} steps done, best objective {:.2}",
             ck.steps, ck.best_objective
         );
-        builder = builder.init_state(ck.best_x).schedule_offset(ck.steps);
+        builder = builder.init_from_checkpoint(&ck)?;
         // Adaptive resume also restores the controller's memory, so
         // plateau counters and the virtual clock carry over.
         if adaptive.is_some() {
@@ -248,7 +271,7 @@ fn cmd_run(args: &[String]) -> Result<(), Mc2aError> {
         }
     }
     let seed: u64 = seed_flag.or(resume_seed).unwrap_or(1);
-    builder = builder.steps(steps).chains(chains).seed(seed).schedule(schedule);
+    builder = builder.seed(seed);
     if let Some(policy) = adaptive {
         builder = builder.adaptive(policy);
     }
@@ -406,6 +429,9 @@ fn cmd_run(args: &[String]) -> Result<(), Mc2aError> {
             best_x: best.best_x.clone(),
             anneal: engine.anneal_state(),
             temper: engine.temper_state(),
+            workload: engine.workload_name().map(str::to_string),
+            sampler: Some(engine.spec().sampler.name().to_string()),
+            chains: Some(chains),
         };
         ck.save(&path)?;
         println!(
@@ -491,6 +517,148 @@ fn cmd_runtime_check(args: &[String]) -> Result<(), Mc2aError> {
     }
 }
 
+fn cmd_serve(args: &[String]) -> Result<(), Mc2aError> {
+    let addr = flag_value(args, "--addr").unwrap_or_else(|| "127.0.0.1:7477".into());
+    let dir = flag_value(args, "--dir").map(PathBuf::from);
+    let threads: usize = parsed_flag(args, "--threads")?.unwrap_or(0);
+    let recover = has_flag(args, "--recover");
+    let force_backend = match flag_value(args, "--force-backend") {
+        Some(b) => Some(ServeBackend::parse(&b).ok_or_else(|| {
+            Mc2aError::InvalidConfig(format!("unknown backend {b:?} (sw|sim)"))
+        })?),
+        None => None,
+    };
+    if recover && dir.is_none() {
+        return Err(Mc2aError::InvalidConfig(
+            "--recover needs the job directory that holds the envelopes (add --dir DIR)".into(),
+        ));
+    }
+    if force_backend.is_some() && !recover {
+        return Err(Mc2aError::InvalidConfig(
+            "--force-backend only applies when recovering jobs (add --recover)".into(),
+        ));
+    }
+    let cfg = JobServerConfig { threads, dir };
+    let server =
+        if recover { JobServer::recover_with(cfg, force_backend)? } else { JobServer::new(cfg)? };
+    net::serve(server, &addr)
+}
+
+/// The `--job N` flag, required by result/cancel/stream.
+fn required_job(args: &[String]) -> Result<u64, Mc2aError> {
+    parsed_flag::<u64>(args, "--job")?
+        .ok_or_else(|| Mc2aError::InvalidConfig("--job N is required".into()))
+}
+
+/// Print the server's response line; non-`ok` responses exit with
+/// status 2 so shell scripts can branch on failure.
+fn finish_response(response: String) -> Result<(), Mc2aError> {
+    println!("{response}");
+    if proto::response_is_ok(&response) {
+        Ok(())
+    } else {
+        Err(Mc2aError::Server(format!("request failed: {response}")))
+    }
+}
+
+fn cmd_client(args: &[String]) -> Result<(), Mc2aError> {
+    const VERBS: [&str; 7] =
+        ["submit", "status", "result", "cancel", "stream", "shutdown", "ping"];
+    let addr = flag_value(args, "--addr").unwrap_or_else(|| "127.0.0.1:7477".into());
+    let retries: u32 = parsed_flag(args, "--connect-retries")?.unwrap_or(0);
+    let verb = args
+        .iter()
+        .map(String::as_str)
+        .find(|a| VERBS.contains(a))
+        .ok_or_else(|| {
+            Mc2aError::InvalidConfig(
+                "client needs a verb: submit|status|result|cancel|stream|shutdown|ping".into(),
+            )
+        })?;
+    let line = match verb {
+        "submit" => {
+            let workload = flag_value(args, "--workload").ok_or_else(|| {
+                Mc2aError::InvalidConfig("submit requires --workload <name>".into())
+            })?;
+            let mut spec = JobSpec::new(workload);
+            if let Some(v) = parsed_flag(args, "--steps")? {
+                spec.steps = v;
+            }
+            if let Some(v) = parsed_flag(args, "--chains")? {
+                spec.chains = v;
+            }
+            if let Some(v) = parsed_flag(args, "--seed")? {
+                spec.seed = v;
+            }
+            if let Some(v) = parsed_flag(args, "--beta")? {
+                spec.beta = v;
+            }
+            if let Some(v) = parsed_flag(args, "--observe")? {
+                spec.observe_every = v;
+            }
+            spec.pas_flips = parsed_flag(args, "--pas-flips")?;
+            if let Some(a) = flag_value(args, "--algo") {
+                spec.algo = Some(AlgoKind::parse(&a).ok_or_else(|| {
+                    Mc2aError::InvalidConfig(format!("unknown algo {a:?} (mh|gibbs|bg|ag|pas)"))
+                })?);
+            }
+            if let Some(s) = flag_value(args, "--sampler") {
+                spec.sampler = SamplerKind::parse(&s).ok_or_else(|| {
+                    Mc2aError::InvalidConfig(format!("unknown sampler {s:?} (cdf|gumbel|lut)"))
+                })?;
+            }
+            if let Some(b) = flag_value(args, "--backend") {
+                spec.backend = ServeBackend::parse(&b).ok_or_else(|| {
+                    Mc2aError::InvalidConfig(format!("unknown backend {b:?} (sw|sim)"))
+                })?;
+            }
+            if let Some(p) = flag_value(args, "--priority") {
+                spec.priority = Priority::parse(&p).ok_or_else(|| {
+                    Mc2aError::InvalidConfig(format!(
+                        "unknown priority {p:?} (low|normal|high)"
+                    ))
+                })?;
+            }
+            proto::submit_line(&spec)
+        }
+        "status" => proto::status_line(parsed_flag(args, "--job")?),
+        "result" => {
+            let job = required_job(args)?;
+            let line = proto::result_line(job);
+            if has_flag(args, "--wait") {
+                // Poll until the job leaves the queue (or the deadline
+                // passes); every other response kind is final.
+                let timeout: u64 = parsed_flag(args, "--timeout")?.unwrap_or(600);
+                let deadline = std::time::Instant::now() + Duration::from_secs(timeout);
+                loop {
+                    let response = net::client_request(&addr, &line, retries)?;
+                    if proto::response_kind(&response).as_deref() != Some("not-finished") {
+                        return finish_response(response);
+                    }
+                    if std::time::Instant::now() >= deadline {
+                        return Err(Mc2aError::Server(format!(
+                            "timed out after {timeout}s waiting for job {job}"
+                        )));
+                    }
+                    std::thread::sleep(Duration::from_millis(300));
+                }
+            }
+            line
+        }
+        "cancel" => proto::cancel_line(required_job(args)?),
+        "stream" => {
+            return net::client_stream(&addr, &proto::stream_line(required_job(args)?), |l| {
+                println!("{l}");
+                true
+            });
+        }
+        "shutdown" => proto::shutdown_line(),
+        "ping" => proto::ping_line(),
+        _ => unreachable!("verb is drawn from VERBS"),
+    };
+    finish_response(net::client_request(&addr, &line, retries)?)
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let result = match args.first().map(String::as_str) {
@@ -500,6 +668,8 @@ fn main() {
         }
         Some("bench") => cmd_bench(&args[1..]),
         Some("run") => cmd_run(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("client") => cmd_client(&args[1..]),
         Some("workloads") => {
             cmd_workloads();
             Ok(())

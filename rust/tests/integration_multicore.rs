@@ -142,6 +142,9 @@ fn checkpoint_resumes_through_init_state() {
         best_x: best.best_x.clone(),
         anneal: None,
         temper: None,
+        workload: None,
+        sampler: None,
+        chains: None,
     };
     let path = std::env::temp_dir().join("mc2a_integration_checkpoint.json");
     ck.save(&path).unwrap();

@@ -1,0 +1,277 @@
+//! Integration tests for the multi-tenant job server (`engine::server`):
+//! (a) concurrent heterogeneous jobs are bit-identical to solo
+//! `Engine::run` calls with the same spec, (b) a high-priority job
+//! overtakes an earlier low-priority queue, (c) cancel stops a huge job
+//! promptly, (d) a killed server recovers from its job directory and
+//! finishes interrupted jobs to the same bit-identical result, (e) the
+//! newline-JSON TCP front-end round-trips submit/result/cancel, and
+//! (f) `init_from_checkpoint` rejects mismatched resume attempts with
+//! the typed error naming both sides.
+
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use mc2a::coordinator::ChainResult;
+use mc2a::engine::server::{net, proto};
+use mc2a::engine::{
+    Checkpoint, Engine, JobServer, JobServerConfig, JobSpec, JobState, Mc2aError, Priority,
+    ServeBackend,
+};
+use mc2a::isa::HwConfig;
+
+fn spec(workload: &str, steps: usize, chains: usize, seed: u64) -> JobSpec {
+    let mut s = JobSpec::new(workload);
+    s.steps = steps;
+    s.chains = chains;
+    s.seed = seed;
+    s
+}
+
+/// The same run, solo, through the public engine builder.
+fn solo(workload: &str, steps: usize, chains: usize, seed: u64, accel: bool) -> Vec<ChainResult> {
+    let mut b = Engine::for_workload(workload)
+        .unwrap()
+        .steps(steps)
+        .chains(chains)
+        .seed(seed);
+    if accel {
+        b = b.accelerator(HwConfig::paper_default());
+    }
+    b.build().unwrap().run().unwrap().chains
+}
+
+fn assert_chains_match(label: &str, got: &[ChainResult], want: &[ChainResult]) {
+    assert_eq!(got.len(), want.len(), "{label}: chain count");
+    for (g, w) in got.iter().zip(want) {
+        assert_eq!(g.chain_id, w.chain_id, "{label}: chain id order");
+        assert_eq!(g.best_x, w.best_x, "{label} chain {}: state diverged", w.chain_id);
+        assert_eq!(g.best_objective, w.best_objective, "{label} chain {}", w.chain_id);
+        assert_eq!(g.marginal0, w.marginal0, "{label} chain {}", w.chain_id);
+        assert_eq!(g.objective_trace, w.objective_trace, "{label} chain {}", w.chain_id);
+        assert_eq!(g.steps, w.steps, "{label} chain {}", w.chain_id);
+    }
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mc2a_server_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// THE acceptance test: three heterogeneous jobs (COP / Potts-MRF /
+/// Bayesian network, software and accelerator backends) sharing one
+/// pool produce exactly the results their solo engine runs produce.
+#[test]
+fn concurrent_heterogeneous_jobs_match_solo_runs() {
+    let server = JobServer::in_memory(2);
+    let mut accel_spec = spec("earthquake", 200, 2, 3);
+    accel_spec.backend = ServeBackend::Accelerator;
+    let jobs = [
+        ("optsicom", server.submit(spec("optsicom", 60, 2, 7)).unwrap(), false, 60, 7),
+        ("imageseg", server.submit(spec("imageseg", 8, 2, 9)).unwrap(), false, 8, 9),
+        ("earthquake", server.submit(accel_spec).unwrap(), true, 200, 3),
+    ];
+    for (workload, id, accel, steps, seed) in jobs {
+        let result = server.wait(id, Duration::from_secs(300)).unwrap();
+        assert_eq!(result.state, JobState::Done, "{workload}: {:?}", result.error);
+        let want = solo(workload, steps, 2, seed, accel);
+        assert_chains_match(workload, &result.chains, &want);
+        let status = server.status(id).unwrap();
+        assert_eq!(status.chains_done, 2, "{workload}");
+        assert_eq!(status.steps_done, 2 * steps, "{workload}");
+    }
+    server.shutdown();
+}
+
+/// Strict priority: with one worker thread, a later high-priority job
+/// finishes before an earlier low-priority one gets a slot.
+#[test]
+fn high_priority_job_overtakes_low_priority_queue() {
+    let server = JobServer::in_memory(1);
+    // Occupies the only thread while the queue forms behind it.
+    let blocker = server.submit(spec("imageseg", 40, 1, 1)).unwrap();
+    let mut low = spec("imageseg", 10, 2, 2);
+    low.priority = Priority::Low;
+    let low = server.submit(low).unwrap();
+    let mut high = spec("optsicom", 5, 1, 3);
+    high.priority = Priority::High;
+    let high = server.submit(high).unwrap();
+    let result = server.wait(high, Duration::from_secs(300)).unwrap();
+    assert_eq!(result.state, JobState::Done);
+    let low_status = server.status(low).unwrap();
+    assert_ne!(
+        low_status.state,
+        JobState::Done,
+        "low-priority job must not finish before the high-priority one"
+    );
+    assert!(low_status.chains_done < 2, "low job ran ahead of the high job");
+    assert_eq!(server.wait(low, Duration::from_secs(300)).unwrap().state, JobState::Done);
+    assert_eq!(server.wait(blocker, Duration::from_secs(300)).unwrap().state, JobState::Done);
+    server.shutdown();
+}
+
+/// Cancel raises the per-job stop flag and the job goes terminal long
+/// before its (deliberately enormous) step budget could complete.
+#[test]
+fn cancel_stops_a_running_job_promptly() {
+    let server = JobServer::in_memory(2);
+    let mut huge = spec("imageseg", 1_000_000, 2, 5);
+    huge.observe_every = 1;
+    let id = server.submit(huge).unwrap();
+    let polling = Instant::now();
+    loop {
+        let s = server.status(id).unwrap();
+        if s.state == JobState::Running || s.steps_done > 0 {
+            break;
+        }
+        assert!(polling.elapsed() < Duration::from_secs(60), "job never started");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let cancelled_at = Instant::now();
+    assert_eq!(server.cancel(id).unwrap(), JobState::Cancelled);
+    let result = server.wait(id, Duration::from_secs(60)).unwrap();
+    assert_eq!(result.state, JobState::Cancelled);
+    assert!(
+        cancelled_at.elapsed() < Duration::from_secs(60),
+        "cancel should not wait for the step budget"
+    );
+    // Cancelling a terminal job is a no-op, not an error.
+    assert_eq!(server.cancel(id).unwrap(), JobState::Cancelled);
+    server.shutdown();
+}
+
+/// Durability: shut the server down mid-job (as a stand-in for a
+/// crash after the last fsync), recover from the directory, and the
+/// job finishes to the same bits a never-interrupted run produces.
+#[test]
+fn shutdown_then_recover_finishes_the_job_bit_identically() {
+    let dir = fresh_dir("recover");
+    let server = JobServer::new(JobServerConfig { threads: 1, dir: Some(dir.clone()) }).unwrap();
+    // "maxcut" is an optsicom alias; the server canonicalizes it.
+    let id = server.submit(spec("maxcut", 100, 3, 11)).unwrap();
+    let polling = Instant::now();
+    loop {
+        let s = server.status(id).unwrap();
+        if s.chains_done >= 1 {
+            break;
+        }
+        assert!(polling.elapsed() < Duration::from_secs(120), "no chain finished");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    server.shutdown();
+    drop(server);
+
+    let revived = JobServer::recover(&dir).unwrap();
+    let status = revived.status(id).unwrap();
+    assert_eq!(status.workload, "optsicom", "alias canonicalized in the envelope");
+    let result = revived.wait(id, Duration::from_secs(300)).unwrap();
+    assert_eq!(result.state, JobState::Done, "{:?}", result.error);
+    assert_chains_match("recovered maxcut", &result.chains, &solo("optsicom", 100, 3, 11, false));
+    // New submissions continue past the recovered id space.
+    let next = revived.submit(spec("earthquake", 10, 1, 1)).unwrap();
+    assert!(next > id);
+    revived.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The TCP front-end: submit over loopback, poll `result` until done,
+/// exercise the typed unknown-job error, then shut the daemon down.
+#[test]
+fn tcp_submit_poll_result_round_trip() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server = JobServer::in_memory(2);
+    let daemon = std::thread::spawn(move || net::serve_on(server, listener));
+
+    let submitted =
+        net::client_request(&addr, &proto::submit_line(&spec("optsicom", 30, 1, 5)), 4).unwrap();
+    assert!(proto::response_is_ok(&submitted), "{submitted}");
+    let id = proto::response_job(&submitted).expect("submit response carries the job id");
+
+    let polling = Instant::now();
+    let result = loop {
+        let line = net::client_request(&addr, &proto::result_line(id), 0).unwrap();
+        if proto::response_kind(&line).as_deref() != Some("not-finished") {
+            break line;
+        }
+        assert!(polling.elapsed() < Duration::from_secs(120), "job never finished");
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    assert!(proto::response_is_ok(&result), "{result}");
+    assert!(result.contains("\"state\":\"done\""), "{result}");
+
+    let missing = net::client_request(&addr, &proto::cancel_line(9999), 0).unwrap();
+    assert_eq!(proto::response_kind(&missing).as_deref(), Some("unknown-job"), "{missing}");
+
+    let bye = net::client_request(&addr, &proto::shutdown_line(), 0).unwrap();
+    assert!(proto::response_is_ok(&bye), "{bye}");
+    daemon.join().unwrap().unwrap();
+}
+
+fn meta_checkpoint(workload: &str, sampler: &str, chains: usize, rvs: usize) -> Checkpoint {
+    Checkpoint {
+        seed: 1,
+        steps: 10,
+        best_objective: 0.0,
+        best_x: vec![0; rvs],
+        anneal: None,
+        temper: None,
+        workload: Some(workload.to_string()),
+        sampler: Some(sampler.to_string()),
+        chains: Some(chains),
+    }
+}
+
+fn expect_mismatch(err: Mc2aError, what: &str) {
+    match err {
+        Mc2aError::CheckpointMismatch { what: got, run, checkpoint } => {
+            assert_eq!(got, what);
+            assert_ne!(run, checkpoint, "both sides must be reported");
+        }
+        other => panic!("expected CheckpointMismatch for {what}, got: {other}"),
+    }
+}
+
+/// `--init-from` mismatches are typed errors naming both sides, and a
+/// matching checkpoint resumes cleanly.
+#[test]
+fn init_from_checkpoint_rejects_mismatched_resume() {
+    let rvs = mc2a::engine::registry::lookup("optsicom").unwrap().model.num_vars();
+    let builder = || Engine::for_workload("optsicom").unwrap().steps(20).chains(2);
+
+    let err = builder()
+        .init_from_checkpoint(&meta_checkpoint("imageseg", "gumbel", 2, rvs))
+        .unwrap_err();
+    expect_mismatch(err, "workload");
+
+    let err = builder()
+        .init_from_checkpoint(&meta_checkpoint("optsicom", "cdf", 2, rvs))
+        .unwrap_err();
+    expect_mismatch(err, "sampler");
+
+    let err = builder()
+        .init_from_checkpoint(&meta_checkpoint("optsicom", "gumbel", 4, rvs))
+        .unwrap_err();
+    expect_mismatch(err, "chains");
+
+    let err = builder()
+        .init_from_checkpoint(&meta_checkpoint("optsicom", "gumbel", 2, rvs + 1))
+        .unwrap_err();
+    expect_mismatch(err, "model RVs");
+
+    // A checkpoint saved before the metadata existed only has the RV
+    // count to check; a matching one resumes and runs.
+    let mut legacy = meta_checkpoint("optsicom", "gumbel", 2, rvs);
+    legacy.workload = None;
+    legacy.sampler = None;
+    legacy.chains = None;
+    let metrics = builder()
+        .init_from_checkpoint(&legacy)
+        .unwrap()
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(metrics.chains.len(), 2);
+}

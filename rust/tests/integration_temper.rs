@@ -324,6 +324,9 @@ fn temper_state_round_trips_through_builder_and_checkpoint() {
         best_x: metrics.chains[0].best_x.clone(),
         anneal: None,
         temper: Some(state.clone()),
+        workload: None,
+        sampler: None,
+        chains: None,
     };
     let parsed = Checkpoint::from_json(&ck.to_json()).unwrap();
     assert_eq!(parsed.temper.as_ref(), Some(&state));
