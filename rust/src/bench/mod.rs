@@ -14,15 +14,16 @@ use std::fmt::Write as _;
 
 use crate::baselines::{self, BaselineWorkload};
 
-use crate::energy::{MaxCutModel, PottsGrid};
+use crate::energy::{EnergyModel, MaxCutModel, PottsGrid};
 use crate::engine::{Engine, Mc2aError};
 use crate::graph::erdos_renyi_with_edges;
 use crate::isa::HwConfig;
 use crate::mcmc::sampler::{sampler_tv_distance, GumbelLutSampler, GumbelSampler};
 use crate::mcmc::{
-    build_algo, run_to_accuracy, AlgoKind, AnnealPolicy, BetaSchedule, Ladder, SamplerKind,
+    build_algo, build_batch_algo, run_to_accuracy, AlgoKind, AnnealPolicy, BetaSchedule, Chain,
+    ChainBatch, Ladder, SamplerKind,
 };
-use crate::rng::Rng;
+use crate::rng::{Rng, LANES};
 use crate::roofline::{self, dse_sweep, WorkloadProfile};
 use crate::runtime::Runtime;
 use crate::sim::su::fig13_sweep;
@@ -619,6 +620,78 @@ pub fn fig15(quick: bool) -> String {
     out
 }
 
+/// One row of the per-kernel grid: kernel label plus measured scalar
+/// and batched samples/sec.
+struct KernelRate {
+    kernel: String,
+    scalar_sps: f64,
+    batched_sps: f64,
+}
+
+/// Raw single-threaded kernel throughput: `k` scalar [`Chain`]s stepped
+/// one after another versus one SoA [`ChainBatch`] driving the
+/// lane-parallel batched kernels, over a (workload × algorithm ×
+/// sampler) grid. Neither side uses a thread pool, so the ratio
+/// isolates the SIMD + SoA kernel speedup itself rather than
+/// scheduling effects.
+fn kernel_rates(quick: bool) -> Vec<KernelRate> {
+    use std::time::Instant;
+    let k = 32usize;
+    let sweeps = if quick { 4 } else { 16 };
+    let schedule = BetaSchedule::Constant(0.8);
+    let seed = 0x51AD;
+    let ising = PottsGrid::new(32, 32, 2, 0.6);
+    let cut = MaxCutModel::new(erdos_renyi_with_edges(256, 1024, 11), None);
+    let lut = SamplerKind::GumbelLut { size: 16, bits: 8 };
+    let combos: [(&str, &dyn EnergyModel, AlgoKind, SamplerKind, usize); 5] = [
+        ("ising32/gibbs/gumbel", &ising, AlgoKind::Gibbs, SamplerKind::Gumbel, 1),
+        ("ising32/gibbs/lut:16:8", &ising, AlgoKind::Gibbs, lut, 1),
+        ("maxcut256/gibbs/gumbel", &cut, AlgoKind::Gibbs, SamplerKind::Gumbel, 1),
+        ("maxcut256/ag/gumbel", &cut, AlgoKind::AsyncGibbs, SamplerKind::Gumbel, 1),
+        ("maxcut256/pas/gumbel", &cut, AlgoKind::Pas, SamplerKind::Gumbel, 4),
+    ];
+    let mut rows = Vec::new();
+    for (kernel, model, algo_kind, sampler, flips) in combos {
+        let scalar_sps = {
+            let mut chains: Vec<Chain<'_>> = (0..k)
+                .map(|c| {
+                    Chain::with_rng(
+                        model,
+                        build_algo(algo_kind, sampler, model, flips),
+                        schedule,
+                        Rng::fork(seed, c as u64),
+                    )
+                })
+                .collect();
+            for c in &mut chains {
+                c.run(1); // warmup: page-in + allocator
+            }
+            let before: u64 = chains.iter().map(|c| c.stats.cost.samples).sum();
+            let t0 = Instant::now();
+            for c in &mut chains {
+                c.run(sweeps);
+            }
+            let wall = t0.elapsed().as_secs_f64().max(1e-12);
+            let after: u64 = chains.iter().map(|c| c.stats.cost.samples).sum();
+            (after - before) as f64 / wall
+        };
+        let batched_sps = {
+            let mut algo =
+                build_batch_algo(algo_kind, sampler, model, flips).expect("batched kernel");
+            let mut batch = ChainBatch::new(model, schedule, seed, 0, k, None);
+            batch.run(algo.as_mut(), 1); // warmup
+            let before: u64 = batch.stats.iter().map(|s| s.cost.samples).sum();
+            let t0 = Instant::now();
+            batch.run(algo.as_mut(), sweeps);
+            let wall = t0.elapsed().as_secs_f64().max(1e-12);
+            let after: u64 = batch.stats.iter().map(|s| s.cost.samples).sum();
+            (after - before) as f64 / wall
+        };
+        rows.push(KernelRate { kernel: kernel.to_string(), scalar_sps, batched_sps });
+    }
+    rows
+}
+
 /// Many-chain throughput: the thread-per-chain [`SoftwareBackend`]
 /// versus the batched work-stealing backend on a 1024-variable Ising
 /// Gibbs sweep, 64 chains — the acceptance benchmark for the batched
@@ -687,6 +760,28 @@ pub fn many_chains(quick: bool) -> Result<String, Mc2aError> {
         .unwrap();
         rates.push(samples_per_sec);
     }
+    // Per-kernel grid: single-threaded scalar loop vs SoA batch, so
+    // the reported ratio is the SIMD + layout speedup itself.
+    let kernels = kernel_rates(quick);
+    writeln!(
+        out,
+        "\n# per-kernel single-thread samples/sec — 32 chains, scalar loop vs SoA batch \
+         (LANES = {LANES}, simd feature {})",
+        if cfg!(feature = "simd") { "on" } else { "off" }
+    )
+    .unwrap();
+    writeln!(out, "kernel,scalar_samples_per_sec,batched_samples_per_sec,kernel_speedup").unwrap();
+    for r in &kernels {
+        writeln!(
+            out,
+            "{},{:.4e},{:.4e},{:.2}",
+            r.kernel,
+            r.scalar_sps,
+            r.batched_sps,
+            r.batched_sps / r.scalar_sps.max(1e-12)
+        )
+        .unwrap();
+    }
     if let [scalar, batched] = rates[..] {
         writeln!(
             out,
@@ -694,12 +789,27 @@ pub fn many_chains(quick: bool) -> Result<String, Mc2aError> {
             batched / scalar.max(1e-12)
         )
         .unwrap();
+        let kernel_json: Vec<String> = kernels
+            .iter()
+            .map(|r| {
+                format!(
+                    "{{\"kernel\":\"{}\",\"scalar_samples_per_sec\":{},\
+                     \"batched_samples_per_sec\":{},\"speedup\":{:.4}}}",
+                    r.kernel,
+                    r.scalar_sps,
+                    r.batched_sps,
+                    r.batched_sps / r.scalar_sps.max(1e-12)
+                )
+            })
+            .collect();
         let json = format!(
             "{{\"bench\":\"chains\",\"quick\":{quick},\"chains\":{chains},\"steps\":{steps},\
-             \"threads\":{threads},\
+             \"threads\":{threads},\"lanes\":{LANES},\"simd_feature\":{},\
              \"software_samples_per_sec\":{scalar},\"batched_samples_per_sec\":{batched},\
-             \"batched_speedup\":{:.4}}}\n",
-            batched / scalar.max(1e-12)
+             \"batched_speedup\":{:.4},\"kernels\":[{}]}}\n",
+            cfg!(feature = "simd"),
+            batched / scalar.max(1e-12),
+            kernel_json.join(",")
         );
         writeln!(out, "{}", write_bench_artifact("BENCH_chains.json", &json)).unwrap();
     }
@@ -1135,5 +1245,17 @@ mod tests {
         assert!(t.contains("software,64"), "{t}");
         assert!(t.contains("batched,64,"), "{t}");
         assert!(t.contains("speedup"), "{t}");
+        // Per-kernel grid: every (workload × algo × sampler) row is
+        // present with its own scalar-vs-batched rate.
+        assert!(t.contains("kernel_speedup"), "{t}");
+        for kernel in [
+            "ising32/gibbs/gumbel",
+            "ising32/gibbs/lut:16:8",
+            "maxcut256/gibbs/gumbel",
+            "maxcut256/ag/gumbel",
+            "maxcut256/pas/gumbel",
+        ] {
+            assert!(t.contains(kernel), "missing kernel row {kernel}:\n{t}");
+        }
     }
 }

@@ -84,14 +84,21 @@ impl EnergyModel for MaxCutModel {
         let nbrs = self.graph.neighbors(i);
         let ws = self.graph.neighbor_weights(i);
         // Each (neighbor, weight) pair is fetched once and applied to
-        // all K chains via a contiguous gather of the SoA column.
+        // all K chains. State-major rows keep both candidate sides as
+        // contiguous K-wide slices; the select form lowers to a vector
+        // compare + masked subtract over each row.
+        let (row0, row1) = out.split_at_mut(k);
         for (e, &j) in nbrs.iter().enumerate() {
             let w = ws.map_or(1.0, |w| w[e]);
             let col = &xs[j as usize * k..j as usize * k + k];
-            for (c, &side) in col.iter().enumerate() {
-                // Neighbor on side 0 rewards side 1 (edge cut) and
-                // vice versa, as in the scalar kernel.
-                out[c * 2 + usize::from(side == 0)] -= w;
+            // Neighbor on side 0 rewards side 1 (edge cut) and vice
+            // versa, as in the scalar kernel.
+            for c in 0..k {
+                if col[c] == 0 {
+                    row1[c] -= w;
+                } else {
+                    row0[c] -= w;
+                }
             }
         }
     }
@@ -228,19 +235,21 @@ impl EnergyModel for MisModel {
     ) {
         out.clear();
         out.resize(k * 2, 0.0);
-        // Accumulate the selected-neighbor count in `out[c*2+1]`, then
+        // Accumulate the selected-neighbor count in the state-1 row
+        // (`out[k..2k]`, contiguous in the state-major layout), then
         // fold in the reward/penalty. Counts are small integers, so the
         // f32 accumulation matches the scalar `count() as f32` exactly.
+        let row1 = &mut out[k..];
         for &j in self.graph.neighbors(i) {
             let col = &xs[j as usize * k..j as usize * k + k];
-            for (c, &b) in col.iter().enumerate() {
+            for (o, &b) in row1.iter_mut().zip(col) {
                 if b == 1 {
-                    out[c * 2 + 1] += 1.0;
+                    *o += 1.0;
                 }
             }
         }
-        for c in 0..k {
-            out[c * 2 + 1] = -1.0 + self.penalty * out[c * 2 + 1];
+        for o in row1.iter_mut() {
+            *o = -1.0 + self.penalty * *o;
         }
     }
 

@@ -83,8 +83,10 @@ pub trait EnergyModel: Send + Sync {
     /// Batched conditional energies of RV `i` for `k` chains held in a
     /// structure-of-arrays state block: `xs[j * k + c]` is chain `c`'s
     /// value of RV `j` (column-major per variable). Fills `out` with
-    /// `k * num_states(i)` entries, chain-major: `out[c * S + s]` is
-    /// chain `c`'s energy for candidate state `s`.
+    /// `k * num_states(i)` entries, **state-major**: `out[s * k + c]`
+    /// is chain `c`'s energy for candidate state `s`, so the K-wide
+    /// row for one candidate state is a contiguous slice — the layout
+    /// the lane-parallel sampler kernels consume directly.
     ///
     /// The default gathers each chain's Markov blanket into
     /// `scratch.x` and evaluates the scalar kernel, so every model
@@ -110,7 +112,9 @@ pub trait EnergyModel: Send + Sync {
                 scratch.x[nb as usize] = xs[nb as usize * k + c];
             }
             self.local_energies(&scratch.x, i, &mut scratch.e);
-            out[c * s..(c + 1) * s].copy_from_slice(&scratch.e);
+            for (st, &v) in scratch.e.iter().enumerate() {
+                out[st * k + c] = v;
+            }
         }
     }
 
@@ -208,11 +212,13 @@ pub(crate) mod testutil {
             assert_eq!(out.len(), k * s, "var {i}: wrong batch output length");
             for (c, x) in chains.iter().enumerate() {
                 model.local_energies(x, i, &mut e);
-                assert_eq!(
-                    &out[c * s..(c + 1) * s],
-                    &e[..],
-                    "var {i} chain {c}: batched energies diverge from scalar"
-                );
+                for (st, &want) in e.iter().enumerate() {
+                    assert_eq!(
+                        out[st * k + c].to_bits(),
+                        want.to_bits(),
+                        "var {i} chain {c} state {st}: batched energy diverges from scalar"
+                    );
+                }
             }
         }
     }

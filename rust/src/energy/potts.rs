@@ -138,16 +138,23 @@ impl EnergyModel for PottsGrid {
             out.resize(k * l, 0.0);
         } else {
             out.reserve(k * l);
-            for _ in 0..k {
-                out.extend_from_slice(&self.unary[i * l..(i + 1) * l]);
+            for s in 0..l {
+                out.resize((s + 1) * k, self.unary[i * l + s]);
             }
         }
-        // One neighbor-index fetch serves the whole batch; the inner
-        // loop is a contiguous K-wide gather from the SoA column.
+        // One neighbor-index fetch serves the whole batch. State-major
+        // output makes each label's K-wide row contiguous, so the inner
+        // loop is a branch-free compare-and-subtract over the row that
+        // the compiler lowers to a vector mask + blend.
         for &nb in self.graph.neighbors(i) {
             let col = &xs[nb as usize * k..nb as usize * k + k];
-            for (c, &lbl) in col.iter().enumerate() {
-                out[c * l + lbl as usize] -= self.coupling;
+            for lbl in 0..l {
+                let row = &mut out[lbl * k..lbl * k + k];
+                for (o, &v) in row.iter_mut().zip(col) {
+                    if v as usize == lbl {
+                        *o -= self.coupling;
+                    }
+                }
             }
         }
     }

@@ -12,10 +12,13 @@
 //! chain count, as the thread count.
 //!
 //! Chains are **bit-identical** to the scalar backend for every
-//! algorithm: Gibbs / Block Gibbs / MH run the batched kernels (whose
-//! per-chain RNG consumption matches the scalar kernels exactly), and
-//! PAS / Async Gibbs fall back to the shared scalar chain runner —
-//! still scheduled by the pool, so the thread-count benefit remains.
+//! algorithm: Gibbs / Block Gibbs / MH / Async Gibbs / PAS all run
+//! batched kernels whose per-chain RNG consumption matches the scalar
+//! kernels exactly. The kernels themselves process the K chain
+//! columns `LANES` at a time (see [`crate::rng::LaneRng`] and the
+//! lane-parallel Gumbel argmax in `mcmc::sampler`), so each work item
+//! is SIMD-parallel across its batch as well as amortizing
+//! per-variable costs.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Mutex;
@@ -105,7 +108,7 @@ impl BatchedSoftwareBackend {
                     spec.init_state.as_deref(),
                 );
                 batch.set_step_offset(spec.beta_offset);
-                let algo = build_batch_algo(spec.algo, spec.sampler, model)
+                let algo = build_batch_algo(spec.algo, spec.sampler, model, spec.pas_flips)
                     .expect("batched kernel exists");
                 units.push(ExecUnit::batch(batch, algo));
                 start = end;
@@ -145,8 +148,8 @@ fn run_batch_item(
     }
     let k = end - start;
     let t0 = Instant::now();
-    let mut algo =
-        build_batch_algo(spec.algo, spec.sampler, model).expect("batched kernel exists");
+    let mut algo = build_batch_algo(spec.algo, spec.sampler, model, spec.pas_flips)
+        .expect("batched kernel exists");
     let mut batch = ChainBatch::new(
         model,
         spec.schedule,
@@ -263,9 +266,10 @@ impl ExecutionBackend for BatchedSoftwareBackend {
         chains: usize,
         ctx: &ChainCtx<'_>,
     ) -> Result<Vec<ChainResult>, Mc2aError> {
-        // Algorithms without a batched kernel run chain-by-chain, so
-        // give the pool chain-granularity items to steal — otherwise a
-        // whole batch of scalar chains would serialize on one worker.
+        // Every current algorithm has a batched kernel; the guard keeps
+        // chain-granularity stealing for any future kernel that ships
+        // scalar-only (a batch of scalar chains would otherwise
+        // serialize on one worker).
         let batch = if batch_supported(spec.algo) {
             self.batch.max(1)
         } else {
@@ -369,7 +373,10 @@ mod tests {
     }
 
     #[test]
-    fn pas_falls_back_to_scalar_chains() {
+    fn batched_pas_matches_scalar_backend() {
+        // PAS runs the true batched kernel now (it fell back to scalar
+        // chains before PR 7); trajectories must stay bit-identical,
+        // including the pas_flips path length carried by the spec.
         let m = PottsGrid::new(4, 4, 2, 0.6);
         let spec = spec(AlgoKind::Pas, 10);
         let reference = run(&SoftwareBackend, &m, &spec, 4);
@@ -377,6 +384,19 @@ mod tests {
         for (a, b) in reference.iter().zip(&got) {
             assert_eq!(a.best_x, b.best_x);
             assert_eq!(a.objective_trace, b.objective_trace);
+        }
+    }
+
+    #[test]
+    fn batched_async_gibbs_matches_scalar_backend() {
+        let m = PottsGrid::new(4, 4, 3, 0.6);
+        let spec = spec(AlgoKind::AsyncGibbs, 12);
+        let reference = run(&SoftwareBackend, &m, &spec, 5);
+        let got = run(&BatchedSoftwareBackend::new(3).with_threads(2), &m, &spec, 5);
+        for (a, b) in reference.iter().zip(&got) {
+            assert_eq!(a.best_x, b.best_x);
+            assert_eq!(a.objective_trace, b.objective_trace);
+            assert_eq!(a.marginal0, b.marginal0);
         }
     }
 

@@ -51,8 +51,11 @@ pub struct Checkpoint {
     /// rejects resuming under a different workload with a typed
     /// [`Mc2aError::CheckpointMismatch`].
     pub workload: Option<String>,
-    /// Sampler name ("cdf" / "gumbel" / "lut") the run used; checked
-    /// on resume like [`Checkpoint::workload`].
+    /// Canonical sampler spec ("cdf" / "gumbel" / "lut:SIZE:BITS" —
+    /// [`crate::mcmc::SamplerKind::spec`]) the run used; checked on
+    /// resume like [`Checkpoint::workload`]. Checkpoints written
+    /// before the LUT shape was serialized hold the bare family name
+    /// ("lut"), which resume still accepts.
     pub sampler: Option<String>,
     /// Chain count of the saving run; checked on resume like
     /// [`Checkpoint::workload`].
@@ -320,7 +323,7 @@ pub struct JobEnvelope {
     pub workload: String,
     /// Algorithm name, lowercase ("mh", "gibbs", "bg", "ag", "pas").
     pub algo: String,
-    /// Sampler name ("cdf", "gumbel", "lut").
+    /// Canonical sampler spec ("cdf", "gumbel", "lut:SIZE:BITS").
     pub sampler: String,
     /// Backend name ("sw" or "sim").
     pub backend: String,

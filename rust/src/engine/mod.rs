@@ -343,9 +343,16 @@ impl<'m> EngineBuilder<'m> {
             }
         }
         if let Some(saved) = ck.sampler.as_deref() {
-            let run = self.sampler.name();
-            if !run.eq_ignore_ascii_case(saved) {
-                return mismatch("sampler", run.to_string(), saved.to_string());
+            // Accept the canonical spec (`lut:16:8`), an equivalent
+            // parseable spelling, or (pre-spec checkpoints) the bare
+            // family name (`lut`).
+            let run = self.sampler.spec();
+            let equivalent = SamplerKind::parse(saved).map(|k| k == self.sampler);
+            if !run.eq_ignore_ascii_case(saved)
+                && equivalent != Ok(true)
+                && !self.sampler.name().eq_ignore_ascii_case(saved)
+            {
+                return mismatch("sampler", run, saved.to_string());
             }
         }
         if let Some(saved) = ck.chains {

@@ -557,7 +557,7 @@ impl JobServer {
         let state = JobState::parse(&env.state).ok_or_else(|| broken("state", &env.state))?;
         let algo = AlgoKind::parse(&env.algo).ok_or_else(|| broken("algo", &env.algo))?;
         let sampler =
-            SamplerKind::parse(&env.sampler).ok_or_else(|| broken("sampler", &env.sampler))?;
+            SamplerKind::parse(&env.sampler).map_err(|_| broken("sampler", &env.sampler))?;
         let priority =
             Priority::parse(&env.priority).ok_or_else(|| broken("priority", &env.priority))?;
         let backend = match backend {
@@ -917,14 +917,14 @@ fn envelope_of(id: JobId, job: &Job) -> JobEnvelope {
         anneal: None,
         temper: None,
         workload: Some(job.spec.workload.clone()),
-        sampler: Some(job.cspec.sampler.name().to_string()),
+        sampler: Some(job.cspec.sampler.spec()),
         chains: Some(job.spec.chains),
     };
     JobEnvelope {
         job_id: id,
         workload: job.spec.workload.clone(),
         algo: job.algo.name().to_ascii_lowercase(),
-        sampler: job.cspec.sampler.name().to_string(),
+        sampler: job.cspec.sampler.spec(),
         backend: job.spec.backend.name().to_string(),
         priority: job.spec.priority.name().to_string(),
         state: job.state.name().to_string(),

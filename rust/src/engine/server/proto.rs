@@ -256,8 +256,8 @@ pub fn parse_request(line: &str) -> Result<Request, Mc2aError> {
                 );
             }
             if let Some(JVal::Str(s)) = get("sampler") {
-                spec.sampler = SamplerKind::parse(s)
-                    .ok_or_else(|| perr(line, &format!("unknown sampler `{s}`")))?;
+                spec.sampler =
+                    SamplerKind::parse(s).map_err(|e| perr(line, &e.to_string()))?;
             }
             if let Some(JVal::Str(s)) = get("backend") {
                 spec.backend = ServeBackend::parse(s)
@@ -455,7 +455,7 @@ pub fn submit_line(spec: &JobSpec) -> String {
         spec.chains,
         spec.seed,
         spec.beta,
-        jstr(spec.sampler.name()),
+        jstr(&spec.sampler.spec()),
         jstr(spec.backend.name()),
         jstr(spec.priority.name()),
     );

@@ -4,7 +4,7 @@
 //! mc2a table1 [--full]
 //! mc2a bench <fig5|fig6|fig11|fig12|fig13|fig14|fig15|chains|cores|anneal|temper|headline|all> [--full]
 //! mc2a run --workload <name> [--algo mh|gibbs|bg|ag|pas]
-//!          [--sampler cdf|gumbel|lut] [--steps N] [--chains N]
+//!          [--sampler cdf|gumbel|lut|lut:SIZE:BITS] [--steps N] [--chains N]
 //!          [--backend sim|sw|batched|multicore|runtime]
 //!          [--batch K] [--threads T] [--cores C]
 //!          [--beta B | --schedule const:B|linear:FROM:TO:STEPS|geom:FROM:TO:RATE]
@@ -48,7 +48,7 @@ USAGE:
   mc2a table1 [--full]
   mc2a bench <fig5|fig6|fig11|fig12|fig13|fig14|fig15|chains|cores|anneal|temper|headline|all> [--full]
   mc2a run --workload <name> [--algo mh|gibbs|bg|ag|pas]
-           [--sampler cdf|gumbel|lut] [--steps N] [--chains N]
+           [--sampler cdf|gumbel|lut|lut:SIZE:BITS] [--steps N] [--chains N]
            [--backend sim|sw|batched|multicore|runtime]
            [--batch K] [--threads T] [--cores C]
            [--beta B | --schedule const:B|linear:FROM:TO:STEPS|geom:FROM:TO:RATE]
@@ -173,9 +173,8 @@ fn cmd_run(args: &[String]) -> Result<(), Mc2aError> {
         builder = builder.algo(algo);
     }
     if let Some(s) = flag_value(args, "--sampler") {
-        let sampler = SamplerKind::parse(&s).ok_or_else(|| {
-            Mc2aError::InvalidConfig(format!("unknown sampler {s:?} (cdf|gumbel|lut)"))
-        })?;
+        let sampler = SamplerKind::parse(&s)
+            .map_err(|e| Mc2aError::InvalidConfig(e.to_string()))?;
         builder = builder.sampler(sampler);
     }
     let steps: usize = parsed_flag(args, "--steps")?.unwrap_or(200);
@@ -341,7 +340,7 @@ fn cmd_run(args: &[String]) -> Result<(), Mc2aError> {
         engine.model().num_vars(),
         engine.model().interaction().num_edges(),
         engine.spec().algo.name(),
-        engine.spec().sampler.name(),
+        engine.spec().sampler.spec(),
         engine.backend_name(),
     );
     let metrics = engine.run()?;
@@ -430,7 +429,7 @@ fn cmd_run(args: &[String]) -> Result<(), Mc2aError> {
             anneal: engine.anneal_state(),
             temper: engine.temper_state(),
             workload: engine.workload_name().map(str::to_string),
-            sampler: Some(engine.spec().sampler.name().to_string()),
+            sampler: Some(engine.spec().sampler.spec()),
             chains: Some(chains),
         };
         ck.save(&path)?;
@@ -603,9 +602,8 @@ fn cmd_client(args: &[String]) -> Result<(), Mc2aError> {
                 })?);
             }
             if let Some(s) = flag_value(args, "--sampler") {
-                spec.sampler = SamplerKind::parse(&s).ok_or_else(|| {
-                    Mc2aError::InvalidConfig(format!("unknown sampler {s:?} (cdf|gumbel|lut)"))
-                })?;
+                spec.sampler = SamplerKind::parse(&s)
+                    .map_err(|e| Mc2aError::InvalidConfig(e.to_string()))?;
             }
             if let Some(b) = flag_value(args, "--backend") {
                 spec.backend = ServeBackend::parse(&b).ok_or_else(|| {

@@ -20,6 +20,7 @@
 
 use crate::energy::{BatchScratch, EnergyModel};
 use crate::graph::color_greedy;
+use crate::mcmc::pas::PathAuxiliarySampler;
 use crate::mcmc::sampler::CategoricalSampler;
 use crate::mcmc::{AlgoKind, BetaSchedule, SamplerKind, StepStats};
 use crate::rng::Rng;
@@ -44,24 +45,36 @@ pub trait BatchMcmc: Send {
     fn name(&self) -> &'static str;
 }
 
-/// True when [`build_batch_algo`] has a batched kernel for `kind`
-/// (PAS and Async Gibbs fall back to scalar chains).
+/// True when [`build_batch_algo`] has a batched kernel for `kind`.
+/// Every algorithm now has one (PAS and Async Gibbs landed last); the
+/// predicate stays as the engine's guard so a future kernel without a
+/// batched twin degrades gracefully to scalar chains.
 pub fn batch_supported(kind: AlgoKind) -> bool {
-    matches!(kind, AlgoKind::Gibbs | AlgoKind::BlockGibbs | AlgoKind::Mh)
+    matches!(
+        kind,
+        AlgoKind::Gibbs
+            | AlgoKind::BlockGibbs
+            | AlgoKind::Mh
+            | AlgoKind::AsyncGibbs
+            | AlgoKind::Pas
+    )
 }
 
 /// Build the batched kernel for `kind`, or `None` when only the scalar
-/// path exists.
+/// path exists. `pas_flips` is PAS's path length `L` (ignored by the
+/// other algorithms), mirroring [`crate::mcmc::build_algo`].
 pub fn build_batch_algo(
     kind: AlgoKind,
     sampler: SamplerKind,
     model: &dyn EnergyModel,
+    pas_flips: usize,
 ) -> Option<Box<dyn BatchMcmc>> {
     match kind {
         AlgoKind::Gibbs => Some(Box::new(BatchGibbs::new(sampler.build()))),
         AlgoKind::BlockGibbs => Some(Box::new(BatchBlockGibbs::new(sampler.build(), model))),
         AlgoKind::Mh => Some(Box::new(BatchMh::new())),
-        AlgoKind::AsyncGibbs | AlgoKind::Pas => None,
+        AlgoKind::AsyncGibbs => Some(Box::new(BatchAsyncGibbs::new(sampler.build()))),
+        AlgoKind::Pas => Some(Box::new(BatchPas::new(pas_flips.max(1)))),
     }
 }
 
@@ -460,6 +473,147 @@ impl BatchMcmc for BatchMh {
     }
 }
 
+/// Batched asynchronous (hogwild) Gibbs: one step snapshots the whole
+/// SoA block, then resamples every variable for all K chains against
+/// the snapshot — the batched twin of the scalar `AsyncGibbs` kernel,
+/// with the conditional build and the categorical draw both K-wide.
+pub struct BatchAsyncGibbs {
+    sampler: Box<dyn CategoricalSampler>,
+    e: Vec<f32>,
+    scratch: BatchScratch,
+    out: Vec<u32>,
+    snapshot: Vec<u32>,
+}
+
+impl BatchAsyncGibbs {
+    /// Batched Async-Gibbs kernel backed by `sampler`.
+    pub fn new(sampler: Box<dyn CategoricalSampler>) -> BatchAsyncGibbs {
+        BatchAsyncGibbs {
+            sampler,
+            e: Vec::new(),
+            scratch: BatchScratch::default(),
+            out: Vec::new(),
+            snapshot: Vec::new(),
+        }
+    }
+}
+
+impl BatchMcmc for BatchAsyncGibbs {
+    fn step_batch(
+        &mut self,
+        model: &dyn EnergyModel,
+        states: &mut [u32],
+        k: usize,
+        betas: &[f32],
+        rngs: &mut [Rng],
+        stats: &mut [StepStats],
+    ) {
+        self.snapshot.clear();
+        self.snapshot.extend_from_slice(states);
+        // Vars ascending, one draw per chain per var — exactly the
+        // order each scalar chain consumes its stream.
+        for i in 0..model.num_vars() {
+            let s = model.num_states(i);
+            model.local_energies_batch(&self.snapshot, k, i, &mut self.e, &mut self.scratch);
+            self.out.resize(k, 0);
+            self.sampler.sample_batch(&self.e, s, betas, rngs, &mut self.out);
+            states[i * k..(i + 1) * k].copy_from_slice(&self.out);
+            let mut cost = model.update_cost(i);
+            cost.ops += self.sampler.ops_per_sample(s);
+            for st in stats.iter_mut() {
+                st.updates += 1;
+                st.accepted += 1;
+                st.cost.add(cost);
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "AG"
+    }
+}
+
+/// Batched Path Auxiliary Sampler. The expensive part of a PAS step —
+/// the full `O(N · card)` move-weight build at the path head — runs
+/// batched: one K-wide conditional-energy build per variable fills all
+/// K chains' weight tables, amortizing the neighbor-index walk exactly
+/// like the Gibbs kernels. The path construction and MH correction
+/// that follow are inherently per chain (data-dependent path lengths
+/// and move sequences), so each chain then runs
+/// `PathAuxiliarySampler::step_prepared` on its gathered state.
+///
+/// The head build draws no randomness, so chain `c`'s RNG stream is
+/// consumed in exactly the scalar order — trajectories stay
+/// bit-identical to scalar PAS chains.
+pub struct BatchPas {
+    path_len: usize,
+    /// One weight table per chain (weights are state-dependent, so
+    /// they cannot be shared).
+    per_chain: Vec<PathAuxiliarySampler>,
+    e: Vec<f32>,
+    scratch: BatchScratch,
+    /// Gather buffer for one chain's assignment.
+    x: Vec<u32>,
+}
+
+impl BatchPas {
+    /// Batched PAS kernel flipping `path_len` sites per step.
+    pub fn new(path_len: usize) -> BatchPas {
+        assert!(path_len >= 1);
+        BatchPas {
+            path_len,
+            per_chain: Vec::new(),
+            e: Vec::new(),
+            scratch: BatchScratch::default(),
+            x: Vec::new(),
+        }
+    }
+}
+
+impl BatchMcmc for BatchPas {
+    fn step_batch(
+        &mut self,
+        model: &dyn EnergyModel,
+        states: &mut [u32],
+        k: usize,
+        betas: &[f32],
+        rngs: &mut [Rng],
+        stats: &mut [StepStats],
+    ) {
+        let n = model.num_vars();
+        if self.per_chain.len() != k {
+            self.per_chain = (0..k)
+                .map(|_| PathAuxiliarySampler::new(self.path_len))
+                .collect();
+        }
+        for p in self.per_chain.iter_mut() {
+            p.ensure_layout(model);
+        }
+        // Batched path-head build: one K-wide energy build per var
+        // serves every chain's weight table.
+        for j in 0..n {
+            model.local_energies_batch(states, k, j, &mut self.e, &mut self.scratch);
+            for (c, p) in self.per_chain.iter_mut().enumerate() {
+                p.load_weights_for_var(j, &self.e, k, c, states[j * k + c], betas[c]);
+            }
+        }
+        // Per-chain path + MH correction on gathered state.
+        for c in 0..k {
+            self.x.clear();
+            self.x.extend(states[c..].iter().step_by(k).copied());
+            let st = self.per_chain[c].step_prepared(model, &mut self.x, betas[c], &mut rngs[c]);
+            for (i, &v) in self.x.iter().enumerate() {
+                states[i * k + c] = v;
+            }
+            stats[c].add(&st);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "PAS"
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -469,16 +623,26 @@ mod tests {
     /// Batched kernels must reproduce the scalar chains bit-for-bit:
     /// same states, same best-so-far, same RV-0 marginals.
     fn assert_matches_scalar(algo_kind: AlgoKind, sampler: SamplerKind, steps: usize) {
+        assert_matches_scalar_flips(algo_kind, sampler, steps, 1);
+    }
+
+    fn assert_matches_scalar_flips(
+        algo_kind: AlgoKind,
+        sampler: SamplerKind,
+        steps: usize,
+        flips: usize,
+    ) {
         let m = PottsGrid::new(6, 5, 3, 0.8);
         let (seed, k) = (0xBA7C4u64, 5usize);
 
         let mut batch = ChainBatch::new(&m, BetaSchedule::Constant(0.9), seed, 0, k, None);
-        let mut batch_algo = build_batch_algo(algo_kind, sampler, &m).expect("batched kernel");
+        let mut batch_algo =
+            build_batch_algo(algo_kind, sampler, &m, flips).expect("batched kernel");
         batch.run(&mut *batch_algo, steps);
 
         let mut gathered = Vec::new();
         for c in 0..k {
-            let algo = build_algo(algo_kind, sampler, &m, 1);
+            let algo = build_algo(algo_kind, sampler, &m, flips);
             let mut chain =
                 Chain::with_rng(&m, algo, BetaSchedule::Constant(0.9), Rng::fork(seed, c as u64));
             chain.run(steps);
@@ -529,7 +693,7 @@ mod tests {
         let m = PottsGrid::new(4, 4, 2, 0.5);
         let x0 = vec![1u32; 16];
         let mut batch = ChainBatch::new(&m, BetaSchedule::Constant(1.0), 3, 0, 3, Some(&x0));
-        let mut algo = build_batch_algo(AlgoKind::Gibbs, SamplerKind::Gumbel, &m).unwrap();
+        let mut algo = build_batch_algo(AlgoKind::Gibbs, SamplerKind::Gumbel, &m, 1).unwrap();
         batch.run(&mut *algo, 10);
         let mut gathered = Vec::new();
         for c in 0..3 {
@@ -551,10 +715,10 @@ mod tests {
         let m = PottsGrid::new(5, 4, 3, 0.7);
         let (seed, k, steps) = (0x5EEDu64, 4usize, 20usize);
         let mut uniform = ChainBatch::new(&m, BetaSchedule::Constant(0.8), seed, 0, k, None);
-        let mut a1 = build_batch_algo(AlgoKind::Gibbs, SamplerKind::Gumbel, &m).unwrap();
+        let mut a1 = build_batch_algo(AlgoKind::Gibbs, SamplerKind::Gumbel, &m, 1).unwrap();
         uniform.run(&mut *a1, steps);
         let mut per_chain = ChainBatch::new(&m, BetaSchedule::Constant(0.8), seed, 0, k, None);
-        let mut a2 = build_batch_algo(AlgoKind::Gibbs, SamplerKind::Gumbel, &m).unwrap();
+        let mut a2 = build_batch_algo(AlgoKind::Gibbs, SamplerKind::Gumbel, &m, 1).unwrap();
         per_chain.run_betas_per_chain(&mut *a2, &[0.8; 4], steps);
         let (mut ga, mut gb) = (Vec::new(), Vec::new());
         for c in 0..k {
@@ -577,14 +741,16 @@ mod tests {
             (AlgoKind::Gibbs, SamplerKind::Gumbel),
             (AlgoKind::BlockGibbs, SamplerKind::Cdf),
             (AlgoKind::Mh, SamplerKind::Gumbel),
+            (AlgoKind::AsyncGibbs, SamplerKind::Gumbel),
+            (AlgoKind::Pas, SamplerKind::Gumbel),
         ] {
             let mut batch =
                 ChainBatch::new(&m, BetaSchedule::Constant(1.0), seed, 0, betas.len(), None);
-            let mut algo = build_batch_algo(algo_kind, sampler, &m).unwrap();
+            let mut algo = build_batch_algo(algo_kind, sampler, &m, 2).unwrap();
             batch.run_betas_per_chain(&mut *algo, &betas, steps);
             let mut gathered = Vec::new();
             for (c, &beta) in betas.iter().enumerate() {
-                let scalar = build_algo(algo_kind, sampler, &m, 1);
+                let scalar = build_algo(algo_kind, sampler, &m, 2);
                 let mut chain = Chain::with_rng(
                     &m,
                     scalar,
@@ -601,11 +767,34 @@ mod tests {
     }
 
     #[test]
-    fn pas_and_async_gibbs_have_no_batched_kernel() {
+    fn batched_async_gibbs_is_bit_identical_to_scalar() {
+        assert_matches_scalar(AlgoKind::AsyncGibbs, SamplerKind::Gumbel, 25);
+        assert_matches_scalar(AlgoKind::AsyncGibbs, SamplerKind::Cdf, 25);
+    }
+
+    #[test]
+    fn batched_pas_is_bit_identical_to_scalar() {
+        assert_matches_scalar_flips(AlgoKind::Pas, SamplerKind::Gumbel, 15, 1);
+        assert_matches_scalar_flips(AlgoKind::Pas, SamplerKind::Gumbel, 15, 3);
+    }
+
+    #[test]
+    fn every_algorithm_has_a_batched_kernel() {
+        // PR 2 shipped without batched PAS / Async Gibbs; this pin
+        // replaced its negative twin when those kernels landed.
         let m = PottsGrid::new(3, 3, 2, 0.5);
-        assert!(build_batch_algo(AlgoKind::Pas, SamplerKind::Gumbel, &m).is_none());
-        assert!(build_batch_algo(AlgoKind::AsyncGibbs, SamplerKind::Gumbel, &m).is_none());
-        assert!(!batch_supported(AlgoKind::Pas));
-        assert!(batch_supported(AlgoKind::BlockGibbs));
+        for kind in [
+            AlgoKind::Gibbs,
+            AlgoKind::BlockGibbs,
+            AlgoKind::Mh,
+            AlgoKind::AsyncGibbs,
+            AlgoKind::Pas,
+        ] {
+            assert!(batch_supported(kind), "{kind:?}");
+            assert!(
+                build_batch_algo(kind, SamplerKind::Gumbel, &m, 2).is_some(),
+                "{kind:?}"
+            );
+        }
     }
 }

@@ -89,6 +89,51 @@ pub enum SamplerKind {
     },
 }
 
+/// Why a sampler spec string failed to parse. The error names the
+/// accepted forms, so CLI and server messages are self-describing.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SamplerParseError {
+    /// The string matches no known sampler name or spec form.
+    Unknown(String),
+    /// A `lut:SIZE:BITS` spec with a missing or non-numeric field.
+    BadLutField {
+        /// The offending spec string.
+        spec: String,
+        /// Which field failed (`SIZE` or `BITS`).
+        field: &'static str,
+    },
+    /// `lut:SIZE:BITS` parsed but the values fall outside the
+    /// supported hardware range.
+    LutOutOfRange {
+        /// Requested LUT entries.
+        size: usize,
+        /// Requested fixed-point bits.
+        bits: u32,
+    },
+}
+
+impl std::fmt::Display for SamplerParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SamplerParseError::Unknown(s) => write!(
+                f,
+                "unknown sampler `{s}` (accepted: cdf | gumbel | lut | lut:SIZE:BITS, \
+                 e.g. lut:64:6)"
+            ),
+            SamplerParseError::BadLutField { spec, field } => write!(
+                f,
+                "bad {field} in sampler `{spec}` (accepted form: lut:SIZE:BITS, e.g. lut:16:8)"
+            ),
+            SamplerParseError::LutOutOfRange { size, bits } => write!(
+                f,
+                "lut:{size}:{bits} out of range (need SIZE in 2..=1048576, BITS in 2..=24)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SamplerParseError {}
+
 impl SamplerKind {
     /// Short name used in CLI output.
     pub fn name(&self) -> &'static str {
@@ -99,22 +144,63 @@ impl SamplerKind {
         }
     }
 
-    /// Parse from a CLI string (`cdf`, `gumbel`, `lut`; the LUT uses
-    /// the paper's 16-entry / 8-bit configuration).
-    pub fn parse(s: &str) -> Option<SamplerKind> {
-        match s.to_ascii_lowercase().as_str() {
-            "cdf" => Some(SamplerKind::Cdf),
-            "gumbel" => Some(SamplerKind::Gumbel),
-            "lut" | "gumbel-lut" => Some(SamplerKind::GumbelLut { size: 16, bits: 8 }),
-            _ => None,
+    /// Canonical spec string that [`SamplerKind::parse`] round-trips
+    /// exactly: `cdf`, `gumbel`, or `lut:SIZE:BITS`. Serialization
+    /// (checkpoints, job envelopes) uses this instead of
+    /// [`SamplerKind::name`] so a non-default LUT shape survives a
+    /// save/restore cycle.
+    pub fn spec(&self) -> String {
+        match self {
+            SamplerKind::Cdf => "cdf".to_string(),
+            SamplerKind::Gumbel => "gumbel".to_string(),
+            SamplerKind::GumbelLut { size, bits } => format!("lut:{size}:{bits}"),
         }
+    }
+
+    /// Parse from a CLI/spec string: `cdf`, `gumbel`, bare `lut` /
+    /// `gumbel-lut` (the paper's 16-entry / 8-bit configuration), or
+    /// an explicit `lut:SIZE:BITS` shape.
+    pub fn parse(s: &str) -> Result<SamplerKind, SamplerParseError> {
+        let low = s.to_ascii_lowercase();
+        match low.as_str() {
+            "cdf" => return Ok(SamplerKind::Cdf),
+            "gumbel" => return Ok(SamplerKind::Gumbel),
+            "lut" | "gumbel-lut" => return Ok(SamplerKind::GumbelLut { size: 16, bits: 8 }),
+            _ => {}
+        }
+        if let Some(rest) = low
+            .strip_prefix("lut:")
+            .or_else(|| low.strip_prefix("gumbel-lut:"))
+        {
+            let (size_s, bits_s) =
+                rest.split_once(':')
+                    .ok_or_else(|| SamplerParseError::BadLutField {
+                        spec: s.to_string(),
+                        field: "BITS",
+                    })?;
+            let size: usize = size_s.parse().map_err(|_| SamplerParseError::BadLutField {
+                spec: s.to_string(),
+                field: "SIZE",
+            })?;
+            let bits: u32 = bits_s.parse().map_err(|_| SamplerParseError::BadLutField {
+                spec: s.to_string(),
+                field: "BITS",
+            })?;
+            // Match `GumbelLutSampler::new`'s assertions (plus a sane
+            // allocation cap) so a parsed spec can never panic later.
+            if size < 2 || size > 1 << 20 || !(2..=24).contains(&bits) {
+                return Err(SamplerParseError::LutOutOfRange { size, bits });
+            }
+            return Ok(SamplerKind::GumbelLut { size, bits });
+        }
+        Err(SamplerParseError::Unknown(s.to_string()))
     }
 
     /// Instantiate the sampler.
     pub fn build(&self) -> Box<dyn CategoricalSampler> {
         match *self {
             SamplerKind::Cdf => Box::new(CdfSampler),
-            SamplerKind::Gumbel => Box::new(GumbelSampler::default()),
+            SamplerKind::Gumbel => Box::new(GumbelSampler),
             SamplerKind::GumbelLut { size, bits } => Box::new(GumbelLutSampler::new(size, bits)),
         }
     }
@@ -451,6 +537,58 @@ mod tests {
             assert_eq!(AlgoKind::parse(&k.name().to_ascii_lowercase()), Some(k));
         }
         assert_eq!(AlgoKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn sampler_kind_spec_roundtrip() {
+        for k in [
+            SamplerKind::Cdf,
+            SamplerKind::Gumbel,
+            SamplerKind::GumbelLut { size: 16, bits: 8 },
+            SamplerKind::GumbelLut { size: 64, bits: 6 },
+            SamplerKind::GumbelLut { size: 1024, bits: 24 },
+        ] {
+            assert_eq!(SamplerKind::parse(&k.spec()), Ok(k));
+        }
+        // Legacy shorthand stays accepted, defaults to the paper shape.
+        assert_eq!(
+            SamplerKind::parse("lut"),
+            Ok(SamplerKind::GumbelLut { size: 16, bits: 8 })
+        );
+        assert_eq!(
+            SamplerKind::parse("GUMBEL-LUT:32:6"),
+            Ok(SamplerKind::GumbelLut { size: 32, bits: 6 })
+        );
+    }
+
+    #[test]
+    fn sampler_kind_parse_errors_name_accepted_forms() {
+        let err = SamplerKind::parse("nope").unwrap_err();
+        assert_eq!(err, SamplerParseError::Unknown("nope".to_string()));
+        assert!(err.to_string().contains("lut:SIZE:BITS"), "{err}");
+
+        // Missing BITS field.
+        let err = SamplerKind::parse("lut:16").unwrap_err();
+        assert!(matches!(
+            err,
+            SamplerParseError::BadLutField { field: "BITS", .. }
+        ));
+        assert!(err.to_string().contains("lut:SIZE:BITS"), "{err}");
+
+        // Non-numeric SIZE.
+        let err = SamplerKind::parse("lut:big:8").unwrap_err();
+        assert!(matches!(
+            err,
+            SamplerParseError::BadLutField { field: "SIZE", .. }
+        ));
+
+        // Values the sampler constructor would reject.
+        for bad in ["lut:1:8", "lut:16:1", "lut:16:25", "lut:2097152:8"] {
+            assert!(matches!(
+                SamplerKind::parse(bad),
+                Err(SamplerParseError::LutOutOfRange { .. })
+            ));
+        }
     }
 
     #[test]

@@ -50,7 +50,7 @@ impl PathAuxiliarySampler {
         self.path_len
     }
 
-    fn ensure_layout(&mut self, model: &dyn EnergyModel) {
+    pub(crate) fn ensure_layout(&mut self, model: &dyn EnergyModel) {
         if !self.offsets.is_empty() {
             return;
         }
@@ -62,6 +62,36 @@ impl PathAuxiliarySampler {
         }
         self.offsets.push(acc);
         self.weights = vec![0.0; acc];
+    }
+
+    /// Fill RV `j`'s move weights from a **state-major batched** energy
+    /// block (`e[s * k + c]`, chain `c` of `k`) instead of a scalar
+    /// `local_energies` call — the batched PAS kernel's path-head
+    /// build. The arithmetic replicates [`Self::refresh_var`] exactly
+    /// (f32 `es - cur`, then the clamped f64 exponent), and the batched
+    /// energies themselves are pinned bit-identical to the scalar
+    /// kernel, so the resulting weight table matches bitwise.
+    pub(crate) fn load_weights_for_var(
+        &mut self,
+        j: usize,
+        e: &[f32],
+        k: usize,
+        c: usize,
+        cur_state: u32,
+        beta: f32,
+    ) {
+        let off = self.offsets[j];
+        let card = self.offsets[j + 1] - off;
+        let cur = e[cur_state as usize * k + c];
+        for s in 0..card {
+            let es = e[s * k + c];
+            self.weights[off + s] = if s as u32 == cur_state {
+                0.0
+            } else {
+                let expo = (-0.5 * beta as f64 * (es - cur) as f64).clamp(-EXP_CLAMP, EXP_CLAMP);
+                expo.exp()
+            };
+        }
     }
 
     /// Recompute move weights for RV `j` from the current state.
@@ -105,23 +135,22 @@ impl PathAuxiliarySampler {
     }
 }
 
-impl Mcmc for PathAuxiliarySampler {
-    fn step(
+impl PathAuxiliarySampler {
+    /// One PAS step given an already-built weight table for the path
+    /// head (via [`Self::refresh_var`] over every var, or the batched
+    /// [`Self::load_weights_for_var`]). Everything from the first RNG
+    /// draw onward lives here, so the scalar and batched paths consume
+    /// identical draw sequences.
+    pub(crate) fn step_prepared(
         &mut self,
         model: &dyn EnergyModel,
         x: &mut [u32],
         beta: f32,
         rng: &mut Rng,
     ) -> StepStats {
-        self.ensure_layout(model);
         let n = model.num_vars();
         let x0 = x.to_vec();
         let e0 = model.energy(x);
-
-        // Full weight build at the path head (the paper's ΔE pass).
-        for j in 0..n {
-            self.refresh_var(model, x, j, beta);
-        }
         let mut total: f64 = self.weights.iter().sum();
 
         // Randomize the path length between L and L+1: a fixed L
@@ -198,6 +227,23 @@ impl Mcmc for PathAuxiliarySampler {
         cost.ops += (path.len() * self.weights.len()) as u64; // L × size-N sampling scans
         stats.cost = cost;
         stats
+    }
+}
+
+impl Mcmc for PathAuxiliarySampler {
+    fn step(
+        &mut self,
+        model: &dyn EnergyModel,
+        x: &mut [u32],
+        beta: f32,
+        rng: &mut Rng,
+    ) -> StepStats {
+        self.ensure_layout(model);
+        // Full weight build at the path head (the paper's ΔE pass).
+        for j in 0..model.num_vars() {
+            self.refresh_var(model, x, j, beta);
+        }
+        self.step_prepared(model, x, beta, rng)
     }
 
     fn name(&self) -> &'static str {

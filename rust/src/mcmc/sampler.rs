@@ -12,27 +12,35 @@
 //! uniform noise to Gumbel noise with finite size and precision; the
 //! Fig. 12 ablation sweeps those two parameters.
 
-use crate::rng::Rng;
+use crate::rng::{LaneRng, Rng, LANES};
 
 /// A sampler for discrete distributions given as unnormalized energies.
 pub trait CategoricalSampler: Send {
     /// Draw a state index from `P(s) ∝ exp(-β e[s])`.
     fn sample(&mut self, e: &[f32], beta: f32, rng: &mut Rng) -> usize;
 
-    /// Draw one state per chain from a chain-major batch of `k`
-    /// energy vectors: `e[c * n + s]` is chain `c`'s energy for state
-    /// `s`, `betas[c]` its inverse temperature, `rngs[c]` its RNG, and
-    /// `out[c]` receives its sample (`k = out.len()`).
+    /// Draw one state per chain from a **state-major** batch of `k`
+    /// energy vectors: `e[s * k + c]` is chain `c`'s energy for state
+    /// `s` (the layout [`crate::energy::EnergyModel::local_energies_batch`]
+    /// produces), `betas[c]` its inverse temperature, `rngs[c]` its
+    /// RNG, and `out[c]` receives its sample (`k = out.len()`).
     ///
     /// Every implementation must consume exactly the same draws from
     /// `rngs[c]` as `k` scalar [`CategoricalSampler::sample`] calls
     /// would, so batched and scalar chains stay bit-identical. The
-    /// default simply loops the scalar kernel; vectorized overrides
-    /// (Gumbel) iterate state-outer / chain-inner, which preserves
-    /// each chain's per-state draw order.
+    /// default gathers each chain's column and loops the scalar
+    /// kernel; the Gumbel samplers override it with the lane-parallel
+    /// argmax, which draws each chain's noise in per-state order —
+    /// the same order the scalar kernel consumes it.
     fn sample_batch(&mut self, e: &[f32], n: usize, betas: &[f32], rngs: &mut [Rng], out: &mut [u32]) {
+        let k = out.len();
+        debug_assert_eq!(e.len(), k * n);
+        let mut col = vec![0.0f32; n];
         for (c, o) in out.iter_mut().enumerate() {
-            *o = self.sample(&e[c * n..(c + 1) * n], betas[c], &mut rngs[c]) as u32;
+            for (s, v) in col.iter_mut().enumerate() {
+                *v = e[s * k + c];
+            }
+            *o = self.sample(&col, betas[c], &mut rngs[c]) as u32;
         }
     }
 
@@ -44,30 +52,184 @@ pub trait CategoricalSampler: Send {
     fn ops_per_sample(&self, n: usize) -> u64;
 }
 
-/// Shared batched Gumbel-argmax loop: state-outer / chain-inner so
-/// each chain draws its noise in state order (bit-identical to the
-/// scalar kernel), with `noise(c)` supplying chain `c`'s next variate.
-fn gumbel_argmax_batch(
+/// Noise source for the lane-parallel Gumbel argmax: exact Gumbel
+/// variates or the hardware LUT.
+enum LaneNoise<'a> {
+    Gumbel,
+    Lut(&'a [f32]),
+}
+
+impl LaneNoise<'_> {
+    /// `LANES` noise draws, one per lane — each lane consumes exactly
+    /// one draw from its stream, like the scalar kernel.
+    #[inline]
+    fn lanes(&self, r: &mut LaneRng) -> [f32; LANES] {
+        match self {
+            LaneNoise::Gumbel => r.gumbel_f32(),
+            LaneNoise::Lut(lut) => {
+                let idx = r.below(lut.len());
+                let mut out = [0.0f32; LANES];
+                for (o, &i) in out.iter_mut().zip(idx.iter()) {
+                    *o = lut[i];
+                }
+                out
+            }
+        }
+    }
+
+    /// One scalar noise draw (remainder chains).
+    #[inline]
+    fn scalar(&self, r: &mut Rng) -> f32 {
+        match self {
+            LaneNoise::Gumbel => r.gumbel_f32(),
+            LaneNoise::Lut(lut) => lut[r.below(lut.len())],
+        }
+    }
+}
+
+/// One argmax update over a `LANES`-wide row: `v = -b·row + g`, then
+/// keep the running max and its state index per lane. Strict `>` keeps
+/// the first index on ties and never selects NaN — identical to the
+/// scalar kernel's comparison.
+///
+/// Portable body; written elementwise over fixed-width arrays so it
+/// autovectorizes. The `simd` feature swaps in the intrinsic versions
+/// below (same semantics: separate mul + add, no FMA contraction, so
+/// results stay bit-identical to this path and to the scalar kernel).
+#[cfg(not(any(
+    all(feature = "simd", target_arch = "x86_64", target_feature = "avx2"),
+    all(feature = "simd", target_arch = "aarch64", target_feature = "neon")
+)))]
+#[inline]
+fn argmax_step(
+    row: &[f32],
+    b: &[f32; LANES],
+    g: &[f32; LANES],
+    s: u32,
+    best: &mut [f32; LANES],
+    arg: &mut [u32; LANES],
+) {
+    for l in 0..LANES {
+        let v = -b[l] * row[l] + g[l];
+        if v > best[l] {
+            best[l] = v;
+            arg[l] = s;
+        }
+    }
+}
+
+/// AVX2 argmax update: one 8-wide compare + two blends per state.
+/// `_CMP_GT_OQ` is strict greater-than with quiet NaN handling, so tie
+/// and NaN behavior match the portable `>`; negation is a sign-bit
+/// flip and mul/add stay separate (no FMA), preserving bit-identity.
+#[cfg(all(feature = "simd", target_arch = "x86_64", target_feature = "avx2"))]
+#[inline]
+fn argmax_step(
+    row: &[f32],
+    b: &[f32; LANES],
+    g: &[f32; LANES],
+    s: u32,
+    best: &mut [f32; LANES],
+    arg: &mut [u32; LANES],
+) {
+    debug_assert!(row.len() >= LANES);
+    unsafe {
+        use std::arch::x86_64::*;
+        let nb = _mm256_xor_ps(_mm256_loadu_ps(b.as_ptr()), _mm256_set1_ps(-0.0));
+        let v = _mm256_add_ps(
+            _mm256_mul_ps(nb, _mm256_loadu_ps(row.as_ptr())),
+            _mm256_loadu_ps(g.as_ptr()),
+        );
+        let bv = _mm256_loadu_ps(best.as_ptr());
+        let m = _mm256_cmp_ps(v, bv, _CMP_GT_OQ);
+        _mm256_storeu_ps(best.as_mut_ptr(), _mm256_blendv_ps(bv, v, m));
+        let av = _mm256_loadu_si256(arg.as_ptr() as *const __m256i);
+        let sv = _mm256_set1_epi32(s as i32);
+        _mm256_storeu_si256(
+            arg.as_mut_ptr() as *mut __m256i,
+            _mm256_blendv_epi8(av, sv, _mm256_castps_si256(m)),
+        );
+    }
+}
+
+/// NEON argmax update: two 4-wide halves. `vcgtq_f32` is strict
+/// greater-than (false on NaN), `vbslq` selects per lane; negation and
+/// separate mul/add (`vmulq` + `vaddq`, no fused `vmla`) keep results
+/// bit-identical to the portable path.
+#[cfg(all(feature = "simd", target_arch = "aarch64", target_feature = "neon"))]
+#[inline]
+fn argmax_step(
+    row: &[f32],
+    b: &[f32; LANES],
+    g: &[f32; LANES],
+    s: u32,
+    best: &mut [f32; LANES],
+    arg: &mut [u32; LANES],
+) {
+    debug_assert!(row.len() >= LANES);
+    unsafe {
+        use std::arch::aarch64::*;
+        for half in 0..2 {
+            let o = half * 4;
+            let nb = vnegq_f32(vld1q_f32(b.as_ptr().add(o)));
+            let v = vaddq_f32(
+                vmulq_f32(nb, vld1q_f32(row.as_ptr().add(o))),
+                vld1q_f32(g.as_ptr().add(o)),
+            );
+            let bv = vld1q_f32(best.as_ptr().add(o));
+            let m = vcgtq_f32(v, bv);
+            vst1q_f32(best.as_mut_ptr().add(o), vbslq_f32(m, v, bv));
+            let av = vld1q_u32(arg.as_ptr().add(o));
+            vst1q_u32(arg.as_mut_ptr().add(o), vbslq_u32(m, vdupq_n_u32(s), av));
+        }
+    }
+}
+
+/// Lane-parallel batched Gumbel argmax over state-major energies:
+/// chains are processed `LANES` at a time, with each chunk's RNG
+/// streams gathered into a [`LaneRng`] so noise generation and the
+/// argmax update run K-wide; the `k % LANES` remainder chains run the
+/// scalar kernel. Each chain draws its noise in state order from its
+/// own stream, so samples and RNG consumption are bit-identical to
+/// `k` scalar calls regardless of lane width or code path.
+fn gumbel_argmax_lanes(
     e: &[f32],
     n: usize,
     betas: &[f32],
+    rngs: &mut [Rng],
     out: &mut [u32],
-    best_v: &mut Vec<f32>,
-    mut noise: impl FnMut(usize) -> f32,
+    noise: LaneNoise<'_>,
 ) {
     let k = out.len();
     debug_assert_eq!(e.len(), k * n);
-    best_v.clear();
-    best_v.resize(k, f32::NEG_INFINITY);
-    out.fill(0);
-    for s in 0..n {
-        for c in 0..k {
-            let v = -betas[c] * e[c * n + s] + noise(c);
-            if v > best_v[c] {
-                best_v[c] = v;
-                out[c] = s as u32;
+    debug_assert_eq!(rngs.len(), k);
+    let chunks = k / LANES;
+    for ch in 0..chunks {
+        let base = ch * LANES;
+        let mut lanes = LaneRng::load(&rngs[base..base + LANES]);
+        let mut b = [0.0f32; LANES];
+        b.copy_from_slice(&betas[base..base + LANES]);
+        let mut best = [f32::NEG_INFINITY; LANES];
+        let mut arg = [0u32; LANES];
+        for s in 0..n {
+            let g = noise.lanes(&mut lanes);
+            let row = &e[s * k + base..s * k + base + LANES];
+            argmax_step(row, &b, &g, s as u32, &mut best, &mut arg);
+        }
+        lanes.store(&mut rngs[base..base + LANES]);
+        out[base..base + LANES].copy_from_slice(&arg);
+    }
+    for c in chunks * LANES..k {
+        let mut best = f32::NEG_INFINITY;
+        let mut arg = 0u32;
+        for s in 0..n {
+            let v = -betas[c] * e[s * k + c] + noise.scalar(&mut rngs[c]);
+            if v > best {
+                best = v;
+                arg = s as u32;
             }
         }
+        out[c] = arg;
     }
 }
 
@@ -116,10 +278,7 @@ impl CategoricalSampler for CdfSampler {
 /// Exact (float-precision) Gumbel-max sampler:
 /// `argmax_s (-β e_s + g_s)`, `g_s ~ Gumbel(0,1)`.
 #[derive(Clone, Debug, Default)]
-pub struct GumbelSampler {
-    /// Per-chain running argmax values for the batched kernel.
-    best_v: Vec<f32>,
-}
+pub struct GumbelSampler;
 
 impl CategoricalSampler for GumbelSampler {
     fn sample(&mut self, e: &[f32], beta: f32, rng: &mut Rng) -> usize {
@@ -136,7 +295,7 @@ impl CategoricalSampler for GumbelSampler {
     }
 
     fn sample_batch(&mut self, e: &[f32], n: usize, betas: &[f32], rngs: &mut [Rng], out: &mut [u32]) {
-        gumbel_argmax_batch(e, n, betas, out, &mut self.best_v, |c| rngs[c].gumbel_f32());
+        gumbel_argmax_lanes(e, n, betas, rngs, out, LaneNoise::Gumbel);
     }
 
     fn name(&self) -> &'static str {
@@ -158,8 +317,6 @@ pub struct GumbelLutSampler {
     lut: Vec<f32>,
     size: usize,
     bits: u32,
-    /// Per-chain running argmax values for the batched kernel.
-    best_v: Vec<f32>,
 }
 
 impl GumbelLutSampler {
@@ -184,12 +341,7 @@ impl GumbelLutSampler {
                 lo + q * (hi - lo)
             })
             .collect();
-        GumbelLutSampler {
-            lut,
-            size,
-            bits,
-            best_v: Vec::new(),
-        }
+        GumbelLutSampler { lut, size, bits }
     }
 
     /// LUT size (number of entries).
@@ -224,10 +376,7 @@ impl CategoricalSampler for GumbelLutSampler {
     }
 
     fn sample_batch(&mut self, e: &[f32], n: usize, betas: &[f32], rngs: &mut [Rng], out: &mut [u32]) {
-        let (lut, size) = (&self.lut, self.size);
-        gumbel_argmax_batch(e, n, betas, out, &mut self.best_v, |c| {
-            lut[rngs[c].below(size)]
-        });
+        gumbel_argmax_lanes(e, n, betas, rngs, out, LaneNoise::Lut(&self.lut));
     }
 
     fn name(&self) -> &'static str {
@@ -326,27 +475,42 @@ mod tests {
 
     #[test]
     fn batched_sampling_is_bit_identical_to_scalar() {
-        let (n, k) = (5usize, 4usize);
-        let mut rng = Rng::new(99);
-        let e: Vec<f32> = (0..k * n).map(|_| rng.uniform_f32() * 3.0).collect();
-        let betas: Vec<f32> = (0..k).map(|c| 0.5 + c as f32 * 0.3).collect();
-        let samplers: Vec<Box<dyn CategoricalSampler>> = vec![
-            Box::new(CdfSampler),
-            Box::new(GumbelSampler::default()),
-            Box::new(GumbelLutSampler::new(16, 8)),
-        ];
-        for mut s in samplers {
-            let mut rngs_a: Vec<Rng> = (0..k as u64).map(|c| Rng::fork(7, c)).collect();
-            let mut rngs_b = rngs_a.clone();
-            let scalar: Vec<u32> = (0..k)
-                .map(|c| s.sample(&e[c * n..(c + 1) * n], betas[c], &mut rngs_a[c]) as u32)
-                .collect();
-            let mut batched = vec![0u32; k];
-            s.sample_batch(&e, n, &betas, &mut rngs_b, &mut batched);
-            assert_eq!(scalar, batched, "{}: samples diverge", s.name());
-            // Identical RNG consumption: the streams must stay in sync.
-            for (a, b) in rngs_a.iter_mut().zip(&mut rngs_b) {
-                assert_eq!(a.next_u64(), b.next_u64(), "{}: rng streams diverged", s.name());
+        use crate::rng::LANES;
+        let n = 5usize;
+        // Widths straddling the lane boundary: lone chain, partial
+        // chunk, exact chunk, chunk + remainder, several chunks.
+        for k in [1, LANES - 1, LANES, LANES + 1, 2 * LANES + 3] {
+            let mut rng = Rng::new(99);
+            // State-major energies: e[s * k + c].
+            let e: Vec<f32> = (0..k * n).map(|_| rng.uniform_f32() * 3.0).collect();
+            let betas: Vec<f32> = (0..k).map(|c| 0.5 + c as f32 * 0.3).collect();
+            let samplers: Vec<Box<dyn CategoricalSampler>> = vec![
+                Box::new(CdfSampler),
+                Box::new(GumbelSampler),
+                Box::new(GumbelLutSampler::new(16, 8)),
+                Box::new(GumbelLutSampler::new(64, 6)),
+            ];
+            for mut s in samplers {
+                let mut rngs_a: Vec<Rng> = (0..k as u64).map(|c| Rng::fork(7, c)).collect();
+                let mut rngs_b = rngs_a.clone();
+                let scalar: Vec<u32> = (0..k)
+                    .map(|c| {
+                        let col: Vec<f32> = (0..n).map(|st| e[st * k + c]).collect();
+                        s.sample(&col, betas[c], &mut rngs_a[c]) as u32
+                    })
+                    .collect();
+                let mut batched = vec![0u32; k];
+                s.sample_batch(&e, n, &betas, &mut rngs_b, &mut batched);
+                assert_eq!(scalar, batched, "{} k={k}: samples diverge", s.name());
+                // Identical RNG consumption: the streams must stay in sync.
+                for (a, b) in rngs_a.iter_mut().zip(&mut rngs_b) {
+                    assert_eq!(
+                        a.next_u64(),
+                        b.next_u64(),
+                        "{} k={k}: rng streams diverged",
+                        s.name()
+                    );
+                }
             }
         }
     }

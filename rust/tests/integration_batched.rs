@@ -31,8 +31,9 @@ fn run_workload(name: &str, batch: Option<(usize, usize)>) -> mc2a::coordinator:
 }
 
 /// Every (non-heavy) registry workload: software == batched, chain by
-/// chain, bit for bit — including the PAS workloads, which exercise
-/// the batched backend's scalar fallback.
+/// chain, bit for bit — including the PAS workloads, which now run the
+/// true batched PAS kernel (shared K-wide head-weight build, per-chain
+/// path replay) rather than a scalar fallback.
 #[test]
 fn every_registry_workload_is_backend_invariant() {
     for entry in registry::REGISTRY {

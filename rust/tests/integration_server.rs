@@ -274,4 +274,23 @@ fn init_from_checkpoint_rejects_mismatched_resume() {
         .run()
         .unwrap();
     assert_eq!(metrics.chains.len(), 2);
+
+    // A non-default LUT shape round-trips through its canonical
+    // `lut:SIZE:BITS` spec, and a pre-spec checkpoint that only wrote
+    // the bare family name still matches the default LUT shape.
+    use mc2a::mcmc::SamplerKind;
+    let lut32 = SamplerKind::parse("lut:32:6").unwrap();
+    builder()
+        .sampler(lut32)
+        .init_from_checkpoint(&meta_checkpoint("optsicom", "lut:32:6", 2, rvs))
+        .unwrap();
+    builder()
+        .sampler(SamplerKind::parse("lut").unwrap())
+        .init_from_checkpoint(&meta_checkpoint("optsicom", "lut", 2, rvs))
+        .unwrap();
+    let err = builder()
+        .sampler(lut32)
+        .init_from_checkpoint(&meta_checkpoint("optsicom", "lut:16:8", 2, rvs))
+        .unwrap_err();
+    expect_mismatch(err, "sampler");
 }

@@ -1,0 +1,167 @@
+//! Lane-width invariance and SIMD equivalence regression suite.
+//!
+//! The batched kernels process chains `LANES` at a time (remainder
+//! chains take a scalar path), and the `simd` feature swaps the
+//! portable lane kernels for AVX2/NEON intrinsics. Both axes must be
+//! invisible: chain `c`'s trajectory is pinned to the scalar
+//! `Chain` + `Rng::fork(seed, c)` reference bit-for-bit, for every
+//! registry workload, every sampler, and batch widths straddling the
+//! lane width (`K = 1, LANES−1, LANES, LANES+1, 2·LANES+3`).
+//!
+//! CI runs this file with `--features simd` (plus
+//! `RUSTFLAGS="-C target-cpu=native"`) and without, so a divergence in
+//! the intrinsic paths fails the same assertions as a divergence in
+//! the portable ones.
+
+use mc2a::energy::EnergyModel;
+use mc2a::engine::registry;
+use mc2a::mcmc::{
+    build_algo, build_batch_algo, AlgoKind, BetaSchedule, Chain, ChainBatch, SamplerKind,
+};
+use mc2a::rng::{Rng, LANES};
+
+const SEED: u64 = 0x51D_C0DE;
+const SCHED: BetaSchedule = BetaSchedule::Constant(0.8);
+
+/// Batch widths straddling the lane width: scalar-remainder only,
+/// one-short, exact, one-over, and two-chunks-plus-remainder.
+fn widths() -> [usize; 5] {
+    [1, LANES - 1, LANES, LANES + 1, 2 * LANES + 3]
+}
+
+/// Scalar reference trajectories: chain `c` is independent of the
+/// batch width by construction (`Rng::fork(seed, c)`), so one run at
+/// the maximum width serves as the reference for every `K`.
+fn scalar_reference(
+    model: &dyn EnergyModel,
+    algo_kind: AlgoKind,
+    sampler: SamplerKind,
+    flips: usize,
+    steps: usize,
+    max_k: usize,
+) -> Vec<Vec<u32>> {
+    (0..max_k)
+        .map(|c| {
+            let algo = build_algo(algo_kind, sampler, model, flips);
+            let mut chain = Chain::with_rng(model, algo, SCHED, Rng::fork(SEED, c as u64));
+            chain.run(steps);
+            chain.x
+        })
+        .collect()
+}
+
+/// Assert the batched kernel reproduces the scalar reference at every
+/// batch width in [`widths`].
+fn assert_lane_width_invariant(
+    label: &str,
+    model: &dyn EnergyModel,
+    algo_kind: AlgoKind,
+    sampler: SamplerKind,
+    flips: usize,
+    steps: usize,
+) {
+    let max_k = *widths().iter().max().unwrap();
+    let reference = scalar_reference(model, algo_kind, sampler, flips, steps, max_k);
+    let mut gathered = Vec::new();
+    for k in widths() {
+        let mut algo = build_batch_algo(algo_kind, sampler, model, flips)
+            .unwrap_or_else(|| panic!("{label}: no batched kernel for {algo_kind:?}"));
+        let mut batch = ChainBatch::new(model, SCHED, SEED, 0, k, None);
+        batch.run(algo.as_mut(), steps);
+        for (c, want) in reference.iter().take(k).enumerate() {
+            batch.chain_state(c, &mut gathered);
+            assert_eq!(
+                &gathered, want,
+                "{label} ({algo_kind:?}/{}) K={k} chain {c}: batched state diverges from scalar",
+                sampler.spec()
+            );
+        }
+    }
+}
+
+/// The sampler grid: baseline CDF, exact Gumbel, the paper's default
+/// LUT shape, and a non-default `lut:SIZE:BITS` shape.
+fn samplers() -> [SamplerKind; 4] {
+    [
+        SamplerKind::Cdf,
+        SamplerKind::Gumbel,
+        SamplerKind::GumbelLut { size: 16, bits: 8 },
+        SamplerKind::GumbelLut { size: 32, bits: 6 },
+    ]
+}
+
+/// Every (non-heavy) registry workload × every sampler, Gibbs sweeps:
+/// the broad equivalence net over real model structure (Bayes nets,
+/// Potts grids, COP penalty models, RBM).
+#[test]
+fn every_registry_workload_and_sampler_is_lane_width_invariant() {
+    for name in registry::names() {
+        let entry = registry::find(name).unwrap();
+        if entry.heavy {
+            continue; // full-scale models; covered structurally by the small twin
+        }
+        let wl = entry.build();
+        // Few steps: the bit-identity pin either breaks on the first
+        // divergent draw or not at all; more steps only add runtime.
+        let steps = if wl.nodes() > 1000 { 2 } else { 4 };
+        for sampler in samplers() {
+            assert_lane_width_invariant(
+                name,
+                wl.model.as_ref(),
+                AlgoKind::Gibbs,
+                sampler,
+                1,
+                steps,
+            );
+        }
+    }
+}
+
+/// Each workload's Table-I-native algorithm (Block Gibbs, PAS, …) at
+/// its configured PAS path length.
+#[test]
+fn native_algorithms_are_lane_width_invariant() {
+    for name in registry::names() {
+        let entry = registry::find(name).unwrap();
+        if entry.heavy {
+            continue;
+        }
+        let wl = entry.build();
+        let steps = if wl.nodes() > 1000 { 2 } else { 4 };
+        assert_lane_width_invariant(
+            name,
+            wl.model.as_ref(),
+            wl.algorithm,
+            SamplerKind::Gumbel,
+            wl.pas_flips,
+            steps,
+        );
+    }
+}
+
+/// The two kernels the lane refactor added last (batched Async-Gibbs
+/// and batched PAS), exercised across samplers on a COP workload.
+#[test]
+fn async_gibbs_and_pas_are_lane_width_invariant_across_samplers() {
+    let wl = registry::lookup("optsicom").unwrap();
+    for sampler in samplers() {
+        assert_lane_width_invariant(
+            "optsicom",
+            wl.model.as_ref(),
+            AlgoKind::AsyncGibbs,
+            sampler,
+            1,
+            4,
+        );
+    }
+    for flips in [1usize, 3] {
+        assert_lane_width_invariant(
+            "optsicom",
+            wl.model.as_ref(),
+            AlgoKind::Pas,
+            SamplerKind::Gumbel,
+            flips,
+            4,
+        );
+    }
+}
