@@ -760,6 +760,30 @@ pub fn many_chains(quick: bool) -> Result<String, Mc2aError> {
         .unwrap();
         rates.push(samples_per_sec);
     }
+    // Re-run the batched row with the metrics registry hot, so the
+    // recorded cost of `engine::telemetry` (acceptance target: < 2%
+    // throughput overhead) tracks across PRs.
+    let telemetry_sps = {
+        let reg = crate::engine::telemetry::metrics();
+        reg.set_enabled(true);
+        let mut engine = Engine::for_model(&model)
+            .algo(AlgoKind::Gibbs)
+            .sampler(SamplerKind::Gumbel)
+            .schedule(BetaSchedule::Constant(0.6))
+            .steps(steps)
+            .chains(chains)
+            .seed(0xC4A1)
+            .batch(pool_batch)
+            .threads(threads.min(chains.div_ceil(pool_batch)))
+            .build()?;
+        engine.run()?; // warmup with telemetry already on
+        let metrics = engine.run()?;
+        reg.set_enabled(false);
+        reg.reset();
+        let wall = metrics.wall.as_secs_f64().max(1e-12);
+        let samples: u64 = metrics.chains.iter().map(|c| c.stats.cost.samples).sum();
+        samples as f64 / wall
+    };
     // Per-kernel grid: single-threaded scalar loop vs SoA batch, so
     // the reported ratio is the SIMD + layout speedup itself.
     let kernels = kernel_rates(quick);
@@ -789,6 +813,13 @@ pub fn many_chains(quick: bool) -> Result<String, Mc2aError> {
             batched / scalar.max(1e-12)
         )
         .unwrap();
+        let overhead_pct = 100.0 * (batched / telemetry_sps.max(1e-12) - 1.0);
+        writeln!(
+            out,
+            "telemetry-enabled batched run: {telemetry_sps:.4e} samples/sec \
+             ({overhead_pct:+.2}% overhead vs telemetry off)"
+        )
+        .unwrap();
         let kernel_json: Vec<String> = kernels
             .iter()
             .map(|r| {
@@ -806,7 +837,8 @@ pub fn many_chains(quick: bool) -> Result<String, Mc2aError> {
             "{{\"bench\":\"chains\",\"quick\":{quick},\"chains\":{chains},\"steps\":{steps},\
              \"threads\":{threads},\"lanes\":{LANES},\"simd_feature\":{},\
              \"software_samples_per_sec\":{scalar},\"batched_samples_per_sec\":{batched},\
-             \"batched_speedup\":{:.4},\"kernels\":[{}]}}\n",
+             \"batched_speedup\":{:.4},\"telemetry_samples_per_sec\":{telemetry_sps},\
+             \"telemetry_overhead_pct\":{overhead_pct:.4},\"kernels\":[{}]}}\n",
             cfg!(feature = "simd"),
             batched / scalar.max(1e-12),
             kernel_json.join(",")
@@ -814,6 +846,16 @@ pub fn many_chains(quick: bool) -> Result<String, Mc2aError> {
         writeln!(out, "{}", write_bench_artifact("BENCH_chains.json", &json)).unwrap();
     }
     Ok(out)
+}
+
+/// Nearest-rank percentile of an ascending-sorted sample (`q` in
+/// `[0, 1]`); 0.0 on an empty slice.
+fn pctl(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
 }
 
 /// Job-server throughput: a mixed queue of three heterogeneous
@@ -844,12 +886,30 @@ pub fn serve_throughput(quick: bool) -> Result<String, Mc2aError> {
             spec.chains = chains;
             spec.seed = 0x5E17 + (round * mix.len() + k) as u64;
             spec.priority = priorities[(round + k) % priorities.len()];
-            ids.push((workload, server.submit(spec)?));
+            let priority = spec.priority;
+            ids.push((priority, server.submit(spec)?, Instant::now()));
         }
     }
+    // One waiter thread per job, so each job's submit→result latency
+    // is stamped at its own completion instead of after every
+    // earlier-submitted job has drained through a sequential wait.
+    let waiters: Vec<_> = ids
+        .iter()
+        .map(|&(priority, id, submitted)| {
+            let server = server.clone();
+            std::thread::spawn(move || {
+                server
+                    .wait(id, Duration::from_secs(600))
+                    .map(|r| (priority, submitted.elapsed(), r.chains.len()))
+            })
+        })
+        .collect();
     let mut total_chains = 0usize;
-    for &(_, id) in &ids {
-        total_chains += server.wait(id, Duration::from_secs(600))?.chains.len();
+    let mut latencies: Vec<(Priority, f64)> = Vec::new();
+    for waiter in waiters {
+        let (priority, latency, chains) = waiter.join().expect("waiter thread panicked")?;
+        total_chains += chains;
+        latencies.push((priority, latency.as_secs_f64() * 1e3));
     }
     let wall = started.elapsed().as_secs_f64().max(1e-12);
     let jobs = ids.len();
@@ -871,13 +931,33 @@ pub fn serve_throughput(quick: bool) -> Result<String, Mc2aError> {
         wall * 1e3,
     )
     .unwrap();
+    // Submit→result latency distribution per priority class: the whole
+    // queue is submitted up front, so class separation (High draining
+    // before Low) shows up directly in the spread between classes.
+    writeln!(out, "\n# submit→result latency per priority class (ms)").unwrap();
+    writeln!(out, "priority,jobs,p50_ms,p95_ms,p99_ms").unwrap();
+    let mut latency_json = Vec::new();
+    for p in priorities {
+        let mut ms: Vec<f64> =
+            latencies.iter().filter(|&&(lp, _)| lp == p).map(|&(_, l)| l).collect();
+        ms.sort_by(f64::total_cmp);
+        let (p50, p95, p99) = (pctl(&ms, 0.50), pctl(&ms, 0.95), pctl(&ms, 0.99));
+        writeln!(out, "{},{},{p50:.3},{p95:.3},{p99:.3}", p.name(), ms.len()).unwrap();
+        latency_json.push(format!(
+            "\"{}\":{{\"jobs\":{},\"p50_ms\":{p50:.3},\"p95_ms\":{p95:.3},\"p99_ms\":{p99:.3}}}",
+            p.name(),
+            ms.len()
+        ));
+    }
     server.shutdown();
     let json = format!(
         "{{\"bench\":\"serve\",\"quick\":{quick},\"jobs\":{jobs},\"chains\":{total_chains},\
          \"threads\":{},\"wall_ms\":{:.3},\
-         \"jobs_per_sec\":{jobs_per_sec},\"chains_per_sec\":{chains_per_sec}}}\n",
+         \"jobs_per_sec\":{jobs_per_sec},\"chains_per_sec\":{chains_per_sec},\
+         \"latency_ms\":{{{}}}}}\n",
         server.threads(),
         wall * 1e3,
+        latency_json.join(",")
     );
     writeln!(out, "{}", write_bench_artifact("BENCH_serve.json", &json)).unwrap();
     Ok(out)
@@ -1238,10 +1318,24 @@ mod tests {
     }
 
     #[test]
+    fn pctl_uses_nearest_rank_and_tolerates_empty_input() {
+        assert_eq!(pctl(&[], 0.5), 0.0);
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(pctl(&v, 0.0), 1.0);
+        assert_eq!(pctl(&v, 0.5), 3.0);
+        assert_eq!(pctl(&v, 0.95), 4.0);
+        assert_eq!(pctl(&v, 1.0), 4.0);
+    }
+
+    #[test]
     fn many_chains_csv_has_throughput_columns() {
+        // many_chains flips the process-wide metrics registry for its
+        // overhead row; hold the telemetry test lock for the duration.
+        let _g = crate::engine::telemetry::test_guard();
         let t = many_chains(true).unwrap();
         assert!(t.contains("samples_per_sec"), "{t}");
         assert!(t.contains("chains_per_sec"), "{t}");
+        assert!(t.contains("telemetry-enabled batched run"), "{t}");
         assert!(t.contains("software,64"), "{t}");
         assert!(t.contains("batched,64,"), "{t}");
         assert!(t.contains("speedup"), "{t}");

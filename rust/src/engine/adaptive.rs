@@ -29,6 +29,7 @@ use crate::energy::{EnergyModel, OpCost};
 use crate::engine::backend::{ChainCtx, ChainSpec};
 use crate::engine::error::Mc2aError;
 use crate::engine::observer::ProgressEvent;
+use crate::engine::telemetry;
 use crate::isa::Program;
 use crate::mcmc::anneal::{BetaController, RoundDiagnostics};
 use crate::mcmc::{
@@ -361,6 +362,8 @@ pub(crate) fn run_adaptive<'m>(
         if ctx.stop_requested() {
             break;
         }
+        let _round_span = telemetry::span_with("lockstep", || format!("adaptive round {round}"));
+        telemetry::metrics().counter_add("lockstep_rounds_total", &[("driver", "adaptive")], 1);
         let n = every.min(spec.steps - done);
         // Plan the segment's β values from the controller's current
         // state; the controller works on the *global* step clock so a

@@ -33,10 +33,12 @@ use crate::engine::backend::{
 use crate::engine::error::Mc2aError;
 use crate::engine::observer::ProgressEvent;
 use crate::engine::scheduler;
+use crate::engine::telemetry;
 use crate::engine::tempering::run_tempered;
 use crate::mcmc::anneal::BetaController;
 use crate::mcmc::tempering::ReplicaExchange;
 use crate::mcmc::{batch_supported, build_batch_algo, ChainBatch};
+use crate::rng::LANES;
 
 /// Default chains per work item when the caller does not choose one.
 pub const DEFAULT_BATCH: usize = 32;
@@ -147,6 +149,20 @@ fn run_batch_item(
             .collect();
     }
     let k = end - start;
+    if telemetry::enabled() {
+        // Lane occupancy: the SIMD kernels process chain columns
+        // `LANES` at a time, so a ragged tail item pads to a multiple
+        // of `LANES` and wastes the padding lanes.
+        let m = telemetry::metrics();
+        m.counter_add("batched_items_total", &[], 1);
+        m.counter_add("batched_lanes_occupied_total", &[], k as u64);
+        m.counter_add(
+            "batched_lanes_capacity_total",
+            &[],
+            (k.div_ceil(LANES) * LANES) as u64,
+        );
+    }
+    let _span = telemetry::span_with("batched", || format!("batch item {start}..{end}"));
     let t0 = Instant::now();
     let mut algo = build_batch_algo(spec.algo, spec.sampler, model, spec.pas_flips)
         .expect("batched kernel exists");

@@ -24,6 +24,7 @@ use std::fmt::Write as _;
 use std::path::Path;
 
 use crate::engine::error::Mc2aError;
+use crate::engine::telemetry;
 
 /// Resumable snapshot of a chain run.
 #[derive(Clone, Debug, PartialEq)]
@@ -156,8 +157,17 @@ impl Checkpoint {
     /// Write the checkpoint to `path`.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<(), Mc2aError> {
         let path = path.as_ref();
-        std::fs::write(path, self.to_json())
-            .map_err(|e| Mc2aError::Checkpoint(format!("writing {}: {e}", path.display())))
+        let t0 = telemetry::enabled().then(std::time::Instant::now);
+        let out = std::fs::write(path, self.to_json())
+            .map_err(|e| Mc2aError::Checkpoint(format!("writing {}: {e}", path.display())));
+        if let Some(t0) = t0 {
+            telemetry::metrics().observe(
+                "checkpoint_write_seconds",
+                &[("kind", "checkpoint")],
+                t0.elapsed().as_secs_f64(),
+            );
+        }
+        out
     }
 
     /// Read a checkpoint from `path`.
@@ -433,11 +443,20 @@ impl JobEnvelope {
     /// recovery to choke on).
     pub fn save(&self, path: impl AsRef<Path>) -> Result<(), Mc2aError> {
         let path = path.as_ref();
+        let t0 = telemetry::enabled().then(std::time::Instant::now);
         let tmp = path.with_extension("json.tmp");
         std::fs::write(&tmp, self.to_json())
             .map_err(|e| Mc2aError::Checkpoint(format!("writing {}: {e}", tmp.display())))?;
-        std::fs::rename(&tmp, path)
-            .map_err(|e| Mc2aError::Checkpoint(format!("renaming to {}: {e}", path.display())))
+        let out = std::fs::rename(&tmp, path)
+            .map_err(|e| Mc2aError::Checkpoint(format!("renaming to {}: {e}", path.display())));
+        if let Some(t0) = t0 {
+            telemetry::metrics().observe(
+                "checkpoint_write_seconds",
+                &[("kind", "envelope")],
+                t0.elapsed().as_secs_f64(),
+            );
+        }
+        out
     }
 
     /// Read an envelope from `path`.

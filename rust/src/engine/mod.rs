@@ -38,7 +38,10 @@
 //! * [`server`] — sampling-as-a-service: the persistent multi-tenant
 //!   [`server::JobServer`] that multiplexes many jobs over one shared
 //!   priority-aware pool, with checkpoint-backed crash recovery and a
-//!   std-only TCP front-end (`mc2a serve` / `mc2a client`).
+//!   std-only TCP front-end (`mc2a serve` / `mc2a client`),
+//! * [`telemetry`] — process-wide metrics (Prometheus text exposition)
+//!   and Chrome-trace span collection, disabled by default and
+//!   bit-identity-safe when enabled.
 
 pub(crate) mod adaptive;
 pub mod backend;
@@ -49,6 +52,7 @@ pub mod observer;
 pub mod registry;
 pub mod scheduler;
 pub mod server;
+pub mod telemetry;
 pub(crate) mod tempering;
 
 pub use backend::{
@@ -858,6 +862,11 @@ impl<'m> Engine<'m> {
     /// same seeds and therefore the same chains.
     pub fn run(&mut self) -> Result<RunMetrics, Mc2aError> {
         let t0 = Instant::now();
+        let workload = self.workload.unwrap_or("model");
+        let n_chains = self.chains;
+        let _run_span = telemetry::span_with("engine", || {
+            format!("engine.run {workload} ({n_chains} chains)")
+        });
         let model = self.model.get();
         let spec = &self.spec;
         let backend = self.backend.as_ref();
@@ -930,6 +939,14 @@ impl<'m> Engine<'m> {
         });
 
         let chains = result?;
+        if telemetry::enabled() {
+            let kernel = self.spec.algo.name();
+            let sampler = self.spec.sampler.name();
+            let backend_name = self.backend.name();
+            for chain in &chains {
+                telemetry::record_chain_result(kernel, sampler, backend_name, chain);
+            }
+        }
         for chain in &chains {
             if let Some(obs) = self.observer.as_deref_mut() {
                 obs.on_chain_done(chain);

@@ -337,4 +337,67 @@ mod tests {
         drop(stream);
         assert_eq!(obs.on_progress(&ev(0, 10, 1.0)), ObserverAction::Continue);
     }
+
+    #[test]
+    fn recv_timeout_expires_on_an_idle_stream_without_closing_it() {
+        let (mut obs, stream) = event_stream();
+        // Nothing queued: the deadline elapses and we get None back,
+        // but the channel is still connected and usable afterwards.
+        assert!(stream.recv_timeout(Duration::from_millis(10)).is_none());
+        obs.on_progress(&ev(0, 10, 1.0));
+        match stream.recv_timeout(Duration::from_secs(5)) {
+            Some(StreamEvent::Progress(p)) => assert_eq!(p.step, 10),
+            other => panic!("expected progress after timeout, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn drain_after_sender_drop_returns_buffered_events_then_empty() {
+        let (mut obs, stream) = event_stream();
+        obs.on_progress(&ev(0, 10, 1.0));
+        obs.on_progress(&ev(1, 10, 2.0));
+        drop(obs);
+        // Buffered events survive the sender; drain returns them all
+        // in send order, and a second drain on the now-disconnected
+        // stream is empty rather than an error.
+        let events = stream.drain();
+        assert_eq!(events.len(), 2);
+        match (&events[0], &events[1]) {
+            (StreamEvent::Progress(a), StreamEvent::Progress(b)) => {
+                assert_eq!(a.chain_id, 0);
+                assert_eq!(b.chain_id, 1);
+            }
+            other => panic!("expected two progress events, got {other:?}"),
+        }
+        assert!(stream.drain().is_empty());
+        assert!(stream.recv().is_none());
+    }
+
+    #[test]
+    fn done_arrives_after_all_progress_sent_before_it() {
+        // Server-style producer: progress events, then a terminal Done
+        // pushed on the same channel. mpsc is FIFO, so a consumer must
+        // see every earlier progress event before the Done marker.
+        let (tx, stream) = raw_stream();
+        tx.send(StreamEvent::Progress(ev(0, 10, 1.0))).unwrap();
+        tx.send(StreamEvent::Progress(ev(0, 20, 2.0))).unwrap();
+        tx.send(StreamEvent::Done {
+            state: "done".into(),
+            best_objective: 2.0,
+        })
+        .unwrap();
+        drop(tx);
+        let events: Vec<StreamEvent> = (&stream).collect();
+        assert_eq!(events.len(), 3);
+        assert!(matches!(&events[0], StreamEvent::Progress(p) if p.step == 10));
+        assert!(matches!(&events[1], StreamEvent::Progress(p) if p.step == 20));
+        match &events[2] {
+            StreamEvent::Done { state, best_objective } => {
+                assert_eq!(state, "done");
+                assert_eq!(*best_objective, 2.0);
+            }
+            other => panic!("expected Done last, got {other:?}"),
+        }
+        assert!(stream.recv().is_none(), "nothing follows Done + drop");
+    }
 }

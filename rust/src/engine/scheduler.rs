@@ -29,6 +29,8 @@ use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
+use crate::engine::telemetry;
+
 /// Run every item of `items` exactly once on a pool of `threads`
 /// workers. `f` receives `(worker_index, item)` and must be safe to
 /// call concurrently from distinct workers.
@@ -73,6 +75,7 @@ where
                 for v in 1..threads {
                     let victim = (w + v) % threads;
                     if let Some(item) = deques[victim].lock().unwrap().pop_back() {
+                        telemetry::metrics().counter_add("scheduler_steals_total", &[], 1);
                         stolen = Some(item);
                         break;
                     }
@@ -129,7 +132,7 @@ impl PoolQueue {
     }
 
     /// Next task: highest non-empty class, round-robin across its jobs.
-    fn pop_next(&mut self) -> Option<PoolTask> {
+    fn pop_next(&mut self) -> Option<(u8, PoolTask)> {
         let class = *self.classes.iter().rev().find(|(_, cq)| !cq.rotation.is_empty())?.0;
         let cq = self.classes.get_mut(&class).expect("class just found");
         let job = cq.rotation.pop_front().expect("rotation non-empty");
@@ -143,7 +146,15 @@ impl PoolQueue {
         if cq.rotation.is_empty() {
             self.classes.remove(&class);
         }
-        Some(task)
+        Some((class, task))
+    }
+
+    /// Tasks still queued in one priority class.
+    fn class_depth(&self, class: u8) -> usize {
+        self.classes
+            .get(&class)
+            .map(|cq| cq.tasks.values().map(VecDeque::len).sum())
+            .unwrap_or(0)
     }
 
     fn purge_job(&mut self, job: u64) -> usize {
@@ -226,6 +237,13 @@ impl WorkPool {
                 return;
             }
             q.push(tag, Box::new(task));
+            if telemetry::enabled() {
+                telemetry::metrics().gauge_set(
+                    "pool_queue_depth",
+                    &[("class", &tag.class.to_string())],
+                    q.class_depth(tag.class) as f64,
+                );
+            }
         }
         self.shared.available.notify_one();
     }
@@ -270,8 +288,20 @@ fn worker_loop(shared: &PoolShared) {
         let task = {
             let mut q = shared.queue.lock().unwrap();
             loop {
-                if let Some(t) = q.pop_next() {
-                    break Some(t);
+                if let Some((class, t)) = q.pop_next() {
+                    if telemetry::enabled() {
+                        telemetry::metrics().gauge_set(
+                            "pool_queue_depth",
+                            &[("class", &class.to_string())],
+                            q.class_depth(class) as f64,
+                        );
+                        telemetry::metrics().counter_add(
+                            "pool_tasks_total",
+                            &[("class", &class.to_string())],
+                            1,
+                        );
+                    }
+                    break Some((class, t));
                 }
                 if q.shutdown {
                     break None;
@@ -283,7 +313,8 @@ fn worker_loop(shared: &PoolShared) {
             // A panicking task must not take the worker (and with it
             // every future job) down; the owning job maps the panic to
             // a typed error through its own bookkeeping.
-            Some(t) => {
+            Some((class, t)) => {
+                let _span = telemetry::span_with("pool", || format!("pool task (class {class})"));
                 let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(t));
             }
             None => return,

@@ -53,6 +53,7 @@ use crate::engine::observer::{
 };
 use crate::engine::registry;
 use crate::engine::scheduler::{TaskTag, WorkPool};
+use crate::engine::telemetry;
 use crate::isa::HwConfig;
 use crate::mcmc::{AlgoKind, BetaSchedule, SamplerKind};
 
@@ -206,6 +207,11 @@ pub struct JobSpec {
     pub observe_every: usize,
     /// PAS path length override; `None` uses the workload's value.
     pub pas_flips: Option<usize>,
+    /// Opt this job into process-wide telemetry: enables the metrics
+    /// registry and (if not already running) the span tracer for the
+    /// job's lifetime. Purely observational — results are bit-identical
+    /// either way — and not persisted across restarts.
+    pub trace: bool,
 }
 
 impl JobSpec {
@@ -223,6 +229,7 @@ impl JobSpec {
             priority: Priority::Normal,
             observe_every: 0,
             pas_flips: None,
+            trace: false,
         }
     }
 }
@@ -275,6 +282,27 @@ pub struct JobResult {
     pub error: Option<String>,
 }
 
+/// Aggregate point-in-time server statistics ([`JobServer::stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServerStats {
+    /// Jobs in the table (all states).
+    pub jobs_total: usize,
+    /// Jobs accepted but not yet started.
+    pub queued: usize,
+    /// Jobs with at least one chain running.
+    pub running: usize,
+    /// Jobs that completed their full budget.
+    pub done: usize,
+    /// Jobs cancelled by clients.
+    pub cancelled: usize,
+    /// Jobs that failed.
+    pub failed: usize,
+    /// Chain tasks still owed a completion (queued or running).
+    pub chains_pending: usize,
+    /// Worker threads in the shared pool.
+    pub threads: usize,
+}
+
 /// Construction parameters for [`JobServer::new`].
 #[derive(Clone, Debug, Default)]
 pub struct JobServerConfig {
@@ -289,6 +317,10 @@ struct Job {
     algo: AlgoKind,
     cspec: ChainSpec,
     durable: bool,
+    /// When the job entered the table (phase-timing anchor).
+    submitted: Instant,
+    /// When the first chain started running, if any has.
+    started: Option<Instant>,
     state: JobState,
     cancelled: bool,
     stop: Arc<AtomicBool>,
@@ -545,6 +577,28 @@ impl JobServer {
         self.inner.pool.threads()
     }
 
+    /// Aggregate point-in-time statistics for the admin surface
+    /// (the `stats` protocol verb).
+    pub fn stats(&self) -> ServerStats {
+        let jobs = self.inner.jobs.lock().unwrap();
+        let mut s = ServerStats {
+            threads: self.inner.pool.threads(),
+            jobs_total: jobs.len(),
+            ..ServerStats::default()
+        };
+        for job in jobs.values() {
+            match job.state {
+                JobState::Queued => s.queued += 1,
+                JobState::Running => s.running += 1,
+                JobState::Done => s.done += 1,
+                JobState::Cancelled => s.cancelled += 1,
+                JobState::Failed => s.failed += 1,
+            }
+            s.chains_pending += job.pending;
+        }
+        s
+    }
+
     fn restore_job(
         &self,
         env: JobEnvelope,
@@ -583,6 +637,7 @@ impl JobServer {
             priority,
             observe_every: env.observe_every,
             pas_flips: Some(env.pas_flips),
+            trace: false,
         };
         let preloaded = persist::load_chains(dir, env.job_id, env.chains, env.steps)?;
         if state.is_terminal() {
@@ -615,6 +670,8 @@ impl JobServer {
             algo,
             cspec,
             durable: true,
+            submitted: Instant::now(),
+            started: None,
             state,
             cancelled: state == JobState::Cancelled,
             stop: Arc::new(AtomicBool::new(true)),
@@ -683,12 +740,20 @@ impl JobServer {
             results.iter().map(|r| r.as_ref().map_or(0, |c| c.steps)).collect();
         let stop = Arc::new(AtomicBool::new(false));
         let class = spec.priority.class();
+        if spec.trace {
+            telemetry::metrics().set_enabled(true);
+            if !telemetry::tracer().is_enabled() {
+                telemetry::tracer().start();
+            }
+        }
         let job = Job {
             tracker: DiagnosticsTracker::new(spec.chains),
             spec,
             algo,
             cspec: cspec.clone(),
             durable,
+            submitted: Instant::now(),
+            started: None,
             state: if missing.is_empty() { JobState::Done } else { JobState::Queued },
             cancelled: false,
             stop: Arc::clone(&stop),
@@ -819,6 +884,14 @@ fn mark_running(inner: &Inner, id: JobId) {
     if let Some(job) = jobs.get_mut(&id) {
         if job.state == JobState::Queued {
             job.state = JobState::Running;
+            job.started = Some(Instant::now());
+            if telemetry::enabled() {
+                telemetry::metrics().observe(
+                    "job_queued_seconds",
+                    &[("priority", job.spec.priority.name())],
+                    job.submitted.elapsed().as_secs_f64(),
+                );
+            }
         }
     }
 }
@@ -841,12 +914,30 @@ fn chain_finished(
     job.pending = job.pending.saturating_sub(1);
     match res {
         Some(Ok(r)) if r.steps == job.cspec.steps => {
+            // Server chains run through `run_chain` directly (not
+            // `Engine::run`), so fold them into the registry here.
+            if telemetry::enabled() {
+                telemetry::record_chain_result(
+                    job.cspec.algo.name(),
+                    job.cspec.sampler.name(),
+                    job.spec.backend.name(),
+                    &r,
+                );
+            }
             job.steps_done[chain] = r.steps;
             job.best_objective = job.best_objective.max(r.best_objective);
             if job.durable {
                 if let Some(dir) = &inner.dir {
+                    let t0 = telemetry::enabled().then(Instant::now);
                     if let Err(e) = persist::save_chain(dir, id, &r) {
                         eprintln!("mc2a serve: persisting job {id} chain {chain}: {e}");
+                    }
+                    if let Some(t0) = t0 {
+                        telemetry::metrics().observe(
+                            "job_persist_seconds",
+                            &[("priority", job.spec.priority.name())],
+                            t0.elapsed().as_secs_f64(),
+                        );
                     }
                 }
             }
@@ -886,6 +977,25 @@ fn finalize_locked(inner: &Inner, id: JobId, job: &mut Job) {
         // Interrupted by server shutdown: stays resumable on disk.
         JobState::Queued
     };
+    let now = Instant::now();
+    if telemetry::enabled() {
+        let m = telemetry::metrics();
+        let run_t0 = job.started.unwrap_or(job.submitted);
+        m.observe(
+            "job_run_seconds",
+            &[("priority", job.spec.priority.name())],
+            now.duration_since(run_t0).as_secs_f64(),
+        );
+        m.counter_add("jobs_finished_total", &[("state", job.state.name())], 1);
+    }
+    if telemetry::tracing() {
+        telemetry::tracer().record(
+            format!("job {id} {} ({})", job.spec.workload, job.state.name()),
+            "job",
+            job.submitted,
+            now,
+        );
+    }
     let event = StreamEvent::Done {
         state: job.state.name().to_string(),
         best_objective: job.best_objective,

@@ -125,6 +125,10 @@ fn handle_request(server: &JobServer, req: Request) -> String {
             Err(e) => proto::err_line(&e),
         },
         Request::Ping => proto::ok_ping(),
+        Request::Metrics => {
+            proto::ok_metrics(&crate::engine::telemetry::metrics().render_prometheus())
+        }
+        Request::Stats => proto::ok_stats(&server.stats()),
         // Stream and Shutdown never reach here; the connection loop
         // intercepts them.
         Request::Stream { .. } | Request::Shutdown => {
@@ -150,6 +154,51 @@ fn stream_events(server: &JobServer, job: JobId, sock: &mut TcpStream) {
             let _ = writeln!(sock, "{}", proto::err_line(&e));
         }
     }
+}
+
+/// Spawn a detached thread serving the process metrics registry in
+/// Prometheus text exposition format over bare HTTP/1.1 on `addr` —
+/// the `mc2a serve --metrics-addr` scrape endpoint. Every request path
+/// returns the full registry dump (scrapers conventionally use
+/// `/metrics`); the listener lives until the process exits.
+pub fn spawn_metrics_http(addr: &str) -> Result<SocketAddr, Mc2aError> {
+    let listener = TcpListener::bind(addr)
+        .map_err(|e| Mc2aError::Server(format!("binding metrics addr {addr}: {e}")))?;
+    let local = listener
+        .local_addr()
+        .map_err(|e| Mc2aError::Server(format!("reading metrics local addr: {e}")))?;
+    std::thread::Builder::new()
+        .name("mc2a-metrics-http".into())
+        .spawn(move || {
+            for stream in listener.incoming() {
+                let Ok(mut sock) = stream else { continue };
+                // Drain the request head (up to the blank line) so the
+                // client sees a well-formed exchange, then answer.
+                let Ok(read_half) = sock.try_clone() else { continue };
+                let mut reader = BufReader::new(read_half);
+                let mut line = String::new();
+                loop {
+                    line.clear();
+                    match reader.read_line(&mut line) {
+                        Ok(0) | Err(_) => break,
+                        Ok(_) if line.trim().is_empty() => break,
+                        Ok(_) => {}
+                    }
+                }
+                let body = crate::engine::telemetry::metrics().render_prometheus();
+                let _ = write!(
+                    sock,
+                    "HTTP/1.1 200 OK\r\n\
+                     Content-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+                     Content-Length: {}\r\n\
+                     Connection: close\r\n\r\n{}",
+                    body.len(),
+                    body
+                );
+            }
+        })
+        .map_err(|e| Mc2aError::Server(format!("spawning metrics listener: {e}")))?;
+    Ok(local)
 }
 
 /// Connect, retrying every 250 ms up to `retries` times — the CLI uses
@@ -223,8 +272,25 @@ mod tests {
         assert!(proto::response_is_ok(&pong), "{pong}");
         let bad = client_request(&addr, "not json", 0).unwrap();
         assert_eq!(proto::response_kind(&bad).as_deref(), Some("protocol"));
+        let metrics = client_request(&addr, &proto::metrics_line(), 0).unwrap();
+        assert!(proto::response_is_ok(&metrics), "{metrics}");
+        let stats = client_request(&addr, &proto::stats_line(), 0).unwrap();
+        assert!(proto::response_is_ok(&stats), "{stats}");
+        assert!(stats.contains("\"threads\":1"), "{stats}");
         let bye = client_request(&addr, &proto::shutdown_line(), 0).unwrap();
         assert!(proto::response_is_ok(&bye), "{bye}");
         handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn metrics_http_endpoint_serves_exposition() {
+        use std::io::Read;
+        let addr = spawn_metrics_http("127.0.0.1:0").unwrap();
+        let mut sock = TcpStream::connect(addr).unwrap();
+        write!(sock, "GET /metrics HTTP/1.1\r\nHost: test\r\n\r\n").unwrap();
+        let mut out = String::new();
+        sock.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 200 OK"), "{out}");
+        assert!(out.contains("text/plain; version=0.0.4"), "{out}");
     }
 }

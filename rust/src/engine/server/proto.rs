@@ -13,6 +13,7 @@
 //! {"op":"status"}            {"op":"status","job":3}
 //! {"op":"result","job":3}    {"op":"cancel","job":3}
 //! {"op":"stream","job":3}    {"op":"ping"}    {"op":"shutdown"}
+//! {"op":"metrics"}           {"op":"stats"}
 //! ```
 //!
 //! Responses carry `"ok":true` plus operation payload, or `"ok":false`
@@ -26,7 +27,7 @@
 //! Non-finite floats (an untouched best objective is −∞) serialize as
 //! `null`.
 
-use super::{JobId, JobResult, JobSpec, JobStatus, Priority, ServeBackend};
+use super::{JobId, JobResult, JobSpec, JobStatus, Priority, ServeBackend, ServerStats};
 use crate::engine::error::Mc2aError;
 use crate::engine::observer::StreamEvent;
 use crate::mcmc::{AlgoKind, SamplerKind};
@@ -197,6 +198,10 @@ pub enum Request {
     },
     /// Liveness check.
     Ping,
+    /// Prometheus-format dump of the process metrics registry.
+    Metrics,
+    /// Aggregate server statistics (jobs by state, pool load).
+    Stats,
     /// Graceful server stop.
     Shutdown,
 }
@@ -267,6 +272,9 @@ pub fn parse_request(line: &str) -> Result<Request, Mc2aError> {
                 spec.priority = Priority::parse(s)
                     .ok_or_else(|| perr(line, &format!("unknown priority `{s}`")))?;
             }
+            if let Some(JVal::Bool(b)) = get("trace") {
+                spec.trace = *b;
+            }
             Ok(Request::Submit(spec))
         }
         "status" => Ok(Request::Status { job: u64_of("job")? }),
@@ -274,6 +282,8 @@ pub fn parse_request(line: &str) -> Result<Request, Mc2aError> {
         "cancel" => Ok(Request::Cancel { job: required_job("job")? }),
         "stream" => Ok(Request::Stream { job: required_job("job")? }),
         "ping" => Ok(Request::Ping),
+        "metrics" => Ok(Request::Metrics),
+        "stats" => Ok(Request::Stats),
         "shutdown" => Ok(Request::Shutdown),
         other => Err(perr(line, &format!("unknown op `{other}`"))),
     }
@@ -319,6 +329,22 @@ pub fn ok_cancel(id: JobId, state: &str) -> String {
     format!("{{\"ok\":true,\"job\":{id},\"state\":{}}}", jstr(state))
 }
 
+/// `{"ok":true,"metrics":"…"}` — the Prometheus exposition text as one
+/// escaped string (newlines become `\n` on the wire).
+pub fn ok_metrics(text: &str) -> String {
+    format!("{{\"ok\":true,\"metrics\":{}}}", jstr(text))
+}
+
+/// `{"ok":true,"jobs":N,…}` — aggregate server statistics.
+pub fn ok_stats(s: &ServerStats) -> String {
+    format!(
+        "{{\"ok\":true,\"jobs\":{},\"queued\":{},\"running\":{},\"done\":{},\
+         \"cancelled\":{},\"failed\":{},\"chains_pending\":{},\"threads\":{}}}",
+        s.jobs_total, s.queued, s.running, s.done, s.cancelled, s.failed, s.chains_pending,
+        s.threads,
+    )
+}
+
 fn status_json(s: &JobStatus) -> String {
     let r_hat = match s.r_hat {
         Some(r) => jnum(r),
@@ -357,16 +383,33 @@ pub fn ok_result(r: &JobResult) -> String {
         .iter()
         .map(|c| {
             let best_x: Vec<String> = c.best_x.iter().map(|v| v.to_string()).collect();
-            format!(
+            let mut obj = format!(
                 "{{\"chain\":{},\"steps\":{},\"best_objective\":{},\"updates\":{},\
-                 \"trace_len\":{},\"best_x\":[{}]}}",
+                 \"trace_len\":{},\"best_x\":[{}]",
                 c.chain_id,
                 c.steps,
                 jnum(c.best_objective),
                 c.stats.updates,
                 c.objective_trace.len(),
                 best_x.join(","),
-            )
+            );
+            // Simulated chains carry the cycle/stall/utilization
+            // breakdown the co-design loop needs (absent on software
+            // chains, so software responses are unchanged).
+            if let Some(rep) = &c.sim {
+                obj.push_str(&format!(
+                    ",\"sim_cycles\":{},\"sim_stall_sync\":{},\"sim_stall_xbar\":{},\
+                     \"sim_xfer_words\":{},\"sim_cu_util\":{},\"sim_su_util\":{}",
+                    rep.cycles,
+                    rep.stall_sync,
+                    rep.stall_xbar,
+                    rep.xfer_words,
+                    jnum(rep.cu_utilization()),
+                    jnum(rep.su_utilization()),
+                ));
+            }
+            obj.push('}');
+            obj
         })
         .collect();
     format!(
@@ -468,6 +511,9 @@ pub fn submit_line(spec: &JobSpec) -> String {
     if let Some(p) = spec.pas_flips {
         line.push_str(&format!(",\"pas_flips\":{p}"));
     }
+    if spec.trace {
+        line.push_str(",\"trace\":true");
+    }
     line.push('}');
     line
 }
@@ -498,6 +544,16 @@ pub fn stream_line(job: JobId) -> String {
 /// Build a ping request line.
 pub fn ping_line() -> String {
     "{\"op\":\"ping\"}".to_string()
+}
+
+/// Build a metrics request line.
+pub fn metrics_line() -> String {
+    "{\"op\":\"metrics\"}".to_string()
+}
+
+/// Build a stats request line.
+pub fn stats_line() -> String {
+    "{\"op\":\"stats\"}".to_string()
 }
 
 /// Build a shutdown request line.
@@ -582,6 +638,7 @@ mod tests {
         spec.priority = Priority::High;
         spec.observe_every = 50;
         spec.pas_flips = Some(3);
+        spec.trace = true;
         let parsed = match parse_request(&submit_line(&spec)).unwrap() {
             Request::Submit(s) => s,
             other => panic!("expected submit, got {other:?}"),
@@ -597,6 +654,49 @@ mod tests {
         assert_eq!(parsed.priority, Priority::High);
         assert_eq!(parsed.observe_every, 50);
         assert_eq!(parsed.pas_flips, Some(3));
+        assert!(parsed.trace);
+    }
+
+    #[test]
+    fn admin_request_lines_parse() {
+        assert!(matches!(parse_request(&metrics_line()), Ok(Request::Metrics)));
+        assert!(matches!(parse_request(&stats_line()), Ok(Request::Stats)));
+    }
+
+    #[test]
+    fn stats_response_is_flat_json() {
+        let s = ServerStats {
+            jobs_total: 3,
+            queued: 1,
+            running: 1,
+            done: 1,
+            threads: 4,
+            ..ServerStats::default()
+        };
+        let line = ok_stats(&s);
+        assert!(response_is_ok(&line));
+        let fields = parse_flat_object(&line).unwrap();
+        let get = |key: &str| {
+            fields.iter().find(|(k, _)| k == key).map(|(_, v)| v.clone()).unwrap()
+        };
+        assert_eq!(get("jobs"), JVal::Num(3.0));
+        assert_eq!(get("running"), JVal::Num(1.0));
+        assert_eq!(get("threads"), JVal::Num(4.0));
+    }
+
+    #[test]
+    fn metrics_response_escapes_newlines() {
+        let line = ok_metrics("# TYPE mc2a_x counter\nmc2a_x 1\n");
+        assert!(response_is_ok(&line));
+        let fields = parse_flat_object(&line).unwrap();
+        let body = fields
+            .iter()
+            .find_map(|(k, v)| match (k.as_str(), v) {
+                ("metrics", JVal::Str(s)) => Some(s.clone()),
+                _ => None,
+            })
+            .unwrap();
+        assert!(body.contains("# TYPE mc2a_x counter\n"));
     }
 
     #[test]

@@ -1,0 +1,511 @@
+//! Process-wide metrics and span tracing — the observability layer.
+//!
+//! Two global, std-only sinks, both **disabled by default** and
+//! designed to be zero-cost when off:
+//!
+//! * [`MetricsRegistry`] (via [`metrics`]) — named counters, gauges
+//!   and fixed-bucket histograms behind one mutex. Hot paths record at
+//!   *segment* granularity (per observation segment, per pool task,
+//!   per swap round), never per RV update, so the enabled overhead
+//!   stays well under the 2% budget and the disabled path is a single
+//!   relaxed atomic load. Recording never touches an RNG stream or a
+//!   floating-point reduction, so results are bit-identical with
+//!   telemetry on or off (pinned by `tests/integration_telemetry.rs`).
+//! * [`Tracer`] (via [`tracer`]) — span events rendered as Chrome
+//!   trace-event JSON (`[{"name":…,"ph":"X","ts":…,"dur":…},…]`),
+//!   loadable in Perfetto or `chrome://tracing`. Wired up by
+//!   `mc2a run --trace out.json`, `mc2a serve --trace out.json` and
+//!   the job-server's per-job opt-in ([`crate::engine::JobSpec`]).
+//!
+//! Metric names are exposed in Prometheus text format (prefixed
+//! `mc2a_`) by [`MetricsRegistry::render_prometheus`], served over
+//! HTTP by `mc2a serve --metrics-addr HOST:PORT` and over the job
+//! protocol by the `metrics` verb.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::coordinator::ChainResult;
+use crate::engine::checkpoint::escape_json;
+
+/// Histogram bucket upper bounds (seconds): micro-benches to long
+/// jobs. Rendered as cumulative Prometheus `le` buckets plus `+Inf`.
+pub const HISTOGRAM_BOUNDS: [f64; 8] = [0.0001, 0.001, 0.01, 0.1, 1.0, 10.0, 60.0, 600.0];
+
+/// One fixed-bucket histogram: count, sum, cumulative bucket counts.
+#[derive(Clone, Debug, Default)]
+pub struct Histogram {
+    /// Observations recorded.
+    pub count: u64,
+    /// Sum of observed values.
+    pub sum: f64,
+    /// Cumulative counts per [`HISTOGRAM_BOUNDS`] bound (`le` semantics).
+    pub buckets: [u64; HISTOGRAM_BOUNDS.len()],
+}
+
+impl Histogram {
+    fn observe(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        for (slot, bound) in self.buckets.iter_mut().zip(HISTOGRAM_BOUNDS) {
+            if v <= bound {
+                *slot += 1;
+            }
+        }
+    }
+}
+
+/// (metric name, rendered label pairs) — the registry key.
+type Key = (&'static str, String);
+
+#[derive(Default)]
+struct MetricsInner {
+    counters: BTreeMap<Key, u64>,
+    gauges: BTreeMap<Key, f64>,
+    histograms: BTreeMap<Key, Histogram>,
+}
+
+/// Process-wide registry of counters, gauges and histograms.
+///
+/// Every mutator is a no-op while the registry is disabled (the
+/// default); enabling it never changes run results, only adds the
+/// bookkeeping. Obtain the global instance via [`metrics`].
+pub struct MetricsRegistry {
+    enabled: AtomicBool,
+    inner: Mutex<MetricsInner>,
+}
+
+impl MetricsRegistry {
+    fn new() -> MetricsRegistry {
+        MetricsRegistry {
+            enabled: AtomicBool::new(false),
+            inner: Mutex::new(MetricsInner::default()),
+        }
+    }
+
+    /// Turn metric recording on or off (off by default).
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// True when recording is on — the hot-path fast check.
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Drop every recorded value (the enabled flag is untouched).
+    pub fn reset(&self) {
+        *self.lock() = MetricsInner::default();
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, MetricsInner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Add `delta` to a monotonic counter (name it `*_total`).
+    pub fn counter_add(&self, name: &'static str, labels: &[(&str, &str)], delta: u64) {
+        if !self.enabled() {
+            return;
+        }
+        *self.lock().counters.entry((name, label_string(labels))).or_insert(0) += delta;
+    }
+
+    /// Set a gauge to `value`.
+    pub fn gauge_set(&self, name: &'static str, labels: &[(&str, &str)], value: f64) {
+        if !self.enabled() {
+            return;
+        }
+        self.lock().gauges.insert((name, label_string(labels)), value);
+    }
+
+    /// Record one histogram observation (name it `*_seconds` for times).
+    pub fn observe(&self, name: &'static str, labels: &[(&str, &str)], value: f64) {
+        if !self.enabled() {
+            return;
+        }
+        self.lock()
+            .histograms
+            .entry((name, label_string(labels)))
+            .or_default()
+            .observe(value);
+    }
+
+    /// Current value of one counter (0 when never incremented) — for
+    /// tests and the `stats` verb.
+    pub fn counter_value(&self, name: &'static str, labels: &[(&str, &str)]) -> u64 {
+        self.lock().counters.get(&(name, label_string(labels))).copied().unwrap_or(0)
+    }
+
+    /// Sum of a counter across every label combination.
+    pub fn counter_sum(&self, name: &'static str) -> u64 {
+        self.lock()
+            .counters
+            .iter()
+            .filter(|((n, _), _)| *n == name)
+            .map(|(_, v)| *v)
+            .sum()
+    }
+
+    /// Render every metric in the Prometheus text exposition format
+    /// (names prefixed `mc2a_`), ready to serve on a scrape endpoint.
+    pub fn render_prometheus(&self) -> String {
+        let inner = self.lock();
+        let mut out = String::with_capacity(1024);
+        let mut last = "";
+        for ((name, labels), value) in &inner.counters {
+            if *name != last {
+                let _ = writeln!(out, "# TYPE mc2a_{name} counter");
+                last = name;
+            }
+            let _ = writeln!(out, "mc2a_{name}{} {value}", braced(labels));
+        }
+        last = "";
+        for ((name, labels), value) in &inner.gauges {
+            if *name != last {
+                let _ = writeln!(out, "# TYPE mc2a_{name} gauge");
+                last = name;
+            }
+            let _ = writeln!(out, "mc2a_{name}{} {value}", braced(labels));
+        }
+        last = "";
+        for ((name, labels), h) in &inner.histograms {
+            if *name != last {
+                let _ = writeln!(out, "# TYPE mc2a_{name} histogram");
+                last = name;
+            }
+            for (bound, count) in HISTOGRAM_BOUNDS.iter().zip(h.buckets) {
+                let le = join_labels(labels, &format!("le=\"{bound}\""));
+                let _ = writeln!(out, "mc2a_{name}_bucket{{{le}}} {count}");
+            }
+            let le = join_labels(labels, "le=\"+Inf\"");
+            let _ = writeln!(out, "mc2a_{name}_bucket{{{le}}} {}", h.count);
+            let _ = writeln!(out, "mc2a_{name}_sum{} {}", braced(labels), h.sum);
+            let _ = writeln!(out, "mc2a_{name}_count{} {}", braced(labels), h.count);
+        }
+        out
+    }
+}
+
+/// `k1="v1",k2="v2"` (no braces; empty for no labels).
+fn label_string(labels: &[(&str, &str)]) -> String {
+    let mut out = String::new();
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{k}=\"{}\"", escape_json(v));
+    }
+    out
+}
+
+/// Wrap a rendered label string in braces, or nothing when empty.
+fn braced(labels: &str) -> String {
+    if labels.is_empty() {
+        String::new()
+    } else {
+        format!("{{{labels}}}")
+    }
+}
+
+/// Append one more label pair to a rendered label string.
+fn join_labels(labels: &str, extra: &str) -> String {
+    if labels.is_empty() {
+        extra.to_string()
+    } else {
+        format!("{labels},{extra}")
+    }
+}
+
+/// The process-wide metrics registry.
+pub fn metrics() -> &'static MetricsRegistry {
+    static REGISTRY: OnceLock<MetricsRegistry> = OnceLock::new();
+    REGISTRY.get_or_init(MetricsRegistry::new)
+}
+
+/// True when metric recording is on — guard any label formatting that
+/// would allocate with this before calling the registry.
+pub fn enabled() -> bool {
+    metrics().enabled()
+}
+
+/// Fold one finished chain into the registry: updates/accepts per
+/// kernel, categorical draws per sampler family, and — on accelerator
+/// chains — the cycle/stall breakdown. One call per chain, after the
+/// run, so no kernel inner loop carries instrumentation.
+pub fn record_chain_result(kernel: &str, sampler: &str, backend: &str, c: &ChainResult) {
+    let m = metrics();
+    if !m.enabled() {
+        return;
+    }
+    m.counter_add("chains_completed_total", &[("backend", backend)], 1);
+    m.counter_add("chain_steps_total", &[("kernel", kernel)], c.steps as u64);
+    m.counter_add("chain_updates_total", &[("kernel", kernel)], c.stats.updates);
+    m.counter_add("chain_accepts_total", &[("kernel", kernel)], c.stats.accepted);
+    m.counter_add("sampler_draws_total", &[("sampler", sampler)], c.stats.cost.samples);
+    if let Some(rep) = &c.sim {
+        m.counter_add("sim_cycles_total", &[], rep.cycles);
+        m.counter_add("sim_stall_sync_cycles_total", &[], rep.stall_sync);
+        m.counter_add("sim_stall_xbar_cycles_total", &[], rep.stall_xbar);
+        m.counter_add("sim_xfer_words_total", &[], rep.xfer_words);
+    }
+}
+
+// ---- span tracing -----------------------------------------------------
+
+/// Spans kept before the tracer starts dropping (memory backstop for
+/// long-lived daemons).
+const MAX_TRACE_EVENTS: usize = 1 << 20;
+
+/// One completed span (Chrome trace-event "X" phase).
+#[derive(Clone, Debug)]
+pub struct SpanEvent {
+    /// Human-readable span name.
+    pub name: String,
+    /// Category ("job", "round", "sim", "pool", …).
+    pub cat: &'static str,
+    /// Start, µs since the tracer started.
+    pub ts_us: u64,
+    /// Duration in µs.
+    pub dur_us: u64,
+    /// Emitting thread (hashed thread id).
+    pub tid: u64,
+}
+
+struct TracerInner {
+    t0: Option<Instant>,
+    events: Vec<SpanEvent>,
+    dropped: u64,
+}
+
+/// Process-wide span collector; obtain via [`tracer`]. Disabled by
+/// default — [`span`] returns `None` without any allocation.
+pub struct Tracer {
+    enabled: AtomicBool,
+    inner: Mutex<TracerInner>,
+}
+
+impl Tracer {
+    fn new() -> Tracer {
+        Tracer {
+            enabled: AtomicBool::new(false),
+            inner: Mutex::new(TracerInner { t0: None, events: Vec::new(), dropped: 0 }),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, TracerInner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Clear any previous trace and start collecting spans now.
+    pub fn start(&self) {
+        {
+            let mut inner = self.lock();
+            inner.t0 = Some(Instant::now());
+            inner.events.clear();
+            inner.dropped = 0;
+        }
+        self.enabled.store(true, Ordering::Relaxed);
+    }
+
+    /// Stop collecting (the recorded spans stay available).
+    pub fn stop(&self) {
+        self.enabled.store(false, Ordering::Relaxed);
+    }
+
+    /// True while spans are being collected.
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Spans recorded so far.
+    pub fn event_count(&self) -> usize {
+        self.lock().events.len()
+    }
+
+    /// Record one completed span from explicit endpoints — for spans
+    /// that start and end on different threads (job lifecycle).
+    pub fn record(&self, name: String, cat: &'static str, start: Instant, end: Instant) {
+        if !self.is_enabled() {
+            return;
+        }
+        let tid = thread_tid();
+        let mut inner = self.lock();
+        let Some(t0) = inner.t0 else { return };
+        if inner.events.len() >= MAX_TRACE_EVENTS {
+            inner.dropped += 1;
+            return;
+        }
+        let ts_us = start.saturating_duration_since(t0).as_micros() as u64;
+        let dur_us = end.saturating_duration_since(start).as_micros() as u64;
+        inner.events.push(SpanEvent { name, cat, ts_us, dur_us, tid });
+    }
+
+    /// Render the collected spans as Chrome trace-event JSON — an
+    /// array of complete ("ph":"X") events, loadable in Perfetto.
+    pub fn to_chrome_json(&self) -> String {
+        let inner = self.lock();
+        let mut out = String::with_capacity(64 + inner.events.len() * 96);
+        out.push_str("[\n");
+        for (i, e) in inner.events.iter().enumerate() {
+            if i > 0 {
+                out.push_str(",\n");
+            }
+            let _ = write!(
+                out,
+                "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\
+                 \"pid\":1,\"tid\":{}}}",
+                escape_json(&e.name),
+                e.cat,
+                e.ts_us,
+                e.dur_us,
+                e.tid
+            );
+        }
+        out.push_str("\n]\n");
+        out
+    }
+
+    /// Write the Chrome trace JSON to `path`.
+    pub fn write(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.to_chrome_json())
+    }
+}
+
+/// The process-wide span tracer.
+pub fn tracer() -> &'static Tracer {
+    static TRACER: OnceLock<Tracer> = OnceLock::new();
+    TRACER.get_or_init(Tracer::new)
+}
+
+/// True while span collection is on.
+pub fn tracing() -> bool {
+    tracer().is_enabled()
+}
+
+/// RAII span: records a complete trace event on drop. `None` (and no
+/// allocation) while tracing is off — bind with
+/// `let _span = telemetry::span(…);`.
+pub fn span(name: impl Into<String>, cat: &'static str) -> Option<Span> {
+    if !tracing() {
+        return None;
+    }
+    Some(Span { name: name.into(), cat, t0: Instant::now() })
+}
+
+/// [`span`] with a lazily-built name: `name` runs only while tracing
+/// is on, so call sites pay no `format!` allocation when it is off.
+pub fn span_with(cat: &'static str, name: impl FnOnce() -> String) -> Option<Span> {
+    if !tracing() {
+        return None;
+    }
+    Some(Span { name: name(), cat, t0: Instant::now() })
+}
+
+/// In-flight span handle returned by [`span`] / [`span_with`].
+pub struct Span {
+    name: String,
+    cat: &'static str,
+    t0: Instant,
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        tracer().record(std::mem::take(&mut self.name), self.cat, self.t0, Instant::now());
+    }
+}
+
+/// Compact per-thread id for trace rows (hashed [`std::thread::ThreadId`]).
+fn thread_tid() -> u64 {
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    std::thread::current().id().hash(&mut h);
+    h.finish() & 0xFFFF
+}
+
+/// Serialize tests — across modules — that flip the process-wide
+/// registry or tracer state; `cargo test` runs tests concurrently in
+/// one process, so unguarded toggles race with each other's asserts.
+#[cfg(test)]
+pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+    TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn guard() -> std::sync::MutexGuard<'static, ()> {
+        test_guard()
+    }
+
+    #[test]
+    fn disabled_registry_records_nothing() {
+        let _g = guard();
+        let m = metrics();
+        m.set_enabled(false);
+        m.reset();
+        m.counter_add("noop_total", &[], 5);
+        m.gauge_set("noop_gauge", &[], 1.0);
+        m.observe("noop_seconds", &[], 0.5);
+        assert_eq!(m.counter_value("noop_total", &[]), 0);
+        assert_eq!(m.render_prometheus(), "");
+    }
+
+    #[test]
+    fn counters_gauges_histograms_render_as_prometheus() {
+        let _g = guard();
+        let m = metrics();
+        m.set_enabled(true);
+        m.reset();
+        m.counter_add("steals_total", &[], 3);
+        m.counter_add("draws_total", &[("sampler", "gumbel")], 7);
+        m.counter_add("draws_total", &[("sampler", "cdf")], 2);
+        m.gauge_set("queue_depth", &[("class", "high")], 4.0);
+        m.observe("write_seconds", &[], 0.005);
+        m.observe("write_seconds", &[], 2.0);
+        let text = m.render_prometheus();
+        m.set_enabled(false);
+        assert!(text.contains("# TYPE mc2a_steals_total counter"));
+        assert!(text.contains("mc2a_steals_total 3"));
+        assert!(text.contains("mc2a_draws_total{sampler=\"gumbel\"} 7"));
+        assert!(text.contains("mc2a_draws_total{sampler=\"cdf\"} 2"));
+        assert!(text.contains("mc2a_queue_depth{class=\"high\"} 4"));
+        // Cumulative buckets: 0.005 lands in le=0.01 and wider; 2.0
+        // only from le=10 up; +Inf carries the full count.
+        assert!(text.contains("mc2a_write_seconds_bucket{le=\"0.01\"} 1"));
+        assert!(text.contains("mc2a_write_seconds_bucket{le=\"10\"} 2"));
+        assert!(text.contains("mc2a_write_seconds_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("mc2a_write_seconds_count 2"));
+        assert_eq!(m.counter_sum("draws_total"), 9);
+    }
+
+    #[test]
+    fn spans_collect_only_while_tracing() {
+        let _g = guard();
+        let t = tracer();
+        t.stop();
+        assert!(span("ignored", "test").is_none());
+        t.start();
+        {
+            let _s = span("visible", "test");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        t.record("manual".into(), "test", Instant::now(), Instant::now());
+        t.stop();
+        assert_eq!(t.event_count(), 2);
+        let json = t.to_chrome_json();
+        assert!(json.trim_start().starts_with('['));
+        assert!(json.trim_end().ends_with(']'));
+        assert!(json.contains("\"name\":\"visible\""));
+        assert!(json.contains("\"ph\":\"X\""));
+        // Restarting clears the previous trace.
+        t.start();
+        t.stop();
+        assert_eq!(t.event_count(), 0);
+    }
+}

@@ -27,6 +27,7 @@ use crate::engine::adaptive::{ChainSignal, ExecUnit};
 use crate::engine::backend::{ChainCtx, ChainSpec};
 use crate::engine::error::Mc2aError;
 use crate::engine::observer::ProgressEvent;
+use crate::engine::telemetry;
 use crate::mcmc::tempering::ReplicaExchange;
 
 /// Run `units` to completion (or early stop) under the per-ensemble
@@ -71,10 +72,14 @@ pub(crate) fn run_tempered<'m>(
     let mut energies: Vec<f64> = vec![0.0; chains];
     let mut signals: Vec<ChainSignal> = Vec::new();
     let mut done = 0usize;
+    let mut round = 0usize;
     while done < spec.steps {
         if ctx.stop_requested() {
             break;
         }
+        let _round_span = telemetry::span_with("lockstep", || format!("swap round {round}"));
+        telemetry::metrics().counter_add("lockstep_rounds_total", &[("driver", "tempered")], 1);
+        round += 1;
         // Segment ends at the next swap boundary of the *global* step
         // clock, so a resumed run keeps the uninterrupted run's swap
         // schedule (the final segment may be shorter; it ends the run

@@ -11,9 +11,11 @@
 //!          [--adaptive reheat|plateau]
 //!          [--temper K] [--swap-every N] [--ladder geom:FROM:TO|explicit:B1,B2,…]
 //!          [--swap-target RATE] [--seed S] [--observe N]
-//!          [--save-state PATH] [--init-from PATH]
+//!          [--save-state PATH] [--init-from PATH] [--trace OUT.json]
 //! mc2a serve [--addr HOST:PORT] [--dir JOBDIR] [--threads N] [--recover]
-//! mc2a client [--addr HOST:PORT] <submit|status|result|cancel|stream|shutdown|ping> …
+//!            [--metrics-addr HOST:PORT] [--trace OUT.json]
+//! mc2a client [--addr HOST:PORT]
+//!             <submit|status|result|cancel|stream|metrics|stats|shutdown|ping> …
 //! mc2a workloads
 //! mc2a roofline [--workload <name>] [--cores C]
 //! mc2a dse
@@ -30,6 +32,7 @@ use std::time::Duration;
 
 use mc2a::bench;
 use mc2a::engine::server::{net, proto};
+use mc2a::engine::telemetry;
 use mc2a::engine::{
     registry, Checkpoint, Engine, JobServer, JobServerConfig, JobSpec, Mc2aError, PrintObserver,
     Priority, ServeBackend,
@@ -55,14 +58,15 @@ USAGE:
            [--adaptive reheat|plateau]
            [--temper K] [--swap-every N] [--ladder geom:FROM:TO|explicit:B1,B2,…]
            [--swap-target RATE] [--seed S] [--observe N]
-           [--save-state PATH] [--init-from PATH]
+           [--save-state PATH] [--init-from PATH] [--trace OUT.json]
   mc2a serve [--addr HOST:PORT] [--dir JOBDIR] [--threads N]
              [--recover] [--force-backend sw|sim]
+             [--metrics-addr HOST:PORT] [--trace OUT.json]
   mc2a client [--addr HOST:PORT] [--connect-retries N]
-              <submit|status|result|cancel|stream|shutdown|ping>
+              <submit|status|result|cancel|stream|metrics|stats|shutdown|ping>
               submit: --workload <name> [--steps N] [--chains N] [--seed S]
                       [--beta B] [--algo A] [--sampler S] [--observe N]
-                      [--backend sw|sim] [--priority low|normal|high]
+                      [--backend sw|sim] [--priority low|normal|high] [--trace]
               status [--job N] | cancel/stream --job N
               result --job N [--wait] [--timeout SECS]
   mc2a workloads
@@ -333,6 +337,14 @@ fn cmd_run(args: &[String]) -> Result<(), Mc2aError> {
             .observe_every(every)
             .observer(Box::new(PrintObserver));
     }
+    // Telemetry is opt-in: --trace turns on both the metrics registry
+    // and the span tracer for this run (results are bit-identical
+    // either way).
+    let trace_path = flag_value(args, "--trace");
+    if trace_path.is_some() {
+        telemetry::metrics().set_enabled(true);
+        telemetry::tracer().start();
+    }
     let mut engine = builder.build()?;
     println!(
         "workload={} nodes={} edges={} algo={} sampler={} backend={} steps={steps} chains={chains}",
@@ -364,6 +376,20 @@ fn cmd_run(args: &[String]) -> Result<(), Mc2aError> {
             );
         }
         println!();
+        if let Some(rep) = &c.sim {
+            println!(
+                "  sim breakdown: CU util {:.2}, SU util {:.2}, sync overhead {:.1}%, \
+                 stalls sync {} / xbar {} / mem {} / bank {}, {} xfer words",
+                rep.cu_utilization(),
+                rep.su_utilization(),
+                100.0 * rep.sync_overhead(),
+                rep.stall_sync,
+                rep.stall_xbar,
+                rep.stall_mem_bw,
+                rep.stall_bank,
+                rep.xfer_words,
+            );
+        }
         if let Some(mc) = &c.multicore {
             let util = mc
                 .core_utilization()
@@ -436,6 +462,17 @@ fn cmd_run(args: &[String]) -> Result<(), Mc2aError> {
         println!(
             "saved checkpoint to {path} (chain {}, state objective {objective:.2})",
             best.chain_id
+        );
+    }
+    if let Some(path) = &trace_path {
+        let tracer = telemetry::tracer();
+        tracer.stop();
+        tracer
+            .write(path)
+            .map_err(|e| Mc2aError::Checkpoint(format!("writing trace {path}: {e}")))?;
+        println!(
+            "wrote {} trace events to {path} (chrome://tracing / Perfetto)",
+            tracer.event_count()
         );
     }
     Ok(())
@@ -537,10 +574,31 @@ fn cmd_serve(args: &[String]) -> Result<(), Mc2aError> {
             "--force-backend only applies when recovering jobs (add --recover)".into(),
         ));
     }
+    // Admin surface: a Prometheus scrape endpoint on its own port, and
+    // an optional whole-process span trace written at clean shutdown.
+    if let Some(maddr) = flag_value(args, "--metrics-addr") {
+        telemetry::metrics().set_enabled(true);
+        let bound = net::spawn_metrics_http(&maddr)?;
+        eprintln!("mc2a serve: metrics on http://{bound}/metrics");
+    }
+    let trace_path = flag_value(args, "--trace");
+    if trace_path.is_some() {
+        telemetry::metrics().set_enabled(true);
+        telemetry::tracer().start();
+    }
     let cfg = JobServerConfig { threads, dir };
     let server =
         if recover { JobServer::recover_with(cfg, force_backend)? } else { JobServer::new(cfg)? };
-    net::serve(server, &addr)
+    net::serve(server, &addr)?;
+    if let Some(path) = &trace_path {
+        let tracer = telemetry::tracer();
+        tracer.stop();
+        tracer
+            .write(path)
+            .map_err(|e| Mc2aError::Checkpoint(format!("writing trace {path}: {e}")))?;
+        eprintln!("mc2a serve: wrote {} trace events to {path}", tracer.event_count());
+    }
+    Ok(())
 }
 
 /// The `--job N` flag, required by result/cancel/stream.
@@ -561,8 +619,9 @@ fn finish_response(response: String) -> Result<(), Mc2aError> {
 }
 
 fn cmd_client(args: &[String]) -> Result<(), Mc2aError> {
-    const VERBS: [&str; 7] =
-        ["submit", "status", "result", "cancel", "stream", "shutdown", "ping"];
+    const VERBS: [&str; 9] = [
+        "submit", "status", "result", "cancel", "stream", "metrics", "stats", "shutdown", "ping",
+    ];
     let addr = flag_value(args, "--addr").unwrap_or_else(|| "127.0.0.1:7477".into());
     let retries: u32 = parsed_flag(args, "--connect-retries")?.unwrap_or(0);
     let verb = args
@@ -571,7 +630,9 @@ fn cmd_client(args: &[String]) -> Result<(), Mc2aError> {
         .find(|a| VERBS.contains(a))
         .ok_or_else(|| {
             Mc2aError::InvalidConfig(
-                "client needs a verb: submit|status|result|cancel|stream|shutdown|ping".into(),
+                "client needs a verb: submit|status|result|cancel|stream|metrics|stats|\
+                 shutdown|ping"
+                    .into(),
             )
         })?;
     let line = match verb {
@@ -617,6 +678,9 @@ fn cmd_client(args: &[String]) -> Result<(), Mc2aError> {
                     ))
                 })?;
             }
+            if has_flag(args, "--trace") {
+                spec.trace = true;
+            }
             proto::submit_line(&spec)
         }
         "status" => proto::status_line(parsed_flag(args, "--job")?),
@@ -650,6 +714,8 @@ fn cmd_client(args: &[String]) -> Result<(), Mc2aError> {
                 true
             });
         }
+        "metrics" => proto::metrics_line(),
+        "stats" => proto::stats_line(),
         "shutdown" => proto::shutdown_line(),
         "ping" => proto::ping_line(),
         _ => unreachable!("verb is drawn from VERBS"),

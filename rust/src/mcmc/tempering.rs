@@ -377,6 +377,7 @@ impl ReplicaExchange {
         assert_eq!(energies.len(), k, "one energy per replica slot");
         let betas = self.ladder.betas().to_vec();
         let mut accepted = 0usize;
+        let mut attempts = 0u64;
         let mut r = (self.rounds % 2) as usize;
         while r + 1 < k {
             let (si, sj) = (self.slot_of[r], self.slot_of[r + 1]);
@@ -387,6 +388,7 @@ impl ReplicaExchange {
             let log_a = (betas[r] as f64 - betas[r + 1] as f64) * (energies[si] - energies[sj]);
             self.pair_attempts[r] += 1;
             self.win_attempts[r] += 1;
+            attempts += 1;
             if log_a >= 0.0 || u < log_a.exp() {
                 self.rung_of[si] = r + 1;
                 self.rung_of[sj] = r;
@@ -399,6 +401,11 @@ impl ReplicaExchange {
             r += 2;
         }
         self.rounds += 1;
+        if crate::engine::telemetry::enabled() {
+            let m = crate::engine::telemetry::metrics();
+            m.counter_add("swap_attempts_total", &[], attempts);
+            m.counter_add("swap_accepts_total", &[], accepted as u64);
+        }
         // Round-trip bookkeeping: a slot completes a trip when it
         // returns to the bottom rung after touching the top.
         for slot in 0..k {

@@ -286,6 +286,9 @@ impl<'m> Simulator<'m> {
         betas: Option<&[f32]>,
         observe: &mut dyn FnMut(usize, &SimReport, &[u32]) -> bool,
     ) -> bool {
+        let _span = crate::engine::telemetry::span_with("sim", || {
+            format!("sim segment {iter0}..{}", iter0 + n)
+        });
         for j in 0..n {
             let iter = iter0 + j;
             if let Some(b) = betas {

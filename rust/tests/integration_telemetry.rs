@@ -1,0 +1,151 @@
+//! Integration tests for `engine::telemetry`: the metrics registry and
+//! span tracer are observation-only, so enabling them must not change
+//! a single bit of any chain result — and the Prometheus / Chrome
+//! trace-event renderings they produce must be well-formed.
+
+use std::sync::{Mutex, MutexGuard};
+
+use mc2a::coordinator::RunMetrics;
+use mc2a::engine::{telemetry, Engine};
+
+/// The registry and tracer are process-wide; serialize every test in
+/// this binary that flips or reads their state.
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn guard() -> MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Restore the process-wide off-by-default state, even if a test
+/// assertion fails midway.
+struct TelemetryOff;
+
+impl Drop for TelemetryOff {
+    fn drop(&mut self) {
+        telemetry::metrics().set_enabled(false);
+        telemetry::metrics().reset();
+        let t = telemetry::tracer();
+        t.stop();
+        t.start();
+        t.stop(); // start+stop clears any events the test left behind
+    }
+}
+
+fn run_workload(workload: &str, batched: bool) -> RunMetrics {
+    let mut builder = Engine::for_workload(workload)
+        .expect(workload)
+        .steps(20)
+        .chains(4)
+        .seed(0xBEEF);
+    if batched {
+        builder = builder.batch(2).threads(2);
+    }
+    builder.build().expect(workload).run().expect(workload)
+}
+
+/// Field-by-field bit comparison of two runs (floats via `to_bits`, so
+/// NaN-safe and sensitive to sign/rounding differences `==` would hide).
+fn assert_bit_identical(a: &RunMetrics, b: &RunMetrics, ctx: &str) {
+    assert_eq!(a.chains.len(), b.chains.len(), "{ctx}: chain count");
+    for (x, y) in a.chains.iter().zip(&b.chains) {
+        let id = x.chain_id;
+        assert_eq!(x.chain_id, y.chain_id, "{ctx}: chain id");
+        assert_eq!(x.steps, y.steps, "{ctx} chain {id}: steps");
+        assert_eq!(
+            x.best_objective.to_bits(),
+            y.best_objective.to_bits(),
+            "{ctx} chain {id}: best objective"
+        );
+        assert_eq!(x.stats.updates, y.stats.updates, "{ctx} chain {id}: updates");
+        assert_eq!(x.stats.accepted, y.stats.accepted, "{ctx} chain {id}: accepted");
+        assert_eq!(x.stats.cost.ops, y.stats.cost.ops, "{ctx} chain {id}: ops");
+        assert_eq!(x.stats.cost.bytes, y.stats.cost.bytes, "{ctx} chain {id}: bytes");
+        assert_eq!(x.stats.cost.samples, y.stats.cost.samples, "{ctx} chain {id}: samples");
+        assert_eq!(x.best_x, y.best_x, "{ctx} chain {id}: best assignment");
+        let bits = |v: &[f64]| v.iter().map(|f| f.to_bits()).collect::<Vec<u64>>();
+        assert_eq!(bits(&x.marginal0), bits(&y.marginal0), "{ctx} chain {id}: marginal0");
+        assert_eq!(
+            bits(&x.objective_trace),
+            bits(&y.objective_trace),
+            "{ctx} chain {id}: objective trace"
+        );
+    }
+}
+
+#[test]
+fn enabling_telemetry_does_not_change_any_result_bit() {
+    let _g = guard();
+    let _off = TelemetryOff;
+    for workload in ["optsicom", "earthquake"] {
+        for batched in [false, true] {
+            let ctx = format!("{workload} batched={batched}");
+            telemetry::metrics().set_enabled(false);
+            telemetry::tracer().stop();
+            let baseline = run_workload(workload, batched);
+            telemetry::metrics().set_enabled(true);
+            telemetry::tracer().start();
+            let instrumented = run_workload(workload, batched);
+            telemetry::tracer().stop();
+            telemetry::metrics().set_enabled(false);
+            assert_bit_identical(&baseline, &instrumented, &ctx);
+        }
+    }
+}
+
+#[test]
+fn enabled_run_populates_chain_counters_and_prometheus_output() {
+    let _g = guard();
+    let _off = TelemetryOff;
+    let reg = telemetry::metrics();
+    reg.set_enabled(true);
+    reg.reset();
+    let metrics = run_workload("optsicom", false);
+    reg.set_enabled(false);
+    let chains = metrics.chains.len() as u64;
+    assert_eq!(reg.counter_sum("chains_completed_total"), chains);
+    let updates: u64 = metrics.chains.iter().map(|c| c.stats.updates).sum();
+    assert_eq!(reg.counter_sum("chain_updates_total"), updates);
+    let draws: u64 = metrics.chains.iter().map(|c| c.stats.cost.samples).sum();
+    assert_eq!(reg.counter_sum("sampler_draws_total"), draws);
+    let text = reg.render_prometheus();
+    assert!(text.contains("# TYPE mc2a_chains_completed_total counter"), "{text}");
+    assert!(text.contains("# TYPE mc2a_chain_updates_total counter"), "{text}");
+    assert!(text.contains("backend="), "{text}");
+}
+
+#[test]
+fn traced_run_emits_loadable_chrome_trace_json() {
+    let _g = guard();
+    let _off = TelemetryOff;
+    let t = telemetry::tracer();
+    t.start();
+    run_workload("optsicom", true);
+    t.stop();
+    assert!(t.event_count() > 0, "no spans recorded");
+    let json = t.to_chrome_json();
+    assert!(json.trim_start().starts_with('['), "{json}");
+    assert!(json.trim_end().ends_with(']'), "{json}");
+    assert!(json.contains("\"ph\":\"X\""), "{json}");
+    assert!(json.contains("\"cat\":\"engine\""), "{json}");
+    assert!(json.contains("\"cat\":\"batched\""), "{json}");
+    let path = std::env::temp_dir().join(format!("mc2a_trace_{}.json", std::process::id()));
+    t.write(&path).expect("writing trace file");
+    let on_disk = std::fs::read_to_string(&path).expect("reading trace file back");
+    assert_eq!(on_disk, json);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn disabled_telemetry_records_nothing_during_a_run() {
+    let _g = guard();
+    let _off = TelemetryOff;
+    let reg = telemetry::metrics();
+    reg.set_enabled(false);
+    reg.reset();
+    telemetry::tracer().stop();
+    run_workload("optsicom", false);
+    assert!(!telemetry::enabled());
+    assert_eq!(reg.counter_sum("chains_completed_total"), 0);
+    assert_eq!(reg.render_prometheus(), "");
+    assert_eq!(telemetry::tracer().event_count(), 0);
+}
