@@ -1,0 +1,280 @@
+//! Chromatic-parallelism race checks: the compiler's entire parallel
+//! schedule rests on color classes being independent sets with respect
+//! to the model's *Markov blanket*. The structural half re-verifies the
+//! greedy coloring against the interaction graph; the functional half
+//! probes `local_energies` directly — if a variable's conditional
+//! depends on a same-color variable the interaction graph doesn't
+//! declare, the declared graph under-approximates the true blanket and
+//! every "independent" parallel update is a silent race.
+
+use super::{DiagCode, Diagnostic, Report};
+use crate::energy::EnergyModel;
+use crate::graph::color_greedy;
+use crate::isa::{Program, Semantics};
+use crate::rng::Rng;
+
+/// Cap on per-instance error diagnostics of one kind.
+const MAX_INSTANCES: usize = 8;
+
+/// Maximum same-color pairs exercised by the functional probe.
+const PROBE_PAIRS: usize = 64;
+
+/// Tolerance on normalized local-energy differences: conditional
+/// distributions are invariant under a constant energy shift, so only
+/// `e[s] - e[0]` changes are evidence of dependence.
+const PROBE_TOL: f32 = 1e-4;
+
+/// Analyze the model's chromatic schedule: structural independence of
+/// every greedy color class, a functional hidden-dependence probe on
+/// `local_energies`, and a coloring-quality summary.
+pub fn analyze_chromatic(model: &dyn EnergyModel) -> Report {
+    let mut report = Report::new();
+    let g = model.interaction();
+    let coloring = color_greedy(g);
+
+    // --- Structural: each color class must be an independent set.
+    let mut improper = 0usize;
+    for v in 0..g.num_nodes() {
+        for &u in g.neighbors(v) {
+            if (u as usize) > v && coloring.color[v] == coloring.color[u as usize] {
+                improper += 1;
+                if improper <= MAX_INSTANCES {
+                    report.push(Diagnostic::new(
+                        DiagCode::ImproperColoring,
+                        format!(
+                            "interaction-graph neighbors {v} and {u} share color {} — their \
+                             parallel updates race",
+                            coloring.color[v]
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    if improper > MAX_INSTANCES {
+        report.push(Diagnostic::new(
+            DiagCode::ImproperColoring,
+            format!("... and {} more same-color edges", improper - MAX_INSTANCES),
+        ));
+    }
+
+    // --- Functional: perturb a same-color, non-adjacent variable b and
+    // require variable a's normalized conditional energies to be
+    // unchanged. Deterministic: the probe seed derives from the model
+    // shape only.
+    let n = model.num_vars();
+    if n >= 2 {
+        let mut rng = Rng::new(0x5EED_C0DE ^ (n as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut x: Vec<u32> = (0..n)
+            .map(|i| rng.below(model.num_states(i).max(1)) as u32)
+            .collect();
+        let blocks = coloring.blocks();
+        let mut base = Vec::new();
+        let mut perturbed = Vec::new();
+        let mut hidden = 0usize;
+        let mut probes = 0usize;
+        'outer: for block in &blocks {
+            if block.len() < 2 {
+                continue;
+            }
+            for w in 0..block.len().min(9) - 1 {
+                let a = block[w] as usize;
+                let b = block[w + 1] as usize;
+                debug_assert_ne!(a, b);
+                if g.has_edge(a, b) || model.num_states(b) < 2 {
+                    continue; // adjacency already reported structurally
+                }
+                probes += 1;
+                model.local_energies(&x, a, &mut base);
+                let old = x[b];
+                x[b] = (old + 1) % model.num_states(b) as u32;
+                model.local_energies(&x, a, &mut perturbed);
+                x[b] = old;
+                let drifted = base.len() != perturbed.len()
+                    || base.iter().zip(&perturbed).any(|(&e0, &e1)| {
+                        ((e0 - base[0]) - (e1 - perturbed[0])).abs() > PROBE_TOL
+                    });
+                if drifted {
+                    hidden += 1;
+                    if hidden <= MAX_INSTANCES {
+                        report.push(Diagnostic::new(
+                            DiagCode::HiddenDependence,
+                            format!(
+                                "local_energies({a}) changed when same-color non-neighbor {b} \
+                                 was perturbed — the interaction graph under-approximates the \
+                                 Markov blanket, so the chromatic schedule races"
+                            ),
+                        ));
+                    }
+                }
+                if probes >= PROBE_PAIRS {
+                    break 'outer;
+                }
+            }
+        }
+        if hidden > MAX_INSTANCES {
+            report.push(Diagnostic::new(
+                DiagCode::HiddenDependence,
+                format!("... and {} more hidden dependencies", hidden - MAX_INSTANCES),
+            ));
+        }
+    }
+
+    report.push(Diagnostic::new(
+        DiagCode::ColoringSummary,
+        format!(
+            "{} colors over {} RVs / {} edges (greedy bound is max-degree+1 = {}); largest \
+             class {} RVs",
+            coloring.num_colors,
+            g.num_nodes(),
+            g.num_edges(),
+            g.max_degree() + 1,
+            coloring.blocks().iter().map(|b| b.len()).max().unwrap_or(0),
+        ),
+    ));
+    report
+}
+
+/// Measure the Async-Gibbs hazard window of a snapshot program: every
+/// interaction edge whose *both* endpoints are updated from one
+/// snapshot reads a stale neighbor value for part of the iteration.
+/// That staleness is the algorithm's documented trade-off, so this is a
+/// warning sized for the user, not an error.
+pub fn async_hazard_window(program: &Program, model: &dyn EnergyModel, report: &mut Report) {
+    let instrs = || program.prologue.iter().chain(&program.body);
+    if !instrs().any(|i| matches!(i.sem, Semantics::Snapshot)) {
+        return;
+    }
+    let mut updated = vec![false; model.num_vars()];
+    for instr in instrs() {
+        if let Semantics::UpdateRvs(rvs) = &instr.sem {
+            for &rv in rvs {
+                if let Some(slot) = updated.get_mut(rv as usize) {
+                    *slot = true;
+                }
+            }
+        }
+    }
+    let g = model.interaction();
+    let mut stale = 0usize;
+    for v in 0..g.num_nodes() {
+        if !updated[v] {
+            continue;
+        }
+        stale += g
+            .neighbors(v)
+            .iter()
+            .filter(|&&u| (u as usize) > v && updated[u as usize])
+            .count();
+    }
+    if stale > 0 {
+        report.push(Diagnostic::new(
+            DiagCode::AsyncHazardWindow,
+            format!(
+                "async (snapshot) program: {stale} of {} interaction edges update both \
+                 endpoints from one snapshot — those reads see values up to one iteration \
+                 stale (Async-Gibbs semantics, not an error)",
+                g.num_edges()
+            ),
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::compile;
+    use crate::energy::{MaxCutModel, PottsGrid};
+    use crate::graph::Graph;
+    use crate::isa::HwConfig;
+    use crate::mcmc::AlgoKind;
+
+    #[test]
+    fn registry_style_models_are_chromatically_clean() {
+        let potts = PottsGrid::new(8, 8, 3, 1.0);
+        let r = analyze_chromatic(&potts);
+        assert!(!r.has_errors(), "{}", r.render_human());
+        assert!(r.diagnostics.iter().any(|d| d.code == DiagCode::ColoringSummary));
+    }
+
+    /// A model whose `local_energies` secretly reads a variable the
+    /// interaction graph does not declare.
+    struct LyingModel {
+        g: Graph,
+    }
+
+    impl EnergyModel for LyingModel {
+        fn num_vars(&self) -> usize {
+            4
+        }
+        fn num_states(&self, _i: usize) -> usize {
+            2
+        }
+        fn interaction(&self) -> &Graph {
+            &self.g
+        }
+        fn neighbor_words(&self, _i: usize) -> usize {
+            1
+        }
+        fn param_words_per_state(&self, _i: usize) -> usize {
+            0
+        }
+        fn local_energies(&self, x: &[u32], i: usize, out: &mut Vec<f32>) {
+            out.clear();
+            for s in 0..2u32 {
+                // Undeclared coupling: everything interacts with x[3].
+                let hidden = if i != 3 { (s ^ x[3]) as f32 } else { 0.0 };
+                out.push(s as f32 * 0.25 + hidden);
+            }
+        }
+        fn energy(&self, _x: &[u32]) -> f64 {
+            0.0
+        }
+    }
+
+    #[test]
+    fn hidden_dependence_is_detected() {
+        // Declared graph: a path 0-1-2, node 3 isolated (a lie).
+        let m = LyingModel { g: Graph::from_edges(4, &[(0, 1), (1, 2)], None) };
+        let r = analyze_chromatic(&m);
+        assert!(
+            r.diagnostics.iter().any(|d| d.code == DiagCode::HiddenDependence),
+            "{}",
+            r.render_human()
+        );
+        assert!(r.has_errors());
+    }
+
+    #[test]
+    fn honest_cop_model_passes_probe() {
+        // Ring of 16 nodes plus a few chords: 2 colors won't suffice,
+        // so same-color non-neighbor probe pairs exist.
+        let mut edges: Vec<(u32, u32)> = (0..16u32).map(|v| (v, (v + 1) % 16)).collect();
+        edges.push((0, 5));
+        edges.push((3, 11));
+        let m = MaxCutModel::new(Graph::from_edges(16, &edges, None), None);
+        let r = analyze_chromatic(&m);
+        assert!(!r.has_errors(), "{}", r.render_human());
+    }
+
+    #[test]
+    fn async_program_warns_with_hazard_size() {
+        let m = PottsGrid::new(6, 6, 2, 1.0);
+        let hw = HwConfig::paper_default();
+        let p = compile(&m, AlgoKind::AsyncGibbs, &hw, 1).unwrap();
+        let mut r = Report::new();
+        async_hazard_window(&p, &m, &mut r);
+        assert!(
+            r.diagnostics.iter().any(|d| d.code == DiagCode::AsyncHazardWindow),
+            "{}",
+            r.render_human()
+        );
+        assert!(!r.has_errors());
+
+        // Synchronous programs carry no snapshot and no warning.
+        let p = compile(&m, AlgoKind::BlockGibbs, &hw, 1).unwrap();
+        let mut r = Report::new();
+        async_hazard_window(&p, &m, &mut r);
+        assert!(r.diagnostics.is_empty());
+    }
+}

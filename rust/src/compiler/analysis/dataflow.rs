@@ -1,0 +1,369 @@
+//! Dataflow analysis over one ISA program: RF def-use (read-before-
+//! write, dead stores, per-bank register pressure), pipeline RAW-hazard
+//! detection across VLIW bundles, and per-bundle resource bounds the
+//! classic validator does not cover (load-slot ranges, store-lane
+//! ranges, SU distribution size, crossbar port conflicts).
+//!
+//! The def-use model follows the compiler's RF contract: crossbar
+//! routes are the only *register* reads (per-state parameter rows and
+//! the PAS distribution stream feed the CU/SU through the direct
+//! memory path and are intentionally never routed — overwrites of
+//! those staging rows are reported as an informational dead-store
+//! aggregate, not an error).
+
+use super::{DiagCode, Diagnostic, Report};
+use crate::isa::{HwConfig, Program};
+
+/// Cap on per-instance error diagnostics of one kind, so a corrupted
+/// program cannot flood the report (the remainder is summarized).
+const MAX_INSTANCES: usize = 8;
+
+/// Run the dataflow family, appending findings to `report`.
+pub fn check_dataflow(program: &Program, hw: &HwConfig, report: &mut Report) {
+    check_bounds(program, hw, report);
+    check_def_use(program, hw, report);
+    check_raw_hazards(program, hw, report);
+}
+
+/// Per-bundle bounds: load-slot targets, store-lane indices, SU
+/// distribution sizes, duplicate crossbar (CU, port) drivers.
+fn check_bounds(program: &Program, hw: &HwConfig, report: &mut Report) {
+    let mut load_oor = 0usize;
+    for (at, instr) in program.prologue.iter().chain(&program.body).enumerate() {
+        for l in &instr.loads {
+            if l.rf_bank as usize >= hw.rf_banks || l.rf_reg as usize >= hw.rf_regs_per_bank {
+                load_oor += 1;
+                if load_oor <= MAX_INSTANCES {
+                    report.push(
+                        Diagnostic::new(
+                            DiagCode::LoadOutOfRange,
+                            format!(
+                                "load targets rf[{}][{}] but the RF is {} banks x {} regs",
+                                l.rf_bank, l.rf_reg, hw.rf_banks, hw.rf_regs_per_bank
+                            ),
+                        )
+                        .at_instr(at),
+                    );
+                }
+            }
+        }
+        for s in &instr.stores {
+            if s.su_lane as usize >= hw.s {
+                report.push(
+                    Diagnostic::new(
+                        DiagCode::StoreLaneOutOfRange,
+                        format!("store reads SU lane {} but S = {}", s.su_lane, hw.s),
+                    )
+                    .at_instr(at),
+                );
+            }
+        }
+        if let Some(su) = &instr.su {
+            if su.dist_size as usize > hw.max_dist_size {
+                report.push(
+                    Diagnostic::new(
+                        DiagCode::DistTooLarge,
+                        format!(
+                            "SU samples a size-{} distribution but max_dist_size = {}",
+                            su.dist_size, hw.max_dist_size
+                        ),
+                    )
+                    .at_instr(at),
+                );
+            }
+        }
+        // Each (CU lane, input port) pair has one crossbar output — two
+        // routes driving it in one cycle is a structural conflict.
+        let mut ports = std::collections::HashSet::new();
+        for r in &instr.routes {
+            if !ports.insert((r.cu, r.port)) {
+                report.push(
+                    Diagnostic::new(
+                        DiagCode::RoutePortConflict,
+                        format!("two routes drive CU lane {} port {} in one bundle", r.cu, r.port),
+                    )
+                    .at_instr(at),
+                );
+            }
+        }
+    }
+    if load_oor > MAX_INSTANCES {
+        report.push(Diagnostic::new(
+            DiagCode::LoadOutOfRange,
+            format!("... and {} more out-of-range load slots", load_oor - MAX_INSTANCES),
+        ));
+    }
+}
+
+/// RF def-use in program order (prologue then body): every route must
+/// read a register some earlier load wrote (read-before-write is an
+/// error — the crossbar would forward garbage); overwrites of
+/// never-read *routed-class* registers are counted as dead stores; and
+/// the per-bank write high-water mark yields the register-pressure
+/// report.
+fn check_def_use(program: &Program, hw: &HwConfig, report: &mut Report) {
+    use std::collections::{HashMap, HashSet};
+    // Registers that are ever read through the crossbar. Writes outside
+    // this class stage direct-path operands and are exempt from
+    // dead-store accounting by design.
+    let mut routed: HashSet<(u16, u16)> = HashSet::new();
+    for instr in program.prologue.iter().chain(&program.body) {
+        for r in &instr.routes {
+            routed.insert((r.rf_bank, r.rf_reg));
+        }
+    }
+    // (bank, reg) -> has the latest write been read yet?
+    let mut written: HashMap<(u16, u16), bool> = HashMap::new();
+    let mut bank_regs: HashMap<u16, HashSet<u16>> = HashMap::new();
+    let mut rbw = 0usize;
+    let mut dead = 0usize;
+    let mut first_dead: Option<usize> = None;
+    let mut writes = 0u64;
+    let mut reads = 0u64;
+    for (at, instr) in program.prologue.iter().chain(&program.body).enumerate() {
+        for r in &instr.routes {
+            reads += 1;
+            match written.get_mut(&(r.rf_bank, r.rf_reg)) {
+                Some(read) => *read = true,
+                None => {
+                    rbw += 1;
+                    if rbw <= MAX_INSTANCES {
+                        report.push(
+                            Diagnostic::new(
+                                DiagCode::ReadBeforeWrite,
+                                format!(
+                                    "route reads rf[{}][{}] before any load writes it",
+                                    r.rf_bank, r.rf_reg
+                                ),
+                            )
+                            .at_instr(at),
+                        );
+                    }
+                }
+            }
+        }
+        for l in &instr.loads {
+            writes += 1;
+            let key = (l.rf_bank, l.rf_reg);
+            if let Some(read) = written.get(&key) {
+                if !*read && routed.contains(&key) {
+                    dead += 1;
+                    first_dead.get_or_insert(at);
+                }
+            }
+            written.insert(key, false);
+            bank_regs.entry(l.rf_bank).or_default().insert(l.rf_reg);
+        }
+    }
+    if rbw > MAX_INSTANCES {
+        report.push(Diagnostic::new(
+            DiagCode::ReadBeforeWrite,
+            format!("... and {} more read-before-write routes", rbw - MAX_INSTANCES),
+        ));
+    }
+    if dead > 0 {
+        let mut d = Diagnostic::new(
+            DiagCode::DeadStore,
+            format!(
+                "{dead} routed-register writes overwritten before any crossbar read per \
+                 iteration (rotating staging rows; direct-path operands are expected here)"
+            ),
+        );
+        if let Some(at) = first_dead {
+            d = d.at_instr(at);
+        }
+        report.push(d);
+    }
+    // Register-pressure / liveness report: how much of the RF the
+    // schedule actually touches, and how hot the busiest bank runs.
+    if !bank_regs.is_empty() {
+        let max_regs = bank_regs.values().map(|s| s.len()).max().unwrap_or(0);
+        let total_regs: usize = bank_regs.values().map(|s| s.len()).sum();
+        report.push(Diagnostic::new(
+            DiagCode::RegisterPressure,
+            format!(
+                "RF pressure: {}/{} banks written, busiest bank touches {}/{} regs \
+                 (mean {:.1}), {} reg writes / {} crossbar reads per iteration",
+                bank_regs.len(),
+                hw.rf_banks,
+                max_regs,
+                hw.rf_regs_per_bank,
+                total_regs as f64 / bank_regs.len() as f64,
+                writes,
+                reads
+            ),
+        ));
+    }
+}
+
+/// Pipeline RAW hazards through *memory*: a store at bundle `i` commits
+/// at the end of the CU/SU pipeline, so a load of the same
+/// (space, address) at bundle `j` with `j - i <= cu_latency` reads the
+/// stale value. The compiler's drain NOPs space dependent phases by
+/// exactly `cu_latency` bundles, so clean schedules sit one cycle past
+/// the window; fused bundles are checked against their own stores too.
+fn check_raw_hazards(program: &Program, hw: &HwConfig, report: &mut Report) {
+    use std::collections::VecDeque;
+    let window = hw.cu_latency();
+    // Recent stores: (bundle index, space code, addr).
+    let mut recent: VecDeque<(usize, u8, u32)> = VecDeque::new();
+    let mut hazards = 0usize;
+    for (at, instr) in program.prologue.iter().chain(&program.body).enumerate() {
+        while recent.front().is_some_and(|&(i, _, _)| at - i > window) {
+            recent.pop_front();
+        }
+        // A same-bundle store/load overlap is also stale: loads issue at
+        // the first pipeline stage, stores commit at the last.
+        let own: Vec<(usize, u8, u32)> =
+            instr.stores.iter().map(|s| (at, s.mem.code(), s.addr)).collect();
+        for l in &instr.loads {
+            let key = (l.mem.code(), l.addr);
+            if let Some(&(i, _, _)) = recent
+                .iter()
+                .chain(&own)
+                .find(|&&(_, m, a)| (m, a) == key)
+            {
+                hazards += 1;
+                if hazards <= MAX_INSTANCES {
+                    report.push(
+                        Diagnostic::new(
+                            DiagCode::RawHazard,
+                            format!(
+                                "load of mem[{}]@{} issues {} bundle(s) after the store that \
+                                 writes it (needs > {window} for the pipeline to commit)",
+                                l.mem.code(),
+                                l.addr,
+                                at - i
+                            ),
+                        )
+                        .at_instr(at),
+                    );
+                }
+            }
+        }
+        recent.extend(own);
+    }
+    if hazards > MAX_INSTANCES {
+        report.push(Diagnostic::new(
+            DiagCode::RawHazard,
+            format!("... and {} more RAW hazards", hazards - MAX_INSTANCES),
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::compile;
+    use crate::energy::PottsGrid;
+    use crate::isa::{CtrlType, Instr, LoadSlot, MemSpace, Semantics, StoreSlot, XbarRoute};
+    use crate::mcmc::AlgoKind;
+
+    fn clean_report(p: &Program, hw: &HwConfig) -> Report {
+        let mut r = Report::new();
+        check_dataflow(p, hw, &mut r);
+        r
+    }
+
+    #[test]
+    fn compiled_programs_have_no_dataflow_errors() {
+        let m = PottsGrid::new(8, 8, 3, 1.0);
+        for hw in [HwConfig::fig10_toy(), HwConfig::paper_default()] {
+            for algo in
+                [AlgoKind::Gibbs, AlgoKind::BlockGibbs, AlgoKind::AsyncGibbs, AlgoKind::Pas]
+            {
+                let p = compile(&m, algo, &hw, 2).unwrap();
+                let r = clean_report(&p, &hw);
+                assert!(!r.has_errors(), "{algo:?}: {}", r.render_human());
+            }
+        }
+    }
+
+    #[test]
+    fn read_before_write_detected() {
+        let hw = HwConfig::fig10_toy();
+        let mut p = Program::default();
+        let mut i = Instr::nop();
+        i.ctrl = CtrlType::Compute;
+        i.routes.push(XbarRoute { rf_bank: 0, rf_reg: 0, cu: 0, port: 0 });
+        p.body.push(i);
+        let r = clean_report(&p, &hw);
+        assert!(r.diagnostics.iter().any(|d| d.code == DiagCode::ReadBeforeWrite));
+    }
+
+    #[test]
+    fn raw_hazard_within_latency_window_detected() {
+        let hw = HwConfig::paper_default(); // cu_latency = 4
+        let mut p = Program::default();
+        let mut st = Instr::nop();
+        st.ctrl = CtrlType::ComputeSampleStore;
+        st.stores.push(StoreSlot { mem: MemSpace::Sample, addr: 42, su_lane: 0 });
+        p.body.push(st);
+        p.body.push(Instr::nop());
+        let mut ld = Instr::nop();
+        ld.ctrl = CtrlType::Load;
+        ld.loads.push(LoadSlot { mem: MemSpace::Sample, addr: 42, rf_bank: 0, rf_reg: 0 });
+        p.body.push(ld); // 2 bundles after the store: inside the window
+        let r = clean_report(&p, &hw);
+        assert!(
+            r.diagnostics.iter().any(|d| d.code == DiagCode::RawHazard),
+            "{}",
+            r.render_human()
+        );
+        // Past the window it is clean.
+        let mut p2 = Program::default();
+        let mut st = Instr::nop();
+        st.stores.push(StoreSlot { mem: MemSpace::Sample, addr: 42, su_lane: 0 });
+        p2.body.push(st);
+        for _ in 0..hw.cu_latency() {
+            p2.body.push(Instr::nop());
+        }
+        let mut ld = Instr::nop();
+        ld.loads.push(LoadSlot { mem: MemSpace::Sample, addr: 42, rf_bank: 0, rf_reg: 0 });
+        p2.body.push(ld);
+        let r2 = clean_report(&p2, &hw);
+        assert!(!r2.diagnostics.iter().any(|d| d.code == DiagCode::RawHazard));
+    }
+
+    #[test]
+    fn bounds_violations_detected() {
+        let hw = HwConfig::fig10_toy();
+        let mut p = Program::default();
+        let mut i = Instr::nop();
+        i.loads.push(LoadSlot { mem: MemSpace::Input, addr: 0, rf_bank: 200, rf_reg: 0 });
+        i.stores.push(StoreSlot { mem: MemSpace::Sample, addr: 0, su_lane: 99 });
+        i.su = Some(crate::isa::SuCtrl {
+            mode: crate::isa::SuMode::Temporal,
+            lanes: 1,
+            dist_size: 10_000,
+            first: true,
+            last: true,
+        });
+        i.routes.push(XbarRoute { rf_bank: 0, rf_reg: 0, cu: 1, port: 1 });
+        i.routes.push(XbarRoute { rf_bank: 1, rf_reg: 0, cu: 1, port: 1 });
+        i.sem = Semantics::None;
+        p.body.push(i);
+        let r = clean_report(&p, &hw);
+        for code in [
+            DiagCode::LoadOutOfRange,
+            DiagCode::StoreLaneOutOfRange,
+            DiagCode::DistTooLarge,
+            DiagCode::RoutePortConflict,
+        ] {
+            assert!(
+                r.diagnostics.iter().any(|d| d.code == code),
+                "missing {code:?}: {}",
+                r.render_human()
+            );
+        }
+    }
+
+    #[test]
+    fn pressure_report_emitted_for_real_programs() {
+        let m = PottsGrid::new(6, 6, 2, 1.0);
+        let hw = HwConfig::paper_default();
+        let p = compile(&m, AlgoKind::BlockGibbs, &hw, 1).unwrap();
+        let r = clean_report(&p, &hw);
+        assert!(r.diagnostics.iter().any(|d| d.code == DiagCode::RegisterPressure));
+    }
+}

@@ -1,0 +1,408 @@
+//! Cross-shard multicore analysis: run the per-program checks on every
+//! [`compile_shard`] output, then verify the *ensemble* invariants the
+//! multi-core simulator's correctness rests on — synchronization
+//! rounds align across all cores, every RV has exactly one owning
+//! writer core, no two cores update Markov-blanket neighbors inside
+//! one round, and the boundary traffic is consistent with the
+//! [`MultiHwConfig`] crossbar-bandwidth assumptions.
+
+use super::{analyze_program, DiagCode, Diagnostic, Report};
+use crate::compiler::compile_shard;
+use crate::energy::EnergyModel;
+use crate::engine::error::Mc2aError;
+use crate::graph::partition_balanced;
+use crate::isa::{MultiHwConfig, Program, Semantics};
+use crate::mcmc::AlgoKind;
+use crate::sim::multicore::validate_shard_config;
+
+/// Cap on per-instance error diagnostics of one kind.
+const MAX_INSTANCES: usize = 8;
+
+/// One core's compiled shard, as the ensemble analysis sees it.
+#[derive(Clone, Debug)]
+pub struct ShardProgram {
+    /// Core id (partition index).
+    pub core: usize,
+    /// RV ids this core owns (ascending).
+    pub owned: Vec<u32>,
+    /// The shard's VLIW program.
+    pub program: Program,
+    /// Body index just past each synchronization round.
+    pub marks: Vec<usize>,
+}
+
+/// Compile and analyze the full shard ensemble for `model` × `algo` on
+/// `mhw` — the same partition and shard compiler the multi-core
+/// simulator uses, so the verdict applies to exactly the programs that
+/// would run.
+///
+/// Returns `Err` only when the ensemble cannot be *built* (invalid
+/// hardware, an unshardable algorithm/core-count combination);
+/// program-level findings land in the returned [`Report`].
+pub fn analyze_ensemble(
+    model: &dyn EnergyModel,
+    algo: AlgoKind,
+    mhw: &MultiHwConfig,
+    pas_flips: usize,
+) -> Result<Report, Mc2aError> {
+    analyze_ensemble_mutated(model, algo, mhw, pas_flips, None)
+}
+
+/// [`analyze_ensemble`] with a test-only hook that corrupts each shard
+/// program before analysis (how the integration tests force the gates
+/// to fire on otherwise-clean compiler output).
+#[doc(hidden)]
+pub fn analyze_ensemble_mutated(
+    model: &dyn EnergyModel,
+    algo: AlgoKind,
+    mhw: &MultiHwConfig,
+    pas_flips: usize,
+    mutate: Option<fn(&mut Program)>,
+) -> Result<Report, Mc2aError> {
+    mhw.validate().map_err(Mc2aError::InvalidHardware)?;
+    validate_shard_config(model.num_vars(), algo, mhw.cores).map_err(Mc2aError::InvalidConfig)?;
+    let partition = partition_balanced(model.interaction(), mhw.cores);
+    let mut shards = Vec::with_capacity(mhw.cores);
+    for (core, owned) in partition.parts().into_iter().enumerate() {
+        let (mut program, marks) = compile_shard(model, algo, &mhw.core, pas_flips, &owned, true)?;
+        if let Some(f) = mutate {
+            f(&mut program);
+        }
+        shards.push(ShardProgram { core, owned, program, marks });
+    }
+    let mut report = Report::new();
+    for sh in &shards {
+        // Coverage is an ensemble property (each shard updates only its
+        // own RVs), so per-program coverage is off here.
+        let mut r = analyze_program(&sh.program, model, &mhw.core, false);
+        r.tag_core(sh.core);
+        report.merge(r);
+    }
+    analyze_shards(&shards, model, mhw, algo, &mut report);
+    Ok(report)
+}
+
+/// The ensemble-level invariants over already-compiled shards.
+pub fn analyze_shards(
+    shards: &[ShardProgram],
+    model: &dyn EnergyModel,
+    mhw: &MultiHwConfig,
+    algo: AlgoKind,
+    report: &mut Report,
+) {
+    if shards.is_empty() {
+        return;
+    }
+    // --- Barrier/round alignment: every core must see the same global
+    // color classes, i.e. the same number of synchronization rounds.
+    let rounds = shards[0].marks.len();
+    for sh in &shards[1..] {
+        if sh.marks.len() != rounds {
+            let mut d = Diagnostic::new(
+                DiagCode::RoundMisalignment,
+                format!(
+                    "core {} schedules {} synchronization rounds but core {} schedules {} — \
+                     barriers would deadlock or skew",
+                    shards[0].core,
+                    rounds,
+                    sh.core,
+                    sh.marks.len()
+                ),
+            );
+            d.core = Some(sh.core);
+            report.push(d);
+        }
+    }
+
+    // --- Ownership and coverage: each core updates only RVs it owns,
+    // and (Gibbs-family) every RV is updated exactly once per iteration
+    // across the whole ensemble.
+    let n = model.num_vars();
+    let mut owner = vec![usize::MAX; n];
+    for sh in shards {
+        for &rv in &sh.owned {
+            owner[rv as usize] = sh.core;
+        }
+    }
+    let mut counts = vec![0u32; n];
+    let mut foreign = 0usize;
+    for sh in shards {
+        for instr in sh.program.prologue.iter().chain(&sh.program.body) {
+            if let Semantics::UpdateRvs(rvs) = &instr.sem {
+                for &rv in rvs {
+                    counts[rv as usize] += 1;
+                    if owner[rv as usize] != sh.core {
+                        foreign += 1;
+                        if foreign <= MAX_INSTANCES {
+                            let mut d = Diagnostic::new(
+                                DiagCode::OwnershipViolation,
+                                format!(
+                                    "core {} writes RV {rv}, which core {} owns (every \
+                                     boundary RV needs exactly one writer core)",
+                                    sh.core, owner[rv as usize] as isize
+                                ),
+                            );
+                            d.core = Some(sh.core);
+                            report.push(d);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    if foreign > MAX_INSTANCES {
+        report.push(Diagnostic::new(
+            DiagCode::OwnershipViolation,
+            format!("... and {} more foreign-RV writes", foreign - MAX_INSTANCES),
+        ));
+    }
+    if super::algo_expects_full_coverage(algo) {
+        let mut bad = 0usize;
+        for (rv, &c) in counts.iter().enumerate() {
+            if c != 1 {
+                bad += 1;
+                if bad <= MAX_INSTANCES {
+                    report.push(Diagnostic::new(
+                        DiagCode::BadUpdateCoverage,
+                        format!(
+                            "RV {rv} updated {c} times per iteration across all cores \
+                             (want exactly 1)"
+                        ),
+                    ));
+                }
+            }
+        }
+        if bad > MAX_INSTANCES {
+            report.push(Diagnostic::new(
+                DiagCode::BadUpdateCoverage,
+                format!("... and {} more mis-covered RVs", bad - MAX_INSTANCES),
+            ));
+        }
+    }
+
+    // --- Race freedom per synchronization round: the union of updates
+    // committed by all cores inside one round must be an independent
+    // set of the interaction graph. (Async/snapshot programs read stale
+    // values by design; their hazard window is measured per program by
+    // the chromatic family instead.)
+    let is_async = shards.iter().any(|sh| {
+        sh.program
+            .prologue
+            .iter()
+            .chain(&sh.program.body)
+            .any(|i| matches!(i.sem, Semantics::Snapshot))
+    });
+    if !is_async {
+        let g = model.interaction();
+        let mut races = 0usize;
+        let mut updated_by: Vec<usize> = vec![usize::MAX; n];
+        for round in 0..rounds {
+            // Gather (rv -> core) for this round across cores.
+            let mut members: Vec<u32> = Vec::new();
+            for sh in shards {
+                if round >= sh.marks.len() {
+                    continue; // misaligned cores already reported
+                }
+                let start = if round == 0 { 0 } else { sh.marks[round - 1] };
+                let end = sh.marks[round];
+                for instr in &sh.program.body[start.min(end)..end] {
+                    if let Semantics::UpdateRvs(rvs) = &instr.sem {
+                        for &rv in rvs {
+                            updated_by[rv as usize] = sh.core;
+                            members.push(rv);
+                        }
+                    }
+                }
+            }
+            for &rv in &members {
+                for &nb in g.neighbors(rv as usize) {
+                    if nb > rv && updated_by[nb as usize] != usize::MAX {
+                        races += 1;
+                        if races <= MAX_INSTANCES {
+                            report.push(Diagnostic::new(
+                                DiagCode::CrossCoreRace,
+                                format!(
+                                    "round {round}: RVs {rv} (core {}) and {nb} (core {}) \
+                                     are blanket neighbors updated in the same round",
+                                    updated_by[rv as usize], updated_by[nb as usize]
+                                ),
+                            ));
+                        }
+                    }
+                }
+            }
+            for &rv in &members {
+                updated_by[rv as usize] = usize::MAX;
+            }
+        }
+        if races > MAX_INSTANCES {
+            report.push(Diagnostic::new(
+                DiagCode::CrossCoreRace,
+                format!("... and {} more same-round dependent pairs", races - MAX_INSTANCES),
+            ));
+        }
+    }
+
+    // --- Crossbar-bandwidth consistency: per round, every core
+    // broadcasts the boundary RVs it updated; the round cannot retire
+    // faster than (words / crossbar bandwidth) + the barrier latency.
+    // Compare against the longest per-core instruction stream to flag
+    // interconnect-bound schedules.
+    if mhw.cores > 1 {
+        let g = model.interaction();
+        let boundary = {
+            // A RV is boundary iff any neighbor lives on another core.
+            let mut owner_of = vec![usize::MAX; n];
+            for sh in shards {
+                for &rv in &sh.owned {
+                    owner_of[rv as usize] = sh.core;
+                }
+            }
+            (0..n)
+                .map(|v| g.neighbors(v).iter().any(|&u| owner_of[u as usize] != owner_of[v]))
+                .collect::<Vec<bool>>()
+        };
+        let mut total_words = 0u64;
+        let mut xbar_cycles = 0u64;
+        let mut compute_cycles = 0u64;
+        for round in 0..rounds {
+            let mut round_words = 0u64;
+            let mut longest = 0u64;
+            for sh in shards {
+                if round >= sh.marks.len() {
+                    continue;
+                }
+                let start = if round == 0 { 0 } else { sh.marks[round - 1] };
+                let end = sh.marks[round];
+                longest = longest.max((end - start.min(end)) as u64);
+                for instr in &sh.program.body[start.min(end)..end] {
+                    if let Semantics::UpdateRvs(rvs) = &instr.sem {
+                        round_words +=
+                            rvs.iter().filter(|&&rv| boundary[rv as usize]).count() as u64;
+                    }
+                }
+            }
+            total_words += round_words;
+            xbar_cycles +=
+                round_words.div_ceil(mhw.xbar_words_per_cycle as u64) + mhw.sync_latency as u64;
+            compute_cycles += longest;
+        }
+        let cut = shards
+            .iter()
+            .flat_map(|sh| sh.owned.iter())
+            .filter(|&&rv| boundary[rv as usize])
+            .count();
+        report.push(Diagnostic::new(
+            DiagCode::EnsembleTraffic,
+            format!(
+                "{} cores, {rounds} rounds/iteration: {total_words} boundary words/iteration \
+                 over a {}-word/cycle crossbar ({cut}/{n} boundary RVs), \
+                 ~{xbar_cycles} interconnect vs ~{compute_cycles} compute cycles",
+                mhw.cores, mhw.xbar_words_per_cycle
+            ),
+        ));
+        if xbar_cycles > compute_cycles {
+            report.push(Diagnostic::new(
+                DiagCode::XbarSyncBound,
+                format!(
+                    "estimated interconnect time ({xbar_cycles} cycles/iteration) exceeds \
+                     compute time ({compute_cycles}); the ensemble is crossbar/barrier-bound \
+                     — widen xbar_words_per_cycle or cut the boundary"
+                ),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::PottsGrid;
+    use crate::isa::HwConfig;
+
+    fn mhw(cores: usize) -> MultiHwConfig {
+        MultiHwConfig::new(HwConfig::paper_default(), cores)
+    }
+
+    #[test]
+    fn clean_ensembles_for_bg_and_ag() {
+        let m = PottsGrid::new(8, 8, 3, 1.0);
+        for algo in [AlgoKind::BlockGibbs, AlgoKind::AsyncGibbs] {
+            for cores in [1, 2, 4] {
+                let r = analyze_ensemble(&m, algo, &mhw(cores), 1).unwrap();
+                assert!(!r.has_errors(), "{algo:?} x{cores}: {}", r.render_human());
+            }
+        }
+    }
+
+    #[test]
+    fn unshardable_configs_are_typed_errors() {
+        let m = PottsGrid::new(4, 4, 2, 1.0);
+        assert!(matches!(
+            analyze_ensemble(&m, AlgoKind::Pas, &mhw(2), 4),
+            Err(Mc2aError::InvalidConfig(_))
+        ));
+        let mut bad = mhw(2);
+        bad.core.s = 48; // not 2^M
+        assert!(matches!(
+            analyze_ensemble(&m, AlgoKind::BlockGibbs, &bad, 1),
+            Err(Mc2aError::InvalidHardware(_))
+        ));
+    }
+
+    #[test]
+    fn foreign_write_and_race_detected() {
+        let m = PottsGrid::new(6, 6, 2, 1.0);
+        // Corrupt every shard: commit an update to RVs 0 and 1 (grid
+        // neighbors, and RV 0/1 cannot be owned by every core).
+        let r = analyze_ensemble_mutated(
+            &m,
+            AlgoKind::BlockGibbs,
+            &mhw(2),
+            1,
+            Some(|p: &mut Program| {
+                let mut i = crate::isa::Instr::nop();
+                i.sem = Semantics::UpdateRvs(vec![0, 1]);
+                p.body.push(i);
+            }),
+        )
+        .unwrap();
+        assert!(r.diagnostics.iter().any(|d| d.code == DiagCode::OwnershipViolation));
+        assert!(r.diagnostics.iter().any(|d| d.code == DiagCode::BadUpdateCoverage));
+        assert!(r.has_errors());
+    }
+
+    #[test]
+    fn round_misalignment_detected() {
+        let m = PottsGrid::new(6, 6, 2, 1.0);
+        let partition = partition_balanced(m.interaction(), 2);
+        let hw = HwConfig::paper_default();
+        let mut shards = Vec::new();
+        for (core, owned) in partition.parts().into_iter().enumerate() {
+            let (program, mut marks) =
+                compile_shard(&m, AlgoKind::BlockGibbs, &hw, 1, &owned, true).unwrap();
+            if core == 1 {
+                marks.pop(); // drop a round on one core only
+            }
+            shards.push(ShardProgram { core, owned, program, marks });
+        }
+        let mut report = Report::new();
+        analyze_shards(&shards, &m, &mhw(2), AlgoKind::BlockGibbs, &mut report);
+        assert!(report.diagnostics.iter().any(|d| d.code == DiagCode::RoundMisalignment));
+    }
+
+    #[test]
+    fn tiny_crossbar_flags_sync_bound() {
+        let m = PottsGrid::new(8, 8, 2, 1.0);
+        let mut cfg = mhw(4);
+        cfg.xbar_words_per_cycle = 1;
+        cfg.sync_latency = 64;
+        let r = analyze_ensemble(&m, AlgoKind::BlockGibbs, &cfg, 1).unwrap();
+        assert!(
+            r.diagnostics.iter().any(|d| d.code == DiagCode::XbarSyncBound),
+            "{}",
+            r.render_human()
+        );
+        assert!(!r.has_errors());
+    }
+}

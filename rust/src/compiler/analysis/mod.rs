@@ -1,0 +1,557 @@
+//! Static analysis & diagnostics over compiled ISA programs, shard
+//! ensembles and chromatic schedules (`mc2a check`).
+//!
+//! [`validate_program`](crate::compiler::validate_program) is the seed
+//! this subsystem grows from: its [`Violation`]s become error-severity
+//! [`Diagnostic`]s, and three analysis families extend them:
+//!
+//! * **Dataflow** ([`mod@dataflow`]) — RF def-use analysis
+//!   (read-before-write, dead stores, per-bank register pressure),
+//!   pipeline RAW-hazard detection across VLIW bundles, and LUT/SU
+//!   parameter bounds against the [`HwConfig`].
+//! * **Ensemble** ([`mod@ensemble`]) — per-program checks on every
+//!   [`compile_shard`](crate::compiler::compile_shard) output plus the
+//!   cross-core invariants: barrier/round alignment, single-writer
+//!   ownership of every RV, race-freedom of each synchronization
+//!   round, and crossbar-bandwidth consistency with the
+//!   [`MultiHwConfig`].
+//! * **Chromatic** ([`mod@chromatic`]) — color classes are independent
+//!   sets w.r.t. the model's *Markov blanket* (checked both
+//!   structurally against the interaction graph and functionally by
+//!   perturbation probes on `local_energies`), with warnings sizing
+//!   the Async-Gibbs hazard window.
+//!
+//! Every finding is a [`Diagnostic`] with a stable `MC2A0xx` code and a
+//! severity; [`Report`] renders them human-readable or as JSON, and the
+//! [`gate_program`]/[`gate_ensemble`] entry points turn error-severity
+//! findings into [`Mc2aError::InvalidProgram`] so the accelerator
+//! backends reject bad programs *before* simulation.
+
+pub mod chromatic;
+pub mod dataflow;
+pub mod ensemble;
+
+pub use chromatic::analyze_chromatic;
+pub use ensemble::{analyze_ensemble, analyze_ensemble_mutated, ShardProgram};
+
+use crate::compiler::validate::{validate_program, Violation};
+use crate::energy::EnergyModel;
+use crate::engine::error::Mc2aError;
+use crate::isa::{HwConfig, MultiHwConfig, Program};
+use crate::mcmc::{AlgoKind, SamplerKind};
+
+/// How bad a finding is. `Error` findings make [`Report::has_errors`]
+/// true, fail `mc2a check`, and are the only severity the backend
+/// gates reject on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Measurement or report — nothing to fix.
+    Info,
+    /// Suspicious but legal; the program still executes correctly.
+    Warning,
+    /// A broken invariant: the program must not execute.
+    Error,
+}
+
+impl Severity {
+    /// Lowercase name, as rendered in reports.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Severity::Info => "info",
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// Stable diagnostic codes. The numeric ranges group the families:
+/// `MC2A00x` are the classic [`Violation`] invariants, `MC2A01x` the
+/// dataflow/bounds family, `MC2A02x` the multi-core ensemble family,
+/// `MC2A03x` the chromatic-parallelism family. Codes never change
+/// meaning; retired codes are not reused.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DiagCode {
+    /// Two RVs in one commit are Markov-blanket neighbors.
+    DependentParallelUpdate,
+    /// A Load bundle exceeds the B words/cycle budget.
+    BandwidthExceeded,
+    /// Two rows of one RF bank written in one bundle.
+    WritePortConflict,
+    /// A crossbar route names an out-of-range resource.
+    RouteOutOfRange,
+    /// An RV is updated ≠ 1 times per iteration.
+    BadUpdateCoverage,
+    /// An SU control names more lanes than exist.
+    SuLanesOutOfRange,
+    /// A CU control names more lanes than exist.
+    CuLanesOutOfRange,
+    /// A route reads an RF register no earlier load wrote.
+    ReadBeforeWrite,
+    /// Routed registers overwritten before any read (aggregate).
+    DeadStore,
+    /// A load reads an address stored ≤ CU-latency bundles earlier.
+    RawHazard,
+    /// An SU distribution exceeds `max_dist_size`.
+    DistTooLarge,
+    /// A store slot names an SU lane ≥ S.
+    StoreLaneOutOfRange,
+    /// A load slot targets an out-of-range RF bank/register.
+    LoadOutOfRange,
+    /// Two routes drive the same (CU lane, port) in one bundle.
+    RoutePortConflict,
+    /// Per-bank register-file pressure report (aggregate).
+    RegisterPressure,
+    /// Sampler LUT shape differs from the hardware LUT.
+    SamplerLutMismatch,
+    /// Shard programs disagree on the synchronization-round count.
+    RoundMisalignment,
+    /// A core updates an RV another core owns.
+    OwnershipViolation,
+    /// Two cores update blanket neighbors in the same round.
+    CrossCoreRace,
+    /// Estimated crossbar + barrier time exceeds compute time.
+    XbarSyncBound,
+    /// Boundary-traffic / cut-edge report (aggregate).
+    EnsembleTraffic,
+    /// A color class contains two interaction-graph neighbors.
+    ImproperColoring,
+    /// `local_energies` depends on a variable outside the declared
+    /// Markov blanket (functional probe).
+    HiddenDependence,
+    /// Async-Gibbs hazard window size (stale-read edge count).
+    AsyncHazardWindow,
+    /// Coloring-quality report (aggregate).
+    ColoringSummary,
+}
+
+impl DiagCode {
+    /// Every code, in code order (drives the README reference table
+    /// and the uniqueness test).
+    pub const ALL: &'static [DiagCode] = &[
+        DiagCode::DependentParallelUpdate,
+        DiagCode::BandwidthExceeded,
+        DiagCode::WritePortConflict,
+        DiagCode::RouteOutOfRange,
+        DiagCode::BadUpdateCoverage,
+        DiagCode::SuLanesOutOfRange,
+        DiagCode::CuLanesOutOfRange,
+        DiagCode::ReadBeforeWrite,
+        DiagCode::DeadStore,
+        DiagCode::RawHazard,
+        DiagCode::DistTooLarge,
+        DiagCode::StoreLaneOutOfRange,
+        DiagCode::LoadOutOfRange,
+        DiagCode::RoutePortConflict,
+        DiagCode::RegisterPressure,
+        DiagCode::SamplerLutMismatch,
+        DiagCode::RoundMisalignment,
+        DiagCode::OwnershipViolation,
+        DiagCode::CrossCoreRace,
+        DiagCode::XbarSyncBound,
+        DiagCode::EnsembleTraffic,
+        DiagCode::ImproperColoring,
+        DiagCode::HiddenDependence,
+        DiagCode::AsyncHazardWindow,
+        DiagCode::ColoringSummary,
+    ];
+
+    /// The stable `MC2A0xx` code string.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DiagCode::DependentParallelUpdate => "MC2A001",
+            DiagCode::BandwidthExceeded => "MC2A002",
+            DiagCode::WritePortConflict => "MC2A003",
+            DiagCode::RouteOutOfRange => "MC2A004",
+            DiagCode::BadUpdateCoverage => "MC2A005",
+            DiagCode::SuLanesOutOfRange => "MC2A006",
+            DiagCode::CuLanesOutOfRange => "MC2A007",
+            DiagCode::ReadBeforeWrite => "MC2A010",
+            DiagCode::DeadStore => "MC2A011",
+            DiagCode::RawHazard => "MC2A012",
+            DiagCode::DistTooLarge => "MC2A013",
+            DiagCode::StoreLaneOutOfRange => "MC2A014",
+            DiagCode::LoadOutOfRange => "MC2A015",
+            DiagCode::RoutePortConflict => "MC2A016",
+            DiagCode::RegisterPressure => "MC2A017",
+            DiagCode::SamplerLutMismatch => "MC2A018",
+            DiagCode::RoundMisalignment => "MC2A020",
+            DiagCode::OwnershipViolation => "MC2A021",
+            DiagCode::CrossCoreRace => "MC2A022",
+            DiagCode::XbarSyncBound => "MC2A023",
+            DiagCode::EnsembleTraffic => "MC2A024",
+            DiagCode::ImproperColoring => "MC2A030",
+            DiagCode::HiddenDependence => "MC2A031",
+            DiagCode::AsyncHazardWindow => "MC2A032",
+            DiagCode::ColoringSummary => "MC2A033",
+        }
+    }
+
+    /// The fixed severity of this code.
+    pub fn severity(&self) -> Severity {
+        match self {
+            DiagCode::DeadStore
+            | DiagCode::RegisterPressure
+            | DiagCode::EnsembleTraffic
+            | DiagCode::ColoringSummary => Severity::Info,
+            DiagCode::SamplerLutMismatch
+            | DiagCode::XbarSyncBound
+            | DiagCode::AsyncHazardWindow => Severity::Warning,
+            _ => Severity::Error,
+        }
+    }
+}
+
+/// One finding: a stable code plus a human-readable message, optionally
+/// anchored to an instruction index and/or a core id.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Diagnostic {
+    /// Stable code (severity derives from it).
+    pub code: DiagCode,
+    /// Human-readable description of the finding.
+    pub message: String,
+    /// Instruction index (prologue + body order), when the finding
+    /// anchors to one bundle.
+    pub instr: Option<usize>,
+    /// Core id, for multi-core ensemble findings.
+    pub core: Option<usize>,
+}
+
+impl Diagnostic {
+    /// A finding with no location.
+    pub fn new(code: DiagCode, message: impl Into<String>) -> Diagnostic {
+        Diagnostic { code, message: message.into(), instr: None, core: None }
+    }
+
+    /// Anchor to an instruction index.
+    pub fn at_instr(mut self, at: usize) -> Diagnostic {
+        self.instr = Some(at);
+        self
+    }
+
+    /// The severity of this finding's code.
+    pub fn severity(&self) -> Severity {
+        self.code.severity()
+    }
+
+    /// One-line human rendering: `severity CODE [@instr N] [core C]: message`.
+    pub fn render(&self) -> String {
+        let mut s = format!("{} {}", self.severity().as_str(), self.code.as_str());
+        if let Some(c) = self.core {
+            s.push_str(&format!(" [core {c}]"));
+        }
+        if let Some(i) = self.instr {
+            s.push_str(&format!(" [instr {i}]"));
+        }
+        s.push_str(": ");
+        s.push_str(&self.message);
+        s
+    }
+
+    /// JSON object rendering (hand-rolled, matching the crate's
+    /// dependency-free JSON style).
+    pub fn to_json(&self) -> String {
+        let opt = |v: Option<usize>| match v {
+            Some(n) => n.to_string(),
+            None => "null".into(),
+        };
+        format!(
+            "{{\"code\":\"{}\",\"severity\":\"{}\",\"message\":\"{}\",\"instr\":{},\"core\":{}}}",
+            self.code.as_str(),
+            self.severity().as_str(),
+            crate::engine::checkpoint::escape_json(&self.message),
+            opt(self.instr),
+            opt(self.core),
+        )
+    }
+}
+
+/// A collection of diagnostics from one or more analyses.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    /// All findings, in discovery order.
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl Report {
+    /// An empty report.
+    pub fn new() -> Report {
+        Report::default()
+    }
+
+    /// Add one finding.
+    pub fn push(&mut self, d: Diagnostic) {
+        self.diagnostics.push(d);
+    }
+
+    /// Absorb another report's findings.
+    pub fn merge(&mut self, other: Report) {
+        self.diagnostics.extend(other.diagnostics);
+    }
+
+    /// Tag every untagged finding with a core id (used when a whole
+    /// per-program analysis ran on one shard).
+    pub fn tag_core(&mut self, core: usize) {
+        for d in &mut self.diagnostics {
+            d.core.get_or_insert(core);
+        }
+    }
+
+    /// Number of findings at `sev`.
+    pub fn count(&self, sev: Severity) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity() == sev).count()
+    }
+
+    /// Any error-severity findings?
+    pub fn has_errors(&self) -> bool {
+        self.diagnostics.iter().any(|d| d.severity() == Severity::Error)
+    }
+
+    /// The error-severity findings, cloned (what
+    /// [`Mc2aError::InvalidProgram`] carries).
+    pub fn errors(&self) -> Vec<Diagnostic> {
+        self.diagnostics
+            .iter()
+            .filter(|d| d.severity() == Severity::Error)
+            .cloned()
+            .collect()
+    }
+
+    /// Multi-line human rendering, one finding per line (empty string
+    /// when clean).
+    pub fn render_human(&self) -> String {
+        self.diagnostics
+            .iter()
+            .map(|d| d.render())
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
+    /// JSON array of the findings.
+    pub fn to_json(&self) -> String {
+        let items: Vec<String> = self.diagnostics.iter().map(|d| d.to_json()).collect();
+        format!("[{}]", items.join(","))
+    }
+}
+
+/// Convert one classic [`Violation`] into a [`Diagnostic`].
+fn violation_diag(v: &Violation) -> Diagnostic {
+    match v {
+        Violation::DependentParallelUpdate { a, b } => Diagnostic::new(
+            DiagCode::DependentParallelUpdate,
+            format!("RVs {a} and {b} are Markov-blanket neighbors but share one parallel commit"),
+        ),
+        Violation::BandwidthExceeded { at, words } => Diagnostic::new(
+            DiagCode::BandwidthExceeded,
+            format!("bundle loads {words} words, above the B words/cycle budget"),
+        )
+        .at_instr(*at),
+        Violation::WritePortConflict { at, bank } => Diagnostic::new(
+            DiagCode::WritePortConflict,
+            format!("two rows of RF bank {bank} written in one bundle (one row-wide port/bank)"),
+        )
+        .at_instr(*at),
+        Violation::RouteOutOfRange { at } => Diagnostic::new(
+            DiagCode::RouteOutOfRange,
+            "crossbar route names an out-of-range bank/register/CU/port".to_string(),
+        )
+        .at_instr(*at),
+        Violation::BadUpdateCoverage { rv, count } => Diagnostic::new(
+            DiagCode::BadUpdateCoverage,
+            format!("RV {rv} updated {count} times per iteration (want exactly 1)"),
+        ),
+        Violation::SuLanesOutOfRange { at } => Diagnostic::new(
+            DiagCode::SuLanesOutOfRange,
+            "SU control names more lanes than S".to_string(),
+        )
+        .at_instr(*at),
+        Violation::CuLanesOutOfRange { at } => Diagnostic::new(
+            DiagCode::CuLanesOutOfRange,
+            "CU control names more lanes than T".to_string(),
+        )
+        .at_instr(*at),
+    }
+}
+
+/// Full single-program analysis: the classic [`validate_program`]
+/// invariants plus the dataflow family and (for snapshot programs) the
+/// Async-Gibbs hazard-window measurement.
+///
+/// `expect_full_coverage` asserts that every model RV is updated
+/// exactly once per iteration — true for whole-model Gibbs-family
+/// programs, false for shard programs (the ensemble analysis owns
+/// cross-shard coverage) and for PAS.
+pub fn analyze_program(
+    program: &Program,
+    model: &dyn EnergyModel,
+    hw: &HwConfig,
+    expect_full_coverage: bool,
+) -> Report {
+    let mut report = Report::new();
+    for v in validate_program(program, model, hw, expect_full_coverage) {
+        report.push(violation_diag(&v));
+    }
+    dataflow::check_dataflow(program, hw, &mut report);
+    chromatic::async_hazard_window(program, model, &mut report);
+    report
+}
+
+/// Does a whole-model program for `algo` update every RV exactly once
+/// per iteration? (PAS schedules a global move table instead.)
+pub fn algo_expects_full_coverage(algo: AlgoKind) -> bool {
+    !matches!(algo, AlgoKind::Pas)
+}
+
+/// Sampler-vs-hardware consistency: a [`SamplerKind::GumbelLut`] whose
+/// table shape differs from the hardware LUT will not be bit-identical
+/// to the silicon it models.
+pub fn analyze_sampler(sampler: SamplerKind, hw: &HwConfig) -> Report {
+    let mut report = Report::new();
+    if let SamplerKind::GumbelLut { size, bits } = sampler {
+        if size != hw.lut_size || bits != hw.lut_bits {
+            report.push(Diagnostic::new(
+                DiagCode::SamplerLutMismatch,
+                format!(
+                    "sampler LUT {size}x{bits}-bit differs from the hardware LUT {}x{}-bit; \
+                     software and simulated chains will diverge bit-wise",
+                    hw.lut_size, hw.lut_bits
+                ),
+            ));
+        }
+    }
+    report
+}
+
+/// Gate a compiled single-core program: error-severity findings become
+/// [`Mc2aError::InvalidProgram`]. Cheap (linear in program size — no
+/// functional probes), so the accelerator backend runs it on every
+/// chain before simulation.
+pub fn gate_program(
+    program: &Program,
+    model: &dyn EnergyModel,
+    hw: &HwConfig,
+    algo: AlgoKind,
+) -> Result<(), Mc2aError> {
+    let report = analyze_program(program, model, hw, algo_expects_full_coverage(algo));
+    if report.has_errors() {
+        return Err(Mc2aError::InvalidProgram { diagnostics: report.errors() });
+    }
+    Ok(())
+}
+
+/// Gate a multi-core shard ensemble (compiling the shards exactly as
+/// [`crate::sim::MultiCoreSim::new`] will): error-severity findings
+/// become [`Mc2aError::InvalidProgram`]. `mutate` is a test-only hook
+/// applied to each shard program before analysis.
+pub fn gate_ensemble(
+    model: &dyn EnergyModel,
+    algo: AlgoKind,
+    mhw: &MultiHwConfig,
+    pas_flips: usize,
+    mutate: Option<fn(&mut Program)>,
+) -> Result<(), Mc2aError> {
+    let report = analyze_ensemble_mutated(model, algo, mhw, pas_flips, mutate)?;
+    if report.has_errors() {
+        return Err(Mc2aError::InvalidProgram { diagnostics: report.errors() });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::compile;
+    use crate::energy::PottsGrid;
+    use crate::isa::{Instr, Semantics};
+
+    #[test]
+    fn codes_are_unique_stable_and_ordered() {
+        let mut seen = std::collections::HashSet::new();
+        let mut prev = String::new();
+        for c in DiagCode::ALL {
+            let s = c.as_str();
+            assert!(s.starts_with("MC2A") && s.len() == 7, "{s}");
+            assert!(seen.insert(s), "duplicate code {s}");
+            assert!(s.to_string() > prev, "codes out of order at {s}");
+            prev = s.to_string();
+        }
+    }
+
+    #[test]
+    fn severity_ordering_puts_errors_on_top() {
+        assert!(Severity::Error > Severity::Warning);
+        assert!(Severity::Warning > Severity::Info);
+    }
+
+    #[test]
+    fn clean_program_analyzes_clean() {
+        let m = PottsGrid::new(6, 6, 2, 1.0);
+        let hw = HwConfig::paper_default();
+        let p = compile(&m, crate::mcmc::AlgoKind::BlockGibbs, &hw, 1).unwrap();
+        let r = analyze_program(&p, &m, &hw, true);
+        assert!(!r.has_errors(), "{}", r.render_human());
+    }
+
+    #[test]
+    fn violation_mapping_keeps_location() {
+        let m = PottsGrid::new(3, 3, 2, 1.0);
+        let hw = HwConfig::fig10_toy();
+        let mut p = Program::default();
+        let mut i = Instr::nop();
+        i.sem = Semantics::UpdateRvs(vec![0, 1]); // grid neighbors
+        p.body.push(i);
+        let r = analyze_program(&p, &m, &hw, false);
+        assert!(r.has_errors());
+        assert!(r
+            .diagnostics
+            .iter()
+            .any(|d| d.code == DiagCode::DependentParallelUpdate));
+    }
+
+    #[test]
+    fn report_rendering_roundtrips_code_and_severity() {
+        let mut r = Report::new();
+        r.push(Diagnostic::new(DiagCode::RawHazard, "x \"quoted\"").at_instr(7));
+        let human = r.render_human();
+        assert!(human.contains("error MC2A012") && human.contains("[instr 7]"), "{human}");
+        let json = r.to_json();
+        assert!(
+            json.contains("\"code\":\"MC2A012\"") && json.contains("\\\"quoted\\\""),
+            "{json}"
+        );
+        assert_eq!(r.count(Severity::Error), 1);
+        assert_eq!(r.errors().len(), 1);
+    }
+
+    #[test]
+    fn sampler_lut_mismatch_warns() {
+        let hw = HwConfig::paper_default();
+        let ok = analyze_sampler(
+            SamplerKind::GumbelLut { size: hw.lut_size, bits: hw.lut_bits },
+            &hw,
+        );
+        assert!(ok.diagnostics.is_empty());
+        let bad = analyze_sampler(SamplerKind::GumbelLut { size: 64, bits: 12 }, &hw);
+        assert_eq!(bad.count(Severity::Warning), 1);
+        assert!(!bad.has_errors());
+    }
+
+    #[test]
+    fn gate_rejects_corrupted_program() {
+        let m = PottsGrid::new(4, 4, 2, 1.0);
+        let hw = HwConfig::paper_default();
+        let mut p = compile(&m, crate::mcmc::AlgoKind::BlockGibbs, &hw, 1).unwrap();
+        // Corrupt one route to an out-of-range bank.
+        for i in &mut p.body {
+            if let Some(r) = i.routes.first_mut() {
+                r.rf_bank = 9999;
+                break;
+            }
+        }
+        match gate_program(&p, &m, &hw, crate::mcmc::AlgoKind::BlockGibbs) {
+            Err(Mc2aError::InvalidProgram { diagnostics }) => {
+                assert!(diagnostics.iter().any(|d| d.code == DiagCode::RouteOutOfRange));
+            }
+            other => panic!("expected InvalidProgram, got {other:?}"),
+        }
+    }
+}

@@ -10,11 +10,13 @@
 //! the PE tree or SU width, and inserts the NOPs that resolve the
 //! store→load hazard between dependent blocks (§V-B, §V-E).
 
+pub mod analysis;
 mod validate;
 
 pub use validate::{validate_program, Violation};
 
 use crate::energy::EnergyModel;
+use crate::engine::error::Mc2aError;
 use crate::graph::color_greedy;
 use crate::isa::{
     CtrlType, CuCtrl, CuMode, HwConfig, Instr, LoadSlot, MemSpace, Program, Semantics, StoreSlot,
@@ -26,12 +28,15 @@ use crate::mcmc::AlgoKind;
 /// fusion optimization enabled (the production path).
 ///
 /// `pas_flips` is the PAS path length L (ignored for other algorithms).
+///
+/// Fails with [`Mc2aError::InvalidHardware`] when `hw` is inconsistent,
+/// so bad CLI hardware flags surface as typed errors, not panics.
 pub fn compile(
     model: &dyn EnergyModel,
     algo: AlgoKind,
     hw: &HwConfig,
     pas_flips: usize,
-) -> Program {
+) -> Result<Program, Mc2aError> {
     compile_opt(model, algo, hw, pas_flips, true)
 }
 
@@ -44,14 +49,14 @@ pub fn compile_opt(
     hw: &HwConfig,
     pas_flips: usize,
     optimize: bool,
-) -> Program {
-    hw.validate().expect("invalid hardware config");
+) -> Result<Program, Mc2aError> {
+    hw.validate().map_err(Mc2aError::InvalidHardware)?;
     let c = Compiler::new(model, hw);
     let (mut program, _marks) = dispatch(c, algo, pas_flips);
     if optimize {
         program.body = fuse_loads(program.body, hw);
     }
-    program
+    Ok(program)
 }
 
 /// Compile the schedule for one *shard* of a multi-core system: only
@@ -78,8 +83,8 @@ pub fn compile_shard(
     pas_flips: usize,
     owned: &[u32],
     optimize: bool,
-) -> (Program, Vec<usize>) {
-    hw.validate().expect("invalid hardware config");
+) -> Result<(Program, Vec<usize>), Mc2aError> {
+    hw.validate().map_err(Mc2aError::InvalidHardware)?;
     let mut c = Compiler::new(model, hw);
     if !matches!(algo, AlgoKind::Pas) {
         let mut mask = vec![false; model.num_vars()];
@@ -94,7 +99,7 @@ pub fn compile_shard(
         program.body = body;
         marks = fused_marks;
     }
-    (program, marks)
+    Ok((program, marks))
 }
 
 fn dispatch(c: Compiler<'_>, algo: AlgoKind, pas_flips: usize) -> (Program, Vec<usize>) {
@@ -727,7 +732,7 @@ mod tests {
     fn block_gibbs_ising_schedule_is_compact() {
         let m = PottsGrid::new(8, 8, 2, 1.0);
         let hw = HwConfig::fig10_toy();
-        let p = compile(&m, AlgoKind::BlockGibbs, &hw, 1);
+        let p = compile(&m, AlgoKind::BlockGibbs, &hw, 1).unwrap();
         assert_eq!(p.updates_per_iter, 64);
         // Chessboard: 2 blocks of 32, groups of 4 ⇒ 16 groups, ≥2
         // instructions each, plus 2 block drains.
@@ -741,8 +746,8 @@ mod tests {
     fn sequential_gibbs_has_more_drains_than_bg() {
         let m = PottsGrid::new(6, 6, 2, 1.0);
         let hw = HwConfig::fig10_toy();
-        let seq = compile(&m, AlgoKind::Gibbs, &hw, 1);
-        let bg = compile(&m, AlgoKind::BlockGibbs, &hw, 1);
+        let seq = compile(&m, AlgoKind::Gibbs, &hw, 1).unwrap();
+        let bg = compile(&m, AlgoKind::BlockGibbs, &hw, 1).unwrap();
         let nseq = seq
             .body_histogram()
             .get(&CtrlType::Nop)
@@ -757,7 +762,7 @@ mod tests {
         let g = erdos_renyi_with_edges(64, 200, 3);
         let m = MaxCutModel::new(g, None);
         let hw = HwConfig::fig10_toy();
-        let p = compile(&m, AlgoKind::Pas, &hw, 4);
+        let p = compile(&m, AlgoKind::Pas, &hw, 4).unwrap();
         let h = p.body_histogram();
         assert!(h.get(&CtrlType::Compute).copied().unwrap_or(0) > 0);
         assert!(h.get(&CtrlType::Sample).copied().unwrap_or(0) > 0);
@@ -772,7 +777,7 @@ mod tests {
         let m = PottsGrid::new(5, 5, 3, 0.5);
         let hw = HwConfig::paper_default();
         for algo in [AlgoKind::Gibbs, AlgoKind::BlockGibbs, AlgoKind::AsyncGibbs] {
-            let p = compile(&m, algo, &hw, 1);
+            let p = compile(&m, algo, &hw, 1).unwrap();
             let mut seen = vec![0u32; 25];
             for i in &p.body {
                 if let Semantics::UpdateRvs(rvs) = &i.sem {
@@ -796,8 +801,8 @@ mod tests {
             AlgoKind::AsyncGibbs,
             AlgoKind::Pas,
         ] {
-            let full = compile(&m, algo, &hw, 4);
-            let (shard, marks) = compile_shard(&m, algo, &hw, 4, &all, true);
+            let full = compile(&m, algo, &hw, 4).unwrap();
+            let (shard, marks) = compile_shard(&m, algo, &hw, 4, &all, true).unwrap();
             assert_eq!(shard.body, full.body, "{algo:?} diverged");
             assert_eq!(shard.updates_per_iter, full.updates_per_iter);
             assert_eq!(*marks.last().unwrap(), shard.body.len());
@@ -813,7 +818,7 @@ mod tests {
         let mut seen = vec![0u32; 36];
         let mut rounds: Option<usize> = None;
         for part in p.parts() {
-            let (prog, marks) = compile_shard(&m, AlgoKind::BlockGibbs, &hw, 1, &part, true);
+            let (prog, marks) = compile_shard(&m, AlgoKind::BlockGibbs, &hw, 1, &part, true).unwrap();
             match rounds {
                 None => rounds = Some(marks.len()),
                 Some(k) => assert_eq!(k, marks.len(), "cores disagree on round count"),
@@ -833,7 +838,7 @@ mod tests {
     fn loads_respect_bandwidth() {
         let wl = workloads::wl_survey();
         let hw = HwConfig::fig10_toy();
-        let p = compile(wl.model.as_ref(), AlgoKind::BlockGibbs, &hw, 1);
+        let p = compile(wl.model.as_ref(), AlgoKind::BlockGibbs, &hw, 1).unwrap();
         for i in &p.body {
             assert!(i.loads.len() <= hw.bw_words, "{} loads", i.loads.len());
         }
@@ -845,7 +850,7 @@ mod tests {
         // one row are fine, two different rows of one bank are not.
         let m = PottsGrid::new(8, 8, 2, 1.0);
         let hw = HwConfig::paper_default();
-        let p = compile(&m, AlgoKind::BlockGibbs, &hw, 1);
+        let p = compile(&m, AlgoKind::BlockGibbs, &hw, 1).unwrap();
         let row_w = 1u16 << hw.k;
         for i in &p.body {
             let mut bank_row = std::collections::HashMap::new();

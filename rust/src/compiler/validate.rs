@@ -161,7 +161,7 @@ mod tests {
         let m = PottsGrid::new(6, 6, 2, 1.0);
         for hw in [HwConfig::fig10_toy(), HwConfig::paper_default()] {
             for algo in [AlgoKind::Gibbs, AlgoKind::BlockGibbs, AlgoKind::AsyncGibbs] {
-                let p = compile(&m, algo, &hw, 1);
+                let p = compile(&m, algo, &hw, 1).unwrap();
                 let v = validate_program(&p, &m, &hw, true);
                 assert!(v.is_empty(), "{algo:?} on {hw:?}: {v:?}");
             }

@@ -35,14 +35,14 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
 use std::time::Instant;
 
-use crate::compiler::compile_opt;
+use crate::compiler::{analysis, compile_opt};
 use crate::coordinator::ChainResult;
 use crate::energy::{EnergyModel, OpCost};
 use crate::engine::adaptive::{run_adaptive, ExecUnit};
 use crate::engine::error::Mc2aError;
 use crate::engine::observer::ProgressEvent;
 use crate::engine::tempering::run_tempered;
-use crate::isa::{HwConfig, MultiHwConfig};
+use crate::isa::{HwConfig, MultiHwConfig, Program};
 use crate::mcmc::anneal::BetaController;
 use crate::mcmc::tempering::ReplicaExchange;
 use crate::mcmc::{build_algo, AlgoKind, BetaSchedule, Chain, SamplerKind, StepStats};
@@ -381,13 +381,14 @@ pub(crate) fn software_chain<'m>(
 pub struct AcceleratorBackend {
     hw: HwConfig,
     optimize: bool,
+    corrupt: Option<fn(&mut Program)>,
 }
 
 impl AcceleratorBackend {
     /// Backend for `hw` with the VLIW load/compute fusion optimizer on
     /// (the production compiler path).
     pub fn new(hw: HwConfig) -> AcceleratorBackend {
-        AcceleratorBackend { hw, optimize: true }
+        AcceleratorBackend { hw, optimize: true, corrupt: None }
     }
 
     /// Toggle the compiler optimizer (the §Perf ablation knob).
@@ -396,9 +397,32 @@ impl AcceleratorBackend {
         self
     }
 
+    /// Test-only hook: mutate the compiled program before the static-
+    /// analysis gate, proving corrupted programs are rejected with
+    /// [`Mc2aError::InvalidProgram`] before they reach the simulator.
+    #[doc(hidden)]
+    pub fn with_corrupt_hook(mut self, f: fn(&mut Program)) -> AcceleratorBackend {
+        self.corrupt = Some(f);
+        self
+    }
+
     /// The hardware configuration this backend simulates.
     pub fn hw(&self) -> &HwConfig {
         &self.hw
+    }
+
+    /// Compile, apply the test hook, and run the static-analysis gate.
+    fn compile_gated(
+        &self,
+        model: &dyn EnergyModel,
+        spec: &ChainSpec,
+    ) -> Result<Program, Mc2aError> {
+        let mut program = compile_opt(model, spec.algo, &self.hw, spec.pas_flips, self.optimize)?;
+        if let Some(f) = self.corrupt {
+            f(&mut program);
+        }
+        analysis::gate_program(&program, model, &self.hw, spec.algo)?;
+        Ok(program)
     }
 }
 
@@ -414,9 +438,8 @@ impl ExecutionBackend for AcceleratorBackend {
         chain_id: usize,
         ctx: &ChainCtx<'_>,
     ) -> Result<ChainResult, Mc2aError> {
-        self.hw.validate().map_err(Mc2aError::InvalidHardware)?;
         let t0 = Instant::now();
-        let program = compile_opt(model, spec.algo, &self.hw, spec.pas_flips, self.optimize);
+        let program = self.compile_gated(model, spec)?;
         let mut sim = Simulator::new(self.hw, model, spec.pas_flips, spec.chain_seed(chain_id));
         if let Some(x0) = &spec.init_state {
             sim.x.copy_from_slice(x0);
@@ -495,10 +518,9 @@ impl ExecutionBackend for AcceleratorBackend {
         ctx: &ChainCtx<'_>,
         controller: &mut dyn BetaController,
     ) -> Result<Vec<ChainResult>, Mc2aError> {
-        self.hw.validate().map_err(Mc2aError::InvalidHardware)?;
         // One compile serves every chain — the program depends only on
         // (model, algo, hw), not on the chain id.
-        let program = compile_opt(model, spec.algo, &self.hw, spec.pas_flips, self.optimize);
+        let program = self.compile_gated(model, spec)?;
         let units = (0..chains)
             .map(|chain_id| {
                 let mut sim =
@@ -520,8 +542,7 @@ impl ExecutionBackend for AcceleratorBackend {
         ctx: &ChainCtx<'_>,
         exchanges: &mut [ReplicaExchange],
     ) -> Result<Vec<ChainResult>, Mc2aError> {
-        self.hw.validate().map_err(Mc2aError::InvalidHardware)?;
-        let program = compile_opt(model, spec.algo, &self.hw, spec.pas_flips, self.optimize);
+        let program = self.compile_gated(model, spec)?;
         let units = (0..chains)
             .map(|chain_id| {
                 let mut sim =
@@ -548,6 +569,7 @@ impl ExecutionBackend for AcceleratorBackend {
 #[derive(Clone, Copy, Debug)]
 pub struct MultiCoreAcceleratorBackend {
     mhw: MultiHwConfig,
+    corrupt: Option<fn(&mut Program)>,
 }
 
 impl MultiCoreAcceleratorBackend {
@@ -556,18 +578,34 @@ impl MultiCoreAcceleratorBackend {
     /// compiler always runs with the fusion optimizer on (the §Perf
     /// ablation knob lives on the single-core [`AcceleratorBackend`]).
     pub fn new(hw: HwConfig, cores: usize) -> MultiCoreAcceleratorBackend {
-        MultiCoreAcceleratorBackend { mhw: MultiHwConfig::new(hw, cores) }
+        MultiCoreAcceleratorBackend { mhw: MultiHwConfig::new(hw, cores), corrupt: None }
     }
 
     /// Backend over a fully-specified multi-core configuration
     /// (custom crossbar bandwidth / barrier latency).
     pub fn with_config(mhw: MultiHwConfig) -> MultiCoreAcceleratorBackend {
-        MultiCoreAcceleratorBackend { mhw }
+        MultiCoreAcceleratorBackend { mhw, corrupt: None }
+    }
+
+    /// Test-only hook: mutate each shard program inside the
+    /// static-analysis gate, proving corrupted ensembles are rejected
+    /// with [`Mc2aError::InvalidProgram`] before they reach the
+    /// simulator.
+    #[doc(hidden)]
+    pub fn with_corrupt_hook(mut self, f: fn(&mut Program)) -> MultiCoreAcceleratorBackend {
+        self.corrupt = Some(f);
+        self
     }
 
     /// The multi-core hardware configuration this backend simulates.
     pub fn hw(&self) -> &MultiHwConfig {
         &self.mhw
+    }
+
+    /// Static-analysis gate over the shard ensemble this backend would
+    /// run (same partition + shard compiler as [`MultiCoreSim::new`]).
+    fn gate(&self, model: &dyn EnergyModel, spec: &ChainSpec) -> Result<(), Mc2aError> {
+        analysis::gate_ensemble(model, spec.algo, &self.mhw, spec.pas_flips, self.corrupt)
     }
 }
 
@@ -583,7 +621,7 @@ impl ExecutionBackend for MultiCoreAcceleratorBackend {
         chain_id: usize,
         ctx: &ChainCtx<'_>,
     ) -> Result<ChainResult, Mc2aError> {
-        self.mhw.validate().map_err(Mc2aError::InvalidHardware)?;
+        self.gate(model, spec)?;
         let t0 = Instant::now();
         let mut sim = MultiCoreSim::new(
             self.mhw,
@@ -591,8 +629,7 @@ impl ExecutionBackend for MultiCoreAcceleratorBackend {
             spec.algo,
             spec.pas_flips,
             spec.chain_seed(chain_id),
-        )
-        .map_err(Mc2aError::InvalidConfig)?;
+        )?;
         if let Some(x0) = &spec.init_state {
             sim.set_state(x0);
         }
@@ -669,7 +706,7 @@ impl ExecutionBackend for MultiCoreAcceleratorBackend {
         ctx: &ChainCtx<'_>,
         controller: &mut dyn BetaController,
     ) -> Result<Vec<ChainResult>, Mc2aError> {
-        self.mhw.validate().map_err(Mc2aError::InvalidHardware)?;
+        self.gate(model, spec)?;
         let mut units = Vec::with_capacity(chains);
         for chain_id in 0..chains {
             let mut sim = MultiCoreSim::new(
@@ -678,8 +715,7 @@ impl ExecutionBackend for MultiCoreAcceleratorBackend {
                 spec.algo,
                 spec.pas_flips,
                 spec.chain_seed(chain_id),
-            )
-            .map_err(Mc2aError::InvalidConfig)?;
+            )?;
             if let Some(x0) = &spec.init_state {
                 sim.set_state(x0);
             }
@@ -696,7 +732,7 @@ impl ExecutionBackend for MultiCoreAcceleratorBackend {
         ctx: &ChainCtx<'_>,
         exchanges: &mut [ReplicaExchange],
     ) -> Result<Vec<ChainResult>, Mc2aError> {
-        self.mhw.validate().map_err(Mc2aError::InvalidHardware)?;
+        self.gate(model, spec)?;
         let mut units = Vec::with_capacity(chains);
         for chain_id in 0..chains {
             let mut sim = MultiCoreSim::new(
@@ -705,8 +741,7 @@ impl ExecutionBackend for MultiCoreAcceleratorBackend {
                 spec.algo,
                 spec.pas_flips,
                 spec.chain_seed(chain_id),
-            )
-            .map_err(Mc2aError::InvalidConfig)?;
+            )?;
             if let Some(x0) = &spec.init_state {
                 sim.set_state(x0);
             }

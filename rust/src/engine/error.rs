@@ -18,6 +18,14 @@ pub enum Mc2aError {
     InvalidConfig(String),
     /// The hardware configuration failed [`crate::isa::HwConfig::validate`].
     InvalidHardware(String),
+    /// A compiled ISA program (or shard ensemble) failed static
+    /// analysis — the accelerator backends refuse to simulate it.
+    /// Carries the error-severity findings; `mc2a check` prints the
+    /// full report including warnings and info.
+    InvalidProgram {
+        /// The error-severity diagnostics that failed the gate.
+        diagnostics: Vec<crate::compiler::analysis::Diagnostic>,
+    },
     /// The requested workload is not in the registry. `known` lists
     /// every registered name so callers can print the menu.
     UnknownWorkload {
@@ -81,6 +89,19 @@ impl fmt::Display for Mc2aError {
         match self {
             Mc2aError::InvalidConfig(msg) => write!(f, "invalid engine configuration: {msg}"),
             Mc2aError::InvalidHardware(msg) => write!(f, "invalid hardware configuration: {msg}"),
+            Mc2aError::InvalidProgram { diagnostics } => {
+                let codes: Vec<&str> = diagnostics.iter().map(|d| d.code.as_str()).collect();
+                write!(
+                    f,
+                    "program failed static analysis with {} error(s) [{}]",
+                    diagnostics.len(),
+                    codes.join(", ")
+                )?;
+                if let Some(first) = diagnostics.first() {
+                    write!(f, ": {}", first.render())?;
+                }
+                write!(f, " (run `mc2a check` for the full report)")
+            }
             Mc2aError::UnknownWorkload { name, known } => {
                 write!(f, "unknown workload `{name}`; available: {}", known.join(", "))
             }
@@ -134,6 +155,16 @@ mod tests {
         };
         let s = e.to_string();
         assert!(s.contains("sampler") && s.contains("cdf") && s.contains("gumbel"), "{s}");
+    }
+
+    #[test]
+    fn invalid_program_display_names_codes() {
+        use crate::compiler::analysis::{DiagCode, Diagnostic};
+        let e = Mc2aError::InvalidProgram {
+            diagnostics: vec![Diagnostic::new(DiagCode::RawHazard, "stale read").at_instr(3)],
+        };
+        let s = e.to_string();
+        assert!(s.contains("MC2A012") && s.contains("mc2a check"), "{s}");
     }
 
     #[test]

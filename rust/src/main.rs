@@ -16,6 +16,9 @@
 //!            [--metrics-addr HOST:PORT] [--trace OUT.json]
 //! mc2a client [--addr HOST:PORT]
 //!             <submit|status|result|cancel|stream|metrics|stats|shutdown|ping> …
+//! mc2a check (--workload <name> | --all) [--algo mh|gibbs|bg|ag|pas]
+//!            [--sampler cdf|gumbel|lut|lut:SIZE:BITS] [--cores C]
+//!            [--hw paper|toy|t=..,k=..,…] [--format human|json] [--heavy]
 //! mc2a workloads
 //! mc2a roofline [--workload <name>] [--cores C]
 //! mc2a dse
@@ -69,6 +72,10 @@ USAGE:
                       [--backend sw|sim] [--priority low|normal|high] [--trace]
               status [--job N] | cancel/stream --job N
               result --job N [--wait] [--timeout SECS]
+  mc2a check (--workload <name> | --all) [--algo mh|gibbs|bg|ag|pas]
+             [--sampler cdf|gumbel|lut|lut:SIZE:BITS] [--cores C]
+             [--hw paper|toy|t=..,k=..,s=..,m=..,b=..,banks=..,regs=..,lut=..,lutbits=..,maxdist=..]
+             [--format human|json] [--heavy]
   mc2a workloads
   mc2a roofline [--workload <name>] [--cores C]
   mc2a dse
@@ -540,6 +547,231 @@ fn cmd_roofline(args: &[String]) -> Result<(), Mc2aError> {
     Ok(())
 }
 
+/// Parse the `--hw` argument of `mc2a check`: the presets `paper` /
+/// `toy`, or a comma-separated `key=value` list applied on top of the
+/// paper-default configuration (keys: t, k, s, m, b/bw, banks, regs,
+/// lut, lutbits, maxdist, clock).
+fn parse_hw(spec: &str) -> Result<HwConfig, Mc2aError> {
+    let mut hw = match spec {
+        "paper" => return Ok(HwConfig::paper_default()),
+        "toy" => return Ok(HwConfig::fig10_toy()),
+        _ => HwConfig::paper_default(),
+    };
+    for kv in spec.split(',') {
+        let (key, val) = kv.split_once('=').ok_or_else(|| {
+            Mc2aError::InvalidConfig(format!(
+                "bad --hw field {kv:?} (want key=value, or the presets paper|toy)"
+            ))
+        })?;
+        let bad = || Mc2aError::InvalidConfig(format!("bad --hw value {val:?} for key {key:?}"));
+        if key == "clock" {
+            hw.clock_ghz = val.parse().map_err(|_| bad())?;
+            continue;
+        }
+        let n: usize = val.parse().map_err(|_| bad())?;
+        match key {
+            "t" => hw.t = n,
+            "k" => hw.k = n,
+            "s" => hw.s = n,
+            "m" => hw.m = n,
+            "b" | "bw" => hw.bw_words = n,
+            "banks" => hw.rf_banks = n,
+            "regs" => hw.rf_regs_per_bank = n,
+            "lut" => hw.lut_size = n,
+            "lutbits" => hw.lut_bits = n as u32,
+            "maxdist" => hw.max_dist_size = n,
+            other => {
+                return Err(Mc2aError::InvalidConfig(format!(
+                    "unknown --hw key {other:?} \
+                     (t, k, s, m, b/bw, banks, regs, lut, lutbits, maxdist, clock)"
+                )))
+            }
+        }
+    }
+    hw.validate().map_err(Mc2aError::InvalidHardware)?;
+    Ok(hw)
+}
+
+/// One `mc2a check` record: the findings for a single analysis target
+/// (one workload × algorithm × core count, one chromatic schedule, or
+/// one sampler/hardware pairing).
+struct CheckRecord {
+    workload: String,
+    target: String,
+    report: mc2a::compiler::analysis::Report,
+}
+
+fn cmd_check(args: &[String]) -> Result<(), Mc2aError> {
+    use mc2a::compiler::analysis;
+
+    let all = has_flag(args, "--all");
+    let wname = flag_value(args, "--workload");
+    if all == wname.is_some() {
+        return Err(Mc2aError::InvalidConfig(
+            "check needs exactly one target: --workload <name> or --all".into(),
+        ));
+    }
+    let hw = parse_hw(&flag_value(args, "--hw").unwrap_or_else(|| "paper".into()))?;
+    let format = flag_value(args, "--format").unwrap_or_else(|| "human".into());
+    if format != "human" && format != "json" {
+        return Err(Mc2aError::InvalidConfig(format!(
+            "unknown format {format:?} (human|json)"
+        )));
+    }
+    let algo_filter = match flag_value(args, "--algo") {
+        Some(a) => Some(AlgoKind::parse(&a).ok_or_else(|| {
+            Mc2aError::InvalidConfig(format!("unknown algorithm {a:?} (mh|gibbs|bg|ag|pas)"))
+        })?),
+        None => None,
+    };
+    let sampler = match flag_value(args, "--sampler") {
+        Some(s) => {
+            Some(SamplerKind::parse(&s).map_err(|e| Mc2aError::InvalidConfig(e.to_string()))?)
+        }
+        None => None,
+    };
+    let cores_filter: Option<usize> = parsed_flag(args, "--cores")?;
+
+    let algos: Vec<AlgoKind> = match algo_filter {
+        Some(a) => vec![a],
+        None => vec![
+            AlgoKind::Mh,
+            AlgoKind::Gibbs,
+            AlgoKind::BlockGibbs,
+            AlgoKind::AsyncGibbs,
+            AlgoKind::Pas,
+        ],
+    };
+    let core_counts: Vec<usize> = match cores_filter {
+        Some(c) => vec![c],
+        None => vec![1, 4],
+    };
+    // Only an explicitly pinned (algo, cores) pair turns an unshardable
+    // combination into a hard error; sweeps skip it and keep going.
+    let pinned = algo_filter.is_some() && cores_filter.is_some();
+
+    let mut workloads = Vec::new();
+    if let Some(name) = &wname {
+        workloads.push(registry::lookup(name)?);
+    } else {
+        let heavy = has_flag(args, "--heavy");
+        for e in registry::REGISTRY {
+            if heavy || !e.heavy {
+                workloads.push(e.build());
+            }
+        }
+    }
+
+    let mut records: Vec<CheckRecord> = Vec::new();
+    if let Some(s) = sampler {
+        records.push(CheckRecord {
+            workload: "-".into(),
+            target: format!("sampler {}", s.spec()),
+            report: analysis::analyze_sampler(s, &hw),
+        });
+    }
+    let mut skipped = 0usize;
+    for wl in &workloads {
+        let model = wl.model.as_ref();
+        records.push(CheckRecord {
+            workload: wl.name.to_string(),
+            target: "chromatic".into(),
+            report: analysis::analyze_chromatic(model),
+        });
+        for &algo in &algos {
+            for &cores in &core_counts {
+                if cores > 1 {
+                    if let Err(e) = mc2a::sim::multicore::validate_shard_config(
+                        model.num_vars(),
+                        algo,
+                        cores,
+                    ) {
+                        if pinned {
+                            return Err(Mc2aError::InvalidConfig(e));
+                        }
+                        skipped += 1;
+                        continue;
+                    }
+                }
+                let flips = wl.pas_flips.max(1);
+                let report = if cores == 1 {
+                    let program = mc2a::compiler::compile(model, algo, &hw, flips)?;
+                    analysis::analyze_program(
+                        &program,
+                        model,
+                        &hw,
+                        analysis::algo_expects_full_coverage(algo),
+                    )
+                } else {
+                    let mhw = MultiHwConfig::new(hw, cores);
+                    analysis::analyze_ensemble(model, algo, &mhw, flips)?
+                };
+                records.push(CheckRecord {
+                    workload: wl.name.to_string(),
+                    target: format!("{} x{}", algo.name(), cores),
+                    report,
+                });
+            }
+        }
+    }
+
+    let total = |sev| -> usize { records.iter().map(|r| r.report.count(sev)).sum() };
+    let errors = total(analysis::Severity::Error);
+    let warnings = total(analysis::Severity::Warning);
+    let infos = total(analysis::Severity::Info);
+
+    if format == "json" {
+        let items: Vec<String> = records
+            .iter()
+            .map(|r| {
+                format!(
+                    "{{\"workload\":\"{}\",\"target\":\"{}\",\"errors\":{},\"warnings\":{},\
+                     \"infos\":{},\"diagnostics\":{}}}",
+                    r.workload,
+                    r.target,
+                    r.report.count(analysis::Severity::Error),
+                    r.report.count(analysis::Severity::Warning),
+                    r.report.count(analysis::Severity::Info),
+                    r.report.to_json()
+                )
+            })
+            .collect();
+        println!(
+            "{{\"records\":[{}],\"errors\":{errors},\"warnings\":{warnings},\
+             \"infos\":{infos},\"skipped\":{skipped}}}",
+            items.join(",")
+        );
+    } else {
+        for r in &records {
+            if r.report.diagnostics.is_empty() {
+                continue;
+            }
+            println!("== {} · {}", r.workload, r.target);
+            println!("{}", r.report.render_human());
+        }
+        println!(
+            "checked {} targets across {} workload(s): {errors} error(s), \
+             {warnings} warning(s), {infos} info(s){}",
+            records.len(),
+            workloads.len(),
+            if skipped > 0 {
+                format!(" ({skipped} unshardable combinations skipped)")
+            } else {
+                String::new()
+            }
+        );
+    }
+
+    if errors > 0 {
+        let mut diagnostics = Vec::new();
+        for r in &records {
+            diagnostics.extend(r.report.errors());
+        }
+        return Err(Mc2aError::InvalidProgram { diagnostics });
+    }
+    Ok(())
+}
+
 fn cmd_runtime_check(args: &[String]) -> Result<(), Mc2aError> {
     let dir = flag_value(args, "--artifacts").unwrap_or_else(|| "artifacts".into());
     match Runtime::load(&dir) {
@@ -738,6 +970,7 @@ fn main() {
             cmd_workloads();
             Ok(())
         }
+        Some("check") => cmd_check(&args[1..]),
         Some("roofline") => cmd_roofline(&args[1..]),
         Some("dse") => {
             println!("{}", bench::fig11());

@@ -37,6 +37,7 @@
 
 use crate::compiler::compile_shard;
 use crate::energy::EnergyModel;
+use crate::engine::error::Mc2aError;
 use crate::graph::{partition_balanced, Partition};
 use crate::isa::{HwConfig, MultiHwConfig, Program, Semantics};
 use crate::mcmc::{AlgoKind, BetaSchedule};
@@ -244,30 +245,29 @@ pub struct MultiCoreSim<'m> {
 }
 
 impl<'m> MultiCoreSim<'m> {
-    /// Shard `model` across `mhw.cores` pipelines. Fails (with a
-    /// human-readable reason; the engine wraps it in a typed error)
-    /// when the configuration is invalid, when there are more cores
-    /// than RVs, or when `algo` cannot be sharded at C > 1 — the
-    /// global-move-table PAS and the sequentially-dependent Gibbs/MH
-    /// chains only run single-core.
+    /// Shard `model` across `mhw.cores` pipelines. Fails with a typed
+    /// [`Mc2aError`] when the hardware configuration is invalid, when
+    /// there are more cores than RVs, or when `algo` cannot be sharded
+    /// at C > 1 — the global-move-table PAS and the
+    /// sequentially-dependent Gibbs/MH chains only run single-core.
     pub fn new(
         mhw: MultiHwConfig,
         model: &'m dyn EnergyModel,
         algo: AlgoKind,
         pas_flips: usize,
         seed: u64,
-    ) -> Result<MultiCoreSim<'m>, String> {
-        mhw.validate()?;
+    ) -> Result<MultiCoreSim<'m>, Mc2aError> {
+        mhw.validate().map_err(Mc2aError::InvalidHardware)?;
         let n = model.num_vars();
         let c = mhw.cores;
-        validate_shard_config(n, algo, c)?;
+        validate_shard_config(n, algo, c).map_err(Mc2aError::InvalidConfig)?;
         let partition = partition_balanced(model.interaction(), c);
         let boundary = partition.boundary_mask(model.interaction());
         let mut cores = Vec::with_capacity(c);
         let mut num_segments = 0usize;
         for (cid, owned) in partition.parts().into_iter().enumerate() {
             let (program, seg_ends) =
-                compile_shard(model, algo, &mhw.core, pas_flips, &owned, true);
+                compile_shard(model, algo, &mhw.core, pas_flips, &owned, true)?;
             let mut seg_xfer_words = vec![0u64; seg_ends.len()];
             let mut start = 0usize;
             for (s, &end) in seg_ends.iter().enumerate() {
@@ -561,7 +561,7 @@ mod tests {
     fn one_core_is_cycle_and_sample_identical_to_single_core() {
         let m = PottsGrid::new(6, 6, 2, 0.8);
         let hw = HwConfig::paper_default();
-        let program = compile(&m, AlgoKind::BlockGibbs, &hw, 1);
+        let program = compile(&m, AlgoKind::BlockGibbs, &hw, 1).unwrap();
         let mut single = Simulator::new(hw, &m, 1, 0xA11CE);
         let single_rep = single.run(&program, 40);
 

@@ -1,0 +1,238 @@
+//! Integration tests for the static-analysis subsystem
+//! (`compiler::analysis`): the backend gates that reject invalid
+//! programs with [`Mc2aError::InvalidProgram`] *before* simulation,
+//! the registry-wide clean sweep the `check --all` acceptance bar
+//! demands, and the `mc2a check` CLI verb end-to-end.
+
+use std::process::Command;
+use std::sync::atomic::AtomicBool;
+
+use mc2a::compiler::{analysis, compile};
+use mc2a::energy::PottsGrid;
+use mc2a::engine::{
+    AcceleratorBackend, ChainCtx, ChainSpec, ExecutionBackend, Mc2aError,
+    MultiCoreAcceleratorBackend, REGISTRY,
+};
+use mc2a::isa::{HwConfig, Instr, MultiHwConfig, Program, Semantics};
+use mc2a::mcmc::{AlgoKind, BetaSchedule, SamplerKind};
+
+fn spec(algo: AlgoKind) -> ChainSpec {
+    ChainSpec {
+        algo,
+        sampler: SamplerKind::Gumbel,
+        schedule: BetaSchedule::Constant(1.0),
+        beta_offset: 0,
+        steps: 3,
+        seed: 7,
+        pas_flips: 2,
+        observe_every: 0,
+        init_state: None,
+    }
+}
+
+/// Corrupt hook: point one crossbar route at a non-existent RF bank.
+fn break_route(p: &mut Program) {
+    for i in &mut p.body {
+        if let Some(r) = i.routes.first_mut() {
+            r.rf_bank = 9999;
+            return;
+        }
+    }
+    panic!("program has no routes to corrupt");
+}
+
+/// Corrupt hook: make every shard claim an update of RV 0, so all but
+/// the owning core violate single-writer ownership.
+fn inject_foreign_update(p: &mut Program) {
+    let mut i = Instr::nop();
+    i.sem = Semantics::UpdateRvs(vec![0]);
+    p.body.push(i);
+}
+
+/// Every registry workload × algorithm × {1, 4} cores analyzes with
+/// zero error-severity findings — the library-level `check --all` bar.
+#[test]
+fn registry_sweep_is_clean() {
+    let hw = HwConfig::paper_default();
+    for e in REGISTRY {
+        if e.heavy {
+            continue;
+        }
+        let wl = e.build();
+        let model = wl.model.as_ref();
+        let flips = wl.pas_flips.max(1);
+        let chrom = analysis::analyze_chromatic(model);
+        assert!(!chrom.has_errors(), "{} chromatic:\n{}", wl.name, chrom.render_human());
+        for algo in [
+            AlgoKind::Mh,
+            AlgoKind::Gibbs,
+            AlgoKind::BlockGibbs,
+            AlgoKind::AsyncGibbs,
+            AlgoKind::Pas,
+        ] {
+            let p = compile(model, algo, &hw, flips).unwrap();
+            let r = analysis::analyze_program(
+                &p,
+                model,
+                &hw,
+                analysis::algo_expects_full_coverage(algo),
+            );
+            assert!(!r.has_errors(), "{} {algo:?} x1:\n{}", wl.name, r.render_human());
+            if mc2a::sim::multicore::validate_shard_config(model.num_vars(), algo, 4).is_ok() {
+                let mhw = MultiHwConfig::new(hw, 4);
+                let r = analysis::analyze_ensemble(model, algo, &mhw, flips).unwrap();
+                assert!(!r.has_errors(), "{} {algo:?} x4:\n{}", wl.name, r.render_human());
+            }
+        }
+    }
+}
+
+/// The accelerator backend runs clean programs and rejects corrupted
+/// ones with [`Mc2aError::InvalidProgram`] before simulation.
+#[test]
+fn accelerator_backend_gates_corrupted_program() {
+    let model = PottsGrid::new(6, 6, 3, 1.0);
+    let hw = HwConfig::paper_default();
+    let stop = AtomicBool::new(false);
+    let ctx = ChainCtx { stop: &stop, events: None, restart: None };
+
+    let clean = AcceleratorBackend::new(hw);
+    clean
+        .run_chain(&model, &spec(AlgoKind::BlockGibbs), 0, &ctx)
+        .expect("clean program must pass the gate and simulate");
+
+    let bad = AcceleratorBackend::new(hw).with_corrupt_hook(break_route);
+    match bad.run_chain(&model, &spec(AlgoKind::BlockGibbs), 0, &ctx) {
+        Err(Mc2aError::InvalidProgram { diagnostics }) => {
+            assert!(
+                diagnostics
+                    .iter()
+                    .any(|d| d.code == analysis::DiagCode::RouteOutOfRange),
+                "{diagnostics:?}"
+            );
+        }
+        other => panic!("expected InvalidProgram, got {other:?}"),
+    }
+}
+
+/// The multi-core backend gates the whole shard ensemble: a foreign
+/// write injected into every shard trips the single-writer ownership
+/// check before the multi-core simulator is even constructed.
+#[test]
+fn multicore_backend_gates_foreign_write() {
+    let model = PottsGrid::new(8, 8, 3, 1.0);
+    let hw = HwConfig::paper_default();
+    let stop = AtomicBool::new(false);
+    let ctx = ChainCtx { stop: &stop, events: None, restart: None };
+
+    let clean = MultiCoreAcceleratorBackend::new(hw, 2);
+    clean
+        .run_chain(&model, &spec(AlgoKind::BlockGibbs), 0, &ctx)
+        .expect("clean ensemble must pass the gate and simulate");
+
+    let bad = MultiCoreAcceleratorBackend::new(hw, 4).with_corrupt_hook(inject_foreign_update);
+    match bad.run_chain(&model, &spec(AlgoKind::BlockGibbs), 0, &ctx) {
+        Err(Mc2aError::InvalidProgram { diagnostics }) => {
+            assert!(
+                diagnostics
+                    .iter()
+                    .any(|d| d.code == analysis::DiagCode::OwnershipViolation),
+                "{diagnostics:?}"
+            );
+        }
+        other => panic!("expected InvalidProgram, got {other:?}"),
+    }
+}
+
+/// Invalid hardware is a typed error from the compile path (no panic),
+/// for both the bare compiler and the backend.
+#[test]
+fn invalid_hardware_is_typed_error() {
+    let model = PottsGrid::new(4, 4, 2, 1.0);
+    let mut hw = HwConfig::paper_default();
+    hw.s = 48; // not 2^m
+    assert!(matches!(
+        compile(&model, AlgoKind::Gibbs, &hw, 1),
+        Err(Mc2aError::InvalidHardware(_))
+    ));
+    let stop = AtomicBool::new(false);
+    let ctx = ChainCtx { stop: &stop, events: None, restart: None };
+    assert!(matches!(
+        AcceleratorBackend::new(hw).run_chain(&model, &spec(AlgoKind::Gibbs), 0, &ctx),
+        Err(Mc2aError::InvalidHardware(_))
+    ));
+}
+
+// ---- CLI end-to-end ---------------------------------------------------
+
+fn mc2a_bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_mc2a"))
+}
+
+#[test]
+fn cli_check_single_workload_is_clean() {
+    let out = mc2a_bin()
+        .args(["check", "--workload", "earthquake"])
+        .output()
+        .expect("spawn mc2a");
+    assert!(
+        out.status.success(),
+        "stdout:\n{}\nstderr:\n{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("0 error(s)"), "{stdout}");
+}
+
+#[test]
+fn cli_check_all_json_is_clean_and_parses() {
+    let out = mc2a_bin()
+        .args(["check", "--all", "--format", "json"])
+        .output()
+        .expect("spawn mc2a");
+    assert!(
+        out.status.success(),
+        "stderr:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let line = stdout.trim();
+    assert!(line.starts_with("{\"records\":[") && line.ends_with('}'), "{line}");
+    assert!(line.contains("\"errors\":0"), "{line}");
+    assert!(!line.contains("\"severity\":\"error\""), "{line}");
+}
+
+#[test]
+fn cli_check_bad_hardware_exits_nonzero() {
+    let out = mc2a_bin()
+        .args(["check", "--workload", "earthquake", "--hw", "s=48"])
+        .output()
+        .expect("spawn mc2a");
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("invalid hardware"), "{stderr}");
+}
+
+#[test]
+fn cli_check_requires_a_target() {
+    let out = mc2a_bin().args(["check"]).output().expect("spawn mc2a");
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("--workload") && stderr.contains("--all"), "{stderr}");
+}
+
+#[test]
+fn cli_check_sampler_mismatch_warns_but_passes() {
+    let out = mc2a_bin()
+        .args(["check", "--workload", "earthquake", "--sampler", "lut:64:12", "--cores", "1"])
+        .output()
+        .expect("spawn mc2a");
+    assert!(
+        out.status.success(),
+        "stderr:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("MC2A018"), "{stdout}");
+}

@@ -19,7 +19,7 @@ fn sim_marginals_match_software() {
     let net = workloads::earthquake();
     let exact = net.exact_marginal(2);
     let hw = HwConfig::paper_default();
-    let program = compile(&net, AlgoKind::BlockGibbs, &hw, 1);
+    let program = compile(&net, AlgoKind::BlockGibbs, &hw, 1).unwrap();
     let mut sim = Simulator::new(hw, &net, 1, 0x51B);
     let _ = sim.run(&program, 120_000);
     let hw_marg = sim.marginal(2);
@@ -52,7 +52,7 @@ fn sim_marginals_match_software() {
 fn sim_ising_orders_when_cold() {
     let m = PottsGrid::new(16, 16, 2, 1.0);
     let hw = HwConfig::paper_default();
-    let program = compile(&m, AlgoKind::BlockGibbs, &hw, 1);
+    let program = compile(&m, AlgoKind::BlockGibbs, &hw, 1).unwrap();
     let mut sim = Simulator::new(hw, &m, 1, 0xC01D);
     sim.set_beta(2.0);
     // start all-up
@@ -71,7 +71,7 @@ fn compiled_suite_passes_validation() {
         for wl in workloads::suite_small() {
             let algos = [AlgoKind::Gibbs, AlgoKind::BlockGibbs, AlgoKind::Pas];
             for algo in algos {
-                let p = compile(wl.model.as_ref(), algo, &hw, wl.pas_flips);
+                let p = compile(wl.model.as_ref(), algo, &hw, wl.pas_flips).unwrap();
                 let coverage = !matches!(algo, AlgoKind::Pas);
                 let v = validate_program(&p, wl.model.as_ref(), &hw, coverage);
                 assert!(v.is_empty(), "{} {:?}: {:?}", wl.name, algo, &v[..v.len().min(3)]);
@@ -87,7 +87,7 @@ fn block_gibbs_beats_sequential_in_cycles() {
     let m = PottsGrid::new(16, 16, 2, 1.0);
     let hw = HwConfig::paper_default();
     let cycles = |algo| {
-        let p = compile(&m, algo, &hw, 1);
+        let p = compile(&m, algo, &hw, 1).unwrap();
         let mut sim = Simulator::new(hw, &m, 1, 1);
         sim.run(&p, 10).cycles
     };
@@ -106,7 +106,7 @@ fn pas_sample_phase_matches_fig10c() {
     let wl = workloads::wl_maxcut_optsicom(); // 125 nodes → 250 moves
     let hw = HwConfig::paper_default(); // S = 64
     let l = 8;
-    let p = compile(wl.model.as_ref(), AlgoKind::Pas, &hw, l);
+    let p = compile(wl.model.as_ref(), AlgoKind::Pas, &hw, l).unwrap();
     let h = p.body_histogram();
     let n_moves = 250usize;
     assert_eq!(
@@ -122,7 +122,7 @@ fn compiled_programs_encode_decode() {
     let hw = HwConfig::paper_default();
     let layout = InstrLayout::new(&hw);
     for wl in workloads::suite_small().iter().take(4) {
-        let p = compile(wl.model.as_ref(), wl.algorithm, &hw, wl.pas_flips);
+        let p = compile(wl.model.as_ref(), wl.algorithm, &hw, wl.pas_flips).unwrap();
         let enc = layout.encode(&p.body);
         let dec = layout.decode(&enc).expect("decode");
         assert_eq!(dec.len(), p.body.len());
@@ -149,12 +149,12 @@ fn compiled_programs_encode_decode() {
 fn utilization_scales_with_parallelism() {
     let hw = HwConfig::paper_default();
     let grid = PottsGrid::new(32, 32, 2, 1.0);
-    let p1 = compile(&grid, AlgoKind::BlockGibbs, &hw, 1);
+    let p1 = compile(&grid, AlgoKind::BlockGibbs, &hw, 1).unwrap();
     let mut s1 = Simulator::new(hw, &grid, 1, 1);
     let u_grid = s1.run(&p1, 5).cu_utilization();
 
     let net = workloads::earthquake();
-    let p2 = compile(&net, AlgoKind::BlockGibbs, &hw, 1);
+    let p2 = compile(&net, AlgoKind::BlockGibbs, &hw, 1).unwrap();
     let mut s2 = Simulator::new(hw, &net, 1, 1);
     let u_net = s2.run(&p2, 5).cu_utilization();
     assert!(
@@ -169,7 +169,7 @@ fn utilization_scales_with_parallelism() {
 fn commits_carry_hardware_work() {
     let hw = HwConfig::paper_default();
     for wl in workloads::suite_small() {
-        let p = compile(wl.model.as_ref(), wl.algorithm, &hw, wl.pas_flips);
+        let p = compile(wl.model.as_ref(), wl.algorithm, &hw, wl.pas_flips).unwrap();
         for i in &p.body {
             if matches!(i.sem, Semantics::UpdateRvs(_)) {
                 assert!(i.cu.is_some() && i.su.is_some(), "{}: bare commit", wl.name);
@@ -187,7 +187,7 @@ fn bigger_hardware_is_never_slower() {
     let small = HwConfig::fig10_toy();
     let big = HwConfig::paper_default();
     let cycles = |hw: HwConfig| {
-        let p = compile(&m, AlgoKind::BlockGibbs, &hw, 1);
+        let p = compile(&m, AlgoKind::BlockGibbs, &hw, 1).unwrap();
         let mut sim = Simulator::new(hw, &m, 1, 1);
         sim.run(&p, 10).cycles
     };

@@ -100,7 +100,7 @@ fn prop_compiled_programs_validate() {
             AlgoKind::AsyncGibbs,
             AlgoKind::Pas,
         ] {
-            let p = compile(model.as_ref(), algo, &hw, 1 + rng.below(8));
+            let p = compile(model.as_ref(), algo, &hw, 1 + rng.below(8)).unwrap();
             let coverage = !matches!(algo, AlgoKind::Pas);
             let v = validate_program(&p, model.as_ref(), &hw, coverage);
             assert!(
@@ -121,7 +121,7 @@ fn prop_isa_roundtrip() {
         let layout = InstrLayout::new(&hw);
         let model = random_model(&mut rng);
         let algo = [AlgoKind::Gibbs, AlgoKind::BlockGibbs, AlgoKind::Pas][rng.below(3)];
-        let p = compile(model.as_ref(), algo, &hw, 4);
+        let p = compile(model.as_ref(), algo, &hw, 4).unwrap();
         let enc = layout.encode(&p.body);
         let dec = layout.decode(&enc).unwrap_or_else(|e| panic!("case {case}: {e}"));
         for (a, b) in p.body.iter().zip(&dec) {
@@ -139,7 +139,7 @@ fn prop_sim_state_conserved() {
     for case in 0..12 {
         let hw = random_hw(&mut rng);
         let model = random_model(&mut rng);
-        let p = compile(model.as_ref(), AlgoKind::BlockGibbs, &hw, 1);
+        let p = compile(model.as_ref(), AlgoKind::BlockGibbs, &hw, 1).unwrap();
         let mut sim = Simulator::new(hw, model.as_ref(), 1, rng.next_u64());
         let iters = 5 + rng.below(20);
         let rep = sim.run(&p, iters);
@@ -263,6 +263,99 @@ fn prop_local_energy_consistency() {
     }
 }
 
+/// The static-analysis engine agrees with the compiler: random models ×
+/// random hardware × every algorithm analyze with zero error-severity
+/// findings (warnings/infos are allowed — AG programs report their
+/// hazard window, dead stores are expected from the rotating RF
+/// allocator).
+#[test]
+fn prop_analysis_clean_on_compiled_programs() {
+    use mc2a::compiler::analysis;
+    let mut rng = Rng::new(0xA11A);
+    for case in 0..CASES {
+        let hw = random_hw(&mut rng);
+        let model = random_model(&mut rng);
+        for algo in [
+            AlgoKind::Mh,
+            AlgoKind::Gibbs,
+            AlgoKind::BlockGibbs,
+            AlgoKind::AsyncGibbs,
+            AlgoKind::Pas,
+        ] {
+            let p = compile(model.as_ref(), algo, &hw, 1 + rng.below(8)).unwrap();
+            let r = analysis::analyze_program(
+                &p,
+                model.as_ref(),
+                &hw,
+                analysis::algo_expects_full_coverage(algo),
+            );
+            assert!(
+                !r.has_errors(),
+                "case {case} {algo:?} hw={hw:?}:\n{}",
+                r.render_human()
+            );
+        }
+    }
+}
+
+/// Chromatic analysis on random honest models: the greedy coloring is
+/// blanket-independent both structurally and under functional probes.
+#[test]
+fn prop_chromatic_clean_on_random_models() {
+    use mc2a::compiler::analysis;
+    let mut rng = Rng::new(0xC0104);
+    for case in 0..CASES {
+        let model = random_model(&mut rng);
+        let r = analysis::analyze_chromatic(model.as_ref());
+        assert!(!r.has_errors(), "case {case}:\n{}", r.render_human());
+    }
+}
+
+/// Ensemble analysis across the registry: every shardable workload ×
+/// {BG, AG} × {2, 4} cores compiles into an ensemble with aligned
+/// rounds, single-writer ownership, race-free synchronization rounds,
+/// and no error-severity findings.
+#[test]
+fn prop_registry_ensembles_analyze_clean() {
+    use mc2a::compiler::analysis;
+    use mc2a::isa::MultiHwConfig;
+    let hw = HwConfig::paper_default();
+    for e in mc2a::engine::registry::REGISTRY {
+        if e.heavy {
+            continue;
+        }
+        let wl = e.build();
+        let model = wl.model.as_ref();
+        for algo in [AlgoKind::BlockGibbs, AlgoKind::AsyncGibbs] {
+            for cores in [2usize, 4] {
+                if mc2a::sim::multicore::validate_shard_config(model.num_vars(), algo, cores)
+                    .is_err()
+                {
+                    continue;
+                }
+                let mhw = MultiHwConfig::new(hw, cores);
+                let r = analysis::analyze_ensemble(model, algo, &mhw, wl.pas_flips.max(1))
+                    .unwrap_or_else(|err| panic!("{} {algo:?} x{cores}: {err}", wl.name));
+                assert!(
+                    !r.has_errors(),
+                    "{} {algo:?} x{cores}:\n{}",
+                    wl.name,
+                    r.render_human()
+                );
+            }
+        }
+        // Single-core sanity on the workload's native algorithm too.
+        let p = compile(model, wl.algorithm, &hw, wl.pas_flips.max(1)).unwrap();
+        let r = analysis::analyze_program(
+            &p,
+            model,
+            &hw,
+            analysis::algo_expects_full_coverage(wl.algorithm),
+        );
+        assert!(!r.has_errors(), "{}:\n{}", wl.name, r.render_human());
+    }
+}
+
 /// Crossbar routing ranges hold even on adversarial dense graphs.
 #[test]
 fn prop_routes_in_range_dense_graph() {
@@ -281,7 +374,7 @@ fn prop_routes_in_range_dense_graph() {
         let g = Graph::from_edges(n, &edges, None);
         let m = MaxCutModel::new(g, None);
         let hw = random_hw(&mut rng);
-        let p = compile(&m, AlgoKind::BlockGibbs, &hw, 1);
+        let p = compile(&m, AlgoKind::BlockGibbs, &hw, 1).unwrap();
         for i in p.prologue.iter().chain(&p.body) {
             for r in &i.routes {
                 assert!((r.cu as usize) < hw.t);
