@@ -41,8 +41,9 @@ pub const BENCH_NAMES: &[&str] = &[
 /// to diff. The root is found by probing for `ROADMAP.md` in `.` then
 /// `..` (the crate lives one level below it); a missing root or a
 /// failed write degrades to a warning line — benches must not fail
-/// over artifact plumbing.
-fn write_bench_artifact(file: &str, json: &str) -> String {
+/// over artifact plumbing. Also used by `mc2a profile` for
+/// `PROFILE_roofline.json`.
+pub fn write_bench_artifact(file: &str, json: &str) -> String {
     let root = if std::path::Path::new("ROADMAP.md").exists() {
         std::path::Path::new(".")
     } else if std::path::Path::new("../ROADMAP.md").exists() {

@@ -400,6 +400,8 @@ pub(crate) fn run_adaptive<'m>(
                 objective: s.objective,
                 best_objective: s.best,
                 updates: s.updates,
+                steps_per_sec: None,
+                eta_seconds: None,
             });
         }
         let r_hat = if chains >= 2 {

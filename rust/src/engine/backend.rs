@@ -161,6 +161,14 @@ pub trait ExecutionBackend: Send + Sync {
     /// Short backend name for reports ("software", "batched", …).
     fn name(&self) -> &'static str;
 
+    /// The hardware point this backend *simulates*, when it is a
+    /// cycle-accurate simulator (`engine::profile` evaluates the
+    /// matching roofline prediction against it). `None` on wall-clock
+    /// backends, which are profiled against the paper-default config.
+    fn sim_hw(&self) -> Option<MultiHwConfig> {
+        None
+    }
+
     /// Run one chain to completion (or early stop) and report it.
     fn run_chain(
         &self,
@@ -291,6 +299,8 @@ pub(crate) fn run_software_chain(
             objective,
             best_objective: chain.best_objective,
             updates: chain.stats.updates,
+            steps_per_sec: None,
+            eta_seconds: None,
         });
     }
     Ok(ChainResult {
@@ -431,6 +441,10 @@ impl ExecutionBackend for AcceleratorBackend {
         "accelerator"
     }
 
+    fn sim_hw(&self) -> Option<MultiHwConfig> {
+        Some(MultiHwConfig::new(self.hw, 1))
+    }
+
     fn run_chain(
         &self,
         model: &dyn EnergyModel,
@@ -477,6 +491,8 @@ impl ExecutionBackend for AcceleratorBackend {
                             objective,
                             best_objective: best,
                             updates: rep_so_far.updates,
+                            steps_per_sec: None,
+                            eta_seconds: None,
                         });
                     }
                     !ctx.stop_requested()
@@ -614,6 +630,10 @@ impl ExecutionBackend for MultiCoreAcceleratorBackend {
         "multicore"
     }
 
+    fn sim_hw(&self) -> Option<MultiHwConfig> {
+        Some(self.mhw)
+    }
+
     fn run_chain(
         &self,
         model: &dyn EnergyModel,
@@ -664,6 +684,8 @@ impl ExecutionBackend for MultiCoreAcceleratorBackend {
                             objective,
                             best_objective: best,
                             updates: updates_so_far,
+                            steps_per_sec: None,
+                            eta_seconds: None,
                         });
                     }
                     !ctx.stop_requested()
@@ -879,6 +901,8 @@ impl ExecutionBackend for RuntimeBackend {
                     objective,
                     best_objective: best,
                     updates: stats.updates,
+                    steps_per_sec: None,
+                    eta_seconds: None,
                 });
             }
         }

@@ -195,6 +195,8 @@ fn run_batch_item(
                 objective: batch.objectives[c],
                 best_objective: batch.best_objectives[c],
                 updates: batch.stats[c].updates,
+                steps_per_sec: None,
+                eta_seconds: None,
             });
         }
     }

@@ -49,6 +49,7 @@ pub mod batched;
 pub mod checkpoint;
 pub mod error;
 pub mod observer;
+pub mod profile;
 pub mod registry;
 pub mod scheduler;
 pub mod server;
@@ -79,11 +80,12 @@ use std::time::Instant;
 
 use crate::coordinator::{ChainResult, RunMetrics};
 use crate::energy::EnergyModel;
-use crate::isa::HwConfig;
+use crate::isa::{HwConfig, MultiHwConfig};
 use crate::mcmc::anneal::{AdaptiveSchedule, AnnealConfig, AnnealPolicy, BetaController};
 use crate::mcmc::tempering::{AdaptSpacing, Ladder, ReplicaExchange, TemperConfig};
 use crate::mcmc::{AlgoKind, BetaSchedule, SamplerKind};
-use observer::DiagnosticsTracker;
+use crate::roofline::RooflineObservation;
+use observer::{DiagnosticsTracker, RateTracker};
 
 /// A model the engine can borrow (library callers) or own (registry
 /// workloads).
@@ -718,6 +720,7 @@ impl<'m> EngineBuilder<'m> {
             controller,
             temper,
             workload: self.workload,
+            last_observation: None,
         })
     }
 }
@@ -769,6 +772,7 @@ pub struct Engine<'m> {
     controller: Option<Box<dyn BetaController>>,
     temper: Option<Vec<ReplicaExchange>>,
     workload: Option<&'static str>,
+    last_observation: Option<RooflineObservation>,
 }
 
 impl<'m> Engine<'m> {
@@ -811,6 +815,18 @@ impl<'m> Engine<'m> {
     /// Registry name when built via [`Engine::for_workload`].
     pub fn workload_name(&self) -> Option<&'static str> {
         self.workload
+    }
+
+    /// The hardware point the backend simulates, when it is a
+    /// cycle-accurate simulator (see [`ExecutionBackend::sim_hw`]).
+    pub fn backend_sim_hw(&self) -> Option<MultiHwConfig> {
+        self.backend.sim_hw()
+    }
+
+    /// The measured-roofline observation of the last [`Engine::run`],
+    /// when [`profile`] was enabled at the time the run finished.
+    pub fn observation(&self) -> Option<&RooflineObservation> {
+        self.last_observation.as_ref()
     }
 
     /// Serialized adaptive-controller memory (None unless the engine
@@ -904,8 +920,11 @@ impl<'m> Engine<'m> {
             // Diagnostics are computed here, so observers can hold
             // plain mutable state.
             let mut tracker = DiagnosticsTracker::new(n);
+            let mut rate = RateTracker::new(spec.steps);
             let mut stagnant_rounds = 0usize;
             while let Ok(event) = rx.recv() {
+                let mut event = event;
+                rate.stamp(&mut event);
                 let diag = tracker.record(&event);
                 // Cold-chain restarts: after `rounds` consecutive
                 // stagnant diagnostics rounds, bump the restart epoch
@@ -952,6 +971,25 @@ impl<'m> Engine<'m> {
                 obs.on_chain_done(chain);
             }
         }
+        // Measured-roofline profiling: a pure post-run projection of
+        // the finished chains (results are bit-identical on vs. off).
+        self.last_observation = if profile::enabled() {
+            let observation = profile::observe_run(
+                workload,
+                self.model.get(),
+                self.spec.algo,
+                self.spec.sampler,
+                self.spec.pas_flips,
+                self.backend.name(),
+                self.backend.sim_hw(),
+                &chains,
+                self.spec.steps,
+                t0.elapsed(),
+            );
+            Some(observation)
+        } else {
+            None
+        };
         Ok(RunMetrics {
             chains,
             wall: t0.elapsed(),

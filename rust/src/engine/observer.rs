@@ -10,8 +10,9 @@
 //! [`ObserverAction::Stop`] from any callback raises the shared stop
 //! flag, and every chain exits at its next observation boundary.
 
+use std::collections::HashMap;
 use std::sync::mpsc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::ChainResult;
 use crate::mcmc::{effective_sample_size, split_r_hat};
@@ -31,6 +32,13 @@ pub struct ProgressEvent {
     pub best_objective: f64,
     /// Cumulative RV updates on this chain.
     pub updates: u64,
+    /// Observed sampling rate on this chain, stamped by the engine's
+    /// coordinating thread from segment timestamps; `None` on the very
+    /// first observation (no elapsed baseline yet).
+    pub steps_per_sec: Option<f64>,
+    /// Remaining-time estimate for this chain in seconds, derived from
+    /// `steps_per_sec` and the run's step budget.
+    pub eta_seconds: Option<f64>,
 }
 
 /// Cross-chain convergence snapshot, computed once per observation
@@ -91,8 +99,12 @@ pub struct PrintObserver;
 
 impl ChainObserver for PrintObserver {
     fn on_progress(&mut self, e: &ProgressEvent) -> ObserverAction {
+        let pace = match (e.steps_per_sec, e.eta_seconds) {
+            (Some(rate), Some(eta)) => format!("  {rate:.0} steps/s  eta {eta:.1}s"),
+            _ => String::new(),
+        };
         eprintln!(
-            "[chain {}] step {:>8}  beta {:.3}  objective {:.3}  best {:.3}",
+            "[chain {}] step {:>8}  beta {:.3}  objective {:.3}  best {:.3}{pace}",
             e.chain_id, e.step, e.beta, e.objective, e.best_objective
         );
         ObserverAction::Continue
@@ -273,6 +285,62 @@ impl DiagnosticsTracker {
     }
 }
 
+/// Per-run rate bookkeeping: stamps [`ProgressEvent::steps_per_sec`]
+/// and [`ProgressEvent::eta_seconds`] on the coordinating thread from
+/// segment timestamps, preferring the slope of the last observation
+/// segment over the cumulative average once a per-chain baseline
+/// exists. A pure event annotation — chain math never sees it.
+pub(crate) struct RateTracker {
+    total_steps: usize,
+    start: Instant,
+    last: HashMap<usize, (Instant, usize)>,
+}
+
+impl RateTracker {
+    pub(crate) fn new(total_steps: usize) -> RateTracker {
+        RateTracker {
+            total_steps,
+            start: Instant::now(),
+            last: HashMap::new(),
+        }
+    }
+
+    /// Annotate one event in place with rate + ETA when a positive,
+    /// finite rate can be derived; leaves the fields `None` otherwise
+    /// (e.g. sub-timer-resolution segments).
+    pub(crate) fn stamp(&mut self, e: &mut ProgressEvent) {
+        let now = Instant::now();
+        let rate = match self.last.get(&e.chain_id) {
+            // A baseline exists: segment slope when the chain advanced,
+            // nothing for a stalled segment (no zero/infinite rates).
+            Some(&(t0, s0)) if e.step > s0 => {
+                let dt = now.duration_since(t0).as_secs_f64();
+                if dt > 0.0 {
+                    Some((e.step - s0) as f64 / dt)
+                } else {
+                    None
+                }
+            }
+            Some(_) => None,
+            // First observation of this chain: cumulative average
+            // since the run started.
+            None => {
+                let dt = now.duration_since(self.start).as_secs_f64();
+                if dt > 0.0 && e.step > 0 {
+                    Some(e.step as f64 / dt)
+                } else {
+                    None
+                }
+            }
+        };
+        self.last.insert(e.chain_id, (now, e.step));
+        if let Some(rate) = rate.filter(|r| r.is_finite() && *r > 0.0) {
+            e.steps_per_sec = Some(rate);
+            e.eta_seconds = Some(self.total_steps.saturating_sub(e.step) as f64 / rate);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -285,6 +353,8 @@ mod tests {
             objective,
             best_objective: objective,
             updates: step as u64,
+            steps_per_sec: None,
+            eta_seconds: None,
         }
     }
 
@@ -300,6 +370,50 @@ mod tests {
         let d = t.record(&ev(0, 20, 1.5)).expect("round 2 complete");
         assert_eq!(d.round, 2);
         assert_eq!(d.best_objective, 3.0);
+    }
+
+    #[test]
+    fn rate_tracker_stamps_rate_and_eta_from_segments() {
+        let mut rate = RateTracker::new(100);
+        std::thread::sleep(Duration::from_millis(5));
+        let mut first = ev(0, 40, 1.0);
+        rate.stamp(&mut first);
+        let r = first.steps_per_sec.expect("cumulative baseline rate");
+        assert!(r > 0.0 && r.is_finite());
+        let eta = first.eta_seconds.expect("eta from rate");
+        assert!((eta - 60.0 / r).abs() < 1e-9, "eta covers remaining steps");
+
+        // Second observation on the same chain uses the segment slope.
+        std::thread::sleep(Duration::from_millis(5));
+        let mut second = ev(0, 80, 1.0);
+        rate.stamp(&mut second);
+        assert!(second.steps_per_sec.is_some());
+
+        // A stalled chain (no step advance) keeps the fields unset
+        // rather than reporting an infinite or zero rate.
+        let mut stalled = ev(0, 80, 1.0);
+        rate.stamp(&mut stalled);
+        assert!(stalled.steps_per_sec.is_none());
+        assert!(stalled.eta_seconds.is_none());
+    }
+
+    #[test]
+    fn rate_tracker_keeps_per_chain_baselines() {
+        let mut rate = RateTracker::new(50);
+        std::thread::sleep(Duration::from_millis(5));
+        let mut a = ev(0, 10, 1.0);
+        let mut b = ev(1, 10, 1.0);
+        rate.stamp(&mut a);
+        rate.stamp(&mut b);
+        // Both chains got a cumulative-baseline stamp; neither chain's
+        // state interfered with the other's.
+        assert!(a.steps_per_sec.is_some());
+        assert!(b.steps_per_sec.is_some());
+        // ETA never goes negative once a chain overshoots the budget.
+        std::thread::sleep(Duration::from_millis(5));
+        let mut over = ev(1, 60, 1.0);
+        rate.stamp(&mut over);
+        assert_eq!(over.eta_seconds, Some(0.0));
     }
 
     #[test]

@@ -49,13 +49,16 @@ use crate::engine::backend::{
 use crate::engine::checkpoint::{Checkpoint, JobEnvelope};
 use crate::engine::error::Mc2aError;
 use crate::engine::observer::{
-    raw_stream, DiagnosticsReport, DiagnosticsTracker, EventStream, ProgressEvent, StreamEvent,
+    raw_stream, DiagnosticsReport, DiagnosticsTracker, EventStream, ProgressEvent, RateTracker,
+    StreamEvent,
 };
+use crate::engine::profile;
 use crate::engine::registry;
 use crate::engine::scheduler::{TaskTag, WorkPool};
 use crate::engine::telemetry;
-use crate::isa::HwConfig;
-use crate::mcmc::{AlgoKind, BetaSchedule, SamplerKind};
+use crate::isa::{HwConfig, MultiHwConfig};
+use crate::mcmc::{effective_sample_size, split_r_hat, AlgoKind, BetaSchedule, SamplerKind};
+use crate::roofline::RooflineObservation;
 
 /// Server-assigned job identifier (monotone from 1).
 pub type JobId = u64;
@@ -212,6 +215,11 @@ pub struct JobSpec {
     /// job's lifetime. Purely observational — results are bit-identical
     /// either way — and not persisted across restarts.
     pub trace: bool,
+    /// Compute a measured-roofline [`RooflineObservation`] when the
+    /// job completes (surfaced via [`JobResult::observation`] and the
+    /// `stats` verb). Purely observational — results are bit-identical
+    /// either way — and not persisted across restarts.
+    pub profile: bool,
 }
 
 impl JobSpec {
@@ -230,6 +238,7 @@ impl JobSpec {
             observe_every: 0,
             pas_flips: None,
             trace: false,
+            profile: false,
         }
     }
 }
@@ -259,9 +268,12 @@ pub struct JobStatus {
     pub steps_done: usize,
     /// Best objective seen so far (−∞ before the first observation).
     pub best_objective: f64,
-    /// Latest cross-chain split R-hat, when a diagnostics round has
-    /// completed.
+    /// Cross-chain split R-hat: the final full-trace value for
+    /// terminal jobs, else the latest completed streaming round.
     pub r_hat: Option<f64>,
+    /// Minimum per-chain effective sample size, same provenance as
+    /// [`JobStatus::r_hat`].
+    pub min_ess: Option<f64>,
     /// First chain error, for `Failed` jobs.
     pub error: Option<String>,
 }
@@ -280,10 +292,32 @@ pub struct JobResult {
     pub chains: Vec<ChainResult>,
     /// First chain error, for `Failed` jobs.
     pub error: Option<String>,
+    /// Measured-roofline projection, for jobs submitted with
+    /// [`JobSpec::profile`] that ran to completion.
+    pub observation: Option<RooflineObservation>,
+}
+
+/// One job's convergence/profiling summary inside [`ServerStats`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobStatSummary {
+    /// Job id.
+    pub id: JobId,
+    /// Current life-cycle state.
+    pub state: JobState,
+    /// Split R-hat (final full-trace value for terminal jobs, latest
+    /// streaming round otherwise).
+    pub r_hat: Option<f64>,
+    /// Minimum per-chain effective sample size, same provenance.
+    pub min_ess: Option<f64>,
+    /// Measured boundedness verdict, for profiled finished jobs.
+    pub verdict: Option<&'static str>,
+    /// Measured-vs-predicted throughput drift (%), for profiled
+    /// finished jobs.
+    pub drift_pct: Option<f64>,
 }
 
 /// Aggregate point-in-time server statistics ([`JobServer::stats`]).
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct ServerStats {
     /// Jobs in the table (all states).
     pub jobs_total: usize,
@@ -301,6 +335,8 @@ pub struct ServerStats {
     pub chains_pending: usize,
     /// Worker threads in the shared pool.
     pub threads: usize,
+    /// Per-job convergence/profiling summaries, in id order.
+    pub jobs: Vec<JobStatSummary>,
 }
 
 /// Construction parameters for [`JobServer::new`].
@@ -331,6 +367,13 @@ struct Job {
     best_objective: f64,
     tracker: DiagnosticsTracker,
     last_diag: Option<DiagnosticsReport>,
+    /// Final full-trace diagnostics `(split R-hat, min ESS)`, set when
+    /// the job reaches a terminal state.
+    final_diag: Option<(Option<f64>, f64)>,
+    /// Measured-roofline projection for profiled jobs, set at `Done`.
+    observation: Option<RooflineObservation>,
+    /// Stamps progress events with steps/sec + ETA on the pump thread.
+    rate: RateTracker,
     subs: Vec<Sender<StreamEvent>>,
     error: Option<String>,
 }
@@ -586,7 +629,7 @@ impl JobServer {
             jobs_total: jobs.len(),
             ..ServerStats::default()
         };
-        for job in jobs.values() {
+        for (&id, job) in jobs.iter() {
             match job.state {
                 JobState::Queued => s.queued += 1,
                 JobState::Running => s.running += 1,
@@ -595,6 +638,15 @@ impl JobServer {
                 JobState::Failed => s.failed += 1,
             }
             s.chains_pending += job.pending;
+            let (r_hat, min_ess) = diag_of(job);
+            s.jobs.push(JobStatSummary {
+                id,
+                state: job.state,
+                r_hat,
+                min_ess,
+                verdict: job.observation.as_ref().map(|o| o.verdict.name()),
+                drift_pct: job.observation.as_ref().map(|o| o.drift.drift_pct),
+            });
         }
         s
     }
@@ -638,6 +690,7 @@ impl JobServer {
             observe_every: env.observe_every,
             pas_flips: Some(env.pas_flips),
             trace: false,
+            profile: false,
         };
         let preloaded = persist::load_chains(dir, env.job_id, env.chains, env.steps)?;
         if state.is_terminal() {
@@ -666,6 +719,7 @@ impl JobServer {
         let steps_done = results.iter().map(|r| r.as_ref().map_or(0, |c| c.steps)).collect();
         let job = Job {
             tracker: DiagnosticsTracker::new(spec.chains),
+            rate: RateTracker::new(spec.steps),
             spec,
             algo,
             cspec,
@@ -676,10 +730,12 @@ impl JobServer {
             cancelled: state == JobState::Cancelled,
             stop: Arc::new(AtomicBool::new(true)),
             pending: 0,
+            final_diag: final_diag_of(&results),
             results,
             steps_done,
             best_objective,
             last_diag: None,
+            observation: None,
             subs: Vec::new(),
             error: None,
         };
@@ -746,8 +802,9 @@ impl JobServer {
                 telemetry::tracer().start();
             }
         }
-        let job = Job {
+        let mut job = Job {
             tracker: DiagnosticsTracker::new(spec.chains),
+            rate: RateTracker::new(spec.steps),
             spec,
             algo,
             cspec: cspec.clone(),
@@ -762,9 +819,19 @@ impl JobServer {
             steps_done,
             best_objective,
             last_diag: None,
+            final_diag: None,
+            observation: None,
             subs: Vec::new(),
             error: None,
         };
+        if job.state == JobState::Done {
+            // Fully preloaded from disk: surface final diagnostics (and
+            // the profile projection) just like a freshly finished job.
+            job.final_diag = final_diag_of(&job.results);
+            if job.spec.profile {
+                job.observation = observe_job(&job);
+            }
+        }
         if durable {
             if let Some(dir) = &self.inner.dir {
                 // Persist before the first chain can run, so a crash at
@@ -824,6 +891,7 @@ fn chain_spec_of(spec: &JobSpec, algo: AlgoKind) -> ChainSpec {
 }
 
 fn status_of(id: JobId, job: &Job) -> JobStatus {
+    let (r_hat, min_ess) = diag_of(job);
     JobStatus {
         id,
         workload: job.spec.workload.clone(),
@@ -836,7 +904,8 @@ fn status_of(id: JobId, job: &Job) -> JobStatus {
         steps: job.cspec.steps,
         steps_done: job.steps_done.iter().sum(),
         best_objective: job.best_objective,
-        r_hat: job.last_diag.and_then(|d| d.r_hat),
+        r_hat,
+        min_ess,
         error: job.error.clone(),
     }
 }
@@ -848,7 +917,74 @@ fn result_of(id: JobId, job: &Job) -> JobResult {
         best_objective: job.best_objective,
         chains: job.results.iter().flatten().cloned().collect(),
         error: job.error.clone(),
+        observation: job.observation.clone(),
     }
+}
+
+/// The diagnostics pair `(split R-hat, min ESS)` a status surface
+/// should show: the final full-trace values once computed, else the
+/// latest streaming round.
+fn diag_of(job: &Job) -> (Option<f64>, Option<f64>) {
+    match job.final_diag {
+        Some((r_hat, min_ess)) => (r_hat, Some(min_ess)),
+        None => (
+            job.last_diag.and_then(|d| d.r_hat),
+            job.last_diag.map(|d| d.min_ess),
+        ),
+    }
+}
+
+/// Final cross-chain diagnostics over the completed chains' full
+/// objective traces; `None` when no chain kept a trace.
+fn final_diag_of(results: &[Option<ChainResult>]) -> Option<(Option<f64>, f64)> {
+    let traces: Vec<Vec<f64>> = results
+        .iter()
+        .flatten()
+        .map(|c| c.objective_trace.clone())
+        .filter(|t| !t.is_empty())
+        .collect();
+    if traces.is_empty() {
+        return None;
+    }
+    let r_hat = if traces.len() >= 2 {
+        split_r_hat(&traces)
+    } else {
+        None
+    };
+    let min_ess = traces
+        .iter()
+        .map(|t| effective_sample_size(t))
+        .fold(f64::INFINITY, f64::min);
+    Some((r_hat, min_ess))
+}
+
+/// The measured-roofline observation for a finished profiled job.
+/// Rebuilds the workload model from the registry; custom-model jobs
+/// (nothing to rebuild) and empty result sets yield `None`.
+fn observe_job(job: &Job) -> Option<RooflineObservation> {
+    let entry = registry::find(&job.spec.workload)?;
+    let wl = entry.build();
+    let chains: Vec<ChainResult> = job.results.iter().flatten().cloned().collect();
+    if chains.is_empty() {
+        return None;
+    }
+    let sim_hw = match job.spec.backend {
+        ServeBackend::Software => None,
+        ServeBackend::Accelerator => Some(MultiHwConfig::new(HwConfig::paper_default(), 1)),
+    };
+    let wall = job.started.unwrap_or(job.submitted).elapsed();
+    Some(profile::observe_run(
+        &job.spec.workload,
+        wl.model.as_ref(),
+        job.cspec.algo,
+        job.cspec.sampler,
+        job.cspec.pas_flips,
+        job.spec.backend.name(),
+        sim_hw,
+        &chains,
+        job.cspec.steps,
+        wall,
+    ))
 }
 
 /// One pool task: run one chain to completion (or to the stop flag).
@@ -977,6 +1113,12 @@ fn finalize_locked(inner: &Inner, id: JobId, job: &mut Job) {
         // Interrupted by server shutdown: stays resumable on disk.
         JobState::Queued
     };
+    if job.state.is_terminal() {
+        job.final_diag = final_diag_of(&job.results);
+        if job.spec.profile && job.state == JobState::Done {
+            job.observation = observe_job(job);
+        }
+    }
     let now = Instant::now();
     if telemetry::enabled() {
         let m = telemetry::metrics();
@@ -1056,6 +1198,8 @@ fn pump_events(inner: &Inner, id: JobId, rx: mpsc::Receiver<ProgressEvent>) {
     while let Ok(event) = rx.recv() {
         let mut jobs = inner.jobs.lock().unwrap();
         let Some(job) = jobs.get_mut(&id) else { break };
+        let mut event = event;
+        job.rate.stamp(&mut event);
         if let Some(slot) = job.steps_done.get_mut(event.chain_id) {
             *slot = (*slot).max(event.step);
         }
@@ -1097,6 +1241,34 @@ mod tests {
         let status = server.status(id).unwrap();
         assert_eq!(status.chains_done, 2);
         assert_eq!(status.steps_done, 120);
+        server.shutdown();
+    }
+
+    #[test]
+    fn profiled_job_surfaces_final_diagnostics_and_observation() {
+        let server = JobServer::in_memory(2);
+        let mut spec = quick_spec("earthquake", 60, 2, 5);
+        spec.profile = true;
+        let id = server.submit(spec).unwrap();
+        let result = server.wait(id, Duration::from_secs(60)).unwrap();
+        assert_eq!(result.state, JobState::Done);
+        let obs = result.observation.expect("profiled job carries an observation");
+        assert_eq!(obs.backend, "sw");
+        assert!(obs.samples > 0);
+
+        // Finished jobs answer status with *final* full-trace
+        // diagnostics, and the stats verb summarizes the same.
+        let status = server.status(id).unwrap();
+        assert!(status.min_ess.is_some(), "final min-ESS for a finished job");
+        let stats = server.stats();
+        let summary = stats.jobs.iter().find(|j| j.id == id).unwrap();
+        assert_eq!(summary.verdict, Some(obs.verdict.name()));
+        assert_eq!(summary.min_ess, status.min_ess);
+
+        // An unprofiled sibling gets diagnostics but no observation.
+        let id2 = server.submit(quick_spec("earthquake", 60, 2, 5)).unwrap();
+        let result2 = server.wait(id2, Duration::from_secs(60)).unwrap();
+        assert!(result2.observation.is_none());
         server.shutdown();
     }
 

@@ -27,7 +27,9 @@
 //! Non-finite floats (an untouched best objective is −∞) serialize as
 //! `null`.
 
-use super::{JobId, JobResult, JobSpec, JobStatus, Priority, ServeBackend, ServerStats};
+use super::{
+    JobId, JobResult, JobSpec, JobStatSummary, JobStatus, Priority, ServeBackend, ServerStats,
+};
 use crate::engine::error::Mc2aError;
 use crate::engine::observer::StreamEvent;
 use crate::mcmc::{AlgoKind, SamplerKind};
@@ -275,6 +277,9 @@ pub fn parse_request(line: &str) -> Result<Request, Mc2aError> {
             if let Some(JVal::Bool(b)) = get("trace") {
                 spec.trace = *b;
             }
+            if let Some(JVal::Bool(b)) = get("profile") {
+                spec.profile = *b;
+            }
             Ok(Request::Submit(spec))
         }
         "status" => Ok(Request::Status { job: u64_of("job")? }),
@@ -309,6 +314,13 @@ fn jopt_str(s: &Option<String>) -> String {
     }
 }
 
+fn jopt_num(x: Option<f64>) -> String {
+    match x {
+        Some(v) => jnum(v),
+        None => "null".to_string(),
+    }
+}
+
 /// `{"ok":true,"job":N}` — submit accepted.
 pub fn ok_submit(id: JobId) -> String {
     format!("{{\"ok\":true,\"job\":{id}}}")
@@ -335,25 +347,48 @@ pub fn ok_metrics(text: &str) -> String {
     format!("{{\"ok\":true,\"metrics\":{}}}", jstr(text))
 }
 
-/// `{"ok":true,"jobs":N,…}` — aggregate server statistics.
+/// `{"ok":true,"jobs":N,…,"job_stats":[…]}` — aggregate server
+/// statistics plus one convergence/profile summary per job.
 pub fn ok_stats(s: &ServerStats) -> String {
+    let jobs: Vec<String> = s.jobs.iter().map(job_stat_json).collect();
     format!(
         "{{\"ok\":true,\"jobs\":{},\"queued\":{},\"running\":{},\"done\":{},\
-         \"cancelled\":{},\"failed\":{},\"chains_pending\":{},\"threads\":{}}}",
-        s.jobs_total, s.queued, s.running, s.done, s.cancelled, s.failed, s.chains_pending,
+         \"cancelled\":{},\"failed\":{},\"chains_pending\":{},\"threads\":{},\
+         \"job_stats\":[{}]}}",
+        s.jobs_total,
+        s.queued,
+        s.running,
+        s.done,
+        s.cancelled,
+        s.failed,
+        s.chains_pending,
         s.threads,
+        jobs.join(","),
+    )
+}
+
+fn job_stat_json(j: &JobStatSummary) -> String {
+    let verdict = match j.verdict {
+        Some(v) => jstr(v),
+        None => "null".to_string(),
+    };
+    format!(
+        "{{\"job\":{},\"state\":{},\"r_hat\":{},\"min_ess\":{},\"verdict\":{},\
+         \"drift_pct\":{}}}",
+        j.id,
+        jstr(j.state.name()),
+        jopt_num(j.r_hat),
+        jopt_num(j.min_ess),
+        verdict,
+        jopt_num(j.drift_pct),
     )
 }
 
 fn status_json(s: &JobStatus) -> String {
-    let r_hat = match s.r_hat {
-        Some(r) => jnum(r),
-        None => "null".to_string(),
-    };
     format!(
         "{{\"job\":{},\"workload\":{},\"state\":{},\"priority\":{},\"backend\":{},\
          \"algo\":{},\"chains\":{},\"chains_done\":{},\"steps\":{},\"steps_done\":{},\
-         \"best_objective\":{},\"r_hat\":{},\"error\":{}}}",
+         \"best_objective\":{},\"r_hat\":{},\"min_ess\":{},\"error\":{}}}",
         s.id,
         jstr(&s.workload),
         jstr(s.state.name()),
@@ -365,7 +400,8 @@ fn status_json(s: &JobStatus) -> String {
         s.steps,
         s.steps_done,
         jnum(s.best_objective),
-        r_hat,
+        jopt_num(s.r_hat),
+        jopt_num(s.min_ess),
         jopt_str(&s.error),
     )
 }
@@ -412,13 +448,21 @@ pub fn ok_result(r: &JobResult) -> String {
             obj
         })
         .collect();
+    // Profiled jobs append their measured-roofline observation (one
+    // nested object); unprofiled responses are unchanged.
+    let observation = match &r.observation {
+        Some(obs) => format!(",\"observation\":{}", obs.to_json()),
+        None => String::new(),
+    };
     format!(
-        "{{\"ok\":true,\"job\":{},\"state\":{},\"best_objective\":{},\"error\":{},\"chains\":[{}]}}",
+        "{{\"ok\":true,\"job\":{},\"state\":{},\"best_objective\":{},\"error\":{},\
+         \"chains\":[{}]{}}}",
         r.id,
         jstr(r.state.name()),
         jnum(r.best_objective),
         jopt_str(&r.error),
         chains.join(","),
+        observation,
     )
 }
 
@@ -455,13 +499,16 @@ pub fn event_line(ev: &StreamEvent) -> String {
     match ev {
         StreamEvent::Progress(p) => format!(
             "{{\"event\":\"progress\",\"chain\":{},\"step\":{},\"beta\":{},\
-             \"objective\":{},\"best\":{},\"updates\":{}}}",
+             \"objective\":{},\"best\":{},\"updates\":{},\"steps_per_sec\":{},\
+             \"eta_seconds\":{}}}",
             p.chain_id,
             p.step,
             jnum(p.beta as f64),
             jnum(p.objective),
             jnum(p.best_objective),
             p.updates,
+            jopt_num(p.steps_per_sec),
+            jopt_num(p.eta_seconds),
         ),
         StreamEvent::Diagnostics(d) => {
             let r_hat = match d.r_hat {
@@ -513,6 +560,9 @@ pub fn submit_line(spec: &JobSpec) -> String {
     }
     if spec.trace {
         line.push_str(",\"trace\":true");
+    }
+    if spec.profile {
+        line.push_str(",\"profile\":true");
     }
     line.push('}');
     line
@@ -639,6 +689,7 @@ mod tests {
         spec.observe_every = 50;
         spec.pas_flips = Some(3);
         spec.trace = true;
+        spec.profile = true;
         let parsed = match parse_request(&submit_line(&spec)).unwrap() {
             Request::Submit(s) => s,
             other => panic!("expected submit, got {other:?}"),
@@ -655,6 +706,7 @@ mod tests {
         assert_eq!(parsed.observe_every, 50);
         assert_eq!(parsed.pas_flips, Some(3));
         assert!(parsed.trace);
+        assert!(parsed.profile);
     }
 
     #[test]
@@ -664,24 +716,69 @@ mod tests {
     }
 
     #[test]
-    fn stats_response_is_flat_json() {
+    fn stats_response_carries_aggregates_and_job_summaries() {
         let s = ServerStats {
             jobs_total: 3,
             queued: 1,
             running: 1,
             done: 1,
             threads: 4,
+            jobs: vec![JobStatSummary {
+                id: 7,
+                state: crate::engine::server::JobState::Done,
+                r_hat: Some(1.01),
+                min_ess: Some(42.5),
+                verdict: Some("su-bound"),
+                drift_pct: Some(-12.5),
+            }],
             ..ServerStats::default()
         };
         let line = ok_stats(&s);
         assert!(response_is_ok(&line));
-        let fields = parse_flat_object(&line).unwrap();
-        let get = |key: &str| {
-            fields.iter().find(|(k, _)| k == key).map(|(_, v)| v.clone()).unwrap()
+        assert!(line.contains("\"jobs\":3"), "{line}");
+        assert!(line.contains("\"running\":1"), "{line}");
+        assert!(line.contains("\"threads\":4"), "{line}");
+        assert!(
+            line.contains(
+                "\"job_stats\":[{\"job\":7,\"state\":\"done\",\"r_hat\":1.01,\
+                 \"min_ess\":42.5,\"verdict\":\"su-bound\",\"drift_pct\":-12.5}]"
+            ),
+            "{line}"
+        );
+        // A job with nothing to report serializes every summary field
+        // as null rather than omitting it.
+        let bare = JobStatSummary {
+            id: 2,
+            state: crate::engine::server::JobState::Running,
+            r_hat: None,
+            min_ess: None,
+            verdict: None,
+            drift_pct: None,
         };
-        assert_eq!(get("jobs"), JVal::Num(3.0));
-        assert_eq!(get("running"), JVal::Num(1.0));
-        assert_eq!(get("threads"), JVal::Num(4.0));
+        assert!(job_stat_json(&bare).contains("\"r_hat\":null"));
+        assert!(job_stat_json(&bare).contains("\"verdict\":null"));
+    }
+
+    #[test]
+    fn progress_events_carry_rate_and_eta_when_stamped() {
+        let mut p = crate::engine::observer::ProgressEvent {
+            chain_id: 0,
+            step: 50,
+            beta: 1.0,
+            objective: 1.0,
+            best_objective: 1.0,
+            updates: 50,
+            steps_per_sec: None,
+            eta_seconds: None,
+        };
+        let line = event_line(&StreamEvent::Progress(p));
+        assert!(line.contains("\"steps_per_sec\":null"), "{line}");
+        assert!(line.contains("\"eta_seconds\":null"), "{line}");
+        p.steps_per_sec = Some(250.0);
+        p.eta_seconds = Some(0.2);
+        let line = event_line(&StreamEvent::Progress(p));
+        assert!(line.contains("\"steps_per_sec\":250"), "{line}");
+        assert!(line.contains("\"eta_seconds\":0.2"), "{line}");
     }
 
     #[test]

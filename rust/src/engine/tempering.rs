@@ -122,6 +122,8 @@ pub(crate) fn run_tempered<'m>(
                 objective: s.objective,
                 best_objective: s.best,
                 updates: s.updates,
+                steps_per_sec: None,
+                eta_seconds: None,
             });
         }
         // Swap only at true boundaries (a truncated final segment

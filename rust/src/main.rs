@@ -11,7 +11,7 @@
 //!          [--adaptive reheat|plateau]
 //!          [--temper K] [--swap-every N] [--ladder geom:FROM:TO|explicit:B1,B2,…]
 //!          [--swap-target RATE] [--seed S] [--observe N]
-//!          [--save-state PATH] [--init-from PATH] [--trace OUT.json]
+//!          [--save-state PATH] [--init-from PATH] [--trace OUT.json] [--profile]
 //! mc2a serve [--addr HOST:PORT] [--dir JOBDIR] [--threads N] [--recover]
 //!            [--metrics-addr HOST:PORT] [--trace OUT.json]
 //! mc2a client [--addr HOST:PORT]
@@ -19,8 +19,12 @@
 //! mc2a check (--workload <name> | --all) [--algo mh|gibbs|bg|ag|pas]
 //!            [--sampler cdf|gumbel|lut|lut:SIZE:BITS] [--cores C]
 //!            [--hw paper|toy|t=..,k=..,…] [--format human|json] [--heavy]
+//! mc2a profile (--workload <name> | --all) [--backends sw,batched,sim,multicore]
+//!              [--steps N] [--chains N] [--seed S] [--cores C]
+//!              [--format human|json] [--max-drift PCT]
 //! mc2a workloads
-//! mc2a roofline [--workload <name>] [--cores C]
+//! mc2a roofline [--workload <name>] [--cores C] [--format human|json]
+//!               [--observed PROFILE_roofline.json]
 //! mc2a dse
 //! mc2a runtime-check [--artifacts DIR]
 //! ```
@@ -61,7 +65,7 @@ USAGE:
            [--adaptive reheat|plateau]
            [--temper K] [--swap-every N] [--ladder geom:FROM:TO|explicit:B1,B2,…]
            [--swap-target RATE] [--seed S] [--observe N]
-           [--save-state PATH] [--init-from PATH] [--trace OUT.json]
+           [--save-state PATH] [--init-from PATH] [--trace OUT.json] [--profile]
   mc2a serve [--addr HOST:PORT] [--dir JOBDIR] [--threads N]
              [--recover] [--force-backend sw|sim]
              [--metrics-addr HOST:PORT] [--trace OUT.json]
@@ -70,14 +74,19 @@ USAGE:
               submit: --workload <name> [--steps N] [--chains N] [--seed S]
                       [--beta B] [--algo A] [--sampler S] [--observe N]
                       [--backend sw|sim] [--priority low|normal|high] [--trace]
+                      [--profile]
               status [--job N] | cancel/stream --job N
               result --job N [--wait] [--timeout SECS]
   mc2a check (--workload <name> | --all) [--algo mh|gibbs|bg|ag|pas]
              [--sampler cdf|gumbel|lut|lut:SIZE:BITS] [--cores C]
              [--hw paper|toy|t=..,k=..,s=..,m=..,b=..,banks=..,regs=..,lut=..,lutbits=..,maxdist=..]
              [--format human|json] [--heavy]
+  mc2a profile (--workload <name> | --all) [--backends sw,batched,sim,multicore]
+               [--steps N] [--chains N] [--seed S] [--cores C]
+               [--format human|json] [--max-drift PCT]
   mc2a workloads
-  mc2a roofline [--workload <name>] [--cores C]
+  mc2a roofline [--workload <name>] [--cores C] [--format human|json]
+                [--observed PROFILE_roofline.json]
   mc2a dse
   mc2a runtime-check [--artifacts DIR]
 
@@ -352,6 +361,12 @@ fn cmd_run(args: &[String]) -> Result<(), Mc2aError> {
         telemetry::metrics().set_enabled(true);
         telemetry::tracer().start();
     }
+    // Measured-roofline profiling is opt-in and purely post-run: the
+    // finished chains are projected onto the paper's roofline after the
+    // run, so results are bit-identical with or without the flag.
+    if has_flag(args, "--profile") {
+        mc2a::engine::profile::set_enabled(true);
+    }
     let mut engine = builder.build()?;
     println!(
         "workload={} nodes={} edges={} algo={} sampler={} backend={} steps={steps} chains={chains}",
@@ -443,6 +458,9 @@ fn cmd_run(args: &[String]) -> Result<(), Mc2aError> {
     if let Some(r) = metrics.split_r_hat() {
         println!("split R-hat {:.4}, min ESS {:.1}", r, metrics.min_ess());
     }
+    if let Some(obs) = engine.observation() {
+        println!("{}", obs.render_human());
+    }
     if let Some(path) = flag_value(args, "--save-state") {
         // On accelerator backends `best_x` is the *final* state, whose
         // objective can trail `best_objective`; the checkpoint contract
@@ -498,12 +516,103 @@ fn cmd_workloads() {
     }
 }
 
+/// Parsed fields of one measured observation from a `--observed`
+/// profile document, kept alongside its raw JSON for re-embedding.
+struct ObservedEntry {
+    raw: String,
+    fields: Vec<(String, proto::JVal)>,
+}
+
+impl ObservedEntry {
+    fn num(&self, key: &str) -> Option<f64> {
+        self.fields.iter().find_map(|(k, v)| match v {
+            proto::JVal::Num(n) if k == key => Some(*n),
+            _ => None,
+        })
+    }
+
+    fn str(&self, key: &str) -> Option<&str> {
+        self.fields.iter().find_map(|(k, v)| match v {
+            proto::JVal::Str(s) if k == key => Some(s.as_str()),
+            _ => None,
+        })
+    }
+}
+
+/// Load a `PROFILE_roofline.json` document and keep the observations
+/// of one workload.
+fn load_observed(path: &str, workload: &str) -> Result<Vec<ObservedEntry>, Mc2aError> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Mc2aError::InvalidConfig(format!("reading {path}: {e}")))?;
+    let mut out = Vec::new();
+    for raw in mc2a::roofline::observe::extract_observations(&text) {
+        let fields = proto::parse_flat_object(&raw).map_err(|e| {
+            Mc2aError::InvalidConfig(format!("parsing observation in {path}: {e}"))
+        })?;
+        let entry = ObservedEntry { raw, fields };
+        if entry.str("workload") == Some(workload) {
+            out.push(entry);
+        }
+    }
+    Ok(out)
+}
+
 fn cmd_roofline(args: &[String]) -> Result<(), Mc2aError> {
+    let format = flag_value(args, "--format").unwrap_or_else(|| "human".into());
+    if format != "human" && format != "json" {
+        return Err(Mc2aError::InvalidConfig(format!(
+            "unknown format {format:?} (human|json)"
+        )));
+    }
+    let observed_path = flag_value(args, "--observed");
     if let Some(wname) = flag_value(args, "--workload") {
         let wl = registry::lookup(&wname)?;
         let hw = HwConfig::paper_default();
         let p = WorkloadProfile::from_model(wl.model.as_ref(), wl.algorithm);
         let r = roofline::evaluate(&hw, &p);
+        let multicore = match parsed_flag::<usize>(args, "--cores")? {
+            Some(cores) => {
+                let g = wl.model.interaction();
+                mc2a::sim::multicore::validate_shard_config(g.num_nodes(), wl.algorithm, cores)
+                    .map_err(Mc2aError::InvalidConfig)?;
+                let bf = mc2a::graph::partition_balanced(g, cores).boundary_fraction(g);
+                let m = roofline::evaluate_multicore(&MultiHwConfig::new(hw, cores), &p, bf);
+                Some((m, bf))
+            }
+            None => None,
+        };
+        let observed = match &observed_path {
+            Some(path) => load_observed(path, wl.name)?,
+            None => Vec::new(),
+        };
+        if format == "json" {
+            let obs: Vec<&str> = observed.iter().map(|e| e.raw.as_str()).collect();
+            let mc = match &multicore {
+                Some((m, bf)) => format!(
+                    ",\"cores\":{},\"multicore_tp_gsps\":{},\"linear_tp_gsps\":{},\
+                     \"xbar_roof\":{},\"boundary_fraction\":{},\"interconnect_bound\":{}",
+                    m.cores, m.tp_gsps, m.linear_tp, m.xbar_roof, bf, m.interconnect_bound
+                ),
+                None => String::new(),
+            };
+            println!(
+                "{{\"workload\":\"{}\",\"ci\":{},\"mi\":{},\"dist\":{},\"spatial\":{},\
+                 \"tp_gsps\":{},\"su_roof\":{},\"cu_roof\":{},\"mem_roof\":{},\
+                 \"bottleneck\":\"{:?}\"{mc},\"observed\":[{}]}}",
+                wl.name,
+                p.ci,
+                p.mi,
+                p.dist_size,
+                p.spatial,
+                r.tp_gsps,
+                r.su_roof,
+                r.cu_roof,
+                r.mem_roof,
+                r.bottleneck,
+                obs.join(","),
+            );
+            return Ok(());
+        }
         println!(
             "workload={} CI={:.5} MI={:.5} dist={:.0} mode={}",
             wl.name,
@@ -516,12 +625,7 @@ fn cmd_roofline(args: &[String]) -> Result<(), Mc2aError> {
             "TP={:.4} GS/s (SU {:.4} / CU {:.4} / MEM {:.4}) bottleneck={:?}",
             r.tp_gsps, r.su_roof, r.cu_roof, r.mem_roof, r.bottleneck
         );
-        if let Some(cores) = parsed_flag::<usize>(args, "--cores")? {
-            let g = wl.model.interaction();
-            mc2a::sim::multicore::validate_shard_config(g.num_nodes(), wl.algorithm, cores)
-                .map_err(Mc2aError::InvalidConfig)?;
-            let bf = mc2a::graph::partition_balanced(g, cores).boundary_fraction(g);
-            let m = roofline::evaluate_multicore(&MultiHwConfig::new(hw, cores), &p, bf);
+        if let Some((m, bf)) = &multicore {
             println!(
                 "C={} cores: TP={:.4} GS/s (linear {:.4} / xbar roof {:.4}, \
                  boundary fraction {:.3}) bottleneck={}",
@@ -537,12 +641,168 @@ fn cmd_roofline(args: &[String]) -> Result<(), Mc2aError> {
                 }
             );
         }
+        if observed_path.is_some() && observed.is_empty() {
+            println!("observed: no measurements for {} in the profile document", wl.name);
+        }
+        // Measured-vs-predicted comparison rows, one per observation.
+        for e in &observed {
+            let fnum = |v: Option<f64>| match v {
+                Some(x) => format!("{x:.4}"),
+                None => "n/a".to_string(),
+            };
+            let drift = match e.num("drift_pct") {
+                Some(d) => format!("{d:+.1}%"),
+                None => "n/a".to_string(),
+            };
+            println!(
+                "observed[{}] measured {} GS/s vs predicted {} GS/s  drift {}  \
+                 verdict {} (model: {})",
+                e.str("backend").unwrap_or("?"),
+                fnum(e.num("measured_gsps")),
+                fnum(e.num("predicted_gsps")),
+                drift,
+                e.str("verdict").unwrap_or("?"),
+                e.str("predicted_verdict").unwrap_or("?"),
+            );
+        }
     } else if has_flag(args, "--cores") {
         return Err(Mc2aError::InvalidConfig(
             "--cores needs a workload point to evaluate (add --workload <name>)".into(),
         ));
+    } else if observed_path.is_some() || format == "json" {
+        return Err(Mc2aError::InvalidConfig(
+            "--observed/--format json need a workload point (add --workload <name>)".into(),
+        ));
     } else {
         println!("{}", bench::fig6());
+    }
+    Ok(())
+}
+
+/// `mc2a profile`: sweep one-or-all registry workloads across the
+/// execution backends with the measured-roofline profiler on, emit
+/// each [`mc2a::roofline::RooflineObservation`], and drop
+/// `PROFILE_roofline.json` at the repo root for `mc2a roofline
+/// --observed` and CI drift gating.
+fn cmd_profile(args: &[String]) -> Result<(), Mc2aError> {
+    let all = has_flag(args, "--all");
+    let wname = flag_value(args, "--workload");
+    if all == wname.is_some() {
+        return Err(Mc2aError::InvalidConfig(
+            "profile needs exactly one target: --workload <name> or --all".into(),
+        ));
+    }
+    let format = flag_value(args, "--format").unwrap_or_else(|| "human".into());
+    if format != "human" && format != "json" {
+        return Err(Mc2aError::InvalidConfig(format!(
+            "unknown format {format:?} (human|json)"
+        )));
+    }
+    let steps: usize = parsed_flag(args, "--steps")?.unwrap_or(40);
+    let chains: usize = parsed_flag(args, "--chains")?.unwrap_or(2);
+    let seed: u64 = parsed_flag(args, "--seed")?.unwrap_or(1);
+    let cores: usize = parsed_flag(args, "--cores")?.unwrap_or(2);
+    let max_drift: Option<f64> = parsed_flag(args, "--max-drift")?;
+    let backends: Vec<String> = flag_value(args, "--backends")
+        .unwrap_or_else(|| "sw,batched,sim,multicore".into())
+        .split(',')
+        .map(|b| b.trim().to_string())
+        .filter(|b| !b.is_empty())
+        .collect();
+    if backends.is_empty() {
+        return Err(Mc2aError::InvalidConfig("--backends got an empty list".into()));
+    }
+
+    let mut names: Vec<String> = Vec::new();
+    if let Some(name) = &wname {
+        names.push(registry::lookup(name)?.name.to_string());
+    } else {
+        for e in registry::REGISTRY {
+            if !e.heavy {
+                names.push(e.name.to_string());
+            }
+        }
+    }
+
+    mc2a::engine::profile::set_enabled(true);
+    let hw = HwConfig::paper_default();
+    let mut observations = Vec::new();
+    let mut skipped = 0usize;
+    for name in &names {
+        for backend in &backends {
+            if backend == "multicore" {
+                // Sweeps skip unshardable workload × core combinations
+                // instead of erroring, mirroring `mc2a check`.
+                let wl = registry::lookup(name)?;
+                if mc2a::sim::multicore::validate_shard_config(
+                    wl.model.num_vars(),
+                    wl.algorithm,
+                    cores,
+                )
+                .is_err()
+                {
+                    skipped += 1;
+                    continue;
+                }
+            }
+            let mut builder = Engine::for_workload(name)?.steps(steps).chains(chains).seed(seed);
+            builder = match backend.as_str() {
+                "sw" | "software" => builder.software(),
+                "batched" => builder.batched(),
+                "sim" | "accel" | "accelerator" => builder.accelerator(hw),
+                "multicore" => builder.multicore(hw).cores(cores),
+                other => {
+                    return Err(Mc2aError::InvalidConfig(format!(
+                        "unknown backend {other:?} (sw|batched|sim|multicore)"
+                    )))
+                }
+            };
+            let mut engine = builder.build()?;
+            engine.run()?;
+            let obs = engine.observation().cloned().ok_or_else(|| {
+                Mc2aError::InvalidConfig("profiling produced no observation".into())
+            })?;
+            if format == "human" {
+                println!("{}", obs.render_human());
+            }
+            observations.push(obs);
+        }
+    }
+
+    let body: Vec<String> = observations.iter().map(|o| o.to_json()).collect();
+    let doc = format!("{{\"profile\":[{}],\"skipped\":{skipped}}}", body.join(","));
+    if format == "json" {
+        println!("{doc}");
+    }
+    let note = bench::write_bench_artifact("PROFILE_roofline.json", &doc);
+    eprintln!(
+        "mc2a profile: {} observation(s), {skipped} skipped; {note}",
+        observations.len()
+    );
+
+    // The CI drift gate: only cycle-domain (simulated) observations
+    // are deterministic enough to gate on; wall-clock backends vary
+    // with host load. NaN drift (no prediction) also fails the gate.
+    if let Some(tol) = max_drift {
+        let violations: Vec<String> = observations
+            .iter()
+            .filter(|o| {
+                let within = o.drift.drift_pct.abs() <= tol;
+                o.cycle_domain && !within
+            })
+            .map(|o| {
+                format!(
+                    "{} on {}: measured-vs-predicted drift {:+.1}% exceeds ±{tol}%",
+                    o.workload, o.backend, o.drift.drift_pct
+                )
+            })
+            .collect();
+        if !violations.is_empty() {
+            return Err(Mc2aError::InvalidConfig(format!(
+                "model drift gate failed:\n  {}",
+                violations.join("\n  ")
+            )));
+        }
     }
     Ok(())
 }
@@ -913,6 +1173,9 @@ fn cmd_client(args: &[String]) -> Result<(), Mc2aError> {
             if has_flag(args, "--trace") {
                 spec.trace = true;
             }
+            if has_flag(args, "--profile") {
+                spec.profile = true;
+            }
             proto::submit_line(&spec)
         }
         "status" => proto::status_line(parsed_flag(args, "--job")?),
@@ -971,6 +1234,7 @@ fn main() {
             Ok(())
         }
         Some("check") => cmd_check(&args[1..]),
+        Some("profile") => cmd_profile(&args[1..]),
         Some("roofline") => cmd_roofline(&args[1..]),
         Some("dse") => {
             println!("{}", bench::fig11());

@@ -12,8 +12,10 @@
 //! names the bottleneck.
 
 pub mod dse;
+pub mod observe;
 
 pub use dse::{area_units, dse_sweep, DseCandidate, DseResult};
+pub use observe::{DriftReport, MeasuredBoundedness, MeasuredCounters, RooflineObservation};
 
 use crate::energy::EnergyModel;
 use crate::isa::{HwConfig, MultiHwConfig};

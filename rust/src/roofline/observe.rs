@@ -1,0 +1,648 @@
+//! The measured side of the 3D roofline: where a run *actually* was
+//! bound, projected onto the same axes as the a-priori
+//! [`evaluate`](super::evaluate) prediction.
+//!
+//! [`super`] answers "where *should* this workload sit on this
+//! hardware"; this module answers "where did it sit when we ran it".
+//! `engine::profile` accumulates [`MeasuredCounters`] from whichever
+//! backend executed the run — cycle-accurate utilization breakdowns
+//! from the simulators, op/byte/sample totals and wall-clock from the
+//! software paths — and the pure functions here turn them into a
+//! [`MeasuredBoundedness`] verdict plus a [`DriftReport`] against the
+//! predicted [`RooflinePoint`](super::RooflinePoint). Everything in
+//! this module is arithmetic over already-collected counters: nothing
+//! touches an RNG stream, a float reduction order, or a hot loop.
+
+use super::Bottleneck;
+
+/// Agreement band shared with the roofline apex rule: a runner-up
+/// busy-fraction within 10% of the leader means no single unit
+/// dominates.
+const BALANCE_RATIO: f64 = 0.9;
+
+/// Which unit a run was measured to be bound on.
+///
+/// The first four mirror the roofline's roofs (CU, SU, memory) plus
+/// the multi-core crossbar/barrier axis; `Balanced` means no unit's
+/// busy share cleared the others by more than the 10% apex band.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MeasuredBoundedness {
+    /// Compute units dominated the cycle budget.
+    CuBound,
+    /// The sampling unit (tree-PU) dominated.
+    SuBound,
+    /// Memory traffic (busy + bandwidth/bank stalls) dominated.
+    MemoryBound,
+    /// Cross-core sync barriers + crossbar transfers dominated.
+    InterconnectBound,
+    /// No single unit dominated (within the 10% band), or no signal.
+    Balanced,
+}
+
+impl MeasuredBoundedness {
+    /// Stable lowercase name used in JSON records and metric labels.
+    pub fn name(&self) -> &'static str {
+        match self {
+            MeasuredBoundedness::CuBound => "cu-bound",
+            MeasuredBoundedness::SuBound => "su-bound",
+            MeasuredBoundedness::MemoryBound => "memory-bound",
+            MeasuredBoundedness::InterconnectBound => "interconnect-bound",
+            MeasuredBoundedness::Balanced => "balanced",
+        }
+    }
+
+    /// Numeric code for the Prometheus boundedness gauge (labels name
+    /// the verdict; the value makes it plottable).
+    pub fn code(&self) -> f64 {
+        match self {
+            MeasuredBoundedness::CuBound => 1.0,
+            MeasuredBoundedness::SuBound => 2.0,
+            MeasuredBoundedness::MemoryBound => 3.0,
+            MeasuredBoundedness::InterconnectBound => 4.0,
+            MeasuredBoundedness::Balanced => 0.0,
+        }
+    }
+
+    /// Project an a-priori [`Bottleneck`] verdict onto the measured
+    /// vocabulary (the prediction has no interconnect arm; that comes
+    /// from [`super::MultiCorePoint::interconnect_bound`]).
+    pub fn from_predicted(b: Bottleneck) -> MeasuredBoundedness {
+        match b {
+            Bottleneck::SamplerBound => MeasuredBoundedness::SuBound,
+            Bottleneck::ComputeBound => MeasuredBoundedness::CuBound,
+            Bottleneck::MemoryBound => MeasuredBoundedness::MemoryBound,
+            Bottleneck::Balanced => MeasuredBoundedness::Balanced,
+        }
+    }
+}
+
+/// Raw measured totals for one run, summed over every chain the
+/// backend executed. Software backends fill the op/byte/sample/wall
+/// fields; the simulators additionally fill the cycle-domain
+/// breakdown (everything from `cycles` down).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MeasuredCounters {
+    /// CU ops executed (from per-update `OpCost` accounting).
+    pub ops: u64,
+    /// Bytes moved (from per-update `OpCost` accounting).
+    pub bytes: u64,
+    /// Categorical samples drawn.
+    pub samples: u64,
+    /// RV updates committed.
+    pub updates: u64,
+    /// Wall-clock seconds (software domain; the sim domain divides
+    /// cycles by the modeled clock instead).
+    pub wall_seconds: f64,
+    /// Total simulated core-cycles (0 on software backends). On
+    /// multi-core runs this sums barrier-aligned per-core cycles
+    /// (C × makespan) — the denominator for the busy fractions.
+    pub cycles: u64,
+    /// Simulated seconds on the makespan clock, summed over chains —
+    /// the denominator for cycle-domain throughput (0 on software
+    /// backends).
+    pub sim_seconds: f64,
+    /// Cycles with at least one CU lane busy.
+    pub cu_busy: u64,
+    /// Cycles with the SU tree busy.
+    pub su_busy: u64,
+    /// Cycles with the memory port busy.
+    pub mem_busy: u64,
+    /// Cycles stalled on memory bandwidth.
+    pub stall_mem_bw: u64,
+    /// Cycles stalled on register-file bank conflicts.
+    pub stall_bank: u64,
+    /// Cycles stalled at cross-core sync barriers.
+    pub stall_sync: u64,
+    /// Cycles stalled on crossbar contention.
+    pub stall_xbar: u64,
+    /// Words crossing the shared crossbar.
+    pub xfer_words: u64,
+}
+
+impl MeasuredCounters {
+    /// Whether the cycle-domain breakdown carries any signal.
+    pub fn has_cycles(&self) -> bool {
+        self.cycles > 0
+    }
+
+    /// Measured compute intensity (samples per CU op); `None` when no
+    /// op accounting exists (the sims charge ops to the cycle model,
+    /// not `OpCost`).
+    pub fn measured_ci(&self) -> Option<f64> {
+        (self.ops > 0).then(|| self.samples as f64 / self.ops as f64)
+    }
+
+    /// Measured memory intensity (samples per byte); `None` without
+    /// byte accounting.
+    pub fn measured_mi(&self) -> Option<f64> {
+        (self.bytes > 0).then(|| self.samples as f64 / self.bytes as f64)
+    }
+}
+
+/// Classify a run from the busy-fraction of each unit (each in
+/// `[0, 1]`, fractions of the total cycle budget).
+///
+/// The interconnect wins ties at the top — if barriers + crossbar eat
+/// as much as the busiest functional unit, adding cores is already
+/// not paying. Among CU/SU/memory the leader names the verdict unless
+/// the runner-up is within the 10% apex band, which is `Balanced`
+/// (the golden configuration of Fig. 6d).
+pub fn classify(cu: f64, su: f64, mem: f64, interconnect: f64) -> MeasuredBoundedness {
+    let top = cu.max(su).max(mem).max(interconnect);
+    let has_signal = top > 0.0;
+    if !has_signal {
+        return MeasuredBoundedness::Balanced;
+    }
+    if interconnect >= top {
+        return MeasuredBoundedness::InterconnectBound;
+    }
+    let (leader, runner_up, verdict) = if su >= cu && su >= mem {
+        (su, cu.max(mem), MeasuredBoundedness::SuBound)
+    } else if cu >= mem {
+        (cu, su.max(mem), MeasuredBoundedness::CuBound)
+    } else {
+        (mem, cu.max(su), MeasuredBoundedness::MemoryBound)
+    };
+    if runner_up / leader > BALANCE_RATIO {
+        MeasuredBoundedness::Balanced
+    } else {
+        verdict
+    }
+}
+
+/// [`classify`] over a cycle-domain counter set: memory groups its
+/// busy port with bandwidth/bank stalls, interconnect groups sync
+/// barriers with crossbar contention.
+pub fn classify_cycles(c: &MeasuredCounters) -> MeasuredBoundedness {
+    if c.cycles == 0 {
+        return MeasuredBoundedness::Balanced;
+    }
+    let total = c.cycles as f64;
+    classify(
+        c.cu_busy as f64 / total,
+        c.su_busy as f64 / total,
+        (c.mem_busy + c.stall_mem_bw + c.stall_bank) as f64 / total,
+        (c.stall_sync + c.stall_xbar) as f64 / total,
+    )
+}
+
+/// Measured-vs-predicted comparison for one run.
+#[derive(Clone, Copy, Debug)]
+pub struct DriftReport {
+    /// The roofline's predicted throughput, GS/s.
+    pub predicted_gsps: f64,
+    /// What the run delivered, GS/s.
+    pub measured_gsps: f64,
+    /// Signed drift, percent: `(measured − predicted) / predicted ×
+    /// 100`. Negative means the run undershot the roof (expected —
+    /// the roofline is an upper bound); positive means the model is
+    /// missing something.
+    pub drift_pct: f64,
+    /// The a-priori bottleneck, projected onto the measured
+    /// vocabulary.
+    pub predicted: MeasuredBoundedness,
+    /// Whether the measured verdict named the same unit.
+    pub agree: bool,
+}
+
+impl DriftReport {
+    /// Compare a measurement against a prediction.
+    pub fn new(
+        predicted_gsps: f64,
+        measured_gsps: f64,
+        predicted: MeasuredBoundedness,
+        measured: MeasuredBoundedness,
+    ) -> DriftReport {
+        let drift_pct = if predicted_gsps > 0.0 {
+            (measured_gsps - predicted_gsps) / predicted_gsps * 100.0
+        } else {
+            f64::NAN
+        };
+        DriftReport {
+            predicted_gsps,
+            measured_gsps,
+            drift_pct,
+            predicted,
+            agree: predicted == measured,
+        }
+    }
+}
+
+/// One run projected onto the measured roofline: identity, measured
+/// axes, verdict, and the drift against the a-priori prediction.
+///
+/// Serialized as one *flat* JSON object (the server protocol's
+/// flat-object parser must be able to read it back), collected into
+/// `PROFILE_roofline.json` by `mc2a profile`.
+#[derive(Clone, Debug)]
+pub struct RooflineObservation {
+    /// Registry workload name.
+    pub workload: String,
+    /// Backend short name (`sw` / `batched` / `sim` / `multicore` /
+    /// `runtime`).
+    pub backend: String,
+    /// Algorithm short name.
+    pub algo: String,
+    /// Sampler short name.
+    pub sampler: String,
+    /// Chains in the run.
+    pub chains: usize,
+    /// Steps per chain.
+    pub steps: usize,
+    /// Cores (1 except on the multicore backend).
+    pub cores: usize,
+    /// Total categorical samples drawn across chains.
+    pub samples: u64,
+    /// Total RV updates committed.
+    pub updates: u64,
+    /// Wall-clock seconds for the run (host time even for sims).
+    pub wall_seconds: f64,
+    /// Measured throughput, GS/s. Cycle-domain (deterministic) when
+    /// `cycle_domain`, wall-clock otherwise.
+    pub measured_gsps: f64,
+    /// Measured compute intensity, samples/op (`None` without op
+    /// accounting).
+    pub measured_ci: Option<f64>,
+    /// Measured memory intensity, samples/byte.
+    pub measured_mi: Option<f64>,
+    /// Whether `measured_gsps` comes from simulated cycles (exactly
+    /// reproducible) rather than wall-clock.
+    pub cycle_domain: bool,
+    /// The measured boundedness verdict.
+    pub verdict: MeasuredBoundedness,
+    /// CU busy fraction of the cycle budget (sim domain only).
+    pub cu_util: Option<f64>,
+    /// SU busy fraction (sim domain only).
+    pub su_util: Option<f64>,
+    /// Memory busy + stall fraction (sim domain only).
+    pub mem_util: Option<f64>,
+    /// Sync + crossbar stall fraction (sim domain only).
+    pub interconnect_frac: Option<f64>,
+    /// Measured vs predicted.
+    pub drift: DriftReport,
+    /// `compiler::analysis` MC2A023 cross-check: did static analysis
+    /// predict the interconnect to bind? `None` when the check does
+    /// not apply (single core / software).
+    pub xbar_predicted_bound: Option<bool>,
+}
+
+impl RooflineObservation {
+    /// Render as one flat JSON object (one line, parseable by the
+    /// server protocol's flat-object parser).
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(512);
+        s.push('{');
+        s.push_str(&format!("\"workload\":{}", jstr(&self.workload)));
+        s.push_str(&format!(",\"backend\":{}", jstr(&self.backend)));
+        s.push_str(&format!(",\"algo\":{}", jstr(&self.algo)));
+        s.push_str(&format!(",\"sampler\":{}", jstr(&self.sampler)));
+        s.push_str(&format!(",\"chains\":{}", self.chains));
+        s.push_str(&format!(",\"steps\":{}", self.steps));
+        s.push_str(&format!(",\"cores\":{}", self.cores));
+        s.push_str(&format!(",\"samples\":{}", self.samples));
+        s.push_str(&format!(",\"updates\":{}", self.updates));
+        s.push_str(&format!(",\"wall_seconds\":{}", jnum(self.wall_seconds)));
+        s.push_str(&format!(",\"measured_gsps\":{}", jnum(self.measured_gsps)));
+        s.push_str(&format!(",\"measured_ci\":{}", jopt(self.measured_ci)));
+        s.push_str(&format!(",\"measured_mi\":{}", jopt(self.measured_mi)));
+        s.push_str(&format!(",\"cycle_domain\":{}", self.cycle_domain));
+        s.push_str(&format!(",\"verdict\":{}", jstr(self.verdict.name())));
+        s.push_str(&format!(",\"cu_util\":{}", jopt(self.cu_util)));
+        s.push_str(&format!(",\"su_util\":{}", jopt(self.su_util)));
+        s.push_str(&format!(",\"mem_util\":{}", jopt(self.mem_util)));
+        s.push_str(&format!(
+            ",\"interconnect_frac\":{}",
+            jopt(self.interconnect_frac)
+        ));
+        s.push_str(&format!(
+            ",\"predicted_gsps\":{}",
+            jnum(self.drift.predicted_gsps)
+        ));
+        s.push_str(&format!(
+            ",\"predicted_verdict\":{}",
+            jstr(self.drift.predicted.name())
+        ));
+        s.push_str(&format!(",\"drift_pct\":{}", jnum(self.drift.drift_pct)));
+        s.push_str(&format!(",\"drift_agree\":{}", self.drift.agree));
+        match self.xbar_predicted_bound {
+            Some(b) => s.push_str(&format!(",\"xbar_predicted_bound\":{b}")),
+            None => s.push_str(",\"xbar_predicted_bound\":null"),
+        }
+        s.push('}');
+        s
+    }
+
+    /// Render a human-readable block for `mc2a run --profile` /
+    /// `mc2a profile --format human`.
+    pub fn render_human(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "profile {} [{}] algo={} sampler={} chains={} steps={} cores={}\n",
+            self.workload, self.backend, self.algo, self.sampler, self.chains, self.steps,
+            self.cores
+        ));
+        let domain = if self.cycle_domain { "cycle" } else { "wall" };
+        out.push_str(&format!(
+            "  measured   {:>12.6} GS/s ({domain} domain, {} samples, {:.3}s wall)\n",
+            self.measured_gsps, self.samples, self.wall_seconds
+        ));
+        out.push_str(&format!(
+            "  predicted  {:>12.6} GS/s  drift {:+.1}%\n",
+            self.drift.predicted_gsps, self.drift.drift_pct
+        ));
+        if let (Some(ci), Some(mi)) = (self.measured_ci, self.measured_mi) {
+            out.push_str(&format!(
+                "  intensity  CI {ci:.5} samples/op   MI {mi:.5} samples/byte\n"
+            ));
+        }
+        if let (Some(cu), Some(su), Some(mem), Some(icc)) =
+            (self.cu_util, self.su_util, self.mem_util, self.interconnect_frac)
+        {
+            out.push_str(&format!(
+                "  busy       CU {:.1}%  SU {:.1}%  mem {:.1}%  interconnect {:.1}%\n",
+                cu * 100.0,
+                su * 100.0,
+                mem * 100.0,
+                icc * 100.0
+            ));
+        }
+        out.push_str(&format!(
+            "  verdict    {} (predicted {}{})",
+            self.verdict.name(),
+            self.drift.predicted.name(),
+            match self.xbar_predicted_bound {
+                Some(true) => ", MC2A023: crossbar flagged",
+                Some(false) => ", MC2A023: clear",
+                None => "",
+            }
+        ));
+        out
+    }
+}
+
+fn jstr(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn jnum(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".into()
+    }
+}
+
+fn jopt(v: Option<f64>) -> String {
+    match v {
+        Some(v) => jnum(v),
+        None => "null".into(),
+    }
+}
+
+/// Split a `PROFILE_roofline.json` document into its per-observation
+/// flat-object substrings (the objects inside the top-level
+/// `"profile"` array). String-aware brace scan — observation objects
+/// are flat, so depth 2 inside the document is exactly one record.
+pub fn extract_observations(json: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut esc = false;
+    let mut start = None;
+    for (i, c) in json.char_indices() {
+        if in_str {
+            if esc {
+                esc = false;
+            } else if c == '\\' {
+                esc = true;
+            } else if c == '"' {
+                in_str = false;
+            }
+            continue;
+        }
+        match c {
+            '"' => in_str = true,
+            '{' => {
+                depth += 1;
+                if depth == 2 {
+                    start = Some(i);
+                }
+            }
+            '}' => {
+                if depth == 2 {
+                    if let Some(s) = start.take() {
+                        out.push(json[s..=i].to_string());
+                    }
+                }
+                depth = depth.saturating_sub(1);
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_names_the_dominant_unit() {
+        assert_eq!(classify(0.8, 0.2, 0.1, 0.0), MeasuredBoundedness::CuBound);
+        assert_eq!(classify(0.2, 0.9, 0.1, 0.05), MeasuredBoundedness::SuBound);
+        assert_eq!(
+            classify(0.2, 0.1, 0.7, 0.0),
+            MeasuredBoundedness::MemoryBound
+        );
+        assert_eq!(
+            classify(0.2, 0.1, 0.1, 0.5),
+            MeasuredBoundedness::InterconnectBound
+        );
+    }
+
+    #[test]
+    fn classify_balanced_cases() {
+        // No signal at all.
+        assert_eq!(classify(0.0, 0.0, 0.0, 0.0), MeasuredBoundedness::Balanced);
+        // Runner-up within the 10% band.
+        assert_eq!(classify(0.60, 0.58, 0.1, 0.0), MeasuredBoundedness::Balanced);
+        // Exact cu/su tie sits inside the band too.
+        assert_eq!(classify(0.5, 0.5, 0.1, 0.0), MeasuredBoundedness::Balanced);
+        // Just outside the band: the leader wins.
+        assert_eq!(classify(0.60, 0.50, 0.1, 0.0), MeasuredBoundedness::CuBound);
+    }
+
+    #[test]
+    fn interconnect_wins_ties_at_the_top() {
+        // Equal to the busiest functional unit → interconnect-bound
+        // (the point where adding cores stops paying).
+        assert_eq!(
+            classify(0.5, 0.3, 0.2, 0.5),
+            MeasuredBoundedness::InterconnectBound
+        );
+        // Strictly below the top, the functional leader wins even if
+        // the interconnect is close.
+        assert_eq!(
+            classify(0.6, 0.3, 0.2, 0.59),
+            MeasuredBoundedness::CuBound
+        );
+    }
+
+    #[test]
+    fn classify_cycles_groups_stalls() {
+        let mut c = MeasuredCounters {
+            cycles: 100,
+            cu_busy: 30,
+            su_busy: 20,
+            mem_busy: 10,
+            stall_mem_bw: 20,
+            stall_bank: 15,
+            ..MeasuredCounters::default()
+        };
+        // mem group = (10+20+15)/100 = 0.45 beats cu 0.30.
+        assert_eq!(classify_cycles(&c), MeasuredBoundedness::MemoryBound);
+        c.stall_sync = 30;
+        c.stall_xbar = 20;
+        // interconnect = 0.50 ≥ 0.45 → interconnect wins the tie zone.
+        assert_eq!(classify_cycles(&c), MeasuredBoundedness::InterconnectBound);
+        // Zero cycles → no signal.
+        assert_eq!(
+            classify_cycles(&MeasuredCounters::default()),
+            MeasuredBoundedness::Balanced
+        );
+    }
+
+    #[test]
+    fn drift_report_signs_and_agreement() {
+        let d = DriftReport::new(
+            10.0,
+            8.0,
+            MeasuredBoundedness::SuBound,
+            MeasuredBoundedness::SuBound,
+        );
+        assert!((d.drift_pct + 20.0).abs() < 1e-9);
+        assert!(d.agree);
+        let d = DriftReport::new(
+            10.0,
+            12.5,
+            MeasuredBoundedness::SuBound,
+            MeasuredBoundedness::CuBound,
+        );
+        assert!((d.drift_pct - 25.0).abs() < 1e-9);
+        assert!(!d.agree);
+        assert!(DriftReport::new(
+            0.0,
+            1.0,
+            MeasuredBoundedness::Balanced,
+            MeasuredBoundedness::Balanced
+        )
+        .drift_pct
+        .is_nan());
+    }
+
+    #[test]
+    fn predicted_bottleneck_projection() {
+        assert_eq!(
+            MeasuredBoundedness::from_predicted(Bottleneck::SamplerBound),
+            MeasuredBoundedness::SuBound
+        );
+        assert_eq!(
+            MeasuredBoundedness::from_predicted(Bottleneck::ComputeBound),
+            MeasuredBoundedness::CuBound
+        );
+        assert_eq!(
+            MeasuredBoundedness::from_predicted(Bottleneck::MemoryBound),
+            MeasuredBoundedness::MemoryBound
+        );
+        assert_eq!(
+            MeasuredBoundedness::from_predicted(Bottleneck::Balanced),
+            MeasuredBoundedness::Balanced
+        );
+    }
+
+    fn sample_observation() -> RooflineObservation {
+        RooflineObservation {
+            workload: "earthquake".into(),
+            backend: "sim".into(),
+            algo: "bg".into(),
+            sampler: "gumbel".into(),
+            chains: 2,
+            steps: 40,
+            cores: 1,
+            samples: 400,
+            updates: 400,
+            wall_seconds: 0.01,
+            measured_gsps: 0.25,
+            measured_ci: None,
+            measured_mi: Some(0.05),
+            cycle_domain: true,
+            verdict: MeasuredBoundedness::SuBound,
+            cu_util: Some(0.4),
+            su_util: Some(0.9),
+            mem_util: Some(0.2),
+            interconnect_frac: Some(0.0),
+            drift: DriftReport::new(
+                0.5,
+                0.25,
+                MeasuredBoundedness::SuBound,
+                MeasuredBoundedness::SuBound,
+            ),
+            xbar_predicted_bound: None,
+        }
+    }
+
+    #[test]
+    fn observation_json_is_flat_and_complete() {
+        let j = sample_observation().to_json();
+        // Flat: exactly one object, no nesting.
+        assert_eq!(j.matches('{').count(), 1, "{j}");
+        assert_eq!(j.matches('}').count(), 1);
+        for key in [
+            "\"workload\":\"earthquake\"",
+            "\"backend\":\"sim\"",
+            "\"verdict\":\"su-bound\"",
+            "\"predicted_verdict\":\"su-bound\"",
+            "\"drift_pct\":-50",
+            "\"drift_agree\":true",
+            "\"measured_ci\":null",
+            "\"cycle_domain\":true",
+            "\"xbar_predicted_bound\":null",
+        ] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+    }
+
+    #[test]
+    fn extract_observations_splits_the_profile_document() {
+        let a = sample_observation().to_json();
+        let mut b = sample_observation();
+        b.workload = "with \"quotes\" and }brace{".into();
+        let b = b.to_json();
+        let doc = format!("{{\"schema\":\"x\",\"observations\":[{a},{b}]}}");
+        let got = extract_observations(&doc);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0], a);
+        assert_eq!(got[1], b);
+        assert!(extract_observations("{\"observations\":[]}").is_empty());
+    }
+
+    #[test]
+    fn render_human_names_both_verdicts() {
+        let h = sample_observation().render_human();
+        assert!(h.contains("su-bound"), "{h}");
+        assert!(h.contains("drift -50.0%"), "{h}");
+        assert!(h.contains("cycle domain"), "{h}");
+    }
+}

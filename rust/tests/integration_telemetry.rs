@@ -6,7 +6,8 @@
 use std::sync::{Mutex, MutexGuard};
 
 use mc2a::coordinator::RunMetrics;
-use mc2a::engine::{telemetry, Engine};
+use mc2a::engine::{profile, telemetry, Engine};
+use mc2a::isa::HwConfig;
 
 /// The registry and tracer are process-wide; serialize every test in
 /// this binary that flips or reads their state.
@@ -28,6 +29,15 @@ impl Drop for TelemetryOff {
         t.stop();
         t.start();
         t.stop(); // start+stop clears any events the test left behind
+    }
+}
+
+/// Restore the off-by-default profiler state on exit.
+struct ProfileOff;
+
+impl Drop for ProfileOff {
+    fn drop(&mut self) {
+        profile::set_enabled(false);
     }
 }
 
@@ -69,6 +79,88 @@ fn assert_bit_identical(a: &RunMetrics, b: &RunMetrics, ctx: &str) {
             bits(&y.objective_trace),
             "{ctx} chain {id}: objective trace"
         );
+    }
+}
+
+/// One run of `earthquake` on each execution backend the profiler
+/// covers (software, batched, single-core sim, multi-core sim).
+fn run_backend(backend: &str) -> RunMetrics {
+    let mut builder = Engine::for_workload("earthquake")
+        .expect(backend)
+        .steps(20)
+        .chains(4)
+        .seed(0xBEEF);
+    builder = match backend {
+        "software" => builder.software(),
+        "batched" => builder.batched().batch(2).threads(2),
+        "sim" => builder.accelerator(HwConfig::paper_default()),
+        "multicore" => builder.multicore(HwConfig::paper_default()).cores(2),
+        other => panic!("unknown backend {other}"),
+    };
+    builder.build().expect(backend).run().expect(backend)
+}
+
+#[test]
+fn enabling_profiling_does_not_change_any_result_bit() {
+    let _g = guard();
+    let _off = ProfileOff;
+    for backend in ["software", "batched", "sim", "multicore"] {
+        profile::set_enabled(false);
+        let baseline = run_backend(backend);
+        profile::set_enabled(true);
+        let profiled = run_backend(backend);
+        profile::set_enabled(false);
+        assert_bit_identical(&baseline, &profiled, &format!("profile {backend}"));
+    }
+}
+
+#[test]
+fn profiled_run_yields_an_observation_per_backend() {
+    let _g = guard();
+    let _off = ProfileOff;
+    profile::set_enabled(true);
+    for backend in ["software", "batched", "sim", "multicore"] {
+        let mut builder = Engine::for_workload("earthquake")
+            .expect(backend)
+            .steps(20)
+            .chains(4)
+            .seed(0xBEEF);
+        builder = match backend {
+            "software" => builder.software(),
+            "batched" => builder.batched().batch(2).threads(2),
+            "sim" => builder.accelerator(HwConfig::paper_default()),
+            "multicore" => builder.multicore(HwConfig::paper_default()).cores(2),
+            other => panic!("unknown backend {other}"),
+        };
+        let mut engine = builder.build().expect(backend);
+        engine.run().expect(backend);
+        let obs = engine.observation().unwrap_or_else(|| panic!("{backend}: no observation"));
+        assert!(obs.samples > 0, "{backend}: no samples counted");
+        assert!(
+            obs.measured_gsps.is_finite() && obs.measured_gsps > 0.0,
+            "{backend}: measured throughput"
+        );
+        assert!(
+            obs.drift.predicted_gsps > 0.0,
+            "{backend}: predicted roofline throughput"
+        );
+        // Simulated backends measure in the cycle domain; wall-clock
+        // backends project through the measured intensities instead.
+        let cycle = backend == "sim" || backend == "multicore";
+        assert_eq!(obs.cycle_domain, cycle, "{backend}: domain");
+        if cycle {
+            // The roofline is an upper bound: a cycle-accurate run can
+            // not beat it (small tolerance for rounding).
+            assert!(
+                obs.measured_gsps <= obs.drift.predicted_gsps * 1.05,
+                "{backend}: measured {} exceeds roof {}",
+                obs.measured_gsps,
+                obs.drift.predicted_gsps
+            );
+        }
+        let json = obs.to_json();
+        assert!(json.contains("\"workload\":\"earthquake\""), "{backend}: {json}");
+        assert!(json.contains("\"verdict\":"), "{backend}: {json}");
     }
 }
 
